@@ -1,0 +1,85 @@
+//! Convergence sweep (Fig. 5 working data): δ vs m for the uniform
+//! baseline and the non-uniform scheme at several interval counts,
+//! averaged over a small corpus, plus the iso-convergence step counts.
+//!
+//!     cargo run --release --example convergence_sweep -- [per_class_images]
+
+use nuig::bench::{fmt3, Table};
+use nuig::data::Corpus;
+use nuig::ig::{self, convergence::ConvergencePolicy, IgOptions, Scheme};
+use nuig::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let per_class: usize = std::env::args().nth(1).map(|s| s.parse()).transpose()?.unwrap_or(1);
+    let rt = Runtime::load_default("artifacts")?;
+    let model = rt.model();
+    let corpus = Corpus::eval_set(4 * per_class.max(1));
+
+    let schemes = [
+        Scheme::Uniform,
+        Scheme::NonUniform { n_int: 2 },
+        Scheme::NonUniform { n_int: 4 },
+        Scheme::NonUniform { n_int: 8 },
+    ];
+    let grid = [8usize, 16, 32, 64, 128];
+
+    let mut table = Table::new("delta vs m (mean over corpus)", &["m", "scheme", "delta"]);
+    let mut uniform_curve = Vec::new();
+    for &m in &grid {
+        for &scheme in &schemes {
+            if let Scheme::NonUniform { n_int } = scheme {
+                if m < n_int {
+                    continue;
+                }
+            }
+            let mut acc = 0.0;
+            for li in corpus.iter() {
+                let opts = IgOptions { scheme, m, ..Default::default() };
+                acc += ig::explain(&model, &li.pixels, None, &opts)?.delta;
+            }
+            let mean = acc / corpus.len() as f64;
+            if scheme == Scheme::Uniform {
+                uniform_curve.push((m, mean));
+            }
+            table.row(vec![m.to_string(), scheme.to_string(), fmt3(mean)]);
+        }
+    }
+    table.print();
+
+    // Iso-convergence: steps to reach the uniform baseline's delta at
+    // m in {16, 32, 64} (relative thresholds; see DESIGN.md §4).
+    let mut iso = Table::new(
+        "steps to reach threshold (first image)",
+        &["delta_th", "scheme", "m_required", "reduction_vs_uniform"],
+    );
+    let img = &corpus.images[0].pixels;
+    for &(m_ref, th) in &uniform_curve {
+        if !(16..=64).contains(&m_ref) {
+            continue;
+        }
+        let policy = ConvergencePolicy::new(th);
+        let mut m_uniform = None;
+        for &scheme in &schemes {
+            let (m_req, _, ok) = policy.search(|m| {
+                if let Scheme::NonUniform { n_int } = scheme {
+                    if m < n_int {
+                        return Ok::<f64, anyhow::Error>(f64::INFINITY);
+                    }
+                }
+                Ok(ig::explain(&model, img, None, &IgOptions { scheme, m, ..Default::default() })?.delta)
+            })?;
+            if scheme == Scheme::Uniform {
+                m_uniform = Some(m_req);
+            }
+            let red = m_uniform.map(|mu| mu as f64 / m_req as f64).unwrap_or(1.0);
+            iso.row(vec![
+                format!("{th:.5}"),
+                scheme.to_string(),
+                if ok { m_req.to_string() } else { format!(">{m_req}") },
+                format!("{red:.2}x"),
+            ]);
+        }
+    }
+    iso.print();
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! Heatmap gallery: render overlay heatmaps (the paper's Fig. 1(c)
+//! presentation) for one image per class, with both schemes, and verify
+//! they agree visually (cosine similarity) — then write PPMs to
+//! `heatmaps/`.
+//!
+//!     cargo run --release --example heatmap_gallery
+
+use nuig::data::Corpus;
+use nuig::ig::{self, IgOptions, Scheme};
+use nuig::runtime::Runtime;
+use nuig::viz::{self, HeatmapOptions};
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load_default("artifacts")?;
+    let model = rt.model();
+    let out_dir = std::path::Path::new("heatmaps");
+    std::fs::create_dir_all(out_dir)?;
+
+    println!("{:<8} {:>7} {:>11} {:>11} {:>9}  file", "class", "target", "delta(uni)", "delta(non)", "cosine");
+    for li in Corpus::eval_set(8).iter() {
+        let uni = ig::explain(
+            &model,
+            &li.pixels,
+            None,
+            &IgOptions { scheme: Scheme::Uniform, m: 64, ..Default::default() },
+        )?;
+        let non = ig::explain(
+            &model,
+            &li.pixels,
+            None,
+            &IgOptions { scheme: Scheme::NonUniform { n_int: 4 }, m: 64, ..Default::default() },
+        )?;
+
+        let overlay = viz::render_overlay(&li.pixels, &non.values, &HeatmapOptions::default())?;
+        let heat = viz::render_heatmap(&non.values, &HeatmapOptions::default())?;
+        let f_overlay = out_dir.join(format!("class{}_overlay.ppm", li.class));
+        let f_heat = out_dir.join(format!("class{}_heat.ppm", li.class));
+        overlay.write(&f_overlay)?;
+        heat.write(&f_heat)?;
+
+        println!(
+            "{:<8} {:>7} {:>11.6} {:>11.6} {:>9.5}  {}",
+            li.class,
+            non.target,
+            uni.delta,
+            non.delta,
+            uni.cosine_similarity(&non),
+            f_overlay.display()
+        );
+    }
+    println!("\nwrote 16 PPM files to {}/", out_dir.display());
+    Ok(())
+}

@@ -1,0 +1,302 @@
+"""AOT compiler: lower the L2/L1 programs to HLO text + runtime artifacts.
+
+Run once at build time (``make artifacts``); Python never runs at serving
+time. Produces, under ``artifacts/``:
+
+  fwd_b1.hlo.txt, fwd_b16.hlo.txt        forward program at chunk K=1,16
+  igchunk_b1.hlo.txt, igchunk_b16.hlo.txt   the IG inner loop at K=1,16
+  params.bin                             flat f32 little-endian parameters
+  manifest.json                          shapes/arg-order/checksums contract
+  testvectors.json                       golden numbers for Rust x-checks
+
+Interchange format is **HLO text**, NOT a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` 0.1.6 crate binds) rejects with
+``proto.id() <= INT_MAX``. The text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md). We lower stablehlo -> XLA
+computation with ``return_tuple=True``; the Rust side unwraps the tuple.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import data, igref, model
+
+CHUNK_SIZES = (1, 16)
+MANIFEST_VERSION = 3
+
+
+def to_hlo_text(lowered) -> str:
+    """Lowered jax computation -> XLA HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_fwd(k: int) -> str:
+    p = model.num_params()
+    return to_hlo_text(jax.jit(model.fwd).lower(_spec((p,)), _spec((k, model.F))))
+
+
+def lower_ig_chunk(k: int) -> str:
+    p = model.num_params()
+    return to_hlo_text(
+        jax.jit(model.ig_chunk).lower(
+            _spec((p,)),
+            _spec((model.F,)),
+            _spec((model.F,)),
+            _spec((k,)),
+            _spec((k,)),
+            _spec((model.NUM_CLASSES,)),
+        )
+    )
+
+
+def lower_ig_chunk_multi(k: int) -> str:
+    p = model.num_params()
+    return to_hlo_text(
+        jax.jit(model.ig_chunk_multi).lower(
+            _spec((p,)),
+            _spec((k, model.F)),
+            _spec((k, model.F)),
+            _spec((k,)),
+            _spec((k,)),
+            _spec((k, model.NUM_CLASSES)),
+        )
+    )
+
+
+def build_testvectors(flat: jax.Array) -> dict:
+    """Golden numbers the Rust integration tests replay bit-for-bit.
+
+    Everything here is computed through the SAME jitted programs that get
+    lowered to the artifacts, so Rust executing the artifacts on the same
+    inputs must agree to f32 round-off.
+    """
+    tv: dict = {"images": []}
+
+    # Multi-image (cross-request) chunk: two images' points interleaved.
+    img_a = data.gen_image(0, 0)
+    img_b = data.gen_image(3, 0)
+    t_a = igref.predict_target(flat, jnp.asarray(img_a))
+    t_b = igref.predict_target(flat, jnp.asarray(img_b))
+    xs = np.zeros((16, model.F), np.float32)
+    onehots = np.zeros((16, model.NUM_CLASSES), np.float32)
+    alphas = np.zeros(16, np.float32)
+    weights = np.zeros(16, np.float32)
+    for k in range(8):
+        xs[2 * k] = img_a
+        xs[2 * k + 1] = img_b
+        onehots[2 * k, t_a] = 1.0
+        onehots[2 * k + 1, t_b] = 1.0
+        alphas[2 * k] = alphas[2 * k + 1] = k / 7.0
+        weights[2 * k] = weights[2 * k + 1] = 1.0 / 8.0
+    baselines = np.zeros_like(xs)
+    partials, mprobs = model.ig_chunk_multi_jit(
+        flat, jnp.asarray(xs), jnp.asarray(baselines), jnp.asarray(alphas),
+        jnp.asarray(weights), jnp.asarray(onehots))
+    partials = np.asarray(partials, np.float64)
+    tv["multi_chunk"] = {
+        "classes": [0, 3],
+        "targets": [int(t_a), int(t_b)],
+        "lane_sums": [float(partials[k].sum()) for k in range(16)],
+        "probs_lane0": [float(v) for v in np.asarray(mprobs, np.float64)[0]],
+    }
+    cases = [(0, 0), (3, 0), (5, 1), (7, 2)]
+    for cls, idx in cases:
+        img = data.gen_image(cls, idx)
+        x = jnp.asarray(img)
+        baseline = jnp.zeros_like(x)
+        target = igref.predict_target(flat, x)
+        probs = np.asarray(model.fwd_jit(flat, x[None, :])[0][0], np.float64)
+
+        uni = igref.uniform_ig(flat, x, baseline, m=64, target=target)
+        non = igref.nonuniform_ig(flat, x, baseline, m=64, n_int=4, target=target)
+
+        # One raw ig_chunk call (exactly what Rust executes) for 8 alphas
+        # padded to K=16 with zero weights.
+        alphas = np.linspace(0.0, 1.0, 8).astype(np.float32)
+        weights = np.full(8, 1.0 / 8, np.float32)
+        a16 = np.pad(alphas, (0, 8))
+        w16 = np.pad(weights, (0, 8))
+        onehot = np.zeros(model.NUM_CLASSES, np.float32)
+        onehot[target] = 1.0
+        partial, cprobs = model.ig_chunk_jit(
+            flat, x, baseline, jnp.asarray(a16), jnp.asarray(w16), jnp.asarray(onehot)
+        )
+        partial = np.asarray(partial, np.float64)
+        cprobs = np.asarray(cprobs, np.float64)
+
+        probe_idx = [0, 137, 1024, 2048, 3071]
+        tv["images"].append(
+            {
+                "class": cls,
+                "index": idx,
+                "image_sum": float(img.astype(np.float64).sum()),
+                "image_probe": {str(i): float(img[i]) for i in probe_idx},
+                "target": int(target),
+                "probs": [float(v) for v in probs],
+                "chunk": {
+                    "alphas": [float(v) for v in a16],
+                    "weights": [float(v) for v in w16],
+                    "partial_sum": float(partial.sum()),
+                    "partial_probe": {str(i): float(partial[i]) for i in probe_idx},
+                    "target_probs": [float(v) for v in cprobs[:, target]],
+                },
+                "uniform_m64": {
+                    "attr_sum": float(uni.attr.sum()),
+                    "delta": uni.delta,
+                    "attr_probe": {str(i): float(uni.attr[i]) for i in probe_idx},
+                },
+                "nonuniform_m64_n4": {
+                    "attr_sum": float(non.attr.sum()),
+                    "delta": non.delta,
+                    "steps": non.steps,
+                    "probe_passes": non.probe_passes,
+                },
+            }
+        )
+    return tv
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=None, help="artifacts directory (default: <repo>/artifacts)")
+    ap.add_argument("--skip-testvectors", action="store_true", help="skip golden-number generation (faster)")
+    args = ap.parse_args()
+
+    repo = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    out_dir = args.out_dir or os.path.join(repo, "artifacts")
+    os.makedirs(out_dir, exist_ok=True)
+
+    t0 = time.time()
+    params = model.init_params()
+    flat = model.flatten_params(params)
+    flat_np = np.asarray(flat, dtype="<f4")
+    params_path = os.path.join(out_dir, "params.bin")
+    flat_np.tofile(params_path)
+    params_sha = hashlib.sha256(flat_np.tobytes()).hexdigest()
+    print(f"[aot] params: {flat_np.size} f32 -> {params_path} sha256={params_sha[:16]}")
+
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "model": {
+            "name": "mini_inception",
+            "height": model.H,
+            "width": model.W,
+            "channels": model.C,
+            "features": model.F,
+            "num_classes": model.NUM_CLASSES,
+            "num_params": int(flat_np.size),
+            "param_seed": model.PARAM_SEED,
+            "target_top_logit": model.TARGET_TOP_LOGIT,
+            "params_sha256": params_sha,
+        },
+        "corpus": {
+            "num_classes": data.NUM_CLASSES,
+            "checksum_per_class_2": data.corpus_checksum(2),
+        },
+        "executables": {},
+        "jax_version": jax.__version__,
+    }
+
+    for k in CHUNK_SIZES:
+        name = f"fwd_b{k}"
+        text = lower_fwd(k)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["executables"][name] = {
+            "file": f"{name}.hlo.txt",
+            "kind": "fwd",
+            "chunk": k,
+            "args": [
+                {"name": "params", "shape": [int(flat_np.size)], "dtype": "f32"},
+                {"name": "imgs", "shape": [k, model.F], "dtype": "f32"},
+            ],
+            "outputs": [
+                {"name": "probs", "shape": [k, model.NUM_CLASSES], "dtype": "f32"},
+            ],
+        }
+        print(f"[aot] {name}: {len(text)} chars ({time.time()-t0:.1f}s)")
+
+    for k in CHUNK_SIZES:
+        name = f"igchunk_b{k}"
+        text = lower_ig_chunk(k)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["executables"][name] = {
+            "file": f"{name}.hlo.txt",
+            "kind": "igchunk",
+            "chunk": k,
+            "args": [
+                {"name": "params", "shape": [int(flat_np.size)], "dtype": "f32"},
+                {"name": "x", "shape": [model.F], "dtype": "f32"},
+                {"name": "baseline", "shape": [model.F], "dtype": "f32"},
+                {"name": "alphas", "shape": [k], "dtype": "f32"},
+                {"name": "weights", "shape": [k], "dtype": "f32"},
+                {"name": "target_onehot", "shape": [model.NUM_CLASSES], "dtype": "f32"},
+            ],
+            "outputs": [
+                {"name": "partial_attr", "shape": [model.F], "dtype": "f32"},
+                {"name": "probs", "shape": [k, model.NUM_CLASSES], "dtype": "f32"},
+            ],
+        }
+        print(f"[aot] {name}: {len(text)} chars ({time.time()-t0:.1f}s)")
+
+    # Cross-request batched variant (the coordinator's continuous batcher).
+    k = 16
+    name = f"igchunk_m{k}"
+    text = lower_ig_chunk_multi(k)
+    with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+        f.write(text)
+    manifest["executables"][name] = {
+        "file": f"{name}.hlo.txt",
+        "kind": "igchunk_multi",
+        "chunk": k,
+        "args": [
+            {"name": "params", "shape": [int(flat_np.size)], "dtype": "f32"},
+            {"name": "xs", "shape": [k, model.F], "dtype": "f32"},
+            {"name": "baselines", "shape": [k, model.F], "dtype": "f32"},
+            {"name": "alphas", "shape": [k], "dtype": "f32"},
+            {"name": "weights", "shape": [k], "dtype": "f32"},
+            {"name": "target_onehots", "shape": [k, model.NUM_CLASSES], "dtype": "f32"},
+        ],
+        "outputs": [
+            {"name": "partials", "shape": [k, model.F], "dtype": "f32"},
+            {"name": "probs", "shape": [k, model.NUM_CLASSES], "dtype": "f32"},
+        ],
+    }
+    print(f"[aot] {name}: {len(text)} chars ({time.time()-t0:.1f}s)")
+
+    if not args.skip_testvectors:
+        tv = build_testvectors(flat)
+        with open(os.path.join(out_dir, "testvectors.json"), "w") as f:
+            json.dump(tv, f, indent=1)
+        print(f"[aot] testvectors.json written ({time.time()-t0:.1f}s)")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest.json written; total {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,148 @@
+"""Synthetic ImageNet substitute: a deterministic, class-structured corpus.
+
+The paper evaluates on ImageNet validation images; those are not available
+here (repro gate), so this module generates a procedural corpus of 32x32x3
+images in 8 classes with real spatial structure (blobs / horizontal
+stripes / vertical stripes / checkerboards, two variants each). IG's
+convergence behaviour depends on the path through the model, not on the
+dataset identity, so this preserves the experiments' code path while being
+fully reproducible.
+
+CROSS-LANGUAGE CONTRACT: this generator is reimplemented bit-for-bit in
+Rust (``rust/src/data/synth.rs``). Every floating-point operation is a
+single IEEE-754 f32 op (add/sub/mul/div/min/max) evaluated in the same
+order in both implementations, and all randomness comes from a
+*counter-based* splitmix64 (draw ``j`` of stream ``seed`` is a pure
+function ``mix64(seed + (j+1)*GOLDEN)``), so there is no sequential state
+to keep in sync. ``python/tests/test_data.py`` pins golden pixel values;
+``rust/src/data/synth.rs`` unit tests pin the same values; the AOT
+manifest carries a corpus checksum the Rust runtime re-derives.
+
+Image layout: (H=32, W=32, C=3) f32 in [0,1], flattened row-major
+(y, x, ch) to F = 3072 — the layout every artifact expects.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+H = 32
+W = 32
+C = 3
+F = H * W * C
+NUM_CLASSES = 8
+
+_GOLDEN = np.uint64(0x9E3779B97F4A7C15)
+_M1 = np.uint64(0xBF58476D1CE4E5B9)
+_M2 = np.uint64(0x94D049BB133111EB)
+_U64 = np.uint64
+
+
+def mix64(x: np.ndarray | int) -> np.ndarray:
+    """The splitmix64 output mix; input/output uint64 (vectorized, wrapping)."""
+    with np.errstate(over="ignore"):
+        z = np.asarray(x, dtype=np.uint64)
+        z = z ^ (z >> _U64(30))
+        z = z * _M1
+        z = z ^ (z >> _U64(27))
+        z = z * _M2
+        z = z ^ (z >> _U64(31))
+        return z
+
+
+def draw_u01(seed: int, j: np.ndarray | int) -> np.ndarray:
+    """Counter-based uniform draw(s) in [0,1) as f32.
+
+    draw(seed, j) = upper-24-bits(mix64(seed + (j+1)*GOLDEN)) / 2^24,
+    exactly representable in f32, so Python and Rust agree bit-for-bit.
+    """
+    with np.errstate(over="ignore"):
+        idx = np.asarray(j, dtype=np.uint64) + _U64(1)
+        z = mix64(_U64(seed) + idx * _GOLDEN)
+    hi = (z >> _U64(40)).astype(np.uint32)  # 24 bits
+    return (hi.astype(np.float32) / np.float32(16777216.0)).astype(np.float32)
+
+
+def image_seed(class_id: int, index: int) -> int:
+    """Stream seed for image ``index`` of class ``class_id``."""
+    return (class_id * 1000003 + index * 7919 + 0xC0FFEE) & 0xFFFFFFFFFFFFFFFF
+
+
+def gen_image(class_id: int, index: int) -> np.ndarray:
+    """Generate image ``index`` of class ``class_id`` as (F,) f32 in [0,1].
+
+    Draw-index layout (per image stream):
+      0..2            : base color (r, g, b)
+      3 + 3*b ..      : blob b's (cx, cy, radius)   [pattern type 0 only]
+      100 + 3*(y*W+x) + ch : per-pixel-channel noise
+    """
+    if not 0 <= class_id < NUM_CLASSES:
+        raise ValueError(f"class_id must be in [0,{NUM_CLASSES}), got {class_id}")
+    seed = image_seed(class_id, index)
+    pattern = class_id % 4
+    variant = class_id // 4  # 0 or 1
+    freq = 2 + class_id
+
+    color = draw_u01(seed, np.arange(3))  # (3,) f32
+
+    ys, xs = np.meshgrid(np.arange(H), np.arange(W), indexing="ij")
+
+    if pattern == 0:
+        # Blobs: rational (non-transcendental) falloff so f32 results are
+        # reproducible across languages without libm.
+        n_blobs = 3 + 2 * variant
+        v = np.zeros((H, W), dtype=np.float32)
+        xf = xs.astype(np.float32)
+        yf = ys.astype(np.float32)
+        for b in range(n_blobs):
+            cx = np.float32(draw_u01(seed, 3 + 3 * b)) * np.float32(W)
+            cy = np.float32(draw_u01(seed, 4 + 3 * b)) * np.float32(H)
+            r = np.float32(3.0) + np.float32(draw_u01(seed, 5 + 3 * b)) * np.float32(4.0)
+            r2 = r * r
+            dx = xf - cx
+            dy = yf - cy
+            d2 = dx * dx + dy * dy
+            v = np.maximum(v, r2 / (r2 + d2))
+    elif pattern == 1:
+        band = (ys * freq // H) % 2
+        phase = variant
+        v = np.where((band + phase) % 2 == 0, np.float32(1.0), np.float32(0.25)).astype(np.float32)
+    elif pattern == 2:
+        band = (xs * freq // W) % 2
+        phase = variant
+        v = np.where((band + phase) % 2 == 0, np.float32(1.0), np.float32(0.25)).astype(np.float32)
+    else:
+        cell = (xs * freq // W) + (ys * freq // H)
+        v = np.where((cell + variant) % 2 == 0, np.float32(1.0), np.float32(0.2)).astype(np.float32)
+
+    # Per-pixel-channel noise, counter-indexed so order is irrelevant.
+    pix = (ys * W + xs).astype(np.uint64)  # (H, W)
+    img = np.empty((H, W, C), dtype=np.float32)
+    for ch in range(C):
+        noise = draw_u01(seed, 100 + 3 * pix + ch)  # (H, W) f32
+        val = v * color[ch] * np.float32(0.8) + np.float32(0.1) + (noise - np.float32(0.5)) * np.float32(0.1)
+        img[:, :, ch] = np.minimum(np.maximum(val, np.float32(0.0)), np.float32(1.0))
+    return img.reshape(F)
+
+
+def gen_corpus(per_class: int) -> tuple[np.ndarray, np.ndarray]:
+    """Generate ``per_class`` images for each of the 8 classes.
+
+    Returns ``(images (N,F) f32, labels (N,) int32)`` with
+    N = 8*per_class, ordered class-major (class 0 images first).
+    """
+    imgs = np.stack(
+        [gen_image(c, i) for c in range(NUM_CLASSES) for i in range(per_class)]
+    )
+    labels = np.repeat(np.arange(NUM_CLASSES, dtype=np.int32), per_class)
+    return imgs, labels
+
+
+def corpus_checksum(per_class: int = 2) -> float:
+    """Cheap cross-language checksum: mean of the standard corpus (f64 sum).
+
+    Stored in the AOT manifest; the Rust loader regenerates the corpus and
+    asserts agreement to ~1e-6, catching any generator drift.
+    """
+    imgs, _ = gen_corpus(per_class)
+    return float(np.float64(imgs.astype(np.float64).sum()) / imgs.size)

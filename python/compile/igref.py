@@ -1,0 +1,222 @@
+"""Reference (build-time Python) implementation of uniform & non-uniform IG.
+
+This mirrors the algorithm the Rust engine (``rust/src/ig/``) implements at
+serving time. It exists for three reasons:
+
+  1. pytest validates the *paper's algorithm* end-to-end in Python
+     (completeness, iso-convergence step reduction) before any Rust runs;
+  2. it produces ``artifacts/testvectors.json`` — golden numbers the Rust
+     integration tests compare against bit-for-bit (same executables,
+     same inputs);
+  3. it documents the algorithm in executable form next to the model.
+
+Python never runs at serving time; this module is imported only by aot.py
+and the test suite.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+
+# --------------------------------------------------------------------------
+# Schedules and allocation (mirrors rust/src/ig/{schedule,allocator}.rs)
+# --------------------------------------------------------------------------
+
+def uniform_alphas(m: int) -> np.ndarray:
+    """The m+1 right-endpoint-inclusive uniform grid k/m, k = 0..m (Eq. 2)."""
+    if m < 1:
+        raise ValueError("m must be >= 1")
+    return np.arange(m + 1, dtype=np.float64) / m
+
+
+def riemann_weights(n_points: int, rule: str = "trapezoid") -> np.ndarray:
+    """Quadrature weights over a unit interval discretized into n_points.
+
+    Matches rust/src/ig/riemann.rs: weights sum to 1 for every rule.
+      left:      f_0..f_{m-1}, weight 1/m each
+      right:     f_1..f_m,     weight 1/m each
+      riemann:   the paper's Eq. 2: all m+1 points, weight 1/m each --
+                 NOTE this sums to (m+1)/m; the paper's formulation. We
+                 normalize to 1/(m+1)*... no: Eq.2 uses 1/m with m+1 terms.
+                 Kept verbatim as `eq2` for fidelity; default elsewhere is
+                 trapezoid, which is what Captum uses and converges faster.
+      trapezoid: 1/(2m) endpoints, 1/m interior.
+    """
+    m = n_points - 1
+    if m < 1:
+        raise ValueError("need at least 2 points")
+    w = np.zeros(n_points, dtype=np.float64)
+    if rule == "left":
+        w[:-1] = 1.0 / m
+    elif rule == "right":
+        w[1:] = 1.0 / m
+    elif rule == "eq2":
+        w[:] = 1.0 / m  # the paper's literal Eq. 2 (sums to (m+1)/m)
+    elif rule == "trapezoid":
+        w[:] = 1.0 / m
+        w[0] = 0.5 / m
+        w[-1] = 0.5 / m
+    else:
+        raise ValueError(f"unknown rule {rule!r}")
+    return w
+
+
+def sqrt_allocate(m_total: int, deltas: Sequence[float]) -> List[int]:
+    """Distribute m_total steps across intervals proportional to sqrt|delta|.
+
+    The paper's stage-1 allocation rule (m_int proportional to sqrt(Delta)),
+    with largest-remainder rounding so the counts sum exactly to m_total
+    and every interval receives at least 1 step (a starved interval breaks
+    the per-interval trapezoid rule). Mirrors rust/src/ig/allocator.rs.
+    """
+    return _allocate(m_total, [math.sqrt(abs(d)) for d in deltas])
+
+
+def linear_allocate(m_total: int, deltas: Sequence[float]) -> List[int]:
+    """Ablation: m_int proportional to |delta| (the paper found this starves
+    low-change intervals; reproduced in the allocator ablation bench)."""
+    return _allocate(m_total, [abs(d) for d in deltas])
+
+
+def _allocate(m_total: int, scores: Sequence[float]) -> List[int]:
+    n = len(scores)
+    if n == 0:
+        raise ValueError("no intervals")
+    if m_total < n:
+        raise ValueError(f"m_total={m_total} < n_int={n}: every interval needs >=1 step")
+    total = sum(scores)
+    if total <= 0.0:
+        scores = [1.0] * n
+        total = float(n)
+    # Reserve 1 step per interval, distribute the rest by largest remainder.
+    rest = m_total - n
+    raw = [rest * s / total for s in scores]
+    base = [int(math.floor(r)) for r in raw]
+    short = rest - sum(base)
+    order = sorted(range(n), key=lambda i: (raw[i] - base[i], -i), reverse=True)
+    for i in order[:short]:
+        base[i] += 1
+    return [1 + b for b in base]
+
+
+# --------------------------------------------------------------------------
+# Engines (mirrors rust/src/ig/engine.rs), built on the AOT-exported fns
+# --------------------------------------------------------------------------
+
+@dataclass
+class IgResult:
+    attr: np.ndarray        # (F,) attribution
+    delta: float            # completeness residual |sum(attr) - (f(x)-f(x'))|
+    steps: int              # gradient evaluations (fwd+bwd passes)
+    probe_passes: int       # stage-1 forward-only passes (0 for uniform)
+    target: int
+
+
+def _run_points(flat, x, baseline, alphas: np.ndarray, weights: np.ndarray,
+                target: int, chunk: int = 16) -> np.ndarray:
+    """Evaluate sum_k w_k grad_k (x-x') via the AOT ig_chunk fn, chunked."""
+    onehot = np.zeros(model.NUM_CLASSES, np.float32)
+    onehot[target] = 1.0
+    acc = np.zeros(model.F, dtype=np.float64)
+    for s in range(0, len(alphas), chunk):
+        a = alphas[s : s + chunk].astype(np.float32)
+        w = weights[s : s + chunk].astype(np.float32)
+        if len(a) < chunk:  # pad ragged tail with zero-weight lanes
+            pad = chunk - len(a)
+            a = np.pad(a, (0, pad))
+            w = np.pad(w, (0, pad))
+        partial, _probs = model.ig_chunk_jit(
+            flat, x, baseline, jnp.asarray(a), jnp.asarray(w),
+            jnp.asarray(onehot))
+        acc += np.asarray(partial, dtype=np.float64)
+    return acc
+
+
+def _endpoint_gap(flat, x, baseline, target: int) -> float:
+    probs = model.fwd_jit(flat, jnp.stack([x, baseline]))[0]
+    p = np.asarray(probs, dtype=np.float64)
+    return float(p[0, target] - p[1, target])
+
+
+def predict_target(flat, x) -> int:
+    probs = model.fwd_jit(flat, x[None, :])[0]
+    return int(np.argmax(np.asarray(probs)[0]))
+
+
+def uniform_ig(flat, x, baseline, m: int, target: int,
+               rule: str = "trapezoid", chunk: int = 16) -> IgResult:
+    """Baseline IG: uniform interpolation with m intervals (m+1 points)."""
+    alphas = uniform_alphas(m)
+    weights = riemann_weights(m + 1, rule)
+    attr = _run_points(flat, x, baseline, alphas, weights, target, chunk)
+    gap = _endpoint_gap(flat, x, baseline, target)
+    delta = abs(float(attr.sum()) - gap)
+    return IgResult(attr, delta, m + 1, 0, target)
+
+
+def nonuniform_ig(flat, x, baseline, m: int, n_int: int, target: int,
+                  rule: str = "trapezoid", allocation: str = "sqrt",
+                  chunk: int = 16) -> IgResult:
+    """The paper's two-stage non-uniform IG.
+
+    Stage 1: probe the n_int+1 interval boundaries (forward-only), compute
+    normalized probability change per interval, allocate the m total steps
+    with the sqrt rule. Stage 2: uniform IG inside each interval with its
+    allotted count; per-interval attributions sum to the total (additivity
+    of the path integral over subpaths).
+    """
+    bounds = np.arange(n_int + 1, dtype=np.float64) / n_int
+    binterp = jnp.stack([
+        jnp.asarray(baseline) + np.float32(b) * (jnp.asarray(x) - jnp.asarray(baseline))
+        for b in bounds
+    ])
+    probs = np.asarray(model.fwd_jit(flat, binterp)[0], dtype=np.float64)
+    pvals = probs[:, target]
+    deltas = np.abs(np.diff(pvals))
+    norm = deltas.sum()
+    deltas = deltas / norm if norm > 0 else np.full(n_int, 1.0 / n_int)
+
+    alloc = sqrt_allocate(m, deltas) if allocation == "sqrt" else linear_allocate(m, deltas)
+
+    attr = np.zeros(model.F, dtype=np.float64)
+    steps = 0
+    for i, m_i in enumerate(alloc):
+        lo, hi = bounds[i], bounds[i + 1]
+        local = uniform_alphas(m_i)                      # 0..1 inside interval
+        alphas = lo + local * (hi - lo)
+        # Eq. 1 over the subpath: integral_{lo}^{hi} g(a) da is (hi-lo)
+        # times the unit-interval quadrature, so the per-point weights are
+        # the unit weights scaled by the interval width. The (x-x') factor
+        # stays the *full-path* diff inside ig_chunk, preserving Eq. 1's
+        # parametrization; per-interval attributions then sum to the total
+        # by additivity of the path integral.
+        weights = riemann_weights(m_i + 1, rule) * (hi - lo)
+        attr += _run_points(flat, x, baseline, alphas, weights, target, chunk)
+        steps += m_i + 1
+
+    gap = _endpoint_gap(flat, x, baseline, target)
+    delta = abs(float(attr.sum()) - gap)
+    return IgResult(attr, delta, steps, n_int + 1, target)
+
+
+def steps_to_threshold(run, delta_th: float, m_grid: Sequence[int]) -> Tuple[int, float]:
+    """Smallest m in m_grid whose run(m).delta <= delta_th (Fig. 5b protocol).
+
+    ``run`` is a callable m -> IgResult. Returns (m, delta); if no m on the
+    grid converges, returns the last (largest) grid point's result.
+    """
+    last = (m_grid[-1], float("inf"))
+    for m in m_grid:
+        r = run(m)
+        if r.delta <= delta_th:
+            return m, r.delta
+        last = (m, r.delta)
+    return last

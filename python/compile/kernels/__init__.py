@@ -1,0 +1,14 @@
+"""Pallas kernels (L1) for the non-uniform-IG stack.
+
+Every kernel is lowered with ``interpret=True`` so the surrounding JAX
+program exports to plain HLO runnable on the CPU PJRT client; real-TPU
+lowering would emit Mosaic custom-calls the CPU plugin cannot execute.
+Each kernel has a pure-jnp oracle in :mod:`ref` checked by pytest.
+"""
+
+from compile.kernels.attr_reduce import attr_reduce_chunk
+from compile.kernels.attr_scale import attr_scale_chunk
+from compile.kernels.interpolate import interpolate_chunk
+from compile.kernels.softmax import softmax
+
+__all__ = ["attr_reduce_chunk", "attr_scale_chunk", "interpolate_chunk", "softmax"]

@@ -1,0 +1,82 @@
+"""L1 Pallas kernel: fused weighted-gradient reduction for the IG Riemann sum.
+
+Given the per-step input-gradients ``g[k, f]`` of the target-class
+probability (already scaled by the per-step Riemann weights in the VJP
+cotangent), and the path difference ``diff = x - x'``, compute the partial
+attribution
+
+    out[f] = diff[f] * sum_k g[k, f]
+
+i.e. the inner accumulation of Eq. 2. Fusing the K-reduction with the
+elementwise ``diff`` product means the (K, F) gradient tensor is consumed
+tile-by-tile in VMEM and only F floats are written back - on a GPU this is
+the shared-memory tree reduction the reference CUDA implementations use;
+on TPU it is an accumulate-in-VMEM loop over the K axis of each tile.
+
+Lowered with ``interpret=True`` (see interpolate.py for why).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_F = 1024
+
+
+def _attr_reduce_kernel(g_ref, diff_ref, out_ref):
+    """out[f] = diff[f] * sum_k g[k, f] over one feature tile.
+
+    Block shapes:
+      g_ref:    (K, BLOCK_F)
+      diff_ref: (1, BLOCK_F)
+      out_ref:  (1, BLOCK_F)
+    """
+    g = g_ref[...]                       # (K, BLOCK_F)
+    diff = diff_ref[...]                 # (1, BLOCK_F)
+    out_ref[...] = diff * jnp.sum(g, axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block_f",))
+def attr_reduce_chunk(
+    grads: jax.Array,
+    diff: jax.Array,
+    *,
+    block_f: int = BLOCK_F,
+) -> jax.Array:
+    """Reduce a chunk of weighted gradients into a partial attribution.
+
+    Args:
+      grads: ``(K, F)`` weighted per-step gradients (weight already folded
+        in by the caller's VJP cotangent, so this kernel is a pure sum).
+      diff: ``(F,)`` path difference ``x - baseline``.
+      block_f: feature tile width; ``F`` must be divisible by it.
+
+    Returns:
+      ``(F,)`` partial attribution ``diff * grads.sum(0)``. Partial chunk
+      results are added across chunks by the Rust engine (f64 accumulator).
+    """
+    if grads.ndim != 2:
+        raise ValueError(f"grads must be (K, F), got {grads.shape}")
+    k, f = grads.shape
+    if diff.shape != (f,):
+        raise ValueError(f"diff must be ({f},), got {diff.shape}")
+    if f % block_f != 0:
+        raise ValueError(f"F={f} not divisible by block_f={block_f}")
+    n_tiles = f // block_f
+
+    out = pl.pallas_call(
+        _attr_reduce_kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((k, block_f), lambda i: (0, i)),
+            pl.BlockSpec((1, block_f), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, block_f), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, f), grads.dtype),
+        interpret=True,
+    )(grads, diff.reshape(1, f))
+    return out.reshape(f)

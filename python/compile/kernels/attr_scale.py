@@ -1,0 +1,68 @@
+"""L1 Pallas kernel: per-lane attribution scaling for the multi-image chunk.
+
+The cross-request batched IG program (``model.ig_chunk_multi``) packs K
+*different* requests' interpolation points into one chunk, so the K-way
+reduction of ``attr_reduce`` does not apply - each lane k belongs to a
+different accumulator. The per-lane partial attribution is
+
+    out[k, f] = g[k, f] * diff[k, f]
+
+where ``g`` already carries the Riemann weight (folded into the VJP
+cotangent) and ``diff[k] = x_k - baseline_k`` is per-lane. The Rust-side
+router adds each lane into its owning request's f64 accumulator.
+
+Tiled identically to attr_reduce (the write-back is K x BLOCK_F instead of
+1 x BLOCK_F); interpret=True as everywhere (see interpolate.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_F = 1024
+
+
+def _attr_scale_kernel(g_ref, diff_ref, out_ref):
+    """out[k, f] = g[k, f] * diff[k, f] over one (K, BLOCK_F) tile."""
+    out_ref[...] = g_ref[...] * diff_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_f",))
+def attr_scale_chunk(
+    grads: jax.Array,
+    diffs: jax.Array,
+    *,
+    block_f: int = BLOCK_F,
+) -> jax.Array:
+    """Per-lane weighted-gradient scaling: ``grads * diffs``, tiled.
+
+    Args:
+      grads: ``(K, F)`` weighted per-step gradients.
+      diffs: ``(K, F)`` per-lane path differences ``x_k - baseline_k``.
+      block_f: feature tile width; ``F`` must be divisible by it.
+
+    Returns:
+      ``(K, F)`` per-lane partial attributions.
+    """
+    if grads.ndim != 2 or diffs.shape != grads.shape:
+        raise ValueError(f"grads/diffs must be equal-shape (K, F), got {grads.shape} vs {diffs.shape}")
+    k, f = grads.shape
+    if f % block_f != 0:
+        raise ValueError(f"F={f} not divisible by block_f={block_f}")
+    n_tiles = f // block_f
+
+    return pl.pallas_call(
+        _attr_scale_kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((k, block_f), lambda i: (0, i)),
+            pl.BlockSpec((k, block_f), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((k, block_f), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((k, f), grads.dtype),
+        interpret=True,
+    )(grads, diffs)

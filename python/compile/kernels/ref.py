@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness anchors: pytest (and hypothesis, sweeping shapes
+and dtypes) asserts ``assert_allclose(kernel(...), ref(...))`` for each
+kernel. They are intentionally the most naive possible expression of the
+math - no tiling, no fusion - so a disagreement always indicts the kernel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def interpolate_chunk_ref(x: jax.Array, baseline: jax.Array, alphas: jax.Array) -> jax.Array:
+    """(K, F) straight-line interpolants: baseline + alpha_k * (x - baseline)."""
+    return baseline[None, :] + alphas[:, None].astype(x.dtype) * (x - baseline)[None, :]
+
+
+def attr_reduce_chunk_ref(grads: jax.Array, diff: jax.Array) -> jax.Array:
+    """(F,) partial attribution: diff * sum_k grads[k]."""
+    return diff * jnp.sum(grads, axis=0)
+
+
+def attr_scale_chunk_ref(grads: jax.Array, diffs: jax.Array) -> jax.Array:
+    """(K, F) per-lane partial attributions: grads * diffs elementwise."""
+    return grads * diffs
+
+
+def softmax_ref(z: jax.Array) -> jax.Array:
+    """Row-wise numerically-stable softmax (last axis)."""
+    z_max = jnp.max(z, axis=-1, keepdims=True)
+    e = jnp.exp(z - z_max)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def softmax_bwd_ref(p: jax.Array, dp: jax.Array) -> jax.Array:
+    """VJP of row-wise softmax given forward output ``p`` and cotangent ``dp``."""
+    inner = jnp.sum(dp * p, axis=-1, keepdims=True)
+    return p * (dp - inner)

@@ -1,0 +1,72 @@
+"""L1 Pallas kernel: numerically-stable softmax with a custom Pallas VJP.
+
+This is the one Pallas kernel that lives *inside* the differentiated region
+of the model (the IG backward pass flows through the classifier head), so
+it carries a ``jax.custom_vjp`` whose forward AND backward are both Pallas
+kernels:
+
+  forward:   p = exp(z - max(z)) / sum(exp(z - max(z)))      rowwise
+  backward:  dz = p * (dp - sum(dp * p))                     rowwise
+
+Row-wise softmax over a (K, C) logit block fits a single VMEM tile for any
+realistic class count (C = 8 here, C = 1000 for InceptionV3 is still only
+4 KiB/row), so the kernel uses one grid step per logit matrix and keeps
+max/sum as in-register rowwise reductions - the TPU analogue of the
+warp-shuffle reductions a CUDA softmax uses.
+
+Lowered with ``interpret=True`` (see interpolate.py for why).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _softmax_fwd_kernel(z_ref, p_ref):
+    z = z_ref[...]                                     # (K, C)
+    z_max = jnp.max(z, axis=-1, keepdims=True)
+    e = jnp.exp(z - z_max)
+    p_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def _softmax_bwd_kernel(p_ref, dp_ref, dz_ref):
+    p = p_ref[...]                                     # (K, C)
+    dp = dp_ref[...]                                   # (K, C)
+    inner = jnp.sum(dp * p, axis=-1, keepdims=True)
+    dz_ref[...] = p * (dp - inner)
+
+
+def _softmax_fwd_call(z: jax.Array) -> jax.Array:
+    return pl.pallas_call(
+        _softmax_fwd_kernel,
+        out_shape=jax.ShapeDtypeStruct(z.shape, z.dtype),
+        interpret=True,
+    )(z)
+
+
+def _softmax_bwd_call(p: jax.Array, dp: jax.Array) -> jax.Array:
+    return pl.pallas_call(
+        _softmax_bwd_kernel,
+        out_shape=jax.ShapeDtypeStruct(p.shape, p.dtype),
+        interpret=True,
+    )(p, dp)
+
+
+@jax.custom_vjp
+def softmax(z: jax.Array) -> jax.Array:
+    """Row-wise softmax over the last axis of a ``(K, C)`` logit matrix."""
+    return _softmax_fwd_call(z)
+
+
+def _softmax_vjp_fwd(z):
+    p = _softmax_fwd_call(z)
+    return p, p
+
+
+def _softmax_vjp_bwd(p, dp):
+    return (_softmax_bwd_call(p, dp),)
+
+
+softmax.defvjp(_softmax_vjp_fwd, _softmax_vjp_bwd)

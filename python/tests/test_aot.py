@@ -1,0 +1,100 @@
+"""AOT exporter: HLO-text contract, manifest consistency, artifact checks.
+
+The expensive full export runs via ``make artifacts``; here we validate the
+lowering path on the real programs (cheap once jit-cached by other tests)
+and, when artifacts exist, their consistency with the live model.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, data, model
+
+ART = os.path.join(os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__)))), "artifacts")
+
+
+class TestLowering:
+    def test_hlo_text_format(self):
+        """The interchange contract: HLO text with an ENTRY computation and
+        a tuple root (return_tuple=True), parseable by xla_extension 0.5.1."""
+        text = aot.to_hlo_text(jax.jit(lambda x: (x * 2.0,)).lower(
+            jax.ShapeDtypeStruct((4,), jnp.float32)))
+        assert "HloModule" in text
+        assert "ENTRY" in text
+        assert "tuple(" in text or "(f32[4]{0})" in text
+
+    def test_fwd_lowering_has_expected_params(self):
+        text = aot.lower_fwd(1)
+        p = model.num_params()
+        assert f"f32[{p}]" in text       # flat params arg
+        assert "f32[1,3072]" in text     # image arg
+
+    def test_igchunk_lowering_has_expected_params(self):
+        text = aot.lower_ig_chunk(1)
+        assert "f32[3072]" in text
+        # No TPU custom-calls may survive: interpret=True pallas only.
+        assert "mosaic" not in text.lower()
+        assert "tpu_custom_call" not in text.lower()
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="artifacts not built (run `make artifacts`)")
+class TestArtifacts:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_manifest_version(self, manifest):
+        assert manifest["version"] == aot.MANIFEST_VERSION
+
+    def test_model_metadata(self, manifest):
+        m = manifest["model"]
+        assert m["features"] == model.F
+        assert m["num_classes"] == model.NUM_CLASSES
+        assert m["num_params"] == model.num_params()
+        assert m["param_seed"] == model.PARAM_SEED
+
+    def test_corpus_checksum_matches_live(self, manifest):
+        assert abs(manifest["corpus"]["checksum_per_class_2"] - data.corpus_checksum(2)) < 1e-12
+
+    def test_all_executables_present(self, manifest):
+        for k in aot.CHUNK_SIZES:
+            for kind in ("fwd", "igchunk"):
+                name = f"{kind}_b{k}"
+                assert name in manifest["executables"]
+                path = os.path.join(ART, manifest["executables"][name]["file"])
+                assert os.path.exists(path), path
+                assert os.path.getsize(path) > 1000
+
+    def test_params_bin_matches_live_model(self, manifest):
+        flat = np.fromfile(os.path.join(ART, "params.bin"), dtype="<f4")
+        assert flat.size == manifest["model"]["num_params"]
+        live = np.asarray(model.flatten_params(model.init_params()), np.float32)
+        assert np.array_equal(flat, live)
+
+    def test_arg_shapes_consistent(self, manifest):
+        ig = manifest["executables"]["igchunk_b16"]
+        names = [a["name"] for a in ig["args"]]
+        assert names == ["params", "x", "baseline", "alphas", "weights", "target_onehot"]
+        assert ig["args"][3]["shape"] == [16]
+        assert ig["outputs"][0]["shape"] == [model.F]
+
+    def test_testvectors_consistent(self, manifest):
+        tvp = os.path.join(ART, "testvectors.json")
+        if not os.path.exists(tvp):
+            pytest.skip("testvectors skipped at export")
+        with open(tvp) as f:
+            tv = json.load(f)
+        assert len(tv["images"]) >= 3
+        for im in tv["images"]:
+            img = data.gen_image(im["class"], im["index"])
+            assert abs(float(img.astype(np.float64).sum()) - im["image_sum"]) < 1e-9
+            assert abs(sum(im["probs"]) - 1.0) < 1e-5
+            # Non-uniform must beat uniform at iso-steps on every stored case.
+            assert im["nonuniform_m64_n4"]["delta"] < im["uniform_m64"]["delta"]

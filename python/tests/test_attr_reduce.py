@@ -1,0 +1,97 @@
+"""L1 attribution-reduction kernel vs pure-jnp oracle."""
+
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from numpy.testing import assert_allclose
+
+from compile.kernels import attr_reduce_chunk
+from compile.kernels.ref import attr_reduce_chunk_ref
+
+
+def _rand(shape, seed, lo=-2.0, hi=2.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(lo, hi, shape).astype(np.float32))
+
+
+class TestAgainstRef:
+    @pytest.mark.parametrize("k", [1, 2, 8, 16])
+    def test_matches_ref_3072(self, k):
+        g = _rand((k, 3072), 1)
+        d = _rand((3072,), 2)
+        assert_allclose(
+            np.asarray(attr_reduce_chunk(g, d)),
+            np.asarray(attr_reduce_chunk_ref(g, d)),
+            rtol=1e-5, atol=1e-6,
+        )
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        k=st.integers(1, 24),
+        tiles=st.integers(1, 4),
+        block=st.sampled_from([128, 256, 512]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, k, tiles, block, seed):
+        f = tiles * block
+        g = _rand((k, f), seed)
+        d = _rand((f,), seed + 1)
+        assert_allclose(
+            np.asarray(attr_reduce_chunk(g, d, block_f=block)),
+            np.asarray(attr_reduce_chunk_ref(g, d)),
+            rtol=1e-5, atol=1e-6,
+        )
+
+
+class TestAlgebra:
+    def test_zero_weight_lane_is_noop(self):
+        """Padding lanes (gradient scaled to 0 upstream) contribute nothing."""
+        g = _rand((4, 512), 3)
+        d = _rand((512,), 4)
+        gz = jnp.concatenate([g, jnp.zeros((2, 512), jnp.float32)])
+        assert_allclose(
+            np.asarray(attr_reduce_chunk(gz, d, block_f=256)),
+            np.asarray(attr_reduce_chunk(g, d, block_f=256)),
+            rtol=1e-6,
+        )
+
+    def test_additive_in_chunks(self):
+        """reduce(g1 ++ g2) == reduce(g1) + reduce(g2): chunking is exact."""
+        g = _rand((8, 512), 5)
+        d = _rand((512,), 6)
+        whole = np.asarray(attr_reduce_chunk(g, d, block_f=256), np.float64)
+        parts = (
+            np.asarray(attr_reduce_chunk(g[:3], d, block_f=256), np.float64)
+            + np.asarray(attr_reduce_chunk(g[3:], d, block_f=256), np.float64)
+        )
+        assert_allclose(whole, parts, rtol=1e-5, atol=1e-6)
+
+    def test_zero_diff_zero_attr(self):
+        g = _rand((4, 256), 7)
+        out = np.asarray(attr_reduce_chunk(g, jnp.zeros(256), block_f=256))
+        assert np.all(out == 0.0)
+
+    def test_single_lane_is_product(self):
+        g = _rand((1, 256), 8)
+        d = _rand((256,), 9)
+        assert_allclose(
+            np.asarray(attr_reduce_chunk(g, d, block_f=256)),
+            np.asarray(g[0]) * np.asarray(d),
+            rtol=1e-6,
+        )
+
+
+class TestValidation:
+    def test_rejects_rank1_grads(self):
+        with pytest.raises(ValueError):
+            attr_reduce_chunk(jnp.zeros(256), jnp.zeros(256), block_f=256)
+
+    def test_rejects_diff_mismatch(self):
+        with pytest.raises(ValueError):
+            attr_reduce_chunk(jnp.zeros((2, 512)), jnp.zeros(256), block_f=256)
+
+    def test_rejects_bad_tiling(self):
+        with pytest.raises(ValueError, match="divisible"):
+            attr_reduce_chunk(jnp.zeros((2, 300)), jnp.zeros(300), block_f=256)

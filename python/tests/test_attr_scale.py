@@ -1,0 +1,116 @@
+"""L1 per-lane attribution-scaling kernel (multi-image chunks) vs oracle."""
+
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from numpy.testing import assert_allclose
+
+from compile import data, model
+from compile.kernels import attr_scale_chunk
+from compile.kernels.ref import attr_scale_chunk_ref
+
+
+def _rand(shape, seed, lo=-2.0, hi=2.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(lo, hi, shape).astype(np.float32))
+
+
+class TestAgainstRef:
+    @pytest.mark.parametrize("k", [1, 2, 16])
+    def test_matches_ref_3072(self, k):
+        g = _rand((k, 3072), 1)
+        d = _rand((k, 3072), 2)
+        assert_allclose(
+            np.asarray(attr_scale_chunk(g, d)),
+            np.asarray(attr_scale_chunk_ref(g, d)),
+            rtol=1e-6, atol=1e-7,
+        )
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        k=st.integers(1, 20),
+        tiles=st.integers(1, 3),
+        block=st.sampled_from([128, 512]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, k, tiles, block, seed):
+        f = tiles * block
+        g = _rand((k, f), seed)
+        d = _rand((k, f), seed + 1)
+        assert_allclose(
+            np.asarray(attr_scale_chunk(g, d, block_f=block)),
+            np.asarray(attr_scale_chunk_ref(g, d)),
+            rtol=1e-6, atol=1e-7,
+        )
+
+    def test_rejects_shape_mismatch(self):
+        with pytest.raises(ValueError):
+            attr_scale_chunk(jnp.zeros((2, 512)), jnp.zeros((3, 512)), block_f=256)
+
+    def test_rejects_bad_tiling(self):
+        with pytest.raises(ValueError, match="divisible"):
+            attr_scale_chunk(jnp.zeros((2, 300)), jnp.zeros((2, 300)), block_f=256)
+
+
+class TestMultiChunkProgram:
+    """ig_chunk_multi: the cross-request batched program built on this kernel."""
+
+    @pytest.fixture(scope="class")
+    def flat(self):
+        return model.flatten_params(model.init_params())
+
+    def test_lanes_independent(self, flat):
+        """A multi chunk over one image's points == single-image ig_chunk."""
+        img = jnp.asarray(data.gen_image(0, 0))
+        k = 8
+        alphas = jnp.linspace(0, 1, k)
+        weights = jnp.full(k, 1.0 / k)
+        onehot = jnp.zeros(model.NUM_CLASSES).at[5].set(1.0)
+
+        partial, probs = model.ig_chunk_jit(
+            flat, img, jnp.zeros(model.F), alphas, weights, onehot)
+
+        xs = jnp.tile(img[None, :], (k, 1))
+        partials, mprobs = model.ig_chunk_multi_jit(
+            flat, xs, jnp.zeros((k, model.F)), alphas, weights,
+            jnp.tile(onehot[None, :], (k, 1)))
+
+        assert_allclose(
+            np.asarray(partials, np.float64).sum(axis=0),
+            np.asarray(partial, np.float64),
+            rtol=1e-4, atol=1e-6,
+        )
+        assert_allclose(np.asarray(mprobs), np.asarray(probs), rtol=1e-5, atol=1e-7)
+
+    def test_zero_weight_lane_contributes_nothing(self, flat):
+        img = jnp.asarray(data.gen_image(1, 0))
+        xs = jnp.tile(img[None, :], (4, 1))
+        onehots = jnp.zeros((4, model.NUM_CLASSES)).at[:, 2].set(1.0)
+        partials, _ = model.ig_chunk_multi_jit(
+            flat, xs, jnp.zeros((4, model.F)), jnp.asarray([0.0, 0.5, 1.0, 0.7]),
+            jnp.asarray([0.25, 0.25, 0.25, 0.0]), onehots)
+        assert np.all(np.asarray(partials)[3] == 0.0)
+
+    def test_mixed_images_match_separate_calls(self, flat):
+        """Interleaved lanes from two requests reproduce per-request results."""
+        a = jnp.asarray(data.gen_image(0, 0))
+        b = jnp.asarray(data.gen_image(3, 0))
+        oh_a = jnp.zeros(model.NUM_CLASSES).at[5].set(1.0)
+        oh_b = jnp.zeros(model.NUM_CLASSES).at[1].set(1.0)
+        alphas = jnp.asarray([0.0, 0.0, 0.5, 0.5, 1.0, 1.0])
+        weights = jnp.full(6, 1.0 / 3)
+        xs = jnp.stack([a, b, a, b, a, b])
+        onehots = jnp.stack([oh_a, oh_b] * 3)
+        partials, _ = model.ig_chunk_multi_jit(
+            flat, xs, jnp.zeros((6, model.F)), alphas, weights, onehots)
+
+        pa, _ = model.ig_chunk_jit(flat, a, jnp.zeros(model.F),
+                                   jnp.asarray([0.0, 0.5, 1.0]), jnp.full(3, 1.0 / 3), oh_a)
+        pb, _ = model.ig_chunk_jit(flat, b, jnp.zeros(model.F),
+                                   jnp.asarray([0.0, 0.5, 1.0]), jnp.full(3, 1.0 / 3), oh_b)
+        assert_allclose(np.asarray(partials, np.float64)[0::2].sum(axis=0),
+                        np.asarray(pa, np.float64), rtol=1e-4, atol=1e-6)
+        assert_allclose(np.asarray(partials, np.float64)[1::2].sum(axis=0),
+                        np.asarray(pb, np.float64), rtol=1e-4, atol=1e-6)

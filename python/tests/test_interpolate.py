@@ -1,0 +1,109 @@
+"""L1 interpolation kernel vs pure-jnp oracle (the core correctness signal)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from numpy.testing import assert_allclose
+
+from compile.kernels import interpolate_chunk
+from compile.kernels.ref import interpolate_chunk_ref
+
+
+def _rand(shape, seed, lo=-2.0, hi=2.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(lo, hi, shape).astype(np.float32))
+
+
+class TestAgainstRef:
+    @pytest.mark.parametrize("k", [1, 2, 7, 16])
+    def test_matches_ref_3072(self, k):
+        x = _rand((3072,), 1)
+        b = _rand((3072,), 2)
+        a = _rand((k,), 3, 0.0, 1.0)
+        out = interpolate_chunk(x, b, a)
+        assert_allclose(np.asarray(out), np.asarray(interpolate_chunk_ref(x, b, a)), rtol=1e-6, atol=1e-6)
+
+    @pytest.mark.parametrize("f,block", [(1024, 1024), (2048, 1024), (512, 256), (64, 32)])
+    def test_matches_ref_other_tilings(self, f, block):
+        x = _rand((f,), 4)
+        b = _rand((f,), 5)
+        a = _rand((5,), 6, 0.0, 1.0)
+        out = interpolate_chunk(x, b, a, block_f=block)
+        assert_allclose(np.asarray(out), np.asarray(interpolate_chunk_ref(x, b, a)), rtol=1e-6, atol=1e-6)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        k=st.integers(1, 24),
+        tiles=st.integers(1, 4),
+        block=st.sampled_from([128, 256, 512]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, k, tiles, block, seed):
+        f = tiles * block
+        x = _rand((f,), seed)
+        b = _rand((f,), seed + 1)
+        a = _rand((k,), seed + 2, -0.5, 1.5)  # extrapolation permitted
+        out = interpolate_chunk(x, b, a, block_f=block)
+        assert_allclose(np.asarray(out), np.asarray(interpolate_chunk_ref(x, b, a)), rtol=1e-6, atol=1e-6)
+
+
+class TestEndpoints:
+    def test_alpha_zero_is_baseline(self):
+        x = _rand((1024,), 7)
+        b = _rand((1024,), 8)
+        out = interpolate_chunk(x, b, jnp.zeros(3), block_f=256)
+        for k in range(3):
+            assert_allclose(np.asarray(out[k]), np.asarray(b), rtol=0)
+
+    def test_alpha_one_is_input(self):
+        x = _rand((1024,), 9)
+        b = _rand((1024,), 10)
+        out = interpolate_chunk(x, b, jnp.ones(2), block_f=256)
+        for k in range(2):
+            assert_allclose(np.asarray(out[k]), np.asarray(x), rtol=1e-6, atol=1e-7)
+
+    def test_midpoint(self):
+        x = jnp.ones(256, jnp.float32) * 4.0
+        b = jnp.zeros(256, jnp.float32)
+        out = interpolate_chunk(x, b, jnp.asarray([0.5]), block_f=256)
+        assert_allclose(np.asarray(out[0]), 2.0)
+
+    def test_identical_endpoints_constant_path(self):
+        x = _rand((512,), 11)
+        out = interpolate_chunk(x, x, jnp.asarray([0.0, 0.3, 1.0]), block_f=256)
+        for k in range(3):
+            assert_allclose(np.asarray(out[k]), np.asarray(x), rtol=1e-6)
+
+
+class TestValidation:
+    def test_rejects_mismatched_shapes(self):
+        with pytest.raises(ValueError, match="equal-shape"):
+            interpolate_chunk(jnp.zeros(512), jnp.zeros(256), jnp.zeros(2), block_f=256)
+
+    def test_rejects_non_flat(self):
+        with pytest.raises(ValueError):
+            interpolate_chunk(jnp.zeros((2, 256)), jnp.zeros((2, 256)), jnp.zeros(2), block_f=256)
+
+    def test_rejects_bad_tiling(self):
+        with pytest.raises(ValueError, match="divisible"):
+            interpolate_chunk(jnp.zeros(300), jnp.zeros(300), jnp.zeros(2), block_f=256)
+
+    def test_rejects_matrix_alphas(self):
+        with pytest.raises(ValueError, match="rank-1"):
+            interpolate_chunk(jnp.zeros(256), jnp.zeros(256), jnp.zeros((2, 2)), block_f=256)
+
+
+class TestLinearity:
+    """The kernel is affine in alpha - the property the IG path relies on."""
+
+    def test_convex_combination(self):
+        x = _rand((512,), 12)
+        b = _rand((512,), 13)
+        a = jnp.asarray([0.25, 0.75])
+        out = np.asarray(interpolate_chunk(x, b, a, block_f=256))
+        mid = np.asarray(interpolate_chunk(x, b, jnp.asarray([0.5]), block_f=256))[0]
+        assert_allclose((out[0] + out[1]) / 2, mid, rtol=1e-5, atol=1e-6)

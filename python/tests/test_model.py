@@ -1,0 +1,149 @@
+"""L2 MiniInception: shapes, determinism, calibration, homogeneity, IG chunk."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import data, model
+
+# Session-scoped params: init is the expensive part (conv compilation).
+@pytest.fixture(scope="module")
+def flat():
+    return model.flatten_params(model.init_params())
+
+
+def _img(cls=0, idx=0):
+    return jnp.asarray(data.gen_image(cls, idx))
+
+
+class TestParams:
+    def test_param_count(self):
+        assert model.num_params() == 29678
+
+    def test_flatten_roundtrip(self, flat):
+        params = model.unflatten_params(flat)
+        flat2 = model.flatten_params(params)
+        assert np.array_equal(np.asarray(flat), np.asarray(flat2))
+
+    def test_unflatten_rejects_wrong_size(self):
+        with pytest.raises(ValueError):
+            model.unflatten_params(jnp.zeros(10))
+
+    def test_init_deterministic(self):
+        f1 = model.flatten_params(model.init_params())
+        f2 = model.flatten_params(model.init_params())
+        assert np.array_equal(np.asarray(f1), np.asarray(f2))
+
+    def test_biases_zero_at_init(self, flat):
+        params = model.unflatten_params(flat)
+        for k, v in params.items():
+            if k.endswith("/b"):
+                assert np.all(np.asarray(v) == 0.0), k
+
+    def test_calibration_hits_target(self, flat):
+        imgs, _ = data.gen_corpus(2)
+        logits = model.logits_fn(model.unflatten_params(flat), jnp.asarray(imgs))
+        top = float(jnp.mean(jnp.max(logits, axis=-1)))
+        assert abs(top - model.TARGET_TOP_LOGIT) < 0.05
+
+
+class TestForward:
+    def test_shapes(self, flat):
+        imgs = jnp.stack([_img(0, 0), _img(1, 0)])
+        (probs,) = model.fwd_jit(flat, imgs)
+        assert probs.shape == (2, model.NUM_CLASSES)
+
+    def test_probs_valid(self, flat):
+        imgs, _ = data.gen_corpus(1)
+        (probs,) = model.fwd_jit(flat, jnp.asarray(imgs))
+        p = np.asarray(probs)
+        assert np.all(p >= 0) and np.all(p <= 1)
+        assert_allclose(p.sum(axis=-1), 1.0, rtol=1e-5)
+
+    def test_positive_homogeneity(self, flat):
+        """Zero-bias ReLU convnet => logits(a*x) == a*logits(x) exactly.
+
+        This is the property that makes p(alpha) along the black-baseline
+        IG path an exact softmax-along-a-ray (the paper's Fig 3b shape).
+        """
+        params = model.unflatten_params(flat)
+        x = _img(5, 0)[None, :]
+        l1 = np.asarray(model.logits_fn(params, x))
+        lhalf = np.asarray(model.logits_fn(params, 0.5 * x))
+        assert_allclose(lhalf, 0.5 * l1, rtol=1e-4, atol=1e-5)
+
+    def test_black_baseline_uniform_probs(self, flat):
+        (probs,) = model.fwd_jit(flat, jnp.zeros((1, model.F)))
+        assert_allclose(np.asarray(probs)[0], 1.0 / model.NUM_CLASSES, rtol=1e-5)
+
+    def test_saturation_along_path(self, flat):
+        """p(target) must gain most of its value in a small alpha interval
+        - the observation (Fig 3b) the whole paper rests on."""
+        from compile.kernels import interpolate_chunk
+
+        x = _img(0, 0)
+        batch = interpolate_chunk(x, jnp.zeros_like(x), jnp.linspace(0, 1, 16))
+        (probs,) = model.fwd_jit(flat, batch)
+        p = np.asarray(probs)
+        t = int(p[-1].argmax())
+        curve = p[:, t]
+        total = curve[-1] - curve[0]
+        first_quarter = curve[4] - curve[0]
+        assert first_quarter / total > 0.6, f"no saturation: {curve.round(3)}"
+
+
+class TestIgChunk:
+    def test_output_shapes(self, flat):
+        k = 4
+        onehot = jnp.zeros(model.NUM_CLASSES).at[2].set(1.0)
+        partial, probs = model.ig_chunk_jit(
+            flat, _img(), jnp.zeros(model.F), jnp.linspace(0, 1, k),
+            jnp.full(k, 0.25), onehot,
+        )
+        assert partial.shape == (model.F,)
+        assert probs.shape == (k, model.NUM_CLASSES)
+
+    def test_zero_weights_zero_attr(self, flat):
+        onehot = jnp.zeros(model.NUM_CLASSES).at[0].set(1.0)
+        partial, _ = model.ig_chunk_jit(
+            flat, _img(), jnp.zeros(model.F), jnp.linspace(0, 1, 4),
+            jnp.zeros(4), onehot,
+        )
+        assert np.all(np.asarray(partial) == 0.0)
+
+    def test_weight_linearity(self, flat):
+        """Attribution is linear in the Riemann weights (cotangent scaling)."""
+        onehot = jnp.zeros(model.NUM_CLASSES).at[1].set(1.0)
+        a = jnp.linspace(0, 1, 4)
+        p1, _ = model.ig_chunk_jit(flat, _img(), jnp.zeros(model.F), a, jnp.full(4, 0.25), onehot)
+        p2, _ = model.ig_chunk_jit(flat, _img(), jnp.zeros(model.F), a, jnp.full(4, 0.5), onehot)
+        assert_allclose(np.asarray(p2), 2 * np.asarray(p1), rtol=1e-4, atol=1e-7)
+
+    def test_probs_match_fwd(self, flat):
+        """The probs returned by ig_chunk equal fwd on the interpolants."""
+        from compile.kernels import interpolate_chunk
+
+        x = _img(3, 0)
+        a = jnp.asarray([0.0, 0.5, 1.0])
+        onehot = jnp.zeros(model.NUM_CLASSES).at[0].set(1.0)
+        _, probs = model.ig_chunk_jit(flat, x, jnp.zeros(model.F), a, jnp.ones(3), onehot)
+        batch = interpolate_chunk(x, jnp.zeros_like(x), a)
+        (probs_fwd,) = model.fwd_jit(flat, batch)
+        assert_allclose(np.asarray(probs), np.asarray(probs_fwd), rtol=1e-5, atol=1e-7)
+
+    def test_grad_direction_sanity(self, flat):
+        """Full-path trapezoid chunk attribution must be close to
+        f(x) - f(baseline) (completeness at coarse m; exactness improves
+        with m, tested properly in test_ig.py)."""
+        x = _img(0, 0)
+        (probs,) = model.fwd_jit(flat, x[None, :])
+        t = int(np.asarray(probs)[0].argmax())
+        onehot = jnp.zeros(model.NUM_CLASSES).at[t].set(1.0)
+        m = 15
+        a = jnp.linspace(0, 1, m + 1)
+        w = jnp.full(m + 1, 1.0 / m).at[0].set(0.5 / m).at[m].set(0.5 / m)
+        partial, _ = model.ig_chunk_jit(flat, x, jnp.zeros(model.F), a, w, onehot)
+        gap = float(np.asarray(probs)[0, t] - 1.0 / model.NUM_CLASSES)
+        assert abs(float(np.asarray(partial, np.float64).sum()) - gap) < 0.2 * abs(gap)

@@ -1,0 +1,104 @@
+"""L1 softmax kernel (fwd + custom Pallas VJP) vs oracle and autodiff."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from numpy.testing import assert_allclose
+
+from compile.kernels import softmax
+from compile.kernels.ref import softmax_bwd_ref, softmax_ref
+
+
+def _rand(shape, seed, lo=-5.0, hi=5.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(lo, hi, shape).astype(np.float32))
+
+
+class TestForward:
+    @pytest.mark.parametrize("k,c", [(1, 8), (16, 8), (4, 1000), (3, 2)])
+    def test_matches_ref(self, k, c):
+        z = _rand((k, c), 1)
+        assert_allclose(np.asarray(softmax(z)), np.asarray(softmax_ref(z)), rtol=1e-6, atol=1e-7)
+
+    def test_rows_sum_to_one(self):
+        z = _rand((16, 8), 2)
+        assert_allclose(np.asarray(softmax(z)).sum(axis=-1), 1.0, rtol=1e-5)
+
+    def test_large_logits_stable(self):
+        """Numerical stability: the max-subtraction must prevent overflow."""
+        z = jnp.asarray([[1000.0, 999.0, 0.0], [-1000.0, -1001.0, -1002.0]], jnp.float32)
+        p = np.asarray(softmax(z))
+        assert np.all(np.isfinite(p))
+        assert_allclose(p.sum(axis=-1), 1.0, rtol=1e-5)
+        assert p[0, 0] > p[0, 1] > p[0, 2]
+
+    def test_uniform_logits_uniform_probs(self):
+        p = np.asarray(softmax(jnp.zeros((2, 8), jnp.float32)))
+        assert_allclose(p, 0.125, rtol=1e-6)
+
+    def test_shift_invariance(self):
+        z = _rand((4, 8), 3)
+        assert_allclose(
+            np.asarray(softmax(z)), np.asarray(softmax(z + 37.0)), rtol=1e-4, atol=1e-6
+        )
+
+    @settings(max_examples=25, deadline=None)
+    @given(k=st.integers(1, 20), c=st.integers(2, 32), seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis(self, k, c, seed):
+        z = _rand((k, c), seed, -20.0, 20.0)
+        assert_allclose(np.asarray(softmax(z)), np.asarray(softmax_ref(z)), rtol=1e-5, atol=1e-7)
+
+
+class TestBackward:
+    def test_vjp_matches_ref(self):
+        z = _rand((5, 8), 4)
+        dp = _rand((5, 8), 5)
+        p, vjp = jax.vjp(softmax, z)
+        (dz,) = vjp(dp)
+        assert_allclose(np.asarray(dz), np.asarray(softmax_bwd_ref(p, dp)), rtol=1e-5, atol=1e-7)
+
+    def test_vjp_matches_jnp_autodiff(self):
+        """Custom Pallas VJP must agree with autodiff through the oracle."""
+        z = _rand((4, 8), 6)
+        dp = _rand((4, 8), 7)
+        _, vjp_kernel = jax.vjp(softmax, z)
+        _, vjp_ref = jax.vjp(softmax_ref, z)
+        assert_allclose(
+            np.asarray(vjp_kernel(dp)[0]), np.asarray(vjp_ref(dp)[0]), rtol=1e-5, atol=1e-7
+        )
+
+    def test_grad_of_single_prob_finite_difference(self):
+        z = _rand((1, 8), 8, -2.0, 2.0)
+
+        def p0(zz):
+            return softmax(zz)[0, 0]
+
+        g = np.asarray(jax.grad(p0)(z))
+        eps = 1e-3
+        for j in range(8):
+            zp = z.at[0, j].add(eps)
+            zm = z.at[0, j].add(-eps)
+            fd = (p0(zp) - p0(zm)) / (2 * eps)
+            assert abs(g[0, j] - fd) < 1e-3, f"logit {j}: {g[0, j]} vs fd {fd}"
+
+    def test_grad_rows_sum_to_zero(self):
+        """d(softmax)/dz rows of the cotangent-contracted grad sum to 0
+        when the cotangent is a one-hot (probability conservation)."""
+        z = _rand((3, 8), 9)
+        onehot = jnp.zeros((3, 8), jnp.float32).at[:, 2].set(1.0)
+        _, vjp = jax.vjp(softmax, z)
+        dz = np.asarray(vjp(onehot)[0])
+        assert_allclose(dz.sum(axis=-1), 0.0, atol=1e-6)
+
+    @settings(max_examples=15, deadline=None)
+    @given(k=st.integers(1, 8), c=st.integers(2, 16), seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_bwd(self, k, c, seed):
+        z = _rand((k, c), seed)
+        dp = _rand((k, c), seed + 1)
+        p, vjp = jax.vjp(softmax, z)
+        assert_allclose(
+            np.asarray(vjp(dp)[0]), np.asarray(softmax_bwd_ref(p, dp)), rtol=1e-5, atol=1e-6
+        )

@@ -1,0 +1,169 @@
+//! Batching ablation — the hardware-awareness claim (§V): the paper's
+//! static two-stage schedule *batches*; Guided-IG-style dynamic stepping
+//! forces batch size 1. Compare gradient-point throughput:
+//!
+//!   batch1      — one point per executable call (igchunk_b1), the
+//!                 dynamic-path worst case;
+//!   chunk16     — one request streamed through igchunk_b16 (this repo's
+//!                 single-request engine path);
+//!   coordinator — cross-request continuous batching via igchunk_m16
+//!                 under concurrent load (this repo's serving path).
+//!
+//!     cargo bench --bench ablation_batching
+
+use std::time::Instant;
+
+use nuig::bench::{fmt3, Table};
+use nuig::config::CoordinatorConfig;
+use nuig::coordinator::{Coordinator, ExplainRequest};
+use nuig::data::synth;
+use nuig::ig::{self, model::IgPointsOut, IgOptions, Model, Scheme};
+use nuig::runtime::{Arg, ExeKind, Runtime, RuntimeHandle};
+
+/// Batch-1 model: every gradient point is its own igchunk_b1 call —
+/// the GPU-side consequence of dynamically-determined steps.
+struct Batch1Model {
+    handle: RuntimeHandle,
+}
+
+impl Model for Batch1Model {
+    fn features(&self) -> usize {
+        self.handle.features()
+    }
+    fn num_classes(&self) -> usize {
+        self.handle.num_classes()
+    }
+    fn probs(&self, imgs: &[&[f32]]) -> anyhow::Result<Vec<Vec<f64>>> {
+        imgs.iter()
+            .map(|img| {
+                let outs =
+                    self.handle.execute(ExeKind::Fwd1, vec![Arg::mat(img.to_vec(), 1, self.features())])?;
+                Ok(outs[0].iter().map(|&v| v as f64).collect())
+            })
+            .collect()
+    }
+    fn ig_points(
+        &self,
+        x: &[f32],
+        baseline: &[f32],
+        alphas: &[f32],
+        weights: &[f32],
+        target: usize,
+    ) -> anyhow::Result<IgPointsOut> {
+        let mut onehot = vec![0f32; self.num_classes()];
+        onehot[target] = 1.0;
+        let mut partial = vec![0f64; self.features()];
+        let mut target_probs = Vec::new();
+        for (&a, &w) in alphas.iter().zip(weights) {
+            let outs = self.handle.execute(
+                ExeKind::IgChunk1,
+                vec![
+                    Arg::vec(x.to_vec()),
+                    Arg::vec(baseline.to_vec()),
+                    Arg::vec(vec![a]),
+                    Arg::vec(vec![w]),
+                    Arg::vec(onehot.clone()),
+                ],
+            )?;
+            for (acc, &v) in partial.iter_mut().zip(&outs[0]) {
+                *acc += v as f64;
+            }
+            target_probs.push(outs[1][target] as f64);
+        }
+        Ok(IgPointsOut { partial, target_probs })
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load_default("artifacts")?;
+    let img = synth::gen_image(0, 0);
+    let m = 32;
+    let opts = IgOptions { scheme: Scheme::NonUniform { n_int: 4 }, m, ..Default::default() };
+
+    let mut table = Table::new(
+        "batching ablation: gradient-point throughput",
+        &["mode", "points", "wall_ms", "points_per_s", "speedup_vs_batch1"],
+    );
+
+    // Warm-up all executables.
+    let chunked = rt.model();
+    ig::explain(&chunked, &img, None, &opts)?;
+    let b1 = Batch1Model { handle: rt.handle() };
+    ig::explain(&b1, &img, None, &IgOptions { m: 4, ..opts })?;
+
+    // batch1: Guided-IG-style.
+    let t0 = Instant::now();
+    let a1 = ig::explain(&b1, &img, None, &opts)?;
+    let t_b1 = t0.elapsed().as_secs_f64();
+    let pts1 = a1.steps as f64;
+
+    // chunk16: single-request chunked path.
+    let reps = 4;
+    let t0 = Instant::now();
+    let mut pts16 = 0f64;
+    for _ in 0..reps {
+        pts16 += ig::explain(&chunked, &img, None, &opts)?.steps as f64;
+    }
+    let t_c16 = t0.elapsed().as_secs_f64() / reps as f64;
+    pts16 /= reps as f64;
+
+    // coordinator: 16 concurrent requests, cross-request batching.
+    let coord = Coordinator::start(&rt, CoordinatorConfig { workers: 2, ..Default::default() })?;
+    coord.explain(ExplainRequest::new(img.clone(), IgOptions { m: 8, ..opts }))?; // warm
+    let n_req = 16;
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..n_req)
+        .map(|i| {
+            coord.submit(ExplainRequest::new(synth::gen_image(i % 8, 0), opts))
+        })
+        .collect::<Result<_, _>>()?;
+    let mut pts_coord = 0f64;
+    for h in handles {
+        pts_coord += h.wait()?.attribution.steps as f64;
+    }
+    let t_coord = t0.elapsed().as_secs_f64();
+    let occ = coord.stats().mean_occupancy(coord.config().chunk);
+
+    let rate1 = pts1 / t_b1;
+    let rate16 = pts16 / t_c16;
+    let rate_coord = pts_coord / t_coord;
+    table.row(vec!["batch1".into(), fmt3(pts1), fmt3(t_b1 * 1e3), fmt3(rate1), "1.000".into()]);
+    table.row(vec![
+        "chunk16".into(),
+        fmt3(pts16),
+        fmt3(t_c16 * 1e3),
+        fmt3(rate16),
+        fmt3(rate16 / rate1),
+    ]);
+    table.row(vec![
+        "coordinator".into(),
+        fmt3(pts_coord),
+        fmt3(t_coord * 1e3),
+        fmt3(rate_coord),
+        fmt3(rate_coord / rate1),
+    ]);
+    table.print();
+    println!("coordinator batch occupancy: {:.1}%", occ * 100.0);
+
+    // SUBSTRATE NOTE: on a GPU (the paper's testbed) a batch-16 launch
+    // costs barely more than batch-1 because otherwise-idle SMs absorb
+    // the extra lanes — that is the paper's §V argument against dynamic
+    // batch-1 methods. CPU-PJRT compute scales ~linearly with batch, so
+    // the single-request chunk16 path pays for its padding lanes and
+    // lands near batch-1 throughput; the *coordinator* restores the win
+    // by filling those lanes with other requests' points (occupancy ≈ 1).
+    // The assertable shape on this substrate is therefore:
+    assert!(
+        rate_coord > rate1,
+        "continuous batching must beat batch-1 dispatch: {rate_coord:.0} !> {rate1:.0}"
+    );
+    assert!(occ > 0.8, "coordinator must keep chunks full under load: {occ}");
+    println!(
+        "shape check OK: cross-request continuous batching beats batch-1 ({:.2}x) at {:.0}% occupancy\n\
+         (GPU would additionally favour chunk16 over batch1; see bench source for the mapping)",
+        rate_coord / rate1,
+        occ * 100.0
+    );
+    coord.shutdown();
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! Scheduling-policy ablation: p50/p95 latency and throughput under a
+//! heterogeneous request mix (small m=16 requests interleaved with large
+//! m=128 ones) for fifo / round-robin / shortest-first lane scheduling.
+//!
+//! Expected shape: FIFO lets large requests head-of-line-block small
+//! ones (high small-request p95); shortest-first minimizes small-request
+//! latency; round-robin sits between. Throughput is policy-invariant
+//! (the device does the same total work).
+//!
+//!     cargo bench --bench ablation_scheduling
+
+use std::time::Instant;
+
+use nuig::bench::{fmt3, Table};
+use nuig::config::CoordinatorConfig;
+use nuig::coordinator::{Coordinator, ExplainRequest, Policy};
+use nuig::data::synth;
+use nuig::ig::{IgOptions, Scheme};
+use nuig::metrics::Summary;
+use nuig::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load_default("artifacts")?;
+    let mut table = Table::new(
+        "lane-scheduling ablation (mixed m=16 / m=128 load)",
+        &["policy", "total_s", "small_p50_ms", "small_p95_ms", "large_p95_ms", "throughput_rps"],
+    );
+
+    for policy in [Policy::Fifo, Policy::RoundRobin, Policy::ShortestFirst] {
+        let coord = Coordinator::start(
+            &rt,
+            CoordinatorConfig { workers: 2, policy, ..Default::default() },
+        )?;
+        // Warm-up.
+        coord.explain(ExplainRequest::new(
+            synth::gen_image(0, 0),
+            IgOptions { m: 8, ..Default::default() },
+        ))?;
+
+        // 24 requests: alternating large (m=128) and small (m=16), so
+        // small ones queue behind large ones under FIFO.
+        let n = 24;
+        let t0 = Instant::now();
+        let handles: Vec<(bool, _)> = (0..n)
+            .map(|i| {
+                let small = i % 2 == 1;
+                let m = if small { 16 } else { 128 };
+                let req = ExplainRequest::new(
+                    synth::gen_image(i % 8, 0),
+                    IgOptions { scheme: Scheme::NonUniform { n_int: 4 }, m, ..Default::default() },
+                );
+                Ok((small, coord.submit(req)?))
+            })
+            .collect::<anyhow::Result<_>>()?;
+
+        let mut small_lat = Summary::new();
+        let mut large_lat = Summary::new();
+        for (small, h) in handles {
+            let resp = h.wait()?;
+            let l = resp.total_latency.as_secs_f64();
+            if small {
+                small_lat.record(l);
+            } else {
+                large_lat.record(l);
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        table.row(vec![
+            policy.to_string(),
+            fmt3(wall),
+            fmt3(small_lat.quantile(0.5) * 1e3),
+            fmt3(small_lat.quantile(0.95) * 1e3),
+            fmt3(large_lat.quantile(0.95) * 1e3),
+            fmt3(n as f64 / wall),
+        ]);
+        coord.shutdown();
+    }
+    table.print();
+    println!(
+        "shape: sjf/rr should cut small-request latency vs fifo at ~equal throughput\n\
+         (recorded in EXPERIMENTS.md §Perf)"
+    );
+    Ok(())
+}

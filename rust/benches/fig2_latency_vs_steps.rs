@@ -1,0 +1,57 @@
+//! Fig. 2 regeneration: (a) run-time latency of baseline (uniform) IG vs
+//! interpolation step count, normalized to m=1; (b) convergence δ vs m.
+//!
+//! Paper shape to reproduce: latency grows ~linearly in m (the knee in
+//! the paper's Fig. 2a is batch-quantization: cost steps every
+//! ceil(points/16) chunks), and δ decreases monotonically in m.
+//!
+//!     cargo bench --bench fig2_latency_vs_steps
+
+use nuig::bench::{fmt3, measure, BenchConfig, Table};
+use nuig::data::synth;
+use nuig::ig::{self, IgOptions, Scheme};
+use nuig::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = BenchConfig::from_env();
+    let rt = Runtime::load_default("artifacts")?;
+    let model = rt.model();
+    let img = synth::gen_image(0, 0);
+
+    let grid = [1usize, 2, 4, 8, 16, 32, 64, 128, 256];
+
+    // Warm-up outside measurement (mirrors the paper's profiler protocol).
+    ig::explain(&model, &img, None, &IgOptions { scheme: Scheme::Uniform, m: 8, ..Default::default() })?;
+
+    let mut rows = Vec::new();
+    for &m in &grid {
+        let opts = IgOptions { scheme: Scheme::Uniform, m, ..Default::default() };
+        let mut delta = 0.0;
+        let meas = measure(&cfg, &format!("uniform m={m}"), || {
+            delta = ig::explain(&model, &img, None, &opts).unwrap().delta;
+        });
+        rows.push((m, meas.mean_s(), delta));
+    }
+
+    let t1 = rows[0].1;
+    let mut table = Table::new(
+        "Fig 2a/2b: latency (normalized to m=1) and delta vs steps (uniform IG)",
+        &["m", "latency_ms", "latency_norm", "delta"],
+    );
+    for (m, t, d) in &rows {
+        table.row(vec![
+            m.to_string(),
+            fmt3(t * 1e3),
+            fmt3(t / t1),
+            fmt3(*d),
+        ]);
+    }
+    table.print();
+
+    // Shape assertions: the claims Fig. 2 makes.
+    let last = rows.last().unwrap();
+    assert!(last.1 / t1 > 4.0, "latency must grow with m");
+    assert!(last.2 < rows[2].2, "delta must fall with m");
+    println!("shape check OK: latency rises ~linearly; delta falls monotonically");
+    Ok(())
+}

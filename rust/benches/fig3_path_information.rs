@@ -1,0 +1,61 @@
+//! Fig. 3 regeneration: information distribution along the IG path —
+//! (b) classification probability p(target) vs α and the paper's ">90% of
+//! final value early" statistic; (c) per-interval share of |dp/dα|
+//! (gradient-magnitude proxy / contribution to convergence).
+//!
+//!     cargo bench --bench fig3_path_information
+
+use nuig::bench::{fmt3, Table};
+use nuig::data::Corpus;
+use nuig::ig::{analysis, engine::argmax, Model};
+use nuig::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load_default("artifacts")?;
+    let model = rt.model();
+    let corpus = Corpus::eval_set(4);
+
+    let mut curve = Table::new(
+        "Fig 3b: p(target) along the IG path (per image)",
+        &["class", "alpha", "p_target"],
+    );
+    let mut shares = Table::new(
+        "Fig 3c: per-interval share of |dp/dalpha| (n_int=8)",
+        &["class", "interval", "share"],
+    );
+    let mut stats = Table::new(
+        "Fig 3 summary: change concentration",
+        &["class", "target", "alpha_at_50pct", "alpha_at_90pct", "first_quarter_share"],
+    );
+
+    for li in corpus.iter() {
+        let probs = model.probs(&[&li.pixels])?;
+        let target = argmax(&probs[0]);
+        let baseline = vec![0f32; li.pixels.len()];
+        let info = analysis::path_info(&model, &li.pixels, &baseline, target, 32, 8)?;
+
+        for (a, p) in info.alphas.iter().zip(&info.probs).step_by(4) {
+            curve.row(vec![li.class.to_string(), fmt3(*a), fmt3(*p)]);
+        }
+        for (i, s) in info.interval_share.iter().enumerate() {
+            shares.row(vec![li.class.to_string(), i.to_string(), fmt3(*s)]);
+        }
+        let quarter: f64 = info.interval_share[..2].iter().sum();
+        stats.row(vec![
+            li.class.to_string(),
+            target.to_string(),
+            fmt3(info.alpha_at_change_fraction(0.5)),
+            fmt3(info.alpha_at_change_fraction(0.9)),
+            fmt3(quarter),
+        ]);
+    }
+    curve.print();
+    shares.print();
+    stats.print();
+
+    println!(
+        "paper's claim: most probability change (and gradient mass) concentrates in a small\n\
+         alpha-interval; with the black baseline + calibrated softmax it lands early in the path."
+    );
+    Ok(())
+}

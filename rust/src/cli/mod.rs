@@ -1,0 +1,235 @@
+//! Minimal CLI argument parser (no `clap` offline).
+//!
+//! Supports the subcommand + flags shape the `nuig` binary uses:
+//!
+//! ```text
+//! nuig <subcommand> [--flag] [--key value] [--key=value] [positional...]
+//! ```
+//!
+//! Typed accessors consume recognized keys; [`Args::finish`] errors on
+//! anything left over, so typos fail loudly instead of being ignored.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone)]
+pub struct Args {
+    /// The subcommand (first non-flag token), if any.
+    pub command: Option<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positionals: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (exclusive of argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Args> {
+        let mut tokens = tokens.into_iter().peekable();
+        let mut command = None;
+        let mut options = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut positionals = Vec::new();
+
+        while let Some(tok) = tokens.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` terminator: rest are positionals.
+                    positionals.extend(tokens.by_ref());
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    if k.is_empty() {
+                        bail!("empty option name in {tok:?}");
+                    }
+                    options.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` if the next token isn't another option;
+                    // otherwise a boolean flag.
+                    match tokens.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = tokens.next().unwrap();
+                            options.insert(body.to_string(), v);
+                        }
+                        _ => flags.push(body.to_string()),
+                    }
+                }
+            } else if command.is_none() && positionals.is_empty() {
+                command = Some(tok);
+            } else {
+                positionals.push(tok);
+            }
+        }
+        Ok(Args { command, options, flags, positionals })
+    }
+
+    /// Parse from the process environment (skips argv[0]).
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Consume a string option.
+    pub fn opt_str(&mut self, key: &str) -> Option<String> {
+        self.options.remove(key)
+    }
+
+    /// Consume a required string option.
+    pub fn req_str(&mut self, key: &str) -> Result<String> {
+        self.opt_str(key).ok_or_else(|| anyhow!("missing required option --{key}"))
+    }
+
+    /// Consume a typed option with a default.
+    pub fn opt<T: std::str::FromStr>(&mut self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.options.remove(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("invalid value for --{key}: {v:?} ({e})")),
+        }
+    }
+
+    /// Consume a comma-separated list option (empty → default).
+    pub fn opt_list<T: std::str::FromStr>(&mut self, key: &str, default: &[T]) -> Result<Vec<T>>
+    where
+        T: Clone,
+        T::Err: std::fmt::Display,
+    {
+        match self.options.remove(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .map_err(|e| anyhow!("invalid element {s:?} for --{key}: {e}"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Consume a boolean flag (present or not).
+    pub fn flag(&mut self, key: &str) -> bool {
+        if let Some(pos) = self.flags.iter().position(|f| f == key) {
+            self.flags.remove(pos);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Remaining positionals (consumes).
+    pub fn take_positionals(&mut self) -> Vec<String> {
+        std::mem::take(&mut self.positionals)
+    }
+
+    /// Error if any unconsumed option/flag remains (positionals included).
+    pub fn finish(self) -> Result<()> {
+        let mut leftovers: Vec<String> = self.options.keys().map(|k| format!("--{k}")).collect();
+        leftovers.extend(self.flags.iter().map(|f| format!("--{f}")));
+        leftovers.extend(self.positionals.iter().cloned());
+        if leftovers.is_empty() {
+            Ok(())
+        } else {
+            bail!("unrecognized arguments: {}", leftovers.join(" "));
+        }
+    }
+}
+
+/// Parse helper for `k1=v1,k2=v2` option payloads.
+pub fn parse_kv_list(s: &str) -> Result<BTreeMap<String, String>> {
+    let mut m = BTreeMap::new();
+    for part in s.split(',').filter(|p| !p.is_empty()) {
+        let (k, v) = part
+            .split_once('=')
+            .with_context(|| format!("expected key=value, got {part:?}"))?;
+        m.insert(k.trim().to_string(), v.trim().to_string());
+    }
+    Ok(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let mut a = parse(&["serve", "--workers", "4", "--m=128", "--verbose"]);
+        assert_eq!(a.command.as_deref(), Some("serve"));
+        assert_eq!(a.opt("workers", 1usize).unwrap(), 4);
+        assert_eq!(a.opt("m", 0usize).unwrap(), 128);
+        assert!(a.flag("verbose"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn defaults_applied() {
+        let mut a = parse(&["explain"]);
+        assert_eq!(a.opt("m", 64usize).unwrap(), 64);
+        assert!(!a.flag("quiet"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn invalid_typed_value() {
+        let mut a = parse(&["x", "--m", "abc"]);
+        assert!(a.opt("m", 0usize).is_err());
+    }
+
+    #[test]
+    fn list_option() {
+        let mut a = parse(&["x", "--grid", "8,16, 32"]);
+        assert_eq!(a.opt_list("grid", &[1usize]).unwrap(), vec![8, 16, 32]);
+        let mut b = parse(&["x"]);
+        assert_eq!(b.opt_list("grid", &[1usize, 2]).unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn finish_rejects_leftovers() {
+        let a = parse(&["x", "--unknown", "1"]);
+        let err = a.finish().unwrap_err().to_string();
+        assert!(err.contains("--unknown"), "{err}");
+    }
+
+    #[test]
+    fn flag_followed_by_option() {
+        let mut a = parse(&["x", "--fast", "--m", "8"]);
+        assert!(a.flag("fast"));
+        assert_eq!(a.opt("m", 0usize).unwrap(), 8);
+    }
+
+    #[test]
+    fn double_dash_terminator() {
+        let mut a = parse(&["x", "--", "--not-an-option"]);
+        assert_eq!(a.take_positionals(), vec!["--not-an-option"]);
+    }
+
+    #[test]
+    fn positionals() {
+        let mut a = parse(&["render", "out.ppm", "in.json"]);
+        assert_eq!(a.command.as_deref(), Some("render"));
+        assert_eq!(a.take_positionals(), vec!["out.ppm", "in.json"]);
+    }
+
+    #[test]
+    fn missing_required() {
+        let mut a = parse(&["x"]);
+        assert!(a.req_str("out").is_err());
+    }
+
+    #[test]
+    fn kv_list() {
+        let m = parse_kv_list("a=1,b=two").unwrap();
+        assert_eq!(m["a"], "1");
+        assert_eq!(m["b"], "two");
+        assert!(parse_kv_list("oops").is_err());
+    }
+}

@@ -1,0 +1,200 @@
+//! Typed run configuration with validation and JSON round-trip.
+//!
+//! One config type per layer of the stack, composed into [`NuigConfig`]:
+//! the CLI builds it from flags, the coordinator/server consumes it, and
+//! bench harnesses construct it programmatically. Everything validates
+//! eagerly (`validate()`) so misconfiguration fails before artifacts load.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::scheduler::Policy;
+use crate::ig::{Allocation, Rule, Scheme};
+use crate::jsonio::Json;
+
+/// Where artifacts live and which executables to load.
+#[derive(Debug, Clone)]
+pub struct RuntimeConfig {
+    pub artifacts_dir: PathBuf,
+    /// Verify the manifest's corpus checksum against the local generator.
+    pub verify_corpus: bool,
+}
+
+impl Default for RuntimeConfig {
+    fn default() -> Self {
+        RuntimeConfig { artifacts_dir: PathBuf::from("artifacts"), verify_corpus: true }
+    }
+}
+
+/// IG algorithm configuration (per request defaults).
+#[derive(Debug, Clone)]
+pub struct IgConfig {
+    pub scheme: Scheme,
+    /// Total interpolation steps m (stage-2 budget).
+    pub m: usize,
+    pub rule: Rule,
+    pub allocation: Allocation,
+}
+
+impl Default for IgConfig {
+    fn default() -> Self {
+        IgConfig {
+            scheme: Scheme::NonUniform { n_int: 4 },
+            m: 64,
+            rule: Rule::Trapezoid,
+            allocation: Allocation::Sqrt,
+        }
+    }
+}
+
+/// Coordinator / serving configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Chunk width K of the batched executables (fixed by the artifacts).
+    pub chunk: usize,
+    /// Router worker threads (request preparation / reduction).
+    pub workers: usize,
+    /// Bounded request-queue capacity (backpressure beyond this).
+    pub queue_capacity: usize,
+    /// Max microseconds the batcher waits to fill a chunk before
+    /// dispatching a partial one (continuous-batching knob).
+    pub batch_wait_us: u64,
+    /// Lane-scheduling policy (which request's points fill the next
+    /// device chunk): fifo | round-robin | shortest-first.
+    pub policy: Policy,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            chunk: 16,
+            workers: 2,
+            queue_capacity: 64,
+            batch_wait_us: 200,
+            policy: Policy::Fifo,
+        }
+    }
+}
+
+/// The composed configuration.
+#[derive(Debug, Clone, Default)]
+pub struct NuigConfig {
+    pub runtime: RuntimeConfig,
+    pub ig: IgConfig,
+    pub coordinator: CoordinatorConfig,
+}
+
+impl NuigConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.ig.m < 1 {
+            bail!("ig.m must be >= 1, got {}", self.ig.m);
+        }
+        if let Scheme::NonUniform { n_int } = self.ig.scheme {
+            if n_int < 1 {
+                bail!("non-uniform scheme needs n_int >= 1");
+            }
+            if self.ig.m < n_int {
+                bail!("ig.m ({}) must be >= n_int ({n_int}): every interval needs a step", self.ig.m);
+            }
+            if n_int > 64 {
+                bail!("n_int {n_int} is unreasonably large (paper shows n_int > 8 already degrades)");
+            }
+        }
+        if self.coordinator.chunk == 0 || self.coordinator.workers == 0 {
+            bail!("coordinator.chunk and coordinator.workers must be >= 1");
+        }
+        if self.coordinator.queue_capacity == 0 {
+            bail!("coordinator.queue_capacity must be >= 1");
+        }
+        Ok(())
+    }
+
+    /// Serialize (for run provenance in bench output headers).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "runtime",
+                Json::obj(vec![
+                    ("artifacts_dir", Json::Str(self.runtime.artifacts_dir.display().to_string())),
+                    ("verify_corpus", self.runtime.verify_corpus.into()),
+                ]),
+            ),
+            (
+                "ig",
+                Json::obj(vec![
+                    ("scheme", Json::Str(self.ig.scheme.to_string())),
+                    ("m", self.ig.m.into()),
+                    ("rule", Json::Str(self.ig.rule.to_string())),
+                    ("allocation", Json::Str(self.ig.allocation.to_string())),
+                ]),
+            ),
+            (
+                "coordinator",
+                Json::obj(vec![
+                    ("chunk", self.coordinator.chunk.into()),
+                    ("workers", self.coordinator.workers.into()),
+                    ("queue_capacity", self.coordinator.queue_capacity.into()),
+                    ("batch_wait_us", (self.coordinator.batch_wait_us as usize).into()),
+                    ("policy", Json::Str(self.coordinator.policy.to_string())),
+                ]),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        NuigConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_zero_m() {
+        let mut c = NuigConfig::default();
+        c.ig.m = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_m_below_n_int() {
+        let mut c = NuigConfig::default();
+        c.ig.scheme = Scheme::NonUniform { n_int: 8 };
+        c.ig.m = 4;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("n_int"), "{err}");
+    }
+
+    #[test]
+    fn rejects_huge_n_int() {
+        let mut c = NuigConfig::default();
+        c.ig.scheme = Scheme::NonUniform { n_int: 100 };
+        c.ig.m = 200;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_zero_workers() {
+        let mut c = NuigConfig::default();
+        c.coordinator.workers = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn uniform_scheme_ignores_n_int_constraint() {
+        let mut c = NuigConfig::default();
+        c.ig.scheme = Scheme::Uniform;
+        c.ig.m = 1;
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn to_json_has_sections() {
+        let j = NuigConfig::default().to_json();
+        assert!(j.get("ig").is_ok());
+        assert_eq!(j.get("coordinator").unwrap().get("chunk").unwrap().as_usize().unwrap(), 16);
+    }
+}

@@ -1,0 +1,206 @@
+//! The continuous batcher: assemble fixed-width device chunks from the
+//! cross-request lane queue.
+//!
+//! Policy: take what's immediately available; if the chunk isn't full,
+//! wait up to `batch_wait` for more lanes, then dispatch partial. This is
+//! the classic throughput/latency knob — benches sweep it in the batching
+//! ablation. Under saturation chunks are always full, which is where the
+//! paper's GPU batching argument (§V) lives.
+
+use std::time::{Duration, Instant};
+
+use crate::exec::channel::Receiver;
+
+use super::state::Lane;
+
+/// Outcome of one assembly attempt.
+pub enum Assembled {
+    /// A chunk of 1..=capacity lanes ready for the device.
+    Chunk(Vec<Lane>),
+    /// Queue closed and drained — feeder should exit.
+    Closed,
+}
+
+/// Pull up to `capacity` lanes, waiting at most `wait` to top up a
+/// non-empty partial chunk (an empty queue blocks indefinitely on the
+/// first lane — idle feeders cost nothing).
+pub fn assemble(rx: &Receiver<Lane>, capacity: usize, wait: Duration) -> Assembled {
+    // Block for the first lane.
+    let first = match rx.recv() {
+        Ok(l) => l,
+        Err(_) => return Assembled::Closed,
+    };
+    let mut chunk = Vec::with_capacity(capacity);
+    chunk.push(first);
+
+    // Opportunistic immediate drain.
+    chunk.extend(rx.drain_up_to(capacity - chunk.len()));
+
+    // Bounded top-up wait for a fuller chunk.
+    let deadline = Instant::now() + wait;
+    while chunk.len() < capacity {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(Some(lane)) => {
+                chunk.push(lane);
+                chunk.extend(rx.drain_up_to(capacity - chunk.len()));
+            }
+            Ok(None) => break,           // timed out
+            Err(_) => break,             // closed: dispatch what we have
+        }
+    }
+    Assembled::Chunk(chunk)
+}
+
+/// Occupancy bookkeeping for the batching ablation (Fig. 6-adjacent).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct BatchStats {
+    pub chunks: u64,
+    pub lanes: u64,
+}
+
+impl BatchStats {
+    pub fn record(&mut self, chunk_len: usize) {
+        self.chunks += 1;
+        self.lanes += chunk_len as u64;
+    }
+
+    /// Mean lanes per chunk.
+    pub fn occupancy(&self, capacity: usize) -> f64 {
+        if self.chunks == 0 {
+            return 0.0;
+        }
+        self.lanes as f64 / (self.chunks as f64 * capacity as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::ResponseHandle;
+    use crate::coordinator::state::RequestState;
+    use crate::exec::channel::bounded;
+    use crate::ig::IgOptions;
+    use crate::metrics::StageBreakdown;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::{Arc, Mutex};
+    use std::time::Instant;
+
+    fn lane(alpha: f32) -> Lane {
+        let (tx, _handle) = ResponseHandle::pair(0);
+        // _handle dropped: replies are ignored, fine for batcher tests.
+        let state = Arc::new(RequestState {
+            id: 0,
+            image: Arc::new(vec![0.0; 4]),
+            baseline: Arc::new(vec![0.0; 4]),
+            target: 0,
+            opts: IgOptions::default(),
+            acc: Mutex::new(vec![0.0; 4]),
+            remaining: AtomicUsize::new(1),
+            steps: 1,
+            probe_passes: 0,
+            endpoint_gap: 0.0,
+            breakdown: Mutex::new(StageBreakdown::default()),
+            submitted_at: Instant::now(),
+            queue_wait: Duration::ZERO,
+            reply: tx,
+            completed: std::sync::atomic::AtomicBool::new(false),
+            in_flight: Arc::new(AtomicUsize::new(1)),
+        });
+        Lane { state, alpha, weight: 1.0 }
+    }
+
+    #[test]
+    fn takes_available_immediately() {
+        let (tx, rx) = bounded(32);
+        for i in 0..5 {
+            assert!(tx.send(lane(i as f32)).is_ok());
+        }
+        match assemble(&rx, 16, Duration::from_millis(1)) {
+            Assembled::Chunk(c) => {
+                assert_eq!(c.len(), 5);
+                assert_eq!(c[0].alpha, 0.0);
+                assert_eq!(c[4].alpha, 4.0);
+            }
+            Assembled::Closed => panic!("closed"),
+        }
+    }
+
+    #[test]
+    fn caps_at_capacity() {
+        let (tx, rx) = bounded(64);
+        for i in 0..40 {
+            assert!(tx.send(lane(i as f32)).is_ok());
+        }
+        match assemble(&rx, 16, Duration::from_millis(1)) {
+            Assembled::Chunk(c) => assert_eq!(c.len(), 16),
+            Assembled::Closed => panic!(),
+        }
+        // Next call picks up the rest.
+        match assemble(&rx, 16, Duration::from_millis(1)) {
+            Assembled::Chunk(c) => assert_eq!(c.len(), 16),
+            Assembled::Closed => panic!(),
+        }
+    }
+
+    #[test]
+    fn waits_to_top_up() {
+        let (tx, rx) = bounded(32);
+        assert!(tx.send(lane(0.0)).is_ok());
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            assert!(tx.send(lane(1.0)).is_ok());
+            tx // keep alive until assemble returns
+        });
+        match assemble(&rx, 16, Duration::from_millis(100)) {
+            Assembled::Chunk(c) => assert!(c.len() >= 2, "{}", c.len()),
+            Assembled::Closed => panic!(),
+        }
+        drop(t.join().unwrap());
+    }
+
+    #[test]
+    fn dispatches_partial_after_wait() {
+        let (tx, rx) = bounded(32);
+        assert!(tx.send(lane(0.0)).is_ok());
+        let t0 = Instant::now();
+        match assemble(&rx, 16, Duration::from_millis(20)) {
+            Assembled::Chunk(c) => {
+                assert_eq!(c.len(), 1);
+                assert!(t0.elapsed() >= Duration::from_millis(15));
+            }
+            Assembled::Closed => panic!(),
+        }
+    }
+
+    #[test]
+    fn closed_empty_reports_closed() {
+        let (tx, rx) = bounded::<Lane>(4);
+        tx.close();
+        assert!(matches!(assemble(&rx, 16, Duration::from_millis(1)), Assembled::Closed));
+    }
+
+    #[test]
+    fn closed_with_items_dispatches_then_closes() {
+        let (tx, rx) = bounded(4);
+        assert!(tx.send(lane(0.5)).is_ok());
+        tx.close();
+        match assemble(&rx, 16, Duration::from_millis(1)) {
+            Assembled::Chunk(c) => assert_eq!(c.len(), 1),
+            Assembled::Closed => panic!("should drain first"),
+        }
+        assert!(matches!(assemble(&rx, 16, Duration::from_millis(1)), Assembled::Closed));
+    }
+
+    #[test]
+    fn occupancy_math() {
+        let mut s = BatchStats::default();
+        s.record(16);
+        s.record(8);
+        assert!((s.occupancy(16) - 0.75).abs() < 1e-12);
+        assert_eq!(BatchStats::default().occupancy(16), 0.0);
+    }
+}

@@ -1,0 +1,34 @@
+//! The explanation-serving coordinator — the L3 system contribution.
+//!
+//! The paper's algorithm is a *latency* optimization whose key hardware
+//! property is that the non-uniform schedule is **static after stage 1**
+//! (unlike Guided IG's dynamically-chosen steps, which force batch size 1
+//! on GPUs, §V). This coordinator exploits exactly that property, vLLM
+//! style: because every request's gradient points are known up front,
+//! points from *different* requests can be packed into the same
+//! fixed-width device batch (`igchunk_m16`), keeping the accelerator full
+//! under concurrent explanation load.
+//!
+//! ```text
+//!  submit() ─► request queue ─► router workers ─┐ (stage 1: probe +
+//!                                               │  schedule + enqueue)
+//!                  device ◄─ feeder ◄─ lane queue┘
+//!                    │  igchunk_m16 (16 lanes, cross-request)
+//!                    └─► per-lane partials ─► request accumulators ─►
+//!                        completeness check ─► response handle
+//! ```
+//!
+//! * [`request`] — request/response types and the one-shot handle;
+//! * [`state`] — in-flight request state (f64 accumulator, countdown);
+//! * [`batcher`] — lane queue + chunk assembly with bounded fill-wait;
+//! * [`server`] — the [`server::Coordinator`]: lifecycle, workers, stats.
+
+pub mod batcher;
+pub mod request;
+pub mod scheduler;
+pub mod server;
+pub mod state;
+
+pub use request::{ExplainRequest, ExplainResponse, ResponseHandle};
+pub use scheduler::Policy;
+pub use server::{Coordinator, CoordinatorStats};

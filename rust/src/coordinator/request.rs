@@ -1,0 +1,125 @@
+//! Request/response types for the serving API.
+
+use std::time::Duration;
+
+use crate::exec::channel::{bounded, Receiver, Sender};
+use crate::ig::{Attribution, IgOptions};
+
+/// An explanation request.
+#[derive(Debug, Clone)]
+pub struct ExplainRequest {
+    /// Flat (F,) input image.
+    pub image: Vec<f32>,
+    /// Baseline; `None` = black (the paper's default).
+    pub baseline: Option<Vec<f32>>,
+    /// Explained class; `None` = the model's prediction.
+    pub target: Option<usize>,
+    /// Algorithm options (scheme, m, rule, allocation).
+    pub opts: IgOptions,
+}
+
+impl ExplainRequest {
+    pub fn new(image: Vec<f32>, opts: IgOptions) -> Self {
+        ExplainRequest { image, baseline: None, target: None, opts }
+    }
+}
+
+/// The served result.
+#[derive(Debug, Clone)]
+pub struct ExplainResponse {
+    /// Monotonic id assigned at submission.
+    pub id: u64,
+    pub attribution: Attribution,
+    /// Time from submit to completion.
+    pub total_latency: Duration,
+    /// Time spent waiting in the request queue before a router picked it up.
+    pub queue_wait: Duration,
+}
+
+/// One-shot handle for an in-flight request.
+pub struct ResponseHandle {
+    pub id: u64,
+    rx: Receiver<anyhow::Result<ExplainResponse>>,
+}
+
+impl ResponseHandle {
+    pub(crate) fn pair(id: u64) -> (Sender<anyhow::Result<ExplainResponse>>, ResponseHandle) {
+        let (tx, rx) = bounded(1);
+        (tx, ResponseHandle { id, rx })
+    }
+
+    /// Block until the response (or the coordinator's error) arrives.
+    pub fn wait(self) -> anyhow::Result<ExplainResponse> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("coordinator dropped request {} (shutdown?)", self.id))?
+    }
+
+    /// Non-blocking poll; `None` while in flight.
+    pub fn poll(&self) -> Option<anyhow::Result<ExplainResponse>> {
+        match self.rx.try_recv() {
+            Ok(Some(r)) => Some(r),
+            Ok(None) => None,
+            Err(_) => Some(Err(anyhow::anyhow!(
+                "coordinator dropped request {} (shutdown?)",
+                self.id
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ig::IgOptions;
+    use crate::metrics::StageBreakdown;
+
+    fn fake_response(id: u64) -> ExplainResponse {
+        ExplainResponse {
+            id,
+            attribution: Attribution {
+                values: vec![0.0; 4],
+                target: 0,
+                steps: 1,
+                probe_passes: 0,
+                delta: 0.0,
+                endpoint_gap: 0.0,
+                breakdown: StageBreakdown::default(),
+            },
+            total_latency: Duration::from_millis(1),
+            queue_wait: Duration::ZERO,
+        }
+    }
+
+    #[test]
+    fn handle_roundtrip() {
+        let (tx, handle) = ResponseHandle::pair(7);
+        assert!(handle.poll().is_none());
+        tx.send(Ok(fake_response(7))).unwrap();
+        let r = handle.wait().unwrap();
+        assert_eq!(r.id, 7);
+    }
+
+    #[test]
+    fn dropped_sender_reports_shutdown() {
+        let (tx, handle) = ResponseHandle::pair(9);
+        drop(tx);
+        let err = handle.wait().unwrap_err().to_string();
+        assert!(err.contains("request 9"), "{err}");
+    }
+
+    #[test]
+    fn poll_sees_error_after_drop() {
+        let (tx, handle) = ResponseHandle::pair(3);
+        drop(tx);
+        let polled = handle.poll().unwrap();
+        assert!(polled.is_err());
+    }
+
+    #[test]
+    fn request_builder() {
+        let r = ExplainRequest::new(vec![0.0; 8], IgOptions::default());
+        assert!(r.baseline.is_none());
+        assert!(r.target.is_none());
+    }
+}

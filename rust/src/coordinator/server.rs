@@ -1,0 +1,507 @@
+//! The [`Coordinator`]: lifecycle, router workers, device feeder, stats.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use crate::config::CoordinatorConfig;
+use crate::exec::channel::{bounded, Receiver, Sender};
+use crate::exec::CancelToken;
+use crate::ig::engine::argmax;
+use crate::ig::probe::Probe;
+use crate::ig::schedule::Schedule;
+use crate::ig::Scheme;
+use crate::metrics::{Counter, Ewma, Histogram, StageBreakdown};
+use crate::runtime::{Arg, ExeKind, Runtime, RuntimeHandle};
+
+use super::batcher::BatchStats;
+use super::request::{ExplainRequest, ExplainResponse, ResponseHandle};
+use super::scheduler::{LaneScheduler, Popped};
+use super::state::{Lane, RequestState};
+
+/// Serving statistics snapshot.
+pub struct CoordinatorStats {
+    pub submitted: Counter,
+    pub completed: Counter,
+    pub failed: Counter,
+    pub e2e_latency: Histogram,
+    pub queue_wait: Histogram,
+    pub batch_occupancy: Ewma,
+    pub(crate) batch: Mutex<BatchStats>,
+}
+
+impl CoordinatorStats {
+    fn new() -> Self {
+        CoordinatorStats {
+            submitted: Counter::new(),
+            completed: Counter::new(),
+            failed: Counter::new(),
+            e2e_latency: Histogram::new_latency(),
+            queue_wait: Histogram::new_latency(),
+            batch_occupancy: Ewma::new(0.05),
+            batch: Mutex::new(BatchStats::default()),
+        }
+    }
+
+    /// Mean device-chunk occupancy over the whole run, in [0,1].
+    pub fn mean_occupancy(&self, chunk: usize) -> f64 {
+        self.batch.lock().unwrap().occupancy(chunk)
+    }
+}
+
+struct Submission {
+    req: ExplainRequest,
+    reply: Sender<Result<ExplainResponse>>,
+    id: u64,
+    submitted_at: Instant,
+}
+
+/// The explanation server. Owns router workers + the device feeder;
+/// `submit` is thread-safe and applies backpressure via the bounded
+/// request queue.
+pub struct Coordinator {
+    cfg: CoordinatorConfig,
+    handle: RuntimeHandle,
+    req_tx: Sender<Submission>,
+    lanes: Arc<LaneScheduler>,
+    stats: Arc<CoordinatorStats>,
+    next_id: AtomicU64,
+    cancel: CancelToken,
+    threads: Vec<std::thread::JoinHandle<()>>,
+    in_flight: Arc<AtomicUsize>,
+}
+
+impl Coordinator {
+    /// Start router workers and the device feeder over `runtime`.
+    pub fn start(runtime: &Runtime, cfg: CoordinatorConfig) -> Result<Coordinator> {
+        ensure!(cfg.workers >= 1 && cfg.chunk >= 1, "bad coordinator config");
+        let handle = runtime.handle();
+        let (req_tx, req_rx) = bounded::<Submission>(cfg.queue_capacity);
+        // Lane scheduler sized for a few full requests per worker so
+        // routers can run ahead of the device without unbounded memory.
+        let lanes = Arc::new(LaneScheduler::new(
+            cfg.policy,
+            cfg.chunk * 16 * (1 + cfg.workers),
+        ));
+        let stats = Arc::new(CoordinatorStats::new());
+        let cancel = CancelToken::new();
+        let in_flight = Arc::new(AtomicUsize::new(0));
+
+        let mut threads = Vec::new();
+
+        // Router workers: probe, schedule, enqueue lanes.
+        for i in 0..cfg.workers {
+            let rx = req_rx.clone();
+            let lanes = lanes.clone();
+            let handle = handle.clone();
+            let stats = stats.clone();
+            let cancel = cancel.clone();
+            let in_flight = in_flight.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("nuig-router-{i}"))
+                    .spawn(move || {
+                        router_loop(rx, lanes, handle, stats, cancel, in_flight);
+                    })
+                    .context("spawning router")?,
+            );
+        }
+        drop(req_rx);
+
+        // Device feeder: assemble chunks, execute, scatter partials.
+        {
+            let lanes = lanes.clone();
+            let handle = handle.clone();
+            let stats = stats.clone();
+            let chunk = cfg.chunk;
+            let wait = Duration::from_micros(cfg.batch_wait_us);
+            let features = handle.features();
+            let classes = handle.num_classes();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("nuig-feeder".to_string())
+                    .spawn(move || {
+                        feeder_loop(&lanes, handle, stats, chunk, wait, features, classes);
+                    })
+                    .context("spawning feeder")?,
+            );
+        }
+
+        Ok(Coordinator {
+            cfg,
+            handle,
+            req_tx,
+            lanes,
+            stats,
+            next_id: AtomicU64::new(1),
+            cancel,
+            threads,
+            in_flight,
+        })
+    }
+
+    /// Submit a request; blocks only if the request queue is full.
+    pub fn submit(&self, req: ExplainRequest) -> Result<ResponseHandle> {
+        ensure!(
+            req.image.len() == self.handle.features(),
+            "image width {} != model features {}",
+            req.image.len(),
+            self.handle.features()
+        );
+        if let Some(b) = &req.baseline {
+            ensure!(b.len() == req.image.len(), "baseline width mismatch");
+        }
+        req.opts_valid(self.handle.num_classes())?;
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (reply, handle) = ResponseHandle::pair(id);
+        self.stats.submitted.inc();
+        self.in_flight.fetch_add(1, Ordering::AcqRel);
+        self.req_tx
+            .send(Submission { req, reply, id, submitted_at: Instant::now() })
+            .map_err(|_| {
+                self.in_flight.fetch_sub(1, Ordering::AcqRel);
+                anyhow!("coordinator is shut down")
+            })?;
+        Ok(handle)
+    }
+
+    /// Submit and wait (convenience for examples/tests).
+    pub fn explain(&self, req: ExplainRequest) -> Result<ExplainResponse> {
+        self.submit(req)?.wait()
+    }
+
+    /// Requests submitted but not yet completed/failed.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::Acquire)
+    }
+
+    /// Wait until all in-flight requests are done (poll-based; serving
+    /// continues meanwhile).
+    pub fn drain(&self, timeout: Duration) -> Result<()> {
+        let deadline = Instant::now() + timeout;
+        while self.in_flight() > 0 {
+            if Instant::now() > deadline {
+                anyhow::bail!("drain timed out with {} in flight", self.in_flight());
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        Ok(())
+    }
+
+    pub fn stats(&self) -> &CoordinatorStats {
+        &self.stats
+    }
+
+    pub fn config(&self) -> &CoordinatorConfig {
+        &self.cfg
+    }
+
+    /// Graceful shutdown: stop intake, drain queues, join threads.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.cancel.cancel();
+        self.req_tx.close();
+        // Routers exit when the request queue drains; feeder exits when
+        // the lane queue closes. Close lanes only after routers joined so
+        // in-flight requests still complete.
+        let mut routers = Vec::new();
+        let mut rest = Vec::new();
+        for t in self.threads.drain(..) {
+            if t.thread().name().map(|n| n.starts_with("nuig-router")).unwrap_or(false) {
+                routers.push(t);
+            } else {
+                rest.push(t);
+            }
+        }
+        for t in routers {
+            let _ = t.join();
+        }
+        self.lanes.close();
+        for t in rest {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        if !self.threads.is_empty() {
+            self.shutdown_inner();
+        }
+    }
+}
+
+impl ExplainRequest {
+    fn opts_valid(&self, num_classes: usize) -> Result<()> {
+        ensure!(self.opts.m >= 1, "m must be >= 1");
+        if let Scheme::NonUniform { n_int } = self.opts.scheme {
+            ensure!(n_int >= 1 && self.opts.m >= n_int, "m ({}) must be >= n_int ({n_int})", self.opts.m);
+        }
+        if let Some(t) = self.target {
+            ensure!(t < num_classes, "target {t} out of range");
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Router: stage 1 (probe + schedule) then lane fan-out.
+// ---------------------------------------------------------------------------
+
+fn router_loop(
+    rx: Receiver<Submission>,
+    lanes: Arc<LaneScheduler>,
+    handle: RuntimeHandle,
+    stats: Arc<CoordinatorStats>,
+    cancel: CancelToken,
+    in_flight: Arc<AtomicUsize>,
+) {
+    // Graceful-shutdown semantics: every accepted submission is served.
+    // `shutdown` closes the request queue, so this loop drains naturally;
+    // the cancel token only guards future hard-abort paths.
+    let _ = &cancel;
+    while let Ok(sub) = rx.recv() {
+        let queue_wait = sub.submitted_at.elapsed();
+        stats.queue_wait.record(queue_wait.as_secs_f64());
+        match route_one(sub, queue_wait, &lanes, &handle, &stats, &in_flight) {
+            Ok(()) => {}
+            Err(_) => { /* route_one already replied + decremented */ }
+        }
+    }
+}
+
+fn route_one(
+    sub: Submission,
+    queue_wait: Duration,
+    lanes: &LaneScheduler,
+    handle: &RuntimeHandle,
+    stats: &Arc<CoordinatorStats>,
+    in_flight: &Arc<AtomicUsize>,
+) -> Result<()> {
+    let features = handle.features();
+    let classes = handle.num_classes();
+    let Submission { req, reply, id, submitted_at } = sub;
+
+    // Pre-state failures reply directly and settle the accounting here;
+    // post-state failures go through `RequestState::fail` (idempotent).
+    let reply_for_fail = reply.clone();
+    let fail = move |e: anyhow::Error| {
+        stats.failed.inc();
+        in_flight.fetch_sub(1, Ordering::AcqRel);
+        let _ = reply_for_fail.send(Err(e));
+        anyhow!("failed")
+    };
+
+    // ---- Stage 1: probe (batched fwd over interval boundaries). --------
+    let t0 = Instant::now();
+    let baseline = req.baseline.clone().unwrap_or_else(|| vec![0f32; features]);
+    let n_int = match req.opts.scheme {
+        Scheme::NonUniform { n_int } => n_int,
+        Scheme::Uniform => 1, // probe endpoints only (for target + gap)
+    };
+    let bounds = Schedule::probe_boundaries(n_int);
+
+    if bounds.len() > 16 {
+        return Err(fail(anyhow!("n_int {} too large for probe batch", n_int)));
+    }
+    // PERF: padded lanes cost real compute on CPU-PJRT, so small probes go
+    // through fwd_b1 sequentially (see runtime::PROBE_BATCH_CROSSOVER and
+    // EXPERIMENTS.md §Perf); large ones batch through fwd_b16.
+    let mut probs = vec![0f32; 16 * classes];
+    if bounds.len() < crate::runtime::PROBE_BATCH_CROSSOVER {
+        for (k, &b) in bounds.iter().enumerate() {
+            let img: Vec<f32> = (0..features)
+                .map(|i| baseline[i] + b as f32 * (req.image[i] - baseline[i]))
+                .collect();
+            let outs = match handle.execute(ExeKind::Fwd1, vec![Arg::mat(img, 1, features)]) {
+                Ok(o) => o,
+                Err(e) => return Err(fail(e)),
+            };
+            probs[k * classes..(k + 1) * classes].copy_from_slice(&outs[0]);
+        }
+    } else {
+        let mut flat = vec![0f32; 16 * features];
+        for (k, &b) in bounds.iter().enumerate() {
+            for i in 0..features {
+                flat[k * features + i] = baseline[i] + b as f32 * (req.image[i] - baseline[i]);
+            }
+        }
+        let outs = match handle.execute(ExeKind::Fwd16, vec![Arg::mat(flat, 16, features)]) {
+            Ok(o) => o,
+            Err(e) => return Err(fail(e)),
+        };
+        probs[..outs[0].len()].copy_from_slice(&outs[0]);
+    }
+    let probs = &probs;
+
+    // Target: explicit or argmax at the input endpoint (last boundary).
+    let last = bounds.len() - 1;
+    let input_probs: Vec<f64> =
+        probs[last * classes..(last + 1) * classes].iter().map(|&v| v as f64).collect();
+    let target = req.target.unwrap_or_else(|| argmax(&input_probs));
+
+    let boundary_probs: Vec<f64> =
+        (0..bounds.len()).map(|k| probs[k * classes + target] as f64).collect();
+    let probe = match Probe::new(bounds.clone(), boundary_probs) {
+        Ok(p) => p,
+        Err(e) => return Err(fail(e)),
+    };
+    let t_probe = t0.elapsed();
+
+    // ---- Schedule. -------------------------------------------------------
+    let t1 = Instant::now();
+    let schedule = match req.opts.scheme {
+        Scheme::Uniform => Schedule::uniform(req.opts.m, req.opts.rule),
+        Scheme::NonUniform { .. } => {
+            let deltas = probe.interval_deltas();
+            req.opts
+                .allocation
+                .allocate(req.opts.m, &deltas)
+                .and_then(|alloc| Schedule::nonuniform(&bounds, &alloc, req.opts.rule))
+        }
+    };
+    let schedule = match schedule {
+        Ok(s) => s,
+        Err(e) => return Err(fail(e)),
+    };
+    let t_sched = t1.elapsed();
+
+    let probe_passes = match req.opts.scheme {
+        Scheme::NonUniform { .. } => bounds.len(),
+        Scheme::Uniform => 0,
+    };
+
+    let state = Arc::new(RequestState {
+        id,
+        image: Arc::new(req.image),
+        baseline: Arc::new(baseline),
+        target,
+        opts: req.opts,
+        acc: Mutex::new(vec![0f64; features]),
+        remaining: AtomicUsize::new(schedule.len()),
+        steps: schedule.len(),
+        probe_passes,
+        endpoint_gap: probe.endpoint_gap(),
+        breakdown: Mutex::new(StageBreakdown {
+            probe: t_probe,
+            schedule: t_sched,
+            ..Default::default()
+        }),
+        submitted_at,
+        queue_wait,
+        reply,
+        completed: std::sync::atomic::AtomicBool::new(false),
+        in_flight: in_flight.clone(),
+    });
+
+    // ---- Fan out lanes (atomically, so the scheduler sees the whole
+    // request and within-request alpha order is preserved). ---------------
+    let req_lanes: Vec<Lane> = schedule
+        .points
+        .iter()
+        .map(|p| Lane { state: state.clone(), alpha: p.alpha as f32, weight: p.weight as f32 })
+        .collect();
+    if let Err(e) = lanes.push_request(id, req_lanes) {
+        state.fail(anyhow!("lane scheduler closed during fan-out: {e}"));
+        stats.failed.inc();
+        return Err(anyhow!("lane scheduler closed"));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Feeder: chunk assembly + device execution + scatter.
+// ---------------------------------------------------------------------------
+
+fn feeder_loop(
+    scheduler: &LaneScheduler,
+    handle: RuntimeHandle,
+    stats: Arc<CoordinatorStats>,
+    chunk: usize,
+    wait: Duration,
+    features: usize,
+    classes: usize,
+) {
+    loop {
+        let lanes = match scheduler.pop_chunk(chunk, wait) {
+            Popped::Chunk(l) => l,
+            Popped::Closed => return,
+        };
+        if lanes.is_empty() {
+            continue;
+        }
+        stats.batch_occupancy.observe(lanes.len() as f64 / chunk as f64);
+        stats.batch.lock().unwrap().record(lanes.len());
+
+        // Build the igchunk_m16 args: per-lane xs/baselines/onehots, with
+        // zero-weight padding for unused lanes.
+        let mut xs = vec![0f32; chunk * features];
+        let mut bs = vec![0f32; chunk * features];
+        let mut alphas = vec![0f32; chunk];
+        let mut weights = vec![0f32; chunk];
+        let mut onehots = vec![0f32; chunk * classes];
+        for (k, lane) in lanes.iter().enumerate() {
+            xs[k * features..(k + 1) * features].copy_from_slice(&lane.state.image);
+            bs[k * features..(k + 1) * features].copy_from_slice(&lane.state.baseline);
+            alphas[k] = lane.alpha;
+            weights[k] = lane.weight;
+            onehots[k * classes + lane.state.target] = 1.0;
+        }
+
+        let result = handle.execute(
+            ExeKind::IgChunkMulti16,
+            vec![
+                Arg::mat(xs, chunk, features),
+                Arg::mat(bs, chunk, features),
+                Arg::vec(alphas),
+                Arg::vec(weights),
+                Arg::mat(onehots, chunk, classes),
+            ],
+        );
+
+        match result {
+            Ok(outs) => {
+                let partials = &outs[0];
+                for (k, lane) in lanes.iter().enumerate() {
+                    let row = &partials[k * features..(k + 1) * features];
+                    if lane.state.add_lane(row) {
+                        {
+                            let mut bd = lane.state.breakdown.lock().unwrap();
+                            // Execute time ≈ submit-to-finalize minus probe
+                            // and schedule (good enough for the overhead
+                            // fractions; per-chunk attribution would need
+                            // device-side tagging).
+                            bd.execute = lane.state.submitted_at.elapsed()
+                                - bd.probe
+                                - bd.schedule
+                                - lane.state.queue_wait;
+                        }
+                        lane.state.finalize();
+                        stats.completed.inc();
+                        stats
+                            .e2e_latency
+                            .record(lane.state.submitted_at.elapsed().as_secs_f64());
+                    }
+                }
+            }
+            Err(e) => {
+                // Device failure: fail every distinct request in the chunk
+                // (RequestState::fail is idempotent, so a request spanning
+                // several failed chunks settles exactly once).
+                let msg = format!("device execution failed: {e}");
+                let mut seen = std::collections::BTreeSet::new();
+                for lane in &lanes {
+                    if seen.insert(lane.state.id) {
+                        lane.state.fail(anyhow!("{msg}"));
+                        stats.failed.inc();
+                    }
+                }
+            }
+        }
+    }
+}

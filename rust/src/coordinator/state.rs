@@ -1,0 +1,212 @@
+//! In-flight request state: the accumulator each device lane writes into
+//! and the countdown that triggers finalization.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::exec::channel::Sender;
+use crate::ig::{Attribution, IgOptions};
+use crate::metrics::StageBreakdown;
+
+use super::request::ExplainResponse;
+
+/// Shared state for one in-flight request. Lanes (device batch slots)
+/// hold an `Arc<RequestState>`; the last lane to land finalizes.
+pub struct RequestState {
+    pub id: u64,
+    pub image: Arc<Vec<f32>>,
+    pub baseline: Arc<Vec<f32>>,
+    pub target: usize,
+    pub opts: IgOptions,
+    /// f64 attribution accumulator (lanes add under the mutex; adds are
+    /// ~3k doubles per lane — negligible next to a device execution).
+    pub acc: Mutex<Vec<f64>>,
+    /// Gradient-point lanes still outstanding.
+    pub remaining: AtomicUsize,
+    /// Total gradient evaluations (Σ(m_i + 1)).
+    pub steps: usize,
+    pub probe_passes: usize,
+    /// f(x) − f(x′) from stage 1.
+    pub endpoint_gap: f64,
+    pub breakdown: Mutex<StageBreakdown>,
+    pub submitted_at: Instant,
+    pub queue_wait: std::time::Duration,
+    pub reply: Sender<anyhow::Result<ExplainResponse>>,
+    /// Set once on finalize/fail; makes completion idempotent (a request
+    /// spanning several chunks may see a late failure after finishing).
+    pub completed: AtomicBool,
+    /// The coordinator's in-flight gauge; decremented exactly once.
+    pub in_flight: Arc<AtomicUsize>,
+}
+
+impl RequestState {
+    /// Claim completion; `true` for exactly one caller.
+    fn try_complete(&self) -> bool {
+        if self.completed.swap(true, Ordering::AcqRel) {
+            return false;
+        }
+        self.in_flight.fetch_sub(1, Ordering::AcqRel);
+        true
+    }
+
+    /// Add one lane's partial row; returns `true` if this was the last
+    /// outstanding lane (caller must then [`RequestState::finalize`]).
+    pub fn add_lane(&self, partial: &[f32]) -> bool {
+        {
+            let mut acc = self.acc.lock().unwrap();
+            debug_assert_eq!(acc.len(), partial.len());
+            for (a, &p) in acc.iter_mut().zip(partial) {
+                *a += p as f64;
+            }
+        }
+        self.remaining.fetch_sub(1, Ordering::AcqRel) == 1
+    }
+
+    /// Build and send the response. Idempotent; first caller wins.
+    pub fn finalize(&self) {
+        if !self.try_complete() {
+            return;
+        }
+        let values = self.acc.lock().unwrap().clone();
+        let sum: f64 = values.iter().sum();
+        let delta = (sum - self.endpoint_gap).abs();
+        let attribution = Attribution {
+            values,
+            target: self.target,
+            steps: self.steps,
+            probe_passes: self.probe_passes,
+            delta,
+            endpoint_gap: self.endpoint_gap,
+            breakdown: *self.breakdown.lock().unwrap(),
+        };
+        let resp = ExplainResponse {
+            id: self.id,
+            attribution,
+            total_latency: self.submitted_at.elapsed(),
+            queue_wait: self.queue_wait,
+        };
+        // The client may have dropped its handle; that's fine.
+        let _ = self.reply.send(Ok(resp));
+    }
+
+    /// Abort with an error (probe failure, device down, ...). Idempotent;
+    /// a no-op if the request already finalized.
+    pub fn fail(&self, err: anyhow::Error) {
+        if !self.try_complete() {
+            return;
+        }
+        let _ = self.reply.send(Err(err));
+    }
+}
+
+/// One device-batch slot: a gradient point belonging to a request.
+#[derive(Clone)]
+pub struct Lane {
+    pub state: Arc<RequestState>,
+    pub alpha: f32,
+    pub weight: f32,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::ResponseHandle;
+    use crate::ig::IgOptions;
+
+    fn mk_state(n_lanes: usize, gap: f64) -> (Arc<RequestState>, ResponseHandle) {
+        let (tx, handle) = ResponseHandle::pair(1);
+        let st = Arc::new(RequestState {
+            id: 1,
+            image: Arc::new(vec![1.0; 4]),
+            baseline: Arc::new(vec![0.0; 4]),
+            target: 0,
+            opts: IgOptions::default(),
+            acc: Mutex::new(vec![0.0; 4]),
+            remaining: AtomicUsize::new(n_lanes),
+            steps: n_lanes,
+            probe_passes: 0,
+            endpoint_gap: gap,
+            breakdown: Mutex::new(StageBreakdown::default()),
+            submitted_at: Instant::now(),
+            queue_wait: std::time::Duration::ZERO,
+            reply: tx,
+            completed: AtomicBool::new(false),
+            in_flight: Arc::new(AtomicUsize::new(1)),
+        });
+        (st, handle)
+    }
+
+    #[test]
+    fn countdown_and_accumulate() {
+        let (st, handle) = mk_state(3, 0.9);
+        assert!(!st.add_lane(&[0.1, 0.0, 0.0, 0.0]));
+        assert!(!st.add_lane(&[0.2, 0.1, 0.0, 0.0]));
+        assert!(st.add_lane(&[0.3, 0.1, 0.1, 0.0]));
+        st.finalize();
+        let resp = handle.wait().unwrap();
+        let a = &resp.attribution;
+        // Lane rows are f32; accumulate tolerance accordingly.
+        assert!((a.sum() - 0.9).abs() < 1e-6);
+        assert!(a.delta < 1e-6);
+        assert_eq!(a.steps, 3);
+    }
+
+    #[test]
+    fn delta_reflects_incompleteness() {
+        let (st, handle) = mk_state(1, 1.0);
+        assert!(st.add_lane(&[0.25, 0.25, 0.0, 0.0]));
+        st.finalize();
+        let resp = handle.wait().unwrap();
+        assert!((resp.attribution.delta - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fail_delivers_error() {
+        let (st, handle) = mk_state(2, 0.0);
+        st.fail(anyhow::anyhow!("device exploded"));
+        let err = handle.wait().unwrap_err().to_string();
+        assert!(err.contains("device exploded"));
+    }
+
+    #[test]
+    fn completion_is_idempotent() {
+        let (st, handle) = mk_state(1, 0.5);
+        assert!(st.add_lane(&[0.5, 0.0, 0.0, 0.0]));
+        st.finalize();
+        st.fail(anyhow::anyhow!("late failure must be ignored"));
+        st.finalize();
+        // in_flight decremented exactly once.
+        assert_eq!(st.in_flight.load(Ordering::Acquire), 0);
+        assert!(handle.wait().is_ok());
+    }
+
+    #[test]
+    fn fail_then_finalize_keeps_error() {
+        let (st, handle) = mk_state(1, 0.5);
+        st.fail(anyhow::anyhow!("boom"));
+        st.finalize();
+        assert!(handle.wait().is_err());
+    }
+
+    #[test]
+    fn concurrent_lane_adds() {
+        let (st, handle) = mk_state(16, 16.0);
+        let threads: Vec<_> = (0..16)
+            .map(|_| {
+                let st = st.clone();
+                std::thread::spawn(move || {
+                    if st.add_lane(&[1.0, 0.0, 0.0, 0.0]) {
+                        st.finalize();
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let resp = handle.wait().unwrap();
+        assert!((resp.attribution.values[0] - 16.0).abs() < 1e-9);
+        assert!(resp.attribution.delta < 1e-9);
+    }
+}

@@ -1,0 +1,82 @@
+//! Labeled corpus construction over the synthetic generator.
+
+use super::synth::{self, Image, NUM_CLASSES};
+
+/// An image with its generating class (the *label*; the model's predicted
+/// class may differ — the explained target is always the prediction, as in
+/// the paper).
+#[derive(Debug, Clone)]
+pub struct LabeledImage {
+    pub class: usize,
+    pub index: usize,
+    pub pixels: Image,
+}
+
+/// A class-major ordered set of synthetic images.
+#[derive(Debug, Clone)]
+pub struct Corpus {
+    pub images: Vec<LabeledImage>,
+}
+
+impl Corpus {
+    /// `per_class` images for each of the 8 classes (class-major order,
+    /// matching `python/compile/data.py::gen_corpus`).
+    pub fn generate(per_class: usize) -> Corpus {
+        let mut images = Vec::with_capacity(per_class * NUM_CLASSES);
+        for class in 0..NUM_CLASSES {
+            for index in 0..per_class {
+                images.push(LabeledImage { class, index, pixels: synth::gen_image(class, index) });
+            }
+        }
+        Corpus { images }
+    }
+
+    /// A small deterministic evaluation set: the first image of each of
+    /// `n` classes (the benches' standard workload).
+    pub fn eval_set(n: usize) -> Corpus {
+        let n = n.min(NUM_CLASSES);
+        let mut images = Vec::with_capacity(n);
+        for class in 0..n {
+            images.push(LabeledImage { class, index: 0, pixels: synth::gen_image(class, 0) });
+        }
+        Corpus { images }
+    }
+
+    pub fn len(&self) -> usize {
+        self.images.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.images.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &LabeledImage> {
+        self.images.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_counts_and_order() {
+        let c = Corpus::generate(3);
+        assert_eq!(c.len(), 24);
+        assert_eq!(c.images[0].class, 0);
+        assert_eq!(c.images[2].index, 2);
+        assert_eq!(c.images[23].class, 7);
+    }
+
+    #[test]
+    fn eval_set_clamps() {
+        assert_eq!(Corpus::eval_set(4).len(), 4);
+        assert_eq!(Corpus::eval_set(100).len(), NUM_CLASSES);
+    }
+
+    #[test]
+    fn matches_generator() {
+        let c = Corpus::generate(1);
+        assert_eq!(c.images[5].pixels, synth::gen_image(5, 0));
+    }
+}

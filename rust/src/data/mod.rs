@@ -1,0 +1,13 @@
+//! Synthetic corpus (the repo's ImageNet substitute) and image I/O.
+//!
+//! `synth` is a bit-for-bit port of `python/compile/data.py`; the AOT
+//! manifest carries a corpus checksum that `runtime::Manifest::verify`
+//! re-derives through this module, so any drift between the two
+//! implementations fails loudly at load time.
+
+pub mod corpus;
+pub mod ppm;
+pub mod synth;
+
+pub use corpus::{Corpus, LabeledImage};
+pub use synth::{gen_image, Image, C, F, H, NUM_CLASSES, W};

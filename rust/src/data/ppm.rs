@@ -1,0 +1,143 @@
+//! Binary PPM (P6) image writer/reader — dependency-free image I/O for
+//! heatmap export (`viz::heatmap`) and example galleries.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// An 8-bit RGB raster.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Ppm {
+    pub width: usize,
+    pub height: usize,
+    /// Row-major RGB triples, length = 3 * width * height.
+    pub rgb: Vec<u8>,
+}
+
+impl Ppm {
+    pub fn new(width: usize, height: usize) -> Ppm {
+        Ppm { width, height, rgb: vec![0; 3 * width * height] }
+    }
+
+    /// Build from f32 RGB values in [0,1] (clamped, rounded).
+    pub fn from_f32(width: usize, height: usize, rgb: &[f32]) -> Result<Ppm> {
+        if rgb.len() != 3 * width * height {
+            bail!("expected {} values, got {}", 3 * width * height, rgb.len());
+        }
+        let bytes = rgb.iter().map(|&v| (v.clamp(0.0, 1.0) * 255.0).round() as u8).collect();
+        Ok(Ppm { width, height, rgb: bytes })
+    }
+
+    pub fn set(&mut self, x: usize, y: usize, rgb: [u8; 3]) {
+        let i = 3 * (y * self.width + x);
+        self.rgb[i..i + 3].copy_from_slice(&rgb);
+    }
+
+    pub fn get(&self, x: usize, y: usize) -> [u8; 3] {
+        let i = 3 * (y * self.width + x);
+        [self.rgb[i], self.rgb[i + 1], self.rgb[i + 2]]
+    }
+
+    /// Write binary P6.
+    pub fn write(&self, path: &Path) -> Result<()> {
+        let mut out = Vec::with_capacity(self.rgb.len() + 32);
+        write!(out, "P6\n{} {}\n255\n", self.width, self.height)?;
+        out.extend_from_slice(&self.rgb);
+        std::fs::write(path, out).with_context(|| format!("writing {}", path.display()))
+    }
+
+    /// Read binary P6 (maxval 255 only — what `write` produces).
+    pub fn read(path: &Path) -> Result<Ppm> {
+        let data = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&data)
+    }
+
+    fn parse(data: &[u8]) -> Result<Ppm> {
+        let mut pos = 0usize;
+        let mut token = |data: &[u8]| -> Result<String> {
+            // skip whitespace and comments
+            loop {
+                while pos < data.len() && data[pos].is_ascii_whitespace() {
+                    pos += 1;
+                }
+                if pos < data.len() && data[pos] == b'#' {
+                    while pos < data.len() && data[pos] != b'\n' {
+                        pos += 1;
+                    }
+                } else {
+                    break;
+                }
+            }
+            let start = pos;
+            while pos < data.len() && !data[pos].is_ascii_whitespace() {
+                pos += 1;
+            }
+            if start == pos {
+                bail!("truncated PPM header");
+            }
+            Ok(std::str::from_utf8(&data[start..pos])?.to_string())
+        };
+        let magic = token(data)?;
+        if magic != "P6" {
+            bail!("not a P6 PPM (magic {magic:?})");
+        }
+        let width: usize = token(data)?.parse().context("width")?;
+        let height: usize = token(data)?.parse().context("height")?;
+        let maxval: usize = token(data)?.parse().context("maxval")?;
+        if maxval != 255 {
+            bail!("only maxval 255 supported, got {maxval}");
+        }
+        pos += 1; // single whitespace after maxval
+        let need = 3 * width * height;
+        if data.len() < pos + need {
+            bail!("truncated PPM pixel data: need {need}, have {}", data.len() - pos);
+        }
+        Ok(Ppm { width, height, rgb: data[pos..pos + need].to_vec() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut img = Ppm::new(4, 3);
+        img.set(0, 0, [255, 0, 0]);
+        img.set(3, 2, [0, 255, 128]);
+        let dir = std::env::temp_dir().join("nuig_ppm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt.ppm");
+        img.write(&path).unwrap();
+        let back = Ppm::read(&path).unwrap();
+        assert_eq!(back, img);
+    }
+
+    #[test]
+    fn from_f32_clamps() {
+        let img = Ppm::from_f32(1, 1, &[1.5, -0.5, 0.5]).unwrap();
+        assert_eq!(img.get(0, 0), [255, 0, 128]);
+    }
+
+    #[test]
+    fn from_f32_rejects_bad_len() {
+        assert!(Ppm::from_f32(2, 2, &[0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn parse_with_comment() {
+        let mut bytes = b"P6\n# a comment\n2 1\n255\n".to_vec();
+        bytes.extend_from_slice(&[1, 2, 3, 4, 5, 6]);
+        let img = Ppm::parse(&bytes).unwrap();
+        assert_eq!(img.width, 2);
+        assert_eq!(img.get(1, 0), [4, 5, 6]);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Ppm::parse(b"P5\n1 1\n255\nx").is_err());
+        assert!(Ppm::parse(b"P6\n2 2\n255\n").is_err()); // truncated
+        assert!(Ppm::parse(b"P6\n1 1\n65535\n..").is_err());
+    }
+}

@@ -1,0 +1,246 @@
+//! Deterministic synthetic image generator — Rust half of the
+//! cross-language contract with `python/compile/data.py`.
+//!
+//! CONTRACT: every floating-point step is a single IEEE-754 f32 operation
+//! (add/sub/mul/div/min/max) evaluated in the same order as the NumPy
+//! implementation, and all randomness is the counter-based splitmix64
+//! (draw `j` of stream `seed` = `mix64(seed + (j+1)*GOLDEN)`), so both
+//! languages produce *bit-identical* images. The unit tests pin the same
+//! golden values as `python/tests/test_data.py`.
+
+/// Image height in pixels.
+pub const H: usize = 32;
+/// Image width in pixels.
+pub const W: usize = 32;
+/// Channels (RGB).
+pub const C: usize = 3;
+/// Flat feature count (H*W*C), the model's input width.
+pub const F: usize = H * W * C;
+/// Number of classes in the synthetic corpus.
+pub const NUM_CLASSES: usize = 8;
+
+/// A flat (F,) f32 image in [0,1], row-major (y, x, ch).
+pub type Image = Vec<f32>;
+
+const GOLDEN: u64 = 0x9E3779B97F4A7C15;
+
+/// splitmix64 output mix (wrapping arithmetic).
+pub fn mix64(mut z: u64) -> u64 {
+    z ^= z >> 30;
+    z = z.wrapping_mul(0xBF58476D1CE4E5B9);
+    z ^= z >> 27;
+    z = z.wrapping_mul(0x94D049BB133111EB);
+    z ^= z >> 31;
+    z
+}
+
+/// Counter-based uniform draw in [0,1): upper 24 bits of the mix, scaled.
+/// Exactly representable in f32 → bit-identical across languages.
+pub fn draw_u01(seed: u64, j: u64) -> f32 {
+    let z = mix64(seed.wrapping_add((j.wrapping_add(1)).wrapping_mul(GOLDEN)));
+    ((z >> 40) as u32) as f32 / 16777216.0
+}
+
+/// Stream seed for image `index` of class `class_id`.
+pub fn image_seed(class_id: usize, index: usize) -> u64 {
+    (class_id as u64)
+        .wrapping_mul(1000003)
+        .wrapping_add((index as u64).wrapping_mul(7919))
+        .wrapping_add(0xC0FFEE)
+}
+
+/// Generate image `index` of class `class_id`.
+///
+/// Pattern family is `class_id % 4` (blobs / h-stripes / v-stripes /
+/// checker), variant `class_id / 4`. Panics on out-of-range class (the
+/// Python side raises ValueError; both are programmer errors).
+pub fn gen_image(class_id: usize, index: usize) -> Image {
+    assert!(class_id < NUM_CLASSES, "class_id must be < {NUM_CLASSES}, got {class_id}");
+    let seed = image_seed(class_id, index);
+    let pattern = class_id % 4;
+    let variant = class_id / 4; // 0 or 1
+    let freq = 2 + class_id;
+
+    let color = [draw_u01(seed, 0), draw_u01(seed, 1), draw_u01(seed, 2)];
+
+    // Pattern value v(y, x) in [0,1].
+    let mut v = vec![0f32; H * W];
+    match pattern {
+        0 => {
+            // Blobs with rational falloff (no libm => cross-language exact).
+            let n_blobs = 3 + 2 * variant;
+            for b in 0..n_blobs as u64 {
+                let cx = draw_u01(seed, 3 + 3 * b) * W as f32;
+                let cy = draw_u01(seed, 4 + 3 * b) * H as f32;
+                let r = 3.0f32 + draw_u01(seed, 5 + 3 * b) * 4.0;
+                let r2 = r * r;
+                for y in 0..H {
+                    for x in 0..W {
+                        let dx = x as f32 - cx;
+                        let dy = y as f32 - cy;
+                        let d2 = dx * dx + dy * dy;
+                        let val = r2 / (r2 + d2);
+                        let i = y * W + x;
+                        v[i] = v[i].max(val);
+                    }
+                }
+            }
+        }
+        1 => {
+            for y in 0..H {
+                let band = (y * freq / H) % 2;
+                let val = if (band + variant) % 2 == 0 { 1.0 } else { 0.25 };
+                for x in 0..W {
+                    v[y * W + x] = val;
+                }
+            }
+        }
+        2 => {
+            for x in 0..W {
+                let band = (x * freq / W) % 2;
+                let val = if (band + variant) % 2 == 0 { 1.0 } else { 0.25 };
+                for y in 0..H {
+                    v[y * W + x] = val;
+                }
+            }
+        }
+        _ => {
+            for y in 0..H {
+                for x in 0..W {
+                    let cell = (x * freq / W) + (y * freq / H);
+                    v[y * W + x] = if (cell + variant) % 2 == 0 { 1.0 } else { 0.2 };
+                }
+            }
+        }
+    }
+
+    // Per-pixel-channel noise, counter-indexed.
+    let mut img = vec![0f32; F];
+    for y in 0..H {
+        for x in 0..W {
+            let pix = (y * W + x) as u64;
+            for ch in 0..C {
+                let noise = draw_u01(seed, 100 + 3 * pix + ch as u64);
+                let val = v[pix as usize] * color[ch] * 0.8 + 0.1 + (noise - 0.5) * 0.1;
+                img[(pix as usize) * 3 + ch] = val.clamp(0.0, 1.0);
+            }
+        }
+    }
+    img
+}
+
+/// f64 sum of an image (the cross-language checksum primitive).
+pub fn image_sum(img: &[f32]) -> f64 {
+    img.iter().map(|&v| v as f64).sum()
+}
+
+/// Mean over the standard `per_class`-images-per-class corpus; must match
+/// `python/compile/data.py::corpus_checksum` exactly (manifest check).
+pub fn corpus_checksum(per_class: usize) -> f64 {
+    let mut sum = 0f64;
+    let mut n = 0usize;
+    for c in 0..NUM_CLASSES {
+        for i in 0..per_class {
+            sum += image_sum(&gen_image(c, i));
+            n += F;
+        }
+    }
+    sum / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix64_golden() {
+        // Same pins as python/tests/test_data.py::TestRng::test_mix64_golden.
+        assert_eq!(mix64(0), 0);
+        assert_eq!(mix64(1), 6238072747940578789);
+        assert_eq!(mix64(0xDEADBEEF), 5622224078331092714);
+    }
+
+    #[test]
+    fn draw_u01_range_and_determinism() {
+        for j in 0..1000 {
+            let v = draw_u01(123, j);
+            assert!((0.0..1.0).contains(&v));
+            assert_eq!(v, draw_u01(123, j));
+        }
+    }
+
+    #[test]
+    fn draw_u01_uniformity() {
+        let n = 100_000u64;
+        let mean: f64 = (0..n).map(|j| draw_u01(99, j) as f64).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.005, "mean={mean}");
+    }
+
+    #[test]
+    fn golden_image_sum() {
+        // Cross-language pin (python test_data.py::test_golden_image_sum).
+        let img = gen_image(0, 0);
+        assert!((image_sum(&img) - 903.1355427503586).abs() < 1e-9);
+    }
+
+    #[test]
+    fn golden_corpus_checksum() {
+        // Cross-language pin (python test_data.py::test_checksum_stable).
+        assert!((corpus_checksum(2) - 0.33721342456146886).abs() < 1e-12);
+    }
+
+    #[test]
+    fn images_in_range() {
+        for c in 0..NUM_CLASSES {
+            let img = gen_image(c, 0);
+            assert_eq!(img.len(), F);
+            for &v in &img {
+                assert!((0.0..=1.0).contains(&v));
+            }
+        }
+    }
+
+    #[test]
+    fn classes_and_indices_differ() {
+        let a = gen_image(0, 0);
+        assert_ne!(a, gen_image(1, 0));
+        assert_ne!(a, gen_image(0, 1));
+        assert_eq!(a, gen_image(0, 0));
+    }
+
+    #[test]
+    #[should_panic(expected = "class_id")]
+    fn rejects_bad_class() {
+        gen_image(8, 0);
+    }
+
+    #[test]
+    fn stripe_structure() {
+        // h-stripes (class 1): row means vary more than column means.
+        let img = gen_image(1, 0);
+        let row_var = axis_spread(&img, true);
+        let col_var = axis_spread(&img, false);
+        assert!(row_var > col_var, "{row_var} !> {col_var}");
+        // v-stripes (class 2): the reverse.
+        let img = gen_image(2, 0);
+        assert!(axis_spread(&img, false) > axis_spread(&img, true));
+    }
+
+    fn axis_spread(img: &[f32], rows: bool) -> f64 {
+        let mut means = [0f64; 32];
+        for y in 0..H {
+            for x in 0..W {
+                for ch in 0..C {
+                    let v = img[(y * W + x) * 3 + ch] as f64;
+                    means[if rows { y } else { x }] += v;
+                }
+            }
+        }
+        let n = (W * C) as f64;
+        for m in means.iter_mut() {
+            *m /= n;
+        }
+        let mean: f64 = means.iter().sum::<f64>() / 32.0;
+        means.iter().map(|m| (m - mean) * (m - mean)).sum::<f64>() / 32.0
+    }
+}

@@ -1,0 +1,20 @@
+//! Execution substrate: thread pool, bounded MPMC channel, cancellation.
+//!
+//! `tokio` is not in the vendored registry, and the coordinator's
+//! concurrency needs are thread-shaped anyway (PJRT execution is a
+//! blocking FFI call), so this module provides the three primitives the
+//! serving layer is built on:
+//!
+//! * [`ThreadPool`] — fixed worker pool with joinable task handles and
+//!   panic containment (a panicking task poisons only its handle).
+//! * [`channel::bounded`] — a Condvar-based bounded MPMC channel with
+//!   blocking/backpressure semantics and explicit close.
+//! * [`CancelToken`] — cooperative cancellation shared across threads.
+
+pub mod channel;
+mod pool;
+mod token;
+
+pub use channel::{bounded, Receiver, RecvError, SendError, Sender};
+pub use pool::{JoinHandle, ThreadPool};
+pub use token::CancelToken;

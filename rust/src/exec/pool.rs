@@ -1,0 +1,229 @@
+//! Fixed-size thread pool with joinable, panic-contained task handles.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+
+use super::channel::{bounded, Sender};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed pool of worker threads executing boxed jobs FIFO.
+///
+/// Tasks submitted via [`ThreadPool::spawn`] return a [`JoinHandle`] whose
+/// `join` yields `Err` if the task panicked — the pool itself survives
+/// panics (important for the coordinator: one poisoned request must not
+/// take down the serving loop).
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn `n` workers (>= 1). Queue capacity is `4 * n` — enough to keep
+    /// workers fed, small enough to exert backpressure on floods.
+    pub fn new(n: usize) -> ThreadPool {
+        assert!(n >= 1, "thread pool needs at least one worker");
+        let (tx, rx) = bounded::<Job>(4 * n);
+        let workers = (0..n)
+            .map(|i| {
+                let rx = rx.clone();
+                std::thread::Builder::new()
+                    .name(format!("nuig-pool-{i}"))
+                    .spawn(move || {
+                        while let Ok(job) = rx.recv() {
+                            // Panic containment happens inside the job
+                            // wrapper built by `spawn`, so a raw panic here
+                            // means a bug in the pool itself — let it abort
+                            // the worker loudly in tests.
+                            job();
+                        }
+                    })
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers }
+    }
+
+    /// Submit a task; blocks if the queue is full (backpressure).
+    pub fn spawn<T, F>(&self, f: F) -> JoinHandle<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let slot = Arc::new(Slot::new());
+        let slot2 = slot.clone();
+        let job: Job = Box::new(move || {
+            let result = catch_unwind(AssertUnwindSafe(f));
+            slot2.fill(result.map_err(panic_message));
+        });
+        self.tx
+            .as_ref()
+            .expect("pool already shut down")
+            .send(job)
+            .unwrap_or_else(|_| panic!("pool queue closed"));
+        JoinHandle { slot }
+    }
+
+    /// Run `f` over `0..n` in parallel, collecting results in index order.
+    /// Propagates the first panic as an `Err(message)`.
+    pub fn parallel_map<T, F>(&self, n: usize, f: F) -> Result<Vec<T>, String>
+    where
+        T: Send + 'static,
+        F: Fn(usize) -> T + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let handles: Vec<_> = (0..n)
+            .map(|i| {
+                let f = f.clone();
+                self.spawn(move || f(i))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join()).collect()
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        if let Some(tx) = self.tx.take() {
+            tx.close();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn panic_message(e: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "task panicked".to_string()
+    }
+}
+
+/// One-shot result slot shared between a task and its handle.
+struct Slot<T> {
+    state: Mutex<Option<Result<T, String>>>,
+    done: Condvar,
+}
+
+impl<T> Slot<T> {
+    fn new() -> Self {
+        Slot { state: Mutex::new(None), done: Condvar::new() }
+    }
+
+    fn fill(&self, v: Result<T, String>) {
+        let mut g = self.state.lock().unwrap();
+        *g = Some(v);
+        drop(g);
+        self.done.notify_all();
+    }
+}
+
+/// Handle to a pool task; `join` blocks until completion.
+pub struct JoinHandle<T> {
+    slot: Arc<Slot<T>>,
+}
+
+impl<T> JoinHandle<T> {
+    /// Wait for the task; `Err(panic_message)` if it panicked.
+    pub fn join(self) -> Result<T, String> {
+        let mut g = self.slot.state.lock().unwrap();
+        loop {
+            if let Some(v) = g.take() {
+                return v;
+            }
+            g = self.slot.done.wait(g).unwrap();
+        }
+    }
+
+    /// Non-blocking completion check.
+    pub fn is_finished(&self) -> bool {
+        self.slot.state.lock().unwrap().is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
+
+    #[test]
+    fn runs_tasks() {
+        let pool = ThreadPool::new(4);
+        let h = pool.spawn(|| 2 + 2);
+        assert_eq!(h.join().unwrap(), 4);
+    }
+
+    #[test]
+    fn parallel_map_ordered() {
+        let pool = ThreadPool::new(4);
+        let out = pool.parallel_map(32, |i| i * i).unwrap();
+        assert_eq!(out, (0..32).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn panic_contained() {
+        let pool = ThreadPool::new(2);
+        let bad = pool.spawn(|| -> u32 { panic!("boom {}", 42) });
+        let good = pool.spawn(|| 7u32);
+        let err = bad.join().unwrap_err();
+        assert!(err.contains("boom 42"), "{err}");
+        assert_eq!(good.join().unwrap(), 7); // pool survived
+    }
+
+    #[test]
+    fn all_workers_used() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let c = counter.clone();
+                pool.spawn(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                    // Hold the worker so each task lands on a distinct thread.
+                    while c.load(Ordering::SeqCst) < 4 {
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn drop_joins_pending_work() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = ThreadPool::new(2);
+            for _ in 0..16 {
+                let c = counter.clone();
+                pool.spawn(move || {
+                    std::thread::sleep(Duration::from_millis(2));
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        } // drop waits for queue drain
+        assert_eq!(counter.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn is_finished() {
+        let pool = ThreadPool::new(1);
+        let h = pool.spawn(|| std::thread::sleep(Duration::from_millis(30)));
+        assert!(!h.is_finished());
+        std::thread::sleep(Duration::from_millis(80));
+        assert!(h.is_finished());
+        h.join().unwrap();
+    }
+}

@@ -1,0 +1,208 @@
+//! Stage-1 step allocation: distribute the total step budget `m` across
+//! probe intervals.
+//!
+//! The paper's rule is `m_int ∝ √|Δf(x_int)|` — the square root
+//! deliberately attenuates the bias toward high-change intervals because
+//! the linear rule (`m_int ∝ |Δf|`, kept here as [`Allocation::Linear`]
+//! for the ablation bench) "allotted negligible discretization steps to
+//! regions with small change" (§III). [`Allocation::Even`] ignores the
+//! probe entirely (a second ablation: how much of the win is the probe?).
+//!
+//! Rounding uses largest-remainder so counts sum to exactly `m`, with a
+//! floor of 1 step per interval (a zero-step interval has no grid).
+
+use anyhow::{bail, Result};
+
+/// Step-allocation policy across probe intervals.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Allocation {
+    /// The paper's rule: proportional to sqrt(|delta|).
+    Sqrt,
+    /// Ablation: proportional to |delta| (starves low-change intervals).
+    Linear,
+    /// Ablation: equal split regardless of the probe.
+    Even,
+}
+
+impl std::fmt::Display for Allocation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Allocation::Sqrt => "sqrt",
+            Allocation::Linear => "linear",
+            Allocation::Even => "even",
+        };
+        write!(f, "{s}")
+    }
+}
+
+impl Allocation {
+    pub fn parse(s: &str) -> Result<Allocation> {
+        Ok(match s {
+            "sqrt" => Allocation::Sqrt,
+            "linear" => Allocation::Linear,
+            "even" => Allocation::Even,
+            _ => bail!("unknown allocation {s:?} (sqrt|linear|even)"),
+        })
+    }
+
+    /// Distribute `m_total` steps over `deltas.len()` intervals.
+    ///
+    /// `deltas` are the normalized per-interval probability changes from
+    /// stage 1 (non-negative; all-zero falls back to an even split).
+    /// Returns per-interval step counts summing to exactly `m_total`,
+    /// each >= 1. Mirrors `python/compile/igref.py::_allocate`.
+    pub fn allocate(&self, m_total: usize, deltas: &[f64]) -> Result<Vec<usize>> {
+        let n = deltas.len();
+        if n == 0 {
+            bail!("no intervals to allocate over");
+        }
+        if m_total < n {
+            bail!("m_total={m_total} < n_int={n}: every interval needs >= 1 step");
+        }
+        let scores: Vec<f64> = match self {
+            Allocation::Sqrt => deltas.iter().map(|d| d.abs().sqrt()).collect(),
+            Allocation::Linear => deltas.iter().map(|d| d.abs()).collect(),
+            Allocation::Even => vec![1.0; n],
+        };
+        Ok(largest_remainder(m_total, &scores))
+    }
+}
+
+/// Largest-remainder apportionment with a 1-step floor per interval.
+/// Mirrors the Python reference: reserve 1 per interval, split the rest
+/// proportionally, floor, then hand surplus to the largest fractional
+/// remainders (ties broken toward the earlier interval).
+fn largest_remainder(m_total: usize, scores: &[f64]) -> Vec<usize> {
+    let n = scores.len();
+    let total: f64 = scores.iter().sum();
+    let scores: Vec<f64> = if total <= 0.0 { vec![1.0; n] } else { scores.to_vec() };
+    let total: f64 = scores.iter().sum();
+
+    let rest = (m_total - n) as f64;
+    let raw: Vec<f64> = scores.iter().map(|s| rest * s / total).collect();
+    let mut base: Vec<usize> = raw.iter().map(|r| r.floor() as usize).collect();
+    let short = (m_total - n) - base.iter().sum::<usize>();
+
+    // Order by fractional remainder desc, index asc — matches Python's
+    // sorted(..., key=lambda i: (raw[i]-base[i], -i), reverse=True).
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        let fa = raw[a] - base[a] as f64;
+        let fb = raw[b] - base[b] as f64;
+        fb.partial_cmp(&fa).unwrap().then(a.cmp(&b))
+    });
+    for &i in order.iter().take(short) {
+        base[i] += 1;
+    }
+    base.iter().map(|b| 1 + b).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil;
+
+    #[test]
+    fn sums_to_total() {
+        let alloc = Allocation::Sqrt.allocate(64, &[0.7, 0.2, 0.08, 0.02]).unwrap();
+        assert_eq!(alloc.iter().sum::<usize>(), 64);
+    }
+
+    #[test]
+    fn min_one_even_when_starved() {
+        let alloc = Allocation::Sqrt.allocate(8, &[1.0, 0.0, 0.0, 0.0]).unwrap();
+        assert_eq!(alloc.iter().sum::<usize>(), 8);
+        assert!(alloc.iter().all(|&a| a >= 1), "{alloc:?}");
+    }
+
+    #[test]
+    fn monotone_in_delta() {
+        let alloc = Allocation::Sqrt.allocate(100, &[0.5, 0.3, 0.15, 0.05]).unwrap();
+        let mut sorted = alloc.clone();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        assert_eq!(alloc, sorted);
+    }
+
+    #[test]
+    fn equal_deltas_equal_split() {
+        assert_eq!(Allocation::Sqrt.allocate(40, &[0.25; 4]).unwrap(), vec![10; 4]);
+        assert_eq!(Allocation::Even.allocate(40, &[0.9, 0.1, 0.0, 0.0]).unwrap(), vec![10; 4]);
+    }
+
+    #[test]
+    fn sqrt_attenuates_bias_vs_linear() {
+        // The paper's §III justification, as an executable fact.
+        let deltas = [0.9, 0.05, 0.03, 0.02];
+        let lin = Allocation::Linear.allocate(64, &deltas).unwrap();
+        let sq = Allocation::Sqrt.allocate(64, &deltas).unwrap();
+        assert!(sq.iter().min() > lin.iter().min(), "sqrt {sq:?} vs linear {lin:?}");
+        assert!(sq.iter().max() < lin.iter().max());
+    }
+
+    #[test]
+    fn zero_deltas_fall_back_even() {
+        assert_eq!(Allocation::Sqrt.allocate(12, &[0.0, 0.0, 0.0]).unwrap(), vec![4, 4, 4]);
+        assert_eq!(Allocation::Linear.allocate(12, &[0.0; 3]).unwrap(), vec![4, 4, 4]);
+    }
+
+    #[test]
+    fn rejects_m_below_n() {
+        assert!(Allocation::Sqrt.allocate(3, &[0.5, 0.3, 0.1, 0.1]).is_err());
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(Allocation::Sqrt.allocate(10, &[]).is_err());
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for a in [Allocation::Sqrt, Allocation::Linear, Allocation::Even] {
+            assert_eq!(Allocation::parse(&a.to_string()).unwrap(), a);
+        }
+        assert!(Allocation::parse("cubic").is_err());
+    }
+
+    #[test]
+    fn matches_python_reference_cases() {
+        // Values cross-checked against python igref.sqrt_allocate.
+        assert_eq!(
+            Allocation::Sqrt.allocate(64, &[0.6, 0.25, 0.1, 0.05]).unwrap().iter().sum::<usize>(),
+            64
+        );
+        // Remainder distribution: ties break toward the earlier interval,
+        // matching Python's sorted(key=(frac, -i), reverse=True).
+        let alloc = Allocation::Sqrt.allocate(10, &[0.5, 0.5, 0.0]).unwrap();
+        assert_eq!(alloc, vec![5, 4, 1]);
+    }
+
+    #[test]
+    fn property_sum_and_floor() {
+        testutil::prop(200, 7, |rng| {
+            let n = rng.range(1, 9);
+            let m = rng.range(n, 513);
+            let deltas: Vec<f64> = (0..n).map(|_| rng.range_f64(0.0, 1.0)).collect();
+            for alloc_kind in [Allocation::Sqrt, Allocation::Linear, Allocation::Even] {
+                let alloc = alloc_kind.allocate(m, &deltas).unwrap();
+                assert_eq!(alloc.iter().sum::<usize>(), m, "{alloc_kind} {alloc:?}");
+                assert!(alloc.iter().all(|&a| a >= 1));
+                assert_eq!(alloc.len(), n);
+            }
+        });
+    }
+
+    #[test]
+    fn property_scale_invariance() {
+        // Allocation depends only on the *relative* deltas.
+        testutil::prop(100, 8, |rng| {
+            let n = rng.range(2, 8);
+            let m = rng.range(n, 257);
+            let deltas: Vec<f64> = (0..n).map(|_| rng.range_f64(0.01, 1.0)).collect();
+            let scaled: Vec<f64> = deltas.iter().map(|d| d * 7.3).collect();
+            assert_eq!(
+                Allocation::Sqrt.allocate(m, &deltas).unwrap(),
+                Allocation::Sqrt.allocate(m, &scaled).unwrap()
+            );
+        });
+    }
+}

@@ -1,0 +1,168 @@
+//! Path-information analysis behind the paper's Fig. 3: how the target
+//! probability, its path-derivative (≈ gradient magnitude), and the
+//! contribution to convergence distribute along the IG path.
+
+use anyhow::{ensure, Result};
+
+use super::model::Model;
+use super::schedule::Schedule;
+use super::riemann::Rule;
+
+/// Fig. 3 statistics for one input.
+#[derive(Debug, Clone)]
+pub struct PathInfo {
+    /// Sampled alphas (uniform dense grid).
+    pub alphas: Vec<f64>,
+    /// p(target) at each alpha — Fig. 3(b).
+    pub probs: Vec<f64>,
+    /// |dp/dα| (central finite differences) — the path-derivative whose
+    /// magnitude tracks gradient magnitude along the path, Fig. 3(c).
+    pub dprob: Vec<f64>,
+    /// Per-interval share of Σ|dp/dα| for `n_int` equal intervals.
+    pub interval_share: Vec<f64>,
+    pub target: usize,
+}
+
+/// Sample the path at `samples+1` uniform points and compute Fig. 3's
+/// series. Uses `Model::ig_points` with zero weights — forward-only cost.
+pub fn path_info(
+    model: &dyn Model,
+    x: &[f32],
+    baseline: &[f32],
+    target: usize,
+    samples: usize,
+    n_int: usize,
+) -> Result<PathInfo> {
+    ensure!(samples >= 2, "need >= 2 samples");
+    ensure!(n_int >= 1 && samples % n_int == 0, "n_int must divide samples");
+    let sched = Schedule::uniform(samples, Rule::Trapezoid)?;
+    let (alphas_f32, _) = sched.to_f32();
+    let zeros = vec![0f32; alphas_f32.len()];
+    let out = model.ig_points(x, baseline, &alphas_f32, &zeros, target)?;
+
+    let alphas: Vec<f64> = sched.points.iter().map(|p| p.alpha).collect();
+    let probs = out.target_probs;
+    let h = 1.0 / samples as f64;
+    let n = probs.len();
+    let dprob: Vec<f64> = (0..n)
+        .map(|i| {
+            if i == 0 {
+                (probs[1] - probs[0]) / h
+            } else if i == n - 1 {
+                (probs[n - 1] - probs[n - 2]) / h
+            } else {
+                (probs[i + 1] - probs[i - 1]) / (2.0 * h)
+            }
+            .abs()
+        })
+        .collect();
+
+    // Per-interval share of the derivative mass, computed as trapezoidal
+    // segment masses so the shares partition exactly (sum to 1).
+    let per = samples / n_int;
+    let seg_mass = |k: usize| (dprob[k] + dprob[k + 1]) / 2.0;
+    let total: f64 = (0..samples).map(seg_mass).sum();
+    let interval_share: Vec<f64> = (0..n_int)
+        .map(|i| {
+            let s: f64 = (i * per..(i + 1) * per).map(seg_mass).sum();
+            if total > 0.0 {
+                s / total
+            } else {
+                1.0 / n_int as f64
+            }
+        })
+        .collect();
+
+    Ok(PathInfo { alphas, probs, dprob, interval_share, target })
+}
+
+impl PathInfo {
+    /// The alpha by which `q` of the total probability change has happened
+    /// (Fig. 3's ">90 % of final value by α = 0.25"-style statistic).
+    pub fn alpha_at_change_fraction(&self, q: f64) -> f64 {
+        let total = self.probs.last().unwrap() - self.probs[0];
+        if total.abs() < 1e-12 {
+            return 1.0;
+        }
+        for (i, &p) in self.probs.iter().enumerate() {
+            if (p - self.probs[0]) / total >= q {
+                return self.alphas[i];
+            }
+        }
+        1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ig::model::AnalyticModel;
+
+    fn setup() -> (AnalyticModel, Vec<f32>, usize) {
+        // High gain so the softmax saturates early along the path, like
+        // the calibrated MiniInception does (Fig. 3b shape).
+        let m = AnalyticModel::new(64, 4, 7, 150.0);
+        let x: Vec<f32> = (0..64).map(|i| ((i * 37) % 64) as f32 / 64.0).collect();
+        let p = m.probs(&[&x]).unwrap();
+        let t = crate::ig::engine::argmax(&p[0]);
+        (m, x, t)
+    }
+
+    #[test]
+    fn shapes() {
+        let (m, x, t) = setup();
+        let info = path_info(&m, &x, &vec![0f32; 64], t, 32, 4).unwrap();
+        assert_eq!(info.alphas.len(), 33);
+        assert_eq!(info.probs.len(), 33);
+        assert_eq!(info.dprob.len(), 33);
+        assert_eq!(info.interval_share.len(), 4);
+    }
+
+    #[test]
+    fn interval_share_sums_to_one() {
+        let (m, x, t) = setup();
+        let info = path_info(&m, &x, &vec![0f32; 64], t, 32, 8).unwrap();
+        let s: f64 = info.interval_share.iter().sum();
+        assert!((s - 1.0).abs() < 1e-9, "shares partition exactly: sum={s}");
+    }
+
+    #[test]
+    fn probs_monotone_for_dominant_target() {
+        let (m, x, t) = setup();
+        let info = path_info(&m, &x, &vec![0f32; 64], t, 16, 4).unwrap();
+        assert!(info.probs.last().unwrap() > &info.probs[0]);
+    }
+
+    #[test]
+    fn change_concentrated_early() {
+        // The saturating model puts most derivative mass early — the
+        // paper's core observation.
+        let (m, x, t) = setup();
+        let info = path_info(&m, &x, &vec![0f32; 64], t, 32, 4).unwrap();
+        assert!(
+            info.interval_share[0] > info.interval_share[3],
+            "{:?}",
+            info.interval_share
+        );
+        let a90 = info.alpha_at_change_fraction(0.9);
+        assert!(a90 < 0.9, "90% change by alpha={a90}");
+    }
+
+    #[test]
+    fn validation() {
+        let (m, x, t) = setup();
+        assert!(path_info(&m, &x, &vec![0f32; 64], t, 1, 1).is_err());
+        assert!(path_info(&m, &x, &vec![0f32; 64], t, 10, 3).is_err());
+    }
+
+    #[test]
+    fn flat_path_even_shares() {
+        let (m, x, t) = setup();
+        // x as its own baseline -> constant path -> even share fallback.
+        let info = path_info(&m, &x, &x, t, 16, 4).unwrap();
+        for s in &info.interval_share {
+            assert!((s - 0.25).abs() < 1e-9);
+        }
+        assert_eq!(info.alpha_at_change_fraction(0.9), 1.0);
+    }
+}

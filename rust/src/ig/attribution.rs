@@ -1,0 +1,114 @@
+//! Attribution result type with completeness accounting.
+
+use crate::metrics::StageBreakdown;
+
+/// The output of an explanation: per-feature relevance scores plus the
+/// bookkeeping the paper's evaluation protocol needs (steps consumed,
+/// probe passes, completeness residual, stage timing).
+#[derive(Debug, Clone)]
+pub struct Attribution {
+    /// Per-feature scores φ_i (f64 accumulation over f32 chunk partials).
+    pub values: Vec<f64>,
+    /// Explained class (argmax of f(x) unless the caller pinned one).
+    pub target: usize,
+    /// Gradient evaluations consumed (fwd+bwd passes; Σ(m_i + 1)).
+    pub steps: usize,
+    /// Stage-1 forward-only passes (0 for the uniform baseline).
+    pub probe_passes: usize,
+    /// Completeness residual δ = |Σφ − (f(x) − f(x'))|   (Eq. 3).
+    pub delta: f64,
+    /// The endpoint gap f(x) − f(x') itself.
+    pub endpoint_gap: f64,
+    /// Wall-clock decomposition (probe/schedule/execute/reduce).
+    pub breakdown: StageBreakdown,
+}
+
+impl Attribution {
+    /// Σφ — should approach `endpoint_gap` as m grows (completeness).
+    pub fn sum(&self) -> f64 {
+        self.values.iter().sum()
+    }
+
+    /// δ normalized by |gap| — scale-free convergence measure.
+    pub fn relative_delta(&self) -> f64 {
+        if self.endpoint_gap.abs() < 1e-12 {
+            return self.delta;
+        }
+        self.delta / self.endpoint_gap.abs()
+    }
+
+    /// Indices of the `k` largest |φ| features (top attributed features).
+    pub fn top_features(&self, k: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.values.len()).collect();
+        idx.sort_by(|&a, &b| {
+            self.values[b]
+                .abs()
+                .partial_cmp(&self.values[a].abs())
+                .unwrap()
+        });
+        idx.truncate(k);
+        idx
+    }
+
+    /// Cosine similarity against another attribution (used to check the
+    /// uniform and non-uniform engines converge to the same explanation).
+    pub fn cosine_similarity(&self, other: &Attribution) -> f64 {
+        let dot: f64 = self.values.iter().zip(&other.values).map(|(a, b)| a * b).sum();
+        let na: f64 = self.values.iter().map(|v| v * v).sum::<f64>().sqrt();
+        let nb: f64 = other.values.iter().map(|v| v * v).sum::<f64>().sqrt();
+        if na == 0.0 || nb == 0.0 {
+            return 0.0;
+        }
+        dot / (na * nb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(values: Vec<f64>, gap: f64) -> Attribution {
+        let sum: f64 = values.iter().sum();
+        Attribution {
+            values,
+            target: 0,
+            steps: 10,
+            probe_passes: 0,
+            delta: (sum - gap).abs(),
+            endpoint_gap: gap,
+            breakdown: StageBreakdown::default(),
+        }
+    }
+
+    #[test]
+    fn sum_and_delta() {
+        let a = mk(vec![0.2, 0.3, 0.1], 0.65);
+        assert!((a.sum() - 0.6).abs() < 1e-12);
+        assert!((a.delta - 0.05).abs() < 1e-12);
+        assert!((a.relative_delta() - 0.05 / 0.65).abs() < 1e-12);
+    }
+
+    #[test]
+    fn relative_delta_zero_gap() {
+        let a = mk(vec![0.0, 0.0], 0.0);
+        assert_eq!(a.relative_delta(), a.delta);
+    }
+
+    #[test]
+    fn top_features_by_magnitude() {
+        let a = mk(vec![0.1, -0.9, 0.5, -0.2], 0.0);
+        assert_eq!(a.top_features(2), vec![1, 2]);
+        assert_eq!(a.top_features(10).len(), 4);
+    }
+
+    #[test]
+    fn cosine() {
+        let a = mk(vec![1.0, 0.0], 1.0);
+        let b = mk(vec![2.0, 0.0], 2.0);
+        let c = mk(vec![0.0, 1.0], 1.0);
+        assert!((a.cosine_similarity(&b) - 1.0).abs() < 1e-12);
+        assert!(a.cosine_similarity(&c).abs() < 1e-12);
+        let z = mk(vec![0.0, 0.0], 0.0);
+        assert_eq!(a.cosine_similarity(&z), 0.0);
+    }
+}

@@ -1,0 +1,119 @@
+//! Baseline construction for path attribution.
+//!
+//! A baseline x′ encodes "missingness" (§II): the paper uses black; the
+//! literature ([8] Sturmfels et al.) also uses white, gray, and random
+//! noise, and averages attributions over several baselines. This module
+//! builds them deterministically so every run is reproducible.
+
+use anyhow::{bail, Result};
+
+use crate::data::synth;
+
+/// Baseline families from the IG literature.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BaselineKind {
+    /// All-zeros image (the paper's default).
+    Black,
+    /// All-ones image.
+    White,
+    /// Constant mid-gray (0.5).
+    Gray,
+    /// Uniform noise in [0,1), seeded (counter-based, reproducible).
+    Noise { seed: u64 },
+}
+
+impl std::fmt::Display for BaselineKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BaselineKind::Black => write!(f, "black"),
+            BaselineKind::White => write!(f, "white"),
+            BaselineKind::Gray => write!(f, "gray"),
+            BaselineKind::Noise { seed } => write!(f, "noise:{seed}"),
+        }
+    }
+}
+
+impl BaselineKind {
+    /// Parse `black|white|gray|noise:<seed>`.
+    pub fn parse(s: &str) -> Result<BaselineKind> {
+        Ok(match s {
+            "black" => BaselineKind::Black,
+            "white" => BaselineKind::White,
+            "gray" => BaselineKind::Gray,
+            _ => {
+                if let Some(seed) = s.strip_prefix("noise:") {
+                    BaselineKind::Noise { seed: seed.parse()? }
+                } else {
+                    bail!("unknown baseline {s:?} (black|white|gray|noise:<seed>)")
+                }
+            }
+        })
+    }
+
+    /// Materialize an `n`-feature baseline image.
+    pub fn build(&self, n: usize) -> Vec<f32> {
+        match self {
+            BaselineKind::Black => vec![0.0; n],
+            BaselineKind::White => vec![1.0; n],
+            BaselineKind::Gray => vec![0.5; n],
+            BaselineKind::Noise { seed } => {
+                (0..n).map(|i| synth::draw_u01(*seed, i as u64)).collect()
+            }
+        }
+    }
+
+    /// The multi-baseline set used by [`super::ensemble::multi_baseline`]:
+    /// black + white + `n_noise` seeded noise baselines.
+    pub fn standard_set(n_noise: usize) -> Vec<BaselineKind> {
+        let mut set = vec![BaselineKind::Black, BaselineKind::White];
+        set.extend((0..n_noise).map(|i| BaselineKind::Noise { seed: 0xBA5E + i as u64 }));
+        set
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_baselines() {
+        assert!(BaselineKind::Black.build(8).iter().all(|&v| v == 0.0));
+        assert!(BaselineKind::White.build(8).iter().all(|&v| v == 1.0));
+        assert!(BaselineKind::Gray.build(8).iter().all(|&v| v == 0.5));
+    }
+
+    #[test]
+    fn noise_deterministic_and_in_range() {
+        let a = BaselineKind::Noise { seed: 1 }.build(256);
+        let b = BaselineKind::Noise { seed: 1 }.build(256);
+        let c = BaselineKind::Noise { seed: 2 }.build(256);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert!(a.iter().all(|&v| (0.0..1.0).contains(&v)));
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for k in [
+            BaselineKind::Black,
+            BaselineKind::White,
+            BaselineKind::Gray,
+            BaselineKind::Noise { seed: 7 },
+        ] {
+            assert_eq!(BaselineKind::parse(&k.to_string()).unwrap(), k);
+        }
+        assert!(BaselineKind::parse("plaid").is_err());
+        assert!(BaselineKind::parse("noise:x").is_err());
+    }
+
+    #[test]
+    fn standard_set_composition() {
+        let set = BaselineKind::standard_set(3);
+        assert_eq!(set.len(), 5);
+        assert_eq!(set[0], BaselineKind::Black);
+        assert_eq!(set[1], BaselineKind::White);
+        assert!(matches!(set[2], BaselineKind::Noise { .. }));
+        // Distinct noise seeds.
+        assert_ne!(set[2].build(16), set[3].build(16));
+    }
+}

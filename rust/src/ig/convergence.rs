@@ -1,0 +1,133 @@
+//! The completeness residual δ (Eq. 3) and the iso-convergence search.
+//!
+//! The paper's protocol (Fig. 5b): fix a threshold δ_th, walk a step-count
+//! grid upward, report the first m whose δ ≤ δ_th. The grid here matches
+//! the ~1.5x-spaced grid used for all figure benches.
+
+use anyhow::{ensure, Result};
+
+/// δ = |Σφ − (f(x) − f(x'))|.
+pub fn delta(attr_sum: f64, endpoint_gap: f64) -> f64 {
+    (attr_sum - endpoint_gap).abs()
+}
+
+/// The step-count search grid (≈1.5x spacing, the paper's working range).
+pub fn default_grid() -> Vec<usize> {
+    vec![8, 12, 16, 24, 32, 48, 64, 96, 128, 192, 256, 384, 512]
+}
+
+/// Iso-convergence search policy.
+#[derive(Debug, Clone)]
+pub struct ConvergencePolicy {
+    /// Target completeness residual.
+    pub delta_th: f64,
+    /// Step-count grid to walk (ascending).
+    pub grid: Vec<usize>,
+}
+
+impl ConvergencePolicy {
+    pub fn new(delta_th: f64) -> Self {
+        ConvergencePolicy { delta_th, grid: default_grid() }
+    }
+
+    pub fn with_grid(delta_th: f64, grid: Vec<usize>) -> Result<Self> {
+        ensure!(!grid.is_empty(), "empty step grid");
+        ensure!(grid.windows(2).all(|w| w[0] < w[1]), "grid must be ascending");
+        Ok(ConvergencePolicy { delta_th, grid })
+    }
+
+    /// Walk the grid until `run(m)` yields δ ≤ δ_th.
+    ///
+    /// Returns `(m, delta, converged)`; if nothing on the grid converges,
+    /// returns the last grid point with `converged = false` (the paper's
+    /// figures simply extend the axis; we surface the failure).
+    pub fn search<E, F: FnMut(usize) -> Result<f64, E>>(
+        &self,
+        mut run: F,
+    ) -> Result<(usize, f64, bool), E> {
+        let mut last = (self.grid[0], f64::INFINITY);
+        for &m in &self.grid {
+            let d = run(m)?;
+            if d <= self.delta_th {
+                return Ok((m, d, true));
+            }
+            last = (m, d);
+        }
+        Ok((last.0, last.1, false))
+    }
+}
+
+/// Derive δ_th values from a measured uniform-baseline δ-vs-m curve, at
+/// the paper's relative positions. The paper uses absolute thresholds
+/// (0.005–0.02) tuned to InceptionV3's δ scale; our model has its own
+/// scale, so thresholds are taken as the baseline's δ at m ∈ {16, 32, 64,
+/// 128} — preserving the "tight to loose" sweep shape (see DESIGN.md §4).
+pub fn thresholds_from_baseline(curve: &[(usize, f64)], at_m: &[usize]) -> Vec<f64> {
+    at_m.iter()
+        .filter_map(|m| {
+            curve
+                .iter()
+                .find(|(cm, _)| cm == m)
+                .map(|(_, d)| *d)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delta_abs() {
+        assert!((delta(0.9, 1.0) - delta(1.1, 1.0)).abs() < 1e-12);
+        assert_eq!(delta(1.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn grid_ascending() {
+        let g = default_grid();
+        assert!(g.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(g[0], 8);
+        assert_eq!(*g.last().unwrap(), 512);
+    }
+
+    #[test]
+    fn search_finds_first_converged() {
+        let pol = ConvergencePolicy::with_grid(0.1, vec![2, 4, 8, 16]).unwrap();
+        // δ(m) = 1/m: converges at m = 16? 1/16 = 0.0625 <= 0.1; m=8 -> 0.125 > 0.1
+        let (m, d, ok) = pol.search(|m| Ok::<f64, ()>(1.0 / m as f64)).unwrap();
+        assert!(ok);
+        assert_eq!(m, 16);
+        assert!((d - 0.0625).abs() < 1e-12);
+    }
+
+    #[test]
+    fn search_reports_non_convergence() {
+        let pol = ConvergencePolicy::with_grid(1e-9, vec![2, 4]).unwrap();
+        let (m, d, ok) = pol.search(|m| Ok::<f64, ()>(1.0 / m as f64)).unwrap();
+        assert!(!ok);
+        assert_eq!(m, 4);
+        assert_eq!(d, 0.25);
+    }
+
+    #[test]
+    fn search_propagates_errors() {
+        let pol = ConvergencePolicy::new(0.1);
+        let r = pol.search(|_| Err::<f64, &str>("boom"));
+        assert_eq!(r.unwrap_err(), "boom");
+    }
+
+    #[test]
+    fn with_grid_validates() {
+        assert!(ConvergencePolicy::with_grid(0.1, vec![]).is_err());
+        assert!(ConvergencePolicy::with_grid(0.1, vec![4, 4]).is_err());
+        assert!(ConvergencePolicy::with_grid(0.1, vec![8, 4]).is_err());
+    }
+
+    #[test]
+    fn thresholds_from_curve() {
+        let curve = vec![(16, 0.08), (32, 0.04), (64, 0.02)];
+        assert_eq!(thresholds_from_baseline(&curve, &[16, 64]), vec![0.08, 0.02]);
+        assert_eq!(thresholds_from_baseline(&curve, &[99]), Vec::<f64>::new());
+    }
+}

@@ -1,0 +1,320 @@
+//! The two IG engines: baseline uniform interpolation (Eq. 2) and the
+//! paper's two-stage non-uniform interpolation.
+//!
+//! Both are thin orchestrations over [`Model`]: build a [`Schedule`],
+//! evaluate it via `Model::ig_points` (which chunks to the executable
+//! width), and account for completeness. Stage timing is recorded so the
+//! overhead figures (Fig. 6b) come from real measurements.
+
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::metrics::StageBreakdown;
+
+use super::allocator::Allocation;
+use super::attribution::Attribution;
+use super::convergence;
+use super::model::Model;
+use super::probe::Probe;
+use super::riemann::Rule;
+use super::schedule::Schedule;
+use super::Scheme;
+
+/// Per-explanation options.
+#[derive(Debug, Clone, Copy)]
+pub struct IgOptions {
+    pub scheme: Scheme,
+    /// Total interpolation steps m (stage-2 budget).
+    pub m: usize,
+    pub rule: Rule,
+    pub allocation: Allocation,
+}
+
+impl Default for IgOptions {
+    fn default() -> Self {
+        IgOptions {
+            scheme: Scheme::NonUniform { n_int: 4 },
+            m: 64,
+            rule: Rule::Trapezoid,
+            allocation: Allocation::Sqrt,
+        }
+    }
+}
+
+/// Explain `x` against `baseline` (black if `None`), targeting the model's
+/// predicted class.
+pub fn explain(
+    model: &dyn Model,
+    x: &[f32],
+    baseline: Option<&[f32]>,
+    opts: &IgOptions,
+) -> Result<Attribution> {
+    let black;
+    let baseline = match baseline {
+        Some(b) => b,
+        None => {
+            black = vec![0f32; model.features()];
+            &black
+        }
+    };
+    let probs = model.probs(&[x])?;
+    let target = argmax(&probs[0]);
+    explain_with_target(model, x, baseline, target, opts)
+}
+
+/// Explain with a pinned target class.
+pub fn explain_with_target(
+    model: &dyn Model,
+    x: &[f32],
+    baseline: &[f32],
+    target: usize,
+    opts: &IgOptions,
+) -> Result<Attribution> {
+    ensure!(x.len() == model.features(), "image width {} != model features {}", x.len(), model.features());
+    ensure!(baseline.len() == x.len(), "baseline width mismatch");
+    ensure!(target < model.num_classes(), "target {target} out of range");
+    ensure!(opts.m >= 1, "m must be >= 1");
+
+    match opts.scheme {
+        Scheme::Uniform => uniform_ig(model, x, baseline, target, opts),
+        Scheme::NonUniform { n_int } => nonuniform_ig(model, x, baseline, target, n_int, opts),
+    }
+}
+
+fn uniform_ig(
+    model: &dyn Model,
+    x: &[f32],
+    baseline: &[f32],
+    target: usize,
+    opts: &IgOptions,
+) -> Result<Attribution> {
+    let t0 = Instant::now();
+    let schedule = Schedule::uniform(opts.m, opts.rule)?;
+    let (alphas, weights) = schedule.to_f32();
+    let t_sched = t0.elapsed();
+
+    let t1 = Instant::now();
+    let out = model.ig_points(x, baseline, &alphas, &weights, target)?;
+    let t_exec = t1.elapsed();
+
+    // Endpoint gap read off the schedule's own endpoint probabilities
+    // (α=0 is the first point, α=1 the last — both grids include them).
+    let t2 = Instant::now();
+    let gap = out.target_probs[out.target_probs.len() - 1] - out.target_probs[0];
+    let sum: f64 = out.partial.iter().sum();
+    let t_reduce = t2.elapsed();
+
+    Ok(Attribution {
+        delta: convergence::delta(sum, gap),
+        endpoint_gap: gap,
+        values: out.partial,
+        target,
+        steps: schedule.len(),
+        probe_passes: 0,
+        breakdown: StageBreakdown {
+            probe: Default::default(),
+            schedule: t_sched,
+            execute: t_exec,
+            reduce: t_reduce,
+        },
+    })
+}
+
+fn nonuniform_ig(
+    model: &dyn Model,
+    x: &[f32],
+    baseline: &[f32],
+    target: usize,
+    n_int: usize,
+    opts: &IgOptions,
+) -> Result<Attribution> {
+    ensure!(n_int >= 1, "n_int must be >= 1");
+    ensure!(opts.m >= n_int, "m ({}) must be >= n_int ({n_int})", opts.m);
+
+    // ---- Stage 1: probe boundary probabilities (forward-only). ----------
+    let t0 = Instant::now();
+    let bounds = Schedule::probe_boundaries(n_int);
+    let f = x.len();
+    let boundary_imgs: Vec<Vec<f32>> = bounds
+        .iter()
+        .map(|&a| {
+            (0..f)
+                .map(|i| baseline[i] + a as f32 * (x[i] - baseline[i]))
+                .collect()
+        })
+        .collect();
+    let refs: Vec<&[f32]> = boundary_imgs.iter().map(|v| v.as_slice()).collect();
+    let probe_probs = model.probs(&refs)?;
+    let probe = Probe::new(bounds.clone(), probe_probs.iter().map(|p| p[target]).collect())?;
+    let t_probe = t0.elapsed();
+
+    // ---- Allocate + build the composite schedule. ------------------------
+    let t1 = Instant::now();
+    let deltas = probe.interval_deltas();
+    let alloc = opts.allocation.allocate(opts.m, &deltas)?;
+    let schedule = Schedule::nonuniform(&bounds, &alloc, opts.rule)?;
+    let (alphas, weights) = schedule.to_f32();
+    let t_sched = t1.elapsed();
+
+    // ---- Stage 2: uniform IG inside each interval (one point stream). ---
+    let t2 = Instant::now();
+    let out = model.ig_points(x, baseline, &alphas, &weights, target)?;
+    let t_exec = t2.elapsed();
+
+    let t3 = Instant::now();
+    let gap = probe.endpoint_gap();
+    let sum: f64 = out.partial.iter().sum();
+    let t_reduce = t3.elapsed();
+
+    Ok(Attribution {
+        delta: convergence::delta(sum, gap),
+        endpoint_gap: gap,
+        values: out.partial,
+        target,
+        steps: schedule.len(),
+        probe_passes: bounds.len(),
+        breakdown: StageBreakdown {
+            probe: t_probe,
+            schedule: t_sched,
+            execute: t_exec,
+            reduce: t_reduce,
+        },
+    })
+}
+
+/// Index of the largest element.
+pub fn argmax(v: &[f64]) -> usize {
+    v.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ig::model::AnalyticModel;
+
+    fn model() -> AnalyticModel {
+        AnalyticModel::new(64, 4, 7, 40.0)
+    }
+
+    fn input() -> Vec<f32> {
+        (0..64).map(|i| ((i * 37) % 64) as f32 / 64.0).collect()
+    }
+
+    fn run(m: usize, scheme: Scheme) -> Attribution {
+        let opts = IgOptions { scheme, m, ..Default::default() };
+        explain(&model(), &input(), None, &opts).unwrap()
+    }
+
+    #[test]
+    fn uniform_step_accounting() {
+        let a = run(16, Scheme::Uniform);
+        assert_eq!(a.steps, 17);
+        assert_eq!(a.probe_passes, 0);
+    }
+
+    #[test]
+    fn nonuniform_step_accounting() {
+        let a = run(16, Scheme::NonUniform { n_int: 4 });
+        assert_eq!(a.steps, 16 + 4); // Σ(m_i + 1) = m + n_int
+        assert_eq!(a.probe_passes, 5);
+        assert!(a.breakdown.probe.as_nanos() > 0);
+    }
+
+    #[test]
+    fn completeness_improves_with_m() {
+        let d8 = run(8, Scheme::Uniform).delta;
+        let d64 = run(64, Scheme::Uniform).delta;
+        let d256 = run(256, Scheme::Uniform).delta;
+        assert!(d8 > d64, "{d8} !> {d64}");
+        assert!(d64 > d256, "{d64} !> {d256}");
+    }
+
+    #[test]
+    fn nonuniform_beats_uniform_at_iso_steps() {
+        // The paper's headline effect, on the analytic model.
+        let m = 24;
+        let du = run(m, Scheme::Uniform).delta;
+        let dn = run(m, Scheme::NonUniform { n_int: 4 }).delta;
+        assert!(dn < du, "nonuniform {dn} !< uniform {du}");
+    }
+
+    #[test]
+    fn engines_agree_at_high_m() {
+        let u = run(512, Scheme::Uniform);
+        let n = run(512, Scheme::NonUniform { n_int: 4 });
+        assert!(u.cosine_similarity(&n) > 0.9999, "{}", u.cosine_similarity(&n));
+        assert!((u.sum() - n.sum()).abs() < 1e-3);
+    }
+
+    #[test]
+    fn nonuniform_n1_equals_uniform() {
+        let u = run(32, Scheme::Uniform);
+        let n = run(32, Scheme::NonUniform { n_int: 1 });
+        crate::testutil::assert_allclose(&u.values, &n.values, 1e-9, 1e-12);
+    }
+
+    #[test]
+    fn identical_endpoints_zero() {
+        let m = model();
+        let x = input();
+        let opts = IgOptions { scheme: Scheme::Uniform, m: 8, ..Default::default() };
+        let a = explain_with_target(&m, &x, &x, 0, &opts).unwrap();
+        assert!(a.delta < 1e-9);
+        assert!(a.values.iter().all(|&v| v.abs() < 1e-9));
+    }
+
+    #[test]
+    fn explicit_target_respected() {
+        let m = model();
+        let x = input();
+        let b = vec![0f32; 64];
+        let opts = IgOptions::default();
+        let a = explain_with_target(&m, &x, &b, 2, &opts).unwrap();
+        assert_eq!(a.target, 2);
+    }
+
+    #[test]
+    fn validation_errors() {
+        let m = model();
+        let x = input();
+        let opts = IgOptions::default();
+        assert!(explain_with_target(&m, &x[..10], &x, 0, &opts).is_err());
+        assert!(explain_with_target(&m, &x, &x[..10], 0, &opts).is_err());
+        assert!(explain_with_target(&m, &x, &x, 99, &opts).is_err());
+        let bad = IgOptions { m: 2, scheme: Scheme::NonUniform { n_int: 4 }, ..Default::default() };
+        assert!(explain_with_target(&m, &x, &vec![0f32; 64], 0, &bad).is_err());
+    }
+
+    #[test]
+    fn argmax_works() {
+        assert_eq!(argmax(&[0.1, 0.7, 0.2]), 1);
+        assert_eq!(argmax(&[1.0]), 0);
+        assert_eq!(argmax(&[]), 0);
+    }
+
+    #[test]
+    fn endpoint_gap_matches_direct_eval() {
+        let m = model();
+        let x = input();
+        let a = run(32, Scheme::Uniform);
+        let p = m.probs(&[&x, &vec![0f32; 64]]).unwrap();
+        let gap = p[0][a.target] - p[1][a.target];
+        assert!((a.endpoint_gap - gap).abs() < 1e-9);
+    }
+
+    #[test]
+    fn property_delta_scale_free_invariants() {
+        crate::testutil::prop(10, 31, |rng| {
+            let m = rng.range(8, 64);
+            let a = run(m, Scheme::NonUniform { n_int: 4 });
+            assert!(a.delta >= 0.0);
+            assert!(a.relative_delta() >= 0.0);
+            assert_eq!(a.values.len(), 64);
+        });
+    }
+}

@@ -1,0 +1,242 @@
+//! Ensemble attribution methods from the literature the paper cites in
+//! §I — all of which run baseline IG *multiple times* in their pipeline
+//! and therefore "stand to gain significant performance benefits from an
+//! IG implementation optimized for low-latency":
+//!
+//! * [`multi_baseline`] — average attributions over several baselines
+//!   (Sturmfels et al. [8]);
+//! * [`noise_tunnel`] — SmoothGrad-style averaging over noisy copies of
+//!   the input (Smilkov et al. [16], Captum's NoiseTunnel [15]).
+//!
+//! Both are scheme-agnostic: pass a uniform or non-uniform `IgOptions`
+//! and the inner IG runs inherit it — `benches/ablation_allocator` and
+//! the `reproduce_paper` example show the speedup composing.
+
+use anyhow::{ensure, Result};
+
+use crate::data::synth;
+use crate::metrics::StageBreakdown;
+
+use super::attribution::Attribution;
+use super::baselines::BaselineKind;
+use super::engine::{self, IgOptions};
+use super::model::Model;
+
+/// Result of an ensemble run: the averaged attribution plus the per-run
+/// bookkeeping (total steps across members, worst member delta).
+#[derive(Debug, Clone)]
+pub struct EnsembleAttribution {
+    pub attribution: Attribution,
+    /// Number of inner IG runs.
+    pub members: usize,
+    /// Max completeness residual across members (each member satisfies
+    /// its own completeness equation; the mean does not have one).
+    pub worst_member_delta: f64,
+}
+
+/// IG averaged over a set of baselines. Target is pinned from the
+/// prediction on `x` so every member explains the same class.
+pub fn multi_baseline(
+    model: &dyn Model,
+    x: &[f32],
+    baselines: &[BaselineKind],
+    opts: &IgOptions,
+) -> Result<EnsembleAttribution> {
+    ensure!(!baselines.is_empty(), "need at least one baseline");
+    let probs = model.probs(&[x])?;
+    let target = engine::argmax(&probs[0]);
+
+    let mut acc = vec![0f64; x.len()];
+    let mut steps = 0;
+    let mut probe_passes = 0;
+    let mut worst = 0f64;
+    let mut gap_acc = 0f64;
+    let mut breakdown = StageBreakdown::default();
+    for kind in baselines {
+        let baseline = kind.build(x.len());
+        let a = engine::explain_with_target(model, x, &baseline, target, opts)?;
+        for (s, v) in acc.iter_mut().zip(&a.values) {
+            *s += v / baselines.len() as f64;
+        }
+        steps += a.steps;
+        probe_passes += a.probe_passes;
+        worst = worst.max(a.delta);
+        gap_acc += a.endpoint_gap / baselines.len() as f64;
+        breakdown.probe += a.breakdown.probe;
+        breakdown.schedule += a.breakdown.schedule;
+        breakdown.execute += a.breakdown.execute;
+        breakdown.reduce += a.breakdown.reduce;
+    }
+    let sum: f64 = acc.iter().sum();
+    Ok(EnsembleAttribution {
+        attribution: Attribution {
+            delta: (sum - gap_acc).abs(),
+            endpoint_gap: gap_acc,
+            values: acc,
+            target,
+            steps,
+            probe_passes,
+            breakdown,
+        },
+        members: baselines.len(),
+        worst_member_delta: worst,
+    })
+}
+
+/// SmoothGrad-style noise tunnel: average IG attributions over `n_samples`
+/// noisy copies of the input (`x + sigma * U(-0.5, 0.5)` per feature,
+/// seeded and counter-based for reproducibility).
+pub fn noise_tunnel(
+    model: &dyn Model,
+    x: &[f32],
+    n_samples: usize,
+    sigma: f32,
+    seed: u64,
+    opts: &IgOptions,
+) -> Result<EnsembleAttribution> {
+    ensure!(n_samples >= 1, "need at least one sample");
+    ensure!(sigma >= 0.0, "sigma must be non-negative");
+    let probs = model.probs(&[x])?;
+    let target = engine::argmax(&probs[0]);
+    let baseline = vec![0f32; x.len()];
+
+    let mut acc = vec![0f64; x.len()];
+    let mut steps = 0;
+    let mut probe_passes = 0;
+    let mut worst = 0f64;
+    let mut gap_acc = 0f64;
+    let mut breakdown = StageBreakdown::default();
+    for s in 0..n_samples {
+        let noisy: Vec<f32> = x
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| {
+                let u = synth::draw_u01(seed ^ (s as u64) << 32, i as u64) - 0.5;
+                (v + sigma * u).clamp(0.0, 1.0)
+            })
+            .collect();
+        let a = engine::explain_with_target(model, &noisy, &baseline, target, opts)?;
+        for (dst, v) in acc.iter_mut().zip(&a.values) {
+            *dst += v / n_samples as f64;
+        }
+        steps += a.steps;
+        probe_passes += a.probe_passes;
+        worst = worst.max(a.delta);
+        gap_acc += a.endpoint_gap / n_samples as f64;
+        breakdown.probe += a.breakdown.probe;
+        breakdown.execute += a.breakdown.execute;
+    }
+    let sum: f64 = acc.iter().sum();
+    Ok(EnsembleAttribution {
+        attribution: Attribution {
+            delta: (sum - gap_acc).abs(),
+            endpoint_gap: gap_acc,
+            values: acc,
+            target,
+            steps,
+            probe_passes,
+            breakdown,
+        },
+        members: n_samples,
+        worst_member_delta: worst,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ig::model::AnalyticModel;
+    use crate::ig::Scheme;
+
+    fn model() -> AnalyticModel {
+        AnalyticModel::new(64, 4, 7, 80.0)
+    }
+
+    fn input() -> Vec<f32> {
+        (0..64).map(|i| ((i * 37) % 64) as f32 / 64.0).collect()
+    }
+
+    #[test]
+    fn multi_baseline_averages() {
+        let m = model();
+        let x = input();
+        let opts = IgOptions { m: 32, ..Default::default() };
+        let ens = multi_baseline(&m, &x, &BaselineKind::standard_set(1), &opts).unwrap();
+        assert_eq!(ens.members, 3);
+        assert_eq!(ens.attribution.steps, 3 * (32 + 4)); // 3 members, nonuniform default
+        assert!(ens.worst_member_delta >= ens.attribution.delta * 0.0); // defined
+        assert!(ens.attribution.values.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn single_black_baseline_reduces_to_plain_ig() {
+        let m = model();
+        let x = input();
+        let opts = IgOptions { m: 32, scheme: Scheme::Uniform, ..Default::default() };
+        let ens = multi_baseline(&m, &x, &[BaselineKind::Black], &opts).unwrap();
+        let plain = engine::explain(&m, &x, None, &opts).unwrap();
+        crate::testutil::assert_allclose(&ens.attribution.values, &plain.values, 1e-9, 1e-12);
+        assert!((ens.attribution.delta - plain.delta).abs() < 1e-12);
+    }
+
+    #[test]
+    fn noise_tunnel_zero_sigma_equals_plain() {
+        let m = model();
+        let x = input();
+        let opts = IgOptions { m: 24, scheme: Scheme::Uniform, ..Default::default() };
+        let nt = noise_tunnel(&m, &x, 3, 0.0, 42, &opts).unwrap();
+        let plain = engine::explain(&m, &x, None, &opts).unwrap();
+        crate::testutil::assert_allclose(&nt.attribution.values, &plain.values, 1e-9, 1e-12);
+    }
+
+    #[test]
+    fn noise_tunnel_deterministic() {
+        let m = model();
+        let x = input();
+        let opts = IgOptions { m: 16, ..Default::default() };
+        let a = noise_tunnel(&m, &x, 2, 0.1, 7, &opts).unwrap();
+        let b = noise_tunnel(&m, &x, 2, 0.1, 7, &opts).unwrap();
+        assert_eq!(a.attribution.values, b.attribution.values);
+        let c = noise_tunnel(&m, &x, 2, 0.1, 8, &opts).unwrap();
+        assert_ne!(a.attribution.values, c.attribution.values);
+    }
+
+    #[test]
+    fn noise_tunnel_smooths() {
+        // Averaging over noisy copies must not blow up the attribution
+        // scale and must stay correlated with the clean attribution.
+        let m = model();
+        let x = input();
+        let opts = IgOptions { m: 24, ..Default::default() };
+        let nt = noise_tunnel(&m, &x, 4, 0.05, 1, &opts).unwrap();
+        let plain = engine::explain(&m, &x, None, &opts).unwrap();
+        assert!(nt.attribution.cosine_similarity(&plain) > 0.9);
+    }
+
+    #[test]
+    fn ensemble_speedup_composes_with_nonuniform() {
+        // The §I claim: pipelines that call IG repeatedly inherit the
+        // scheme's step savings — equal member count, fewer total steps
+        // at comparable convergence.
+        let m = model();
+        let x = input();
+        let uni = IgOptions { m: 64, scheme: Scheme::Uniform, ..Default::default() };
+        let non = IgOptions { m: 24, scheme: Scheme::NonUniform { n_int: 4 }, ..Default::default() };
+        let set = BaselineKind::standard_set(1);
+        let e_uni = multi_baseline(&m, &x, &set, &uni).unwrap();
+        let e_non = multi_baseline(&m, &x, &set, &non).unwrap();
+        assert!(e_non.attribution.steps * 2 < e_uni.attribution.steps);
+        assert!(e_non.worst_member_delta < 2.0 * e_uni.worst_member_delta + 1e-3);
+        assert!(e_non.attribution.cosine_similarity(&e_uni.attribution) > 0.98);
+    }
+
+    #[test]
+    fn validation() {
+        let m = model();
+        let x = input();
+        let opts = IgOptions::default();
+        assert!(multi_baseline(&m, &x, &[], &opts).is_err());
+        assert!(noise_tunnel(&m, &x, 0, 0.1, 1, &opts).is_err());
+        assert!(noise_tunnel(&m, &x, 1, -0.5, 1, &opts).is_err());
+    }
+}

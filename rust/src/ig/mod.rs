@@ -1,0 +1,95 @@
+//! Integrated Gradients core: the paper's algorithm, engine-agnostic.
+//!
+//! The module layout mirrors the algorithm's anatomy:
+//!
+//! * [`riemann`] — quadrature rules over the unit interval (Eq. 2's
+//!   discretization and its better-behaved variants);
+//! * [`schedule`] — alpha/weight schedules: uniform grids, per-interval
+//!   grids, and their concatenation into the paper's non-uniform schedule;
+//! * [`allocator`] — stage 1's step distribution (`m_int ∝ √|Δf|`, with
+//!   the linear variant kept as the paper's ablation);
+//! * [`probe`] — stage 1's boundary probing and interval-delta math;
+//! * [`convergence`] — the completeness residual δ (Eq. 3) and the
+//!   iso-convergence search protocol (Fig. 5b);
+//! * [`model`] — the [`Model`] abstraction the engine runs against: the
+//!   PJRT-backed model at serving time, a closed-form analytic model in
+//!   tests and coordinator benches;
+//! * [`engine`] — the two engines: baseline uniform IG and the paper's
+//!   two-stage non-uniform IG;
+//! * [`attribution`] — result type with completeness accounting;
+//! * [`analysis`] — path-information statistics behind Fig. 3.
+
+pub mod adaptive;
+pub mod allocator;
+pub mod analysis;
+pub mod attribution;
+pub mod baselines;
+pub mod convergence;
+pub mod engine;
+pub mod ensemble;
+pub mod model;
+pub mod probe;
+pub mod riemann;
+pub mod schedule;
+
+pub use adaptive::explain_to_threshold;
+pub use allocator::Allocation;
+pub use attribution::Attribution;
+pub use baselines::BaselineKind;
+pub use convergence::ConvergencePolicy;
+pub use engine::{explain, IgOptions};
+pub use model::{AnalyticModel, Model};
+pub use riemann::Rule;
+
+/// Interpolation scheme selector: the baseline vs the paper's contribution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scheme {
+    /// Baseline IG: one uniform grid over the whole path (Eq. 2).
+    Uniform,
+    /// The paper's two-stage non-uniform interpolation with `n_int`
+    /// equal-width probe intervals.
+    NonUniform { n_int: usize },
+}
+
+impl std::fmt::Display for Scheme {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Scheme::Uniform => write!(f, "uniform"),
+            Scheme::NonUniform { n_int } => write!(f, "nonuniform(n_int={n_int})"),
+        }
+    }
+}
+
+impl Scheme {
+    /// Parse `uniform` or `nonuniform:<n_int>` (CLI syntax).
+    pub fn parse(s: &str) -> anyhow::Result<Scheme> {
+        if s == "uniform" {
+            return Ok(Scheme::Uniform);
+        }
+        if let Some(n) = s.strip_prefix("nonuniform:") {
+            let n_int: usize = n.parse()?;
+            anyhow::ensure!(n_int >= 1, "n_int must be >= 1");
+            return Ok(Scheme::NonUniform { n_int });
+        }
+        anyhow::bail!("unknown scheme {s:?} (expected `uniform` or `nonuniform:<n_int>`)")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheme_display_roundtrip() {
+        assert_eq!(Scheme::Uniform.to_string(), "uniform");
+        assert_eq!(Scheme::NonUniform { n_int: 4 }.to_string(), "nonuniform(n_int=4)");
+    }
+
+    #[test]
+    fn scheme_parse() {
+        assert_eq!(Scheme::parse("uniform").unwrap(), Scheme::Uniform);
+        assert_eq!(Scheme::parse("nonuniform:8").unwrap(), Scheme::NonUniform { n_int: 8 });
+        assert!(Scheme::parse("nonuniform:0").is_err());
+        assert!(Scheme::parse("simpson").is_err());
+    }
+}

@@ -1,0 +1,280 @@
+//! The model abstraction the IG engines run against.
+//!
+//! Two implementations exist:
+//!
+//! * `runtime::PjrtModel` — the real thing: AOT-compiled MiniInception
+//!   executables on the PJRT CPU client (serving path).
+//! * [`AnalyticModel`] — a closed-form softmax-linear classifier in pure
+//!   Rust, with *exact* gradients. It exists so the engine, coordinator,
+//!   and allocator can be tested and benched without artifacts, and so
+//!   convergence claims can be checked against analytically-known
+//!   integrals (logits are exactly linear in α along a black-baseline
+//!   path — the same positive-homogeneity the zero-bias MiniInception
+//!   has, so the path behaviour matches the real model family).
+
+use anyhow::{ensure, Result};
+
+/// A differentiable classifier the IG engines can drive.
+///
+/// Implementations must be thread-safe (`Sync`): the coordinator calls
+/// them from worker threads.
+pub trait Model: Sync {
+    fn features(&self) -> usize;
+    fn num_classes(&self) -> usize;
+
+    /// Class probabilities for a batch of flat images.
+    fn probs(&self, imgs: &[&[f32]]) -> Result<Vec<Vec<f64>>>;
+
+    /// The IG inner loop over one request's points: compute
+    /// `Σ_k w_k · ∂p_target/∂x |_{α_k} ⊙ (x − x')` plus the target-class
+    /// probability at every point.
+    ///
+    /// Implementations chunk internally to their executable width (zero
+    /// weight ⇒ padding lane ⇒ exactly no contribution).
+    fn ig_points(
+        &self,
+        x: &[f32],
+        baseline: &[f32],
+        alphas: &[f32],
+        weights: &[f32],
+        target: usize,
+    ) -> Result<IgPointsOut>;
+}
+
+/// Output of [`Model::ig_points`].
+#[derive(Debug, Clone)]
+pub struct IgPointsOut {
+    /// (F,) partial attribution, f64-accumulated.
+    pub partial: Vec<f64>,
+    /// Target-class probability at each requested point.
+    pub target_probs: Vec<f64>,
+}
+
+/// Closed-form test model: `p = softmax(gain · W · x / F)` with fixed
+/// pseudo-random per-class weight vectors.
+///
+/// Gradient (exact): `∂p_t/∂x_i = p_t (W_{t,i} − Σ_c p_c W_{c,i}) · gain / F`.
+pub struct AnalyticModel {
+    features: usize,
+    classes: usize,
+    /// (classes × features) row-major weights.
+    w: Vec<f32>,
+    gain: f64,
+}
+
+impl AnalyticModel {
+    /// Deterministic weights from `seed`; `gain` tunes softmax saturation
+    /// along the path (≈12 mimics the calibrated MiniInception).
+    pub fn new(features: usize, classes: usize, seed: u64, gain: f64) -> AnalyticModel {
+        let mut w = Vec::with_capacity(features * classes);
+        for c in 0..classes {
+            for i in 0..features {
+                let z = crate::data::synth::mix64(
+                    seed ^ (c as u64).wrapping_mul(0x9E3779B97F4A7C15)
+                        ^ (i as u64).wrapping_mul(0xBF58476D1CE4E5B9),
+                );
+                // Uniform in [-1, 1).
+                w.push(((z >> 40) as f32 / 8388608.0) - 1.0);
+            }
+        }
+        AnalyticModel { features, classes, w, gain }
+    }
+
+    /// Standard test instance matching the corpus dimensions.
+    pub fn standard() -> AnalyticModel {
+        AnalyticModel::new(crate::data::synth::F, crate::data::synth::NUM_CLASSES, 0xA11CE, 12.0)
+    }
+
+    fn logits(&self, x: &[f32]) -> Vec<f64> {
+        let f = self.features;
+        (0..self.classes)
+            .map(|c| {
+                let row = &self.w[c * f..(c + 1) * f];
+                let dot: f64 = row.iter().zip(x).map(|(&w, &v)| w as f64 * v as f64).sum();
+                self.gain * dot / f as f64
+            })
+            .collect()
+    }
+
+    fn softmax(logits: &[f64]) -> Vec<f64> {
+        let mx = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let e: Vec<f64> = logits.iter().map(|l| (l - mx).exp()).collect();
+        let s: f64 = e.iter().sum();
+        e.iter().map(|v| v / s).collect()
+    }
+
+    /// Exact gradient of p_target w.r.t. x at the given point.
+    pub fn grad(&self, x: &[f32], target: usize) -> Vec<f64> {
+        let p = Self::softmax(&self.logits(x));
+        let f = self.features;
+        let scale = self.gain / f as f64;
+        (0..f)
+            .map(|i| {
+                let wt = self.w[target * f + i] as f64;
+                let wavg: f64 =
+                    (0..self.classes).map(|c| p[c] * self.w[c * f + i] as f64).sum();
+                p[target] * (wt - wavg) * scale
+            })
+            .collect()
+    }
+}
+
+impl Model for AnalyticModel {
+    fn features(&self) -> usize {
+        self.features
+    }
+
+    fn num_classes(&self) -> usize {
+        self.classes
+    }
+
+    fn probs(&self, imgs: &[&[f32]]) -> Result<Vec<Vec<f64>>> {
+        imgs.iter()
+            .map(|img| {
+                ensure!(img.len() == self.features, "bad image width {}", img.len());
+                Ok(Self::softmax(&self.logits(img)))
+            })
+            .collect()
+    }
+
+    fn ig_points(
+        &self,
+        x: &[f32],
+        baseline: &[f32],
+        alphas: &[f32],
+        weights: &[f32],
+        target: usize,
+    ) -> Result<IgPointsOut> {
+        ensure!(x.len() == self.features && baseline.len() == self.features, "bad endpoint widths");
+        ensure!(alphas.len() == weights.len(), "alpha/weight length mismatch");
+        ensure!(target < self.classes, "target {target} out of range");
+        let f = self.features;
+        let mut partial = vec![0f64; f];
+        let mut target_probs = Vec::with_capacity(alphas.len());
+        let mut point = vec![0f32; f];
+        for (&a, &wgt) in alphas.iter().zip(weights) {
+            for i in 0..f {
+                point[i] = baseline[i] + a * (x[i] - baseline[i]);
+            }
+            let p = Self::softmax(&self.logits(&point));
+            target_probs.push(p[target]);
+            if wgt != 0.0 {
+                let g = self.grad(&point, target);
+                for i in 0..f {
+                    partial[i] += wgt as f64 * g[i] * (x[i] - baseline[i]) as f64;
+                }
+            }
+        }
+        Ok(IgPointsOut { partial, target_probs })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> AnalyticModel {
+        AnalyticModel::new(8, 3, 42, 6.0)
+    }
+
+    #[test]
+    fn probs_normalized() {
+        let m = tiny();
+        let x = vec![0.5f32; 8];
+        let p = &m.probs(&[&x]).unwrap()[0];
+        assert_eq!(p.len(), 3);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(p.iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn zero_input_uniform_probs() {
+        let m = tiny();
+        let p = &m.probs(&[&vec![0f32; 8]]).unwrap()[0];
+        for &v in p {
+            assert!((v - 1.0 / 3.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn grad_matches_finite_difference() {
+        let m = tiny();
+        let x: Vec<f32> = (0..8).map(|i| 0.1 * i as f32).collect();
+        let g = m.grad(&x, 1);
+        let eps = 1e-4f32;
+        for i in 0..8 {
+            let mut xp = x.clone();
+            xp[i] += eps;
+            let mut xm = x.clone();
+            xm[i] -= eps;
+            let pp = m.probs(&[&xp]).unwrap()[0][1];
+            let pm = m.probs(&[&xm]).unwrap()[0][1];
+            let fd = (pp - pm) / (2.0 * eps as f64);
+            // f32 inputs + central difference: ~1e-4-scale agreement.
+            assert!((g[i] - fd).abs() < 2e-4, "feature {i}: {} vs {fd}", g[i]);
+        }
+    }
+
+    #[test]
+    fn ig_points_zero_weights_no_contribution() {
+        let m = tiny();
+        let x = vec![0.7f32; 8];
+        let b = vec![0f32; 8];
+        let out = m.ig_points(&x, &b, &[0.5, 0.9], &[0.0, 0.0], 0).unwrap();
+        assert!(out.partial.iter().all(|&v| v == 0.0));
+        assert_eq!(out.target_probs.len(), 2);
+    }
+
+    #[test]
+    fn ig_points_weight_linearity() {
+        let m = tiny();
+        let x = vec![0.7f32; 8];
+        let b = vec![0f32; 8];
+        let o1 = m.ig_points(&x, &b, &[0.5], &[0.25], 0).unwrap();
+        let o2 = m.ig_points(&x, &b, &[0.5], &[0.5], 0).unwrap();
+        for i in 0..8 {
+            assert!((o2.partial[i] - 2.0 * o1.partial[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn saturation_along_path() {
+        // gain high enough that p(target) saturates before alpha = 1.
+        let m = AnalyticModel::new(64, 4, 7, 40.0);
+        let x: Vec<f32> = (0..64).map(|i| ((i * 37) % 64) as f32 / 64.0).collect();
+        let p1 = m.probs(&[&x]).unwrap()[0].clone();
+        let target = p1
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        let b = vec![0f32; 64];
+        let out = m
+            .ig_points(&x, &b, &[0.0, 0.25, 0.5, 0.75, 1.0], &[0.0; 5], target)
+            .unwrap();
+        let c = &out.target_probs;
+        let total = c[4] - c[0];
+        assert!(total > 0.1, "path must climb: {c:?}");
+        assert!((c[2] - c[0]) / total > 0.5, "early concentration expected: {c:?}");
+    }
+
+    #[test]
+    fn deterministic_weights() {
+        let a = AnalyticModel::new(8, 3, 42, 6.0);
+        let b = AnalyticModel::new(8, 3, 42, 6.0);
+        assert_eq!(a.w, b.w);
+        let c = AnalyticModel::new(8, 3, 43, 6.0);
+        assert_ne!(a.w, c.w);
+    }
+
+    #[test]
+    fn validation_errors() {
+        let m = tiny();
+        assert!(m.probs(&[&vec![0f32; 4]]).is_err());
+        let x = vec![0f32; 8];
+        assert!(m.ig_points(&x, &x, &[0.5], &[0.5, 0.5], 0).is_err());
+        assert!(m.ig_points(&x, &x, &[0.5], &[0.5], 9).is_err());
+        assert!(m.ig_points(&x, &vec![0f32; 4], &[0.5], &[0.5], 0).is_err());
+    }
+}

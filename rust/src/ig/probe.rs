@@ -1,0 +1,124 @@
+//! Stage 1: probe the interval boundaries and turn boundary probabilities
+//! into normalized interval deltas — the paper's information-content
+//! metric ("change in classification probability along the IG path").
+
+use anyhow::{ensure, Result};
+
+/// Result of probing `n_int + 1` boundary points.
+#[derive(Debug, Clone)]
+pub struct Probe {
+    /// Boundary alphas: 0, 1/n, ..., 1.
+    pub boundaries: Vec<f64>,
+    /// Target-class probability at each boundary.
+    pub probs: Vec<f64>,
+}
+
+impl Probe {
+    pub fn new(boundaries: Vec<f64>, probs: Vec<f64>) -> Result<Probe> {
+        ensure!(boundaries.len() == probs.len(), "boundary/prob length mismatch");
+        ensure!(boundaries.len() >= 2, "need at least 2 boundaries");
+        Ok(Probe { boundaries, probs })
+    }
+
+    pub fn n_int(&self) -> usize {
+        self.boundaries.len() - 1
+    }
+
+    /// Normalized |Δp| per interval (sums to 1; all-zero change falls back
+    /// to an even distribution, matching the Python reference).
+    pub fn interval_deltas(&self) -> Vec<f64> {
+        let n = self.n_int();
+        let raw: Vec<f64> = (0..n).map(|i| (self.probs[i + 1] - self.probs[i]).abs()).collect();
+        let total: f64 = raw.iter().sum();
+        if total > 0.0 {
+            raw.iter().map(|d| d / total).collect()
+        } else {
+            vec![1.0 / n as f64; n]
+        }
+    }
+
+    /// Endpoint probability gap `f(x) - f(x')` — the completeness target
+    /// of Eq. 3, read off the probe for free (boundary 0 is the baseline,
+    /// boundary n is the input).
+    pub fn endpoint_gap(&self) -> f64 {
+        self.probs[self.probs.len() - 1] - self.probs[0]
+    }
+
+    /// Fraction of the total probability change that happens in the
+    /// lowest-alpha `frac` of the path (Fig. 3's concentration statistic).
+    pub fn change_concentration(&self, frac: f64) -> f64 {
+        let total: f64 = self
+            .interval_deltas()
+            .iter()
+            .sum();
+        if total == 0.0 {
+            return 0.0;
+        }
+        let deltas = self.interval_deltas();
+        let mut acc = 0.0;
+        for (i, d) in deltas.iter().enumerate() {
+            let hi = self.boundaries[i + 1];
+            if hi <= frac + 1e-12 {
+                acc += d;
+            }
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn saturating_probe() -> Probe {
+        // Shape from the real model: sharp rise then saturation.
+        Probe::new(
+            vec![0.0, 0.25, 0.5, 0.75, 1.0],
+            vec![0.125, 0.82, 0.95, 0.98, 0.99],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn deltas_normalized() {
+        let p = saturating_probe();
+        let d = p.interval_deltas();
+        assert_eq!(d.len(), 4);
+        assert!((d.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(d[0] > 0.75, "first interval should dominate: {d:?}");
+    }
+
+    #[test]
+    fn deltas_use_abs() {
+        let p = Probe::new(vec![0.0, 0.5, 1.0], vec![0.5, 0.9, 0.6]).unwrap();
+        let d = p.interval_deltas();
+        assert!((d[0] - 0.4 / 0.7).abs() < 1e-12);
+        assert!((d[1] - 0.3 / 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn flat_path_even_fallback() {
+        let p = Probe::new(vec![0.0, 0.5, 1.0], vec![0.3, 0.3, 0.3]).unwrap();
+        assert_eq!(p.interval_deltas(), vec![0.5, 0.5]);
+    }
+
+    #[test]
+    fn endpoint_gap() {
+        assert!((saturating_probe().endpoint_gap() - (0.99 - 0.125)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn concentration() {
+        let p = saturating_probe();
+        let c = p.change_concentration(0.25);
+        assert!(c > 0.7, "{c}");
+        assert!((p.change_concentration(1.0) - 1.0).abs() < 1e-12);
+        assert_eq!(p.change_concentration(0.1), 0.0);
+    }
+
+    #[test]
+    fn validation() {
+        assert!(Probe::new(vec![0.0], vec![0.1]).is_err());
+        assert!(Probe::new(vec![0.0, 1.0], vec![0.1]).is_err());
+    }
+}

@@ -1,0 +1,171 @@
+//! Quadrature rules over the unit interval.
+//!
+//! The paper's Eq. 2 is the `Eq2` rule verbatim (all m+1 points at weight
+//! 1/m — note it over-counts: weights sum to (m+1)/m, one source of the
+//! baseline's completeness residual). `Trapezoid` is what Captum ships and
+//! what both engines here default to; `Left`/`Right` exist for the
+//! Riemann-rule ablation bench.
+
+use anyhow::{bail, Result};
+
+/// Quadrature rule for a uniform grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rule {
+    /// Left Riemann sum: points 0..m-1, weight 1/m.
+    Left,
+    /// Right Riemann sum: points 1..m, weight 1/m.
+    Right,
+    /// Trapezoid: half-weight endpoints (default; 2nd-order accurate).
+    Trapezoid,
+    /// The paper's literal Eq. 2: all m+1 points at weight 1/m.
+    Eq2,
+}
+
+impl std::fmt::Display for Rule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Rule::Left => "left",
+            Rule::Right => "right",
+            Rule::Trapezoid => "trapezoid",
+            Rule::Eq2 => "eq2",
+        };
+        write!(f, "{s}")
+    }
+}
+
+impl Rule {
+    pub fn parse(s: &str) -> Result<Rule> {
+        Ok(match s {
+            "left" => Rule::Left,
+            "right" => Rule::Right,
+            "trapezoid" => Rule::Trapezoid,
+            "eq2" => Rule::Eq2,
+            _ => bail!("unknown rule {s:?} (left|right|trapezoid|eq2)"),
+        })
+    }
+
+    /// Weights for a grid of `n_points = m + 1` uniform points covering a
+    /// unit interval. All rules except `Eq2` sum to exactly 1.
+    pub fn weights(&self, n_points: usize) -> Result<Vec<f64>> {
+        if n_points < 2 {
+            bail!("need at least 2 grid points, got {n_points}");
+        }
+        let m = (n_points - 1) as f64;
+        let mut w = vec![0.0; n_points];
+        match self {
+            Rule::Left => {
+                for wi in w.iter_mut().take(n_points - 1) {
+                    *wi = 1.0 / m;
+                }
+            }
+            Rule::Right => {
+                for wi in w.iter_mut().skip(1) {
+                    *wi = 1.0 / m;
+                }
+            }
+            Rule::Trapezoid => {
+                for wi in w.iter_mut() {
+                    *wi = 1.0 / m;
+                }
+                w[0] = 0.5 / m;
+                w[n_points - 1] = 0.5 / m;
+            }
+            Rule::Eq2 => {
+                for wi in w.iter_mut() {
+                    *wi = 1.0 / m;
+                }
+            }
+        }
+        Ok(w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil;
+
+    #[test]
+    fn weights_sum_to_one_except_eq2() {
+        for n in [2usize, 3, 9, 65] {
+            for rule in [Rule::Left, Rule::Right, Rule::Trapezoid] {
+                let s: f64 = rule.weights(n).unwrap().iter().sum();
+                assert!((s - 1.0).abs() < 1e-12, "{rule} n={n} sum={s}");
+            }
+            let s: f64 = Rule::Eq2.weights(n).unwrap().iter().sum();
+            let expect = n as f64 / (n as f64 - 1.0);
+            assert!((s - expect).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn left_right_structure() {
+        let l = Rule::Left.weights(5).unwrap();
+        assert_eq!(l[4], 0.0);
+        assert_eq!(l[0], 0.25);
+        let r = Rule::Right.weights(5).unwrap();
+        assert_eq!(r[0], 0.0);
+        assert_eq!(r[4], 0.25);
+    }
+
+    #[test]
+    fn trapezoid_endpoints() {
+        let w = Rule::Trapezoid.weights(5).unwrap();
+        assert_eq!(w[0], 0.125);
+        assert_eq!(w[4], 0.125);
+        assert_eq!(w[2], 0.25);
+    }
+
+    #[test]
+    fn rejects_tiny_grids() {
+        assert!(Rule::Trapezoid.weights(1).is_err());
+        assert!(Rule::Trapezoid.weights(0).is_err());
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for rule in [Rule::Left, Rule::Right, Rule::Trapezoid, Rule::Eq2] {
+            assert_eq!(Rule::parse(&rule.to_string()).unwrap(), rule);
+        }
+        assert!(Rule::parse("simpson").is_err());
+    }
+
+    #[test]
+    fn trapezoid_integrates_linear_exactly() {
+        // ∫0..1 (a + b t) dt = a + b/2, trapezoid is exact for degree 1.
+        testutil::prop(50, 99, |rng| {
+            let a = rng.range_f64(-2.0, 2.0);
+            let b = rng.range_f64(-2.0, 2.0);
+            let n = rng.range(2, 40);
+            let w = Rule::Trapezoid.weights(n).unwrap();
+            let m = (n - 1) as f64;
+            let quad: f64 = w
+                .iter()
+                .enumerate()
+                .map(|(k, wk)| wk * (a + b * k as f64 / m))
+                .sum();
+            let exact = a + b / 2.0;
+            assert!((quad - exact).abs() < 1e-10, "{quad} vs {exact}");
+        });
+    }
+
+    #[test]
+    fn left_right_bracket_monotone_integrand() {
+        // For increasing f, left sum underestimates, right overestimates.
+        let n = 33;
+        let f = |t: f64| t * t;
+        let exact = 1.0 / 3.0;
+        let m = (n - 1) as f64;
+        let sum_with = |rule: Rule| -> f64 {
+            rule.weights(n)
+                .unwrap()
+                .iter()
+                .enumerate()
+                .map(|(k, w)| w * f(k as f64 / m))
+                .sum()
+        };
+        assert!(sum_with(Rule::Left) < exact);
+        assert!(sum_with(Rule::Right) > exact);
+        assert!((sum_with(Rule::Trapezoid) - exact).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,197 @@
+//! Alpha/weight schedules: where on the IG path to evaluate gradients and
+//! with what quadrature weight.
+//!
+//! A [`Schedule`] is the fully-resolved plan for stage 2: a list of
+//! `(alpha, weight)` points whose weighted gradient sum approximates
+//! Eq. 1's integral. The uniform baseline is one grid over [0,1]; the
+//! paper's non-uniform schedule is the concatenation of per-interval
+//! uniform grids, each scaled by its interval width.
+
+use anyhow::{ensure, Result};
+
+use super::riemann::Rule;
+
+/// One gradient-evaluation point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Point {
+    /// Interpolation constant in [0, 1].
+    pub alpha: f64,
+    /// Quadrature weight (absorbs rule weight x interval width).
+    pub weight: f64,
+}
+
+/// A resolved evaluation plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Schedule {
+    pub points: Vec<Point>,
+    /// Grid-interval count(s) this schedule was built from, for reporting.
+    pub m_total: usize,
+}
+
+impl Schedule {
+    /// The baseline: a uniform grid of `m` intervals (`m+1` points) over
+    /// the full path.
+    pub fn uniform(m: usize, rule: Rule) -> Result<Schedule> {
+        Self::interval(0.0, 1.0, m, rule)
+    }
+
+    /// A uniform grid of `m` intervals over `[lo, hi]`, weights scaled by
+    /// the interval width so concatenated subpath schedules integrate the
+    /// full path (additivity of Eq. 1 over subpaths).
+    pub fn interval(lo: f64, hi: f64, m: usize, rule: Rule) -> Result<Schedule> {
+        ensure!(m >= 1, "need m >= 1 intervals, got {m}");
+        ensure!((0.0..=1.0).contains(&lo) && (0.0..=1.0).contains(&hi) && lo < hi,
+                "bad interval [{lo}, {hi}]");
+        let w = rule.weights(m + 1)?;
+        let width = hi - lo;
+        let points = (0..=m)
+            .map(|k| Point {
+                alpha: lo + width * (k as f64 / m as f64),
+                weight: w[k] * width,
+            })
+            .collect();
+        Ok(Schedule { points, m_total: m })
+    }
+
+    /// The paper's stage-2 schedule: per-interval uniform grids over the
+    /// equal-width probe intervals, with `alloc[i]` grid intervals each.
+    pub fn nonuniform(bounds: &[f64], alloc: &[usize], rule: Rule) -> Result<Schedule> {
+        ensure!(bounds.len() >= 2, "need at least one interval");
+        ensure!(alloc.len() == bounds.len() - 1, "alloc/bounds mismatch");
+        let mut points = Vec::new();
+        let mut m_total = 0;
+        for (i, &m_i) in alloc.iter().enumerate() {
+            let part = Self::interval(bounds[i], bounds[i + 1], m_i, rule)?;
+            points.extend(part.points);
+            m_total += m_i;
+        }
+        Ok(Schedule { points, m_total })
+    }
+
+    /// Equal-width probe boundaries for `n_int` intervals: 0, 1/n, .., 1.
+    pub fn probe_boundaries(n_int: usize) -> Vec<f64> {
+        (0..=n_int).map(|i| i as f64 / n_int as f64).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Total quadrature mass — the path-length covered. 1.0 for exact
+    /// rules over the full path ((m+1)/m for Eq2-built schedules).
+    pub fn total_weight(&self) -> f64 {
+        self.points.iter().map(|p| p.weight).sum()
+    }
+
+    /// Split into `(alphas, weights)` f32 vectors for the executables.
+    pub fn to_f32(&self) -> (Vec<f32>, Vec<f32>) {
+        (
+            self.points.iter().map(|p| p.alpha as f32).collect(),
+            self.points.iter().map(|p| p.weight as f32).collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ig::allocator::Allocation;
+    use crate::testutil;
+
+    #[test]
+    fn uniform_grid_points() {
+        let s = Schedule::uniform(4, Rule::Trapezoid).unwrap();
+        assert_eq!(s.len(), 5);
+        let alphas: Vec<f64> = s.points.iter().map(|p| p.alpha).collect();
+        assert_eq!(alphas, vec![0.0, 0.25, 0.5, 0.75, 1.0]);
+        assert!((s.total_weight() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn interval_scales_weights() {
+        let s = Schedule::interval(0.25, 0.5, 2, Rule::Trapezoid).unwrap();
+        assert_eq!(s.points[0].alpha, 0.25);
+        assert_eq!(s.points[2].alpha, 0.5);
+        assert!((s.total_weight() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nonuniform_covers_path() {
+        let bounds = Schedule::probe_boundaries(4);
+        let s = Schedule::nonuniform(&bounds, &[8, 4, 2, 2], Rule::Trapezoid).unwrap();
+        assert_eq!(s.m_total, 16);
+        assert_eq!(s.len(), 8 + 4 + 2 + 2 + 4); // sum(m_i + 1)
+        assert!((s.total_weight() - 1.0).abs() < 1e-12);
+        // Monotone within each interval, intervals ordered.
+        let alphas: Vec<f64> = s.points.iter().map(|p| p.alpha).collect();
+        let mut sorted = alphas.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(alphas, sorted);
+    }
+
+    #[test]
+    fn nonuniform_single_interval_is_uniform() {
+        let s1 = Schedule::nonuniform(&[0.0, 1.0], &[16], Rule::Trapezoid).unwrap();
+        let s2 = Schedule::uniform(16, Rule::Trapezoid).unwrap();
+        assert_eq!(s1, s2);
+    }
+
+    #[test]
+    fn probe_boundaries_shape() {
+        assert_eq!(Schedule::probe_boundaries(4), vec![0.0, 0.25, 0.5, 0.75, 1.0]);
+        assert_eq!(Schedule::probe_boundaries(1), vec![0.0, 1.0]);
+    }
+
+    #[test]
+    fn rejects_bad_intervals() {
+        assert!(Schedule::interval(0.5, 0.5, 2, Rule::Trapezoid).is_err());
+        assert!(Schedule::interval(0.5, 0.2, 2, Rule::Trapezoid).is_err());
+        assert!(Schedule::interval(0.0, 1.5, 2, Rule::Trapezoid).is_err());
+        assert!(Schedule::uniform(0, Rule::Trapezoid).is_err());
+        assert!(Schedule::nonuniform(&[0.0, 0.5, 1.0], &[2], Rule::Trapezoid).is_err());
+    }
+
+    #[test]
+    fn to_f32_parallel_arrays() {
+        let s = Schedule::uniform(2, Rule::Left).unwrap();
+        let (a, w) = s.to_f32();
+        assert_eq!(a, vec![0.0, 0.5, 1.0]);
+        assert_eq!(w, vec![0.5, 0.5, 0.0]);
+    }
+
+    #[test]
+    fn property_nonuniform_mass_and_bounds() {
+        testutil::prop(100, 21, |rng| {
+            let n_int = rng.range(1, 9);
+            let m = rng.range(n_int, 200);
+            let deltas: Vec<f64> = (0..n_int).map(|_| rng.range_f64(0.0, 1.0)).collect();
+            let alloc = Allocation::Sqrt.allocate(m, &deltas).unwrap();
+            let bounds = Schedule::probe_boundaries(n_int);
+            let s = Schedule::nonuniform(&bounds, &alloc, Rule::Trapezoid).unwrap();
+            assert_eq!(s.m_total, m);
+            assert!((s.total_weight() - 1.0).abs() < 1e-9);
+            assert!(s.points.iter().all(|p| (0.0..=1.0).contains(&p.alpha)));
+            assert!(s.points.first().unwrap().alpha == 0.0);
+            assert!((s.points.last().unwrap().alpha - 1.0).abs() < 1e-12);
+        });
+    }
+
+    #[test]
+    fn property_equal_deltas_reduce_to_uniform_mass() {
+        // With equal interval deltas the non-uniform schedule's quadrature
+        // mass distribution matches a uniform schedule of the same m
+        // (pointwise equality only when n_int divides m).
+        testutil::prop(50, 22, |rng| {
+            let n_int = rng.range(1, 6);
+            let m = n_int * rng.range(1, 20);
+            let alloc = Allocation::Sqrt.allocate(m, &vec![0.5; n_int]).unwrap();
+            assert!(alloc.iter().all(|&a| a == m / n_int));
+            let s = Schedule::nonuniform(&Schedule::probe_boundaries(n_int), &alloc, Rule::Trapezoid).unwrap();
+            assert!((s.total_weight() - 1.0).abs() < 1e-9);
+        });
+    }
+}

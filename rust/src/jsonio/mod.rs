@@ -1,0 +1,232 @@
+//! Minimal JSON: a recursive-descent parser and a writer.
+//!
+//! `serde`/`serde_json` are not in the vendored registry, and the repo's
+//! JSON needs are narrow and fully under our control (the AOT
+//! `manifest.json` / `testvectors.json` contracts, config files, and
+//! machine-readable bench output), so this module implements exactly
+//! RFC 8259 minus one liberty: numbers are always parsed as `f64`
+//! (every number we exchange is either small-integral or a float, and the
+//! Python side writes plain JSON floats).
+//!
+//! The API is a tree [`Json`] value with typed accessors that return
+//! `anyhow` errors carrying the access path, so a malformed manifest fails
+//! loudly with context instead of panicking mid-load.
+
+mod parse;
+mod write;
+
+pub use parse::parse;
+pub use write::to_string_pretty;
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A JSON value tree. Object keys are ordered (BTreeMap) so the writer is
+/// deterministic — bench outputs diff cleanly between runs.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    /// Parse from text. Convenience alias of [`parse`].
+    pub fn from_str(s: &str) -> Result<Json> {
+        parse(s)
+    }
+
+    /// Read and parse a file.
+    pub fn from_file(path: &std::path::Path) -> Result<Json> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    /// Serialize (pretty, deterministic key order).
+    pub fn to_string_pretty(&self) -> String {
+        to_string_pretty(self)
+    }
+
+    // ---- typed accessors -------------------------------------------------
+
+    pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Ok(m),
+            other => bail!("expected object, got {}", other.kind()),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[Json]> {
+        match self {
+            Json::Arr(v) => Ok(v),
+            other => bail!("expected array, got {}", other.kind()),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            other => bail!("expected string, got {}", other.kind()),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Json::Num(n) => Ok(*n),
+            other => bail!("expected number, got {}", other.kind()),
+        }
+    }
+
+    /// Number as usize; fails on negatives, non-integral, or out-of-range.
+    pub fn as_usize(&self) -> Result<usize> {
+        let n = self.as_f64()?;
+        if n < 0.0 || n.fract() != 0.0 || n > 2f64.powi(53) {
+            bail!("expected non-negative integer, got {n}");
+        }
+        Ok(n as usize)
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        let n = self.as_f64()?;
+        if n.fract() != 0.0 || n.abs() > 2f64.powi(53) {
+            bail!("expected integer, got {n}");
+        }
+        Ok(n as i64)
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            other => bail!("expected bool, got {}", other.kind()),
+        }
+    }
+
+    /// Object field access with path context in the error.
+    pub fn get(&self, key: &str) -> Result<&Json> {
+        self.as_obj()?
+            .get(key)
+            .ok_or_else(|| anyhow!("missing key {key:?}"))
+    }
+
+    /// Optional field: `None` if absent or null.
+    pub fn get_opt(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => match m.get(key) {
+                Some(Json::Null) | None => None,
+                Some(v) => Some(v),
+            },
+            _ => None,
+        }
+    }
+
+    /// Array of numbers as `Vec<f64>`.
+    pub fn as_f64_vec(&self) -> Result<Vec<f64>> {
+        self.as_arr()?.iter().map(|v| v.as_f64()).collect()
+    }
+
+    /// Array of numbers as `Vec<usize>`.
+    pub fn as_usize_vec(&self) -> Result<Vec<usize>> {
+        self.as_arr()?.iter().map(|v| v.as_usize()).collect()
+    }
+
+    fn kind(&self) -> &'static str {
+        match self {
+            Json::Null => "null",
+            Json::Bool(_) => "bool",
+            Json::Num(_) => "number",
+            Json::Str(_) => "string",
+            Json::Arr(_) => "array",
+            Json::Obj(_) => "object",
+        }
+    }
+
+    // ---- builders --------------------------------------------------------
+
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn arr_f64(vals: &[f64]) -> Json {
+        Json::Arr(vals.iter().map(|&v| Json::Num(v)).collect())
+    }
+
+    pub fn arr_usize(vals: &[usize]) -> Json {
+        Json::Arr(vals.iter().map(|&v| Json::Num(v as f64)).collect())
+    }
+}
+
+impl From<&str> for Json {
+    fn from(s: &str) -> Json {
+        Json::Str(s.to_string())
+    }
+}
+impl From<String> for Json {
+    fn from(s: String) -> Json {
+        Json::Str(s)
+    }
+}
+impl From<f64> for Json {
+    fn from(n: f64) -> Json {
+        Json::Num(n)
+    }
+}
+impl From<usize> for Json {
+    fn from(n: usize) -> Json {
+        Json::Num(n as f64)
+    }
+}
+impl From<bool> for Json {
+    fn from(b: bool) -> Json {
+        Json::Bool(b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn typed_accessors() {
+        let j = parse(r#"{"a": 1, "b": "x", "c": [1.5, 2], "d": true, "e": null}"#).unwrap();
+        assert_eq!(j.get("a").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(j.get("b").unwrap().as_str().unwrap(), "x");
+        assert_eq!(j.get("c").unwrap().as_f64_vec().unwrap(), vec![1.5, 2.0]);
+        assert!(j.get("d").unwrap().as_bool().unwrap());
+        assert!(j.get_opt("e").is_none());
+        assert!(j.get_opt("zz").is_none());
+        assert!(j.get("zz").is_err());
+    }
+
+    #[test]
+    fn as_usize_rejects_bad_numbers() {
+        assert!(Json::Num(-1.0).as_usize().is_err());
+        assert!(Json::Num(1.5).as_usize().is_err());
+        assert!(Json::Num(1e300).as_usize().is_err());
+        assert_eq!(Json::Num(0.0).as_usize().unwrap(), 0);
+    }
+
+    #[test]
+    fn as_i64_rejects_fractions() {
+        assert_eq!(Json::Num(-5.0).as_i64().unwrap(), -5);
+        assert!(Json::Num(0.25).as_i64().is_err());
+    }
+
+    #[test]
+    fn kind_errors_are_descriptive() {
+        let err = Json::Str("x".into()).as_f64().unwrap_err().to_string();
+        assert!(err.contains("expected number"), "{err}");
+        assert!(err.contains("string"), "{err}");
+    }
+
+    #[test]
+    fn builders() {
+        let j = Json::obj(vec![("xs", Json::arr_f64(&[1.0, 2.0])), ("n", 3usize.into())]);
+        assert_eq!(j.get("n").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(j.get("xs").unwrap().as_f64_vec().unwrap().len(), 2);
+    }
+}

@@ -1,0 +1,331 @@
+//! Recursive-descent JSON parser (RFC 8259; numbers always `f64`).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use super::Json;
+
+/// Parse a complete JSON document; trailing non-whitespace is an error.
+pub fn parse(s: &str) -> Result<Json> {
+    let mut p = Parser { b: s.as_bytes(), i: 0 };
+    p.skip_ws();
+    let v = p.value()?;
+    p.skip_ws();
+    if p.i != p.b.len() {
+        bail!("trailing characters at offset {}", p.i);
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn bump(&mut self) -> Result<u8> {
+        match self.b.get(self.i) {
+            Some(&c) => {
+                self.i += 1;
+                Ok(c)
+            }
+            None => bail!("unexpected end of input at offset {}", self.i),
+        }
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.i += 1;
+        }
+    }
+
+    fn expect(&mut self, c: u8) -> Result<()> {
+        let got = self.bump()?;
+        if got != c {
+            bail!("expected {:?} at offset {}, got {:?}", c as char, self.i - 1, got as char);
+        }
+        Ok(())
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            bail!("invalid literal at offset {}", self.i)
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            Some(c) => bail!("unexpected character {:?} at offset {}", c as char, self.i),
+            None => bail!("unexpected end of input"),
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut m = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(m));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let val = self.value()?;
+            m.insert(key, val);
+            self.skip_ws();
+            match self.bump()? {
+                b',' => continue,
+                b'}' => return Ok(Json::Obj(m)),
+                c => bail!("expected ',' or '}}' at offset {}, got {:?}", self.i - 1, c as char),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut v = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(v));
+        }
+        loop {
+            self.skip_ws();
+            v.push(self.value()?);
+            self.skip_ws();
+            match self.bump()? {
+                b',' => continue,
+                b']' => return Ok(Json::Arr(v)),
+                c => bail!("expected ',' or ']' at offset {}, got {:?}", self.i - 1, c as char),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let c = self.bump()?;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = self.bump()?;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{0008}'),
+                        b'f' => out.push('\u{000C}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            let cp = self.hex4()?;
+                            // Surrogate pair handling.
+                            if (0xD800..0xDC00).contains(&cp) {
+                                self.expect(b'\\')?;
+                                self.expect(b'u')?;
+                                let lo = self.hex4()?;
+                                if !(0xDC00..0xE000).contains(&lo) {
+                                    bail!("invalid low surrogate at offset {}", self.i);
+                                }
+                                let c = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                                out.push(char::from_u32(c).unwrap_or('\u{FFFD}'));
+                            } else if (0xDC00..0xE000).contains(&cp) {
+                                bail!("unpaired low surrogate at offset {}", self.i);
+                            } else {
+                                out.push(char::from_u32(cp).unwrap_or('\u{FFFD}'));
+                            }
+                        }
+                        _ => bail!("invalid escape at offset {}", self.i - 1),
+                    }
+                }
+                _ if c < 0x20 => bail!("raw control character in string at offset {}", self.i - 1),
+                _ => {
+                    // Re-decode UTF-8 multibyte sequences from the source.
+                    if c < 0x80 {
+                        out.push(c as char);
+                    } else {
+                        let start = self.i - 1;
+                        let len = utf8_len(c)?;
+                        let end = start + len;
+                        if end > self.b.len() {
+                            bail!("truncated UTF-8 at offset {start}");
+                        }
+                        let s = std::str::from_utf8(&self.b[start..end])
+                            .map_err(|_| anyhow::anyhow!("invalid UTF-8 at offset {start}"))?;
+                        out.push_str(s);
+                        self.i = end;
+                    }
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        let mut v = 0u32;
+        for _ in 0..4 {
+            let c = self.bump()?;
+            let d = (c as char).to_digit(16).ok_or_else(|| {
+                anyhow::anyhow!("invalid hex digit at offset {}", self.i - 1)
+            })?;
+            v = (v << 4) | d;
+        }
+        Ok(v)
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.i += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.i += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.i += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.i += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.i += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.i += 1;
+            }
+        }
+        let text = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        let n: f64 = text
+            .parse()
+            .map_err(|_| anyhow::anyhow!("invalid number {text:?} at offset {start}"))?;
+        Ok(Json::Num(n))
+    }
+}
+
+fn utf8_len(first: u8) -> Result<usize> {
+    match first {
+        0xC0..=0xDF => Ok(2),
+        0xE0..=0xEF => Ok(3),
+        0xF0..=0xF7 => Ok(4),
+        _ => bail!("invalid UTF-8 lead byte {first:#x}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars() {
+        assert_eq!(parse("null").unwrap(), Json::Null);
+        assert_eq!(parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(parse("false").unwrap(), Json::Bool(false));
+        assert_eq!(parse("42").unwrap(), Json::Num(42.0));
+        assert_eq!(parse("-1.5e3").unwrap(), Json::Num(-1500.0));
+        assert_eq!(parse("1e-3").unwrap(), Json::Num(0.001));
+        assert_eq!(parse(r#""hi""#).unwrap(), Json::Str("hi".into()));
+    }
+
+    #[test]
+    fn nested() {
+        let j = parse(r#"{"a":[1,{"b":[[]]},null]}"#).unwrap();
+        let a = j.get("a").unwrap().as_arr().unwrap();
+        assert_eq!(a.len(), 3);
+        assert_eq!(a[0], Json::Num(1.0));
+    }
+
+    #[test]
+    fn whitespace_everywhere() {
+        let j = parse(" \n\t{ \"a\" :\r [ 1 , 2 ] } \n").unwrap();
+        assert_eq!(j.get("a").unwrap().as_f64_vec().unwrap(), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn escapes() {
+        assert_eq!(
+            parse(r#""a\n\t\"\\A""#).unwrap(),
+            Json::Str("a\n\t\"\\A".into())
+        );
+    }
+
+    #[test]
+    fn surrogate_pairs() {
+        assert_eq!(parse(r#""😀""#).unwrap(), Json::Str("😀".into()));
+        assert!(parse(r#""\ud83d""#).is_err()); // truncated pair
+        assert!(parse(r#""\ude00""#).is_err()); // unpaired low
+    }
+
+    #[test]
+    fn unicode_passthrough() {
+        assert_eq!(parse(r#""héllo →""#).unwrap(), Json::Str("héllo →".into()));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse("").is_err());
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("{\"a\":}").is_err());
+        assert!(parse("tru").is_err());
+        assert!(parse("1 2").is_err());
+        assert!(parse("\"\u{0001}\"").is_err());
+        assert!(parse("nan").is_err());
+    }
+
+    #[test]
+    fn empty_containers() {
+        assert_eq!(parse("[]").unwrap(), Json::Arr(vec![]));
+        assert_eq!(parse("{}").unwrap(), Json::Obj(Default::default()));
+        assert_eq!(parse("[ ]").unwrap(), Json::Arr(vec![]));
+    }
+
+    #[test]
+    fn duplicate_keys_last_wins() {
+        let j = parse(r#"{"a":1,"a":2}"#).unwrap();
+        assert_eq!(j.get("a").unwrap().as_f64().unwrap(), 2.0);
+    }
+
+    #[test]
+    fn deep_nesting() {
+        let mut s = String::new();
+        for _ in 0..200 {
+            s.push('[');
+        }
+        for _ in 0..200 {
+            s.push(']');
+        }
+        assert!(parse(&s).is_ok());
+    }
+
+    #[test]
+    fn roundtrip_python_style_floats() {
+        // Values as json.dump writes them (repr shortest round-trip).
+        let j = parse("[0.33721342456146886, 903.1355427503586, 1e-07]").unwrap();
+        let v = j.as_f64_vec().unwrap();
+        assert_eq!(v[0], 0.33721342456146886);
+        assert_eq!(v[1], 903.1355427503586);
+        assert_eq!(v[2], 1e-7);
+    }
+}

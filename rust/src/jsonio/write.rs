@@ -1,0 +1,178 @@
+//! JSON writer: pretty, deterministic (BTreeMap key order), shortest
+//! round-trip float formatting via Rust's `{}` for f64 (same contract as
+//! Python's `repr`), so values survive a write→parse cycle bit-for-bit.
+
+use super::Json;
+
+/// Serialize with 1-space indentation (matches `json.dump(..., indent=1)`
+/// closely enough for eyeballing diffs against Python-written files).
+pub fn to_string_pretty(v: &Json) -> String {
+    let mut out = String::new();
+    write_value(v, 0, &mut out);
+    out
+}
+
+fn write_value(v: &Json, depth: usize, out: &mut String) {
+    match v {
+        Json::Null => out.push_str("null"),
+        Json::Bool(true) => out.push_str("true"),
+        Json::Bool(false) => out.push_str("false"),
+        Json::Num(n) => write_number(*n, out),
+        Json::Str(s) => write_string(s, out),
+        Json::Arr(items) => {
+            if items.is_empty() {
+                out.push_str("[]");
+                return;
+            }
+            out.push('[');
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push('\n');
+                indent(depth + 1, out);
+                write_value(item, depth + 1, out);
+            }
+            out.push('\n');
+            indent(depth, out);
+            out.push(']');
+        }
+        Json::Obj(map) => {
+            if map.is_empty() {
+                out.push_str("{}");
+                return;
+            }
+            out.push('{');
+            for (i, (k, val)) in map.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push('\n');
+                indent(depth + 1, out);
+                write_string(k, out);
+                out.push_str(": ");
+                write_value(val, depth + 1, out);
+            }
+            out.push('\n');
+            indent(depth, out);
+            out.push('}');
+        }
+    }
+}
+
+fn indent(depth: usize, out: &mut String) {
+    for _ in 0..depth {
+        out.push(' ');
+    }
+}
+
+fn write_number(n: f64, out: &mut String) {
+    if !n.is_finite() {
+        // JSON has no NaN/Inf; null is the least-bad lossy encoding and we
+        // never intentionally write non-finite values.
+        out.push_str("null");
+    } else if n == n.trunc() && n.abs() < 2f64.powi(53) {
+        out.push_str(&format!("{}", n as i64));
+    } else {
+        out.push_str(&format!("{n}"));
+    }
+}
+
+fn write_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::parse;
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let src = r#"{"a": [1, 2.5, -3e-4], "b": {"c": "x\ny", "d": null}, "e": true}"#;
+        let j = parse(src).unwrap();
+        let written = to_string_pretty(&j);
+        assert_eq!(parse(&written).unwrap(), j);
+    }
+
+    #[test]
+    fn integral_floats_written_as_ints() {
+        assert_eq!(to_string_pretty(&Json::Num(16.0)), "16");
+        assert_eq!(to_string_pretty(&Json::Num(-2.0)), "-2");
+    }
+
+    #[test]
+    fn shortest_roundtrip_floats() {
+        let v = 0.33721342456146886f64;
+        let s = to_string_pretty(&Json::Num(v));
+        assert_eq!(s.parse::<f64>().unwrap(), v);
+    }
+
+    #[test]
+    fn non_finite_becomes_null() {
+        assert_eq!(to_string_pretty(&Json::Num(f64::NAN)), "null");
+        assert_eq!(to_string_pretty(&Json::Num(f64::INFINITY)), "null");
+    }
+
+    #[test]
+    fn string_escaping() {
+        let j = Json::Str("a\"b\\c\nd\u{0007}".into());
+        let s = to_string_pretty(&j);
+        assert_eq!(parse(&s).unwrap(), j);
+        assert!(s.contains("\\u0007"));
+    }
+
+    #[test]
+    fn deterministic_key_order() {
+        let j = parse(r#"{"z":1,"a":2,"m":3}"#).unwrap();
+        let s = to_string_pretty(&j);
+        let za = s.find("\"a\"").unwrap();
+        let zm = s.find("\"m\"").unwrap();
+        let zz = s.find("\"z\"").unwrap();
+        assert!(za < zm && zm < zz);
+    }
+
+    #[test]
+    fn fuzz_roundtrip_seeded() {
+        // Seeded structural fuzz: build random trees, write, parse, compare.
+        let mut state = 0x12345678u64;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        for _ in 0..200 {
+            let tree = random_tree(&mut next, 3);
+            let s = to_string_pretty(&tree);
+            assert_eq!(parse(&s).unwrap(), tree, "failed for {s}");
+        }
+    }
+
+    fn random_tree(next: &mut impl FnMut() -> u64, depth: usize) -> Json {
+        match next() % if depth == 0 { 4 } else { 6 } {
+            0 => Json::Null,
+            1 => Json::Bool(next() % 2 == 0),
+            2 => Json::Num((next() % 100_000) as f64 / 7.0),
+            3 => Json::Str(format!("s{}-\"esc\\{}", next() % 100, next() % 10)),
+            4 => Json::Arr((0..next() % 4).map(|_| random_tree(next, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..next() % 4)
+                    .map(|i| (format!("k{i}"), random_tree(next, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+}

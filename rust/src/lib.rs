@@ -1,0 +1,35 @@
+//! # nuig — Non-Uniform Integrated Gradients, served.
+//!
+//! A three-layer reproduction of *"Non-Uniform Interpolation in Integrated
+//! Gradients for Low-Latency Explainable-AI"* (Bhat & Raychowdhury,
+//! ISCAS 2023):
+//!
+//! * **L1/L2 (build time)** — Pallas kernels + a JAX MiniInception model,
+//!   AOT-lowered to HLO text by `python/compile/aot.py`. Python never runs
+//!   at serving time.
+//! * **L3 (this crate)** — a Rust explanation-serving coordinator that
+//!   loads the AOT artifacts through PJRT (`runtime`), implements the
+//!   paper's two-stage non-uniform interpolation algorithm (`ig`), and
+//!   serves explanation requests with cross-request continuous batching
+//!   (`coordinator`).
+//!
+//! The supporting substrates (`jsonio`, `cli`, `exec`, `metrics`, `data`,
+//! `viz`, `bench`) are implemented from scratch: the build environment
+//! vendors only the `xla` crate closure, and a reproduction should own its
+//! substrate anyway.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod exec;
+pub mod ig;
+pub mod jsonio;
+pub mod metrics;
+pub mod runtime;
+pub mod testutil;
+pub mod viz;
+
+/// Crate-wide result alias (anyhow-backed; the only external dep besides xla).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,280 @@
+//! `nuig` — CLI for the non-uniform-IG explanation server.
+//!
+//! Subcommands:
+//!   info                         inspect artifacts + manifest
+//!   explain                      explain one synthetic image, print stats
+//!   serve                        run the coordinator over a request stream
+//!   sweep                        δ-vs-m convergence sweep (Fig. 5 data)
+//!   render                       write heatmap PPMs for a corpus sample
+//!
+//! `--help` on any subcommand prints usage. Benches live in `cargo bench`
+//! targets (one per paper figure); `examples/` hold the runnable demos.
+
+use anyhow::{bail, Result};
+
+use nuig::cli::Args;
+use nuig::config::CoordinatorConfig;
+use nuig::coordinator::{Coordinator, ExplainRequest, Policy};
+use nuig::data::{synth, Corpus};
+use nuig::ig::{self, convergence::ConvergencePolicy, ensemble, Allocation, BaselineKind, IgOptions, Rule, Scheme};
+use nuig::runtime::Runtime;
+use nuig::viz;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const USAGE: &str = "\
+nuig — Non-Uniform Integrated Gradients server (ISCAS'23 reproduction)
+
+USAGE: nuig <COMMAND> [OPTIONS]
+
+COMMANDS:
+  info      Show artifact manifest + runtime info
+  explain   Explain one synthetic image
+            [--class N] [--index N] [--scheme uniform|nonuniform:<n>]
+            [--m N] [--rule trapezoid|left|right|eq2]
+            [--allocation sqrt|linear|even] [--ascii]
+  serve     Serve a synthetic request stream through the coordinator
+            [--requests N] [--workers N] [--scheme S] [--m N]
+            [--batch-wait-us N] [--policy fifo|round-robin|shortest-first]
+  sweep     Convergence sweep: delta vs m for schemes
+            [--class N] [--grid 8,16,32,...] [--schemes uniform,nonuniform:4]
+  render    Write overlay heatmaps for the eval corpus
+            [--out-dir DIR] [--m N] [--scheme S]
+  adaptive  Explain to a convergence threshold (iso-convergence driver)
+            [--class N] [--delta-th F] [--scheme S]
+  ensemble  Multi-baseline / noise-tunnel attribution
+            [--class N] [--method baselines|noise] [--samples N]
+            [--sigma F] [--m N] [--scheme S]
+
+COMMON:
+  --artifacts DIR   artifact directory (default: artifacts)
+";
+
+fn run() -> Result<()> {
+    let mut args = Args::from_env()?;
+    let cmd = match args.command.clone() {
+        Some(c) => c,
+        None => {
+            print!("{USAGE}");
+            return Ok(());
+        }
+    };
+    if args.flag("help") {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let artifacts = args.opt_str("artifacts").unwrap_or_else(|| "artifacts".into());
+
+    match cmd.as_str() {
+        "info" => cmd_info(args, &artifacts),
+        "explain" => cmd_explain(args, &artifacts),
+        "serve" => cmd_serve(args, &artifacts),
+        "sweep" => cmd_sweep(args, &artifacts),
+        "render" => cmd_render(args, &artifacts),
+        "adaptive" => cmd_adaptive(args, &artifacts),
+        "ensemble" => cmd_ensemble(args, &artifacts),
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn parse_opts(args: &mut Args) -> Result<IgOptions> {
+    let scheme = Scheme::parse(&args.opt_str("scheme").unwrap_or_else(|| "nonuniform:4".into()))?;
+    let m = args.opt("m", 64usize)?;
+    let rule = Rule::parse(&args.opt_str("rule").unwrap_or_else(|| "trapezoid".into()))?;
+    let allocation =
+        Allocation::parse(&args.opt_str("allocation").unwrap_or_else(|| "sqrt".into()))?;
+    Ok(IgOptions { scheme, m, rule, allocation })
+}
+
+fn cmd_info(args: Args, artifacts: &str) -> Result<()> {
+    args.finish()?;
+    let rt = Runtime::load_default(artifacts)?;
+    let m = &rt.manifest;
+    println!("manifest version : {}", m.version);
+    println!("model            : MiniInception ({} params, sha256 {}…)", m.num_params, &m.params_sha256[..16]);
+    println!("input            : {}x{}x{} = {} features, {} classes", synth::H, synth::W, synth::C, m.features, m.num_classes);
+    println!("corpus checksum  : {} (verified)", m.corpus_checksum);
+    println!("jax (build time) : {}", m.jax_version);
+    println!("executables      :");
+    for (name, exe) in &m.executables {
+        println!("  {name:<14} kind={:<14} chunk={}", exe.kind, exe.chunk);
+    }
+    Ok(())
+}
+
+fn cmd_explain(mut args: Args, artifacts: &str) -> Result<()> {
+    let class = args.opt("class", 0usize)?;
+    let index = args.opt("index", 0usize)?;
+    let ascii = args.flag("ascii");
+    let opts = parse_opts(&mut args)?;
+    args.finish()?;
+
+    let rt = Runtime::load_default(artifacts)?;
+    let model = rt.model();
+    let img = synth::gen_image(class, index);
+    let t0 = std::time::Instant::now();
+    let attr = ig::explain(&model, &img, None, &opts)?;
+    let wall = t0.elapsed();
+
+    println!("image            : class {class} index {index}");
+    println!("scheme           : {} (rule={}, allocation={})", opts.scheme, opts.rule, opts.allocation);
+    println!("target class     : {}", attr.target);
+    println!("steps            : {} gradient evals + {} probe passes", attr.steps, attr.probe_passes);
+    println!("endpoint gap     : {:.6}", attr.endpoint_gap);
+    println!("attribution sum  : {:.6}", attr.sum());
+    println!("delta (Eq. 3)    : {:.6}  (relative {:.4})", attr.delta, attr.relative_delta());
+    println!("latency          : {wall:.2?} (probe {:.2?}, execute {:.2?})", attr.breakdown.probe, attr.breakdown.execute);
+    if ascii {
+        println!("\n{}", viz::ascii_heatmap(&attr.values)?);
+    }
+    Ok(())
+}
+
+fn cmd_serve(mut args: Args, artifacts: &str) -> Result<()> {
+    let requests = args.opt("requests", 32usize)?;
+    let workers = args.opt("workers", 2usize)?;
+    let batch_wait_us = args.opt("batch-wait-us", 200u64)?;
+    let policy = Policy::parse(&args.opt_str("policy").unwrap_or_else(|| "fifo".into()))?;
+    let opts = parse_opts(&mut args)?;
+    args.finish()?;
+
+    let rt = Runtime::load_default(artifacts)?;
+    let cfg = CoordinatorConfig { workers, batch_wait_us, policy, ..Default::default() };
+    let coord = Coordinator::start(&rt, cfg)?;
+
+    let corpus = Corpus::generate((requests / synth::NUM_CLASSES).max(1));
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..requests)
+        .map(|i| {
+            let img = corpus.images[i % corpus.len()].pixels.clone();
+            coord.submit(ExplainRequest::new(img, opts))
+        })
+        .collect::<Result<_>>()?;
+    let mut max_delta = 0f64;
+    for h in handles {
+        let resp = h.wait()?;
+        max_delta = max_delta.max(resp.attribution.delta);
+    }
+    let wall = t0.elapsed();
+
+    let stats = coord.stats();
+    println!("requests         : {requests} completed in {wall:.2?}");
+    println!("throughput       : {:.2} explanations/s", requests as f64 / wall.as_secs_f64());
+    println!("e2e latency      : {}", stats.e2e_latency.format_ms());
+    println!("queue wait       : {}", stats.queue_wait.format_ms());
+    println!("batch occupancy  : {:.1}%", 100.0 * stats.mean_occupancy(coord.config().chunk));
+    println!("max delta        : {max_delta:.6}");
+    let rstats = rt.stats();
+    println!("device execs     : {} total", rstats.total_executions());
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_sweep(mut args: Args, artifacts: &str) -> Result<()> {
+    let class = args.opt("class", 0usize)?;
+    let grid = args.opt_list("grid", &[8usize, 16, 32, 64, 128, 256])?;
+    let schemes_raw =
+        args.opt_str("schemes").unwrap_or_else(|| "uniform,nonuniform:2,nonuniform:4,nonuniform:8".into());
+    args.finish()?;
+    let schemes: Vec<Scheme> = schemes_raw
+        .split(',')
+        .map(Scheme::parse)
+        .collect::<Result<_>>()?;
+
+    let rt = Runtime::load_default(artifacts)?;
+    let model = rt.model();
+    let img = synth::gen_image(class, 0);
+
+    println!("{:>6} {:>24} {:>12} {:>8}", "m", "scheme", "delta", "steps");
+    for &m in &grid {
+        for &scheme in &schemes {
+            if let Scheme::NonUniform { n_int } = scheme {
+                if m < n_int {
+                    continue;
+                }
+            }
+            let opts = IgOptions { scheme, m, ..Default::default() };
+            let attr = ig::explain(&model, &img, None, &opts)?;
+            println!("{m:>6} {:>24} {:>12.6} {:>8}", scheme.to_string(), attr.delta, attr.steps);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_render(mut args: Args, artifacts: &str) -> Result<()> {
+    let out_dir = args.opt_str("out-dir").unwrap_or_else(|| "heatmaps".into());
+    let opts = parse_opts(&mut args)?;
+    args.finish()?;
+
+    let rt = Runtime::load_default(artifacts)?;
+    let model = rt.model();
+    std::fs::create_dir_all(&out_dir)?;
+    for li in Corpus::eval_set(8).iter() {
+        let attr = ig::explain(&model, &li.pixels, None, &opts)?;
+        let ppm = viz::render_overlay(&li.pixels, &attr.values, &Default::default())?;
+        let path = std::path::Path::new(&out_dir).join(format!("class{}_t{}.ppm", li.class, attr.target));
+        ppm.write(&path)?;
+        println!("wrote {} (delta {:.5})", path.display(), attr.delta);
+    }
+    Ok(())
+}
+
+fn cmd_adaptive(mut args: Args, artifacts: &str) -> Result<()> {
+    let class = args.opt("class", 0usize)?;
+    let delta_th = args.opt("delta-th", 0.01f64)?;
+    let opts = parse_opts(&mut args)?;
+    args.finish()?;
+
+    let rt = Runtime::load_default(artifacts)?;
+    let model = rt.model();
+    let img = synth::gen_image(class, 0);
+    let policy = ConvergencePolicy::new(delta_th);
+    let t0 = std::time::Instant::now();
+    let res = ig::explain_to_threshold(&model, &img, None, &opts, &policy)?;
+    let wall = t0.elapsed();
+
+    println!("threshold        : {delta_th}");
+    println!("converged        : {}", res.converged);
+    println!("rounds (m tried) : {:?}", res.rounds);
+    println!("final delta      : {:.6}", res.attribution.delta);
+    println!("final steps      : {} (total across rounds: {})", res.attribution.steps, res.total_steps);
+    println!("probe passes     : {} (stage 1 runs once, reused per round)", res.attribution.probe_passes);
+    println!("latency          : {wall:.2?}");
+    Ok(())
+}
+
+fn cmd_ensemble(mut args: Args, artifacts: &str) -> Result<()> {
+    let class = args.opt("class", 0usize)?;
+    let method = args.opt_str("method").unwrap_or_else(|| "baselines".into());
+    let samples = args.opt("samples", 3usize)?;
+    let sigma = args.opt("sigma", 0.05f32)?;
+    let opts = parse_opts(&mut args)?;
+    args.finish()?;
+
+    let rt = Runtime::load_default(artifacts)?;
+    let model = rt.model();
+    let img = synth::gen_image(class, 0);
+    let t0 = std::time::Instant::now();
+    let ens = match method.as_str() {
+        "baselines" => {
+            let set = BaselineKind::standard_set(samples.saturating_sub(2));
+            println!("baselines        : {}", set.iter().map(|b| b.to_string()).collect::<Vec<_>>().join(", "));
+            ensemble::multi_baseline(&model, &img, &set, &opts)?
+        }
+        "noise" => ensemble::noise_tunnel(&model, &img, samples, sigma, 0xCAFE, &opts)?,
+        other => bail!("unknown ensemble method {other:?} (baselines|noise)"),
+    };
+    let wall = t0.elapsed();
+    println!("method           : {method} ({} members)", ens.members);
+    println!("scheme           : {} (each member inherits the step savings)", opts.scheme);
+    println!("total steps      : {}", ens.attribution.steps);
+    println!("worst member dlt : {:.6}", ens.worst_member_delta);
+    println!("mean-attr sum    : {:.6} (gap {:.6})", ens.attribution.sum(), ens.attribution.endpoint_gap);
+    println!("latency          : {wall:.2?}");
+    Ok(())
+}

@@ -1,0 +1,224 @@
+//! Log-bucketed histogram for latencies (seconds) and other positive values.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Lock-free histogram over exponentially-spaced buckets.
+///
+/// Default layout covers 1 µs .. ~68 s with 8 buckets per octave —
+/// ~1.09x relative bucket width, i.e. ≤ ~9 % quantile error, plenty for
+/// serving percentiles. Values below/above range clamp to the edge
+/// buckets. Also tracks exact count/sum/min/max for an exact mean.
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    /// lower bound of bucket 0
+    base: f64,
+    /// buckets per doubling
+    per_octave: usize,
+    count: AtomicU64,
+    /// sum in nanos-like fixed point (1e-9 of unit)
+    sum_fp: AtomicU64,
+    min_fp: AtomicU64,
+    max_fp: AtomicU64,
+}
+
+const FP: f64 = 1e9; // fixed-point scale for sums (ns when unit is seconds)
+
+impl Histogram {
+    /// Latency histogram: unit = seconds, 1 µs .. ~68 s.
+    pub fn new_latency() -> Self {
+        Self::new(1e-6, 8, 8 * 26)
+    }
+
+    /// General histogram: `base` = smallest resolvable value,
+    /// `per_octave` buckets per doubling, `n_buckets` total.
+    pub fn new(base: f64, per_octave: usize, n_buckets: usize) -> Self {
+        assert!(base > 0.0 && per_octave >= 1 && n_buckets >= 2);
+        Histogram {
+            buckets: (0..n_buckets).map(|_| AtomicU64::new(0)).collect(),
+            base,
+            per_octave,
+            count: AtomicU64::new(0),
+            sum_fp: AtomicU64::new(0),
+            min_fp: AtomicU64::new(u64::MAX),
+            max_fp: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_index(&self, v: f64) -> usize {
+        if v <= self.base {
+            return 0;
+        }
+        let idx = ((v / self.base).log2() * self.per_octave as f64).floor() as isize;
+        idx.clamp(0, self.buckets.len() as isize - 1) as usize
+    }
+
+    /// Lower edge of bucket `i` (used when reporting quantiles).
+    fn bucket_value(&self, i: usize) -> f64 {
+        self.base * 2f64.powf(i as f64 / self.per_octave as f64)
+    }
+
+    pub fn record(&self, v: f64) {
+        if !v.is_finite() || v < 0.0 {
+            return; // defensive: never let a NaN poison percentiles
+        }
+        self.buckets[self.bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let fp = (v * FP) as u64;
+        self.sum_fp.fetch_add(fp, Ordering::Relaxed);
+        self.min_fp.fetch_min(fp, Ordering::Relaxed);
+        self.max_fp.fetch_max(fp, Ordering::Relaxed);
+    }
+
+    pub fn record_duration(&self, d: Duration) {
+        self.record(d.as_secs_f64());
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_fp.load(Ordering::Relaxed) as f64 / FP / n as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        let v = self.min_fp.load(Ordering::Relaxed);
+        if v == u64::MAX {
+            0.0
+        } else {
+            v as f64 / FP
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max_fp.load(Ordering::Relaxed) as f64 / FP
+    }
+
+    /// Approximate quantile `q` in [0,1] (bucket lower-edge estimate;
+    /// min/max exact at the extremes).
+    pub fn quantile(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        if q <= 0.0 {
+            return self.min();
+        }
+        if q >= 1.0 {
+            return self.max();
+        }
+        let rank = (q * n as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= rank {
+                return self.bucket_value(i).min(self.max()).max(self.min());
+            }
+        }
+        self.max()
+    }
+
+    /// p50/p95/p99 convenience tuple.
+    pub fn percentiles(&self) -> (f64, f64, f64) {
+        (self.quantile(0.50), self.quantile(0.95), self.quantile(0.99))
+    }
+
+    /// Human-readable one-liner for logs.
+    pub fn format_ms(&self) -> String {
+        let (p50, p95, p99) = self.percentiles();
+        format!(
+            "n={} mean={:.2}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms max={:.2}ms",
+            self.count(),
+            self.mean() * 1e3,
+            p50 * 1e3,
+            p95 * 1e3,
+            p99 * 1e3,
+            self.max() * 1e3
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty() {
+        let h = Histogram::new_latency();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn mean_exact() {
+        let h = Histogram::new_latency();
+        for v in [0.001, 0.002, 0.003] {
+            h.record(v);
+        }
+        assert!((h.mean() - 0.002).abs() < 1e-9);
+        assert!((h.min() - 0.001).abs() < 1e-9);
+        assert!((h.max() - 0.003).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantiles_within_bucket_error() {
+        let h = Histogram::new_latency();
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-3); // 1ms..1s uniform
+        }
+        let p50 = h.quantile(0.5);
+        assert!((p50 - 0.5).abs() / 0.5 < 0.15, "p50={p50}");
+        let p99 = h.quantile(0.99);
+        assert!((p99 - 0.99).abs() / 0.99 < 0.15, "p99={p99}");
+    }
+
+    #[test]
+    fn rejects_nan_and_negative() {
+        let h = Histogram::new_latency();
+        h.record(f64::NAN);
+        h.record(-1.0);
+        assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn clamps_out_of_range() {
+        let h = Histogram::new_latency();
+        h.record(1e-12);
+        h.record(1e6);
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile(0.0) < 1e-6 + 1e-9);
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        let h = std::sync::Arc::new(Histogram::new_latency());
+        let hs: Vec<_> = (0..4)
+            .map(|_| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for i in 1..=500 {
+                        h.record(i as f64 * 1e-5);
+                    }
+                })
+            })
+            .collect();
+        for t in hs {
+            t.join().unwrap();
+        }
+        assert_eq!(h.count(), 2000);
+    }
+
+    #[test]
+    fn format_ms_contains_fields() {
+        let h = Histogram::new_latency();
+        h.record(0.01);
+        let s = h.format_ms();
+        assert!(s.contains("n=1") && s.contains("p99="), "{s}");
+    }
+}

@@ -1,0 +1,195 @@
+//! Serving metrics: counters, latency histograms, percentiles, EWMA.
+//!
+//! The paper's evaluation protocol (PyTorch benchmark profiler: warm-up,
+//! multi-run averaging) is mirrored by `crate::bench`; this module is the
+//! *online* side — what the coordinator reports while serving. Everything
+//! is lock-cheap (atomics or a short Mutex) and allocation-free on the hot
+//! path once constructed.
+
+mod histogram;
+mod summary;
+
+pub use histogram::Histogram;
+pub use summary::Summary;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Monotonic event counter.
+#[derive(Default)]
+pub struct Counter {
+    n: AtomicU64,
+}
+
+impl Counter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&self) {
+        self.n.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, k: u64) {
+        self.n.fetch_add(k, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.n.load(Ordering::Relaxed)
+    }
+}
+
+/// Exponentially-weighted moving average (thread-safe, short critical
+/// section). Used for queue-depth and batch-occupancy gauges.
+pub struct Ewma {
+    alpha: f64,
+    state: Mutex<Option<f64>>,
+}
+
+impl Ewma {
+    /// `alpha` in (0, 1]; larger tracks faster.
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha must be in (0,1]");
+        Ewma { alpha, state: Mutex::new(None) }
+    }
+
+    pub fn observe(&self, v: f64) {
+        let mut s = self.state.lock().unwrap();
+        *s = Some(match *s {
+            None => v,
+            Some(prev) => prev + self.alpha * (v - prev),
+        });
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        *self.state.lock().unwrap()
+    }
+}
+
+/// RAII timer recording elapsed time into a [`Histogram`] on drop.
+pub struct Timer<'a> {
+    hist: &'a Histogram,
+    start: Instant,
+}
+
+impl<'a> Timer<'a> {
+    pub fn new(hist: &'a Histogram) -> Self {
+        Timer { hist, start: Instant::now() }
+    }
+
+    /// Elapsed so far, without stopping.
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+}
+
+impl Drop for Timer<'_> {
+    fn drop(&mut self) {
+        self.hist.record_duration(self.start.elapsed());
+    }
+}
+
+/// Fixed-stage latency breakdown for one request: probe / schedule /
+/// execute / reduce — the decomposition Fig. 6(b)'s overhead analysis
+/// needs (stage-1 time as a fraction of total).
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct StageBreakdown {
+    pub probe: Duration,
+    pub schedule: Duration,
+    pub execute: Duration,
+    pub reduce: Duration,
+}
+
+impl StageBreakdown {
+    pub fn total(&self) -> Duration {
+        self.probe + self.schedule + self.execute + self.reduce
+    }
+
+    /// Stage-1 (probe + schedule) share of total, in [0, 1].
+    pub fn stage1_fraction(&self) -> f64 {
+        let total = self.total().as_secs_f64();
+        if total == 0.0 {
+            return 0.0;
+        }
+        (self.probe + self.schedule).as_secs_f64() / total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn counter_threads() {
+        let c = std::sync::Arc::new(Counter::new());
+        let hs: Vec<_> = (0..8)
+            .map(|_| {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get(), 8000);
+    }
+
+    #[test]
+    fn ewma_converges() {
+        let e = Ewma::new(0.5);
+        assert_eq!(e.get(), None);
+        e.observe(10.0);
+        assert_eq!(e.get(), Some(10.0));
+        for _ in 0..50 {
+            e.observe(20.0);
+        }
+        assert!((e.get().unwrap() - 20.0).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn ewma_rejects_bad_alpha() {
+        Ewma::new(0.0);
+    }
+
+    #[test]
+    fn timer_records() {
+        let h = Histogram::new_latency();
+        {
+            let _t = Timer::new(&h);
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(h.count(), 1);
+        assert!(h.mean() >= 0.005);
+    }
+
+    #[test]
+    fn stage_breakdown_fraction() {
+        let b = StageBreakdown {
+            probe: Duration::from_millis(2),
+            schedule: Duration::from_millis(1),
+            execute: Duration::from_millis(90),
+            reduce: Duration::from_millis(7),
+        };
+        assert_eq!(b.total(), Duration::from_millis(100));
+        assert!((b.stage1_fraction() - 0.03).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stage_breakdown_zero_total() {
+        assert_eq!(StageBreakdown::default().stage1_fraction(), 0.0);
+    }
+}

@@ -1,0 +1,156 @@
+//! Exact small-sample summary statistics (for bench reporting, where we
+//! keep every observation; the serving path uses `Histogram` instead).
+
+/// Exact summary over a stored sample set.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    values: Vec<f64>,
+    sorted: bool,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_values(values: Vec<f64>) -> Self {
+        let mut s = Summary { values, sorted: false };
+        s.sort();
+        s
+    }
+
+    pub fn record(&mut self, v: f64) {
+        if v.is_finite() {
+            self.values.push(v);
+            self.sorted = false;
+        }
+    }
+
+    fn sort(&mut self) {
+        if !self.sorted {
+            self.values.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.values.is_empty() {
+            return 0.0;
+        }
+        self.values.iter().sum::<f64>() / self.values.len() as f64
+    }
+
+    /// Sample standard deviation (n-1 denominator; 0 for n < 2).
+    pub fn stddev(&self) -> f64 {
+        let n = self.values.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.values.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / (n - 1) as f64).sqrt()
+    }
+
+    pub fn min(&mut self) -> f64 {
+        self.sort();
+        self.values.first().copied().unwrap_or(0.0)
+    }
+
+    pub fn max(&mut self) -> f64 {
+        self.sort();
+        self.values.last().copied().unwrap_or(0.0)
+    }
+
+    /// Exact quantile with linear interpolation between order statistics.
+    pub fn quantile(&mut self, q: f64) -> f64 {
+        self.sort();
+        let n = self.values.len();
+        if n == 0 {
+            return 0.0;
+        }
+        if n == 1 {
+            return self.values[0];
+        }
+        let pos = q.clamp(0.0, 1.0) * (n - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        let frac = pos - lo as f64;
+        self.values[lo] * (1.0 - frac) + self.values[hi] * frac
+    }
+
+    pub fn median(&mut self) -> f64 {
+        self.quantile(0.5)
+    }
+
+    /// Relative spread: stddev / mean (coefficient of variation).
+    pub fn cv(&self) -> f64 {
+        let m = self.mean();
+        if m == 0.0 {
+            0.0
+        } else {
+            self.stddev() / m
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_stats() {
+        let mut s = Summary::from_values(vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.count(), 4);
+        assert_eq!(s.mean(), 2.5);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+        assert!((s.stddev() - 1.2909944).abs() < 1e-6);
+    }
+
+    #[test]
+    fn median_interpolates() {
+        let mut s = Summary::from_values(vec![1.0, 2.0, 3.0, 10.0]);
+        assert_eq!(s.median(), 2.5);
+        let mut s = Summary::from_values(vec![1.0, 2.0, 3.0]);
+        assert_eq!(s.median(), 2.0);
+    }
+
+    #[test]
+    fn quantile_edges() {
+        let mut s = Summary::from_values(vec![5.0, 1.0, 3.0]);
+        assert_eq!(s.quantile(0.0), 1.0);
+        assert_eq!(s.quantile(1.0), 5.0);
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        let mut s = Summary::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.median(), 0.0);
+        s.record(7.0);
+        assert_eq!(s.median(), 7.0);
+        assert_eq!(s.stddev(), 0.0);
+    }
+
+    #[test]
+    fn ignores_non_finite() {
+        let mut s = Summary::new();
+        s.record(f64::NAN);
+        s.record(f64::INFINITY);
+        s.record(2.0);
+        assert_eq!(s.count(), 1);
+    }
+
+    #[test]
+    fn unsorted_input_handled() {
+        let mut s = Summary::new();
+        for v in [9.0, 1.0, 5.0, 3.0, 7.0] {
+            s.record(v);
+        }
+        assert_eq!(s.median(), 5.0);
+        assert!((s.cv() - s.stddev() / 5.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,251 @@
+//! The AOT manifest: the contract between `python/compile/aot.py` and this
+//! runtime. Everything the Rust side needs to know about the artifacts —
+//! shapes, arg order, model dimensions, checksums — crosses here, so a
+//! stale or mismatched artifact directory fails at load with a pointed
+//! error instead of garbage numerics.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::data::synth;
+use crate::jsonio::Json;
+
+/// Manifest version this runtime understands (bump in lockstep with
+/// `python/compile/aot.py::MANIFEST_VERSION`).
+pub const SUPPORTED_VERSION: usize = 3;
+
+/// One executable's metadata.
+#[derive(Debug, Clone)]
+pub struct ExeMeta {
+    pub name: String,
+    pub file: PathBuf,
+    /// "fwd" | "igchunk" | "igchunk_multi"
+    pub kind: String,
+    /// Batch/chunk width K.
+    pub chunk: usize,
+    /// Arg shapes in call order (name, flat length).
+    pub args: Vec<(String, usize)>,
+    /// Output shapes in tuple order (name, flat length).
+    pub outputs: Vec<(String, usize)>,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: usize,
+    pub features: usize,
+    pub num_classes: usize,
+    pub num_params: usize,
+    pub params_sha256: String,
+    pub corpus_checksum: f64,
+    pub executables: BTreeMap<String, ExeMeta>,
+    pub jax_version: String,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let j = Json::from_file(&dir.join("manifest.json"))?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Manifest> {
+        let version = j.get("version")?.as_usize()?;
+        ensure!(
+            version == SUPPORTED_VERSION,
+            "manifest version {version} != supported {SUPPORTED_VERSION}; re-run `make artifacts`"
+        );
+        let model = j.get("model")?;
+        let corpus = j.get("corpus")?;
+
+        let mut executables = BTreeMap::new();
+        for (name, meta) in j.get("executables")?.as_obj()? {
+            let parse_io = |key: &str| -> Result<Vec<(String, usize)>> {
+                meta.get(key)?
+                    .as_arr()?
+                    .iter()
+                    .map(|a| {
+                        let nm = a.get("name")?.as_str()?.to_string();
+                        let shape = a.get("shape")?.as_usize_vec()?;
+                        ensure!(
+                            a.get("dtype")?.as_str()? == "f32",
+                            "only f32 artifacts supported"
+                        );
+                        Ok((nm, shape.iter().product()))
+                    })
+                    .collect()
+            };
+            executables.insert(
+                name.clone(),
+                ExeMeta {
+                    name: name.clone(),
+                    file: PathBuf::from(meta.get("file")?.as_str()?),
+                    kind: meta.get("kind")?.as_str()?.to_string(),
+                    chunk: meta.get("chunk")?.as_usize()?,
+                    args: parse_io("args").with_context(|| format!("executable {name}"))?,
+                    outputs: parse_io("outputs").with_context(|| format!("executable {name}"))?,
+                },
+            );
+        }
+
+        let m = Manifest {
+            version,
+            features: model.get("features")?.as_usize()?,
+            num_classes: model.get("num_classes")?.as_usize()?,
+            num_params: model.get("num_params")?.as_usize()?,
+            params_sha256: model.get("params_sha256")?.as_str()?.to_string(),
+            corpus_checksum: corpus.get("checksum_per_class_2")?.as_f64()?,
+            executables,
+            jax_version: j
+                .get_opt("jax_version")
+                .and_then(|v| v.as_str().ok().map(String::from))
+                .unwrap_or_default(),
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn validate(&self) -> Result<()> {
+        ensure!(self.features == synth::F, "manifest features {} != {}", self.features, synth::F);
+        ensure!(
+            self.num_classes == synth::NUM_CLASSES,
+            "manifest classes {} != {}",
+            self.num_classes,
+            synth::NUM_CLASSES
+        );
+        for required in ["fwd_b1", "fwd_b16", "igchunk_b1", "igchunk_b16", "igchunk_m16"] {
+            ensure!(
+                self.executables.contains_key(required),
+                "manifest missing executable {required:?}; re-run `make artifacts`"
+            );
+        }
+        // Spot-check the igchunk contract the runtime hard-codes.
+        let ig = &self.executables["igchunk_b16"];
+        ensure!(ig.chunk == 16, "igchunk_b16 chunk {} != 16", ig.chunk);
+        ensure!(ig.args.len() == 6, "igchunk_b16 expects 6 args, manifest says {}", ig.args.len());
+        ensure!(ig.outputs.len() == 2, "igchunk_b16 expects 2 outputs");
+        ensure!(ig.outputs[0].1 == self.features, "igchunk partial width mismatch");
+        Ok(())
+    }
+
+    /// Load and length-check `params.bin` (little-endian f32).
+    pub fn load_params(&self, dir: &Path) -> Result<Vec<f32>> {
+        let path = dir.join("params.bin");
+        let bytes = std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+        if bytes.len() != 4 * self.num_params {
+            bail!(
+                "params.bin is {} bytes, expected {} ({} f32)",
+                bytes.len(),
+                4 * self.num_params,
+                self.num_params
+            );
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Re-derive the corpus checksum locally and compare — catches any
+    /// drift between the Python and Rust synthetic generators.
+    pub fn verify_corpus(&self) -> Result<()> {
+        let local = synth::corpus_checksum(2);
+        ensure!(
+            (local - self.corpus_checksum).abs() < 1e-9,
+            "corpus checksum mismatch: python wrote {}, rust derives {local} — \
+             the synthetic generators have drifted",
+            self.corpus_checksum
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jsonio;
+
+    fn minimal_manifest_json() -> String {
+        let exe = |name: &str, kind: &str, chunk: usize| {
+            format!(
+                r#""{name}": {{"file": "{name}.hlo.txt", "kind": "{kind}", "chunk": {chunk},
+                 "args": [{{"name": "params", "shape": [29678], "dtype": "f32"}},
+                          {{"name": "x", "shape": [3072], "dtype": "f32"}},
+                          {{"name": "baseline", "shape": [3072], "dtype": "f32"}},
+                          {{"name": "alphas", "shape": [{chunk}], "dtype": "f32"}},
+                          {{"name": "weights", "shape": [{chunk}], "dtype": "f32"}},
+                          {{"name": "onehot", "shape": [8], "dtype": "f32"}}],
+                 "outputs": [{{"name": "partial", "shape": [3072], "dtype": "f32"}},
+                             {{"name": "probs", "shape": [{chunk}, 8], "dtype": "f32"}}]}}"#
+            )
+        };
+        format!(
+            r#"{{"version": 3,
+                "model": {{"features": 3072, "num_classes": 8, "num_params": 29678,
+                           "params_sha256": "ab"}},
+                "corpus": {{"checksum_per_class_2": {}}},
+                "executables": {{{}, {}, {}, {}, {}}},
+                "jax_version": "0.8.2"}}"#,
+            synth::corpus_checksum(2),
+            exe("fwd_b1", "fwd", 1),
+            exe("fwd_b16", "fwd", 16),
+            exe("igchunk_b1", "igchunk", 1),
+            exe("igchunk_b16", "igchunk", 16),
+            exe("igchunk_m16", "igchunk_multi", 16),
+        )
+    }
+
+    #[test]
+    fn parses_minimal() {
+        let j = jsonio::parse(&minimal_manifest_json()).unwrap();
+        let m = Manifest::from_json(&j).unwrap();
+        assert_eq!(m.features, 3072);
+        assert_eq!(m.executables.len(), 5);
+        assert_eq!(m.executables["igchunk_b16"].args[0].1, 29678);
+        m.verify_corpus().unwrap();
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let s = minimal_manifest_json().replace("\"version\": 3", "\"version\": 99");
+        let j = jsonio::parse(&s).unwrap();
+        let err = Manifest::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn rejects_missing_executable() {
+        let s = minimal_manifest_json().replace("igchunk_m16", "renamed_exe");
+        let j = jsonio::parse(&s).unwrap();
+        let err = Manifest::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("igchunk_m16"), "{err}");
+    }
+
+    #[test]
+    fn rejects_wrong_features() {
+        let s = minimal_manifest_json().replace("\"features\": 3072", "\"features\": 100");
+        let j = jsonio::parse(&s).unwrap();
+        assert!(Manifest::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn corpus_mismatch_detected() {
+        let s = minimal_manifest_json();
+        let j = jsonio::parse(&s).unwrap();
+        let mut m = Manifest::from_json(&j).unwrap();
+        m.corpus_checksum += 0.1;
+        assert!(m.verify_corpus().is_err());
+    }
+
+    #[test]
+    fn load_params_length_check() {
+        let dir = std::env::temp_dir().join("nuig_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("params.bin"), [0u8; 12]).unwrap();
+        let j = jsonio::parse(&minimal_manifest_json()).unwrap();
+        let m = Manifest::from_json(&j).unwrap();
+        let err = m.load_params(&dir).unwrap_err().to_string();
+        assert!(err.contains("12 bytes"), "{err}");
+    }
+}

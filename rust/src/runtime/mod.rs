@@ -1,0 +1,76 @@
+//! PJRT runtime: load the AOT artifacts and serve executions from a
+//! dedicated device thread.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), which is an
+//! accurate model of the underlying device anyway: one accelerator, one
+//! submission stream. The runtime therefore spawns ONE device thread that
+//! owns the client, the compiled executables, and the resident parameter
+//! literal; everything else talks to it through a channel of [`Job`]s.
+//! On CPU-PJRT this costs one channel hop (~µs) per multi-millisecond
+//! execution and lets XLA's intra-op thread pool own the cores.
+//!
+//! Loading path (see /opt/xla-example/README.md for the gotchas):
+//! HLO **text** → `HloModuleProto::from_text_file` → `XlaComputation` →
+//! `client.compile`. The AOT side lowers with `return_tuple=True`, so
+//! every executable returns a tuple literal that the device thread
+//! unpacks into flat `f32` vectors.
+
+mod manifest;
+mod pjrt_model;
+mod service;
+
+pub use manifest::{ExeMeta, Manifest};
+pub use pjrt_model::{PjrtModel, ProbeMode, PROBE_BATCH_CROSSOVER};
+pub use service::{Arg, ExeKind, RuntimeHandle, RuntimeStats};
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+/// A loaded runtime: manifest + live device thread.
+pub struct Runtime {
+    pub manifest: Manifest,
+    handle: RuntimeHandle,
+}
+
+impl Runtime {
+    /// Load manifest, params and all executables from `dir`; verify the
+    /// cross-language corpus checksum.
+    pub fn load_default<P: AsRef<Path>>(dir: P) -> Result<Runtime> {
+        Self::load(dir, true)
+    }
+
+    /// Load with optional corpus verification (benches skip it to start
+    /// faster; tests exercise both paths).
+    pub fn load<P: AsRef<Path>>(dir: P, verify_corpus: bool) -> Result<Runtime> {
+        let dir = dir.as_ref();
+        let manifest = Manifest::load(dir).with_context(|| {
+            format!(
+                "loading AOT manifest from {} (run `make artifacts` first)",
+                dir.display()
+            )
+        })?;
+        if verify_corpus {
+            manifest.verify_corpus()?;
+        }
+        let params = manifest.load_params(dir)?;
+        let handle = service::spawn(dir, &manifest, params)?;
+        Ok(Runtime { manifest, handle })
+    }
+
+    /// Handle for raw executions (the coordinator uses this directly).
+    pub fn handle(&self) -> RuntimeHandle {
+        self.handle.clone()
+    }
+
+    /// An [`crate::ig::Model`] over this runtime (default probe mode).
+    pub fn model(&self) -> PjrtModel {
+        PjrtModel::new(self.handle.clone(), self.manifest.features, self.manifest.num_classes)
+    }
+
+    /// Cumulative execution statistics from the device thread.
+    pub fn stats(&self) -> Arc<RuntimeStats> {
+        self.handle.stats()
+    }
+}

@@ -1,0 +1,175 @@
+//! [`crate::ig::Model`] implementation over the PJRT runtime: chunking,
+//! padding, and f64 accumulation around the raw executables.
+
+use anyhow::{ensure, Result};
+
+use crate::ig::model::{IgPointsOut, Model};
+
+use super::service::{Arg, ExeKind, RuntimeHandle};
+
+/// How stage-1 probes (and `probs` generally) hit the device.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProbeMode {
+    /// Cost-based (default): sequential `fwd_b1` below the crossover
+    /// batch size, padded `fwd_b16` above it. PERF: on CPU-PJRT a padded
+    /// lane costs real compute (~0.75 ms), so a 5-boundary probe is ~2x
+    /// cheaper as five batch-1 calls (5 x ~1.0 ms) than as one padded
+    /// batch-16 call (~12 ms). See EXPERIMENTS.md §Perf.
+    Auto,
+    /// Always pack into `fwd_b16` (padding unused lanes).
+    Batched,
+    /// One `fwd_b1` call per image — the paper's literal protocol ("we
+    /// run the inference pass through the network n_int + 1 times"),
+    /// kept for the Fig. 6b overhead-scaling reproduction.
+    Sequential,
+}
+
+/// Batch size at/above which padded `fwd_b16` beats sequential `fwd_b1`
+/// (measured crossover: 16 x ~0.75ms/lane batched vs ~1.0ms/call).
+pub const PROBE_BATCH_CROSSOVER: usize = 12;
+
+/// The serving-path model: MiniInception via AOT executables.
+pub struct PjrtModel {
+    handle: RuntimeHandle,
+    features: usize,
+    num_classes: usize,
+    pub probe_mode: ProbeMode,
+    /// Chunk width of the batched executables (16, from the manifest).
+    pub chunk: usize,
+}
+
+impl PjrtModel {
+    pub fn new(handle: RuntimeHandle, features: usize, num_classes: usize) -> PjrtModel {
+        PjrtModel { handle, features, num_classes, probe_mode: ProbeMode::Auto, chunk: 16 }
+    }
+
+    pub fn with_probe_mode(mut self, mode: ProbeMode) -> PjrtModel {
+        self.probe_mode = mode;
+        self
+    }
+
+    fn probs_batched(&self, imgs: &[&[f32]]) -> Result<Vec<Vec<f64>>> {
+        let mut out = Vec::with_capacity(imgs.len());
+        for group in imgs.chunks(self.chunk) {
+            let mut flat = vec![0f32; self.chunk * self.features];
+            for (k, img) in group.iter().enumerate() {
+                flat[k * self.features..(k + 1) * self.features].copy_from_slice(img);
+            }
+            let outs = self
+                .handle
+                .execute(ExeKind::Fwd16, vec![Arg::mat(flat, self.chunk, self.features)])?;
+            let probs = &outs[0];
+            for k in 0..group.len() {
+                out.push(
+                    probs[k * self.num_classes..(k + 1) * self.num_classes]
+                        .iter()
+                        .map(|&v| v as f64)
+                        .collect(),
+                );
+            }
+        }
+        Ok(out)
+    }
+
+    fn probs_sequential(&self, imgs: &[&[f32]]) -> Result<Vec<Vec<f64>>> {
+        imgs.iter()
+            .map(|img| {
+                let outs = self
+                    .handle
+                    .execute(ExeKind::Fwd1, vec![Arg::mat(img.to_vec(), 1, self.features)])?;
+                Ok(outs[0].iter().map(|&v| v as f64).collect())
+            })
+            .collect()
+    }
+}
+
+impl Model for PjrtModel {
+    fn features(&self) -> usize {
+        self.features
+    }
+
+    fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    fn probs(&self, imgs: &[&[f32]]) -> Result<Vec<Vec<f64>>> {
+        for img in imgs {
+            ensure!(img.len() == self.features, "image width {} != {}", img.len(), self.features);
+        }
+        match self.probe_mode {
+            ProbeMode::Auto => {
+                if imgs.len() < PROBE_BATCH_CROSSOVER {
+                    self.probs_sequential(imgs)
+                } else {
+                    self.probs_batched(imgs)
+                }
+            }
+            ProbeMode::Batched => self.probs_batched(imgs),
+            ProbeMode::Sequential => self.probs_sequential(imgs),
+        }
+    }
+
+    fn ig_points(
+        &self,
+        x: &[f32],
+        baseline: &[f32],
+        alphas: &[f32],
+        weights: &[f32],
+        target: usize,
+    ) -> Result<IgPointsOut> {
+        ensure!(x.len() == self.features && baseline.len() == self.features, "endpoint width mismatch");
+        ensure!(alphas.len() == weights.len(), "alpha/weight length mismatch");
+        ensure!(target < self.num_classes, "target {target} out of range");
+
+        let mut onehot = vec![0f32; self.num_classes];
+        onehot[target] = 1.0;
+
+        let mut partial = vec![0f64; self.features];
+        let mut target_probs = Vec::with_capacity(alphas.len());
+
+        for (a_chunk, w_chunk) in alphas.chunks(self.chunk).zip(weights.chunks(self.chunk)) {
+            let n = a_chunk.len();
+            // Pad ragged tails with zero-weight lanes (exactly no
+            // contribution; validated by the kernel tests on both sides).
+            let mut a = vec![0f32; self.chunk];
+            let mut w = vec![0f32; self.chunk];
+            a[..n].copy_from_slice(a_chunk);
+            w[..n].copy_from_slice(w_chunk);
+
+            let outs = self.handle.execute(
+                ExeKind::IgChunk16,
+                vec![
+                    Arg::vec(x.to_vec()),
+                    Arg::vec(baseline.to_vec()),
+                    Arg::vec(a),
+                    Arg::vec(w),
+                    Arg::vec(onehot.clone()),
+                ],
+            )?;
+            let chunk_partial = &outs[0];
+            let probs = &outs[1];
+            ensure!(chunk_partial.len() == self.features, "bad partial width");
+            for (acc, &v) in partial.iter_mut().zip(chunk_partial) {
+                *acc += v as f64;
+            }
+            for k in 0..n {
+                target_probs.push(probs[k * self.num_classes + target] as f64);
+            }
+        }
+        Ok(IgPointsOut { partial, target_probs })
+    }
+}
+
+// Execution-path tests live in rust/tests/runtime_artifacts.rs (need real
+// artifacts); here we only cover pure helpers via the public contract.
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn probe_mode_is_copy_eq() {
+        use super::ProbeMode;
+        let m = ProbeMode::Batched;
+        let n = m;
+        assert_eq!(m, n);
+        assert_ne!(ProbeMode::Batched, ProbeMode::Sequential);
+    }
+}

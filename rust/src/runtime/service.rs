@@ -1,0 +1,348 @@
+//! The device thread: owns the PJRT client + executables, executes jobs
+//! from a channel. See `runtime/mod.rs` for why this is a single thread.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::exec::channel::{bounded, Sender};
+use crate::metrics::{Counter, Histogram};
+
+use super::manifest::Manifest;
+
+/// Which compiled executable a job targets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ExeKind {
+    Fwd1,
+    Fwd16,
+    IgChunk1,
+    IgChunk16,
+    IgChunkMulti16,
+}
+
+impl ExeKind {
+    pub fn manifest_name(&self) -> &'static str {
+        match self {
+            ExeKind::Fwd1 => "fwd_b1",
+            ExeKind::Fwd16 => "fwd_b16",
+            ExeKind::IgChunk1 => "igchunk_b1",
+            ExeKind::IgChunk16 => "igchunk_b16",
+            ExeKind::IgChunkMulti16 => "igchunk_m16",
+        }
+    }
+
+    pub const ALL: [ExeKind; 5] =
+        [ExeKind::Fwd1, ExeKind::Fwd16, ExeKind::IgChunk1, ExeKind::IgChunk16, ExeKind::IgChunkMulti16];
+
+    fn index(&self) -> usize {
+        match self {
+            ExeKind::Fwd1 => 0,
+            ExeKind::Fwd16 => 1,
+            ExeKind::IgChunk1 => 2,
+            ExeKind::IgChunk16 => 3,
+            ExeKind::IgChunkMulti16 => 4,
+        }
+    }
+}
+
+/// One argument: flat f32 data + dims to reshape to (rank 1 or 2).
+#[derive(Debug, Clone)]
+pub struct Arg {
+    pub data: Vec<f32>,
+    pub dims: Vec<usize>,
+}
+
+impl Arg {
+    pub fn vec(data: Vec<f32>) -> Arg {
+        let n = data.len();
+        Arg { data, dims: vec![n] }
+    }
+
+    pub fn mat(data: Vec<f32>, rows: usize, cols: usize) -> Arg {
+        assert_eq!(data.len(), rows * cols, "matrix arg size mismatch");
+        Arg { data, dims: vec![rows, cols] }
+    }
+}
+
+struct Job {
+    kind: ExeKind,
+    /// Args EXCLUDING the leading params (the device thread prepends the
+    /// resident parameter buffer).
+    args: Vec<Arg>,
+    reply: Sender<Result<Vec<Vec<f32>>>>,
+}
+
+impl ExeKind {
+    /// Forward-only probes are latency-critical (they gate a request's
+    /// schedule fan-out) and ~30x cheaper than gradient chunks, so they
+    /// jump the device queue. PERF: without this, a sequential 5-boundary
+    /// probe waits behind up to 5 in-flight ~30 ms gradient chunks.
+    fn is_priority(&self) -> bool {
+        matches!(self, ExeKind::Fwd1 | ExeKind::Fwd16)
+    }
+}
+
+/// Cumulative per-executable execution statistics (shared, lock-free).
+pub struct RuntimeStats {
+    pub exec_count: [Counter; 5],
+    pub exec_latency: [Histogram; 5],
+    pub queue_wait: Histogram,
+}
+
+impl RuntimeStats {
+    fn new() -> Self {
+        RuntimeStats {
+            exec_count: std::array::from_fn(|_| Counter::new()),
+            exec_latency: std::array::from_fn(|_| Histogram::new_latency()),
+            queue_wait: Histogram::new_latency(),
+        }
+    }
+
+    pub fn count(&self, kind: ExeKind) -> u64 {
+        self.exec_count[kind.index()].get()
+    }
+
+    pub fn latency(&self, kind: ExeKind) -> &Histogram {
+        &self.exec_latency[kind.index()]
+    }
+
+    pub fn total_executions(&self) -> u64 {
+        self.exec_count.iter().map(|c| c.get()).sum()
+    }
+}
+
+/// Clonable handle to the device thread.
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    tx_hi: Sender<Job>,
+    tx_lo: Sender<Job>,
+    stats: Arc<RuntimeStats>,
+    features: usize,
+    num_classes: usize,
+}
+
+impl RuntimeHandle {
+    /// Execute `kind` with `args` (params prepended device-side); returns
+    /// the tuple outputs as flat f32 vectors. Forward probes take the
+    /// priority queue (see `ExeKind::is_priority`).
+    pub fn execute(&self, kind: ExeKind, args: Vec<Arg>) -> Result<Vec<Vec<f32>>> {
+        let (rtx, rrx) = bounded(1);
+        let tx = if kind.is_priority() { &self.tx_hi } else { &self.tx_lo };
+        tx.send(Job { kind, args, reply: rtx })
+            .map_err(|_| anyhow!("runtime device thread is down"))?;
+        rrx.recv().map_err(|_| anyhow!("runtime device thread dropped the reply"))?
+    }
+
+    pub fn stats(&self) -> Arc<RuntimeStats> {
+        self.stats.clone()
+    }
+
+    pub fn features(&self) -> usize {
+        self.features
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+}
+
+/// Spawn the device thread: compile all executables, pin params, serve.
+pub fn spawn(dir: &Path, manifest: &Manifest, params: Vec<f32>) -> Result<RuntimeHandle> {
+    let (tx_hi, rx_hi) = bounded::<Job>(64);
+    let (tx_lo, rx_lo) = bounded::<Job>(64);
+    let stats = Arc::new(RuntimeStats::new());
+    let stats2 = stats.clone();
+    let dir = dir.to_path_buf();
+    let features = manifest.features;
+    let num_classes = manifest.num_classes;
+    let manifest = manifest.clone();
+
+    // Compile errors must reach the caller: report readiness over a
+    // one-shot channel before entering the serve loop.
+    let (ready_tx, ready_rx) = bounded::<Result<()>>(1);
+
+    std::thread::Builder::new()
+        .name("nuig-device".to_string())
+        .spawn(move || {
+            let setup = (|| -> Result<Device> { Device::new(&dir, &manifest, params) })();
+            match setup {
+                Ok(device) => {
+                    let _ = ready_tx.send(Ok(()));
+                    device.serve(rx_hi, rx_lo, &stats2);
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                }
+            }
+        })
+        .context("spawning device thread")?;
+
+    ready_rx
+        .recv()
+        .map_err(|_| anyhow!("device thread died during setup"))??;
+
+    Ok(RuntimeHandle { tx_hi, tx_lo, stats, features, num_classes })
+}
+
+/// Device-side state (NOT Send; lives only on the device thread).
+struct Device {
+    client: xla::PjRtClient,
+    exes: Vec<xla::PjRtLoadedExecutable>,
+    /// Parameters resident on-device: uploaded once, passed by reference
+    /// to every execution (PERF: saves a ~116 KiB host copy per exec vs
+    /// rebuilding a params literal each time).
+    params: xla::PjRtBuffer,
+}
+
+impl Device {
+    fn new(dir: &Path, manifest: &Manifest, params: Vec<f32>) -> Result<Device> {
+        let client = xla::PjRtClient::cpu().map_err(into_anyhow).context("creating PJRT CPU client")?;
+        let mut exes = Vec::with_capacity(ExeKind::ALL.len());
+        for kind in ExeKind::ALL {
+            let meta = manifest
+                .executables
+                .get(kind.manifest_name())
+                .ok_or_else(|| anyhow!("manifest missing {}", kind.manifest_name()))?;
+            let path = dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(into_anyhow)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(into_anyhow)
+                .with_context(|| format!("compiling {}", kind.manifest_name()))?;
+            exes.push(exe);
+        }
+        let n = params.len();
+        let params = client
+            .buffer_from_host_buffer(&params, &[n], None)
+            .map_err(into_anyhow)
+            .context("uploading params buffer")?;
+        Ok(Device { client, exes, params })
+    }
+
+    fn serve(
+        self,
+        rx_hi: crate::exec::channel::Receiver<Job>,
+        rx_lo: crate::exec::channel::Receiver<Job>,
+        stats: &RuntimeStats,
+    ) {
+        // Two-level priority: drain hi (forward probes) before lo
+        // (gradient chunks); park briefly on lo when both are empty so a
+        // newly-arrived hi job is picked up within ~500 µs.
+        let mut hi_closed = false;
+        let mut lo_closed = false;
+        while !(hi_closed && lo_closed) {
+            let job = if !hi_closed {
+                match rx_hi.try_recv() {
+                    Ok(Some(j)) => Some(j),
+                    Ok(None) => None,
+                    Err(_) => {
+                        hi_closed = true;
+                        None
+                    }
+                }
+            } else {
+                None
+            };
+            let job = match job {
+                Some(j) => j,
+                None => {
+                    if lo_closed {
+                        // Only hi remains: block on it.
+                        match rx_hi.recv() {
+                            Ok(j) => j,
+                            Err(_) => break,
+                        }
+                    } else {
+                        match rx_lo.recv_timeout(std::time::Duration::from_micros(500)) {
+                            Ok(Some(j)) => j,
+                            Ok(None) => continue, // timeout: re-check hi
+                            Err(_) => {
+                                lo_closed = true;
+                                continue;
+                            }
+                        }
+                    }
+                }
+            };
+            let t0 = Instant::now();
+            let result = self.run(job.kind, &job.args);
+            stats.exec_count[job.kind.index()].inc();
+            stats.exec_latency[job.kind.index()].record(t0.elapsed().as_secs_f64());
+            // Receiver may have given up (cancelled request): ignore.
+            let _ = job.reply.send(result);
+        }
+    }
+
+    fn run(&self, kind: ExeKind, args: &[Arg]) -> Result<Vec<Vec<f32>>> {
+        let exe = &self.exes[kind.index()];
+        // Upload job args as device buffers; params are already resident.
+        let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(args.len());
+        for a in args {
+            bufs.push(
+                self.client
+                    .buffer_from_host_buffer(&a.data, &a.dims, None)
+                    .map_err(into_anyhow)?,
+            );
+        }
+        let mut refs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(args.len() + 1);
+        refs.push(&self.params);
+        refs.extend(bufs.iter());
+        let result = exe.execute_b(&refs).map_err(into_anyhow)?;
+        let tuple = result[0][0].to_literal_sync().map_err(into_anyhow)?;
+        let outs = tuple.to_tuple().map_err(into_anyhow)?;
+        outs.into_iter()
+            .map(|lit| lit.to_vec::<f32>().map_err(into_anyhow))
+            .collect()
+    }
+}
+
+fn into_anyhow(e: xla::Error) -> anyhow::Error {
+    anyhow!("{e}")
+}
+
+// Unit tests for the pure parts; execution paths are covered by the
+// integration tests in rust/tests/ (they need real artifacts).
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exe_kind_names_stable() {
+        assert_eq!(ExeKind::Fwd16.manifest_name(), "fwd_b16");
+        assert_eq!(ExeKind::IgChunkMulti16.manifest_name(), "igchunk_m16");
+        // index() must be a bijection onto 0..5.
+        let mut seen = [false; 5];
+        for k in ExeKind::ALL {
+            assert!(!seen[k.index()]);
+            seen[k.index()] = true;
+        }
+    }
+
+    #[test]
+    fn arg_constructors() {
+        let a = Arg::vec(vec![1.0, 2.0]);
+        assert_eq!(a.dims, vec![2]);
+        let m = Arg::mat(vec![0.0; 6], 2, 3);
+        assert_eq!(m.dims, vec![2, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "size mismatch")]
+    fn arg_mat_checks_size() {
+        Arg::mat(vec![0.0; 5], 2, 3);
+    }
+
+    #[test]
+    fn stats_zeroed() {
+        let s = RuntimeStats::new();
+        assert_eq!(s.total_executions(), 0);
+        assert_eq!(s.count(ExeKind::Fwd1), 0);
+    }
+}

@@ -1,0 +1,154 @@
+//! Property-testing harness and seeded PRNG for tests (no `proptest`
+//! offline — this is the minimal subset the suite needs: seeded random
+//! input generation, many-case loops with failure reporting that includes
+//! the case seed for reproduction).
+
+/// Deterministic xorshift64* PRNG for tests. NOT the corpus generator —
+/// that is `data::synth`'s counter-based splitmix64; this one is free to
+//  evolve without breaking cross-language pins.
+#[derive(Debug, Clone)]
+pub struct TestRng {
+    state: u64,
+}
+
+impl TestRng {
+    pub fn new(seed: u64) -> Self {
+        TestRng { state: seed.max(1) }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.f64() * (hi - lo)
+    }
+
+    /// Uniform integer in [lo, hi) (hi > lo).
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi > lo);
+        lo + (self.next_u64() as usize) % (hi - lo)
+    }
+
+    /// Random f32 vector with entries in [lo, hi).
+    pub fn vec_f32(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.range_f64(lo as f64, hi as f64) as f32).collect()
+    }
+
+    /// Random f64 vector with entries in [lo, hi).
+    pub fn vec_f64(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..n).map(|_| self.range_f64(lo, hi)).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+}
+
+/// Run `cases` property cases. Each case gets a fresh `TestRng` derived
+/// from the base seed and case index; a failing case panics with the case
+/// index and seed so it can be replayed exactly.
+///
+/// ```no_run
+/// // (no_run: doctest binaries lack the xla_extension rpath)
+/// nuig::testutil::prop(100, 42, |rng| {
+///     let v = rng.range_f64(0.0, 10.0);
+///     assert!(v >= 0.0 && v < 10.0);
+/// });
+/// ```
+pub fn prop<Ft: FnMut(&mut TestRng)>(cases: usize, base_seed: u64, mut f: Ft) {
+    for case in 0..cases {
+        let seed = base_seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(case as u64);
+        let mut rng = TestRng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            let msg = if let Some(s) = e.downcast_ref::<&str>() {
+                (*s).to_string()
+            } else if let Some(s) = e.downcast_ref::<String>() {
+                s.clone()
+            } else {
+                "property failed".to_string()
+            };
+            panic!("property case {case}/{cases} failed (replay seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert two f64 slices are element-wise close.
+#[track_caller]
+pub fn assert_allclose(a: &[f64], b: &[f64], rtol: f64, atol: f64) {
+    assert_eq!(a.len(), b.len(), "length mismatch: {} vs {}", a.len(), b.len());
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        assert!(
+            (x - y).abs() <= tol,
+            "element {i}: {x} vs {y} (|diff|={} > tol={tol})",
+            (x - y).abs()
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_deterministic() {
+        let mut a = TestRng::new(7);
+        let mut b = TestRng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_ranges() {
+        let mut r = TestRng::new(42);
+        for _ in 0..1000 {
+            let v = r.f64();
+            assert!((0.0..1.0).contains(&v));
+            let k = r.range(3, 10);
+            assert!((3..10).contains(&k));
+            let x = r.range_f64(-2.0, 2.0);
+            assert!((-2.0..2.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn prop_passes() {
+        prop(50, 1, |rng| {
+            let v = rng.vec_f32(8, 0.0, 1.0);
+            assert_eq!(v.len(), 8);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn prop_reports_seed_on_failure() {
+        prop(10, 2, |rng| {
+            assert!(rng.f64() < 0.5, "too big");
+        });
+    }
+
+    #[test]
+    fn allclose() {
+        assert_allclose(&[1.0, 2.0], &[1.0 + 1e-12, 2.0], 1e-9, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "element 1")]
+    fn allclose_fails_with_index() {
+        assert_allclose(&[1.0, 2.0], &[1.0, 2.1], 1e-9, 1e-9);
+    }
+}

@@ -1,0 +1,115 @@
+//! Colormaps: scalar in [0,1] → RGB. Piecewise-linear ramps, no lookup
+//! tables — precision is irrelevant at 8 bits/channel.
+
+/// A colormap maps t ∈ [0,1] (clamped) to RGB in [0,1]^3.
+#[derive(Clone, Copy)]
+pub struct Colormap {
+    /// Control points (t, r, g, b), strictly increasing t, covering [0,1].
+    stops: &'static [(f32, f32, f32, f32)],
+}
+
+impl Colormap {
+    pub fn eval(&self, t: f32) -> [f32; 3] {
+        let t = t.clamp(0.0, 1.0);
+        let stops = self.stops;
+        // Find the segment containing t.
+        let mut i = 0;
+        while i + 2 < stops.len() && stops[i + 1].0 < t {
+            i += 1;
+        }
+        let (t0, r0, g0, b0) = stops[i];
+        let (t1, r1, g1, b1) = stops[i + 1];
+        let f = if t1 > t0 { (t - t0) / (t1 - t0) } else { 0.0 };
+        let f = f.clamp(0.0, 1.0);
+        [r0 + f * (r1 - r0), g0 + f * (g1 - g0), b0 + f * (b1 - b0)]
+    }
+
+    pub fn eval_u8(&self, t: f32) -> [u8; 3] {
+        let [r, g, b] = self.eval(t);
+        [(r * 255.0).round() as u8, (g * 255.0).round() as u8, (b * 255.0).round() as u8]
+    }
+}
+
+/// Inferno-like sequential map (black → purple → orange → yellow) for
+/// attribution magnitude.
+pub fn inferno_like() -> Colormap {
+    Colormap {
+        stops: &[
+            (0.00, 0.00, 0.00, 0.02),
+            (0.25, 0.26, 0.04, 0.41),
+            (0.50, 0.73, 0.22, 0.33),
+            (0.75, 0.98, 0.55, 0.04),
+            (1.00, 0.99, 0.99, 0.75),
+        ],
+    }
+}
+
+/// Diverging red-white-blue map for signed attributions (negative = blue,
+/// positive = red), centered at t = 0.5.
+pub fn diverging_rb() -> Colormap {
+    Colormap {
+        stops: &[
+            (0.00, 0.02, 0.19, 0.60),
+            (0.50, 0.97, 0.97, 0.97),
+            (1.00, 0.70, 0.02, 0.15),
+        ],
+    }
+}
+
+/// Plain grayscale.
+pub fn grayscale() -> Colormap {
+    Colormap { stops: &[(0.0, 0.0, 0.0, 0.0), (1.0, 1.0, 1.0, 1.0)] }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoints() {
+        let cm = grayscale();
+        assert_eq!(cm.eval(0.0), [0.0, 0.0, 0.0]);
+        assert_eq!(cm.eval(1.0), [1.0, 1.0, 1.0]);
+        assert_eq!(cm.eval_u8(0.5), [128, 128, 128]);
+    }
+
+    #[test]
+    fn clamps_out_of_range() {
+        let cm = inferno_like();
+        assert_eq!(cm.eval(-3.0), cm.eval(0.0));
+        assert_eq!(cm.eval(9.0), cm.eval(1.0));
+    }
+
+    #[test]
+    fn monotone_brightness_sequential() {
+        let cm = inferno_like();
+        let lum = |t: f32| {
+            let [r, g, b] = cm.eval(t);
+            0.2126 * r + 0.7152 * g + 0.0722 * b
+        };
+        let mut prev = -1.0f32;
+        for i in 0..=20 {
+            let l = lum(i as f32 / 20.0);
+            assert!(l >= prev - 1e-4, "brightness dipped at {i}");
+            prev = l;
+        }
+    }
+
+    #[test]
+    fn diverging_center_is_near_white() {
+        let [r, g, b] = diverging_rb().eval(0.5);
+        assert!(r > 0.9 && g > 0.9 && b > 0.9);
+    }
+
+    #[test]
+    fn continuous_at_stops() {
+        let cm = inferno_like();
+        for &(t, ..) in cm.stops {
+            let lo = cm.eval((t - 1e-4).max(0.0));
+            let hi = cm.eval((t + 1e-4).min(1.0));
+            for k in 0..3 {
+                assert!((lo[k] - hi[k]).abs() < 0.02);
+            }
+        }
+    }
+}

@@ -1,0 +1,203 @@
+//! Attribution → heatmap rendering (PPM and ASCII).
+
+use anyhow::{bail, Result};
+
+use crate::data::ppm::Ppm;
+use crate::data::synth::{C, F, H, W};
+
+use super::colormap::{inferno_like, Colormap};
+
+/// Rendering options for [`render_heatmap`] / [`render_overlay`].
+pub struct HeatmapOptions {
+    /// Upscale factor (nearest neighbour) for viewability of 32x32 maps.
+    pub scale: usize,
+    /// Percentile (0..1] used as the normalization ceiling; attribution
+    /// magnitude above it saturates. The IG literature uses 0.99 to stop
+    /// single-pixel outliers from washing the map out.
+    pub clip_percentile: f64,
+    pub colormap: Colormap,
+}
+
+impl Default for HeatmapOptions {
+    fn default() -> Self {
+        HeatmapOptions { scale: 8, clip_percentile: 0.99, colormap: inferno_like() }
+    }
+}
+
+/// Collapse a flat (F,) per-feature attribution into per-pixel magnitude
+/// (sum of |channel| contributions), the standard IG visualization.
+pub fn pixel_attributions(attr: &[f64]) -> Result<Vec<f64>> {
+    if attr.len() != F {
+        bail!("expected {F} attribution values, got {}", attr.len());
+    }
+    let mut px = vec![0f64; H * W];
+    for pix in 0..H * W {
+        let mut s = 0f64;
+        for ch in 0..C {
+            s += attr[pix * C + ch].abs();
+        }
+        px[pix] = s;
+    }
+    Ok(px)
+}
+
+fn normalize(px: &[f64], clip_percentile: f64) -> Vec<f32> {
+    let mut sorted: Vec<f64> = px.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((clip_percentile.clamp(0.0, 1.0)) * (sorted.len() - 1) as f64).round() as usize;
+    let ceil = sorted[idx].max(1e-12);
+    px.iter().map(|&v| (v / ceil).min(1.0) as f32).collect()
+}
+
+/// Render the attribution heatmap alone.
+pub fn render_heatmap(attr: &[f64], opts: &HeatmapOptions) -> Result<Ppm> {
+    let px = pixel_attributions(attr)?;
+    let norm = normalize(&px, opts.clip_percentile);
+    let s = opts.scale.max(1);
+    let mut img = Ppm::new(W * s, H * s);
+    for y in 0..H {
+        for x in 0..W {
+            let rgb = opts.colormap.eval_u8(norm[y * W + x]);
+            for dy in 0..s {
+                for dx in 0..s {
+                    img.set(x * s + dx, y * s + dy, rgb);
+                }
+            }
+        }
+    }
+    Ok(img)
+}
+
+/// Render the input image with the heatmap alpha-blended on top
+/// (the paper's Fig. 1(c) presentation).
+pub fn render_overlay(image: &[f32], attr: &[f64], opts: &HeatmapOptions) -> Result<Ppm> {
+    if image.len() != F {
+        bail!("expected {F} image values, got {}", image.len());
+    }
+    let px = pixel_attributions(attr)?;
+    let norm = normalize(&px, opts.clip_percentile);
+    let s = opts.scale.max(1);
+    let mut img = Ppm::new(W * s, H * s);
+    for y in 0..H {
+        for x in 0..W {
+            let t = norm[y * W + x];
+            let heat = opts.colormap.eval(t);
+            // Blend weight grows with attribution so unexplained regions
+            // show the (dimmed) input.
+            let a = 0.25 + 0.75 * t;
+            let mut rgb = [0u8; 3];
+            for ch in 0..3 {
+                let base = image[(y * W + x) * C + ch] * 0.6;
+                let v = base * (1.0 - a) + heat[ch] * a;
+                rgb[ch] = (v.clamp(0.0, 1.0) * 255.0).round() as u8;
+            }
+            for dy in 0..s {
+                for dx in 0..s {
+                    img.set(x * s + dx, y * s + dy, rgb);
+                }
+            }
+        }
+    }
+    Ok(img)
+}
+
+/// Terminal heatmap: rows of density glyphs, one char per pixel column
+/// pair (2 pixels per char vertically via half-block aesthetics avoided —
+/// plain 5-level density keeps it dependency- and locale-safe).
+pub fn ascii_heatmap(attr: &[f64]) -> Result<String> {
+    const GLYPHS: [char; 6] = [' ', '.', ':', '+', '#', '@'];
+    let px = pixel_attributions(attr)?;
+    let norm = normalize(&px, 0.99);
+    let mut out = String::with_capacity((W + 1) * H);
+    for y in 0..H {
+        for x in 0..W {
+            let lvl = (norm[y * W + x] * (GLYPHS.len() - 1) as f32).round() as usize;
+            out.push(GLYPHS[lvl.min(GLYPHS.len() - 1)]);
+        }
+        out.push('\n');
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_attr() -> Vec<f64> {
+        // Strong attribution in a 4x4 block at (8..12, 8..12).
+        let mut a = vec![0.0f64; F];
+        for y in 8..12 {
+            for x in 8..12 {
+                for ch in 0..C {
+                    a[(y * W + x) * C + ch] = 1.0;
+                }
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn pixel_attributions_sums_channels() {
+        let px = pixel_attributions(&fake_attr()).unwrap();
+        assert_eq!(px[9 * W + 9], 3.0);
+        assert_eq!(px[0], 0.0);
+    }
+
+    #[test]
+    fn pixel_attributions_uses_abs() {
+        let mut a = vec![0.0f64; F];
+        a[0] = -2.0;
+        a[1] = 1.0;
+        let px = pixel_attributions(&a).unwrap();
+        assert_eq!(px[0], 3.0);
+    }
+
+    #[test]
+    fn rejects_wrong_len() {
+        assert!(pixel_attributions(&[0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn heatmap_hot_where_attribution() {
+        let img = render_heatmap(&fake_attr(), &HeatmapOptions { scale: 1, ..Default::default() }).unwrap();
+        let hot = img.get(9, 9);
+        let cold = img.get(0, 0);
+        let lum = |p: [u8; 3]| p[0] as u32 + p[1] as u32 + p[2] as u32;
+        assert!(lum(hot) > lum(cold) + 100, "{hot:?} vs {cold:?}");
+    }
+
+    #[test]
+    fn heatmap_scales() {
+        let img = render_heatmap(&fake_attr(), &HeatmapOptions { scale: 4, ..Default::default() }).unwrap();
+        assert_eq!(img.width, 128);
+        assert_eq!(img.height, 128);
+        assert_eq!(img.get(36, 36), img.get(37, 37)); // nearest-neighbour block
+    }
+
+    #[test]
+    fn overlay_shape_and_blend() {
+        let image = vec![0.5f32; F];
+        let img = render_overlay(&image, &fake_attr(), &HeatmapOptions { scale: 1, ..Default::default() }).unwrap();
+        assert_eq!(img.width, W);
+        // Cold region shows dimmed input, not pure black.
+        let cold = img.get(0, 0);
+        assert!(cold[0] > 10);
+    }
+
+    #[test]
+    fn ascii_dimensions_and_hotspot() {
+        let s = ascii_heatmap(&fake_attr()).unwrap();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), H);
+        assert!(lines.iter().all(|l| l.chars().count() == W));
+        assert_eq!(lines[9].chars().nth(9), Some('@'));
+        assert_eq!(lines[0].chars().next(), Some(' '));
+    }
+
+    #[test]
+    fn constant_attr_does_not_div_by_zero() {
+        let a = vec![0.0f64; F];
+        let s = ascii_heatmap(&a).unwrap();
+        assert!(s.chars().all(|c| c == ' ' || c == '\n'));
+    }
+}

@@ -1,0 +1,11 @@
+//! Attribution visualization: colormaps, heatmap rendering, ASCII output.
+//!
+//! Reproduces the paper's Fig. 1(c)-style heatmaps: per-pixel attribution
+//! magnitude over the input image, rendered either as a PPM file or as a
+//! terminal ASCII block map (for the quickstart example).
+
+mod colormap;
+mod heatmap;
+
+pub use colormap::{diverging_rb, grayscale, inferno_like, Colormap};
+pub use heatmap::{ascii_heatmap, pixel_attributions, render_heatmap, render_overlay, HeatmapOptions};

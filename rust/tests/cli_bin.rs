@@ -1,0 +1,119 @@
+//! Integration: the `nuig` binary's CLI surface (usage, errors, and the
+//! artifact-backed subcommands when artifacts exist).
+
+mod common;
+
+use std::process::Command;
+
+use common::have_artifacts;
+
+fn nuig() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_nuig"))
+}
+
+#[test]
+fn no_args_prints_usage() {
+    let out = nuig().output().unwrap();
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("USAGE"), "{stdout}");
+    assert!(stdout.contains("explain"));
+}
+
+#[test]
+fn unknown_command_fails() {
+    let out = nuig().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("unknown command"), "{stderr}");
+}
+
+#[test]
+fn unknown_flag_fails() {
+    if !have_artifacts() {
+        return common::skip("unknown_flag_fails");
+    }
+    let out = nuig().args(["explain", "--bogus-flag", "1"]).output().unwrap();
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("bogus-flag"), "{stderr}");
+}
+
+#[test]
+fn info_lists_executables() {
+    if !have_artifacts() {
+        return common::skip("info_lists_executables");
+    }
+    let out = nuig().args(["info"]).current_dir(env!("CARGO_MANIFEST_DIR")).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("igchunk_m16"), "{stdout}");
+    assert!(stdout.contains("MiniInception"));
+    assert!(stdout.contains("verified"));
+}
+
+#[test]
+fn explain_reports_delta_and_steps() {
+    if !have_artifacts() {
+        return common::skip("explain_reports_delta_and_steps");
+    }
+    let out = nuig()
+        .args(["explain", "--class", "2", "--m", "24", "--scheme", "nonuniform:4", "--ascii"])
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("delta (Eq. 3)"), "{stdout}");
+    assert!(stdout.contains("24 gradient evals + 5 probe passes") || stdout.contains("28 gradient"), "{stdout}");
+}
+
+#[test]
+fn bad_scheme_rejected() {
+    if !have_artifacts() {
+        return common::skip("bad_scheme_rejected");
+    }
+    let out = nuig().args(["explain", "--scheme", "magic"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown scheme"));
+}
+
+#[test]
+fn adaptive_subcommand_converges() {
+    if !have_artifacts() {
+        return common::skip("adaptive_subcommand_converges");
+    }
+    let out = nuig()
+        .args(["adaptive", "--class", "0", "--delta-th", "0.05"])
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("converged        : true"), "{stdout}");
+}
+
+#[test]
+fn ensemble_subcommand_runs() {
+    if !have_artifacts() {
+        return common::skip("ensemble_subcommand_runs");
+    }
+    let out = nuig()
+        .args(["ensemble", "--class", "1", "--method", "baselines", "--samples", "3", "--m", "16"])
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("3 members"), "{stdout}");
+    assert!(out.status.success());
+}
+
+#[test]
+fn ensemble_rejects_unknown_method() {
+    if !have_artifacts() {
+        return common::skip("ensemble_rejects_unknown_method");
+    }
+    let out = nuig().args(["ensemble", "--method", "voodoo"]).current_dir(env!("CARGO_MANIFEST_DIR")).output().unwrap();
+    assert!(!out.status.success());
+}

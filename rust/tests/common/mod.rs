@@ -1,0 +1,43 @@
+#![allow(dead_code)]
+
+//! Shared fixtures for integration tests: one Runtime per test binary
+//! (each Runtime owns a PJRT client + device thread — sharing keeps the
+//! process lean and mirrors production wiring).
+
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+use nuig::jsonio::Json;
+use nuig::runtime::Runtime;
+
+pub fn artifacts_dir() -> PathBuf {
+    // Integration tests run from the crate root.
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Artifacts present? If not, tests call `skip()` (the Makefile `test`
+/// target builds artifacts first; a bare `cargo test` stays green).
+pub fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+pub fn skip(name: &str) {
+    eprintln!("SKIP {name}: artifacts not built (run `make artifacts`)");
+}
+
+static RT: OnceLock<Runtime> = OnceLock::new();
+
+pub fn runtime() -> &'static Runtime {
+    RT.get_or_init(|| Runtime::load_default(artifacts_dir()).expect("loading runtime"))
+}
+
+pub fn testvectors() -> Json {
+    Json::from_file(&artifacts_dir().join("testvectors.json")).expect("loading testvectors")
+}
+
+/// Convenience: assert two f64 values agree within mixed tolerance.
+#[track_caller]
+pub fn close(a: f64, b: f64, rtol: f64, atol: f64) {
+    let tol = atol + rtol * b.abs().max(a.abs());
+    assert!((a - b).abs() <= tol, "{a} vs {b} (|diff| {} > tol {tol})", (a - b).abs());
+}

@@ -1,0 +1,212 @@
+//! Integration: the serving coordinator end-to-end over real artifacts —
+//! correctness under concurrency, cross-request batching, accounting,
+//! graceful shutdown, and failure surfaces.
+
+mod common;
+
+use std::time::Duration;
+
+use common::{close, have_artifacts, runtime, skip};
+use nuig::config::CoordinatorConfig;
+use nuig::coordinator::{Coordinator, ExplainRequest};
+use nuig::data::synth;
+use nuig::ig::{self, IgOptions, Rule, Scheme};
+
+fn cfg(workers: usize) -> CoordinatorConfig {
+    CoordinatorConfig { workers, ..Default::default() }
+}
+
+#[test]
+fn single_request_matches_direct_engine() {
+    if !have_artifacts() {
+        return skip("single_request_matches_direct_engine");
+    }
+    let rt = runtime();
+    let coord = Coordinator::start(rt, cfg(1)).unwrap();
+    let img = synth::gen_image(0, 0);
+    let opts = IgOptions { scheme: Scheme::NonUniform { n_int: 4 }, m: 48, ..Default::default() };
+
+    let resp = coord.explain(ExplainRequest::new(img.clone(), opts)).unwrap();
+    let direct = ig::explain(&rt.model(), &img, None, &opts).unwrap();
+
+    assert_eq!(resp.attribution.target, direct.target);
+    assert_eq!(resp.attribution.steps, direct.steps);
+    close(resp.attribution.sum(), direct.sum(), 1e-4, 1e-7);
+    close(resp.attribution.delta, direct.delta, 1e-2, 1e-6);
+    assert!(resp.attribution.cosine_similarity(&direct) > 0.99999);
+    coord.shutdown();
+}
+
+#[test]
+fn uniform_scheme_served() {
+    if !have_artifacts() {
+        return skip("uniform_scheme_served");
+    }
+    let rt = runtime();
+    let coord = Coordinator::start(rt, cfg(1)).unwrap();
+    let img = synth::gen_image(5, 0);
+    let opts = IgOptions { scheme: Scheme::Uniform, m: 32, rule: Rule::Trapezoid, ..Default::default() };
+    let resp = coord.explain(ExplainRequest::new(img.clone(), opts)).unwrap();
+    let direct = ig::explain(&rt.model(), &img, None, &opts).unwrap();
+    assert_eq!(resp.attribution.steps, 33);
+    assert_eq!(resp.attribution.probe_passes, 0);
+    close(resp.attribution.sum(), direct.sum(), 1e-4, 1e-7);
+    coord.shutdown();
+}
+
+#[test]
+fn concurrent_mixed_load_is_correct_and_batched() {
+    if !have_artifacts() {
+        return skip("concurrent_mixed_load_is_correct_and_batched");
+    }
+    let rt = runtime();
+    let coord = Coordinator::start(rt, cfg(2)).unwrap();
+
+    // 12 concurrent requests across classes and schemes.
+    let mut expected = Vec::new();
+    let mut handles = Vec::new();
+    for i in 0..12 {
+        let class = i % 8;
+        let scheme = if i % 3 == 0 { Scheme::Uniform } else { Scheme::NonUniform { n_int: 4 } };
+        let opts = IgOptions { scheme, m: 16 + 8 * (i % 4), ..Default::default() };
+        let img = synth::gen_image(class, 0);
+        expected.push((img.clone(), opts));
+        handles.push(coord.submit(ExplainRequest::new(img, opts)).unwrap());
+    }
+    let model = rt.model();
+    for (h, (img, opts)) in handles.into_iter().zip(&expected) {
+        let resp = h.wait().unwrap();
+        let direct = ig::explain(&model, img, None, opts).unwrap();
+        close(resp.attribution.sum(), direct.sum(), 1e-3, 1e-6);
+        assert_eq!(resp.attribution.target, direct.target);
+        assert!(resp.attribution.cosine_similarity(&direct) > 0.9999);
+    }
+
+    let stats = coord.stats();
+    assert_eq!(stats.completed.get(), 12);
+    assert_eq!(stats.failed.get(), 0);
+    // Under concurrent load chunks must be mostly full — the batching
+    // property the paper's §V argument needs.
+    let occ = stats.mean_occupancy(coord.config().chunk);
+    assert!(occ > 0.5, "batch occupancy {occ} too low for concurrent load");
+    assert_eq!(coord.in_flight(), 0);
+    coord.shutdown();
+}
+
+#[test]
+fn pinned_target_and_custom_baseline() {
+    if !have_artifacts() {
+        return skip("pinned_target_and_custom_baseline");
+    }
+    let rt = runtime();
+    let coord = Coordinator::start(rt, cfg(1)).unwrap();
+    let img = synth::gen_image(1, 1);
+    let baseline = vec![0.5f32; synth::F]; // gray baseline
+    let mut req = ExplainRequest::new(img, IgOptions { m: 24, ..Default::default() });
+    req.target = Some(3);
+    req.baseline = Some(baseline);
+    let resp = coord.explain(req).unwrap();
+    assert_eq!(resp.attribution.target, 3);
+    coord.shutdown();
+}
+
+#[test]
+fn rejects_bad_requests_fast() {
+    if !have_artifacts() {
+        return skip("rejects_bad_requests_fast");
+    }
+    let rt = runtime();
+    let coord = Coordinator::start(rt, cfg(1)).unwrap();
+
+    // Wrong image width.
+    assert!(coord.submit(ExplainRequest::new(vec![0.0; 7], IgOptions::default())).is_err());
+    // Wrong baseline width.
+    let mut req = ExplainRequest::new(vec![0.0; synth::F], IgOptions::default());
+    req.baseline = Some(vec![0.0; 5]);
+    assert!(coord.submit(req).is_err());
+    // Target out of range.
+    let mut req = ExplainRequest::new(vec![0.0; synth::F], IgOptions::default());
+    req.target = Some(99);
+    assert!(coord.submit(req).is_err());
+    // m < n_int.
+    let req = ExplainRequest::new(
+        vec![0.0; synth::F],
+        IgOptions { m: 2, scheme: Scheme::NonUniform { n_int: 8 }, ..Default::default() },
+    );
+    assert!(coord.submit(req).is_err());
+
+    // Queue state must be clean after rejections.
+    assert_eq!(coord.in_flight(), 0);
+    coord.shutdown();
+}
+
+#[test]
+fn drain_then_shutdown() {
+    if !have_artifacts() {
+        return skip("drain_then_shutdown");
+    }
+    let rt = runtime();
+    let coord = Coordinator::start(rt, cfg(2)).unwrap();
+    let handles: Vec<_> = (0..6)
+        .map(|i| {
+            coord
+                .submit(ExplainRequest::new(
+                    synth::gen_image(i % 8, 0),
+                    IgOptions { m: 16, ..Default::default() },
+                ))
+                .unwrap()
+        })
+        .collect();
+    coord.drain(Duration::from_secs(120)).unwrap();
+    assert_eq!(coord.in_flight(), 0);
+    for h in handles {
+        assert!(h.wait().is_ok());
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn shutdown_completes_in_flight_work() {
+    if !have_artifacts() {
+        return skip("shutdown_completes_in_flight_work");
+    }
+    let rt = runtime();
+    let coord = Coordinator::start(rt, cfg(2)).unwrap();
+    let handles: Vec<_> = (0..4)
+        .map(|i| {
+            coord
+                .submit(ExplainRequest::new(
+                    synth::gen_image(i, 0),
+                    IgOptions { m: 16, ..Default::default() },
+                ))
+                .unwrap()
+        })
+        .collect();
+    // Shut down immediately: graceful drain must still deliver responses.
+    coord.shutdown();
+    for h in handles {
+        assert!(h.wait().is_ok(), "in-flight request dropped during shutdown");
+    }
+}
+
+#[test]
+fn stage_breakdown_populated() {
+    if !have_artifacts() {
+        return skip("stage_breakdown_populated");
+    }
+    let rt = runtime();
+    let coord = Coordinator::start(rt, cfg(1)).unwrap();
+    let resp = coord
+        .explain(ExplainRequest::new(
+            synth::gen_image(0, 0),
+            IgOptions { scheme: Scheme::NonUniform { n_int: 4 }, m: 32, ..Default::default() },
+        ))
+        .unwrap();
+    let bd = &resp.attribution.breakdown;
+    assert!(bd.probe.as_nanos() > 0, "probe time missing");
+    assert!(bd.execute.as_nanos() > 0, "execute time missing");
+    // Stage-1 overhead should be a small fraction (paper: 0.2-3.2%-ish;
+    // CPU scales differ, so just assert it's a minority share).
+    assert!(bd.stage1_fraction() < 0.5, "stage1 fraction {}", bd.stage1_fraction());
+    coord.shutdown();
+}

@@ -1,0 +1,280 @@
+//! Integration: the Rust runtime executing the real AOT artifacts must
+//! reproduce the golden numbers Python wrote at export time
+//! (`artifacts/testvectors.json`) — the cross-language numerics contract.
+
+mod common;
+
+use common::{close, have_artifacts, runtime, skip, testvectors};
+use nuig::data::synth;
+use nuig::ig::{self, IgOptions, Model, Rule, Scheme};
+use nuig::runtime::{Arg, ExeKind, ProbeMode};
+
+#[test]
+fn manifest_sane() {
+    if !have_artifacts() {
+        return skip("manifest_sane");
+    }
+    let rt = runtime();
+    assert_eq!(rt.manifest.features, synth::F);
+    assert_eq!(rt.manifest.num_classes, synth::NUM_CLASSES);
+    assert_eq!(rt.manifest.executables.len(), 5);
+    rt.manifest.verify_corpus().unwrap();
+}
+
+#[test]
+fn fwd_probs_match_testvectors() {
+    if !have_artifacts() {
+        return skip("fwd_probs_match_testvectors");
+    }
+    let rt = runtime();
+    let model = rt.model();
+    let tv = testvectors();
+    for case in tv.get("images").unwrap().as_arr().unwrap() {
+        let class = case.get("class").unwrap().as_usize().unwrap();
+        let index = case.get("index").unwrap().as_usize().unwrap();
+        let expect = case.get("probs").unwrap().as_f64_vec().unwrap();
+        let target = case.get("target").unwrap().as_usize().unwrap();
+
+        let img = synth::gen_image(class, index);
+        // Image itself must match Python bit-for-bit.
+        close(
+            synth::image_sum(&img),
+            case.get("image_sum").unwrap().as_f64().unwrap(),
+            0.0,
+            1e-9,
+        );
+        for (idx_str, val) in case.get("image_probe").unwrap().as_obj().unwrap() {
+            let i: usize = idx_str.parse().unwrap();
+            assert_eq!(img[i] as f64, val.as_f64().unwrap(), "pixel {i} differs");
+        }
+
+        let probs = model.probs(&[&img]).unwrap();
+        assert_eq!(probs[0].len(), synth::NUM_CLASSES);
+        for (c, (&got, &want)) in probs[0].iter().zip(&expect).enumerate() {
+            close(got, want, 1e-4, 1e-6);
+            let _ = c;
+        }
+        assert_eq!(ig::engine::argmax(&probs[0]), target);
+    }
+}
+
+#[test]
+fn fwd_batched_equals_sequential() {
+    if !have_artifacts() {
+        return skip("fwd_batched_equals_sequential");
+    }
+    let rt = runtime();
+    let batched = rt.model();
+    let sequential = rt.model().with_probe_mode(ProbeMode::Sequential);
+    let imgs: Vec<Vec<f32>> = (0..5).map(|i| synth::gen_image(i % 8, i / 8)).collect();
+    let refs: Vec<&[f32]> = imgs.iter().map(|v| v.as_slice()).collect();
+    let a = batched.probs(&refs).unwrap();
+    let b = sequential.probs(&refs).unwrap();
+    for (pa, pb) in a.iter().zip(&b) {
+        for (&x, &y) in pa.iter().zip(pb) {
+            close(x, y, 1e-5, 1e-7);
+        }
+    }
+}
+
+#[test]
+fn ig_chunk_matches_testvectors() {
+    if !have_artifacts() {
+        return skip("ig_chunk_matches_testvectors");
+    }
+    let rt = runtime();
+    let handle = rt.handle();
+    let tv = testvectors();
+    for case in tv.get("images").unwrap().as_arr().unwrap() {
+        let class = case.get("class").unwrap().as_usize().unwrap();
+        let index = case.get("index").unwrap().as_usize().unwrap();
+        let target = case.get("target").unwrap().as_usize().unwrap();
+        let chunk = case.get("chunk").unwrap();
+        let alphas: Vec<f32> =
+            chunk.get("alphas").unwrap().as_f64_vec().unwrap().iter().map(|&v| v as f32).collect();
+        let weights: Vec<f32> =
+            chunk.get("weights").unwrap().as_f64_vec().unwrap().iter().map(|&v| v as f32).collect();
+
+        let img = synth::gen_image(class, index);
+        let mut onehot = vec![0f32; synth::NUM_CLASSES];
+        onehot[target] = 1.0;
+        let outs = handle
+            .execute(
+                ExeKind::IgChunk16,
+                vec![
+                    Arg::vec(img),
+                    Arg::vec(vec![0f32; synth::F]),
+                    Arg::vec(alphas),
+                    Arg::vec(weights),
+                    Arg::vec(onehot),
+                ],
+            )
+            .unwrap();
+        let partial_sum: f64 = outs[0].iter().map(|&v| v as f64).sum();
+        close(partial_sum, chunk.get("partial_sum").unwrap().as_f64().unwrap(), 1e-4, 1e-6);
+
+        let expect_tp = chunk.get("target_probs").unwrap().as_f64_vec().unwrap();
+        for (k, &want) in expect_tp.iter().enumerate() {
+            let got = outs[1][k * synth::NUM_CLASSES + target] as f64;
+            close(got, want, 1e-4, 1e-6);
+        }
+    }
+}
+
+#[test]
+fn engine_uniform_matches_python_reference() {
+    if !have_artifacts() {
+        return skip("engine_uniform_matches_python_reference");
+    }
+    let rt = runtime();
+    let model = rt.model();
+    let tv = testvectors();
+    for case in tv.get("images").unwrap().as_arr().unwrap() {
+        let class = case.get("class").unwrap().as_usize().unwrap();
+        let index = case.get("index").unwrap().as_usize().unwrap();
+        let target = case.get("target").unwrap().as_usize().unwrap();
+        let img = synth::gen_image(class, index);
+        let opts = IgOptions { scheme: Scheme::Uniform, m: 64, rule: Rule::Trapezoid, ..Default::default() };
+        let attr =
+            ig::engine::explain_with_target(&model, &img, &vec![0f32; synth::F], target, &opts)
+                .unwrap();
+
+        let uni = case.get("uniform_m64").unwrap();
+        close(attr.sum(), uni.get("attr_sum").unwrap().as_f64().unwrap(), 1e-3, 1e-5);
+        close(attr.delta, uni.get("delta").unwrap().as_f64().unwrap(), 1e-2, 1e-5);
+        for (idx_str, val) in uni.get("attr_probe").unwrap().as_obj().unwrap() {
+            let i: usize = idx_str.parse().unwrap();
+            close(attr.values[i], val.as_f64().unwrap(), 1e-3, 1e-7);
+        }
+    }
+}
+
+#[test]
+fn engine_nonuniform_matches_python_reference() {
+    if !have_artifacts() {
+        return skip("engine_nonuniform_matches_python_reference");
+    }
+    let rt = runtime();
+    let model = rt.model();
+    let tv = testvectors();
+    for case in tv.get("images").unwrap().as_arr().unwrap() {
+        let class = case.get("class").unwrap().as_usize().unwrap();
+        let index = case.get("index").unwrap().as_usize().unwrap();
+        let target = case.get("target").unwrap().as_usize().unwrap();
+        let img = synth::gen_image(class, index);
+        let opts = IgOptions { scheme: Scheme::NonUniform { n_int: 4 }, m: 64, ..Default::default() };
+        let attr =
+            ig::engine::explain_with_target(&model, &img, &vec![0f32; synth::F], target, &opts)
+                .unwrap();
+
+        let non = case.get("nonuniform_m64_n4").unwrap();
+        assert_eq!(attr.steps, non.get("steps").unwrap().as_usize().unwrap());
+        assert_eq!(attr.probe_passes, non.get("probe_passes").unwrap().as_usize().unwrap());
+        close(attr.sum(), non.get("attr_sum").unwrap().as_f64().unwrap(), 1e-3, 1e-5);
+        close(attr.delta, non.get("delta").unwrap().as_f64().unwrap(), 2e-2, 1e-5);
+
+        // The paper's iso-step claim on this exact case.
+        let uni_delta = case.get("uniform_m64").unwrap().get("delta").unwrap().as_f64().unwrap();
+        assert!(attr.delta < uni_delta, "nonuniform {} !< uniform {uni_delta}", attr.delta);
+    }
+}
+
+#[test]
+fn multi_chunk_matches_testvectors() {
+    if !have_artifacts() {
+        return skip("multi_chunk_matches_testvectors");
+    }
+    let rt = runtime();
+    let handle = rt.handle();
+    let tv = testvectors();
+    let mc = tv.get("multi_chunk").unwrap();
+    let targets = mc.get("targets").unwrap().as_usize_vec().unwrap();
+    let lane_sums = mc.get("lane_sums").unwrap().as_f64_vec().unwrap();
+
+    let img_a = synth::gen_image(0, 0);
+    let img_b = synth::gen_image(3, 0);
+    let f = synth::F;
+    let c = synth::NUM_CLASSES;
+    let mut xs = vec![0f32; 16 * f];
+    let mut onehots = vec![0f32; 16 * c];
+    let mut alphas = vec![0f32; 16];
+    let mut weights = vec![0f32; 16];
+    for k in 0..8 {
+        xs[2 * k * f..(2 * k + 1) * f].copy_from_slice(&img_a);
+        xs[(2 * k + 1) * f..(2 * k + 2) * f].copy_from_slice(&img_b);
+        onehots[2 * k * c + targets[0]] = 1.0;
+        onehots[(2 * k + 1) * c + targets[1]] = 1.0;
+        alphas[2 * k] = k as f32 / 7.0;
+        alphas[2 * k + 1] = k as f32 / 7.0;
+        weights[2 * k] = 1.0 / 8.0;
+        weights[2 * k + 1] = 1.0 / 8.0;
+    }
+    let outs = handle
+        .execute(
+            ExeKind::IgChunkMulti16,
+            vec![
+                Arg::mat(xs, 16, f),
+                Arg::mat(vec![0f32; 16 * f], 16, f),
+                Arg::vec(alphas),
+                Arg::vec(weights),
+                Arg::mat(onehots, 16, c),
+            ],
+        )
+        .unwrap();
+    for (k, &want) in lane_sums.iter().enumerate() {
+        let got: f64 = outs[0][k * f..(k + 1) * f].iter().map(|&v| v as f64).sum();
+        close(got, want, 1e-3, 1e-6);
+    }
+    // Lane-0 probs row.
+    let probs0 = mc.get("probs_lane0").unwrap().as_f64_vec().unwrap();
+    for (j, &want) in probs0.iter().enumerate() {
+        close(outs[1][j] as f64, want, 1e-4, 1e-6);
+    }
+}
+
+#[test]
+fn runtime_stats_accumulate() {
+    if !have_artifacts() {
+        return skip("runtime_stats_accumulate");
+    }
+    let rt = runtime();
+    let model = rt.model();
+    // ProbeMode::Auto routes a single image through fwd_b1.
+    let before1 = rt.stats().count(ExeKind::Fwd1);
+    let img = synth::gen_image(1, 0);
+    model.probs(&[&img]).unwrap();
+    assert!(rt.stats().count(ExeKind::Fwd1) > before1);
+    assert!(rt.stats().latency(ExeKind::Fwd1).mean() > 0.0);
+    // ...and a 16-image batch through fwd_b16.
+    let before16 = rt.stats().count(ExeKind::Fwd16);
+    let imgs: Vec<Vec<f32>> = (0..16).map(|i| synth::gen_image(i % 8, 0)).collect();
+    let refs: Vec<&[f32]> = imgs.iter().map(|v| v.as_slice()).collect();
+    model.probs(&refs).unwrap();
+    assert!(rt.stats().count(ExeKind::Fwd16) > before16);
+}
+
+#[test]
+fn ragged_tail_padding_is_exact() {
+    if !have_artifacts() {
+        return skip("ragged_tail_padding_is_exact");
+    }
+    // 19 points = one full chunk + ragged 3: must equal a single pass of
+    // the same points computed 16+3 via zero-padding.
+    let rt = runtime();
+    let model = rt.model();
+    let img = synth::gen_image(2, 0);
+    let baseline = vec![0f32; synth::F];
+    let alphas: Vec<f32> = (0..19).map(|k| k as f32 / 18.0).collect();
+    let weights: Vec<f32> = vec![1.0 / 19.0; 19];
+    let out = model.ig_points(&img, &baseline, &alphas, &weights, 0).unwrap();
+    assert_eq!(out.target_probs.len(), 19);
+
+    // Same computation split manually 10 + 9.
+    let o1 = model.ig_points(&img, &baseline, &alphas[..10], &weights[..10], 0).unwrap();
+    let o2 = model.ig_points(&img, &baseline, &alphas[10..], &weights[10..], 0).unwrap();
+    let merged: Vec<f64> = o1.partial.iter().zip(&o2.partial).map(|(a, b)| a + b).collect();
+    for (i, (&a, &b)) in out.partial.iter().zip(&merged).enumerate() {
+        close(a, b, 1e-6, 1e-9);
+        let _ = i;
+    }
+}
