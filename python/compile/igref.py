@@ -37,6 +37,71 @@ def uniform_alphas(m: int) -> np.ndarray:
     return np.arange(m + 1, dtype=np.float64) / m
 
 
+FUSE_EPS = 1e-12
+
+
+def fuse_schedule(alphas: Sequence[float], weights: Sequence[float],
+                  eps: float = FUSE_EPS) -> Tuple[np.ndarray, np.ndarray]:
+    """Fuse a schedule: merge runs of coincident alphas by summing their
+    quadrature weights, then prune zero-weight points.
+
+    The raw non-uniform schedule concatenates per-interval grids, so every
+    interior probe boundary appears twice and Left/Right rule grids carry a
+    structurally zero-weight endpoint — each a full model evaluation spent
+    on a point whose contribution could ride along with its twin (or is
+    exactly zero). After fusion the point list is exactly the set of model
+    evaluations: a trapezoid non-uniform schedule has ``m + 1`` points,
+    identical in count to the uniform baseline. Mirrors
+    ``rust/src/ig/schedule.rs::Schedule::fused``. Idempotent; preserves
+    total quadrature mass exactly.
+    """
+    fa: List[float] = []
+    fw: List[float] = []
+    for a, w in zip(alphas, weights):
+        if fa and abs(float(a) - fa[-1]) <= eps:
+            fw[-1] += float(w)
+        else:
+            fa.append(float(a))
+            fw.append(float(w))
+    out = [(a, w) for a, w in zip(fa, fw) if w != 0.0]
+    return (np.array([a for a, _ in out], dtype=np.float64),
+            np.array([w for _, w in out], dtype=np.float64))
+
+
+def interval_schedule(lo: float, hi: float, m: int,
+                      rule: str = "trapezoid") -> Tuple[np.ndarray, np.ndarray]:
+    """Uniform m-interval grid over ``[lo, hi]``, weights scaled by the
+    interval width (Eq. 1 additivity over subpaths). The endpoint alphas
+    are pinned to exactly ``lo``/``hi`` so adjacent interval grids share
+    bit-identical boundary alphas and fuse by coincidence.
+    """
+    alphas = lo + uniform_alphas(m) * (hi - lo)
+    alphas[0] = lo
+    alphas[-1] = hi
+    return alphas, riemann_weights(m + 1, rule) * (hi - lo)
+
+
+def nonuniform_schedule(bounds: Sequence[float], alloc: Sequence[int],
+                        rule: str = "trapezoid", fused: bool = True,
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+    """The paper's stage-2 schedule: per-interval grids concatenated.
+
+    With ``fused=True`` (what the engine dispatches) shared interval
+    boundaries cost one evaluation and ``len == m + 1`` for the trapezoid
+    rule; ``fused=False`` keeps the raw ``sum(m_i + 1) == m + n_int``
+    concatenation for equivalence tests and cost audits.
+    """
+    if len(bounds) < 2 or len(alloc) != len(bounds) - 1:
+        raise ValueError("alloc/bounds mismatch")
+    parts = [interval_schedule(bounds[i], bounds[i + 1], m_i, rule)
+             for i, m_i in enumerate(alloc)]
+    alphas = np.concatenate([a for a, _ in parts])
+    weights = np.concatenate([w for _, w in parts])
+    if fused:
+        return fuse_schedule(alphas, weights)
+    return alphas, weights
+
+
 def riemann_weights(n_points: int, rule: str = "trapezoid") -> np.ndarray:
     """Quadrature weights over a unit interval discretized into n_points.
 
@@ -115,29 +180,43 @@ def _allocate(m_total: int, scores: Sequence[float]) -> List[int]:
 class IgResult:
     attr: np.ndarray        # (F,) attribution
     delta: float            # completeness residual |sum(attr) - (f(x)-f(x'))|
-    steps: int              # gradient evaluations (fwd+bwd passes)
-    probe_passes: int       # stage-1 forward-only passes (0 for uniform)
+    steps: int              # model evaluations, exactly: len(fused schedule)
+    # Forward-only passes beyond the gradient points: n_int + 1 (stage-1
+    # probe) for non-uniform; for uniform, the direct endpoint eval(s)
+    # recovering the gap when the fused grid prunes an endpoint (0 for
+    # trapezoid/eq2, 1 for left/right). steps + probe_passes is the true
+    # model-eval count — mirrors rust/src/ig/attribution.rs.
+    probe_passes: int
     target: int
 
 
 def _run_points(flat, x, baseline, alphas: np.ndarray, weights: np.ndarray,
-                target: int, chunk: int = 16) -> np.ndarray:
-    """Evaluate sum_k w_k grad_k (x-x') via the AOT ig_chunk fn, chunked."""
+                target: int, chunk: int = 16) -> Tuple[np.ndarray, List[float]]:
+    """Evaluate sum_k w_k grad_k (x-x') via the AOT ig_chunk fn, chunked.
+
+    Returns ``(attr, target_probs)`` — the accumulated partial attribution
+    and p(target) at every requested point (padding lanes excluded), so
+    callers can read endpoint probabilities off the schedule for free,
+    mirroring the Rust engine's ``Model::ig_points`` contract.
+    """
     onehot = np.zeros(model.NUM_CLASSES, np.float32)
     onehot[target] = 1.0
     acc = np.zeros(model.F, dtype=np.float64)
+    tprobs: List[float] = []
     for s in range(0, len(alphas), chunk):
         a = alphas[s : s + chunk].astype(np.float32)
         w = weights[s : s + chunk].astype(np.float32)
-        if len(a) < chunk:  # pad ragged tail with zero-weight lanes
-            pad = chunk - len(a)
+        n = len(a)
+        if n < chunk:  # pad ragged tail with zero-weight lanes
+            pad = chunk - n
             a = np.pad(a, (0, pad))
             w = np.pad(w, (0, pad))
-        partial, _probs = model.ig_chunk_jit(
+        partial, probs = model.ig_chunk_jit(
             flat, x, baseline, jnp.asarray(a), jnp.asarray(w),
             jnp.asarray(onehot))
         acc += np.asarray(partial, dtype=np.float64)
-    return acc
+        tprobs.extend(np.asarray(probs, dtype=np.float64)[:n, target].tolist())
+    return acc, tprobs
 
 
 def _endpoint_gap(flat, x, baseline, target: int) -> float:
@@ -153,13 +232,31 @@ def predict_target(flat, x) -> int:
 
 def uniform_ig(flat, x, baseline, m: int, target: int,
                rule: str = "trapezoid", chunk: int = 16) -> IgResult:
-    """Baseline IG: uniform interpolation with m intervals (m+1 points)."""
-    alphas = uniform_alphas(m)
-    weights = riemann_weights(m + 1, rule)
-    attr = _run_points(flat, x, baseline, alphas, weights, target, chunk)
-    gap = _endpoint_gap(flat, x, baseline, target)
-    delta = abs(float(attr.sum()) - gap)
-    return IgResult(attr, delta, m + 1, 0, target)
+    """Baseline IG: uniform interpolation with m intervals.
+
+    The schedule is fused, so Left/Right rules cost exactly m evaluations
+    (their zero-weight endpoint is pruned); trapezoid/eq2 cost m + 1. The
+    endpoint gap is read off the schedule's own probabilities when the
+    grid includes both path endpoints; a pruned endpoint is evaluated
+    directly and counted in probe_passes — mirroring the Rust engine.
+    """
+    alphas, weights = fuse_schedule(uniform_alphas(m), riemann_weights(m + 1, rule))
+    attr, tprobs = _run_points(flat, x, baseline, alphas, weights, target, chunk)
+    probe_passes = 0
+    if alphas[0] == 0.0:
+        p0 = tprobs[0]
+    else:
+        probe_passes += 1
+        p0 = float(np.asarray(model.fwd_jit(flat, jnp.asarray(baseline)[None, :])[0],
+                              np.float64)[0, target])
+    if abs(alphas[-1] - 1.0) < 1e-12:
+        p1 = tprobs[-1]
+    else:
+        probe_passes += 1
+        p1 = float(np.asarray(model.fwd_jit(flat, jnp.asarray(x)[None, :])[0],
+                              np.float64)[0, target])
+    delta = abs(float(attr.sum()) - (p1 - p0))
+    return IgResult(attr, delta, len(alphas), probe_passes, target)
 
 
 def nonuniform_ig(flat, x, baseline, m: int, n_int: int, target: int,
@@ -186,25 +283,23 @@ def nonuniform_ig(flat, x, baseline, m: int, n_int: int, target: int,
 
     alloc = sqrt_allocate(m, deltas) if allocation == "sqrt" else linear_allocate(m, deltas)
 
-    attr = np.zeros(model.F, dtype=np.float64)
-    steps = 0
-    for i, m_i in enumerate(alloc):
-        lo, hi = bounds[i], bounds[i + 1]
-        local = uniform_alphas(m_i)                      # 0..1 inside interval
-        alphas = lo + local * (hi - lo)
-        # Eq. 1 over the subpath: integral_{lo}^{hi} g(a) da is (hi-lo)
-        # times the unit-interval quadrature, so the per-point weights are
-        # the unit weights scaled by the interval width. The (x-x') factor
-        # stays the *full-path* diff inside ig_chunk, preserving Eq. 1's
-        # parametrization; per-interval attributions then sum to the total
-        # by additivity of the path integral.
-        weights = riemann_weights(m_i + 1, rule) * (hi - lo)
-        attr += _run_points(flat, x, baseline, alphas, weights, target, chunk)
-        steps += m_i + 1
+    # Eq. 1 over each subpath: integral_{lo}^{hi} g(a) da is (hi-lo) times
+    # the unit-interval quadrature, so per-point weights are the unit
+    # weights scaled by the interval width; the (x-x') factor stays the
+    # *full-path* diff inside ig_chunk, preserving Eq. 1's parametrization,
+    # and per-interval attributions sum to the total by additivity. The
+    # concatenation is FUSED before dispatch: shared interval boundaries
+    # cost one model evaluation, so steps == m + 1 for the trapezoid rule
+    # (not the m + n_int the raw concatenation would pay).
+    alphas, weights = nonuniform_schedule(bounds, alloc, rule)
+    attr, _ = _run_points(flat, x, baseline, alphas, weights, target, chunk)
 
-    gap = _endpoint_gap(flat, x, baseline, target)
+    # Endpoint gap read off the stage-1 probe (boundary 0 is the baseline,
+    # boundary n_int the input) — no extra forward pass, like the Rust
+    # engine's Probe::endpoint_gap.
+    gap = float(pvals[-1] - pvals[0])
     delta = abs(float(attr.sum()) - gap)
-    return IgResult(attr, delta, steps, n_int + 1, target)
+    return IgResult(attr, delta, len(alphas), n_int + 1, target)
 
 
 def steps_to_threshold(run, delta_th: float, m_grid: Sequence[int]) -> Tuple[int, float]:

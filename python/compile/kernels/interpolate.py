@@ -64,7 +64,11 @@ def interpolate_chunk(
       baseline: ``(F,)`` flattened baseline image (same shape as ``x``).
       alphas: ``(K,)`` interpolation constants in ``[0, 1]`` (not enforced;
         values outside the interval extrapolate, which the engine never
-        requests but the math permits).
+        requests but the math permits). Schedules are fused upstream
+        (``igref.fuse_schedule`` / ``Schedule::fused`` in Rust) so within
+        one request the alphas are strictly increasing: the only repeated
+        alphas a chunk may carry are the zero-weight ``alpha = 0`` padding
+        lanes of a ragged tail, which contribute exactly nothing.
       block_f: feature tile width. ``F`` must be divisible by it; callers
         with ragged F should pad (the engine always uses F=3072).
 

@@ -14,23 +14,27 @@ fn main() -> anyhow::Result<()> {
     let model = rt.model();
     let img = synth::gen_image(0, 0);
 
+    // `steps` is the fused model-eval count: left/right grids pay m evals
+    // (their zero-weight endpoint is pruned at build), trapezoid/eq2 pay
+    // m + 1 — the per-rule cost the delta comparison should be read with.
     let mut table = Table::new(
         "Riemann-rule ablation: delta by rule and scheme",
-        &["m", "rule", "scheme", "delta"],
+        &["m", "rule", "scheme", "steps", "delta"],
     );
     let mut trap_beats_eq2 = 0usize;
     let mut cases = 0usize;
     for m in [16usize, 32, 64, 128] {
         for rule in [Rule::Left, Rule::Right, Rule::Trapezoid, Rule::Eq2] {
-            let mut per_rule = Vec::new();
             for scheme in [Scheme::Uniform, Scheme::NonUniform { n_int: 4 }] {
                 let opts = IgOptions { scheme, m, rule, ..Default::default() };
-                let d = ig::explain(&model, &img, None, &opts)?.delta;
-                per_rule.push(d);
-                table.row(vec![m.to_string(), rule.to_string(), scheme.to_string(), fmt3(d)]);
-            }
-            if rule == Rule::Trapezoid || rule == Rule::Eq2 {
-                // compare pairwise below via collected table rows
+                let a = ig::explain(&model, &img, None, &opts)?;
+                table.row(vec![
+                    m.to_string(),
+                    rule.to_string(),
+                    scheme.to_string(),
+                    a.steps.to_string(),
+                    fmt3(a.delta),
+                ]);
             }
         }
         // Direct trapezoid-vs-eq2 comparison at this m (uniform scheme).

@@ -27,20 +27,26 @@ fn main() -> anyhow::Result<()> {
     for &m in &grid {
         let opts = IgOptions { scheme: Scheme::Uniform, m, ..Default::default() };
         let mut delta = 0.0;
+        let mut steps = 0;
         let meas = measure(&cfg, &format!("uniform m={m}"), || {
-            delta = ig::explain(&model, &img, None, &opts).unwrap().delta;
+            let a = ig::explain(&model, &img, None, &opts).unwrap();
+            delta = a.delta;
+            steps = a.steps;
         });
-        rows.push((m, meas.mean_s(), delta));
+        rows.push((m, steps, meas.mean_s(), delta));
     }
 
-    let t1 = rows[0].1;
+    let t1 = rows[0].2;
+    // `steps` is Attribution.steps — the exact fused model-eval count, the
+    // unit of cost the paper's Fig. 2a x-axis measures.
     let mut table = Table::new(
         "Fig 2a/2b: latency (normalized to m=1) and delta vs steps (uniform IG)",
-        &["m", "latency_ms", "latency_norm", "delta"],
+        &["m", "steps", "latency_ms", "latency_norm", "delta"],
     );
-    for (m, t, d) in &rows {
+    for (m, steps, t, d) in &rows {
         table.row(vec![
             m.to_string(),
+            steps.to_string(),
             fmt3(t * 1e3),
             fmt3(t / t1),
             fmt3(*d),
@@ -50,8 +56,8 @@ fn main() -> anyhow::Result<()> {
 
     // Shape assertions: the claims Fig. 2 makes.
     let last = rows.last().unwrap();
-    assert!(last.1 / t1 > 4.0, "latency must grow with m");
-    assert!(last.2 < rows[2].2, "delta must fall with m");
+    assert!(last.2 / t1 > 4.0, "latency must grow with m");
+    assert!(last.3 < rows[2].3, "delta must fall with m");
     println!("shape check OK: latency rises ~linearly; delta falls monotonically");
     Ok(())
 }

@@ -42,9 +42,12 @@ fn main() -> anyhow::Result<()> {
         .collect::<Result<_, _>>()?;
 
     // ---- Fig 6a: latency to reach delta_th ------------------------------
+    // `steps` is the fused model-eval count (Attribution.steps), so the
+    // latency-vs-steps relation matches the paper's cost model exactly:
+    // one step == one fwd+bwd pass, no duplicated boundary evaluations.
     let mut fig6a = Table::new(
         "Fig 6a: latency to reach threshold (normalized to fastest cell)",
-        &["delta_th", "scheme", "m_required", "latency_ms", "latency_norm"],
+        &["delta_th", "scheme", "m_required", "steps", "latency_ms", "latency_norm"],
     );
     let mut cells = Vec::new();
     for &(_, th) in &thresholds {
@@ -62,19 +65,21 @@ fn main() -> anyhow::Result<()> {
                 continue;
             }
             let opts = IgOptions { scheme, m: m_req, ..Default::default() };
+            let mut steps = 0;
             let meas = measure(&cfg, "cell", || {
-                ig::explain(&model, &img, None, &opts).unwrap();
+                steps = ig::explain(&model, &img, None, &opts).unwrap().steps;
             });
-            cells.push((th, scheme, m_req, meas.mean_s()));
+            cells.push((th, scheme, m_req, steps, meas.mean_s()));
         }
     }
-    let fastest = cells.iter().map(|c| c.3).fold(f64::INFINITY, f64::min);
+    let fastest = cells.iter().map(|c| c.4).fold(f64::INFINITY, f64::min);
     let mut reductions = Vec::new();
-    for &(th, scheme, m_req, t) in &cells {
+    for &(th, scheme, m_req, steps, t) in &cells {
         fig6a.row(vec![
             format!("{th:.5}"),
             scheme.to_string(),
             m_req.to_string(),
+            steps.to_string(),
             fmt3(t * 1e3),
             fmt3(t / fastest),
         ]);
@@ -82,13 +87,42 @@ fn main() -> anyhow::Result<()> {
             let uni = cells
                 .iter()
                 .find(|c| c.0 == th && c.1 == Scheme::Uniform)
-                .map(|c| c.3);
+                .map(|c| c.4);
             if let Some(tu) = uni {
                 reductions.push(tu / t);
             }
         }
     }
     fig6a.print();
+
+    // ---- Schedule-fusion accounting: fused vs unfused stage-2 evals. ----
+    let mut fusion = Table::new(
+        "Schedule fusion: stage-2 model evals vs the unfused concatenation",
+        &["m", "n_int", "fused_evals", "unfused_evals", "saved_pct"],
+    );
+    let mut saved_at_paper_point = 0.0;
+    for &(m, n_int) in &[(16usize, 4usize), (32, 4), (64, 4), (32, 8)] {
+        let opts = IgOptions { scheme: Scheme::NonUniform { n_int }, m, ..Default::default() };
+        let a = ig::explain(&model, &img, None, &opts)?;
+        let unfused = m + n_int; // Σ(m_i + 1): duplicated boundary points
+        let saved = 100.0 * (unfused - a.steps) as f64 / unfused as f64;
+        if (m, n_int) == (16, 4) {
+            saved_at_paper_point = saved;
+        }
+        fusion.row(vec![
+            m.to_string(),
+            n_int.to_string(),
+            a.steps.to_string(),
+            unfused.to_string(),
+            fmt3(saved),
+        ]);
+    }
+    fusion.print();
+    assert!(
+        saved_at_paper_point >= 10.0,
+        "fusion must cut >= 10% of stage-2 evals at the paper's operating point \
+         (m=16, n_int=4): got {saved_at_paper_point:.1}%"
+    );
 
     // ---- Fig 6b: stage-1 overhead % --------------------------------------
     let mut fig6b = Table::new(

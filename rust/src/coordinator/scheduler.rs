@@ -56,6 +56,9 @@ struct ReqLanes {
     /// Owning request id (diagnostics; scheduling itself is id-agnostic).
     #[allow(dead_code)]
     id: u64,
+    /// One lane per *fused* schedule point (routers emit fused schedules
+    /// only, so queue depth here is an exact model-eval backlog and
+    /// `RequestState::steps` bookkeeping matches the lanes dispatched).
     lanes: VecDeque<Lane>,
 }
 

@@ -353,7 +353,8 @@ fn route_one(
     };
     let t_probe = t0.elapsed();
 
-    // ---- Schedule. -------------------------------------------------------
+    // ---- Schedule (fused: coincident boundary points merged, zero-weight
+    // points pruned, so lane count == true model-eval count). -------------
     let t1 = Instant::now();
     let schedule = match req.opts.scheme {
         Scheme::Uniform => Schedule::uniform(req.opts.m, req.opts.rule),
@@ -371,10 +372,11 @@ fn route_one(
     };
     let t_sched = t1.elapsed();
 
-    let probe_passes = match req.opts.scheme {
-        Scheme::NonUniform { .. } => bounds.len(),
-        Scheme::Uniform => 0,
-    };
+    // The router really runs bounds.len() forward passes for BOTH schemes
+    // (2 for uniform: target + endpoint gap come from probing alpha = 0
+    // and 1), so report them — steps + probe_passes is then the true
+    // model-eval count of the serving path.
+    let probe_passes = bounds.len();
 
     let state = Arc::new(RequestState {
         id,
@@ -400,7 +402,9 @@ fn route_one(
     });
 
     // ---- Fan out lanes (atomically, so the scheduler sees the whole
-    // request and within-request alpha order is preserved). ---------------
+    // request and within-request alpha order is preserved). One lane per
+    // fused schedule point: `Attribution.steps` reported back equals the
+    // number of device-batch slots this request actually consumes. -------
     let req_lanes: Vec<Lane> = schedule
         .points
         .iter()

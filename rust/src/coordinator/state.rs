@@ -24,7 +24,8 @@ pub struct RequestState {
     pub acc: Mutex<Vec<f64>>,
     /// Gradient-point lanes still outstanding.
     pub remaining: AtomicUsize,
-    /// Total gradient evaluations (Σ(m_i + 1)).
+    /// Total gradient evaluations — the fused schedule's point count, so
+    /// one lane == one model evaluation, exactly.
     pub steps: usize,
     pub probe_passes: usize,
     /// f(x) − f(x′) from stage 1.

@@ -29,7 +29,10 @@ pub struct AdaptiveResult {
     /// Whether the threshold was met (false ⇒ grid exhausted; the best
     /// attempt is still returned).
     pub converged: bool,
-    /// Total gradient evaluations across all rounds (the real cost).
+    /// Total gradient evaluations across all rounds (the real cost:
+    /// schedules are fused, so each round's count is exactly its
+    /// model-eval count — `m + 1` for trapezoid schedules, uniform or
+    /// non-uniform alike).
     pub total_steps: usize,
 }
 
@@ -83,6 +86,8 @@ pub fn explain_to_threshold(
             continue;
         }
         let t1 = Instant::now();
+        // Both constructors return fused schedules: `schedule.len()` below
+        // is the true per-round model-eval count.
         let schedule = match opts.scheme {
             Scheme::Uniform => Schedule::uniform(m, opts.rule)?,
             Scheme::NonUniform { .. } => {
@@ -108,11 +113,10 @@ pub fn explain_to_threshold(
             values: out.partial,
             target,
             steps: schedule.len(),
-            probe_passes: if matches!(opts.scheme, Scheme::NonUniform { .. }) {
-                bounds.len()
-            } else {
-                0
-            },
+            // This driver really runs bounds.len() forward passes for
+            // target + gap, for BOTH schemes (2 for uniform): report them,
+            // so steps + probe_passes is the true eval count of this path.
+            probe_passes: bounds.len(),
             breakdown: StageBreakdown {
                 probe: t_probe,
                 schedule: t_sched,
@@ -168,6 +172,8 @@ mod tests {
         assert!(res.converged);
         assert!(res.attribution.delta <= policy.delta_th);
         assert!(*res.rounds.last().unwrap() <= 128);
+        // Uniform via this driver still probes the two path endpoints.
+        assert_eq!(res.attribution.probe_passes, 2);
         // Rounds walk the grid in order.
         assert!(res.rounds.windows(2).all(|w| w[0] < w[1]));
     }

@@ -11,9 +11,20 @@ pub struct Attribution {
     pub values: Vec<f64>,
     /// Explained class (argmax of f(x) unless the caller pinned one).
     pub target: usize,
-    /// Gradient evaluations consumed (fwd+bwd passes; Σ(m_i + 1)).
+    /// Gradient evaluations consumed — exactly the fused schedule's point
+    /// count, i.e. the true number of fwd+bwd model passes (`m + 1` for
+    /// trapezoid schedules, uniform or non-uniform; `m` for left/right).
     pub steps: usize,
-    /// Stage-1 forward-only passes (0 for the uniform baseline).
+    /// Forward-only passes this explanation performed beyond the gradient
+    /// points (target selection by the caller excluded): the stage-1
+    /// probe (`n_int + 1`) for the non-uniform scheme; for the direct
+    /// uniform engine, the endpoint evaluation(s) recovering the
+    /// completeness gap (0 when the fused grid includes both endpoints,
+    /// 1 for left/right whose pruned endpoint is evaluated directly);
+    /// paths that obtain target + gap from a boundary probe (coordinator
+    /// router, adaptive driver) report that probe's passes — 2 for
+    /// uniform. `steps + probe_passes` is the true model-eval count of
+    /// whichever path produced this attribution.
     pub probe_passes: usize,
     /// Completeness residual δ = |Σφ − (f(x) − f(x'))|   (Eq. 3).
     pub delta: f64,

@@ -163,7 +163,8 @@ mod tests {
         let opts = IgOptions { m: 32, ..Default::default() };
         let ens = multi_baseline(&m, &x, &BaselineKind::standard_set(1), &opts).unwrap();
         assert_eq!(ens.members, 3);
-        assert_eq!(ens.attribution.steps, 3 * (32 + 4)); // 3 members, nonuniform default
+        // 3 members, nonuniform default; fused schedules cost m + 1 each.
+        assert_eq!(ens.attribution.steps, 3 * (32 + 1));
         assert!(ens.worst_member_delta >= ens.attribution.delta * 0.0); // defined
         assert!(ens.attribution.values.iter().any(|&v| v != 0.0));
     }

@@ -5,7 +5,9 @@
 //! * [`riemann`] — quadrature rules over the unit interval (Eq. 2's
 //!   discretization and its better-behaved variants);
 //! * [`schedule`] — alpha/weight schedules: uniform grids, per-interval
-//!   grids, and their concatenation into the paper's non-uniform schedule;
+//!   grids, and their *fused* concatenation into the paper's non-uniform
+//!   schedule (coincident boundary points merged, zero-weight points
+//!   pruned — `len()` is exactly the model-eval count);
 //! * [`allocator`] — stage 1's step distribution (`m_int ∝ √|Δf|`, with
 //!   the linear variant kept as the paper's ablation);
 //! * [`probe`] — stage 1's boundary probing and interval-delta math;

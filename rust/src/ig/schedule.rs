@@ -6,10 +6,32 @@
 //! Eq. 1's integral. The uniform baseline is one grid over [0,1]; the
 //! paper's non-uniform schedule is the concatenation of per-interval
 //! uniform grids, each scaled by its interval width.
+//!
+//! # Fusion
+//!
+//! The raw concatenation is *not* what the engines dispatch: every
+//! interior probe boundary alpha appears in two adjacent interval grids,
+//! and the Left/Right Riemann rules carry a structurally zero-weight
+//! endpoint. Both buy a full forward+backward pass for nothing. The
+//! [`Schedule::fused`] pass merges coincident-alpha points by summing
+//! their quadrature weights and prunes zero-weight points, so the fused
+//! point list is exactly the set of model evaluations: for a trapezoid
+//! non-uniform schedule over `n_int` intervals, the `m + n_int` raw points
+//! (`Σ(m_i + 1)`) fuse down to exactly `m + 1` — the same model-eval count
+//! as the uniform baseline at equal `m`. All public constructors
+//! ([`Schedule::uniform`], [`Schedule::nonuniform`]) return fused
+//! schedules; [`Schedule::nonuniform_unfused`] exposes the raw
+//! concatenation for equivalence testing and step-accounting audits.
 
 use anyhow::{ensure, Result};
 
 use super::riemann::Rule;
+
+/// Coincidence tolerance for fusing alphas. Interval builders pin shared
+/// boundaries to bit-identical f64 values, so this only absorbs residue
+/// from callers composing their own sub-interval grids; it is far below
+/// any legal grid spacing (>= 1/(m * n_int) >> 1e-12).
+const FUSE_EPS: f64 = 1e-12;
 
 /// One gradient-evaluation point.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -21,6 +43,10 @@ pub struct Point {
 }
 
 /// A resolved evaluation plan.
+///
+/// Invariant for fused schedules (everything the public constructors
+/// return): alphas strictly increasing, no zero-weight points, hence
+/// `len()` is exactly the number of model evaluations stage 2 costs.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Schedule {
     pub points: Vec<Point>,
@@ -29,15 +55,20 @@ pub struct Schedule {
 }
 
 impl Schedule {
-    /// The baseline: a uniform grid of `m` intervals (`m+1` points) over
-    /// the full path.
+    /// The baseline: a uniform grid of `m` intervals over the full path,
+    /// fused (`m + 1` points for trapezoid/eq2, `m` for left/right whose
+    /// zero-weight endpoint is pruned).
     pub fn uniform(m: usize, rule: Rule) -> Result<Schedule> {
-        Self::interval(0.0, 1.0, m, rule)
+        Ok(Self::interval(0.0, 1.0, m, rule)?.fused())
     }
 
     /// A uniform grid of `m` intervals over `[lo, hi]`, weights scaled by
     /// the interval width so concatenated subpath schedules integrate the
     /// full path (additivity of Eq. 1 over subpaths).
+    ///
+    /// Raw (unfused): zero-weight rule endpoints are kept so the grid
+    /// always has `m + 1` points. The shared-boundary alphas are pinned to
+    /// exactly `lo`/`hi` so adjacent interval grids fuse by equality.
     pub fn interval(lo: f64, hi: f64, m: usize, rule: Rule) -> Result<Schedule> {
         ensure!(m >= 1, "need m >= 1 intervals, got {m}");
         ensure!((0.0..=1.0).contains(&lo) && (0.0..=1.0).contains(&hi) && lo < hi,
@@ -46,7 +77,15 @@ impl Schedule {
         let width = hi - lo;
         let points = (0..=m)
             .map(|k| Point {
-                alpha: lo + width * (k as f64 / m as f64),
+                // Endpoints pinned exactly: `lo + width` need not round
+                // back to `hi`, and fusion relies on coincidence.
+                alpha: if k == 0 {
+                    lo
+                } else if k == m {
+                    hi
+                } else {
+                    lo + width * (k as f64 / m as f64)
+                },
                 weight: w[k] * width,
             })
             .collect();
@@ -54,8 +93,18 @@ impl Schedule {
     }
 
     /// The paper's stage-2 schedule: per-interval uniform grids over the
-    /// equal-width probe intervals, with `alloc[i]` grid intervals each.
+    /// equal-width probe intervals, with `alloc[i]` grid intervals each —
+    /// fused, so shared interval boundaries cost one model evaluation and
+    /// `len() == m + 1` for the trapezoid rule.
     pub fn nonuniform(bounds: &[f64], alloc: &[usize], rule: Rule) -> Result<Schedule> {
+        Ok(Self::nonuniform_unfused(bounds, alloc, rule)?.fused())
+    }
+
+    /// The raw per-interval concatenation, with interior boundary alphas
+    /// duplicated (`len() == Σ(m_i + 1) == m + n_int`). Kept public for
+    /// fused-vs-unfused equivalence tests and cost audits; engines must
+    /// dispatch the fused form.
+    pub fn nonuniform_unfused(bounds: &[f64], alloc: &[usize], rule: Rule) -> Result<Schedule> {
         ensure!(bounds.len() >= 2, "need at least one interval");
         ensure!(alloc.len() == bounds.len() - 1, "alloc/bounds mismatch");
         let mut points = Vec::new();
@@ -66,6 +115,32 @@ impl Schedule {
             m_total += m_i;
         }
         Ok(Schedule { points, m_total })
+    }
+
+    /// Fuse the schedule: merge runs of coincident alphas by summing their
+    /// quadrature weights, then prune zero-weight points. Preserves total
+    /// quadrature mass exactly (weight addition is the only arithmetic)
+    /// and leaves strictly increasing alphas, so `len()` afterwards equals
+    /// the number of model evaluations the schedule costs. Idempotent.
+    pub fn fused(mut self) -> Schedule {
+        let mut fused: Vec<Point> = Vec::with_capacity(self.points.len());
+        for p in self.points.drain(..) {
+            match fused.last_mut() {
+                Some(last) if (p.alpha - last.alpha).abs() <= FUSE_EPS => {
+                    last.weight += p.weight;
+                }
+                _ => fused.push(p),
+            }
+        }
+        fused.retain(|p| p.weight != 0.0);
+        Schedule { points: fused, m_total: self.m_total }
+    }
+
+    /// Whether the fused invariants hold: strictly increasing alphas and
+    /// no zero-weight points.
+    pub fn is_fused(&self) -> bool {
+        self.points.windows(2).all(|w| w[0].alpha < w[1].alpha)
+            && self.points.iter().all(|p| p.weight != 0.0)
     }
 
     /// Equal-width probe boundaries for `n_int` intervals: 0, 1/n, .., 1.
@@ -83,6 +158,7 @@ impl Schedule {
 
     /// Total quadrature mass — the path-length covered. 1.0 for exact
     /// rules over the full path ((m+1)/m for Eq2-built schedules).
+    /// Invariant under [`Schedule::fused`].
     pub fn total_weight(&self) -> f64 {
         self.points.iter().map(|p| p.weight).sum()
     }
@@ -100,6 +176,7 @@ impl Schedule {
 mod tests {
     use super::*;
     use crate::ig::allocator::Allocation;
+    use crate::ig::model::AnalyticModel;
     use crate::testutil;
 
     #[test]
@@ -112,6 +189,21 @@ mod tests {
     }
 
     #[test]
+    fn uniform_left_right_prune_zero_endpoint() {
+        // The weight-0 endpoint must not buy a model evaluation.
+        let l = Schedule::uniform(4, Rule::Left).unwrap();
+        assert_eq!(l.len(), 4);
+        assert_eq!(l.points.last().unwrap().alpha, 0.75);
+        let r = Schedule::uniform(4, Rule::Right).unwrap();
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.points[0].alpha, 0.25);
+        for s in [l, r] {
+            assert!(s.is_fused());
+            assert!((s.total_weight() - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
     fn interval_scales_weights() {
         let s = Schedule::interval(0.25, 0.5, 2, Rule::Trapezoid).unwrap();
         assert_eq!(s.points[0].alpha, 0.25);
@@ -120,17 +212,70 @@ mod tests {
     }
 
     #[test]
-    fn nonuniform_covers_path() {
+    fn interval_pins_endpoint_alphas_exactly() {
+        // Fusion relies on adjacent grids sharing bit-identical boundary
+        // alphas even for non-dyadic bounds.
+        for n_int in [3usize, 5, 7] {
+            let bounds = Schedule::probe_boundaries(n_int);
+            for i in 0..n_int {
+                let s = Schedule::interval(bounds[i], bounds[i + 1], 3, Rule::Trapezoid).unwrap();
+                assert_eq!(s.points[0].alpha, bounds[i]);
+                assert_eq!(s.points[3].alpha, bounds[i + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn nonuniform_fuses_boundaries() {
         let bounds = Schedule::probe_boundaries(4);
         let s = Schedule::nonuniform(&bounds, &[8, 4, 2, 2], Rule::Trapezoid).unwrap();
         assert_eq!(s.m_total, 16);
-        assert_eq!(s.len(), 8 + 4 + 2 + 2 + 4); // sum(m_i + 1)
+        assert_eq!(s.len(), 16 + 1); // fused: one eval per grid point
+        assert!(s.is_fused());
         assert!((s.total_weight() - 1.0).abs() < 1e-12);
-        // Monotone within each interval, intervals ordered.
+    }
+
+    #[test]
+    fn nonuniform_unfused_keeps_duplicates() {
+        let bounds = Schedule::probe_boundaries(4);
+        let s = Schedule::nonuniform_unfused(&bounds, &[8, 4, 2, 2], Rule::Trapezoid).unwrap();
+        assert_eq!(s.len(), 8 + 4 + 2 + 2 + 4); // sum(m_i + 1) = m + n_int
+        assert!(!s.is_fused());
+        // Monotone (non-strict: boundary alphas duplicated).
         let alphas: Vec<f64> = s.points.iter().map(|p| p.alpha).collect();
-        let mut sorted = alphas.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        assert_eq!(alphas, sorted);
+        assert!(alphas.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn fusion_preserves_quadrature_mass() {
+        let bounds = Schedule::probe_boundaries(5);
+        for rule in [Rule::Left, Rule::Right, Rule::Trapezoid, Rule::Eq2] {
+            let raw = Schedule::nonuniform_unfused(&bounds, &[3, 1, 4, 2, 5], rule).unwrap();
+            let fused = raw.clone().fused();
+            assert!((raw.total_weight() - fused.total_weight()).abs() < 1e-12, "{rule}");
+            assert!(fused.is_fused(), "{rule}");
+        }
+    }
+
+    #[test]
+    fn fused_is_idempotent() {
+        let bounds = Schedule::probe_boundaries(4);
+        let s = Schedule::nonuniform(&bounds, &[4, 4, 4, 4], Rule::Trapezoid).unwrap();
+        assert_eq!(s.clone().fused(), s);
+    }
+
+    #[test]
+    fn fused_left_right_nonuniform_have_m_points() {
+        // Each interval's zero-weight endpoint either fuses into the next
+        // interval's first point or (at alpha=1 for Left / alpha=0 for
+        // Right) is pruned: exactly m evaluations remain.
+        let bounds = Schedule::probe_boundaries(4);
+        for rule in [Rule::Left, Rule::Right] {
+            let s = Schedule::nonuniform(&bounds, &[8, 4, 2, 2], rule).unwrap();
+            assert_eq!(s.len(), 16, "{rule}");
+            assert!(s.is_fused());
+            assert!((s.total_weight() - 1.0).abs() < 1e-12);
+        }
     }
 
     #[test]
@@ -159,12 +304,15 @@ mod tests {
     fn to_f32_parallel_arrays() {
         let s = Schedule::uniform(2, Rule::Left).unwrap();
         let (a, w) = s.to_f32();
-        assert_eq!(a, vec![0.0, 0.5, 1.0]);
-        assert_eq!(w, vec![0.5, 0.5, 0.0]);
+        // Zero-weight alpha=1 endpoint pruned at build.
+        assert_eq!(a, vec![0.0, 0.5]);
+        assert_eq!(w, vec![0.5, 0.5]);
     }
 
     #[test]
-    fn property_nonuniform_mass_and_bounds() {
+    fn property_nonuniform_fused_invariants() {
+        // The tentpole invariants: strictly increasing alphas, unit
+        // quadrature mass, and exactly m + 1 evaluations for trapezoid.
         testutil::prop(100, 21, |rng| {
             let n_int = rng.range(1, 9);
             let m = rng.range(n_int, 200);
@@ -173,6 +321,9 @@ mod tests {
             let bounds = Schedule::probe_boundaries(n_int);
             let s = Schedule::nonuniform(&bounds, &alloc, Rule::Trapezoid).unwrap();
             assert_eq!(s.m_total, m);
+            assert_eq!(s.len(), m + 1, "trapezoid fused len must be m + 1");
+            assert!(s.is_fused());
+            assert!(s.points.windows(2).all(|w| w[0].alpha < w[1].alpha));
             assert!((s.total_weight() - 1.0).abs() < 1e-9);
             assert!(s.points.iter().all(|p| (0.0..=1.0).contains(&p.alpha)));
             assert!(s.points.first().unwrap().alpha == 0.0);
@@ -181,17 +332,53 @@ mod tests {
     }
 
     #[test]
-    fn property_equal_deltas_reduce_to_uniform_mass() {
-        // With equal interval deltas the non-uniform schedule's quadrature
-        // mass distribution matches a uniform schedule of the same m
-        // (pointwise equality only when n_int divides m).
+    fn property_fused_matches_unfused_quadrature() {
+        // Fused and unfused schedules integrate the same f64 quadrature
+        // on the analytic model to 1e-12 per value: merging coincident
+        // points only re-associates the weight sum.
+        let model = AnalyticModel::new(64, 4, 7, 300.0);
+        testutil::prop(20, 4242, |rng| {
+            let x = rng.vec_f32(64, 0.0, 1.0);
+            let n_int = rng.range(2, 8);
+            let m = rng.range(n_int, 65);
+            let deltas: Vec<f64> = (0..n_int).map(|_| rng.range_f64(0.0, 1.0)).collect();
+            let alloc = Allocation::Sqrt.allocate(m, &deltas).unwrap();
+            let bounds = Schedule::probe_boundaries(n_int);
+            let raw = Schedule::nonuniform_unfused(&bounds, &alloc, Rule::Trapezoid).unwrap();
+            let fused = raw.clone().fused();
+
+            let quad = |s: &Schedule| -> Vec<f64> {
+                let mut acc = vec![0f64; 64];
+                for p in &s.points {
+                    let point: Vec<f32> =
+                        x.iter().map(|&v| p.alpha as f32 * v).collect();
+                    let g = model.grad(&point, 0);
+                    for (a, (&gi, &xi)) in acc.iter_mut().zip(g.iter().zip(&x)) {
+                        *a += p.weight * gi * xi as f64;
+                    }
+                }
+                acc
+            };
+            testutil::assert_allclose(&quad(&raw), &quad(&fused), 0.0, 1e-12);
+        });
+    }
+
+    #[test]
+    fn property_equal_deltas_reduce_to_uniform() {
+        // With equal interval deltas the fused non-uniform schedule IS the
+        // uniform schedule (pointwise) whenever n_int divides m.
         testutil::prop(50, 22, |rng| {
             let n_int = rng.range(1, 6);
             let m = n_int * rng.range(1, 20);
             let alloc = Allocation::Sqrt.allocate(m, &vec![0.5; n_int]).unwrap();
             assert!(alloc.iter().all(|&a| a == m / n_int));
             let s = Schedule::nonuniform(&Schedule::probe_boundaries(n_int), &alloc, Rule::Trapezoid).unwrap();
-            assert!((s.total_weight() - 1.0).abs() < 1e-9);
+            let u = Schedule::uniform(m, Rule::Trapezoid).unwrap();
+            assert_eq!(s.len(), u.len());
+            for (a, b) in s.points.iter().zip(&u.points) {
+                assert!((a.alpha - b.alpha).abs() < 1e-12);
+                assert!((a.weight - b.weight).abs() < 1e-12);
+            }
         });
     }
 }

@@ -65,7 +65,8 @@ fn explain_reports_delta_and_steps() {
     assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
     let stdout = String::from_utf8_lossy(&out.stdout);
     assert!(stdout.contains("delta (Eq. 3)"), "{stdout}");
-    assert!(stdout.contains("24 gradient evals + 5 probe passes") || stdout.contains("28 gradient"), "{stdout}");
+    // Fused schedule: m=24 trapezoid costs exactly 25 gradient evals.
+    assert!(stdout.contains("25 gradient evals + 5 probe passes"), "{stdout}");
 }
 
 #[test]

@@ -49,7 +49,9 @@ fn uniform_scheme_served() {
     let resp = coord.explain(ExplainRequest::new(img.clone(), opts)).unwrap();
     let direct = ig::explain(&rt.model(), &img, None, &opts).unwrap();
     assert_eq!(resp.attribution.steps, 33);
-    assert_eq!(resp.attribution.probe_passes, 0);
+    // The router probes alpha = 0 and 1 for target + gap even for the
+    // uniform scheme: 2 forward passes, honestly accounted.
+    assert_eq!(resp.attribution.probe_passes, 2);
     close(resp.attribution.sum(), direct.sum(), 1e-4, 1e-7);
     coord.shutdown();
 }
