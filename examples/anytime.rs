@@ -1,0 +1,86 @@
+//! Anytime IG: explain to a completeness target instead of a fixed step
+//! count, with convergence-gated early exit and full gradient reuse
+//! across refinement rounds.
+//!
+//!     make artifacts && cargo run --release --example anytime
+//!
+//! Three drivers answer the same question — "give me an explanation with
+//! δ ≤ δ_th" — and report their total gradient bills:
+//!
+//! * the adaptive driver on the uniform baseline (refinement rounds over
+//!   the step grid);
+//! * the adaptive driver on the paper's non-uniform scheme (same rounds,
+//!   fewer needed);
+//! * `explain_anytime` directly: one coarse non-uniform schedule, then
+//!   nested refinement paying only the novel midpoints each round.
+//!
+//! Also demos the served path: `ExplainRequest::with_anytime` makes the
+//! coordinator run the rounds, re-enqueuing only novel lanes between them.
+
+use nuig::config::CoordinatorConfig;
+use nuig::coordinator::{Coordinator, ExplainRequest};
+use nuig::data::synth;
+use nuig::ig::{self, convergence::ConvergencePolicy, AnytimePolicy, IgOptions, Scheme};
+use nuig::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load_default("artifacts")?;
+    let model = rt.model();
+    let image = synth::gen_image(0, 0);
+
+    // Target: the residual the uniform baseline reaches at m = 64.
+    let delta_th = ig::explain(
+        &model,
+        &image,
+        None,
+        &IgOptions { scheme: Scheme::Uniform, m: 64, ..Default::default() },
+    )?
+    .delta;
+    println!("target residual: delta_th = {delta_th:.6} (uniform baseline at m = 64)\n");
+
+    // Adaptive drivers: grid-derived refinement rounds with reuse (the
+    // total cost is the final round's schedule, not the sum over rounds).
+    let policy = ConvergencePolicy::new(delta_th);
+    for scheme in [Scheme::Uniform, Scheme::NonUniform { n_int: 4 }] {
+        let opts = IgOptions { scheme, ..Default::default() };
+        let res = ig::explain_to_threshold(&model, &image, None, &opts, &policy)?;
+        println!(
+            "adaptive {:<16} converged={} rounds={:?} total gradient evals={}",
+            scheme.to_string(),
+            res.converged,
+            res.rounds,
+            res.total_steps
+        );
+    }
+
+    // Anytime: coarse start (m0 = 4 * n_int, the resolution floor for the
+    // sqrt allocation), refinement reuse, early exit.
+    let anytime = AnytimePolicy::new(delta_th);
+    let opts = IgOptions { scheme: Scheme::NonUniform { n_int: 4 }, m: 16, ..Default::default() };
+    let a = ig::explain_anytime(&model, &image, None, &opts, &anytime)?;
+    println!(
+        "anytime  nonuniform:4     delta={:.6} rounds={} total gradient evals={}",
+        a.delta, a.rounds, a.steps
+    );
+    println!("residual trajectory: {:?}\n", a.residuals.iter().map(|d| (d * 1e6).round() / 1e6).collect::<Vec<_>>());
+
+    // Served: the coordinator runs the same rounds, re-enqueuing only the
+    // novel midpoint lanes between them (converged requests exit early
+    // and free device chunk capacity).
+    let coord = Coordinator::start(&rt, CoordinatorConfig::default())?;
+    let req = ExplainRequest::new(image.clone(), opts).with_anytime(anytime);
+    let resp = coord.explain(req)?;
+    println!(
+        "served anytime: delta={:.6} rounds={} steps={} (refine rounds dispatched: {})",
+        resp.attribution.delta,
+        resp.attribution.rounds,
+        resp.attribution.steps,
+        coord.stats().refine_rounds.get()
+    );
+    println!(
+        "mean rounds/request: {:.1}",
+        coord.stats().rounds_per_request.mean()
+    );
+    coord.shutdown();
+    Ok(())
+}

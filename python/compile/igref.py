@@ -68,6 +68,70 @@ def fuse_schedule(alphas: Sequence[float], weights: Sequence[float],
             np.array([w for _, w in out], dtype=np.float64))
 
 
+#: Exact factor every carried point's weight shrinks by under
+#: :func:`refine_schedule` — mirrors ``Schedule::REFINE_CARRY``. Halving is
+#: a power-of-two scale (lossless), so an incremental accumulator carries a
+#: partial weighted gradient sum across rounds as ``partial * REFINE_CARRY``
+#: plus the novel midpoints' contributions.
+REFINE_CARRY = 0.5
+
+
+def refine_schedule(alphas: Sequence[float], weights: Sequence[float]
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """Nested refinement: the next-level fused schedule, bisecting every
+    consecutive-alpha gap.
+
+    Mirrors ``rust/src/ig/schedule.rs::Schedule::refine`` exactly:
+
+    * every current alpha is carried over bit-identically (strict
+      superset: a refined schedule never re-evaluates a point);
+    * every carried weight is exactly ``weight * REFINE_CARRY``;
+    * each novel midpoint ``(a_j + a_{j+1}) / 2`` gets weight ``gap / 2``;
+    * refining ``nonuniform_schedule(bounds, alloc)`` equals building
+      ``nonuniform_schedule(bounds, [2 * m for m in alloc])`` pointwise.
+
+    Requires a fused, endpoint-inclusive schedule (first alpha 0, last
+    alpha 1 — trapezoid/eq2 rules); Left/Right prune an endpoint at build
+    and cannot be refined in place.
+    """
+    a = np.asarray(alphas, dtype=np.float64)
+    w = np.asarray(weights, dtype=np.float64)
+    if len(a) < 2:
+        raise ValueError("cannot refine a schedule with < 2 points")
+    if not np.all(np.diff(a) > 0):
+        raise ValueError("refine requires a fused schedule (strictly increasing alphas)")
+    if a[0] != 0.0 or abs(a[-1] - 1.0) > FUSE_EPS:
+        raise ValueError(
+            "refine requires an endpoint-inclusive schedule (trapezoid/eq2); "
+            "left/right rules prune an endpoint and cannot be refined in place")
+    out_a = np.empty(2 * len(a) - 1, dtype=np.float64)
+    out_w = np.empty_like(out_a)
+    out_a[0::2] = a
+    out_w[0::2] = w * REFINE_CARRY
+    gaps = np.diff(a)
+    out_a[1::2] = a[:-1] + gaps * 0.5
+    out_w[1::2] = gaps * 0.5
+    return out_a, out_w
+
+
+def novel_points(alphas: Sequence[float], weights: Sequence[float],
+                 coarser_alphas: Sequence[float], eps: float = FUSE_EPS
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+    """The points of a refined schedule absent from the coarser one — the
+    gradient evaluations a refinement round must pay, with their refined
+    weights. Mirrors ``Schedule::novel_vs``."""
+    a = np.asarray(alphas, dtype=np.float64)
+    w = np.asarray(weights, dtype=np.float64)
+    coarse = np.asarray(coarser_alphas, dtype=np.float64)
+    idx = np.searchsorted(coarse, a)
+    mask = np.ones(len(a), dtype=bool)
+    for k in range(len(a)):
+        for j in (idx[k] - 1, idx[k]):
+            if 0 <= j < len(coarse) and abs(coarse[j] - a[k]) <= eps:
+                mask[k] = False
+    return a[mask], w[mask]
+
+
 def interval_schedule(lo: float, hi: float, m: int,
                       rule: str = "trapezoid") -> Tuple[np.ndarray, np.ndarray]:
     """Uniform m-interval grid over ``[lo, hi]``, weights scaled by the
@@ -188,6 +252,11 @@ class IgResult:
     # model-eval count — mirrors rust/src/ig/attribution.rs.
     probe_passes: int
     target: int
+    # Refinement rounds (1 = fixed-m single shot) and the per-round
+    # residual trajectory (None == [delta] for fixed-m engines) — mirrors
+    # Attribution.rounds / Attribution.residuals.
+    rounds: int = 1
+    residuals: List[float] | None = None
 
 
 def _run_points(flat, x, baseline, alphas: np.ndarray, weights: np.ndarray,
@@ -259,16 +328,15 @@ def uniform_ig(flat, x, baseline, m: int, target: int,
     return IgResult(attr, delta, len(alphas), probe_passes, target)
 
 
-def nonuniform_ig(flat, x, baseline, m: int, n_int: int, target: int,
-                  rule: str = "trapezoid", allocation: str = "sqrt",
-                  chunk: int = 16) -> IgResult:
-    """The paper's two-stage non-uniform IG.
-
-    Stage 1: probe the n_int+1 interval boundaries (forward-only), compute
-    normalized probability change per interval, allocate the m total steps
-    with the sqrt rule. Stage 2: uniform IG inside each interval with its
-    allotted count; per-interval attributions sum to the total (additivity
-    of the path integral over subpaths).
+def _probe_path(flat, x, baseline, n_int: int, target: int):
+    """Stage 1, shared by the non-uniform and anytime engines: probe the
+    ``n_int + 1`` equal-width boundaries (forward-only) and return
+    ``(bounds, deltas, gap)`` — the normalized per-interval probability
+    change (even fallback when the path is flat) and the endpoint gap
+    read off the probe for free (boundary 0 is the baseline, boundary
+    n_int the input). Mirrors ``engine::probe_path`` on the Rust side
+    (which also owns target selection; here callers pass the target in,
+    matching the original signatures).
     """
     bounds = np.arange(n_int + 1, dtype=np.float64) / n_int
     binterp = jnp.stack([
@@ -280,6 +348,22 @@ def nonuniform_ig(flat, x, baseline, m: int, n_int: int, target: int,
     deltas = np.abs(np.diff(pvals))
     norm = deltas.sum()
     deltas = deltas / norm if norm > 0 else np.full(n_int, 1.0 / n_int)
+    gap = float(pvals[-1] - pvals[0])
+    return bounds, deltas, gap
+
+
+def nonuniform_ig(flat, x, baseline, m: int, n_int: int, target: int,
+                  rule: str = "trapezoid", allocation: str = "sqrt",
+                  chunk: int = 16) -> IgResult:
+    """The paper's two-stage non-uniform IG.
+
+    Stage 1: probe the n_int+1 interval boundaries (forward-only), compute
+    normalized probability change per interval, allocate the m total steps
+    with the sqrt rule. Stage 2: uniform IG inside each interval with its
+    allotted count; per-interval attributions sum to the total (additivity
+    of the path integral over subpaths).
+    """
+    bounds, deltas, gap = _probe_path(flat, x, baseline, n_int, target)
 
     alloc = sqrt_allocate(m, deltas) if allocation == "sqrt" else linear_allocate(m, deltas)
 
@@ -294,12 +378,61 @@ def nonuniform_ig(flat, x, baseline, m: int, n_int: int, target: int,
     alphas, weights = nonuniform_schedule(bounds, alloc, rule)
     attr, _ = _run_points(flat, x, baseline, alphas, weights, target, chunk)
 
-    # Endpoint gap read off the stage-1 probe (boundary 0 is the baseline,
-    # boundary n_int the input) — no extra forward pass, like the Rust
-    # engine's Probe::endpoint_gap.
-    gap = float(pvals[-1] - pvals[0])
     delta = abs(float(attr.sum()) - gap)
     return IgResult(attr, delta, len(alphas), n_int + 1, target)
+
+
+def anytime_ig(flat, x, baseline, m0: int, n_int: int, target: int,
+               delta_target: float, max_m: int = 512,
+               rule: str = "trapezoid", allocation: str = "sqrt",
+               chunk: int = 16) -> IgResult:
+    """Anytime non-uniform IG: explain to a completeness target with
+    incremental schedule refinement and convergence-gated early exit.
+
+    Mirrors ``rust/src/ig/engine.rs::explain_anytime``: stage 1 probes
+    once; stage 2 evaluates a coarse ``m0``-step schedule, then repeatedly
+    refines it (:func:`refine_schedule`, doubling m) paying **only the
+    novel midpoints** each round — the accumulated attribution carries as
+    ``attr * REFINE_CARRY + novel_attr``, exact because every carried
+    weight halves bit-exactly. Stops once the completeness residual meets
+    ``delta_target`` or doubling would exceed ``max_m``. Total gradient
+    evaluations (``steps``) equal the final schedule's length: no alpha is
+    ever evaluated twice.
+
+    Pick ``m0 >= 4 * n_int``: refinement doubles the initial allocation
+    verbatim, and a coarser start quantizes the sqrt allocation to an
+    even split (1-step floor + largest remainder), freezing the schedule
+    into the uniform shape — mirrors the Rust engine's guidance.
+    """
+    if rule not in ("trapezoid", "eq2"):
+        raise ValueError("anytime refinement requires an endpoint-inclusive rule (trapezoid/eq2)")
+    if m0 > max_m:
+        raise ValueError(f"initial m0 ({m0}) exceeds max_m ({max_m})")
+
+    # ---- Stage 1: probe boundaries once (forward-only). ------------------
+    bounds, deltas, gap = _probe_path(flat, x, baseline, n_int, target)
+
+    alloc = sqrt_allocate(m0, deltas) if allocation == "sqrt" else linear_allocate(m0, deltas)
+    alphas, weights = nonuniform_schedule(bounds, alloc, rule)
+
+    # ---- Stage 2: initial level, then refinement rounds. -----------------
+    attr, _ = _run_points(flat, x, baseline, alphas, weights, target, chunk)
+    evals = len(alphas)
+    m = int(sum(alloc))
+    residuals = [abs(float(attr.sum()) - gap)]
+    while residuals[-1] > delta_target and 2 * m <= max_m:
+        ref_a, ref_w = refine_schedule(alphas, weights)
+        nov_a, nov_w = novel_points(ref_a, ref_w, alphas)
+        novel_attr, _ = _run_points(flat, x, baseline, nov_a, nov_w, target, chunk)
+        attr = attr * REFINE_CARRY + novel_attr
+        evals += len(nov_a)
+        alphas, weights = ref_a, ref_w
+        m *= 2
+        residuals.append(abs(float(attr.sum()) - gap))
+    assert evals == len(alphas), "reuse invariant: evals == final schedule length"
+
+    return IgResult(attr, residuals[-1], evals, n_int + 1, target,
+                    rounds=len(residuals), residuals=residuals)
 
 
 def steps_to_threshold(run, delta_th: float, m_grid: Sequence[int]) -> Tuple[int, float]:

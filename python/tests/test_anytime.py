@@ -1,0 +1,182 @@
+"""Anytime IG: nested schedule refinement + convergence-gated early exit.
+
+Mirrors the Rust contracts in ``rust/src/ig/schedule.rs::refine`` /
+``engine.rs::explain_anytime``:
+
+  * refinement is a strict superset (zero re-evaluated alphas) with
+    exactly-halved carried weights;
+  * the incremental accumulator equals a direct single-shot evaluation of
+    the final schedule to 1e-9 (the cross-language parity bound used by
+    the fusion tests too);
+  * early exit reaches an iso-convergence target at fewer total gradient
+    evaluations than the fixed-m grid walk.
+"""
+
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import data, igref, model
+
+
+@pytest.fixture(scope="module")
+def flat():
+    return model.flatten_params(model.init_params())
+
+
+@pytest.fixture(scope="module")
+def case(flat):
+    import jax.numpy as jnp
+
+    x = jnp.asarray(data.gen_image(0, 0))
+    baseline = jnp.zeros_like(x)
+    target = igref.predict_target(flat, x)
+    return x, baseline, target
+
+
+class TestRefineSchedule:
+    """Pure-numpy schedule contracts (no model evaluation)."""
+
+    def test_superset_with_exactly_halved_weights(self):
+        bounds = np.arange(5) / 4
+        a0, w0 = igref.nonuniform_schedule(bounds, [8, 4, 2, 2])
+        a1, w1 = igref.refine_schedule(a0, w0)
+        assert len(a1) == 2 * len(a0) - 1
+        # Carried points: bit-identical alphas, bit-exactly halved weights.
+        assert np.array_equal(a1[0::2], a0)
+        assert np.array_equal(w1[0::2], w0 * igref.REFINE_CARRY)
+        assert np.all(np.diff(a1) > 0)
+
+    def test_refine_equals_doubled_allocation(self):
+        bounds = np.arange(5) / 4
+        for rule in ("trapezoid", "eq2"):
+            alloc = [8, 4, 2, 2]
+            a1, w1 = igref.refine_schedule(*igref.nonuniform_schedule(bounds, alloc, rule))
+            a2, w2 = igref.nonuniform_schedule(bounds, [2 * m for m in alloc], rule)
+            assert_allclose(a1, a2, atol=1e-12, rtol=0)
+            assert_allclose(w1, w2, atol=1e-12, rtol=0)
+
+    def test_novel_points_are_the_midpoints(self):
+        a0, w0 = igref.fuse_schedule(igref.uniform_alphas(4),
+                                     igref.riemann_weights(5, "trapezoid"))
+        a1, w1 = igref.refine_schedule(a0, w0)
+        na, nw = igref.novel_points(a1, w1, a0)
+        assert_allclose(na, [0.125, 0.375, 0.625, 0.875])
+        assert_allclose(nw, [0.125] * 4)
+
+    def test_zero_reevaluated_alphas_across_rounds(self):
+        bounds = np.arange(5) / 4
+        a, w = igref.nonuniform_schedule(bounds, [3, 2, 1, 2])
+        seen = list(a)
+        evals = len(a)
+        for _ in range(4):
+            ra, rw = igref.refine_schedule(a, w)
+            na, _nw = igref.novel_points(ra, rw, a)
+            assert len(na) == len(ra) - len(a)
+            for alpha in na:
+                assert all(abs(alpha - s) > igref.FUSE_EPS for s in seen), \
+                    f"alpha {alpha} re-evaluated"
+                seen.append(alpha)
+            evals += len(na)
+            a, w = ra, rw
+        assert evals == len(a), "total evals must equal the final schedule length"
+
+    def test_rejects_endpoint_pruned_and_unfused(self):
+        la, lw = igref.fuse_schedule(igref.uniform_alphas(4),
+                                     igref.riemann_weights(5, "left"))
+        with pytest.raises(ValueError):
+            igref.refine_schedule(la, lw)
+        bounds = np.arange(3) / 2
+        ra, rw = igref.nonuniform_schedule(bounds, [2, 2], fused=False)
+        with pytest.raises(ValueError):
+            igref.refine_schedule(ra, rw)
+
+
+class TestAnytimeEngine:
+    def test_incremental_matches_direct_final_level(self, flat, case):
+        # Reuse loses nothing: with an unreachable target the engine
+        # refines m0=8 -> 64; the accumulated attribution must equal a
+        # direct evaluation of the final (doubled-allocation) schedule.
+        x, baseline, target = case
+        res = igref.anytime_ig(flat, x, baseline, m0=8, n_int=4, target=target,
+                               delta_target=0.0, max_m=64)
+        assert res.rounds == 4  # 8 -> 16 -> 32 -> 64
+        assert res.steps == 64 + 1
+
+        # Reproduce the deterministic probe -> initial allocation.
+        bounds = np.arange(5) / 4
+        import jax.numpy as jnp
+        binterp = jnp.stack([
+            jnp.asarray(baseline) + np.float32(b) * (jnp.asarray(x) - jnp.asarray(baseline))
+            for b in bounds
+        ])
+        probs = np.asarray(model.fwd_jit(flat, binterp)[0], dtype=np.float64)
+        deltas = np.abs(np.diff(probs[:, target]))
+        deltas = deltas / deltas.sum()
+        alloc0 = igref.sqrt_allocate(8, deltas)
+
+        # The reuse identity, isolated at 1e-9: evaluate the SAME point
+        # groups the anytime engine paid (initial level + each round's
+        # novel midpoints) with the FINAL level's weights. A carried
+        # weight differs from its round weight by a power of two, which
+        # scales the f32 device arithmetic exactly, so the grouped sum
+        # must equal the incremental accumulation to f64 round-off.
+        a, w = igref.nonuniform_schedule(bounds, alloc0)
+        groups = [np.array(a)]
+        for _ in range(3):
+            ra, rw = igref.refine_schedule(a, w)
+            na, _ = igref.novel_points(ra, rw, a)
+            groups.append(na)
+            a, w = ra, rw
+        grouped = np.zeros(model.F)
+        for g in groups:
+            idx = np.searchsorted(a, g)
+            part, _ = igref._run_points(flat, x, baseline, a[idx], w[idx], target)
+            grouped += part
+        assert_allclose(res.attr, grouped, atol=1e-9, rtol=0)
+
+        # End-to-end cross-check against a single-pass evaluation of the
+        # final schedule: the two runs chunk the 65 points differently,
+        # and each 16-lane chunk partial is f32 on device, so the bound
+        # here is f32 accumulation noise, not the reuse identity.
+        alphas, weights = igref.nonuniform_schedule(bounds, [8 * m for m in alloc0])
+        direct, _ = igref._run_points(flat, x, baseline, alphas, weights, target)
+        assert_allclose(res.attr, direct, atol=1e-8, rtol=1e-6)
+
+    def test_residual_trajectory_tightens(self, flat, case):
+        x, baseline, target = case
+        res = igref.anytime_ig(flat, x, baseline, m0=8, n_int=4, target=target,
+                               delta_target=0.0, max_m=128)
+        assert len(res.residuals) == res.rounds
+        assert res.residuals[-1] == res.delta
+        assert res.residuals[-1] < res.residuals[0]
+
+    def test_early_exit_beats_fixed_m_walk(self, flat, case):
+        # Iso-convergence cost: reach the uniform baseline's m=64 residual.
+        x, baseline, target = case
+        th = igref.uniform_ig(flat, x, baseline, 64, target).delta
+
+        grid = [8, 12, 16, 24, 32, 48, 64, 96, 128]
+        walk_evals = 0
+        for m in grid:
+            r = igref.nonuniform_ig(flat, x, baseline, m, 4, target)
+            walk_evals += r.steps
+            if r.delta <= th:
+                break
+        else:
+            pytest.fail("fixed-m walk did not converge on the grid")
+
+        res = igref.anytime_ig(flat, x, baseline, m0=16, n_int=4, target=target,
+                               delta_target=th, max_m=512)
+        assert res.delta <= th
+        assert res.steps < walk_evals, \
+            f"anytime {res.steps} evals must beat the walk's {walk_evals}"
+
+    def test_validation(self, flat, case):
+        x, baseline, target = case
+        with pytest.raises(ValueError):
+            igref.anytime_ig(flat, x, baseline, m0=8, n_int=4, target=target,
+                             delta_target=0.01, rule="left")
+        with pytest.raises(ValueError):
+            igref.anytime_ig(flat, x, baseline, m0=64, n_int=4, target=target,
+                             delta_target=0.01, max_m=32)

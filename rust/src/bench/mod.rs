@@ -15,7 +15,9 @@ use crate::metrics::Summary;
 /// Measurement configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct BenchConfig {
+    /// Unmeasured warm-up iterations before timing starts.
     pub warmup: usize,
+    /// Measured iterations.
     pub runs: usize,
 }
 
@@ -39,15 +41,19 @@ impl BenchConfig {
 
 /// One measured cell: label + timing summary (seconds).
 pub struct Measurement {
+    /// What was measured (table-cell label).
     pub label: String,
+    /// Exact per-run timing statistics.
     pub summary: Summary,
 }
 
 impl Measurement {
+    /// Mean run time in seconds.
     pub fn mean_s(&self) -> f64 {
         self.summary.mean()
     }
 
+    /// Mean run time in milliseconds.
     pub fn mean_ms(&self) -> f64 {
         self.summary.mean() * 1e3
     }
@@ -71,13 +77,17 @@ pub fn measure<F: FnMut()>(cfg: &BenchConfig, label: &str, mut f: F) -> Measurem
 /// Every figure-bench builds one of these; the `reproduce_paper` example
 /// collects the JSON into EXPERIMENTS.md data blocks.
 pub struct Table {
+    /// Table heading.
     pub title: String,
+    /// Column names.
     pub columns: Vec<String>,
+    /// Row cells, in insertion order.
     pub rows: Vec<Vec<String>>,
     json_rows: Vec<Json>,
 }
 
 impl Table {
+    /// An empty table with the given title and columns.
     pub fn new(title: &str, columns: &[&str]) -> Table {
         Table {
             title: title.to_string(),
@@ -87,6 +97,7 @@ impl Table {
         }
     }
 
+    /// Append one row (cell count must match the columns).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.columns.len(), "row width mismatch");
         let obj = self

@@ -16,6 +16,7 @@ use crate::jsonio::Json;
 /// Where artifacts live and which executables to load.
 #[derive(Debug, Clone)]
 pub struct RuntimeConfig {
+    /// Directory holding the AOT artifacts (manifest, HLO, params).
     pub artifacts_dir: PathBuf,
     /// Verify the manifest's corpus checksum against the local generator.
     pub verify_corpus: bool,
@@ -30,10 +31,13 @@ impl Default for RuntimeConfig {
 /// IG algorithm configuration (per request defaults).
 #[derive(Debug, Clone)]
 pub struct IgConfig {
+    /// Interpolation scheme (uniform vs non-uniform).
     pub scheme: Scheme,
     /// Total interpolation steps m (stage-2 budget).
     pub m: usize,
+    /// Quadrature rule.
     pub rule: Rule,
+    /// Stage-1 step-allocation policy.
     pub allocation: Allocation,
 }
 
@@ -80,12 +84,16 @@ impl Default for CoordinatorConfig {
 /// The composed configuration.
 #[derive(Debug, Clone, Default)]
 pub struct NuigConfig {
+    /// Artifact loading configuration.
     pub runtime: RuntimeConfig,
+    /// Per-request IG defaults.
     pub ig: IgConfig,
+    /// Serving-layer configuration.
     pub coordinator: CoordinatorConfig,
 }
 
 impl NuigConfig {
+    /// Validate all cross-field constraints eagerly (fail before load).
     pub fn validate(&self) -> Result<()> {
         if self.ig.m < 1 {
             bail!("ig.m must be >= 1, got {}", self.ig.m);

@@ -58,11 +58,14 @@ pub fn assemble(rx: &Receiver<Lane>, capacity: usize, wait: Duration) -> Assembl
 /// Occupancy bookkeeping for the batching ablation (Fig. 6-adjacent).
 #[derive(Debug, Default, Clone, Copy)]
 pub struct BatchStats {
+    /// Device chunks dispatched.
     pub chunks: u64,
+    /// Lanes carried across all chunks.
     pub lanes: u64,
 }
 
 impl BatchStats {
+    /// Record one dispatched chunk of `chunk_len` lanes.
     pub fn record(&mut self, chunk_len: usize) {
         self.chunks += 1;
         self.lanes += chunk_len as u64;
@@ -109,6 +112,7 @@ mod tests {
             reply: tx,
             completed: std::sync::atomic::AtomicBool::new(false),
             in_flight: Arc::new(AtomicUsize::new(1)),
+            anytime: None,
         });
         Lane { state, alpha, weight: 1.0 }
     }
@@ -174,6 +178,54 @@ mod tests {
             }
             Assembled::Closed => panic!(),
         }
+    }
+
+    #[test]
+    fn partial_top_up_still_dispatches_at_deadline() {
+        // The deadline top-up path: one lane arrives immediately, one
+        // mid-wait; the deadline then fires with the chunk still partial
+        // (2 of 16) and assemble must dispatch it rather than block for
+        // the full chunk.
+        let (tx, rx) = bounded(32);
+        assert!(tx.send(lane(0.0)).is_ok());
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            assert!(tx.send(lane(1.0)).is_ok());
+            tx // keep the channel open: only the deadline can end the wait
+        });
+        let t0 = Instant::now();
+        match assemble(&rx, 16, Duration::from_millis(40)) {
+            Assembled::Chunk(c) => {
+                assert_eq!(c.len(), 2, "partial chunk with the topped-up lane");
+                let waited = t0.elapsed();
+                assert!(waited >= Duration::from_millis(35), "must wait out the deadline: {waited:?}");
+                assert!(waited < Duration::from_millis(500), "must not block past the deadline");
+            }
+            Assembled::Closed => panic!("channel is open"),
+        }
+        drop(t.join().unwrap());
+    }
+
+    #[test]
+    fn close_during_top_up_dispatches_partial() {
+        // Closing mid-wait must flush the partial chunk immediately, not
+        // hold it until the deadline.
+        let (tx, rx) = bounded(32);
+        assert!(tx.send(lane(0.0)).is_ok());
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            assert!(tx.send(lane(1.0)).is_ok());
+            tx.close();
+        });
+        let t0 = Instant::now();
+        match assemble(&rx, 16, Duration::from_secs(5)) {
+            Assembled::Chunk(c) => {
+                assert_eq!(c.len(), 2);
+                assert!(t0.elapsed() < Duration::from_secs(2), "close must cut the wait short");
+            }
+            Assembled::Closed => panic!("items must drain before Closed"),
+        }
+        t.join().unwrap();
     }
 
     #[test]

@@ -12,14 +12,25 @@
 //! ```text
 //!  submit() ─► request queue ─► router workers ─┐ (stage 1: probe +
 //!                                               │  schedule + enqueue)
-//!                  device ◄─ feeder ◄─ lane queue┘
-//!                    │  igchunk_m16 (16 lanes, cross-request)
+//!                  device ◄─ feeder ◄─ lane queue┘   ▲
+//!                    │  igchunk_m16 (16 lanes,       │ anytime: novel
+//!                    │  cross-request)               │ midpoint lanes
 //!                    └─► per-lane partials ─► request accumulators ─►
-//!                        completeness check ─► response handle
+//!                        round complete ─► converged? ─┬─► response
+//!                                                      └─► refine ──┘
 //! ```
 //!
+//! Anytime requests (`ExplainRequest::anytime`) add the loop on the
+//! right: when a request's round fully lands, the feeder checks the
+//! completeness residual and either replies or re-enqueues **only the
+//! novel midpoint lanes** of the refined (doubled) schedule — carried
+//! gradients are reused via the exact weight-halving identity, and a
+//! short-converging request exits the batcher early, freeing its device
+//! chunk capacity for its neighbours.
+//!
 //! * [`request`] — request/response types and the one-shot handle;
-//! * [`state`] — in-flight request state (f64 accumulator, countdown);
+//! * [`state`] — in-flight request state (f64 accumulator, countdown,
+//!   anytime round state machine);
 //! * [`batcher`] — lane queue + chunk assembly with bounded fill-wait;
 //! * [`server`] — the [`server::Coordinator`]: lifecycle, workers, stats.
 

@@ -3,7 +3,7 @@
 use std::time::Duration;
 
 use crate::exec::channel::{bounded, Receiver, Sender};
-use crate::ig::{Attribution, IgOptions};
+use crate::ig::{AnytimePolicy, Attribution, IgOptions};
 
 /// An explanation request.
 #[derive(Debug, Clone)]
@@ -16,11 +16,27 @@ pub struct ExplainRequest {
     pub target: Option<usize>,
     /// Algorithm options (scheme, m, rule, allocation).
     pub opts: IgOptions,
+    /// Anytime refinement: when set, the coordinator serves `opts.m` as
+    /// the *initial* level and keeps doubling the schedule between rounds
+    /// (re-enqueuing only the novel midpoint lanes — every evaluated
+    /// gradient is reused) until the completeness residual meets
+    /// `delta_target` or the `max_m` budget. `None` = one fixed-m round.
+    /// Requires an endpoint-inclusive rule (trapezoid/eq2); pick
+    /// `opts.m >= 4 * n_int` so the sqrt allocation keeps a non-uniform
+    /// shape under doubling (see `ig::explain_anytime`).
+    pub anytime: Option<AnytimePolicy>,
 }
 
 impl ExplainRequest {
+    /// A fixed-m request with black baseline and predicted-class target.
     pub fn new(image: Vec<f32>, opts: IgOptions) -> Self {
-        ExplainRequest { image, baseline: None, target: None, opts }
+        ExplainRequest { image, baseline: None, target: None, opts, anytime: None }
+    }
+
+    /// Opt this request into anytime refinement under `policy`.
+    pub fn with_anytime(mut self, policy: AnytimePolicy) -> Self {
+        self.anytime = Some(policy);
+        self
     }
 }
 
@@ -29,6 +45,7 @@ impl ExplainRequest {
 pub struct ExplainResponse {
     /// Monotonic id assigned at submission.
     pub id: u64,
+    /// The computed attribution with full accounting.
     pub attribution: Attribution,
     /// Time from submit to completion.
     pub total_latency: Duration,
@@ -38,6 +55,7 @@ pub struct ExplainResponse {
 
 /// One-shot handle for an in-flight request.
 pub struct ResponseHandle {
+    /// The submission id this handle resolves.
     pub id: u64,
     rx: Receiver<anyhow::Result<ExplainResponse>>,
 }
@@ -84,6 +102,8 @@ mod tests {
                 probe_passes: 0,
                 delta: 0.0,
                 endpoint_gap: 0.0,
+                rounds: 1,
+                residuals: vec![0.0],
                 breakdown: StageBreakdown::default(),
             },
             total_latency: Duration::from_millis(1),
@@ -121,5 +141,8 @@ mod tests {
         let r = ExplainRequest::new(vec![0.0; 8], IgOptions::default());
         assert!(r.baseline.is_none());
         assert!(r.target.is_none());
+        assert!(r.anytime.is_none());
+        let r = r.with_anytime(crate::ig::AnytimePolicy::new(0.01));
+        assert_eq!(r.anytime.unwrap().delta_target, 0.01);
     }
 }

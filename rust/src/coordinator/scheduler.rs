@@ -26,8 +26,11 @@ use super::state::Lane;
 /// Scheduling policy selector.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Policy {
+    /// Requests drain in arrival order.
     Fifo,
+    /// One lane per in-flight request per turn.
     RoundRobin,
+    /// The request with the fewest remaining lanes goes first (SJF).
     ShortestFirst,
 }
 
@@ -42,6 +45,8 @@ impl std::fmt::Display for Policy {
 }
 
 impl Policy {
+    /// Parse `fifo|round-robin|shortest-first` (CLI syntax; `rr`/`sjf`
+    /// accepted as aliases).
     pub fn parse(s: &str) -> Result<Policy> {
         Ok(match s {
             "fifo" => Policy::Fifo,
@@ -100,6 +105,7 @@ impl LaneScheduler {
         }
     }
 
+    /// The scheduling policy this queue was built with.
     pub fn policy(&self) -> Policy {
         self.policy
     }
@@ -126,6 +132,36 @@ impl LaneScheduler {
             }
             st = self.not_full.wait(st).unwrap();
         }
+    }
+
+    /// Re-enqueue a refinement round's lanes for an in-flight request,
+    /// bypassing the capacity gate.
+    ///
+    /// The feeder calls this between anytime rounds; it must never block —
+    /// the feeder is the only consumer, so waiting on `not_full` here
+    /// would deadlock the whole device pipeline. The bypass trades strict
+    /// capacity enforcement for that deadlock-freedom: refill batches
+    /// *grow* round over round (a round's novel midpoints are one fewer
+    /// than the next level's, so round r re-adds ~2× what it just
+    /// drained), and the real bound is per-request — at most `max_m / 2`
+    /// lanes in the final round, i.e. total refill pressure ≤ in-flight
+    /// anytime requests × `max_m / 2` lanes beyond what the routers'
+    /// `not_full` gate admitted. At the default config (64-request queue,
+    /// 24-byte lanes, max_m = 512) that is a few hundred KiB, accepted in
+    /// exchange for converged requests exiting the batcher early.
+    pub fn push_refill(&self, id: u64, lanes: Vec<Lane>) -> Result<()> {
+        if lanes.is_empty() {
+            return Ok(());
+        }
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            bail!("lane scheduler closed");
+        }
+        st.total += lanes.len();
+        st.reqs.push_back(ReqLanes { id, lanes: lanes.into() });
+        drop(st);
+        self.not_empty.notify_all();
+        Ok(())
     }
 
     /// Pop up to `capacity` lanes according to the policy, waiting at most
@@ -221,6 +257,7 @@ impl LaneScheduler {
         self.state.lock().unwrap().total
     }
 
+    /// Whether no lanes are queued.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -255,6 +292,7 @@ mod tests {
             reply: tx,
             completed: AtomicBool::new(false),
             in_flight: Arc::new(AtomicUsize::new(1)),
+            anytime: None,
         });
         (0..n).map(|k| Lane { state: state.clone(), alpha: k as f32, weight: 1.0 }).collect()
     }
@@ -344,6 +382,20 @@ mod tests {
         let s = LaneScheduler::new(Policy::Fifo, 4);
         s.push_request(1, vec![]).unwrap();
         assert!(s.is_empty());
+    }
+
+    #[test]
+    fn push_refill_bypasses_capacity_without_blocking() {
+        // Capacity 4 already full: a blocking push would deadlock the
+        // feeder; push_refill must admit the refinement lanes immediately.
+        let s = LaneScheduler::new(Policy::Fifo, 4);
+        s.push_request(1, lanes(1, 4)).unwrap();
+        s.push_refill(1, lanes(1, 3)).unwrap();
+        assert_eq!(s.len(), 7);
+        assert_eq!(pop_ids(&s, 16).len(), 7);
+        s.close();
+        assert!(s.push_refill(1, lanes(1, 1)).is_err());
+        assert!(s.push_refill(1, vec![]).is_ok(), "empty refill is a no-op even when closed");
     }
 
     #[test]

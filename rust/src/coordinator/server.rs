@@ -19,16 +19,28 @@ use crate::runtime::{Arg, ExeKind, Runtime, RuntimeHandle};
 use super::batcher::BatchStats;
 use super::request::{ExplainRequest, ExplainResponse, ResponseHandle};
 use super::scheduler::{LaneScheduler, Popped};
-use super::state::{Lane, RequestState};
+use super::state::{AnytimeRounds, Lane, RequestState, RoundOutcome};
 
 /// Serving statistics snapshot.
 pub struct CoordinatorStats {
+    /// Requests accepted by `submit`.
     pub submitted: Counter,
+    /// Requests finalized with a successful attribution.
     pub completed: Counter,
+    /// Requests that failed (validation, probe, or device errors).
     pub failed: Counter,
+    /// Submit-to-response latency distribution (seconds).
     pub e2e_latency: Histogram,
+    /// Time spent in the request queue before a router picked it up.
     pub queue_wait: Histogram,
+    /// EWMA of device-chunk occupancy in [0, 1].
     pub batch_occupancy: Ewma,
+    /// Anytime refinement rounds dispatched beyond requests' first rounds
+    /// (each one re-enqueued a batch of novel midpoint lanes).
+    pub refine_rounds: Counter,
+    /// Rounds per completed request (1 = fixed-m or converged at the
+    /// initial level).
+    pub rounds_per_request: Histogram,
     pub(crate) batch: Mutex<BatchStats>,
 }
 
@@ -41,6 +53,10 @@ impl CoordinatorStats {
             e2e_latency: Histogram::new_latency(),
             queue_wait: Histogram::new_latency(),
             batch_occupancy: Ewma::new(0.05),
+            refine_rounds: Counter::new(),
+            // Small-integer histogram: 1 bucket per doubling covers
+            // 1..4096 rounds, far beyond any real refinement depth.
+            rounds_per_request: Histogram::new(1.0, 1, 12),
             batch: Mutex::new(BatchStats::default()),
         }
     }
@@ -190,10 +206,12 @@ impl Coordinator {
         Ok(())
     }
 
+    /// Live serving statistics.
     pub fn stats(&self) -> &CoordinatorStats {
         &self.stats
     }
 
+    /// The configuration this coordinator was started with.
     pub fn config(&self) -> &CoordinatorConfig {
         &self.cfg
     }
@@ -244,6 +262,23 @@ impl ExplainRequest {
         }
         if let Some(t) = self.target {
             ensure!(t < num_classes, "target {t} out of range");
+        }
+        if let Some(p) = &self.anytime {
+            ensure!(
+                self.opts.rule.keeps_endpoints(),
+                "anytime refinement requires an endpoint-inclusive rule (trapezoid/eq2), got {}",
+                self.opts.rule
+            );
+            ensure!(
+                p.max_m >= self.opts.m,
+                "anytime max_m ({}) must be >= the initial m ({})",
+                p.max_m,
+                self.opts.m
+            );
+            ensure!(
+                p.delta_target.is_finite() && p.delta_target >= 0.0,
+                "anytime delta_target must be finite and >= 0"
+            );
         }
         Ok(())
     }
@@ -378,6 +413,18 @@ fn route_one(
     // model-eval count of the serving path.
     let probe_passes = bounds.len();
 
+    // Round-0 lane specs, captured before the schedule moves into the
+    // anytime state (which owns it for refinement between rounds).
+    let lane_points: Vec<(f32, f32)> =
+        schedule.points.iter().map(|p| (p.alpha as f32, p.weight as f32)).collect();
+    let steps0 = schedule.len();
+    let anytime = req.anytime.map(|policy| AnytimeRounds {
+        policy,
+        evals: AtomicUsize::new(steps0),
+        schedule: Mutex::new(schedule),
+        residuals: Mutex::new(Vec::new()),
+    });
+
     let state = Arc::new(RequestState {
         id,
         image: Arc::new(req.image),
@@ -385,8 +432,8 @@ fn route_one(
         target,
         opts: req.opts,
         acc: Mutex::new(vec![0f64; features]),
-        remaining: AtomicUsize::new(schedule.len()),
-        steps: schedule.len(),
+        remaining: AtomicUsize::new(steps0),
+        steps: steps0,
         probe_passes,
         endpoint_gap: probe.endpoint_gap(),
         breakdown: Mutex::new(StageBreakdown {
@@ -399,20 +446,21 @@ fn route_one(
         reply,
         completed: std::sync::atomic::AtomicBool::new(false),
         in_flight: in_flight.clone(),
+        anytime,
     });
 
     // ---- Fan out lanes (atomically, so the scheduler sees the whole
     // request and within-request alpha order is preserved). One lane per
     // fused schedule point: `Attribution.steps` reported back equals the
     // number of device-batch slots this request actually consumes. -------
-    let req_lanes: Vec<Lane> = schedule
-        .points
+    let req_lanes: Vec<Lane> = lane_points
         .iter()
-        .map(|p| Lane { state: state.clone(), alpha: p.alpha as f32, weight: p.weight as f32 })
+        .map(|&(alpha, weight)| Lane { state: state.clone(), alpha, weight })
         .collect();
     if let Err(e) = lanes.push_request(id, req_lanes) {
-        state.fail(anyhow!("lane scheduler closed during fan-out: {e}"));
-        stats.failed.inc();
+        if state.fail(anyhow!("lane scheduler closed during fan-out: {e}")) {
+            stats.failed.inc();
+        }
         return Err(anyhow!("lane scheduler closed"));
     }
     Ok(())
@@ -421,6 +469,26 @@ fn route_one(
 // ---------------------------------------------------------------------------
 // Feeder: chunk assembly + device execution + scatter.
 // ---------------------------------------------------------------------------
+
+/// Book a request's completion: stamp the execute time, send the reply,
+/// and record the serving stats (rounds, completion, e2e latency). Stats
+/// are recorded only if this call actually completed the request — a
+/// request that already failed on an earlier chunk settles exactly once.
+fn finish_request(stats: &Arc<CoordinatorStats>, state: &Arc<RequestState>) {
+    {
+        let mut bd = state.breakdown.lock().unwrap();
+        // Execute time ≈ submit-to-finalize minus probe and schedule
+        // (good enough for the overhead fractions; per-chunk attribution
+        // would need device-side tagging).
+        bd.execute =
+            state.submitted_at.elapsed() - bd.probe - bd.schedule - state.queue_wait;
+    }
+    if state.finalize() {
+        stats.rounds_per_request.record(state.rounds() as f64);
+        stats.completed.inc();
+        stats.e2e_latency.record(state.submitted_at.elapsed().as_secs_f64());
+    }
+}
 
 fn feeder_loop(
     scheduler: &LaneScheduler,
@@ -473,35 +541,40 @@ fn feeder_loop(
                 let partials = &outs[0];
                 for (k, lane) in lanes.iter().enumerate() {
                     let row = &partials[k * features..(k + 1) * features];
-                    if lane.state.add_lane(row) {
-                        {
-                            let mut bd = lane.state.breakdown.lock().unwrap();
-                            // Execute time ≈ submit-to-finalize minus probe
-                            // and schedule (good enough for the overhead
-                            // fractions; per-chunk attribution would need
-                            // device-side tagging).
-                            bd.execute = lane.state.submitted_at.elapsed()
-                                - bd.probe
-                                - bd.schedule
-                                - lane.state.queue_wait;
+                    if !lane.state.add_lane(row) {
+                        continue;
+                    }
+                    // Last lane of this request's round: finalize, or
+                    // refine and re-enqueue the novel midpoint lanes.
+                    match lane.state.on_round_complete() {
+                        RoundOutcome::Refine(next) => {
+                            let novel = next.len();
+                            match scheduler.push_refill(lane.state.id, next) {
+                                Ok(()) => stats.refine_rounds.inc(),
+                                Err(_) => {
+                                    // Scheduler closed mid-refinement
+                                    // (shutdown drain): roll the round
+                                    // state back and deliver the
+                                    // completed round — the anytime
+                                    // best-effort contract.
+                                    lane.state.abort_refinement(novel);
+                                    finish_request(&stats, &lane.state);
+                                }
+                            }
                         }
-                        lane.state.finalize();
-                        stats.completed.inc();
-                        stats
-                            .e2e_latency
-                            .record(lane.state.submitted_at.elapsed().as_secs_f64());
+                        RoundOutcome::Finalize => finish_request(&stats, &lane.state),
                     }
                 }
             }
             Err(e) => {
-                // Device failure: fail every distinct request in the chunk
-                // (RequestState::fail is idempotent, so a request spanning
-                // several failed chunks settles exactly once).
+                // Device failure: fail every distinct request in the chunk.
+                // RequestState::fail is idempotent and reports whether THIS
+                // call settled the request, so one spanning several failed
+                // chunks settles — and is counted — exactly once.
                 let msg = format!("device execution failed: {e}");
                 let mut seen = std::collections::BTreeSet::new();
                 for lane in &lanes {
-                    if seen.insert(lane.state.id) {
-                        lane.state.fail(anyhow!("{msg}"));
+                    if seen.insert(lane.state.id) && lane.state.fail(anyhow!("{msg}")) {
                         stats.failed.inc();
                     }
                 }

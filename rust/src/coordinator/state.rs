@@ -1,44 +1,87 @@
-//! In-flight request state: the accumulator each device lane writes into
-//! and the countdown that triggers finalization.
+//! In-flight request state: the accumulator each device lane writes into,
+//! the countdown that triggers round completion, and the anytime
+//! refinement state machine (finalize vs refine-and-re-enqueue).
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::exec::channel::Sender;
-use crate::ig::{Attribution, IgOptions};
+use crate::ig::schedule::Schedule;
+use crate::ig::{AnytimePolicy, Attribution, IgOptions};
 use crate::metrics::StageBreakdown;
 
 use super::request::ExplainResponse;
 
+/// Mutable anytime-refinement state for one request (present only when
+/// the request opted in via `ExplainRequest::anytime`).
+pub struct AnytimeRounds {
+    /// The convergence gate (target residual + interval budget).
+    pub policy: AnytimePolicy,
+    /// The current round's fused schedule; refined in place between
+    /// rounds so the novel midpoint lanes can be derived.
+    pub schedule: Mutex<Schedule>,
+    /// Total gradient lanes dispatched across rounds — equals the current
+    /// schedule's length (refinement never re-evaluates an alpha).
+    pub evals: AtomicUsize,
+    /// δ after each completed round (the residual trajectory).
+    pub residuals: Mutex<Vec<f64>>,
+}
+
+/// What the feeder must do once a request's round has fully landed.
+pub enum RoundOutcome {
+    /// Done (fixed-m, converged, or budget-capped): finalize + reply.
+    Finalize,
+    /// Unconverged and in budget: re-enqueue these novel midpoint lanes
+    /// as the next refinement round.
+    Refine(Vec<Lane>),
+}
+
 /// Shared state for one in-flight request. Lanes (device batch slots)
-/// hold an `Arc<RequestState>`; the last lane to land finalizes.
+/// hold an `Arc<RequestState>`; the last lane of a round to land triggers
+/// [`RequestState::on_round_complete`], which either finalizes or starts
+/// the next refinement round.
 pub struct RequestState {
+    /// Submission id (monotonic, coordinator-assigned).
     pub id: u64,
+    /// The explained input image.
     pub image: Arc<Vec<f32>>,
+    /// The baseline x′.
     pub baseline: Arc<Vec<f32>>,
+    /// Explained class.
     pub target: usize,
+    /// The request's algorithm options.
     pub opts: IgOptions,
     /// f64 attribution accumulator (lanes add under the mutex; adds are
     /// ~3k doubles per lane — negligible next to a device execution).
+    /// On refinement the whole vector is scaled by
+    /// `Schedule::REFINE_CARRY` (carried weights halve exactly).
     pub acc: Mutex<Vec<f64>>,
-    /// Gradient-point lanes still outstanding.
+    /// Gradient-point lanes still outstanding in the current round.
     pub remaining: AtomicUsize,
-    /// Total gradient evaluations — the fused schedule's point count, so
-    /// one lane == one model evaluation, exactly.
+    /// Round-0 gradient evaluations — the initial fused schedule's point
+    /// count, so one lane == one model evaluation, exactly. For anytime
+    /// requests the live total lives in `AnytimeRounds::evals`.
     pub steps: usize,
+    /// Stage-1 forward passes (probe) this request performed.
     pub probe_passes: usize,
     /// f(x) − f(x′) from stage 1.
     pub endpoint_gap: f64,
+    /// Wall-clock stage decomposition, filled in as stages complete.
     pub breakdown: Mutex<StageBreakdown>,
+    /// When the request entered `submit`.
     pub submitted_at: Instant,
+    /// Time spent in the request queue before a router picked it up.
     pub queue_wait: std::time::Duration,
+    /// One-shot reply channel to the caller's `ResponseHandle`.
     pub reply: Sender<anyhow::Result<ExplainResponse>>,
     /// Set once on finalize/fail; makes completion idempotent (a request
     /// spanning several chunks may see a late failure after finishing).
     pub completed: AtomicBool,
     /// The coordinator's in-flight gauge; decremented exactly once.
     pub in_flight: Arc<AtomicUsize>,
+    /// Anytime refinement state; `None` = single fixed-m round.
+    pub anytime: Option<AnytimeRounds>,
 }
 
 impl RequestState {
@@ -52,7 +95,8 @@ impl RequestState {
     }
 
     /// Add one lane's partial row; returns `true` if this was the last
-    /// outstanding lane (caller must then [`RequestState::finalize`]).
+    /// outstanding lane of the current round (caller must then call
+    /// [`RequestState::on_round_complete`] and act on the outcome).
     pub fn add_lane(&self, partial: &[f32]) -> bool {
         {
             let mut acc = self.acc.lock().unwrap();
@@ -64,21 +108,117 @@ impl RequestState {
         self.remaining.fetch_sub(1, Ordering::AcqRel) == 1
     }
 
+    /// Decide what happens after a round fully lands: finalize, or refine
+    /// the schedule and hand back the next round's novel lanes.
+    ///
+    /// Only the thread that observed `add_lane` return `true` may call
+    /// this (the feeder); it is not re-entrant within a round. The
+    /// refinement step mirrors `engine::refine_loop` exactly: the
+    /// accumulator is scaled by `Schedule::REFINE_CARRY` (every carried
+    /// lane's weight halves bit-exactly under refinement) and only the
+    /// novel midpoints are re-enqueued — no gradient is ever recomputed.
+    pub fn on_round_complete(self: &Arc<Self>) -> RoundOutcome {
+        // A request that already settled (e.g. a device failure on an
+        // earlier chunk of this round) must not spawn refinement rounds
+        // from a partial accumulator; the caller's finalize() is then a
+        // no-op and no further lanes are enqueued.
+        if self.completed.load(Ordering::Acquire) {
+            return RoundOutcome::Finalize;
+        }
+        let Some(any) = &self.anytime else {
+            return RoundOutcome::Finalize;
+        };
+        let delta = {
+            let acc = self.acc.lock().unwrap();
+            let sum: f64 = acc.iter().sum();
+            (sum - self.endpoint_gap).abs()
+        };
+        any.residuals.lock().unwrap().push(delta);
+
+        let mut sched = any.schedule.lock().unwrap();
+        if !any.policy.should_refine(delta, sched.m_total) {
+            return RoundOutcome::Finalize;
+        }
+        let refined = match sched.refine() {
+            // Validated at submit (endpoint-inclusive rule); defensive.
+            Err(_) => return RoundOutcome::Finalize,
+            Ok(r) => r,
+        };
+        let novel = refined.novel_vs(&sched);
+        {
+            let mut acc = self.acc.lock().unwrap();
+            for v in acc.iter_mut() {
+                *v *= Schedule::REFINE_CARRY;
+            }
+        }
+        self.remaining.store(novel.len(), Ordering::Release);
+        any.evals.fetch_add(novel.len(), Ordering::AcqRel);
+        *sched = refined;
+        drop(sched);
+
+        let lanes = novel
+            .iter()
+            .map(|p| Lane { state: self.clone(), alpha: p.alpha as f32, weight: p.weight as f32 })
+            .collect();
+        RoundOutcome::Refine(lanes)
+    }
+
+    /// Undo the state mutations of a refinement round whose novel lanes
+    /// could never be enqueued (scheduler closed during shutdown drain):
+    /// restore the accumulator scale — halving is a power-of-two scale,
+    /// so doubling restores it bit-exactly — and the eval count, so a
+    /// subsequent [`RequestState::finalize`] delivers the just-completed
+    /// round's attribution unchanged (the anytime best-effort contract).
+    pub fn abort_refinement(&self, novel_lanes: usize) {
+        let Some(any) = &self.anytime else { return };
+        {
+            let mut acc = self.acc.lock().unwrap();
+            for v in acc.iter_mut() {
+                *v /= Schedule::REFINE_CARRY;
+            }
+        }
+        any.evals.fetch_sub(novel_lanes, Ordering::AcqRel);
+    }
+
+    /// Refinement rounds completed so far (1 for fixed-m requests).
+    pub fn rounds(&self) -> usize {
+        self.anytime
+            .as_ref()
+            .map(|a| a.residuals.lock().unwrap().len().max(1))
+            .unwrap_or(1)
+    }
+
     /// Build and send the response. Idempotent; first caller wins.
-    pub fn finalize(&self) {
+    /// Returns `true` iff this call actually completed the request (so
+    /// callers can attribute completion stats exactly once — a request
+    /// that already failed must not also count as completed).
+    pub fn finalize(&self) -> bool {
         if !self.try_complete() {
-            return;
+            return false;
         }
         let values = self.acc.lock().unwrap().clone();
         let sum: f64 = values.iter().sum();
         let delta = (sum - self.endpoint_gap).abs();
+        let (steps, rounds, residuals) = match &self.anytime {
+            None => (self.steps, 1, vec![delta]),
+            Some(any) => {
+                let residuals = any.residuals.lock().unwrap().clone();
+                (
+                    any.evals.load(Ordering::Acquire),
+                    residuals.len().max(1),
+                    if residuals.is_empty() { vec![delta] } else { residuals },
+                )
+            }
+        };
         let attribution = Attribution {
             values,
             target: self.target,
-            steps: self.steps,
+            steps,
             probe_passes: self.probe_passes,
             delta,
             endpoint_gap: self.endpoint_gap,
+            rounds,
+            residuals,
             breakdown: *self.breakdown.lock().unwrap(),
         };
         let resp = ExplainResponse {
@@ -89,23 +229,30 @@ impl RequestState {
         };
         // The client may have dropped its handle; that's fine.
         let _ = self.reply.send(Ok(resp));
+        true
     }
 
     /// Abort with an error (probe failure, device down, ...). Idempotent;
-    /// a no-op if the request already finalized.
-    pub fn fail(&self, err: anyhow::Error) {
+    /// a no-op if the request already settled. Returns `true` iff this
+    /// call actually failed the request, so callers can count a request
+    /// spanning several failed device chunks exactly once.
+    pub fn fail(&self, err: anyhow::Error) -> bool {
         if !self.try_complete() {
-            return;
+            return false;
         }
         let _ = self.reply.send(Err(err));
+        true
     }
 }
 
 /// One device-batch slot: a gradient point belonging to a request.
 #[derive(Clone)]
 pub struct Lane {
+    /// The owning request's shared state (accumulator + countdown).
     pub state: Arc<RequestState>,
+    /// Interpolation constant of this gradient point.
     pub alpha: f32,
+    /// Quadrature weight of this gradient point.
     pub weight: f32,
 }
 
@@ -116,6 +263,14 @@ mod tests {
     use crate::ig::IgOptions;
 
     fn mk_state(n_lanes: usize, gap: f64) -> (Arc<RequestState>, ResponseHandle) {
+        mk_state_anytime(n_lanes, gap, None)
+    }
+
+    fn mk_state_anytime(
+        n_lanes: usize,
+        gap: f64,
+        anytime: Option<AnytimeRounds>,
+    ) -> (Arc<RequestState>, ResponseHandle) {
         let (tx, handle) = ResponseHandle::pair(1);
         let st = Arc::new(RequestState {
             id: 1,
@@ -134,6 +289,7 @@ mod tests {
             reply: tx,
             completed: AtomicBool::new(false),
             in_flight: Arc::new(AtomicUsize::new(1)),
+            anytime,
         });
         (st, handle)
     }
@@ -165,7 +321,8 @@ mod tests {
     #[test]
     fn fail_delivers_error() {
         let (st, handle) = mk_state(2, 0.0);
-        st.fail(anyhow::anyhow!("device exploded"));
+        assert!(st.fail(anyhow::anyhow!("device exploded")), "first fail settles");
+        assert!(!st.fail(anyhow::anyhow!("second chunk failed too")), "later fails are no-ops");
         let err = handle.wait().unwrap_err().to_string();
         assert!(err.contains("device exploded"));
     }
@@ -188,6 +345,148 @@ mod tests {
         st.fail(anyhow::anyhow!("boom"));
         st.finalize();
         assert!(handle.wait().is_err());
+    }
+
+    fn mk_anytime(delta_target: f64, max_m: usize, m0: usize) -> AnytimeRounds {
+        let schedule =
+            Schedule::uniform(m0, crate::ig::Rule::Trapezoid).expect("valid uniform schedule");
+        AnytimeRounds {
+            policy: AnytimePolicy::with_max_m(delta_target, max_m).unwrap(),
+            evals: AtomicUsize::new(schedule.len()),
+            schedule: Mutex::new(schedule),
+            residuals: Mutex::new(Vec::new()),
+        }
+    }
+
+    #[test]
+    fn fixed_m_round_completion_finalizes() {
+        let (st, handle) = mk_state(1, 0.5);
+        assert!(st.add_lane(&[0.5, 0.0, 0.0, 0.0]));
+        assert!(matches!(st.on_round_complete(), RoundOutcome::Finalize));
+        st.finalize();
+        let a = handle.wait().unwrap().attribution;
+        assert_eq!(a.rounds, 1);
+        assert_eq!(a.residuals, vec![a.delta]);
+    }
+
+    #[test]
+    fn converged_anytime_round_finalizes_with_trajectory() {
+        // acc sums to the gap exactly: δ = 0 ≤ target → finalize.
+        let (st, handle) = mk_state_anytime(3, 1.0, Some(mk_anytime(0.01, 64, 2)));
+        st.add_lane(&[0.5, 0.0, 0.0, 0.0]);
+        st.add_lane(&[0.25, 0.0, 0.0, 0.0]);
+        assert!(st.add_lane(&[0.25, 0.0, 0.0, 0.0]));
+        assert!(matches!(st.on_round_complete(), RoundOutcome::Finalize));
+        st.finalize();
+        let a = handle.wait().unwrap().attribution;
+        assert_eq!(a.rounds, 1);
+        assert_eq!(a.residuals.len(), 1);
+        assert!(a.delta < 1e-6);
+        assert_eq!(a.steps, 3, "anytime evals == dispatched lanes");
+    }
+
+    #[test]
+    fn unconverged_round_refines_with_novel_midpoint_lanes() {
+        // m0 = 2 (3 lanes, alphas 0/.5/1); δ far above target → refine.
+        let (st, _handle) = mk_state_anytime(3, 10.0, Some(mk_anytime(1e-9, 64, 2)));
+        st.add_lane(&[1.0, 0.0, 0.0, 0.0]);
+        st.add_lane(&[1.0, 0.0, 0.0, 0.0]);
+        assert!(st.add_lane(&[2.0, 0.0, 0.0, 0.0]));
+        let lanes = match st.on_round_complete() {
+            RoundOutcome::Refine(l) => l,
+            RoundOutcome::Finalize => panic!("must refine"),
+        };
+        // Novel lanes are the two midpoints of the 3-point grid, at the
+        // refined interior weight (0.25 for m = 4).
+        assert_eq!(lanes.len(), 2);
+        let alphas: Vec<f32> = lanes.iter().map(|l| l.alpha).collect();
+        assert_eq!(alphas, vec![0.25, 0.75]);
+        assert!(lanes.iter().all(|l| (l.weight - 0.25).abs() < 1e-6));
+        // Accumulator carried at half weight; countdown reset for round 2.
+        assert_eq!(st.acc.lock().unwrap()[0], 2.0);
+        assert_eq!(st.remaining.load(Ordering::Acquire), 2);
+        let any = st.anytime.as_ref().unwrap();
+        assert_eq!(any.evals.load(Ordering::Acquire), 5, "3 + 2 novel");
+        assert_eq!(any.schedule.lock().unwrap().m_total, 4);
+        assert_eq!(st.rounds(), 1, "round 2 not yet complete");
+    }
+
+    #[test]
+    fn failed_request_never_refines() {
+        // A device failure on one chunk settles the request; a later
+        // chunk completing the round must not spawn refinement lanes
+        // from the partial accumulator (and finalize stays a no-op).
+        let (st, handle) = mk_state_anytime(3, 10.0, Some(mk_anytime(1e-9, 64, 2)));
+        st.fail(anyhow::anyhow!("device down"));
+        st.add_lane(&[1.0, 0.0, 0.0, 0.0]);
+        st.add_lane(&[1.0, 0.0, 0.0, 0.0]);
+        assert!(st.add_lane(&[1.0, 0.0, 0.0, 0.0]));
+        assert!(matches!(st.on_round_complete(), RoundOutcome::Finalize));
+        assert!(!st.finalize(), "already settled: finalize must report a no-op");
+        assert!(handle.wait().is_err());
+    }
+
+    #[test]
+    fn aborted_refinement_restores_the_completed_round() {
+        // A refinement whose lanes can't be enqueued (shutdown) must not
+        // corrupt the delivered attribution: the halved accumulator and
+        // bumped eval count are rolled back bit-exactly.
+        let (st, handle) = mk_state_anytime(3, 10.0, Some(mk_anytime(1e-9, 64, 2)));
+        st.add_lane(&[1.0, 0.0, 0.0, 0.0]);
+        st.add_lane(&[1.0, 0.0, 0.0, 0.0]);
+        assert!(st.add_lane(&[1.0, 0.0, 0.0, 0.0]));
+        let lanes = match st.on_round_complete() {
+            RoundOutcome::Refine(l) => l,
+            RoundOutcome::Finalize => panic!("must refine"),
+        };
+        st.abort_refinement(lanes.len());
+        st.finalize();
+        let a = handle.wait().unwrap().attribution;
+        assert_eq!(a.values[0], 3.0, "accumulator restored, not halved");
+        assert_eq!(a.steps, 3, "evals roll back to the dispatched lanes");
+        assert_eq!(a.rounds, 1);
+        assert_eq!(a.residuals, vec![a.delta], "trajectory matches the delivered round");
+    }
+
+    #[test]
+    fn budget_cap_finalizes_unconverged() {
+        // max_m == m0: no refinement allowed, deliver best effort.
+        let (st, handle) = mk_state_anytime(3, 10.0, Some(mk_anytime(1e-9, 2, 2)));
+        st.add_lane(&[1.0, 0.0, 0.0, 0.0]);
+        st.add_lane(&[1.0, 0.0, 0.0, 0.0]);
+        assert!(st.add_lane(&[1.0, 0.0, 0.0, 0.0]));
+        assert!(matches!(st.on_round_complete(), RoundOutcome::Finalize));
+        st.finalize();
+        let a = handle.wait().unwrap().attribution;
+        assert!(a.delta > 1.0, "unconverged best effort is still delivered");
+        assert_eq!(a.rounds, 1);
+    }
+
+    #[test]
+    fn two_round_refinement_accumulates_and_reports() {
+        let (st, handle) = mk_state_anytime(3, 4.0, Some(mk_anytime(0.51, 64, 2)));
+        for _ in 0..2 {
+            st.add_lane(&[1.0, 0.0, 0.0, 0.0]);
+        }
+        assert!(st.add_lane(&[1.0, 0.0, 0.0, 0.0])); // acc 3.0, δ = 1.0 > .51
+        let lanes = match st.on_round_complete() {
+            RoundOutcome::Refine(l) => l,
+            RoundOutcome::Finalize => panic!("round 1 must refine"),
+        };
+        assert_eq!(lanes.len(), 2);
+        // Round 2: carried 1.5 + novel 2.0 → δ = 0.5 ≤ target → finalize.
+        st.add_lane(&[1.0, 0.0, 0.0, 0.0]);
+        assert!(st.add_lane(&[1.0, 0.0, 0.0, 0.0]));
+        assert!(matches!(st.on_round_complete(), RoundOutcome::Finalize));
+        st.finalize();
+        let a = handle.wait().unwrap().attribution;
+        assert_eq!(a.rounds, 2);
+        assert_eq!(a.residuals.len(), 2);
+        assert!((a.residuals[0] - 1.0).abs() < 1e-9);
+        assert!((a.residuals[1] - 0.5).abs() < 1e-9);
+        assert_eq!(a.delta, a.residuals[1]);
+        assert_eq!(a.steps, 5);
+        assert!((a.values[0] - 3.5).abs() < 1e-9);
     }
 
     #[test]

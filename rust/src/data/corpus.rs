@@ -7,14 +7,18 @@ use super::synth::{self, Image, NUM_CLASSES};
 /// the paper).
 #[derive(Debug, Clone)]
 pub struct LabeledImage {
+    /// Generating class id.
     pub class: usize,
+    /// Index within the class.
     pub index: usize,
+    /// Flat (F,) pixel data in [0, 1].
     pub pixels: Image,
 }
 
 /// A class-major ordered set of synthetic images.
 #[derive(Debug, Clone)]
 pub struct Corpus {
+    /// The images, class-major.
     pub images: Vec<LabeledImage>,
 }
 
@@ -42,14 +46,17 @@ impl Corpus {
         Corpus { images }
     }
 
+    /// Number of images.
     pub fn len(&self) -> usize {
         self.images.len()
     }
 
+    /// Whether the corpus is empty.
     pub fn is_empty(&self) -> bool {
         self.images.is_empty()
     }
 
+    /// Iterate over the images in class-major order.
     pub fn iter(&self) -> impl Iterator<Item = &LabeledImage> {
         self.images.iter()
     }

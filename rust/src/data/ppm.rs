@@ -9,13 +9,16 @@ use anyhow::{bail, Context, Result};
 /// An 8-bit RGB raster.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Ppm {
+    /// Raster width in pixels.
     pub width: usize,
+    /// Raster height in pixels.
     pub height: usize,
     /// Row-major RGB triples, length = 3 * width * height.
     pub rgb: Vec<u8>,
 }
 
 impl Ppm {
+    /// An all-black raster of the given dimensions.
     pub fn new(width: usize, height: usize) -> Ppm {
         Ppm { width, height, rgb: vec![0; 3 * width * height] }
     }
@@ -29,11 +32,13 @@ impl Ppm {
         Ok(Ppm { width, height, rgb: bytes })
     }
 
+    /// Set pixel `(x, y)`.
     pub fn set(&mut self, x: usize, y: usize, rgb: [u8; 3]) {
         let i = 3 * (y * self.width + x);
         self.rgb[i..i + 3].copy_from_slice(&rgb);
     }
 
+    /// Read pixel `(x, y)`.
     pub fn get(&self, x: usize, y: usize) -> [u8; 3] {
         let i = 3 * (y * self.width + x);
         [self.rgb[i], self.rgb[i + 1], self.rgb[i + 2]]

@@ -49,10 +49,12 @@ pub fn bounded<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
     (Sender { shared: shared.clone() }, Receiver { shared })
 }
 
+/// Sending half of a bounded channel (clonable; MPMC).
 pub struct Sender<T> {
     shared: Arc<Shared<T>>,
 }
 
+/// Receiving half of a bounded channel (clonable; MPMC).
 pub struct Receiver<T> {
     shared: Arc<Shared<T>>,
 }
@@ -127,6 +129,7 @@ impl<T> Sender<T> {
         self.shared.q.lock().unwrap().items.len()
     }
 
+    /// Whether the queue is empty right now (diagnostic; racy by nature).
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -205,14 +208,17 @@ impl<T> Receiver<T> {
         out
     }
 
+    /// Queue depth right now (diagnostic; racy by nature).
     pub fn len(&self) -> usize {
         self.shared.q.lock().unwrap().items.len()
     }
 
+    /// Whether the queue is empty right now (diagnostic; racy by nature).
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Whether the channel has been closed (items may still be queued).
     pub fn is_closed(&self) -> bool {
         self.shared.q.lock().unwrap().closed
     }

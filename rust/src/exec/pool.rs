@@ -81,6 +81,7 @@ impl ThreadPool {
         handles.into_iter().map(|h| h.join()).collect()
     }
 
+    /// Number of worker threads in the pool.
     pub fn worker_count(&self) -> usize {
         self.workers.len()
     }

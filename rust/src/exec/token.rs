@@ -12,6 +12,7 @@ pub struct CancelToken {
 }
 
 impl CancelToken {
+    /// A fresh, uncancelled token.
     pub fn new() -> Self {
         Self::default()
     }

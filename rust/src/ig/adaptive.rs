@@ -2,41 +2,60 @@
 //! — the deployment interface the paper's evaluation protocol implies
 //! (step counts are chosen by convergence threshold, §II).
 //!
-//! Walks the step grid upward, *reusing stage 1* across rounds for the
-//! non-uniform scheme (the probe depends only on (x, baseline, n_int),
-//! not on m), so refinement pays no repeated probe cost.
+//! Built on the anytime machinery (`engine::refine_loop`): stage 1 runs
+//! *once* (the probe depends only on `(x, baseline, n_int)`, not on m),
+//! and refinement rounds double the schedule **reusing every gradient
+//! already evaluated** — each round pays only the novel midpoints, so the
+//! total gradient cost is the final schedule's length, not the sum over
+//! rounds the old fixed-m grid walk paid. The policy's grid is read as a
+//! `[start, budget]` pair: rounds double m from the starting level (the
+//! first feasible entry, raised to ≥ 4 steps per probe interval so the
+//! sqrt allocation keeps a non-uniform shape, clamped to the budget) and
+//! interior grid entries are not visited.
+//!
+//! The Left/Right Riemann rules prune a zero-weight endpoint at schedule
+//! build, which breaks the refinement carry identity (see
+//! [`Schedule::refine`]); for those rules the driver falls back to the
+//! paper's literal protocol — rebuild and re-evaluate at each grid entry.
 
 use std::time::Instant;
 
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 
 use crate::metrics::StageBreakdown;
 
 use super::attribution::Attribution;
 use super::convergence::{delta as delta_fn, ConvergencePolicy};
-use super::engine::{argmax, IgOptions};
+use super::engine::{self, IgOptions};
 use super::model::Model;
-use super::probe::Probe;
 use super::schedule::Schedule;
 use super::Scheme;
 
 /// Result of an adaptive run.
 #[derive(Debug, Clone)]
 pub struct AdaptiveResult {
+    /// The delivered attribution (the most-refined round; its `rounds` /
+    /// `residuals` fields carry the per-round trajectory).
     pub attribution: Attribution,
     /// Step counts attempted, in order (last one produced `attribution`).
     pub rounds: Vec<usize>,
-    /// Whether the threshold was met (false ⇒ grid exhausted; the best
-    /// attempt is still returned).
+    /// Whether the threshold was met (false ⇒ budget exhausted; the most
+    /// refined attempt is still returned — the anytime contract).
     pub converged: bool,
-    /// Total gradient evaluations across all rounds (the real cost:
-    /// schedules are fused, so each round's count is exactly its
-    /// model-eval count — `m + 1` for trapezoid schedules, uniform or
-    /// non-uniform alike).
+    /// Total gradient evaluations across all rounds. For endpoint-
+    /// inclusive rules (trapezoid/eq2) refinement reuses every earlier
+    /// gradient, so this equals the *final* schedule's length (`m + 1`);
+    /// for Left/Right it is the sum over rebuilt grid attempts.
     pub total_steps: usize,
 }
 
 /// Explain to a convergence threshold.
+///
+/// For endpoint-inclusive rules the policy's grid is interpreted as a
+/// `[start, budget]` pair (see the module doc): rounds run at
+/// `m0, 2·m0, 4·m0, ...` up to the last grid entry, reusing every
+/// evaluated gradient, and interior grid entries are not visited. For
+/// Left/Right rules the grid is walked literally, entry by entry.
 pub fn explain_to_threshold(
     model: &dyn Model,
     x: &[f32],
@@ -53,29 +72,92 @@ pub fn explain_to_threshold(
         }
     };
     ensure!(x.len() == model.features(), "image width mismatch");
-
-    // ---- Stage 1 once: probe (also yields the target + endpoint gap). --
-    let t0 = Instant::now();
     let n_int = match opts.scheme {
         Scheme::NonUniform { n_int } => n_int,
         Scheme::Uniform => 1,
     };
-    let bounds = Schedule::probe_boundaries(n_int);
-    let boundary_imgs: Vec<Vec<f32>> = bounds
-        .iter()
-        .map(|&a| {
-            (0..x.len()).map(|i| baseline[i] + a as f32 * (x[i] - baseline[i])).collect()
-        })
-        .collect();
-    let refs: Vec<&[f32]> = boundary_imgs.iter().map(|v| v.as_slice()).collect();
-    let probs = model.probs(&refs)?;
-    let target = argmax(&probs[probs.len() - 1]);
-    let probe = Probe::new(bounds.clone(), probs.iter().map(|p| p[target]).collect())?;
-    let gap = probe.endpoint_gap();
-    let deltas = probe.interval_deltas();
+
+    // ---- Stage 1 once: probe (also yields the target + endpoint gap). --
+    let t0 = Instant::now();
+    let probed = engine::probe_path(model, x, baseline, n_int)?;
     let t_probe = t0.elapsed();
 
-    // ---- Refinement rounds: rebuild stage-2 schedule per m. -------------
+    // Round plan from the grid, read as a [start, budget] pair: nested
+    // refinement doubles m between rounds, so interior grid entries are
+    // not visited (the ~1.5x paper grid is the protocol of the
+    // from-scratch search, not of incremental refinement). The first
+    // feasible entry sets the starting level, raised to at least 4 steps
+    // per probe interval — coarser starts quantize the sqrt allocation
+    // to an even split (largest-remainder with a 1-step floor) and
+    // doubling would freeze that uniform shape forever — but clamped to
+    // the last entry, which acts as the refinement budget.
+    let Some(first_feasible) = policy.grid.iter().copied().find(|&m| m >= n_int) else {
+        bail!("no step-grid entry is >= n_int ({n_int})");
+    };
+    let cap = *policy.grid.last().expect("grid is validated non-empty");
+    let m0 = first_feasible.max(4 * n_int).min(cap);
+
+    if !opts.rule.keeps_endpoints() {
+        return walk_grid(model, x, baseline, opts, policy, &probed, t_probe, n_int);
+    }
+
+    // ---- Incremental rounds: refine in place, pay only novel points. ----
+    let initial = match opts.scheme {
+        Scheme::Uniform => Schedule::uniform(m0, opts.rule)?,
+        Scheme::NonUniform { .. } => {
+            let alloc = opts.allocation.allocate(m0, &probed.deltas)?;
+            Schedule::nonuniform(&probed.bounds, &alloc, opts.rule)?
+        }
+    };
+    let run = engine::refine_loop(
+        model,
+        x,
+        baseline,
+        probed.target,
+        probed.gap,
+        initial,
+        |delta, m| delta > policy.delta_th && m * 2 <= cap,
+    )?;
+
+    let delta = *run.residuals.last().expect("at least one round");
+    let converged = delta <= policy.delta_th;
+    let rounds: Vec<usize> = (0..run.residuals.len()).map(|r| m0 << r).collect();
+    let attribution = Attribution {
+        delta,
+        endpoint_gap: probed.gap,
+        values: run.partial,
+        target: probed.target,
+        steps: run.evals,
+        // This driver really runs bounds.len() forward passes for target +
+        // gap, for BOTH schemes (2 for uniform): report them, so
+        // steps + probe_passes is the true eval count of this path.
+        probe_passes: probed.bounds.len(),
+        rounds: run.residuals.len(),
+        residuals: run.residuals,
+        breakdown: StageBreakdown {
+            probe: t_probe,
+            schedule: run.t_sched,
+            execute: run.t_exec,
+            reduce: Default::default(),
+        },
+    };
+    Ok(AdaptiveResult { attribution, rounds, converged, total_steps: run.evals })
+}
+
+/// The paper's literal protocol for non-refinable rules (Left/Right):
+/// rebuild the schedule at each grid entry and re-evaluate from scratch,
+/// reusing only the stage-1 probe. Returns the best attempt by δ.
+#[allow(clippy::too_many_arguments)]
+fn walk_grid(
+    model: &dyn Model,
+    x: &[f32],
+    baseline: &[f32],
+    opts: &IgOptions,
+    policy: &ConvergencePolicy,
+    probed: &engine::ProbedPath,
+    t_probe: std::time::Duration,
+    n_int: usize,
+) -> Result<AdaptiveResult> {
     let mut rounds = Vec::new();
     let mut total_steps = 0usize;
     let mut best: Option<Attribution> = None;
@@ -86,37 +168,34 @@ pub fn explain_to_threshold(
             continue;
         }
         let t1 = Instant::now();
-        // Both constructors return fused schedules: `schedule.len()` below
-        // is the true per-round model-eval count.
         let schedule = match opts.scheme {
             Scheme::Uniform => Schedule::uniform(m, opts.rule)?,
             Scheme::NonUniform { .. } => {
-                let alloc = opts.allocation.allocate(m, &deltas)?;
-                Schedule::nonuniform(&bounds, &alloc, opts.rule)?
+                let alloc = opts.allocation.allocate(m, &probed.deltas)?;
+                Schedule::nonuniform(&probed.bounds, &alloc, opts.rule)?
             }
         };
         let (alphas, weights) = schedule.to_f32();
         let t_sched = t1.elapsed();
 
         let t2 = Instant::now();
-        let out = model.ig_points(x, baseline, &alphas, &weights, target)?;
+        let out = model.ig_points(x, baseline, &alphas, &weights, probed.target)?;
         let t_exec = t2.elapsed();
 
         let sum: f64 = out.partial.iter().sum();
-        let d = delta_fn(sum, gap);
+        let d = delta_fn(sum, probed.gap);
         rounds.push(m);
         total_steps += schedule.len();
 
         let attr = Attribution {
             delta: d,
-            endpoint_gap: gap,
+            endpoint_gap: probed.gap,
             values: out.partial,
-            target,
+            target: probed.target,
             steps: schedule.len(),
-            // This driver really runs bounds.len() forward passes for
-            // target + gap, for BOTH schemes (2 for uniform): report them,
-            // so steps + probe_passes is the true eval count of this path.
-            probe_passes: bounds.len(),
+            probe_passes: probed.bounds.len(),
+            rounds: 1,
+            residuals: vec![d],
             breakdown: StageBreakdown {
                 probe: t_probe,
                 schedule: t_sched,
@@ -146,6 +225,7 @@ pub fn explain_to_threshold(
 mod tests {
     use super::*;
     use crate::ig::model::AnalyticModel;
+    use crate::ig::Rule;
 
     fn model() -> AnalyticModel {
         AnalyticModel::new(64, 4, 7, 300.0)
@@ -174,8 +254,11 @@ mod tests {
         assert!(*res.rounds.last().unwrap() <= 128);
         // Uniform via this driver still probes the two path endpoints.
         assert_eq!(res.attribution.probe_passes, 2);
-        // Rounds walk the grid in order.
+        // Rounds walk upward (doubling refinement levels).
         assert!(res.rounds.windows(2).all(|w| w[0] < w[1]));
+        // Reuse: the total cost is the final schedule, not the round sum.
+        assert_eq!(res.total_steps, res.rounds.last().unwrap() + 1);
+        assert_eq!(res.attribution.steps, res.total_steps);
     }
 
     #[test]
@@ -215,12 +298,50 @@ mod tests {
         let policy = ConvergencePolicy::with_grid(1e-15, vec![8, 16]).unwrap();
         let res = explain_to_threshold(&m, &x, None, &IgOptions::default(), &policy).unwrap();
         assert!(!res.converged);
-        assert_eq!(res.rounds, vec![8, 16]);
+        // n_int = 4 starts at the first entry with allocation resolution
+        // (>= 4 * n_int = 16), which is also the cap: a single round.
+        assert_eq!(res.rounds, vec![16]);
         assert!(res.attribution.delta > 1e-15);
+        assert_eq!(res.total_steps, 16 + 1);
+    }
+
+    #[test]
+    fn m0_applies_allocation_resolution_floor_clamped_to_budget() {
+        let m = model();
+        let x = input();
+        // Grid with room: starts at 4 * n_int = 16, not at the first
+        // feasible entry 8, so the sqrt allocation isn't quantized even.
+        let policy = ConvergencePolicy::with_grid(1e-15, vec![8, 16, 32]).unwrap();
+        let res = explain_to_threshold(
+            &m,
+            &x,
+            None,
+            &IgOptions { scheme: Scheme::NonUniform { n_int: 4 }, ..Default::default() },
+            &policy,
+        )
+        .unwrap();
+        assert_eq!(res.rounds, vec![16, 32]);
+        // Sparse grid: the floor must NOT jump to a huge entry — it is
+        // clamped between the first feasible entry and the budget, so a
+        // [8, 512] grid still starts at 16 and doubles from there.
+        let policy = ConvergencePolicy::with_grid(1e-15, vec![8, 512]).unwrap();
+        let res = explain_to_threshold(
+            &m,
+            &x,
+            None,
+            &IgOptions { scheme: Scheme::NonUniform { n_int: 4 }, ..Default::default() },
+            &policy,
+        )
+        .unwrap();
+        assert_eq!(res.rounds, vec![16, 32, 64, 128, 256, 512]);
+        assert_eq!(res.total_steps, 512 + 1);
     }
 
     #[test]
     fn grid_entries_below_n_int_skipped() {
+        // Entries below n_int are infeasible; with the resolution floor
+        // (4 * n_int = 16) clamped to the grid's cap, the single round
+        // runs at the cap.
         let m = model();
         let x = input();
         let policy = ConvergencePolicy::with_grid(1e-15, vec![2, 4, 8]).unwrap();
@@ -232,7 +353,8 @@ mod tests {
             &policy,
         )
         .unwrap();
-        assert_eq!(res.rounds, vec![4, 8]);
+        assert_eq!(res.rounds, vec![8]);
+        assert_eq!(res.total_steps, 8 + 1);
     }
 
     #[test]
@@ -250,5 +372,69 @@ mod tests {
         .unwrap();
         // Probe passes reported once (5), not per round.
         assert_eq!(res.attribution.probe_passes, 5);
+    }
+
+    #[test]
+    fn residual_trajectory_reported_per_round() {
+        let m = model();
+        let x = input();
+        let policy = ConvergencePolicy::with_grid(1e-15, vec![8, 16, 32, 64]).unwrap();
+        let res = explain_to_threshold(&m, &x, None, &IgOptions::default(), &policy).unwrap();
+        // Default opts are nonuniform n_int = 4: rounds start at 16.
+        assert_eq!(res.rounds, vec![16, 32, 64]);
+        assert_eq!(res.attribution.rounds, 3);
+        assert_eq!(res.attribution.residuals.len(), 3);
+        assert_eq!(*res.attribution.residuals.last().unwrap(), res.attribution.delta);
+        assert!(
+            res.attribution.residuals.last().unwrap() < res.attribution.residuals.first().unwrap(),
+            "refinement must tighten the residual: {:?}",
+            res.attribution.residuals
+        );
+    }
+
+    #[test]
+    fn incremental_matches_direct_final_round() {
+        // The reused-gradient accumulator must equal a from-scratch run of
+        // the final round's schedule (engine parity at 1e-9).
+        let m = model();
+        let x = input();
+        let policy = ConvergencePolicy::with_grid(1e-15, vec![8, 16, 32]).unwrap();
+        let res = explain_to_threshold(
+            &m,
+            &x,
+            None,
+            &IgOptions { scheme: Scheme::Uniform, ..Default::default() },
+            &policy,
+        )
+        .unwrap();
+        let direct = crate::ig::explain(
+            &m,
+            &x,
+            None,
+            &IgOptions { scheme: Scheme::Uniform, m: 32, ..Default::default() },
+        )
+        .unwrap();
+        crate::testutil::assert_allclose(&res.attribution.values, &direct.values, 0.0, 1e-9);
+    }
+
+    #[test]
+    fn left_rule_falls_back_to_grid_walk() {
+        // Left/Right cannot refine in place: the driver rebuilds per grid
+        // entry and total_steps is the (honest) sum over attempts.
+        let m = model();
+        let x = input();
+        let policy = ConvergencePolicy::with_grid(1e-15, vec![8, 16]).unwrap();
+        let res = explain_to_threshold(
+            &m,
+            &x,
+            None,
+            &IgOptions { scheme: Scheme::Uniform, rule: Rule::Left, ..Default::default() },
+            &policy,
+        )
+        .unwrap();
+        assert_eq!(res.rounds, vec![8, 16]);
+        // Left-rule fused schedules have m points each (endpoint pruned).
+        assert_eq!(res.total_steps, 8 + 16);
+        assert!(!res.converged);
     }
 }

@@ -36,6 +36,7 @@ impl std::fmt::Display for Allocation {
 }
 
 impl Allocation {
+    /// Parse `sqrt|linear|even` (CLI syntax).
     pub fn parse(s: &str) -> Result<Allocation> {
         Ok(match s {
             "sqrt" => Allocation::Sqrt,

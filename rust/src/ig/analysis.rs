@@ -20,6 +20,7 @@ pub struct PathInfo {
     pub dprob: Vec<f64>,
     /// Per-interval share of Σ|dp/dα| for `n_int` equal intervals.
     pub interval_share: Vec<f64>,
+    /// The class whose probability path was sampled.
     pub target: usize,
 }
 

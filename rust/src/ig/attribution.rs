@@ -30,6 +30,14 @@ pub struct Attribution {
     pub delta: f64,
     /// The endpoint gap f(x) − f(x') itself.
     pub endpoint_gap: f64,
+    /// Refinement rounds that produced this attribution: 1 for the
+    /// fixed-m engines; the anytime engine / adaptive driver report one
+    /// entry per schedule level evaluated (initial + each doubling).
+    pub rounds: usize,
+    /// δ after each round, in order — the residual trajectory. The last
+    /// entry equals [`Attribution::delta`]; fixed-m paths report the
+    /// single final residual.
+    pub residuals: Vec<f64>,
     /// Wall-clock decomposition (probe/schedule/execute/reduce).
     pub breakdown: StageBreakdown,
 }
@@ -80,13 +88,16 @@ mod tests {
 
     fn mk(values: Vec<f64>, gap: f64) -> Attribution {
         let sum: f64 = values.iter().sum();
+        let delta = (sum - gap).abs();
         Attribution {
             values,
             target: 0,
             steps: 10,
             probe_passes: 0,
-            delta: (sum - gap).abs(),
+            delta,
             endpoint_gap: gap,
+            rounds: 1,
+            residuals: vec![delta],
             breakdown: StageBreakdown::default(),
         }
     }
@@ -97,6 +108,14 @@ mod tests {
         assert!((a.sum() - 0.6).abs() < 1e-12);
         assert!((a.delta - 0.05).abs() < 1e-12);
         assert!((a.relative_delta() - 0.05 / 0.65).abs() < 1e-12);
+    }
+
+    #[test]
+    fn residual_trajectory_ends_at_delta() {
+        let a = mk(vec![0.2, 0.3], 0.6);
+        assert_eq!(a.rounds, 1);
+        assert_eq!(a.residuals.len(), a.rounds);
+        assert_eq!(*a.residuals.last().unwrap(), a.delta);
     }
 
     #[test]

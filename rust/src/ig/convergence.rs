@@ -1,8 +1,20 @@
-//! The completeness residual δ (Eq. 3) and the iso-convergence search.
+//! The completeness residual δ (Eq. 3), the iso-convergence search, and
+//! the anytime refinement gate.
 //!
 //! The paper's protocol (Fig. 5b): fix a threshold δ_th, walk a step-count
 //! grid upward, report the first m whose δ ≤ δ_th. The grid here matches
 //! the ~1.5x-spaced grid used for all figure benches.
+//!
+//! Two drivers build on it:
+//!
+//! * [`ConvergencePolicy`] — the paper's protocol verbatim: re-run at each
+//!   grid m from scratch (each probe costs the full schedule);
+//! * [`AnytimePolicy`] — the gate for the *anytime* engine
+//!   ([`crate::ig::explain_anytime`]): refine the schedule in place
+//!   (doubling m, reusing every already-evaluated gradient) until δ meets
+//!   the target or the next doubling would blow the `max_m` budget, so
+//!   the total gradient cost is the *final* schedule's length, not the
+//!   sum over rounds.
 
 use anyhow::{ensure, Result};
 
@@ -26,10 +38,12 @@ pub struct ConvergencePolicy {
 }
 
 impl ConvergencePolicy {
+    /// Policy over the default ~1.5x-spaced grid.
     pub fn new(delta_th: f64) -> Self {
         ConvergencePolicy { delta_th, grid: default_grid() }
     }
 
+    /// Policy over a custom ascending step grid.
     pub fn with_grid(delta_th: f64, grid: Vec<usize>) -> Result<Self> {
         ensure!(!grid.is_empty(), "empty step grid");
         ensure!(grid.windows(2).all(|w| w[0] < w[1]), "grid must be ascending");
@@ -54,6 +68,52 @@ impl ConvergencePolicy {
             last = (m, d);
         }
         Ok((last.0, last.1, false))
+    }
+}
+
+/// Convergence gate for anytime refinement: stop once the completeness
+/// residual meets `delta_target`, or once doubling the schedule again
+/// would exceed the `max_m` interval budget (the unconverged best-so-far
+/// attribution is still delivered — that is the "anytime" contract).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AnytimePolicy {
+    /// Stop refining once δ ≤ this.
+    pub delta_target: f64,
+    /// Hard cap on grid intervals m: a refinement round never starts if
+    /// it would push `m_total` past this.
+    pub max_m: usize,
+}
+
+impl AnytimePolicy {
+    /// Upper end of [`default_grid`] — the default refinement budget.
+    pub const DEFAULT_MAX_M: usize = 512;
+
+    /// Gate with the default 512-interval budget.
+    pub fn new(delta_target: f64) -> Self {
+        AnytimePolicy { delta_target, max_m: Self::DEFAULT_MAX_M }
+    }
+
+    /// Gate with an explicit interval budget.
+    pub fn with_max_m(delta_target: f64, max_m: usize) -> Result<Self> {
+        ensure!(max_m >= 1, "max_m must be >= 1");
+        ensure!(delta_target.is_finite() && delta_target >= 0.0, "delta_target must be finite and >= 0");
+        Ok(AnytimePolicy { delta_target, max_m })
+    }
+
+    /// Has the residual met the target?
+    pub fn converged(&self, delta: f64) -> bool {
+        delta <= self.delta_target
+    }
+
+    /// May a schedule currently at `m` intervals refine once more within
+    /// the budget?
+    pub fn can_refine(&self, m: usize) -> bool {
+        m.saturating_mul(2) <= self.max_m
+    }
+
+    /// The per-round gate: refine only while unconverged and in budget.
+    pub fn should_refine(&self, delta: f64, m: usize) -> bool {
+        !self.converged(delta) && self.can_refine(m)
     }
 }
 
@@ -122,6 +182,26 @@ mod tests {
         assert!(ConvergencePolicy::with_grid(0.1, vec![]).is_err());
         assert!(ConvergencePolicy::with_grid(0.1, vec![4, 4]).is_err());
         assert!(ConvergencePolicy::with_grid(0.1, vec![8, 4]).is_err());
+    }
+
+    #[test]
+    fn anytime_gate_logic() {
+        let p = AnytimePolicy::with_max_m(0.01, 64).unwrap();
+        assert!(p.converged(0.01));
+        assert!(!p.converged(0.011));
+        assert!(p.can_refine(32));
+        assert!(!p.can_refine(33));
+        assert!(p.should_refine(0.5, 16));
+        assert!(!p.should_refine(0.005, 16), "converged: no more rounds");
+        assert!(!p.should_refine(0.5, 64), "budget: no more rounds");
+    }
+
+    #[test]
+    fn anytime_policy_validates() {
+        assert!(AnytimePolicy::with_max_m(0.01, 0).is_err());
+        assert!(AnytimePolicy::with_max_m(-1.0, 8).is_err());
+        assert!(AnytimePolicy::with_max_m(f64::NAN, 8).is_err());
+        assert_eq!(AnytimePolicy::new(0.1).max_m, AnytimePolicy::DEFAULT_MAX_M);
     }
 
     #[test]

@@ -1,16 +1,26 @@
-//! The two IG engines: baseline uniform interpolation (Eq. 2) and the
-//! paper's two-stage non-uniform interpolation.
+//! The IG engines: baseline uniform interpolation (Eq. 2), the paper's
+//! two-stage non-uniform interpolation, and the *anytime* variant.
 //!
-//! Both are thin orchestrations over [`Model`]: build a fused [`Schedule`]
-//! (coincident boundary points merged, zero-weight points pruned — see
-//! `schedule.rs`), evaluate it via `Model::ig_points` (which chunks to the
-//! executable width), and account for completeness. `Attribution.steps`
-//! is exactly `schedule.len()`, the true number of gradient (fwd+bwd)
-//! model evaluations; forward-only passes are counted in `probe_passes`.
-//! Stage timing is recorded so the overhead figures (Fig. 6b) come from
-//! real measurements.
+//! The fixed-m engines are thin orchestrations over [`Model`]: build a
+//! fused [`Schedule`] (coincident boundary points merged, zero-weight
+//! points pruned — see `schedule.rs`), evaluate it via
+//! `Model::ig_points` (which chunks to the executable width), and account
+//! for completeness. `Attribution.steps` is exactly `schedule.len()`, the
+//! true number of gradient (fwd+bwd) model evaluations; forward-only
+//! passes are counted in `probe_passes`. Stage timing is recorded so the
+//! overhead figures (Fig. 6b) come from real measurements.
+//!
+//! [`explain_anytime`] replaces the fixed step count with a convergence
+//! target: evaluate a small initial schedule, then repeatedly
+//! [`Schedule::refine`] it — each round pays **only the novel midpoints**
+//! (the carried points' weights halve exactly, so the partial quadrature
+//! sum carries across rounds as `partial * REFINE_CARRY` plus the novel
+//! contributions) — until the completeness residual δ meets the
+//! [`AnytimePolicy`] target. Total gradient cost is the *final*
+//! schedule's length, not the sum over rounds: iso-convergence without
+//! ever re-evaluating an alpha.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{ensure, Result};
 
@@ -18,7 +28,7 @@ use crate::metrics::StageBreakdown;
 
 use super::allocator::Allocation;
 use super::attribution::Attribution;
-use super::convergence;
+use super::convergence::{self, AnytimePolicy};
 use super::model::Model;
 use super::probe::Probe;
 use super::riemann::Rule;
@@ -28,10 +38,14 @@ use super::Scheme;
 /// Per-explanation options.
 #[derive(Debug, Clone, Copy)]
 pub struct IgOptions {
+    /// Interpolation scheme (uniform baseline vs the paper's non-uniform).
     pub scheme: Scheme,
-    /// Total interpolation steps m (stage-2 budget).
+    /// Total interpolation steps m (stage-2 budget; the *initial* level
+    /// for the anytime engine, which doubles it per refinement round).
     pub m: usize,
+    /// Quadrature rule for the grids.
     pub rule: Rule,
+    /// Stage-1 step-allocation policy across probe intervals.
     pub allocation: Allocation,
 }
 
@@ -131,13 +145,16 @@ fn uniform_ig(
     let sum: f64 = out.partial.iter().sum();
     let t_reduce = t3.elapsed();
 
+    let delta = convergence::delta(sum, gap);
     Ok(Attribution {
-        delta: convergence::delta(sum, gap),
+        delta,
         endpoint_gap: gap,
         values: out.partial,
         target,
         steps: schedule.len(),
         probe_passes,
+        rounds: 1,
+        residuals: vec![delta],
         breakdown: StageBreakdown {
             probe: t_probe,
             schedule: t_sched,
@@ -193,18 +210,226 @@ fn nonuniform_ig(
     let sum: f64 = out.partial.iter().sum();
     let t_reduce = t3.elapsed();
 
+    let delta = convergence::delta(sum, gap);
     Ok(Attribution {
-        delta: convergence::delta(sum, gap),
+        delta,
         endpoint_gap: gap,
         values: out.partial,
         target,
         steps: schedule.len(),
         probe_passes: bounds.len(),
+        rounds: 1,
+        residuals: vec![delta],
         breakdown: StageBreakdown {
             probe: t_probe,
             schedule: t_sched,
             execute: t_exec,
             reduce: t_reduce,
+        },
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Anytime engine: incremental refinement with convergence-gated early exit.
+// ---------------------------------------------------------------------------
+
+/// Stage-1 boundary probe shared by the anytime engine and the adaptive
+/// driver: probe the `n_int + 1` equal-width boundaries once (forward
+/// only), pick the target (argmax at the input endpoint), and read the
+/// endpoint gap + normalized interval deltas off the probe.
+pub(crate) struct ProbedPath {
+    /// Probe boundary alphas (0, 1/n, .., 1).
+    pub bounds: Vec<f64>,
+    /// Explained class.
+    pub target: usize,
+    /// f(x) − f(x′) at the target class.
+    pub gap: f64,
+    /// Normalized |Δp| per interval.
+    pub deltas: Vec<f64>,
+}
+
+pub(crate) fn probe_path(
+    model: &dyn Model,
+    x: &[f32],
+    baseline: &[f32],
+    n_int: usize,
+) -> Result<ProbedPath> {
+    let bounds = Schedule::probe_boundaries(n_int);
+    let boundary_imgs: Vec<Vec<f32>> = bounds
+        .iter()
+        .map(|&a| {
+            (0..x.len()).map(|i| baseline[i] + a as f32 * (x[i] - baseline[i])).collect()
+        })
+        .collect();
+    let refs: Vec<&[f32]> = boundary_imgs.iter().map(|v| v.as_slice()).collect();
+    let probs = model.probs(&refs)?;
+    let target = argmax(&probs[probs.len() - 1]);
+    let probe = Probe::new(bounds.clone(), probs.iter().map(|p| p[target]).collect())?;
+    Ok(ProbedPath { bounds, target, gap: probe.endpoint_gap(), deltas: probe.interval_deltas() })
+}
+
+/// Bookkeeping from one incremental refinement run.
+pub(crate) struct RefineRun {
+    /// f64 attribution accumulator at the final level.
+    pub partial: Vec<f64>,
+    /// Total gradient evaluations — equals the final schedule's length
+    /// (nothing is ever re-evaluated).
+    pub evals: usize,
+    /// δ after each round (initial schedule + each refinement).
+    pub residuals: Vec<f64>,
+    /// The final (most refined) schedule.
+    pub schedule: Schedule,
+    /// Cumulative schedule-construction time across rounds.
+    pub t_sched: Duration,
+    /// Cumulative device-execution time across rounds.
+    pub t_exec: Duration,
+}
+
+/// The incremental refinement driver: evaluate `initial` fully, then while
+/// `should_refine(latest_delta, m_total)` holds, refine the schedule and
+/// evaluate **only the novel midpoints**, carrying the accumulator as
+/// `partial * REFINE_CARRY + novel_partial` (exact: every carried weight
+/// halves — see [`Schedule::refine`]).
+pub(crate) fn refine_loop(
+    model: &dyn Model,
+    x: &[f32],
+    baseline: &[f32],
+    target: usize,
+    gap: f64,
+    initial: Schedule,
+    mut should_refine: impl FnMut(f64, usize) -> bool,
+) -> Result<RefineRun> {
+    let mut t_sched = Duration::ZERO;
+    let mut t_exec = Duration::ZERO;
+
+    let t = Instant::now();
+    let mut schedule = initial;
+    let (alphas, weights) = schedule.to_f32();
+    t_sched += t.elapsed();
+
+    let t = Instant::now();
+    let out = model.ig_points(x, baseline, &alphas, &weights, target)?;
+    t_exec += t.elapsed();
+
+    let mut partial = out.partial;
+    let mut evals = schedule.len();
+    let mut residuals = vec![convergence::delta(partial.iter().sum(), gap)];
+
+    while should_refine(*residuals.last().expect("non-empty"), schedule.m_total) {
+        let t = Instant::now();
+        let refined = schedule.refine()?;
+        let novel = refined.novel_vs(&schedule);
+        let novel_alphas: Vec<f32> = novel.iter().map(|p| p.alpha as f32).collect();
+        let novel_weights: Vec<f32> = novel.iter().map(|p| p.weight as f32).collect();
+        t_sched += t.elapsed();
+
+        let t = Instant::now();
+        let novel_out = model.ig_points(x, baseline, &novel_alphas, &novel_weights, target)?;
+        t_exec += t.elapsed();
+
+        for (acc, nv) in partial.iter_mut().zip(&novel_out.partial) {
+            *acc = *acc * Schedule::REFINE_CARRY + nv;
+        }
+        evals += novel.len();
+        schedule = refined;
+        residuals.push(convergence::delta(partial.iter().sum(), gap));
+    }
+    debug_assert_eq!(evals, schedule.len(), "reuse invariant: evals == final schedule length");
+
+    Ok(RefineRun { partial, evals, residuals, schedule, t_sched, t_exec })
+}
+
+/// Anytime IG: explain to a completeness target instead of a fixed step
+/// count, reusing every evaluated gradient across refinement rounds.
+///
+/// Starts from `opts.m` grid intervals (the coarse level), then doubles
+/// the schedule via nested refinement — paying only the novel midpoints
+/// each round — until δ ≤ `policy.delta_target` or the `policy.max_m`
+/// budget is reached. The returned [`Attribution`] reports the rounds and
+/// the full residual trajectory; `steps` is the true total gradient cost,
+/// which equals the final schedule's length.
+///
+/// Requires an endpoint-inclusive rule (trapezoid/eq2): Left/Right prune
+/// an endpoint and cannot be refined in place.
+///
+/// Pick `opts.m >= 4 * n_int` for the non-uniform scheme: refinement
+/// doubles the initial allocation verbatim, and a coarser start
+/// quantizes the sqrt allocation to an even split (largest-remainder
+/// with a 1-step floor), freezing the schedule into the uniform shape.
+/// The adaptive driver applies this rule automatically.
+pub fn explain_anytime(
+    model: &dyn Model,
+    x: &[f32],
+    baseline: Option<&[f32]>,
+    opts: &IgOptions,
+    policy: &AnytimePolicy,
+) -> Result<Attribution> {
+    let black;
+    let baseline = match baseline {
+        Some(b) => b,
+        None => {
+            black = vec![0f32; model.features()];
+            &black
+        }
+    };
+    ensure!(x.len() == model.features(), "image width {} != model features {}", x.len(), model.features());
+    ensure!(baseline.len() == x.len(), "baseline width mismatch");
+    ensure!(opts.m >= 1, "m must be >= 1");
+    ensure!(
+        opts.rule.keeps_endpoints(),
+        "anytime refinement requires an endpoint-inclusive rule (trapezoid/eq2), got {}",
+        opts.rule
+    );
+    ensure!(
+        opts.m <= policy.max_m,
+        "initial m ({}) exceeds the anytime budget max_m ({})",
+        opts.m,
+        policy.max_m
+    );
+    let n_int = match opts.scheme {
+        Scheme::NonUniform { n_int } => {
+            ensure!(n_int >= 1, "n_int must be >= 1");
+            ensure!(opts.m >= n_int, "m ({}) must be >= n_int ({n_int})", opts.m);
+            n_int
+        }
+        Scheme::Uniform => 1,
+    };
+
+    // Stage 1 once: the probe serves every round (it depends only on
+    // (x, baseline, n_int), not on the refinement level).
+    let t0 = Instant::now();
+    let probed = probe_path(model, x, baseline, n_int)?;
+    let t_probe = t0.elapsed();
+
+    let initial = match opts.scheme {
+        Scheme::Uniform => Schedule::uniform(opts.m, opts.rule)?,
+        Scheme::NonUniform { .. } => {
+            let alloc = opts.allocation.allocate(opts.m, &probed.deltas)?;
+            Schedule::nonuniform(&probed.bounds, &alloc, opts.rule)?
+        }
+    };
+
+    let run = refine_loop(model, x, baseline, probed.target, probed.gap, initial, |delta, m| {
+        policy.should_refine(delta, m)
+    })?;
+
+    let delta = *run.residuals.last().expect("at least one round");
+    // Reuse invariant: the total gradient bill IS the final schedule.
+    debug_assert_eq!(run.evals, run.schedule.len());
+    Ok(Attribution {
+        delta,
+        endpoint_gap: probed.gap,
+        values: run.partial,
+        target: probed.target,
+        steps: run.evals,
+        probe_passes: probed.bounds.len(),
+        rounds: run.residuals.len(),
+        residuals: run.residuals,
+        breakdown: StageBreakdown {
+            probe: t_probe,
+            schedule: run.t_sched,
+            execute: run.t_exec,
+            reduce: Default::default(),
         },
     })
 }
@@ -439,6 +664,158 @@ mod tests {
         let p = m.probs(&[&x, &vec![0f32; 64]]).unwrap();
         let gap = p[0][a.target] - p[1][a.target];
         assert!((a.endpoint_gap - gap).abs() < 1e-9);
+    }
+
+    /// Model wrapper recording every alpha handed to `ig_points` — used to
+    /// prove the anytime engine never re-evaluates a gradient point.
+    struct Recorder<'a> {
+        inner: &'a AnalyticModel,
+        alphas: std::sync::Mutex<Vec<f32>>,
+    }
+
+    impl Model for Recorder<'_> {
+        fn features(&self) -> usize {
+            self.inner.features()
+        }
+        fn num_classes(&self) -> usize {
+            self.inner.num_classes()
+        }
+        fn probs(&self, imgs: &[&[f32]]) -> anyhow::Result<Vec<Vec<f64>>> {
+            self.inner.probs(imgs)
+        }
+        fn ig_points(
+            &self,
+            x: &[f32],
+            baseline: &[f32],
+            alphas: &[f32],
+            weights: &[f32],
+            target: usize,
+        ) -> anyhow::Result<crate::ig::model::IgPointsOut> {
+            self.alphas.lock().unwrap().extend_from_slice(alphas);
+            self.inner.ig_points(x, baseline, alphas, weights, target)
+        }
+    }
+
+    #[test]
+    fn anytime_matches_direct_at_final_level() {
+        // Reuse loses nothing: the incrementally-accumulated attribution
+        // equals a direct single-shot evaluation of the final (doubled-
+        // allocation) schedule to 1e-9 through the f32 pipeline.
+        let m = saturating_model();
+        let x = input();
+        let baseline = vec![0f32; 64];
+        // delta_target 0 is unreachable: refines 8 -> 16 -> 32 -> 64.
+        let policy = AnytimePolicy::with_max_m(0.0, 64).unwrap();
+        let opts = IgOptions { scheme: Scheme::NonUniform { n_int: 4 }, m: 8, ..Default::default() };
+        let a = explain_anytime(&m, &x, None, &opts, &policy).unwrap();
+        assert_eq!(a.rounds, 4);
+        assert_eq!(a.residuals.len(), 4);
+        assert_eq!(a.steps, 64 + 1, "total evals must be the final schedule length");
+        assert_eq!(a.probe_passes, 5);
+
+        // Direct evaluation of the same final schedule: the initial
+        // allocation at m0 = 8, doubled three times.
+        let probed = probe_path(&m, &x, &baseline, 4).unwrap();
+        assert_eq!(probed.target, a.target);
+        let alloc0 = Allocation::Sqrt.allocate(8, &probed.deltas).unwrap();
+        let alloc_final: Vec<usize> = alloc0.iter().map(|&v| v * 8).collect();
+        let final_sched =
+            Schedule::nonuniform(&probed.bounds, &alloc_final, Rule::Trapezoid).unwrap();
+        let (fa, fw) = final_sched.to_f32();
+        let direct = m.ig_points(&x, &baseline, &fa, &fw, probed.target).unwrap();
+        crate::testutil::assert_allclose(&a.values, &direct.partial, 0.0, 1e-9);
+    }
+
+    #[test]
+    fn anytime_uniform_matches_direct_uniform() {
+        let m = saturating_model();
+        let x = input();
+        let policy = AnytimePolicy::with_max_m(0.0, 32).unwrap();
+        let opts = IgOptions { scheme: Scheme::Uniform, m: 8, ..Default::default() };
+        let a = explain_anytime(&m, &x, None, &opts, &policy).unwrap();
+        assert_eq!(a.steps, 32 + 1);
+        let direct =
+            explain(&m, &x, None, &IgOptions { scheme: Scheme::Uniform, m: 32, ..Default::default() })
+                .unwrap();
+        crate::testutil::assert_allclose(&a.values, &direct.values, 0.0, 1e-9);
+        assert!((a.delta - direct.delta).abs() < 1e-9);
+    }
+
+    #[test]
+    fn anytime_converges_early_and_reports_trajectory() {
+        let m = saturating_model();
+        let x = input();
+        // Target: the residual the uniform baseline reaches at m = 128 —
+        // the iso-convergence question the anytime engine answers cheaply.
+        let target = explain(
+            &m,
+            &x,
+            None,
+            &IgOptions { scheme: Scheme::Uniform, m: 128, ..Default::default() },
+        )
+        .unwrap()
+        .delta;
+        let policy = AnytimePolicy::with_max_m(target, 512).unwrap();
+        // m0 = 16 gives the sqrt allocation resolution (4 steps/interval);
+        // a coarser start would quantize it to an even (uniform) split.
+        let opts = IgOptions { scheme: Scheme::NonUniform { n_int: 4 }, m: 16, ..Default::default() };
+        let a = explain_anytime(&m, &x, None, &opts, &policy).unwrap();
+        assert!(a.delta <= target, "{} !<= {target}", a.delta);
+        assert!(a.rounds >= 2, "a coarse start should need refinement");
+        assert!(a.steps < 128 + 1, "early exit must beat the uniform baseline's cost");
+        assert_eq!(a.residuals.len(), a.rounds);
+        assert_eq!(*a.residuals.last().unwrap(), a.delta);
+        assert!(a.residuals.last().unwrap() < a.residuals.first().unwrap());
+    }
+
+    #[test]
+    fn anytime_budget_cap_reports_best_effort() {
+        let m = saturating_model();
+        let x = input();
+        let policy = AnytimePolicy::with_max_m(0.0, 32).unwrap();
+        let opts = IgOptions { scheme: Scheme::NonUniform { n_int: 4 }, m: 8, ..Default::default() };
+        let a = explain_anytime(&m, &x, None, &opts, &policy).unwrap();
+        assert_eq!(a.rounds, 3); // 8 -> 16 -> 32, then the budget gate stops it
+        assert_eq!(a.steps, 32 + 1);
+        assert!(a.delta > 0.0);
+    }
+
+    #[test]
+    fn anytime_never_reevaluates_an_alpha() {
+        // The acceptance property: across all refinement rounds, every
+        // gradient alpha is evaluated exactly once.
+        let inner = saturating_model();
+        let x = input();
+        crate::testutil::prop(10, 91, |rng| {
+            let m0 = rng.range(4, 17);
+            let rec = Recorder { inner: &inner, alphas: std::sync::Mutex::new(Vec::new()) };
+            let policy = AnytimePolicy::with_max_m(0.0, m0 * 8).unwrap();
+            let opts =
+                IgOptions { scheme: Scheme::NonUniform { n_int: 4 }, m: m0, ..Default::default() };
+            let a = explain_anytime(&rec, &x, None, &opts, &policy).unwrap();
+            let mut seen = rec.alphas.into_inner().unwrap();
+            assert_eq!(seen.len(), a.steps, "every dispatched alpha is accounted in steps");
+            seen.sort_by(|p, q| p.partial_cmp(q).unwrap());
+            assert!(
+                seen.windows(2).all(|w| w[0] < w[1]),
+                "duplicate alpha dispatched: reuse violated"
+            );
+        });
+    }
+
+    #[test]
+    fn anytime_validation_errors() {
+        let m = model();
+        let x = input();
+        let policy = AnytimePolicy::new(0.01);
+        let left = IgOptions { rule: Rule::Left, scheme: Scheme::Uniform, m: 8, ..Default::default() };
+        assert!(explain_anytime(&m, &x, None, &left, &policy).is_err());
+        let over = IgOptions { m: 1024, ..Default::default() };
+        assert!(explain_anytime(&m, &x, None, &over, &policy).is_err());
+        let tight = AnytimePolicy::with_max_m(0.01, 4).unwrap();
+        let a = explain_anytime(&m, &x, None, &IgOptions { m: 4, ..Default::default() }, &tight)
+            .unwrap();
+        assert_eq!(a.rounds, 1, "m0 == max_m: no refinement possible");
     }
 
     #[test]

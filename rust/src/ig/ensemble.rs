@@ -26,6 +26,7 @@ use super::model::Model;
 /// bookkeeping (total steps across members, worst member delta).
 #[derive(Debug, Clone)]
 pub struct EnsembleAttribution {
+    /// The averaged attribution with summed step accounting.
     pub attribution: Attribution,
     /// Number of inner IG runs.
     pub members: usize,
@@ -68,14 +69,17 @@ pub fn multi_baseline(
         breakdown.reduce += a.breakdown.reduce;
     }
     let sum: f64 = acc.iter().sum();
+    let delta = (sum - gap_acc).abs();
     Ok(EnsembleAttribution {
         attribution: Attribution {
-            delta: (sum - gap_acc).abs(),
+            delta,
             endpoint_gap: gap_acc,
             values: acc,
             target,
             steps,
             probe_passes,
+            rounds: 1,
+            residuals: vec![delta],
             breakdown,
         },
         members: baselines.len(),
@@ -127,14 +131,17 @@ pub fn noise_tunnel(
         breakdown.execute += a.breakdown.execute;
     }
     let sum: f64 = acc.iter().sum();
+    let delta = (sum - gap_acc).abs();
     Ok(EnsembleAttribution {
         attribution: Attribution {
-            delta: (sum - gap_acc).abs(),
+            delta,
             endpoint_gap: gap_acc,
             values: acc,
             target,
             steps,
             probe_passes,
+            rounds: 1,
+            residuals: vec![delta],
             breakdown,
         },
         members: n_samples,

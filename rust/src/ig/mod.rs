@@ -5,19 +5,24 @@
 //! * [`riemann`] — quadrature rules over the unit interval (Eq. 2's
 //!   discretization and its better-behaved variants);
 //! * [`schedule`] — alpha/weight schedules: uniform grids, per-interval
-//!   grids, and their *fused* concatenation into the paper's non-uniform
+//!   grids, their *fused* concatenation into the paper's non-uniform
 //!   schedule (coincident boundary points merged, zero-weight points
-//!   pruned — `len()` is exactly the model-eval count);
+//!   pruned — `len()` is exactly the model-eval count), and *nested
+//!   refinement* (`Schedule::refine`: the next level is a strict superset
+//!   of the current points, enabling gradient reuse across rounds);
 //! * [`allocator`] — stage 1's step distribution (`m_int ∝ √|Δf|`, with
 //!   the linear variant kept as the paper's ablation);
 //! * [`probe`] — stage 1's boundary probing and interval-delta math;
-//! * [`convergence`] — the completeness residual δ (Eq. 3) and the
-//!   iso-convergence search protocol (Fig. 5b);
+//! * [`convergence`] — the completeness residual δ (Eq. 3), the
+//!   iso-convergence search protocol (Fig. 5b), and the anytime gate
+//!   (`AnytimePolicy`);
 //! * [`model`] — the [`Model`] abstraction the engine runs against: the
 //!   PJRT-backed model at serving time, a closed-form analytic model in
 //!   tests and coordinator benches;
-//! * [`engine`] — the two engines: baseline uniform IG and the paper's
-//!   two-stage non-uniform IG;
+//! * [`engine`] — the engines: baseline uniform IG, the paper's
+//!   two-stage non-uniform IG, and the anytime engine
+//!   (`explain_anytime`: incremental refinement with convergence-gated
+//!   early exit);
 //! * [`attribution`] — result type with completeness accounting;
 //! * [`analysis`] — path-information statistics behind Fig. 3.
 
@@ -34,12 +39,12 @@ pub mod probe;
 pub mod riemann;
 pub mod schedule;
 
-pub use adaptive::explain_to_threshold;
+pub use adaptive::{explain_to_threshold, AdaptiveResult};
 pub use allocator::Allocation;
 pub use attribution::Attribution;
 pub use baselines::BaselineKind;
-pub use convergence::ConvergencePolicy;
-pub use engine::{explain, IgOptions};
+pub use convergence::{AnytimePolicy, ConvergencePolicy};
+pub use engine::{explain, explain_anytime, IgOptions};
 pub use model::{AnalyticModel, Model};
 pub use riemann::Rule;
 

@@ -19,7 +19,9 @@ use anyhow::{ensure, Result};
 /// Implementations must be thread-safe (`Sync`): the coordinator calls
 /// them from worker threads.
 pub trait Model: Sync {
+    /// Flat input width F the model consumes.
     fn features(&self) -> usize;
+    /// Number of output classes.
     fn num_classes(&self) -> usize;
 
     /// Class probabilities for a batch of flat images.

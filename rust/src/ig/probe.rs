@@ -14,12 +14,14 @@ pub struct Probe {
 }
 
 impl Probe {
+    /// Build from matching boundary/probability vectors (>= 2 boundaries).
     pub fn new(boundaries: Vec<f64>, probs: Vec<f64>) -> Result<Probe> {
         ensure!(boundaries.len() == probs.len(), "boundary/prob length mismatch");
         ensure!(boundaries.len() >= 2, "need at least 2 boundaries");
         Ok(Probe { boundaries, probs })
     }
 
+    /// Number of probe intervals (boundaries − 1).
     pub fn n_int(&self) -> usize {
         self.boundaries.len() - 1
     }

@@ -34,6 +34,7 @@ impl std::fmt::Display for Rule {
 }
 
 impl Rule {
+    /// Parse `left|right|trapezoid|eq2` (CLI syntax).
     pub fn parse(s: &str) -> Result<Rule> {
         Ok(match s {
             "left" => Rule::Left,
@@ -42,6 +43,15 @@ impl Rule {
             "eq2" => Rule::Eq2,
             _ => bail!("unknown rule {s:?} (left|right|trapezoid|eq2)"),
         })
+    }
+
+    /// Whether this rule keeps both grid endpoints at nonzero weight.
+    /// Left/Right structurally zero one endpoint (pruned at schedule
+    /// build), so their fused grids are not endpoint-inclusive — which is
+    /// what nested refinement ([`crate::ig::schedule::Schedule::refine`])
+    /// and therefore the anytime engine require.
+    pub fn keeps_endpoints(&self) -> bool {
+        matches!(self, Rule::Trapezoid | Rule::Eq2)
     }
 
     /// Weights for a grid of `n_points = m + 1` uniform points covering a

@@ -22,6 +22,22 @@
 //! ([`Schedule::uniform`], [`Schedule::nonuniform`]) return fused
 //! schedules; [`Schedule::nonuniform_unfused`] exposes the raw
 //! concatenation for equivalence testing and step-accounting audits.
+//!
+//! # Nested refinement
+//!
+//! [`Schedule::refine`] produces the next-level fused schedule by
+//! bisecting every consecutive-alpha gap: the refined point set is a
+//! *strict superset* of the current one (every alpha is carried over
+//! bit-identically), which is what makes anytime IG possible — gradients
+//! already evaluated at level `k` are reused at level `k + 1`, never
+//! recomputed. For an endpoint-inclusive rule (trapezoid, eq2) every
+//! carried point's quadrature weight is *exactly halved* by refinement
+//! ([`Schedule::REFINE_CARRY`]), so a partial weighted gradient sum
+//! carries across rounds as `sum / 2` plus the novel midpoints'
+//! contributions ([`Schedule::novel_vs`]). Refining
+//! `nonuniform(bounds, alloc)` is pointwise identical to building
+//! `nonuniform(bounds, 2 * alloc)` directly — doubling every interval's
+//! grid — so the refined schedule is itself a legal stage-2 schedule.
 
 use anyhow::{ensure, Result};
 
@@ -49,6 +65,7 @@ pub struct Point {
 /// `len()` is exactly the number of model evaluations stage 2 costs.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Schedule {
+    /// The evaluation points, in alpha order.
     pub points: Vec<Point>,
     /// Grid-interval count(s) this schedule was built from, for reporting.
     pub m_total: usize,
@@ -143,15 +160,87 @@ impl Schedule {
             && self.points.iter().all(|p| p.weight != 0.0)
     }
 
+    /// The exact factor every carried point's weight shrinks by under
+    /// [`Schedule::refine`]. Bisecting every gap halves the grid spacing,
+    /// and for endpoint-inclusive rules each old point's weight is linear
+    /// in its local spacing, so all carried weights are multiplied by
+    /// exactly 0.5 — a power-of-two scale, lossless in floating point.
+    /// An incremental accumulator therefore carries its partial weighted
+    /// gradient sum across a refinement round as `partial * REFINE_CARRY`
+    /// plus the novel midpoints' weighted contributions.
+    pub const REFINE_CARRY: f64 = 0.5;
+
+    /// Nested refinement: the next-level fused schedule, produced by
+    /// bisecting every consecutive-alpha gap.
+    ///
+    /// Contract (property-tested below; the anytime engine and the
+    /// coordinator's refinement rounds rely on every clause):
+    ///
+    /// * every current alpha reappears **bit-identically** (strict
+    ///   superset — a refined schedule never re-evaluates a point);
+    /// * every carried point's weight is exactly `weight * REFINE_CARRY`;
+    /// * each novel midpoint `(αⱼ + αⱼ₊₁) / 2` gets weight `gap / 2`,
+    ///   its interior weight at the refined spacing;
+    /// * `m_total` doubles, and for a schedule built by
+    ///   [`Schedule::nonuniform`] the result is pointwise the schedule
+    ///   built with a doubled allocation.
+    ///
+    /// Requires a fused, endpoint-inclusive schedule (first alpha 0, last
+    /// alpha 1 — i.e. built with [`Rule::Trapezoid`] or [`Rule::Eq2`]):
+    /// Left/Right prune a zero-weight endpoint at build, so the region
+    /// beyond their last kept point has no gap to bisect and the carry
+    /// identity breaks; refining them is rejected.
+    pub fn refine(&self) -> Result<Schedule> {
+        ensure!(self.len() >= 2, "cannot refine a schedule with < 2 points");
+        ensure!(self.is_fused(), "refine requires a fused schedule");
+        ensure!(
+            self.points[0].alpha == 0.0 && (self.points[self.len() - 1].alpha - 1.0).abs() <= FUSE_EPS,
+            "refine requires an endpoint-inclusive schedule (trapezoid/eq2); \
+             left/right rules prune an endpoint and cannot be refined in place"
+        );
+        let mut points = Vec::with_capacity(2 * self.len() - 1);
+        for w in self.points.windows(2) {
+            let gap = w[1].alpha - w[0].alpha;
+            points.push(Point { alpha: w[0].alpha, weight: w[0].weight * Self::REFINE_CARRY });
+            points.push(Point { alpha: w[0].alpha + gap * 0.5, weight: gap * 0.5 });
+        }
+        let last = self.points[self.len() - 1];
+        points.push(Point { alpha: last.alpha, weight: last.weight * Self::REFINE_CARRY });
+        Ok(Schedule { points, m_total: self.m_total * 2 })
+    }
+
+    /// The points of `self` whose alpha does not occur in `coarser`
+    /// (coincidence within the fuse tolerance) — exactly the gradient
+    /// evaluations a refinement round must pay, with their *refined*
+    /// weights. Both schedules must be fused (alphas sorted); this is a
+    /// linear merge-walk.
+    pub fn novel_vs(&self, coarser: &Schedule) -> Vec<Point> {
+        let mut out = Vec::with_capacity(self.len().saturating_sub(coarser.len()));
+        let mut i = 0;
+        for p in &self.points {
+            while i < coarser.points.len() && coarser.points[i].alpha < p.alpha - FUSE_EPS {
+                i += 1;
+            }
+            let carried =
+                i < coarser.points.len() && (coarser.points[i].alpha - p.alpha).abs() <= FUSE_EPS;
+            if !carried {
+                out.push(*p);
+            }
+        }
+        out
+    }
+
     /// Equal-width probe boundaries for `n_int` intervals: 0, 1/n, .., 1.
     pub fn probe_boundaries(n_int: usize) -> Vec<f64> {
         (0..=n_int).map(|i| i as f64 / n_int as f64).collect()
     }
 
+    /// Point count — for a fused schedule, exactly the model-eval cost.
     pub fn len(&self) -> usize {
         self.points.len()
     }
 
+    /// Whether the schedule has no points.
     pub fn is_empty(&self) -> bool {
         self.points.is_empty()
     }
@@ -360,6 +449,110 @@ mod tests {
                 acc
             };
             testutil::assert_allclose(&quad(&raw), &quad(&fused), 0.0, 1e-12);
+        });
+    }
+
+    #[test]
+    fn refine_carries_old_points_verbatim_at_half_weight() {
+        let bounds = Schedule::probe_boundaries(4);
+        let s = Schedule::nonuniform(&bounds, &[8, 4, 2, 2], Rule::Trapezoid).unwrap();
+        let r = s.refine().unwrap();
+        assert_eq!(r.len(), 2 * s.len() - 1);
+        assert_eq!(r.m_total, 2 * s.m_total);
+        assert!(r.is_fused());
+        for (j, p) in s.points.iter().enumerate() {
+            // Bit-identical alphas, exactly halved weights (both exact:
+            // the incremental accumulator's carry identity depends on it).
+            assert_eq!(r.points[2 * j].alpha, p.alpha);
+            assert_eq!(r.points[2 * j].weight, p.weight * Schedule::REFINE_CARRY);
+        }
+    }
+
+    #[test]
+    fn refine_equals_doubled_allocation() {
+        // refine(nonuniform(bounds, alloc)) == nonuniform(bounds, 2*alloc):
+        // the refined schedule is itself a legal stage-2 schedule.
+        for rule in [Rule::Trapezoid, Rule::Eq2] {
+            let bounds = Schedule::probe_boundaries(4);
+            let alloc = [8usize, 4, 2, 2];
+            let doubled: Vec<usize> = alloc.iter().map(|&a| 2 * a).collect();
+            let r = Schedule::nonuniform(&bounds, &alloc, rule).unwrap().refine().unwrap();
+            let d = Schedule::nonuniform(&bounds, &doubled, rule).unwrap();
+            assert_eq!(r.len(), d.len(), "{rule}");
+            assert_eq!(r.m_total, d.m_total);
+            for (a, b) in r.points.iter().zip(&d.points) {
+                assert!((a.alpha - b.alpha).abs() < 1e-12, "{rule}");
+                assert!((a.weight - b.weight).abs() < 1e-12, "{rule}");
+            }
+        }
+    }
+
+    #[test]
+    fn refine_preserves_trapezoid_mass() {
+        let s = Schedule::uniform(8, Rule::Trapezoid).unwrap();
+        let r = s.refine().unwrap();
+        assert!((r.total_weight() - 1.0).abs() < 1e-12);
+        let u16 = Schedule::uniform(16, Rule::Trapezoid).unwrap();
+        assert_eq!(r.len(), u16.len());
+        for (a, b) in r.points.iter().zip(&u16.points) {
+            assert!((a.alpha - b.alpha).abs() < 1e-12);
+            assert!((a.weight - b.weight).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn refine_rejects_endpoint_pruned_and_unfused() {
+        // Left/Right prune an endpoint: the carry identity breaks.
+        assert!(Schedule::uniform(8, Rule::Left).unwrap().refine().is_err());
+        assert!(Schedule::uniform(8, Rule::Right).unwrap().refine().is_err());
+        // Unfused schedules (duplicate boundary alphas) are rejected too.
+        let bounds = Schedule::probe_boundaries(2);
+        let raw = Schedule::nonuniform_unfused(&bounds, &[2, 2], Rule::Trapezoid).unwrap();
+        assert!(raw.refine().is_err());
+    }
+
+    #[test]
+    fn novel_vs_returns_exactly_the_midpoints() {
+        let s = Schedule::uniform(4, Rule::Trapezoid).unwrap();
+        let r = s.refine().unwrap();
+        let novel = r.novel_vs(&s);
+        assert_eq!(novel.len(), s.len() - 1);
+        let alphas: Vec<f64> = novel.iter().map(|p| p.alpha).collect();
+        assert_eq!(alphas, vec![0.125, 0.375, 0.625, 0.875]);
+        assert!(novel.iter().all(|p| (p.weight - 0.125).abs() < 1e-12));
+    }
+
+    #[test]
+    fn property_zero_reevaluated_alphas_across_rounds() {
+        // The anytime reuse guarantee: across any number of refinement
+        // rounds, no alpha is ever evaluated twice — the union of per-round
+        // novel sets plus the initial schedule IS the final schedule.
+        testutil::prop(30, 77, |rng| {
+            let n_int = rng.range(1, 6);
+            let m = rng.range(n_int, 33);
+            let deltas: Vec<f64> = (0..n_int).map(|_| rng.range_f64(0.0, 1.0)).collect();
+            let alloc = Allocation::Sqrt.allocate(m, &deltas).unwrap();
+            let bounds = Schedule::probe_boundaries(n_int);
+            let mut sched = Schedule::nonuniform(&bounds, &alloc, Rule::Trapezoid).unwrap();
+            let mut evaluated: Vec<f64> = sched.points.iter().map(|p| p.alpha).collect();
+            let mut evals = sched.len();
+            for _ in 0..3 {
+                let refined = sched.refine().unwrap();
+                let novel = refined.novel_vs(&sched);
+                assert_eq!(novel.len(), refined.len() - sched.len());
+                for p in &novel {
+                    assert!(
+                        evaluated.iter().all(|&a| (a - p.alpha).abs() > FUSE_EPS),
+                        "alpha {} re-evaluated",
+                        p.alpha
+                    );
+                    evaluated.push(p.alpha);
+                }
+                evals += novel.len();
+                sched = refined;
+            }
+            assert_eq!(evals, sched.len(), "total evals must equal the final schedule length");
+            assert_eq!(evaluated.len(), sched.len());
         });
     }
 

@@ -26,11 +26,17 @@ use anyhow::{anyhow, bail, Context, Result};
 /// deterministic — bench outputs diff cleanly between runs.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// JSON `null`.
     Null,
+    /// JSON boolean.
     Bool(bool),
+    /// JSON number (always f64; see module doc).
     Num(f64),
+    /// JSON string.
     Str(String),
+    /// JSON array.
     Arr(Vec<Json>),
+    /// JSON object (ordered keys for deterministic output).
     Obj(BTreeMap<String, Json>),
 }
 
@@ -54,6 +60,7 @@ impl Json {
 
     // ---- typed accessors -------------------------------------------------
 
+    /// The value as an object map, or a typed error.
     pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Ok(m),
@@ -61,6 +68,7 @@ impl Json {
         }
     }
 
+    /// The value as an array slice, or a typed error.
     pub fn as_arr(&self) -> Result<&[Json]> {
         match self {
             Json::Arr(v) => Ok(v),
@@ -68,6 +76,7 @@ impl Json {
         }
     }
 
+    /// The value as a string slice, or a typed error.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -75,6 +84,7 @@ impl Json {
         }
     }
 
+    /// The value as a number, or a typed error.
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Json::Num(n) => Ok(*n),
@@ -91,6 +101,7 @@ impl Json {
         Ok(n as usize)
     }
 
+    /// Number as i64; fails on non-integral or out-of-range values.
     pub fn as_i64(&self) -> Result<i64> {
         let n = self.as_f64()?;
         if n.fract() != 0.0 || n.abs() > 2f64.powi(53) {
@@ -99,6 +110,7 @@ impl Json {
         Ok(n as i64)
     }
 
+    /// The value as a bool, or a typed error.
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             Json::Bool(b) => Ok(*b),
@@ -147,14 +159,17 @@ impl Json {
 
     // ---- builders --------------------------------------------------------
 
+    /// Build an object from `(key, value)` pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Build a number array from an f64 slice.
     pub fn arr_f64(vals: &[f64]) -> Json {
         Json::Arr(vals.iter().map(|&v| Json::Num(v)).collect())
     }
 
+    /// Build a number array from a usize slice.
     pub fn arr_usize(vals: &[usize]) -> Json {
         Json::Arr(vals.iter().map(|&v| Json::Num(v as f64)).collect())
     }

@@ -17,6 +17,13 @@
 //! `viz`, `bench`) are implemented from scratch: the build environment
 //! vendors only the `xla` crate closure, and a reproduction should own its
 //! substrate anyway.
+//!
+//! Start with the repo-root `README.md` for the paper claims and module
+//! map, and `docs/ARCHITECTURE.md` for the serving path end-to-end.
+
+// Every public item is part of the reproduction's documented surface;
+// keep rustdoc complete (CI runs `cargo doc` with warnings denied).
+#![warn(missing_docs)]
 
 pub mod bench;
 pub mod cli;

@@ -47,6 +47,9 @@ COMMANDS:
             [--out-dir DIR] [--m N] [--scheme S]
   adaptive  Explain to a convergence threshold (iso-convergence driver)
             [--class N] [--delta-th F] [--scheme S]
+  anytime   Explain to a convergence threshold with refinement reuse:
+            start at --m, double with early exit (novel points only)
+            [--class N] [--delta-target F] [--max-m N] [--scheme S] [--m N]
   ensemble  Multi-baseline / noise-tunnel attribution
             [--class N] [--method baselines|noise] [--samples N]
             [--sigma F] [--m N] [--scheme S]
@@ -77,6 +80,7 @@ fn run() -> Result<()> {
         "sweep" => cmd_sweep(args, &artifacts),
         "render" => cmd_render(args, &artifacts),
         "adaptive" => cmd_adaptive(args, &artifacts),
+        "anytime" => cmd_anytime(args, &artifacts),
         "ensemble" => cmd_ensemble(args, &artifacts),
         other => bail!("unknown command {other:?}\n{USAGE}"),
     }
@@ -244,6 +248,47 @@ fn cmd_adaptive(mut args: Args, artifacts: &str) -> Result<()> {
     println!("final delta      : {:.6}", res.attribution.delta);
     println!("final steps      : {} (total across rounds: {})", res.attribution.steps, res.total_steps);
     println!("probe passes     : {} (stage 1 runs once, reused per round)", res.attribution.probe_passes);
+    println!("latency          : {wall:.2?}");
+    Ok(())
+}
+
+fn cmd_anytime(mut args: Args, artifacts: &str) -> Result<()> {
+    let class = args.opt("class", 0usize)?;
+    let delta_target = args.opt("delta-target", 0.01f64)?;
+    let max_m = args.opt("max-m", ig::AnytimePolicy::DEFAULT_MAX_M)?;
+    // Consume `--m` before parse_opts so an explicit value is
+    // distinguishable from the generic m=64 default: here `--m` is the
+    // coarse *starting* level, and its default should be low so the
+    // early exit has somewhere to go — but no lower than 4 steps per
+    // probe interval (coarser quantizes the allocation to even).
+    let m_flag = args.opt_str("m");
+    let mut opts = parse_opts(&mut args)?;
+    args.finish()?;
+    opts.m = match m_flag {
+        Some(v) => v
+            .parse()
+            .map_err(|e| anyhow::anyhow!("invalid value for --m: {v:?} ({e})"))?,
+        None => match opts.scheme {
+            Scheme::NonUniform { n_int } => 4 * n_int.max(2),
+            Scheme::Uniform => 8,
+        },
+    };
+
+    let rt = Runtime::load_default(artifacts)?;
+    let model = rt.model();
+    let img = synth::gen_image(class, 0);
+    let policy = ig::AnytimePolicy::with_max_m(delta_target, max_m)?;
+    let t0 = std::time::Instant::now();
+    let attr = ig::explain_anytime(&model, &img, None, &opts, &policy)?;
+    let wall = t0.elapsed();
+
+    println!("target residual  : {delta_target} (max_m {max_m})");
+    println!("converged        : {}", attr.delta <= delta_target);
+    println!("rounds           : {} (m doubling from {})", attr.rounds, opts.m);
+    println!("residuals        : {:?}", attr.residuals);
+    println!("final delta      : {:.6}", attr.delta);
+    println!("gradient evals   : {} total across rounds (== final schedule; zero re-evaluations)", attr.steps);
+    println!("probe passes     : {}", attr.probe_passes);
     println!("latency          : {wall:.2?}");
     Ok(())
 }

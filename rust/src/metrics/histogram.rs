@@ -58,6 +58,7 @@ impl Histogram {
         self.base * 2f64.powf(i as f64 / self.per_octave as f64)
     }
 
+    /// Record one observation (non-finite and negative values ignored).
     pub fn record(&self, v: f64) {
         if !v.is_finite() || v < 0.0 {
             return; // defensive: never let a NaN poison percentiles
@@ -70,14 +71,17 @@ impl Histogram {
         self.max_fp.fetch_max(fp, Ordering::Relaxed);
     }
 
+    /// Record a duration in seconds.
     pub fn record_duration(&self, d: Duration) {
         self.record(d.as_secs_f64());
     }
 
+    /// Number of recorded observations.
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Exact mean of recorded observations (0 when empty).
     pub fn mean(&self) -> f64 {
         let n = self.count();
         if n == 0 {
@@ -86,6 +90,7 @@ impl Histogram {
         self.sum_fp.load(Ordering::Relaxed) as f64 / FP / n as f64
     }
 
+    /// Exact minimum (0 when empty).
     pub fn min(&self) -> f64 {
         let v = self.min_fp.load(Ordering::Relaxed);
         if v == u64::MAX {
@@ -95,6 +100,7 @@ impl Histogram {
         }
     }
 
+    /// Exact maximum (0 when empty).
     pub fn max(&self) -> f64 {
         self.max_fp.load(Ordering::Relaxed) as f64 / FP
     }

@@ -23,18 +23,22 @@ pub struct Counter {
 }
 
 impl Counter {
+    /// A counter at zero.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Increment by one.
     pub fn inc(&self) {
         self.n.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Increment by `k`.
     pub fn add(&self, k: u64) {
         self.n.fetch_add(k, Ordering::Relaxed);
     }
 
+    /// Current count.
     pub fn get(&self) -> u64 {
         self.n.load(Ordering::Relaxed)
     }
@@ -54,6 +58,7 @@ impl Ewma {
         Ewma { alpha, state: Mutex::new(None) }
     }
 
+    /// Fold one observation into the average.
     pub fn observe(&self, v: f64) {
         let mut s = self.state.lock().unwrap();
         *s = Some(match *s {
@@ -62,6 +67,7 @@ impl Ewma {
         });
     }
 
+    /// Current average (`None` before the first observation).
     pub fn get(&self) -> Option<f64> {
         *self.state.lock().unwrap()
     }
@@ -74,6 +80,7 @@ pub struct Timer<'a> {
 }
 
 impl<'a> Timer<'a> {
+    /// Start timing; the elapsed time is recorded into `hist` on drop.
     pub fn new(hist: &'a Histogram) -> Self {
         Timer { hist, start: Instant::now() }
     }
@@ -95,13 +102,18 @@ impl Drop for Timer<'_> {
 /// needs (stage-1 time as a fraction of total).
 #[derive(Debug, Default, Clone, Copy, PartialEq)]
 pub struct StageBreakdown {
+    /// Stage-1 probing (forward-only boundary evaluations).
     pub probe: Duration,
+    /// Schedule construction (allocation + grid building + fusion).
     pub schedule: Duration,
+    /// Device execution of the gradient points.
     pub execute: Duration,
+    /// Final reduction/accumulation.
     pub reduce: Duration,
 }
 
 impl StageBreakdown {
+    /// Sum of all four stages.
     pub fn total(&self) -> Duration {
         self.probe + self.schedule + self.execute + self.reduce
     }

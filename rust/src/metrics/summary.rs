@@ -9,16 +9,19 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// An empty summary.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Build from an existing sample vector.
     pub fn from_values(values: Vec<f64>) -> Self {
         let mut s = Summary { values, sorted: false };
         s.sort();
         s
     }
 
+    /// Record one observation (non-finite values ignored).
     pub fn record(&mut self, v: f64) {
         if v.is_finite() {
             self.values.push(v);
@@ -33,10 +36,12 @@ impl Summary {
         }
     }
 
+    /// Number of recorded observations.
     pub fn count(&self) -> usize {
         self.values.len()
     }
 
+    /// Exact mean (0 when empty).
     pub fn mean(&self) -> f64 {
         if self.values.is_empty() {
             return 0.0;
@@ -54,11 +59,13 @@ impl Summary {
         (self.values.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / (n - 1) as f64).sqrt()
     }
 
+    /// Exact minimum (0 when empty).
     pub fn min(&mut self) -> f64 {
         self.sort();
         self.values.first().copied().unwrap_or(0.0)
     }
 
+    /// Exact maximum (0 when empty).
     pub fn max(&mut self) -> f64 {
         self.sort();
         self.values.last().copied().unwrap_or(0.0)
@@ -81,6 +88,7 @@ impl Summary {
         self.values[lo] * (1.0 - frac) + self.values[hi] * frac
     }
 
+    /// Exact median (interpolated for even counts).
     pub fn median(&mut self) -> f64 {
         self.quantile(0.5)
     }

@@ -19,7 +19,9 @@ pub const SUPPORTED_VERSION: usize = 3;
 /// One executable's metadata.
 #[derive(Debug, Clone)]
 pub struct ExeMeta {
+    /// Manifest key (e.g. `fwd_b16`).
     pub name: String,
+    /// HLO text file, relative to the artifact dir.
     pub file: PathBuf,
     /// "fwd" | "igchunk" | "igchunk_multi"
     pub kind: String,
@@ -34,22 +36,32 @@ pub struct ExeMeta {
 /// Parsed manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Manifest schema version (must equal [`SUPPORTED_VERSION`]).
     pub version: usize,
+    /// Model input width F.
     pub features: usize,
+    /// Model class count.
     pub num_classes: usize,
+    /// Flat parameter count (length of `params.bin` / 4).
     pub num_params: usize,
+    /// SHA-256 of `params.bin` as written by the AOT side.
     pub params_sha256: String,
+    /// Cross-language corpus checksum (mean pixel over 2 images/class).
     pub corpus_checksum: f64,
+    /// Executable metadata by manifest key.
     pub executables: BTreeMap<String, ExeMeta>,
+    /// JAX version used at build time (provenance).
     pub jax_version: String,
 }
 
 impl Manifest {
+    /// Load and validate `manifest.json` from `dir`.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let j = Json::from_file(&dir.join("manifest.json"))?;
         Self::from_json(&j)
     }
 
+    /// Parse and validate a manifest from its JSON tree.
     pub fn from_json(j: &Json) -> Result<Manifest> {
         let version = j.get("version")?.as_usize()?;
         ensure!(

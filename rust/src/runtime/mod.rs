@@ -30,6 +30,7 @@ use anyhow::{Context, Result};
 
 /// A loaded runtime: manifest + live device thread.
 pub struct Runtime {
+    /// The parsed AOT manifest the artifacts were loaded against.
     pub manifest: Manifest,
     handle: RuntimeHandle,
 }

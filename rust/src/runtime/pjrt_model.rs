@@ -33,16 +33,19 @@ pub struct PjrtModel {
     handle: RuntimeHandle,
     features: usize,
     num_classes: usize,
+    /// How `probs` batches onto the device (see [`ProbeMode`]).
     pub probe_mode: ProbeMode,
     /// Chunk width of the batched executables (16, from the manifest).
     pub chunk: usize,
 }
 
 impl PjrtModel {
+    /// Wrap a runtime handle with the model dimensions (default probe mode).
     pub fn new(handle: RuntimeHandle, features: usize, num_classes: usize) -> PjrtModel {
         PjrtModel { handle, features, num_classes, probe_mode: ProbeMode::Auto, chunk: 16 }
     }
 
+    /// Builder: override the probe batching mode.
     pub fn with_probe_mode(mut self, mode: ProbeMode) -> PjrtModel {
         self.probe_mode = mode;
         self

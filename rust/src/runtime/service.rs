@@ -15,14 +15,20 @@ use super::manifest::Manifest;
 /// Which compiled executable a job targets.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ExeKind {
+    /// Batch-1 forward pass.
     Fwd1,
+    /// Batch-16 forward pass.
     Fwd16,
+    /// Single-request IG chunk, batch 1.
     IgChunk1,
+    /// Single-request IG chunk, batch 16.
     IgChunk16,
+    /// Cross-request IG chunk (per-lane endpoints/targets), batch 16.
     IgChunkMulti16,
 }
 
 impl ExeKind {
+    /// The manifest key this executable is loaded under.
     pub fn manifest_name(&self) -> &'static str {
         match self {
             ExeKind::Fwd1 => "fwd_b1",
@@ -33,6 +39,7 @@ impl ExeKind {
         }
     }
 
+    /// Every executable kind, in index order.
     pub const ALL: [ExeKind; 5] =
         [ExeKind::Fwd1, ExeKind::Fwd16, ExeKind::IgChunk1, ExeKind::IgChunk16, ExeKind::IgChunkMulti16];
 
@@ -50,16 +57,20 @@ impl ExeKind {
 /// One argument: flat f32 data + dims to reshape to (rank 1 or 2).
 #[derive(Debug, Clone)]
 pub struct Arg {
+    /// Flat f32 payload.
     pub data: Vec<f32>,
+    /// Target shape (rank 1 or 2).
     pub dims: Vec<usize>,
 }
 
 impl Arg {
+    /// A rank-1 argument.
     pub fn vec(data: Vec<f32>) -> Arg {
         let n = data.len();
         Arg { data, dims: vec![n] }
     }
 
+    /// A rank-2 argument (`rows * cols` must match the payload length).
     pub fn mat(data: Vec<f32>, rows: usize, cols: usize) -> Arg {
         assert_eq!(data.len(), rows * cols, "matrix arg size mismatch");
         Arg { data, dims: vec![rows, cols] }
@@ -86,8 +97,11 @@ impl ExeKind {
 
 /// Cumulative per-executable execution statistics (shared, lock-free).
 pub struct RuntimeStats {
+    /// Executions per [`ExeKind`] (indexed by kind).
     pub exec_count: [Counter; 5],
+    /// Execution latency per [`ExeKind`] (indexed by kind).
     pub exec_latency: [Histogram; 5],
+    /// Time jobs spent queued before the device picked them up.
     pub queue_wait: Histogram,
 }
 
@@ -100,14 +114,17 @@ impl RuntimeStats {
         }
     }
 
+    /// Executions of `kind` so far.
     pub fn count(&self, kind: ExeKind) -> u64 {
         self.exec_count[kind.index()].get()
     }
 
+    /// Latency histogram for `kind`.
     pub fn latency(&self, kind: ExeKind) -> &Histogram {
         &self.exec_latency[kind.index()]
     }
 
+    /// Executions across all kinds.
     pub fn total_executions(&self) -> u64 {
         self.exec_count.iter().map(|c| c.get()).sum()
     }
@@ -135,14 +152,17 @@ impl RuntimeHandle {
         rrx.recv().map_err(|_| anyhow!("runtime device thread dropped the reply"))?
     }
 
+    /// Shared execution statistics.
     pub fn stats(&self) -> Arc<RuntimeStats> {
         self.stats.clone()
     }
 
+    /// Model input width F.
     pub fn features(&self) -> usize {
         self.features
     }
 
+    /// Model class count.
     pub fn num_classes(&self) -> usize {
         self.num_classes
     }

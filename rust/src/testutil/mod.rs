@@ -5,17 +5,19 @@
 
 /// Deterministic xorshift64* PRNG for tests. NOT the corpus generator —
 /// that is `data::synth`'s counter-based splitmix64; this one is free to
-//  evolve without breaking cross-language pins.
+/// evolve without breaking cross-language pins.
 #[derive(Debug, Clone)]
 pub struct TestRng {
     state: u64,
 }
 
 impl TestRng {
+    /// Seeded RNG (seed 0 is remapped to 1: xorshift needs nonzero state).
     pub fn new(seed: u64) -> Self {
         TestRng { state: seed.max(1) }
     }
 
+    /// Next raw 64-bit draw.
     pub fn next_u64(&mut self) -> u64 {
         let mut x = self.state;
         x ^= x << 13;
@@ -51,6 +53,7 @@ impl TestRng {
         (0..n).map(|_| self.range_f64(lo, hi)).collect()
     }
 
+    /// Fair coin flip.
     pub fn bool(&mut self) -> bool {
         self.next_u64() & 1 == 1
     }

@@ -9,6 +9,7 @@ pub struct Colormap {
 }
 
 impl Colormap {
+    /// Evaluate at `t` (clamped to [0, 1]) as float RGB.
     pub fn eval(&self, t: f32) -> [f32; 3] {
         let t = t.clamp(0.0, 1.0);
         let stops = self.stops;
@@ -24,6 +25,7 @@ impl Colormap {
         [r0 + f * (r1 - r0), g0 + f * (g1 - g0), b0 + f * (b1 - b0)]
     }
 
+    /// Evaluate at `t` as 8-bit RGB.
     pub fn eval_u8(&self, t: f32) -> [u8; 3] {
         let [r, g, b] = self.eval(t);
         [(r * 255.0).round() as u8, (g * 255.0).round() as u8, (b * 255.0).round() as u8]

@@ -15,6 +15,7 @@ pub struct HeatmapOptions {
     /// magnitude above it saturates. The IG literature uses 0.99 to stop
     /// single-pixel outliers from washing the map out.
     pub clip_percentile: f64,
+    /// Colormap for the normalized magnitudes.
     pub colormap: Colormap,
 }
 
