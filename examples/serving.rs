@@ -1,0 +1,80 @@
+//! Latency-budgeted serving quickstart — the README's serving snippet,
+//! kept compiling by CI (`cargo test` builds every example; clippy runs
+//! `--all-targets`). If you edit this file, update the README's
+//! "Serving with latency budgets" snippet to match.
+//!
+//!     make artifacts && cargo run --release --example serving
+//!
+//! What it shows, end to end:
+//!
+//! 1. a coordinator started with the probe-schedule cache enabled;
+//! 2. one **cold** tight-tier request (pays the stage-1 probe, populates
+//!    the cache), then warm tight-tier traffic (zero probe passes);
+//! 3. a thorough-tier request on the same stack (anytime refinement to
+//!    the tier's convergence target);
+//! 4. the per-tier and cache counters the coordinator exposes.
+
+use nuig::config::{AdmissionConfig, CoordinatorConfig};
+use nuig::coordinator::{Coordinator, ExplainRequest, LatencyBudget};
+use nuig::data::synth;
+use nuig::ig::{IgOptions, Scheme};
+use nuig::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    // --- README snippet starts here -------------------------------------
+    let rt = Runtime::load_default("artifacts")?;
+    let cfg = CoordinatorConfig {
+        // Enable the probe-schedule cache (off by default).
+        admission: AdmissionConfig { cache_capacity: 256, ..Default::default() },
+        ..Default::default()
+    };
+    let coord = Coordinator::start(&rt, cfg)?;
+
+    let opts = IgOptions { scheme: Scheme::NonUniform { n_int: 4 }, ..Default::default() };
+
+    // Tight tier, pinned target: the first request probes and populates
+    // the cache; later requests for the same class skip stage 1 entirely.
+    for index in 0..4 {
+        let req = ExplainRequest::new(synth::gen_image(2, index), opts)
+            .with_budget(LatencyBudget::Tight)
+            .with_target(2);
+        let resp = coord.explain(req)?;
+        println!(
+            "tight    #{index}: {} gradient evals + {} probe passes, delta {:.5}, {:?}",
+            resp.attribution.steps,
+            resp.attribution.probe_passes,
+            resp.attribution.delta,
+            resp.total_latency
+        );
+    }
+
+    // Thorough tier: anytime refinement to the tier's convergence target.
+    let req = ExplainRequest::new(synth::gen_image(2, 9), opts)
+        .with_budget(LatencyBudget::Thorough);
+    let resp = coord.explain(req)?;
+    println!(
+        "thorough   : {} evals over {} rounds, delta {:.5}",
+        resp.attribution.steps, resp.attribution.rounds, resp.attribution.delta
+    );
+
+    // Per-tier + cache accounting.
+    let stats = coord.stats();
+    let tight = stats.tier(LatencyBudget::Tight);
+    println!(
+        "tight tier : {} completed, {} warm (zero-probe), e2e {}",
+        tight.completed.get(),
+        tight.warm_admissions.get(),
+        tight.e2e_latency.format_ms()
+    );
+    println!(
+        "cache      : {:.0}% hit rate ({} hits / {} misses / {} evictions)",
+        100.0 * stats.cache.hit_rate(),
+        stats.cache.hits.get(),
+        stats.cache.misses.get(),
+        stats.cache.evictions.get()
+    );
+    coord.shutdown();
+    // --- README snippet ends here ---------------------------------------
+
+    Ok(())
+}

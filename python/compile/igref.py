@@ -166,6 +166,133 @@ def nonuniform_schedule(bounds: Sequence[float], alloc: Sequence[int],
     return alphas, weights
 
 
+# --------------------------------------------------------------------------
+# Probe-schedule cache keying (mirrors rust/src/ig/schedule/cache.rs).
+#
+# The serving coordinator amortizes stage 1 across requests with a cache
+# keyed by (target class, baseline id, quantized probe signature, m, rule,
+# allocation). The keying must agree bit-for-bit between the Rust serving
+# path and this reference, so the quantization, the FNV-1a baseline id,
+# and the canonical schedule-from-signature build are mirrored here and
+# pinned by tests/test_cache_parity.py on goldens shared with the Rust
+# unit tests (schedule/cache.rs::tests).
+# --------------------------------------------------------------------------
+
+#: Quantization resolution for probe signatures: normalized interval
+#: deltas are snapped to multiples of ``1/SIGNATURE_QUANT``. Mirrors
+#: ``cache::SIGNATURE_QUANT``.
+SIGNATURE_QUANT = 64
+
+_FNV_OFFSET = 0xCBF29CE484222325
+_FNV_PRIME = 0x100000001B3
+
+
+def quantize_signature(deltas: Sequence[float]) -> Tuple[int, ...]:
+    """Quantize normalized interval deltas to the cache-key signature.
+
+    Uses ``floor(d * Q + 0.5)`` (round-half-up) clamped to u8, exactly as
+    ``ProbeSignature::quantize`` — NOT ``np.round``, whose banker's
+    rounding would disagree at the .5 boundaries.
+    """
+    out = []
+    for d in deltas:
+        q = int(math.floor(abs(float(d)) * SIGNATURE_QUANT + 0.5))
+        out.append(min(q, 255))
+    return tuple(out)
+
+
+def dequantize_signature(sig: Sequence[int]) -> np.ndarray:
+    """Reconstruct normalized deltas from a quantized signature
+    (renormalized; an all-zero signature falls back to an even split).
+    The canonical cached schedule is built from these, so cache content
+    is a pure function of the key on both sides."""
+    sig = list(sig)
+    total = sum(sig)
+    if total == 0:
+        return np.full(len(sig), 1.0 / len(sig))
+    return np.array([q / total for q in sig], dtype=np.float64)
+
+
+def baseline_id(baseline: Sequence[float]) -> int:
+    """Stable baseline identity: FNV-1a 64 over the f32 LE bytes.
+    Mirrors ``cache::baseline_id`` (parity-tested goldens)."""
+    h = _FNV_OFFSET
+    for b in np.asarray(baseline, dtype="<f4").tobytes():
+        h ^= b
+        h = (h * _FNV_PRIME) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+def schedule_cache_key(target: int, baseline: Sequence[float],
+                       deltas: Sequence[float], m: int,
+                       rule: str = "trapezoid", allocation: str = "sqrt"
+                       ) -> Tuple:
+    """The full cache key a request maps to — everything the fused
+    non-uniform schedule depends on. Mirrors ``cache::CacheKey``."""
+    return (target, baseline_id(baseline), quantize_signature(deltas), m,
+            rule, allocation)
+
+
+def canonical_schedule(sig: Sequence[int], m: int, rule: str = "trapezoid",
+                       allocation: str = "sqrt"
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """The canonical fused schedule a cache key denotes: equal-width probe
+    boundaries for ``len(sig)`` intervals, the allocation applied to the
+    *dequantized* signature, fused. Mirrors
+    ``cache::CacheKey::canonical_schedule``."""
+    n_int = len(sig)
+    if n_int < 1:
+        raise ValueError("empty probe signature")
+    bounds = np.arange(n_int + 1, dtype=np.float64) / n_int
+    deltas = dequantize_signature(sig)
+    alloc = (sqrt_allocate(m, deltas) if allocation == "sqrt"
+             else linear_allocate(m, deltas))
+    return nonuniform_schedule(bounds, alloc, rule)
+
+
+class ScheduleCache:
+    """Reference mirror of ``cache::ScheduleCache`` lookup semantics: a
+    bounded LRU over canonical schedules with hit/miss/evict counters.
+
+    Single map (no shards — sharding only bounds lock contention, it does
+    not change lookup semantics) so the parity test can pin hit/miss
+    behaviour without concurrency."""
+
+    def __init__(self, capacity: int):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self._map: dict = {}
+        self._tick = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.insertions = 0
+
+    def get_or_build(self, key: Tuple) -> Tuple[np.ndarray, np.ndarray]:
+        """Lookup, building + inserting the canonical schedule on a miss
+        (key layout: the output of :func:`schedule_cache_key`)."""
+        self._tick += 1
+        if key in self._map:
+            self.hits += 1
+            entry = self._map[key]
+            entry[1] = self._tick
+            return entry[0]
+        self.misses += 1
+        target, bid, sig, m, rule, allocation = key
+        built = canonical_schedule(sig, m, rule, allocation)
+        if len(self._map) >= self.capacity:
+            victim = min(self._map.items(), key=lambda kv: kv[1][1])[0]
+            del self._map[victim]
+            self.evictions += 1
+        self.insertions += 1
+        self._map[key] = [built, self._tick]
+        return built
+
+    def __len__(self) -> int:
+        return len(self._map)
+
+
 def riemann_weights(n_points: int, rule: str = "trapezoid") -> np.ndarray:
     """Quadrature weights over a unit interval discretized into n_points.
 

@@ -1,0 +1,154 @@
+"""Rust↔Python parity for the probe-schedule cache keying.
+
+The serving coordinator's cache (rust/src/ig/schedule/cache.rs) and this
+reference (compile/igref.py) must agree bit-for-bit on:
+
+  * the quantized probe signature (round-half-up to 1/64),
+  * the FNV-1a 64 baseline id over f32 LE bytes,
+  * the canonical schedule built from a dequantized signature.
+
+The golden values below are pinned VERBATIM in the Rust unit tests
+(`schedule/cache.rs::tests::{quantization,baseline_id}_parity_goldens`).
+If either side drifts, cross-language cache keys stop colliding and the
+warm-path guarantees silently evaporate — so change both or neither.
+"""
+
+import numpy as np
+import pytest
+
+from compile import igref
+
+
+# ---------------------------------------------------------------------------
+# Quantization goldens (shared with cache.rs::quantization_parity_goldens)
+# ---------------------------------------------------------------------------
+
+def test_quantize_signature_goldens():
+    assert igref.quantize_signature([0.625, 0.25, 0.0625, 0.0625]) == (40, 16, 4, 4)
+    assert igref.quantize_signature([0.7, 0.2, 0.08, 0.02]) == (45, 13, 5, 1)
+    assert igref.quantize_signature([1.0]) == (64,)
+    # Out-of-range inputs clamp to u8 instead of wrapping.
+    assert igref.quantize_signature([5.0]) == (255,)
+
+
+def test_quantize_uses_round_half_up_not_bankers():
+    # 0.5 quantization boundaries: floor(d*64 + 0.5) == round-half-up.
+    # np.round would give 32 for both (banker's rounding) — the exact
+    # disagreement this test exists to prevent.
+    assert igref.quantize_signature([32.5 / 64.0]) == (33,)
+    assert igref.quantize_signature([31.5 / 64.0]) == (32,)
+
+
+def test_dequantize_renormalizes_exactly():
+    # Levels (45, 13, 5, 1) sum to 64: dyadic fractions, exact in f64 —
+    # the same vector the Rust test pins.
+    deq = igref.dequantize_signature((45, 13, 5, 1))
+    assert deq.tolist() == [0.703125, 0.203125, 0.078125, 0.015625]
+    flat = igref.dequantize_signature((0, 0, 0))
+    assert np.allclose(flat, 1.0 / 3.0)
+
+
+def test_quantization_collapses_near_identical_probes():
+    a = igref.quantize_signature([0.7001, 0.1999, 0.08, 0.02])
+    b = igref.quantize_signature([0.6999, 0.2001, 0.08, 0.02])
+    assert a == b
+
+
+# ---------------------------------------------------------------------------
+# Baseline-id goldens (shared with cache.rs::baseline_id_parity_goldens)
+# ---------------------------------------------------------------------------
+
+def test_baseline_id_goldens():
+    assert igref.baseline_id([]) == 0xCBF29CE484222325
+    assert igref.baseline_id([0.0] * 4) == 0x88201FB960FF6465
+    assert igref.baseline_id([0.0, 0.25, 0.5, 1.0]) == 0xD831ED359A404D8B
+    assert igref.baseline_id([0.5] * 64) == 0xED65DA9CCEBF6D25
+
+
+def test_baseline_id_discriminates():
+    assert igref.baseline_id([0.0] * 4) != igref.baseline_id([0.0] * 5)
+    assert igref.baseline_id([0.25, 0.0]) != igref.baseline_id([0.0, 0.25])
+
+
+# ---------------------------------------------------------------------------
+# Canonical schedule from a signature (mirrors CacheKey::canonical_schedule)
+# ---------------------------------------------------------------------------
+
+def test_canonical_schedule_is_fused_and_deterministic():
+    sig = igref.quantize_signature([0.7, 0.2, 0.08, 0.02])
+    alphas, weights = igref.canonical_schedule(sig, 32)
+    # Fused trapezoid invariants: strictly increasing alphas, m + 1
+    # points, unit quadrature mass.
+    assert len(alphas) == 32 + 1
+    assert np.all(np.diff(alphas) > 0)
+    assert abs(weights.sum() - 1.0) < 1e-12
+    # Identical to building directly from the dequantized deltas — the
+    # property that makes cache content independent of which request
+    # populated an entry.
+    bounds = np.arange(5, dtype=np.float64) / 4
+    alloc = igref.sqrt_allocate(32, igref.dequantize_signature(sig))
+    da, dw = igref.nonuniform_schedule(bounds, alloc, "trapezoid")
+    assert np.array_equal(alphas, da)
+    assert np.array_equal(weights, dw)
+
+
+def test_canonical_schedule_rejects_empty_signature():
+    with pytest.raises(ValueError):
+        igref.canonical_schedule((), 8)
+
+
+def test_cache_key_shape():
+    key = igref.schedule_cache_key(3, [0.0] * 4, [0.7, 0.2, 0.08, 0.02], 32)
+    assert key == (3, 0x88201FB960FF6465, (45, 13, 5, 1), 32, "trapezoid", "sqrt")
+
+
+# ---------------------------------------------------------------------------
+# Lookup semantics (mirrors ScheduleCache hit/miss/evict counting)
+# ---------------------------------------------------------------------------
+
+def _key(target, m=16):
+    return igref.schedule_cache_key(target, [0.0] * 4, [0.7, 0.2, 0.08, 0.02], m)
+
+
+def test_cache_miss_then_hit():
+    cache = igref.ScheduleCache(capacity=8)
+    a = cache.get_or_build(_key(1))
+    assert (cache.hits, cache.misses, cache.insertions) == (0, 1, 1)
+    b = cache.get_or_build(_key(1))
+    assert (cache.hits, cache.misses) == (1, 1)
+    assert a is b, "one canonical entry per key"
+    assert len(cache) == 1
+
+
+def test_cache_lru_evicts_stale_entry():
+    cache = igref.ScheduleCache(capacity=2)
+    cache.get_or_build(_key(1))
+    cache.get_or_build(_key(2))
+    cache.get_or_build(_key(1))  # refresh key 1: key 2 becomes LRU
+    cache.get_or_build(_key(3))  # evicts key 2
+    assert cache.evictions == 1
+    assert len(cache) == 2
+    hits_before = cache.hits
+    cache.get_or_build(_key(1))
+    assert cache.hits == hits_before + 1, "recently used entry survived"
+    misses_before = cache.misses
+    cache.get_or_build(_key(2))
+    assert cache.misses == misses_before + 1, "LRU entry was evicted"
+
+
+def test_warm_request_equivalence():
+    # The serving claim, reference-side: a warm request (schedule from the
+    # cache, no probe) dispatches exactly the lanes a cold request of the
+    # same key dispatched.
+    deltas = [0.625, 0.25, 0.0625, 0.0625]
+    cold_key = igref.schedule_cache_key(0, [0.0] * 4, deltas, 16)
+    cache = igref.ScheduleCache(capacity=4)
+    cold_a, cold_w = cache.get_or_build(cold_key)
+    # A second probe that quantizes identically produces the same key and
+    # therefore the same (cached) schedule object.
+    warm_key = igref.schedule_cache_key(
+        0, [0.0] * 4, [0.6251, 0.2499, 0.0625, 0.0625], 16)
+    assert warm_key == cold_key
+    warm_a, warm_w = cache.get_or_build(warm_key)
+    assert warm_a is cold_a and warm_w is cold_w
+    assert cache.hits == 1

@@ -1,0 +1,120 @@
+//! Warm-cache serving cost: per-request stage-1 cost collapsing with
+//! cache warmth at the Table-I operating points (m ∈ {16, 32, 64, 128},
+//! n_int = 4).
+//!
+//! The paper prices stage 1 at 0.2–3.2 % of an explanation and pays it
+//! per request. The probe-schedule cache (`ig::schedule::cache`)
+//! amortizes it across requests: a stream of requests explaining the
+//! same class against the same baseline shares one probe memo and one
+//! canonical fused schedule. This bench drives the engine-level mirror
+//! of the coordinator's tight-tier admission path
+//! (`ig::explain_anytime_cached`) with one **cold** request followed by
+//! warm traffic, on the closed-form [`AnalyticModel`] (no artifacts
+//! needed).
+//!
+//!     cargo bench --bench fig_warmcache
+//!
+//! JSON output fields per row: `m`, `mode` (cold/warm), `probe_passes`
+//! (stage-1 forward passes per request — the acceptance claim is warm
+//! == 0), `evals` (gradient evals; identical cold vs warm: the cache
+//! changes *which* stage-1 work runs, never the stage-2 bill),
+//! `stage1_us` (probe + schedule wall time per request), `delta_mean`
+//! (completeness residual; warm δ is measured against the class-level
+//! memoized gap), and `hit_rate` (schedule-cache hits / lookups).
+
+use nuig::bench::{fmt3, Table};
+use nuig::ig::engine::argmax;
+use nuig::ig::{self, AnalyticModel, AnytimePolicy, IgOptions, Model, ScheduleCache, Scheme};
+use nuig::testutil::TestRng;
+
+const N_INT: usize = 4;
+/// Requests per operating point: 1 cold + (REQUESTS - 1) warm.
+const REQUESTS: usize = 8;
+
+fn main() -> anyhow::Result<()> {
+    let model = AnalyticModel::new(64, 4, 7, 300.0);
+    let mut rng = TestRng::new(0xCAC4E);
+
+    // A stream of distinct inputs of the SAME class (pinned target) — the
+    // serving pattern the probe memo amortizes. Perturbations keep the
+    // inputs near the base image so the pinned class stays the honest
+    // explanation target.
+    let base: Vec<f32> = (0..64).map(|i| ((i * 37) % 64) as f32 / 64.0).collect();
+    let target = argmax(&model.probs(&[&base])?[0]);
+    let inputs: Vec<Vec<f32>> = (0..REQUESTS)
+        .map(|_| {
+            base.iter()
+                .map(|&v| (v * rng.range_f64(0.85, 1.0) as f32).clamp(0.0, 1.0))
+                .collect()
+        })
+        .collect();
+
+    let mut table = Table::new(
+        "fig_warmcache: per-request stage-1 cost, cold vs warm (pinned class, n_int = 4)",
+        &["m", "mode", "probe_passes", "evals", "stage1_us", "delta_mean", "hit_rate"],
+    );
+
+    for &m in &[16usize, 32, 64, 128] {
+        // Fresh cache per operating point so hit rates are exact.
+        let cache = ScheduleCache::new(64, 4);
+        let opts = IgOptions { scheme: Scheme::NonUniform { n_int: N_INT }, m, ..Default::default() };
+        // Single-round gate: the tight-tier shape (a hard round cap, not
+        // a convergence search).
+        let policy = AnytimePolicy::with_max_m(0.0, m)?;
+
+        // ---- Cold: probes, populates memo + schedule cache. -------------
+        let cold =
+            ig::explain_anytime_cached(&model, &inputs[0], None, Some(target), &opts, &policy, &cache)?;
+        assert_eq!(cold.probe_passes, N_INT + 1, "cold request pays the full probe");
+        let cold_stage1_us =
+            (cold.breakdown.probe + cold.breakdown.schedule).as_secs_f64() * 1e6;
+        table.row(vec![
+            m.to_string(),
+            "cold".to_string(),
+            cold.probe_passes.to_string(),
+            cold.steps.to_string(),
+            fmt3(cold_stage1_us),
+            fmt3(cold.delta),
+            fmt3(cache.counters().hit_rate()),
+        ]);
+
+        // ---- Warm: every further request skips stage 1 entirely. --------
+        let mut warm_stage1_us = 0.0;
+        let mut warm_delta = 0.0;
+        for x in &inputs[1..] {
+            let warm =
+                ig::explain_anytime_cached(&model, x, None, Some(target), &opts, &policy, &cache)?;
+            assert_eq!(warm.probe_passes, 0, "warm request must pay ZERO probe passes");
+            assert_eq!(warm.steps, cold.steps, "the cache never changes the stage-2 bill");
+            warm_stage1_us += (warm.breakdown.probe + warm.breakdown.schedule).as_secs_f64() * 1e6;
+            warm_delta += warm.delta;
+        }
+        let n_warm = (REQUESTS - 1) as f64;
+        table.row(vec![
+            m.to_string(),
+            "warm".to_string(),
+            "0".to_string(),
+            cold.steps.to_string(),
+            fmt3(warm_stage1_us / n_warm),
+            fmt3(warm_delta / n_warm),
+            fmt3(cache.counters().hit_rate()),
+        ]);
+
+        // Counter accounting: exactly one miss (the cold populate), one
+        // insertion, and a hit per warm request.
+        assert_eq!(cache.counters().misses.get(), 1, "one cold miss per operating point");
+        assert_eq!(cache.counters().insertions.get(), 1);
+        assert_eq!(cache.counters().hits.get() as usize, REQUESTS - 1);
+        assert_eq!(cache.counters().evictions.get(), 0);
+        assert_eq!(cache.memo_len(), 1, "one class-level probe memo");
+    }
+    table.print();
+
+    println!(
+        "shape check OK: warm requests pay zero stage-1 passes at every operating point \
+         (hit rate {}/{} per point), with the stage-2 eval bill unchanged",
+        REQUESTS - 1,
+        REQUESTS
+    );
+    Ok(())
+}

@@ -9,8 +9,9 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Result};
 
+use crate::coordinator::request::LatencyBudget;
 use crate::coordinator::scheduler::Policy;
-use crate::ig::{Allocation, Rule, Scheme};
+use crate::ig::{Allocation, AnytimePolicy, Rule, Scheme};
 use crate::jsonio::Json;
 
 /// Where artifacts live and which executables to load.
@@ -52,6 +53,90 @@ impl Default for IgConfig {
     }
 }
 
+/// The schedule policy one latency tier maps to (see
+/// [`LatencyBudget`] for the qualitative contract and `docs/TUNING.md`
+/// for how the defaults were picked).
+#[derive(Debug, Clone, Copy)]
+pub struct TierPolicy {
+    /// Initial grid intervals m of round 0. Raised to `4 * n_int` at
+    /// admission so the sqrt allocation keeps a non-uniform shape under
+    /// refinement doubling (the same floor the adaptive driver applies).
+    pub m0: usize,
+    /// Hard cap on refinement rounds (1 = a single fixed-m round; round
+    /// r runs at `m0 << (r - 1)` intervals, so the interval budget is
+    /// `m0 << (max_rounds - 1)`).
+    pub max_rounds: usize,
+    /// Convergence target gating early exit between rounds (ignored at
+    /// `max_rounds == 1`).
+    pub delta_target: f64,
+}
+
+impl TierPolicy {
+    /// The anytime gate this tier induces at an (admission-floored)
+    /// initial level of `m0` intervals; `None` when the tier is a single
+    /// fixed round.
+    pub fn anytime(&self, m0: usize) -> Option<AnytimePolicy> {
+        if self.max_rounds <= 1 {
+            return None;
+        }
+        Some(AnytimePolicy { delta_target: self.delta_target, max_m: m0 << (self.max_rounds - 1) })
+    }
+}
+
+/// Deadline-aware admission configuration: the budget → schedule mapping
+/// plus the probe-schedule cache bounds.
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionConfig {
+    /// Hard-deadline tier: one coarse round, cache-served when warm.
+    pub tight: TierPolicy,
+    /// Soft-deadline tier: anytime with a modest round cap.
+    pub standard: TierPolicy,
+    /// Quality tier: anytime to threshold under the full budget.
+    pub thorough: TierPolicy,
+    /// Probe-schedule cache capacity in entries; 0 disables the cache
+    /// (every request probes and builds its schedule from scratch, the
+    /// pre-cache behaviour).
+    pub cache_capacity: usize,
+    /// Cache shard count (bounds lock contention; clamped to capacity).
+    pub cache_shards: usize,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            // m0 = 16 is the sqrt allocation's resolution floor at the
+            // paper's n_int = 4 (4 steps per interval); see docs/TUNING.md.
+            tight: TierPolicy { m0: 16, max_rounds: 1, delta_target: 0.0 },
+            standard: TierPolicy { m0: 16, max_rounds: 3, delta_target: 0.01 },
+            thorough: TierPolicy { m0: 16, max_rounds: 6, delta_target: 0.002 },
+            // Cache off by default: enabling it switches served schedules
+            // to the canonical (quantized-signature) form — opt in per
+            // deployment. The fig_warmcache bench and the serving example
+            // run with it on.
+            cache_capacity: 0,
+            cache_shards: 8,
+        }
+    }
+}
+
+impl AdmissionConfig {
+    /// The schedule policy for `tier`; `None` for
+    /// [`LatencyBudget::Unbounded`] (no admission rewriting).
+    pub fn tier(&self, tier: LatencyBudget) -> Option<&TierPolicy> {
+        match tier {
+            LatencyBudget::Unbounded => None,
+            LatencyBudget::Tight => Some(&self.tight),
+            LatencyBudget::Standard => Some(&self.standard),
+            LatencyBudget::Thorough => Some(&self.thorough),
+        }
+    }
+
+    /// Whether the probe-schedule cache is enabled.
+    pub fn cache_enabled(&self) -> bool {
+        self.cache_capacity > 0
+    }
+}
+
 /// Coordinator / serving configuration.
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
@@ -67,6 +152,8 @@ pub struct CoordinatorConfig {
     /// Lane-scheduling policy (which request's points fill the next
     /// device chunk): fifo | round-robin | shortest-first.
     pub policy: Policy,
+    /// Deadline-aware admission: tier policies + probe-schedule cache.
+    pub admission: AdmissionConfig,
 }
 
 impl Default for CoordinatorConfig {
@@ -77,6 +164,7 @@ impl Default for CoordinatorConfig {
             queue_capacity: 64,
             batch_wait_us: 200,
             policy: Policy::Fifo,
+            admission: AdmissionConfig::default(),
         }
     }
 }
@@ -115,6 +203,21 @@ impl NuigConfig {
         if self.coordinator.queue_capacity == 0 {
             bail!("coordinator.queue_capacity must be >= 1");
         }
+        let adm = &self.coordinator.admission;
+        for (name, tier) in [("tight", &adm.tight), ("standard", &adm.standard), ("thorough", &adm.thorough)] {
+            if tier.m0 < 1 {
+                bail!("admission.{name}.m0 must be >= 1");
+            }
+            if tier.max_rounds < 1 || tier.max_rounds > 12 {
+                bail!("admission.{name}.max_rounds must be in 1..=12 (round r costs m0 * 2^(r-1) intervals)");
+            }
+            if !tier.delta_target.is_finite() || tier.delta_target < 0.0 {
+                bail!("admission.{name}.delta_target must be finite and >= 0");
+            }
+        }
+        if adm.cache_enabled() && adm.cache_shards == 0 {
+            bail!("admission.cache_shards must be >= 1 when the cache is enabled");
+        }
         Ok(())
     }
 
@@ -145,10 +248,29 @@ impl NuigConfig {
                     ("queue_capacity", self.coordinator.queue_capacity.into()),
                     ("batch_wait_us", (self.coordinator.batch_wait_us as usize).into()),
                     ("policy", Json::Str(self.coordinator.policy.to_string())),
+                    ("admission", admission_json(&self.coordinator.admission)),
                 ]),
             ),
         ])
     }
+}
+
+fn tier_json(t: &TierPolicy) -> Json {
+    Json::obj(vec![
+        ("m0", t.m0.into()),
+        ("max_rounds", t.max_rounds.into()),
+        ("delta_target", Json::Num(t.delta_target)),
+    ])
+}
+
+fn admission_json(a: &AdmissionConfig) -> Json {
+    Json::obj(vec![
+        ("tight", tier_json(&a.tight)),
+        ("standard", tier_json(&a.standard)),
+        ("thorough", tier_json(&a.thorough)),
+        ("cache_capacity", a.cache_capacity.into()),
+        ("cache_shards", a.cache_shards.into()),
+    ])
 }
 
 #[cfg(test)]
@@ -158,6 +280,42 @@ mod tests {
     #[test]
     fn default_is_valid() {
         NuigConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn admission_tier_lookup_and_anytime_mapping() {
+        let adm = AdmissionConfig::default();
+        assert!(adm.tier(LatencyBudget::Unbounded).is_none());
+        let tight = adm.tier(LatencyBudget::Tight).unwrap();
+        assert_eq!(tight.max_rounds, 1);
+        assert!(tight.anytime(16).is_none(), "round cap 1 = a single fixed round");
+        let std_tier = adm.tier(LatencyBudget::Standard).unwrap();
+        let any = std_tier.anytime(16).unwrap();
+        assert_eq!(any.max_m, 16 << (std_tier.max_rounds - 1));
+        assert_eq!(any.delta_target, std_tier.delta_target);
+        assert!(!adm.cache_enabled(), "cache is opt-in");
+    }
+
+    #[test]
+    fn rejects_bad_admission_tiers() {
+        let mut c = NuigConfig::default();
+        c.coordinator.admission.standard.max_rounds = 0;
+        assert!(c.validate().is_err());
+        let mut c = NuigConfig::default();
+        c.coordinator.admission.thorough.max_rounds = 13;
+        assert!(c.validate().is_err());
+        let mut c = NuigConfig::default();
+        c.coordinator.admission.tight.delta_target = f64::NAN;
+        assert!(c.validate().is_err());
+        let mut c = NuigConfig::default();
+        c.coordinator.admission.tight.m0 = 0;
+        assert!(c.validate().is_err());
+        let mut c = NuigConfig::default();
+        c.coordinator.admission.cache_capacity = 64;
+        c.coordinator.admission.cache_shards = 0;
+        assert!(c.validate().is_err());
+        c.coordinator.admission.cache_shards = 4;
+        c.validate().unwrap();
     }
 
     #[test]
@@ -204,5 +362,8 @@ mod tests {
         let j = NuigConfig::default().to_json();
         assert!(j.get("ig").is_ok());
         assert_eq!(j.get("coordinator").unwrap().get("chunk").unwrap().as_usize().unwrap(), 16);
+        let adm = j.get("coordinator").unwrap().get("admission").unwrap();
+        assert_eq!(adm.get("tight").unwrap().get("max_rounds").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(adm.get("cache_capacity").unwrap().as_usize().unwrap(), 0);
     }
 }

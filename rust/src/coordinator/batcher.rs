@@ -101,6 +101,7 @@ mod tests {
             baseline: Arc::new(vec![0.0; 4]),
             target: 0,
             opts: IgOptions::default(),
+            budget: crate::coordinator::request::LatencyBudget::Unbounded,
             acc: Mutex::new(vec![0.0; 4]),
             remaining: AtomicUsize::new(1),
             steps: 1,

@@ -28,7 +28,18 @@
 //! short-converging request exits the batcher early, freeing its device
 //! chunk capacity for its neighbours.
 //!
-//! * [`request`] — request/response types and the one-shot handle;
+//! Deadline-aware admission (`ExplainRequest::budget`) sits in front of
+//! stage 1: a latency tier rewrites the request's schedule options from
+//! [`crate::config::AdmissionConfig`], and the `Tight` tier serves warm
+//! traffic straight from the probe-schedule cache
+//! ([`crate::ig::schedule::cache`]) — zero stage-1 passes, lanes admitted
+//! at the front of the queue. Cold traffic populates the cache as a side
+//! effect of routing. Per-tier latency/completion counters live in
+//! [`server::TierStats`]; cache hit/miss/evict counters in
+//! [`CoordinatorStats`]'s shared [`crate::metrics::CacheCounters`].
+//!
+//! * [`request`] — request/response types, latency tiers, the one-shot
+//!   handle;
 //! * [`state`] — in-flight request state (f64 accumulator, countdown,
 //!   anytime round state machine);
 //! * [`batcher`] — lane queue + chunk assembly with bounded fill-wait;
@@ -40,6 +51,6 @@ pub mod scheduler;
 pub mod server;
 pub mod state;
 
-pub use request::{ExplainRequest, ExplainResponse, ResponseHandle};
+pub use request::{ExplainRequest, ExplainResponse, LatencyBudget, ResponseHandle};
 pub use scheduler::Policy;
-pub use server::{Coordinator, CoordinatorStats};
+pub use server::{Coordinator, CoordinatorStats, TierStats};

@@ -5,6 +5,86 @@ use std::time::Duration;
 use crate::exec::channel::{bounded, Receiver, Sender};
 use crate::ig::{AnytimePolicy, Attribution, IgOptions};
 
+/// Latency budget / QoS tier of a request: what the coordinator's
+/// admission path may trade to meet a deadline.
+///
+/// Tiers map to concrete schedule policies via
+/// [`crate::config::AdmissionConfig`] (initial m, refinement-round cap,
+/// convergence target). The qualitative contract:
+///
+/// * [`Unbounded`](LatencyBudget::Unbounded) — legacy behaviour: the
+///   request's own `opts`/`anytime` settings are served unrewritten and
+///   stage 1 always runs. One coordinator-level switch still applies:
+///   with the probe-schedule cache enabled, *every* non-uniform schedule
+///   (all tiers) is the canonical quantized-signature build, so that
+///   cold traffic of any tier populates entries warm tiers can reuse —
+///   see `docs/TUNING.md` §cache for the (±1 step per interval) bound.
+/// * [`Tight`](LatencyBudget::Tight) — hard deadline: a single round at
+///   the tier's coarse `m0`, admitted at the *front* of the lane queue,
+///   and — when the probe memo is warm and the target is pinned — zero
+///   stage-1 passes, with δ reported against the class-level memoized
+///   gap (an estimate; see `docs/TUNING.md`).
+/// * [`Standard`](LatencyBudget::Standard) — soft deadline: anytime
+///   refinement with a modest round cap.
+/// * [`Thorough`](LatencyBudget::Thorough) — quality tier: anytime
+///   refinement to the tier's convergence target under the full budget.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LatencyBudget {
+    /// Serve exactly as requested (default; no admission rewriting).
+    Unbounded,
+    /// Hard deadline: cached schedule, round cap 1, queue-front admission.
+    Tight,
+    /// Soft deadline: anytime refinement with a modest round cap.
+    Standard,
+    /// Quality tier: anytime refinement to threshold, full budget.
+    Thorough,
+}
+
+impl LatencyBudget {
+    /// Number of tiers (for per-tier stats arrays).
+    pub const COUNT: usize = 4;
+
+    /// All tiers, in [`LatencyBudget::index`] order.
+    pub const ALL: [LatencyBudget; Self::COUNT] =
+        [LatencyBudget::Unbounded, LatencyBudget::Tight, LatencyBudget::Standard, LatencyBudget::Thorough];
+
+    /// Dense index for per-tier accounting arrays.
+    pub fn index(self) -> usize {
+        match self {
+            LatencyBudget::Unbounded => 0,
+            LatencyBudget::Tight => 1,
+            LatencyBudget::Standard => 2,
+            LatencyBudget::Thorough => 3,
+        }
+    }
+
+    /// Short label for stats output.
+    pub fn label(self) -> &'static str {
+        match self {
+            LatencyBudget::Unbounded => "unbounded",
+            LatencyBudget::Tight => "tight",
+            LatencyBudget::Standard => "standard",
+            LatencyBudget::Thorough => "thorough",
+        }
+    }
+
+    /// Parse `unbounded|tight|standard|thorough` (CLI syntax).
+    pub fn parse(s: &str) -> anyhow::Result<LatencyBudget> {
+        for tier in Self::ALL {
+            if s == tier.label() {
+                return Ok(tier);
+            }
+        }
+        anyhow::bail!("unknown latency tier {s:?} (unbounded|tight|standard|thorough)")
+    }
+}
+
+impl std::fmt::Display for LatencyBudget {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.label())
+    }
+}
+
 /// An explanation request.
 #[derive(Debug, Clone)]
 pub struct ExplainRequest {
@@ -25,17 +105,43 @@ pub struct ExplainRequest {
     /// `opts.m >= 4 * n_int` so the sqrt allocation keeps a non-uniform
     /// shape under doubling (see `ig::explain_anytime`).
     pub anytime: Option<AnytimePolicy>,
+    /// Latency budget / QoS tier. For every tier except
+    /// [`LatencyBudget::Unbounded`] the admission path *overrides*
+    /// `opts.m` and `anytime` with the tier's policy (see
+    /// [`crate::config::AdmissionConfig`]); `Tight` additionally serves
+    /// warm traffic without any stage-1 passes when `target` is pinned.
+    pub budget: LatencyBudget,
 }
 
 impl ExplainRequest {
     /// A fixed-m request with black baseline and predicted-class target.
     pub fn new(image: Vec<f32>, opts: IgOptions) -> Self {
-        ExplainRequest { image, baseline: None, target: None, opts, anytime: None }
+        ExplainRequest {
+            image,
+            baseline: None,
+            target: None,
+            opts,
+            anytime: None,
+            budget: LatencyBudget::Unbounded,
+        }
     }
 
     /// Opt this request into anytime refinement under `policy`.
     pub fn with_anytime(mut self, policy: AnytimePolicy) -> Self {
         self.anytime = Some(policy);
+        self
+    }
+
+    /// Set this request's latency budget / QoS tier.
+    pub fn with_budget(mut self, budget: LatencyBudget) -> Self {
+        self.budget = budget;
+        self
+    }
+
+    /// Pin the explained class (required for warm `Tight`-tier admission:
+    /// the probe memo is keyed by target class).
+    pub fn with_target(mut self, target: usize) -> Self {
+        self.target = Some(target);
         self
     }
 }
@@ -142,7 +248,21 @@ mod tests {
         assert!(r.baseline.is_none());
         assert!(r.target.is_none());
         assert!(r.anytime.is_none());
+        assert_eq!(r.budget, LatencyBudget::Unbounded);
         let r = r.with_anytime(crate::ig::AnytimePolicy::new(0.01));
         assert_eq!(r.anytime.unwrap().delta_target, 0.01);
+        let r = r.with_budget(LatencyBudget::Tight).with_target(3);
+        assert_eq!(r.budget, LatencyBudget::Tight);
+        assert_eq!(r.target, Some(3));
+    }
+
+    #[test]
+    fn latency_budget_parse_and_index() {
+        for (i, tier) in LatencyBudget::ALL.into_iter().enumerate() {
+            assert_eq!(tier.index(), i);
+            assert_eq!(LatencyBudget::parse(tier.label()).unwrap(), tier);
+            assert_eq!(tier.to_string(), tier.label());
+        }
+        assert!(LatencyBudget::parse("realtime").is_err());
     }
 }

@@ -113,6 +113,24 @@ impl LaneScheduler {
     /// Enqueue one request's lanes (blocks while over capacity; fails
     /// after close). All-or-nothing: lanes of a request stay together.
     pub fn push_request(&self, id: u64, lanes: Vec<Lane>) -> Result<()> {
+        self.push_impl(id, lanes, false)
+    }
+
+    /// Enqueue one request's lanes at the FRONT of the request queue —
+    /// deadline-aware admission for tight-budget tiers: the request
+    /// overtakes everything already queued while its own lanes stay
+    /// together in alpha order. Same capacity/close semantics as
+    /// [`LaneScheduler::push_request`]. Under `RoundRobin` the cursor is
+    /// left untouched (the new request simply takes the current turn);
+    /// `ShortestFirst` ignores queue order entirely, so front admission
+    /// only guarantees priority under `Fifo` — the default.
+    pub fn push_request_front(&self, id: u64, lanes: Vec<Lane>) -> Result<()> {
+        self.push_impl(id, lanes, true)
+    }
+
+    /// Shared admission loop for both push ends: one copy of the
+    /// closed-check / oversized-but-empty escape / condvar-wait logic.
+    fn push_impl(&self, id: u64, lanes: Vec<Lane>, front: bool) -> Result<()> {
         if lanes.is_empty() {
             return Ok(());
         }
@@ -125,7 +143,12 @@ impl LaneScheduler {
             // requests must not deadlock on capacity).
             if st.total + lanes.len() <= self.capacity || st.total == 0 {
                 st.total += lanes.len();
-                st.reqs.push_back(ReqLanes { id, lanes: lanes.into() });
+                let req = ReqLanes { id, lanes: lanes.into() };
+                if front {
+                    st.reqs.push_front(req);
+                } else {
+                    st.reqs.push_back(req);
+                }
                 drop(st);
                 self.not_empty.notify_all();
                 return Ok(());
@@ -281,6 +304,7 @@ mod tests {
             baseline: Arc::new(vec![0.0; 4]),
             target: 0,
             opts: IgOptions::default(),
+            budget: crate::coordinator::request::LatencyBudget::Unbounded,
             acc: StdMutex::new(vec![0.0; 4]),
             remaining: AtomicUsize::new(n),
             steps: n,
@@ -406,6 +430,28 @@ mod tests {
         assert_eq!(Policy::parse("rr").unwrap(), Policy::RoundRobin);
         assert_eq!(Policy::parse("sjf").unwrap(), Policy::ShortestFirst);
         assert!(Policy::parse("lifo").is_err());
+    }
+
+    #[test]
+    fn push_front_overtakes_queued_requests() {
+        let s = LaneScheduler::new(Policy::Fifo, 64);
+        s.push_request(1, lanes(1, 3)).unwrap();
+        s.push_request(2, lanes(2, 3)).unwrap();
+        // A tight-budget request jumps the line; its lanes stay together.
+        s.push_request_front(3, lanes(3, 2)).unwrap();
+        assert_eq!(pop_ids(&s, 5), vec![3, 3, 1, 1, 1]);
+        assert_eq!(pop_ids(&s, 3), vec![2, 2, 2]);
+    }
+
+    #[test]
+    fn push_front_respects_capacity_and_close() {
+        let s = LaneScheduler::new(Policy::Fifo, 4);
+        s.push_request_front(1, lanes(1, 10)).unwrap(); // oversized but empty
+        assert_eq!(s.len(), 10);
+        assert_eq!(pop_ids(&s, 16).len(), 10);
+        s.close();
+        assert!(s.push_request_front(2, lanes(2, 1)).is_err());
+        assert!(s.push_request_front(2, vec![]).is_ok(), "empty push is a no-op");
     }
 
     #[test]

@@ -6,20 +6,45 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, ensure, Context, Result};
 
-use crate::config::CoordinatorConfig;
+use crate::config::{AdmissionConfig, CoordinatorConfig};
 use crate::exec::channel::{bounded, Receiver, Sender};
 use crate::exec::CancelToken;
 use crate::ig::engine::argmax;
 use crate::ig::probe::Probe;
+use crate::ig::schedule::cache::{baseline_id, CacheKey, ProbeMemo, ScheduleCache};
 use crate::ig::schedule::Schedule;
 use crate::ig::Scheme;
-use crate::metrics::{Counter, Ewma, Histogram, StageBreakdown};
+use crate::metrics::{CacheCounters, Counter, Ewma, Histogram, StageBreakdown};
 use crate::runtime::{Arg, ExeKind, Runtime, RuntimeHandle};
 
 use super::batcher::BatchStats;
-use super::request::{ExplainRequest, ExplainResponse, ResponseHandle};
+use super::request::{ExplainRequest, ExplainResponse, LatencyBudget, ResponseHandle};
 use super::scheduler::{LaneScheduler, Popped};
 use super::state::{AnytimeRounds, Lane, RequestState, RoundOutcome};
+
+/// Per-tier serving statistics (one block per [`LatencyBudget`] tier).
+pub struct TierStats {
+    /// Requests accepted by `submit` at this tier.
+    pub submitted: Counter,
+    /// Requests finalized successfully at this tier.
+    pub completed: Counter,
+    /// Submit-to-response latency distribution (seconds) at this tier.
+    pub e2e_latency: Histogram,
+    /// Warm admissions: requests served without a single stage-1 pass
+    /// (probe memo + schedule cache hit; `Tight` tier only).
+    pub warm_admissions: Counter,
+}
+
+impl TierStats {
+    fn new() -> Self {
+        TierStats {
+            submitted: Counter::new(),
+            completed: Counter::new(),
+            e2e_latency: Histogram::new_latency(),
+            warm_admissions: Counter::new(),
+        }
+    }
+}
 
 /// Serving statistics snapshot.
 pub struct CoordinatorStats {
@@ -41,6 +66,12 @@ pub struct CoordinatorStats {
     /// Rounds per completed request (1 = fixed-m or converged at the
     /// initial level).
     pub rounds_per_request: Histogram,
+    /// Per-tier accounting, indexed by [`LatencyBudget::index`] (use
+    /// [`CoordinatorStats::tier`] for named access).
+    pub tiers: [TierStats; LatencyBudget::COUNT],
+    /// Probe-schedule cache counters (shared with the cache when it is
+    /// enabled; all zero otherwise).
+    pub cache: Arc<CacheCounters>,
     pub(crate) batch: Mutex<BatchStats>,
 }
 
@@ -57,13 +88,22 @@ impl CoordinatorStats {
             // Small-integer histogram: 1 bucket per doubling covers
             // 1..4096 rounds, far beyond any real refinement depth.
             rounds_per_request: Histogram::new(1.0, 1, 12),
+            tiers: std::array::from_fn(|_| TierStats::new()),
+            cache: Arc::new(CacheCounters::default()),
             batch: Mutex::new(BatchStats::default()),
         }
     }
 
-    /// Mean device-chunk occupancy over the whole run, in [0,1].
+    /// Mean device-chunk occupancy over the whole run, in [0,1]. With
+    /// zero completed chunks (nothing dispatched yet) this is 0.0, not
+    /// NaN — callers can print it unconditionally.
     pub fn mean_occupancy(&self, chunk: usize) -> f64 {
         self.batch.lock().unwrap().occupancy(chunk)
+    }
+
+    /// Per-tier stats for `tier`.
+    pub fn tier(&self, tier: LatencyBudget) -> &TierStats {
+        &self.tiers[tier.index()]
     }
 }
 
@@ -83,10 +123,22 @@ pub struct Coordinator {
     req_tx: Sender<Submission>,
     lanes: Arc<LaneScheduler>,
     stats: Arc<CoordinatorStats>,
+    cache: Option<Arc<ScheduleCache>>,
     next_id: AtomicU64,
     cancel: CancelToken,
     threads: Vec<std::thread::JoinHandle<()>>,
     in_flight: Arc<AtomicUsize>,
+}
+
+/// Everything a router worker needs per request: queues, device handle,
+/// stats, and the admission machinery (tier policies + schedule cache).
+struct RouterCtx {
+    lanes: Arc<LaneScheduler>,
+    handle: RuntimeHandle,
+    stats: Arc<CoordinatorStats>,
+    in_flight: Arc<AtomicUsize>,
+    admission: AdmissionConfig,
+    cache: Option<Arc<ScheduleCache>>,
 }
 
 impl Coordinator {
@@ -102,24 +154,40 @@ impl Coordinator {
             cfg.chunk * 16 * (1 + cfg.workers),
         ));
         let stats = Arc::new(CoordinatorStats::new());
+        // The probe-schedule cache shares its counters with the stats
+        // snapshot so hit/miss/evict rates are visible without touching
+        // the cache's shards.
+        let cache = if cfg.admission.cache_enabled() {
+            Some(Arc::new(ScheduleCache::with_counters(
+                cfg.admission.cache_capacity,
+                cfg.admission.cache_shards.max(1),
+                stats.cache.clone(),
+            )))
+        } else {
+            None
+        };
         let cancel = CancelToken::new();
         let in_flight = Arc::new(AtomicUsize::new(0));
 
         let mut threads = Vec::new();
 
-        // Router workers: probe, schedule, enqueue lanes.
+        // Router workers: admission, probe (or cache), schedule, enqueue.
         for i in 0..cfg.workers {
             let rx = req_rx.clone();
-            let lanes = lanes.clone();
-            let handle = handle.clone();
-            let stats = stats.clone();
+            let ctx = Arc::new(RouterCtx {
+                lanes: lanes.clone(),
+                handle: handle.clone(),
+                stats: stats.clone(),
+                in_flight: in_flight.clone(),
+                admission: cfg.admission,
+                cache: cache.clone(),
+            });
             let cancel = cancel.clone();
-            let in_flight = in_flight.clone();
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("nuig-router-{i}"))
                     .spawn(move || {
-                        router_loop(rx, lanes, handle, stats, cancel, in_flight);
+                        router_loop(rx, ctx, cancel);
                     })
                     .context("spawning router")?,
             );
@@ -151,6 +219,7 @@ impl Coordinator {
             req_tx,
             lanes,
             stats,
+            cache,
             next_id: AtomicU64::new(1),
             cancel,
             threads,
@@ -173,6 +242,7 @@ impl Coordinator {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (reply, handle) = ResponseHandle::pair(id);
         self.stats.submitted.inc();
+        self.stats.tiers[req.budget.index()].submitted.inc();
         self.in_flight.fetch_add(1, Ordering::AcqRel);
         self.req_tx
             .send(Submission { req, reply, id, submitted_at: Instant::now() })
@@ -209,6 +279,12 @@ impl Coordinator {
     /// Live serving statistics.
     pub fn stats(&self) -> &CoordinatorStats {
         &self.stats
+    }
+
+    /// The probe-schedule cache, when enabled by the admission config
+    /// (`admission.cache_capacity > 0`).
+    pub fn schedule_cache(&self) -> Option<&ScheduleCache> {
+        self.cache.as_deref()
     }
 
     /// The configuration this coordinator was started with.
@@ -285,39 +361,26 @@ impl ExplainRequest {
 }
 
 // ---------------------------------------------------------------------------
-// Router: stage 1 (probe + schedule) then lane fan-out.
+// Router: admission, stage 1 (probe or cache), schedule, lane fan-out.
 // ---------------------------------------------------------------------------
 
-fn router_loop(
-    rx: Receiver<Submission>,
-    lanes: Arc<LaneScheduler>,
-    handle: RuntimeHandle,
-    stats: Arc<CoordinatorStats>,
-    cancel: CancelToken,
-    in_flight: Arc<AtomicUsize>,
-) {
+fn router_loop(rx: Receiver<Submission>, ctx: Arc<RouterCtx>, cancel: CancelToken) {
     // Graceful-shutdown semantics: every accepted submission is served.
     // `shutdown` closes the request queue, so this loop drains naturally;
     // the cancel token only guards future hard-abort paths.
     let _ = &cancel;
     while let Ok(sub) = rx.recv() {
         let queue_wait = sub.submitted_at.elapsed();
-        stats.queue_wait.record(queue_wait.as_secs_f64());
-        match route_one(sub, queue_wait, &lanes, &handle, &stats, &in_flight) {
+        ctx.stats.queue_wait.record(queue_wait.as_secs_f64());
+        match route_one(sub, queue_wait, &ctx) {
             Ok(()) => {}
             Err(_) => { /* route_one already replied + decremented */ }
         }
     }
 }
 
-fn route_one(
-    sub: Submission,
-    queue_wait: Duration,
-    lanes: &LaneScheduler,
-    handle: &RuntimeHandle,
-    stats: &Arc<CoordinatorStats>,
-    in_flight: &Arc<AtomicUsize>,
-) -> Result<()> {
+fn route_one(sub: Submission, queue_wait: Duration, ctx: &RouterCtx) -> Result<()> {
+    let RouterCtx { lanes, handle, stats, in_flight, admission, cache } = ctx;
     let features = handle.features();
     let classes = handle.num_classes();
     let Submission { req, reply, id, submitted_at } = sub;
@@ -332,93 +395,169 @@ fn route_one(
         anyhow!("failed")
     };
 
-    // ---- Stage 1: probe (batched fwd over interval boundaries). --------
-    let t0 = Instant::now();
-    let baseline = req.baseline.clone().unwrap_or_else(|| vec![0f32; features]);
+    // ---- Admission: map the latency tier onto schedule options. ---------
+    // Deadline tiers override the request's m and anytime gate with the
+    // tier policy; `Unbounded` serves exactly what was asked (validated
+    // at submit). The m floor mirrors the adaptive driver: at least 4
+    // steps per probe interval so the sqrt allocation keeps a non-uniform
+    // shape under refinement doubling.
+    let budget = req.budget;
     let n_int = match req.opts.scheme {
         Scheme::NonUniform { n_int } => n_int,
         Scheme::Uniform => 1, // probe endpoints only (for target + gap)
     };
-    let bounds = Schedule::probe_boundaries(n_int);
+    let (opts, anytime_policy) = match admission.tier(budget) {
+        None => (req.opts, req.anytime),
+        Some(tier) => {
+            let mut opts = req.opts;
+            opts.m = tier.m0.max(4 * n_int);
+            let anytime = if opts.rule.keeps_endpoints() { tier.anytime(opts.m) } else { None };
+            (opts, anytime)
+        }
+    };
 
-    if bounds.len() > 16 {
-        return Err(fail(anyhow!("n_int {} too large for probe batch", n_int)));
-    }
-    // PERF: padded lanes cost real compute on CPU-PJRT, so small probes go
-    // through fwd_b1 sequentially (see runtime::PROBE_BATCH_CROSSOVER and
-    // EXPERIMENTS.md §Perf); large ones batch through fwd_b16.
-    let mut probs = vec![0f32; 16 * classes];
-    if bounds.len() < crate::runtime::PROBE_BATCH_CROSSOVER {
-        for (k, &b) in bounds.iter().enumerate() {
-            let img: Vec<f32> = (0..features)
-                .map(|i| baseline[i] + b as f32 * (req.image[i] - baseline[i]))
-                .collect();
-            let outs = match handle.execute(ExeKind::Fwd1, vec![Arg::mat(img, 1, features)]) {
+    let baseline = req.baseline.clone().unwrap_or_else(|| vec![0f32; features]);
+    let cacheable = cache.is_some() && matches!(opts.scheme, Scheme::NonUniform { .. });
+    let bid = if cacheable { Some(baseline_id(&baseline)) } else { None };
+
+    // ---- Warm admission: serve off the probe memo, zero stage-1 passes.
+    // Eligibility: tight tier + cache on + pinned target (the memo is
+    // class-keyed) + the non-uniform scheme. δ is then computed against
+    // the class-level memoized gap — the documented tight-tier trade.
+    let warm = if budget == LatencyBudget::Tight && cacheable {
+        match (req.target, bid) {
+            (Some(t), Some(bid)) => {
+                cache.as_ref().expect("cacheable implies cache").memo(t, bid, n_int).map(|m| (t, m))
+            }
+            _ => None,
+        }
+    } else {
+        None
+    };
+
+    let (target, endpoint_gap, probe_passes, schedule, t_probe, t_sched) = if let Some((t, memo)) =
+        warm
+    {
+        // -- Warm path: schedule from the cache, no device passes. --------
+        stats.tiers[budget.index()].warm_admissions.inc();
+        let t1 = Instant::now();
+        let key = CacheKey {
+            target: t,
+            baseline_id: bid.expect("warm implies baseline id"),
+            signature: memo.signature,
+            m: opts.m,
+            rule: opts.rule,
+            allocation: opts.allocation,
+        };
+        let cached = match cache.as_ref().expect("warm implies cache").get_or_build(&key) {
+            Ok(c) => c,
+            Err(e) => return Err(fail(e)),
+        };
+        let schedule = (*cached.base()).clone();
+        (t, memo.gap, 0, schedule, Duration::ZERO, t1.elapsed())
+    } else {
+        // -- Cold path: stage-1 probe (batched fwd over boundaries). ------
+        let t0 = Instant::now();
+        let bounds = Schedule::probe_boundaries(n_int);
+
+        if bounds.len() > 16 {
+            return Err(fail(anyhow!("n_int {} too large for probe batch", n_int)));
+        }
+        // PERF: padded lanes cost real compute on CPU-PJRT, so small probes
+        // go through fwd_b1 sequentially (see runtime::PROBE_BATCH_CROSSOVER
+        // and EXPERIMENTS.md §Perf); large ones batch through fwd_b16.
+        let mut probs = vec![0f32; 16 * classes];
+        if bounds.len() < crate::runtime::PROBE_BATCH_CROSSOVER {
+            for (k, &b) in bounds.iter().enumerate() {
+                let img: Vec<f32> = (0..features)
+                    .map(|i| baseline[i] + b as f32 * (req.image[i] - baseline[i]))
+                    .collect();
+                let outs = match handle.execute(ExeKind::Fwd1, vec![Arg::mat(img, 1, features)]) {
+                    Ok(o) => o,
+                    Err(e) => return Err(fail(e)),
+                };
+                probs[k * classes..(k + 1) * classes].copy_from_slice(&outs[0]);
+            }
+        } else {
+            let mut flat = vec![0f32; 16 * features];
+            for (k, &b) in bounds.iter().enumerate() {
+                for i in 0..features {
+                    flat[k * features + i] = baseline[i] + b as f32 * (req.image[i] - baseline[i]);
+                }
+            }
+            let outs = match handle.execute(ExeKind::Fwd16, vec![Arg::mat(flat, 16, features)]) {
                 Ok(o) => o,
                 Err(e) => return Err(fail(e)),
             };
-            probs[k * classes..(k + 1) * classes].copy_from_slice(&outs[0]);
+            probs[..outs[0].len()].copy_from_slice(&outs[0]);
         }
-    } else {
-        let mut flat = vec![0f32; 16 * features];
-        for (k, &b) in bounds.iter().enumerate() {
-            for i in 0..features {
-                flat[k * features + i] = baseline[i] + b as f32 * (req.image[i] - baseline[i]);
-            }
-        }
-        let outs = match handle.execute(ExeKind::Fwd16, vec![Arg::mat(flat, 16, features)]) {
-            Ok(o) => o,
+        let probs = &probs;
+
+        // Target: explicit or argmax at the input endpoint (last boundary).
+        let last = bounds.len() - 1;
+        let input_probs: Vec<f64> =
+            probs[last * classes..(last + 1) * classes].iter().map(|&v| v as f64).collect();
+        let target = req.target.unwrap_or_else(|| argmax(&input_probs));
+
+        let boundary_probs: Vec<f64> =
+            (0..bounds.len()).map(|k| probs[k * classes + target] as f64).collect();
+        let probe = match Probe::new(bounds.clone(), boundary_probs) {
+            Ok(p) => p,
             Err(e) => return Err(fail(e)),
         };
-        probs[..outs[0].len()].copy_from_slice(&outs[0]);
-    }
-    let probs = &probs;
+        let t_probe = t0.elapsed();
 
-    // Target: explicit or argmax at the input endpoint (last boundary).
-    let last = bounds.len() - 1;
-    let input_probs: Vec<f64> =
-        probs[last * classes..(last + 1) * classes].iter().map(|&v| v as f64).collect();
-    let target = req.target.unwrap_or_else(|| argmax(&input_probs));
+        // ---- Schedule (fused: coincident boundary points merged, zero-
+        // weight points pruned, so lane count == true model-eval count).
+        // With the cache on, non-uniform schedules are the *canonical*
+        // (quantized-signature) form — the cold populate path — so a
+        // later warm request serves bit-identical lanes; with it off,
+        // the exact-delta build is unchanged.
+        let t1 = Instant::now();
+        let schedule = if let (true, Some(bid)) = (cacheable, bid) {
+            let c = cache.as_ref().expect("cacheable implies cache");
+            let signature = probe.signature();
+            let memo = ProbeMemo { signature: signature.clone(), gap: probe.endpoint_gap() };
+            c.memo_put(target, bid, memo);
+            let key = CacheKey {
+                target,
+                baseline_id: bid,
+                signature,
+                m: opts.m,
+                rule: opts.rule,
+                allocation: opts.allocation,
+            };
+            c.get_or_build(&key).map(|cached| (*cached.base()).clone())
+        } else {
+            match opts.scheme {
+                Scheme::Uniform => Schedule::uniform(opts.m, opts.rule),
+                Scheme::NonUniform { .. } => {
+                    let deltas = probe.interval_deltas();
+                    opts.allocation
+                        .allocate(opts.m, &deltas)
+                        .and_then(|alloc| Schedule::nonuniform(&bounds, &alloc, opts.rule))
+                }
+            }
+        };
+        let schedule = match schedule {
+            Ok(s) => s,
+            Err(e) => return Err(fail(e)),
+        };
+        let t_sched = t1.elapsed();
 
-    let boundary_probs: Vec<f64> =
-        (0..bounds.len()).map(|k| probs[k * classes + target] as f64).collect();
-    let probe = match Probe::new(bounds.clone(), boundary_probs) {
-        Ok(p) => p,
-        Err(e) => return Err(fail(e)),
+        // The router really runs bounds.len() forward passes for BOTH
+        // schemes (2 for uniform: target + endpoint gap come from probing
+        // alpha = 0 and 1), so report them — steps + probe_passes is then
+        // the true model-eval count of the serving path.
+        (target, probe.endpoint_gap(), bounds.len(), schedule, t_probe, t_sched)
     };
-    let t_probe = t0.elapsed();
-
-    // ---- Schedule (fused: coincident boundary points merged, zero-weight
-    // points pruned, so lane count == true model-eval count). -------------
-    let t1 = Instant::now();
-    let schedule = match req.opts.scheme {
-        Scheme::Uniform => Schedule::uniform(req.opts.m, req.opts.rule),
-        Scheme::NonUniform { .. } => {
-            let deltas = probe.interval_deltas();
-            req.opts
-                .allocation
-                .allocate(req.opts.m, &deltas)
-                .and_then(|alloc| Schedule::nonuniform(&bounds, &alloc, req.opts.rule))
-        }
-    };
-    let schedule = match schedule {
-        Ok(s) => s,
-        Err(e) => return Err(fail(e)),
-    };
-    let t_sched = t1.elapsed();
-
-    // The router really runs bounds.len() forward passes for BOTH schemes
-    // (2 for uniform: target + endpoint gap come from probing alpha = 0
-    // and 1), so report them — steps + probe_passes is then the true
-    // model-eval count of the serving path.
-    let probe_passes = bounds.len();
 
     // Round-0 lane specs, captured before the schedule moves into the
     // anytime state (which owns it for refinement between rounds).
     let lane_points: Vec<(f32, f32)> =
         schedule.points.iter().map(|p| (p.alpha as f32, p.weight as f32)).collect();
     let steps0 = schedule.len();
-    let anytime = req.anytime.map(|policy| AnytimeRounds {
+    let anytime = anytime_policy.map(|policy| AnytimeRounds {
         policy,
         evals: AtomicUsize::new(steps0),
         schedule: Mutex::new(schedule),
@@ -430,12 +569,13 @@ fn route_one(
         image: Arc::new(req.image),
         baseline: Arc::new(baseline),
         target,
-        opts: req.opts,
+        opts,
+        budget,
         acc: Mutex::new(vec![0f64; features]),
         remaining: AtomicUsize::new(steps0),
         steps: steps0,
         probe_passes,
-        endpoint_gap: probe.endpoint_gap(),
+        endpoint_gap,
         breakdown: Mutex::new(StageBreakdown {
             probe: t_probe,
             schedule: t_sched,
@@ -452,12 +592,19 @@ fn route_one(
     // ---- Fan out lanes (atomically, so the scheduler sees the whole
     // request and within-request alpha order is preserved). One lane per
     // fused schedule point: `Attribution.steps` reported back equals the
-    // number of device-batch slots this request actually consumes. -------
+    // number of device-batch slots this request actually consumes. Tight-
+    // budget requests are admitted at the FRONT of the lane queue so they
+    // overtake queued work (deadline-aware admission). -------------------
     let req_lanes: Vec<Lane> = lane_points
         .iter()
         .map(|&(alpha, weight)| Lane { state: state.clone(), alpha, weight })
         .collect();
-    if let Err(e) = lanes.push_request(id, req_lanes) {
+    let pushed = if budget == LatencyBudget::Tight {
+        lanes.push_request_front(id, req_lanes)
+    } else {
+        lanes.push_request(id, req_lanes)
+    };
+    if let Err(e) = pushed {
         if state.fail(anyhow!("lane scheduler closed during fan-out: {e}")) {
             stats.failed.inc();
         }
@@ -486,7 +633,13 @@ fn finish_request(stats: &Arc<CoordinatorStats>, state: &Arc<RequestState>) {
     if state.finalize() {
         stats.rounds_per_request.record(state.rounds() as f64);
         stats.completed.inc();
-        stats.e2e_latency.record(state.submitted_at.elapsed().as_secs_f64());
+        let e2e = state.submitted_at.elapsed().as_secs_f64();
+        stats.e2e_latency.record(e2e);
+        // Per-tier accounting: the tier is fixed at admission, so a
+        // request settles into exactly one tier's counters.
+        let tier = &stats.tiers[state.budget.index()];
+        tier.completed.inc();
+        tier.e2e_latency.record(e2e);
     }
 }
 
@@ -580,5 +733,142 @@ fn feeder_loop(
                 }
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ig::IgOptions;
+    use std::sync::atomic::AtomicBool;
+
+    fn stats() -> Arc<CoordinatorStats> {
+        Arc::new(CoordinatorStats::new())
+    }
+
+    fn mk_state(
+        n_lanes: usize,
+        gap: f64,
+        budget: LatencyBudget,
+        anytime: Option<AnytimeRounds>,
+        in_flight: Arc<AtomicUsize>,
+    ) -> (Arc<RequestState>, ResponseHandle) {
+        let (tx, handle) = ResponseHandle::pair(1);
+        let st = Arc::new(RequestState {
+            id: 1,
+            image: Arc::new(vec![1.0; 4]),
+            baseline: Arc::new(vec![0.0; 4]),
+            target: 0,
+            opts: IgOptions::default(),
+            budget,
+            acc: Mutex::new(vec![0.0; 4]),
+            remaining: AtomicUsize::new(n_lanes),
+            steps: n_lanes,
+            probe_passes: 0,
+            endpoint_gap: gap,
+            breakdown: Mutex::new(StageBreakdown::default()),
+            submitted_at: Instant::now(),
+            queue_wait: Duration::ZERO,
+            reply: tx,
+            completed: AtomicBool::new(false),
+            in_flight,
+            anytime,
+        });
+        (st, handle)
+    }
+
+    #[test]
+    fn mean_occupancy_zero_chunks_is_zero() {
+        // The edge the serve CLI prints unconditionally: before any chunk
+        // is dispatched the mean must be 0.0, not NaN.
+        let s = stats();
+        assert_eq!(s.mean_occupancy(16), 0.0);
+        s.batch.lock().unwrap().record(8);
+        assert!((s.mean_occupancy(16) - 0.5).abs() < 1e-12);
+        // Degenerate chunk width with zero chunks: still 0.0, no division.
+        assert_eq!(CoordinatorStats::new().mean_occupancy(0), 0.0);
+    }
+
+    #[test]
+    fn tier_stats_accessor_maps_indices() {
+        let s = stats();
+        for tier in LatencyBudget::ALL {
+            assert_eq!(s.tier(tier).submitted.get(), 0);
+        }
+        s.tiers[LatencyBudget::Tight.index()].submitted.inc();
+        s.tiers[LatencyBudget::Tight.index()].warm_admissions.inc();
+        assert_eq!(s.tier(LatencyBudget::Tight).submitted.get(), 1);
+        assert_eq!(s.tier(LatencyBudget::Tight).warm_admissions.get(), 1);
+        assert_eq!(s.tier(LatencyBudget::Unbounded).submitted.get(), 0);
+    }
+
+    #[test]
+    fn finish_request_counts_completion_exactly_once() {
+        let s = stats();
+        let in_flight = Arc::new(AtomicUsize::new(1));
+        let (st, handle) = mk_state(1, 0.5, LatencyBudget::Standard, None, in_flight.clone());
+        assert!(st.add_lane(&[0.5, 0.0, 0.0, 0.0]));
+        finish_request(&s, &st);
+        finish_request(&s, &st); // double finish: the later call is a no-op
+        assert_eq!(s.completed.get(), 1);
+        assert_eq!(s.e2e_latency.count(), 1);
+        assert_eq!(s.tier(LatencyBudget::Standard).completed.get(), 1);
+        assert_eq!(s.tier(LatencyBudget::Standard).e2e_latency.count(), 1);
+        assert_eq!(s.tier(LatencyBudget::Tight).completed.get(), 0);
+        assert_eq!(in_flight.load(Ordering::Acquire), 0, "in-flight decremented exactly once");
+        assert!(handle.wait().is_ok());
+    }
+
+    #[test]
+    fn failed_request_never_counts_as_completed() {
+        let s = stats();
+        let in_flight = Arc::new(AtomicUsize::new(1));
+        let (st, handle) = mk_state(1, 0.5, LatencyBudget::Tight, None, in_flight.clone());
+        assert!(st.fail(anyhow!("device down")));
+        s.failed.inc(); // what the feeder does when fail() reports true
+        st.add_lane(&[0.5, 0.0, 0.0, 0.0]);
+        finish_request(&s, &st); // late round completion after the failure
+        assert_eq!(s.completed.get(), 0, "a failed request must not also complete");
+        assert_eq!(s.failed.get(), 1);
+        assert_eq!(s.tier(LatencyBudget::Tight).completed.get(), 0);
+        assert_eq!(in_flight.load(Ordering::Acquire), 0);
+        assert!(handle.wait().is_err());
+    }
+
+    #[test]
+    fn aborted_refinement_under_shutdown_settles_exactly_once() {
+        // Shutdown closes the lane queue between rounds: the feeder rolls
+        // the refinement back and finalizes the completed round. The
+        // request must count as completed exactly once, in its own tier,
+        // with the delivered attribution reflecting the completed round.
+        let s = stats();
+        let in_flight = Arc::new(AtomicUsize::new(1));
+        let schedule = Schedule::uniform(2, crate::ig::Rule::Trapezoid).unwrap();
+        let any = AnytimeRounds {
+            policy: crate::ig::AnytimePolicy::with_max_m(1e-9, 64).unwrap(),
+            evals: AtomicUsize::new(schedule.len()),
+            schedule: Mutex::new(schedule),
+            residuals: Mutex::new(Vec::new()),
+        };
+        let (st, handle) =
+            mk_state(3, 10.0, LatencyBudget::Thorough, Some(any), in_flight.clone());
+        st.add_lane(&[1.0, 0.0, 0.0, 0.0]);
+        st.add_lane(&[1.0, 0.0, 0.0, 0.0]);
+        assert!(st.add_lane(&[1.0, 0.0, 0.0, 0.0]));
+        let lanes = match st.on_round_complete() {
+            RoundOutcome::Refine(l) => l,
+            RoundOutcome::Finalize => panic!("unconverged round must refine"),
+        };
+        // Scheduler closed mid-round: abort the refinement and settle.
+        st.abort_refinement(lanes.len());
+        finish_request(&s, &st);
+        finish_request(&s, &st);
+        assert_eq!(s.completed.get(), 1);
+        assert_eq!(s.tier(LatencyBudget::Thorough).completed.get(), 1);
+        assert_eq!(s.rounds_per_request.count(), 1);
+        assert_eq!(in_flight.load(Ordering::Acquire), 0);
+        let a = handle.wait().unwrap().attribution;
+        assert_eq!(a.rounds, 1, "the delivered attribution is the completed round");
+        assert_eq!(a.steps, 3, "aborted refinement lanes are rolled back");
     }
 }

@@ -11,7 +11,7 @@ use crate::ig::schedule::Schedule;
 use crate::ig::{AnytimePolicy, Attribution, IgOptions};
 use crate::metrics::StageBreakdown;
 
-use super::request::ExplainResponse;
+use super::request::{ExplainResponse, LatencyBudget};
 
 /// Mutable anytime-refinement state for one request (present only when
 /// the request opted in via `ExplainRequest::anytime`).
@@ -50,8 +50,12 @@ pub struct RequestState {
     pub baseline: Arc<Vec<f32>>,
     /// Explained class.
     pub target: usize,
-    /// The request's algorithm options.
+    /// The request's algorithm options (post-admission: tier rewrites
+    /// are already applied).
     pub opts: IgOptions,
+    /// The latency tier this request was admitted under (per-tier
+    /// accounting at completion).
+    pub budget: LatencyBudget,
     /// f64 attribution accumulator (lanes add under the mutex; adds are
     /// ~3k doubles per lane — negligible next to a device execution).
     /// On refinement the whole vector is scaled by
@@ -278,6 +282,7 @@ mod tests {
             baseline: Arc::new(vec![0.0; 4]),
             target: 0,
             opts: IgOptions::default(),
+            budget: LatencyBudget::Unbounded,
             acc: Mutex::new(vec![0.0; 4]),
             remaining: AtomicUsize::new(n_lanes),
             steps: n_lanes,

@@ -15,7 +15,8 @@
 //!
 //! The Left/Right Riemann rules prune a zero-weight endpoint at schedule
 //! build, which breaks the refinement carry identity (see
-//! [`Schedule::refine`]); for those rules the driver falls back to the
+//! [`Schedule::refine`](crate::ig::schedule::Schedule::refine)); for
+//! those rules the driver falls back to the
 //! paper's literal protocol — rebuild and re-evaluate at each grid entry.
 
 use std::time::Instant;
@@ -28,7 +29,6 @@ use super::attribution::Attribution;
 use super::convergence::{delta as delta_fn, ConvergencePolicy};
 use super::engine::{self, IgOptions};
 use super::model::Model;
-use super::schedule::Schedule;
 use super::Scheme;
 
 /// Result of an adaptive run.
@@ -79,7 +79,7 @@ pub fn explain_to_threshold(
 
     // ---- Stage 1 once: probe (also yields the target + endpoint gap). --
     let t0 = Instant::now();
-    let probed = engine::probe_path(model, x, baseline, n_int)?;
+    let probed = engine::probe_path(model, x, baseline, n_int, None)?;
     let t_probe = t0.elapsed();
 
     // Round plan from the grid, read as a [start, budget] pair: nested
@@ -102,13 +102,7 @@ pub fn explain_to_threshold(
     }
 
     // ---- Incremental rounds: refine in place, pay only novel points. ----
-    let initial = match opts.scheme {
-        Scheme::Uniform => Schedule::uniform(m0, opts.rule)?,
-        Scheme::NonUniform { .. } => {
-            let alloc = opts.allocation.allocate(m0, &probed.deltas)?;
-            Schedule::nonuniform(&probed.bounds, &alloc, opts.rule)?
-        }
-    };
+    let initial = engine::initial_schedule(opts, m0, &probed)?;
     let run = engine::refine_loop(
         model,
         x,
@@ -116,6 +110,7 @@ pub fn explain_to_threshold(
         probed.target,
         probed.gap,
         initial,
+        |s, _| s.refine(),
         |delta, m| delta > policy.delta_th && m * 2 <= cap,
     )?;
 
@@ -168,13 +163,7 @@ fn walk_grid(
             continue;
         }
         let t1 = Instant::now();
-        let schedule = match opts.scheme {
-            Scheme::Uniform => Schedule::uniform(m, opts.rule)?,
-            Scheme::NonUniform { .. } => {
-                let alloc = opts.allocation.allocate(m, &probed.deltas)?;
-                Schedule::nonuniform(&probed.bounds, &alloc, opts.rule)?
-            }
-        };
+        let schedule = engine::initial_schedule(opts, m, probed)?;
         let (alphas, weights) = schedule.to_f32();
         let t_sched = t1.elapsed();
 

@@ -14,7 +14,10 @@
 use anyhow::{bail, Result};
 
 /// Step-allocation policy across probe intervals.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+///
+/// `Hash` is derived because the policy is part of the probe-schedule
+/// cache key ([`crate::ig::schedule::cache::CacheKey`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Allocation {
     /// The paper's rule: proportional to sqrt(|delta|).
     Sqrt,

@@ -32,6 +32,7 @@ use super::convergence::{self, AnytimePolicy};
 use super::model::Model;
 use super::probe::Probe;
 use super::riemann::Rule;
+use super::schedule::cache::{baseline_id, CacheKey, ProbeMemo, ProbeSignature, ScheduleCache};
 use super::schedule::Schedule;
 use super::Scheme;
 
@@ -233,11 +234,12 @@ fn nonuniform_ig(
 // Anytime engine: incremental refinement with convergence-gated early exit.
 // ---------------------------------------------------------------------------
 
-/// Stage-1 boundary probe shared by the anytime engine and the adaptive
-/// driver: probe the `n_int + 1` equal-width boundaries once (forward
-/// only), pick the target (argmax at the input endpoint), and read the
-/// endpoint gap + normalized interval deltas off the probe.
-pub(crate) struct ProbedPath {
+/// Stage-1 boundary probe shared by the anytime engine, the adaptive
+/// driver, and the cache-backed engine: probe the `n_int + 1` equal-width
+/// boundaries once (forward only), pick the target (pinned, or argmax at
+/// the input endpoint), and read the endpoint gap + normalized interval
+/// deltas off the probe.
+pub struct ProbedPath {
     /// Probe boundary alphas (0, 1/n, .., 1).
     pub bounds: Vec<f64>,
     /// Explained class.
@@ -248,11 +250,14 @@ pub(crate) struct ProbedPath {
     pub deltas: Vec<f64>,
 }
 
-pub(crate) fn probe_path(
+/// Run stage 1: `n_int + 1` forward-only boundary passes. `pin` fixes the
+/// explained class; `None` picks argmax at the input endpoint.
+pub fn probe_path(
     model: &dyn Model,
     x: &[f32],
     baseline: &[f32],
     n_int: usize,
+    pin: Option<usize>,
 ) -> Result<ProbedPath> {
     let bounds = Schedule::probe_boundaries(n_int);
     let boundary_imgs: Vec<Vec<f32>> = bounds
@@ -263,9 +268,22 @@ pub(crate) fn probe_path(
         .collect();
     let refs: Vec<&[f32]> = boundary_imgs.iter().map(|v| v.as_slice()).collect();
     let probs = model.probs(&refs)?;
-    let target = argmax(&probs[probs.len() - 1]);
+    let target = pin.unwrap_or_else(|| argmax(&probs[probs.len() - 1]));
     let probe = Probe::new(bounds.clone(), probs.iter().map(|p| p[target]).collect())?;
     Ok(ProbedPath { bounds, target, gap: probe.endpoint_gap(), deltas: probe.interval_deltas() })
+}
+
+/// Build the round-0 schedule for `opts.scheme` at `m` grid intervals
+/// from a completed stage-1 probe. Shared by the anytime engine and the
+/// adaptive driver so their initial rounds are constructed identically.
+pub(crate) fn initial_schedule(opts: &IgOptions, m: usize, probed: &ProbedPath) -> Result<Schedule> {
+    match opts.scheme {
+        Scheme::Uniform => Schedule::uniform(m, opts.rule),
+        Scheme::NonUniform { .. } => {
+            let alloc = opts.allocation.allocate(m, &probed.deltas)?;
+            Schedule::nonuniform(&probed.bounds, &alloc, opts.rule)
+        }
+    }
 }
 
 /// Bookkeeping from one incremental refinement run.
@@ -286,10 +304,17 @@ pub(crate) struct RefineRun {
 }
 
 /// The incremental refinement driver: evaluate `initial` fully, then while
-/// `should_refine(latest_delta, m_total)` holds, refine the schedule and
-/// evaluate **only the novel midpoints**, carrying the accumulator as
-/// `partial * REFINE_CARRY + novel_partial` (exact: every carried weight
-/// halves — see [`Schedule::refine`]).
+/// `should_refine(latest_delta, m_total)` holds, advance to the schedule
+/// `next_level(&current, level)` produces (the `level`-times-refined one;
+/// direct callers pass `|s, _| s.refine()`, the cache-backed engine reads
+/// its memoized ladder) and evaluate **only the novel midpoints**,
+/// carrying the accumulator as `partial * REFINE_CARRY + novel_partial`
+/// (exact: every carried weight halves — see [`Schedule::refine`]).
+///
+/// There is exactly ONE copy of this round arithmetic: the uncached and
+/// cached engines differ only in where the next schedule comes from, so
+/// hit/miss can never change served numbers.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn refine_loop(
     model: &dyn Model,
     x: &[f32],
@@ -297,6 +322,7 @@ pub(crate) fn refine_loop(
     target: usize,
     gap: f64,
     initial: Schedule,
+    mut next_level: impl FnMut(&Schedule, usize) -> Result<Schedule>,
     mut should_refine: impl FnMut(f64, usize) -> bool,
 ) -> Result<RefineRun> {
     let mut t_sched = Duration::ZERO;
@@ -314,10 +340,12 @@ pub(crate) fn refine_loop(
     let mut partial = out.partial;
     let mut evals = schedule.len();
     let mut residuals = vec![convergence::delta(partial.iter().sum(), gap)];
+    let mut level = 0usize;
 
     while should_refine(*residuals.last().expect("non-empty"), schedule.m_total) {
         let t = Instant::now();
-        let refined = schedule.refine()?;
+        level += 1;
+        let refined = next_level(&schedule, level)?;
         let novel = refined.novel_vs(&schedule);
         let novel_alphas: Vec<f32> = novel.iter().map(|p| p.alpha as f32).collect();
         let novel_weights: Vec<f32> = novel.iter().map(|p| p.weight as f32).collect();
@@ -398,20 +426,21 @@ pub fn explain_anytime(
     // Stage 1 once: the probe serves every round (it depends only on
     // (x, baseline, n_int), not on the refinement level).
     let t0 = Instant::now();
-    let probed = probe_path(model, x, baseline, n_int)?;
+    let probed = probe_path(model, x, baseline, n_int, None)?;
     let t_probe = t0.elapsed();
 
-    let initial = match opts.scheme {
-        Scheme::Uniform => Schedule::uniform(opts.m, opts.rule)?,
-        Scheme::NonUniform { .. } => {
-            let alloc = opts.allocation.allocate(opts.m, &probed.deltas)?;
-            Schedule::nonuniform(&probed.bounds, &alloc, opts.rule)?
-        }
-    };
+    let initial = initial_schedule(opts, opts.m, &probed)?;
 
-    let run = refine_loop(model, x, baseline, probed.target, probed.gap, initial, |delta, m| {
-        policy.should_refine(delta, m)
-    })?;
+    let run = refine_loop(
+        model,
+        x,
+        baseline,
+        probed.target,
+        probed.gap,
+        initial,
+        |s, _| s.refine(),
+        |delta, m| policy.should_refine(delta, m),
+    )?;
 
     let delta = *run.residuals.last().expect("at least one round");
     // Reuse invariant: the total gradient bill IS the final schedule.
@@ -428,6 +457,130 @@ pub fn explain_anytime(
         breakdown: StageBreakdown {
             probe: t_probe,
             schedule: run.t_sched,
+            execute: run.t_exec,
+            reduce: Default::default(),
+        },
+    })
+}
+
+/// Cache-backed anytime IG: the engine-level mirror of the coordinator's
+/// deadline-aware admission path (`benches/fig_warmcache.rs` drives it).
+///
+/// * **Warm** (`target` pinned and `cache` holds a probe memo for
+///   `(target, baseline, n_int)`): stage 1 is skipped entirely — zero
+///   probe passes. The canonical cached schedule and its refine ladder
+///   serve the request, and δ is computed against the memoized endpoint
+///   gap — a class-level estimate, the documented tight-tier trade (see
+///   `docs/TUNING.md` §Latency tiers).
+/// * **Cold** (no memo, or `target` not pinned): stage 1 runs as in
+///   [`explain_anytime`], then populates the probe memo and the schedule
+///   cache so subsequent requests for the same class/baseline are warm.
+///
+/// With a cache in play the served schedule is always the *canonical*
+/// one (built from the quantized probe signature), so results do not
+/// depend on whether a given request hit or missed. The uniform scheme
+/// has nothing to cache (its schedule is a pure function of `m` and the
+/// rule) and delegates to [`explain_anytime`].
+pub fn explain_anytime_cached(
+    model: &dyn Model,
+    x: &[f32],
+    baseline: Option<&[f32]>,
+    target: Option<usize>,
+    opts: &IgOptions,
+    policy: &AnytimePolicy,
+    cache: &ScheduleCache,
+) -> Result<Attribution> {
+    let n_int = match opts.scheme {
+        Scheme::NonUniform { n_int } => n_int,
+        Scheme::Uniform => return explain_anytime(model, x, baseline, opts, policy),
+    };
+    let black;
+    let baseline = match baseline {
+        Some(b) => b,
+        None => {
+            black = vec![0f32; model.features()];
+            &black
+        }
+    };
+    ensure!(x.len() == model.features(), "image width {} != model features {}", x.len(), model.features());
+    ensure!(baseline.len() == x.len(), "baseline width mismatch");
+    ensure!(n_int >= 1, "n_int must be >= 1");
+    ensure!(opts.m >= n_int, "m ({}) must be >= n_int ({n_int})", opts.m);
+    ensure!(
+        opts.rule.keeps_endpoints(),
+        "anytime refinement requires an endpoint-inclusive rule (trapezoid/eq2), got {}",
+        opts.rule
+    );
+    ensure!(
+        opts.m <= policy.max_m,
+        "initial m ({}) exceeds the anytime budget max_m ({})",
+        opts.m,
+        policy.max_m
+    );
+    if let Some(t) = target {
+        ensure!(t < model.num_classes(), "target {t} out of range");
+    }
+
+    let bid = baseline_id(baseline);
+    let warm = target.and_then(|t| cache.memo(t, bid, n_int).map(|memo| (t, memo)));
+    let signature;
+    let (target, gap, probe_passes, t_probe) = match warm {
+        Some((t, memo)) => {
+            signature = memo.signature;
+            (t, memo.gap, 0, Duration::ZERO)
+        }
+        None => {
+            let t0 = Instant::now();
+            let probed = probe_path(model, x, baseline, n_int, target)?;
+            signature = ProbeSignature::quantize(&probed.deltas);
+            let memo = ProbeMemo { signature: signature.clone(), gap: probed.gap };
+            cache.memo_put(probed.target, bid, memo);
+            (probed.target, probed.gap, probed.bounds.len(), t0.elapsed())
+        }
+    };
+
+    let key = CacheKey {
+        target,
+        baseline_id: bid,
+        signature,
+        m: opts.m,
+        rule: opts.rule,
+        allocation: opts.allocation,
+    };
+
+    // Round 0 from the cached canonical schedule; refinement rounds read
+    // the memoized ladder (`cached.level(k)`) through the SAME
+    // `refine_loop` the uncached engine uses — one copy of the round
+    // arithmetic, so hit/miss can never change served numbers.
+    let t1 = Instant::now();
+    let cached = cache.get_or_build(&key)?;
+    let initial = (*cached.base()).clone();
+    let t_lookup = t1.elapsed();
+
+    let run = refine_loop(
+        model,
+        x,
+        baseline,
+        target,
+        gap,
+        initial,
+        |_, level| cached.level(level).map(|s| (*s).clone()),
+        |delta, m| policy.should_refine(delta, m),
+    )?;
+
+    let delta = *run.residuals.last().expect("at least one round");
+    Ok(Attribution {
+        delta,
+        endpoint_gap: gap,
+        values: run.partial,
+        target,
+        steps: run.evals,
+        probe_passes,
+        rounds: run.residuals.len(),
+        residuals: run.residuals,
+        breakdown: StageBreakdown {
+            probe: t_probe,
+            schedule: t_lookup + run.t_sched,
             execute: run.t_exec,
             reduce: Default::default(),
         },
@@ -715,7 +868,7 @@ mod tests {
 
         // Direct evaluation of the same final schedule: the initial
         // allocation at m0 = 8, doubled three times.
-        let probed = probe_path(&m, &x, &baseline, 4).unwrap();
+        let probed = probe_path(&m, &x, &baseline, 4, None).unwrap();
         assert_eq!(probed.target, a.target);
         let alloc0 = Allocation::Sqrt.allocate(8, &probed.deltas).unwrap();
         let alloc_final: Vec<usize> = alloc0.iter().map(|&v| v * 8).collect();
@@ -816,6 +969,119 @@ mod tests {
         let a = explain_anytime(&m, &x, None, &IgOptions { m: 4, ..Default::default() }, &tight)
             .unwrap();
         assert_eq!(a.rounds, 1, "m0 == max_m: no refinement possible");
+    }
+
+    #[test]
+    fn cached_cold_then_warm_skips_the_probe() {
+        let m = saturating_model();
+        let x = input();
+        let cache = ScheduleCache::new(16, 2);
+        let policy = AnytimePolicy::with_max_m(0.0, 32).unwrap();
+        let opts = IgOptions { scheme: Scheme::NonUniform { n_int: 4 }, m: 16, ..Default::default() };
+        let target = argmax(&m.probs(&[&x]).unwrap()[0]);
+
+        let cold =
+            explain_anytime_cached(&m, &x, None, Some(target), &opts, &policy, &cache).unwrap();
+        assert_eq!(cold.probe_passes, 5, "cold request pays the probe");
+        let warm =
+            explain_anytime_cached(&m, &x, None, Some(target), &opts, &policy, &cache).unwrap();
+        assert_eq!(warm.probe_passes, 0, "warm request skips stage 1 entirely");
+        // Same input, canonical schedule, memoized gap: bit-identical.
+        assert_eq!(warm.values, cold.values);
+        assert_eq!(warm.delta, cold.delta);
+        assert_eq!(warm.steps, cold.steps);
+        assert!(cache.counters().hits.get() >= 1, "warm round 0 must hit the schedule cache");
+    }
+
+    #[test]
+    fn cached_unpinned_cold_populates_the_memo() {
+        let m = saturating_model();
+        let x = input();
+        let cache = ScheduleCache::new(16, 2);
+        let policy = AnytimePolicy::with_max_m(0.0, 16).unwrap();
+        let opts = IgOptions { scheme: Scheme::NonUniform { n_int: 4 }, m: 16, ..Default::default() };
+        let a = explain_anytime_cached(&m, &x, None, None, &opts, &policy, &cache).unwrap();
+        assert_eq!(a.probe_passes, 5, "no pinned target: the cold path must probe");
+        assert_eq!(cache.memo_len(), 1);
+        // A pinned follow-up for the same class rides the memo.
+        let warm =
+            explain_anytime_cached(&m, &x, None, Some(a.target), &opts, &policy, &cache).unwrap();
+        assert_eq!(warm.probe_passes, 0);
+        assert_eq!(warm.steps, 17);
+    }
+
+    #[test]
+    fn cached_matches_uncached_to_quantization_tolerance() {
+        // The canonical (quantized-signature) schedule differs from the
+        // exact-delta schedule by at most ±1 step per interval, so the
+        // attribution agrees closely without being bit-identical.
+        let m = saturating_model();
+        let x = input();
+        let cache = ScheduleCache::new(16, 2);
+        let policy = AnytimePolicy::with_max_m(0.0, 64).unwrap();
+        let opts = IgOptions { scheme: Scheme::NonUniform { n_int: 4 }, m: 16, ..Default::default() };
+        let cached = explain_anytime_cached(&m, &x, None, None, &opts, &policy, &cache).unwrap();
+        let direct = explain_anytime(&m, &x, None, &opts, &policy).unwrap();
+        assert_eq!(cached.target, direct.target);
+        assert_eq!(cached.steps, direct.steps, "equal m: equal fused eval count");
+        assert_eq!(cached.rounds, direct.rounds, "budget-gated: equal refinement depth");
+        assert!(cached.cosine_similarity(&direct) > 0.999, "{}", cached.cosine_similarity(&direct));
+        assert!((cached.sum() - direct.sum()).abs() < 1e-3);
+    }
+
+    #[test]
+    fn cached_warm_serves_new_inputs_of_the_same_class() {
+        // The amortization claim: a DIFFERENT input of the same class
+        // rides the memo — zero probe passes — and only delta leans on
+        // the class-level memoized gap; the weighted gradient sum is the
+        // true one for the new input.
+        let m = saturating_model();
+        let x = input();
+        let x2: Vec<f32> = x.iter().map(|v| v * 0.9 + 0.05).collect();
+        let cache = ScheduleCache::new(16, 2);
+        let policy = AnytimePolicy::with_max_m(0.0, 16).unwrap();
+        let opts = IgOptions { scheme: Scheme::NonUniform { n_int: 4 }, m: 16, ..Default::default() };
+        let target = argmax(&m.probs(&[&x]).unwrap()[0]);
+        explain_anytime_cached(&m, &x, None, Some(target), &opts, &policy, &cache).unwrap();
+        let warm =
+            explain_anytime_cached(&m, &x2, None, Some(target), &opts, &policy, &cache).unwrap();
+        assert_eq!(warm.probe_passes, 0);
+        assert_eq!(warm.steps, 17);
+        let black = vec![0f32; 64];
+        let direct = explain_with_target(&m, &x2, &black, target, &opts).unwrap();
+        assert!(warm.cosine_similarity(&direct) > 0.99, "{}", warm.cosine_similarity(&direct));
+    }
+
+    #[test]
+    fn cached_uniform_delegates_to_explain_anytime() {
+        let m = saturating_model();
+        let x = input();
+        let cache = ScheduleCache::new(16, 2);
+        let policy = AnytimePolicy::with_max_m(0.0, 16).unwrap();
+        let opts = IgOptions { scheme: Scheme::Uniform, m: 8, ..Default::default() };
+        let a = explain_anytime_cached(&m, &x, None, None, &opts, &policy, &cache).unwrap();
+        let b = explain_anytime(&m, &x, None, &opts, &policy).unwrap();
+        assert_eq!(a.values, b.values);
+        assert!(cache.is_empty(), "the uniform scheme has nothing to cache");
+    }
+
+    #[test]
+    fn cached_validation_errors() {
+        let m = model();
+        let x = input();
+        let cache = ScheduleCache::new(16, 2);
+        let policy = AnytimePolicy::new(0.01);
+        let left = IgOptions {
+            rule: Rule::Left,
+            scheme: Scheme::NonUniform { n_int: 4 },
+            m: 8,
+            ..Default::default()
+        };
+        assert!(explain_anytime_cached(&m, &x, None, None, &left, &policy, &cache).is_err());
+        let opts = IgOptions::default();
+        assert!(explain_anytime_cached(&m, &x, None, Some(99), &opts, &policy, &cache).is_err());
+        let over = IgOptions { m: 1024, ..Default::default() };
+        assert!(explain_anytime_cached(&m, &x, None, None, &over, &policy, &cache).is_err());
     }
 
     #[test]

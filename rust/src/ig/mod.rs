@@ -9,7 +9,10 @@
 //!   schedule (coincident boundary points merged, zero-weight points
 //!   pruned — `len()` is exactly the model-eval count), and *nested
 //!   refinement* (`Schedule::refine`: the next level is a strict superset
-//!   of the current points, enabling gradient reuse across rounds);
+//!   of the current points, enabling gradient reuse across rounds); its
+//!   [`schedule::cache`] submodule amortizes stage 1 *across requests*
+//!   (quantized-signature keyed LRU of canonical schedules + refine
+//!   ladders, plus the probe memo behind deadline-tier admission);
 //! * [`allocator`] — stage 1's step distribution (`m_int ∝ √|Δf|`, with
 //!   the linear variant kept as the paper's ablation);
 //! * [`probe`] — stage 1's boundary probing and interval-delta math;
@@ -44,9 +47,10 @@ pub use allocator::Allocation;
 pub use attribution::Attribution;
 pub use baselines::BaselineKind;
 pub use convergence::{AnytimePolicy, ConvergencePolicy};
-pub use engine::{explain, explain_anytime, IgOptions};
+pub use engine::{explain, explain_anytime, explain_anytime_cached, IgOptions};
 pub use model::{AnalyticModel, Model};
 pub use riemann::Rule;
+pub use schedule::cache::{CacheKey, ProbeSignature, ScheduleCache};
 
 /// Interpolation scheme selector: the baseline vs the paper's contribution.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

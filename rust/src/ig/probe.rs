@@ -39,6 +39,13 @@ impl Probe {
         }
     }
 
+    /// This probe's quantized signature — the cache-key component that
+    /// lets near-identical probes share one cached schedule (see
+    /// [`crate::ig::schedule::cache`]).
+    pub fn signature(&self) -> crate::ig::schedule::cache::ProbeSignature {
+        crate::ig::schedule::cache::ProbeSignature::quantize(&self.interval_deltas())
+    }
+
     /// Endpoint probability gap `f(x) - f(x')` — the completeness target
     /// of Eq. 3, read off the probe for free (boundary 0 is the baseline,
     /// boundary n is the input).
@@ -122,5 +129,19 @@ mod tests {
     fn validation() {
         assert!(Probe::new(vec![0.0], vec![0.1]).is_err());
         assert!(Probe::new(vec![0.0, 1.0], vec![0.1]).is_err());
+    }
+
+    #[test]
+    fn signature_quantizes_normalized_deltas() {
+        let p = saturating_probe();
+        let sig = p.signature();
+        assert_eq!(sig.n_int(), 4);
+        // Levels are round(delta * 64) of the normalized deltas.
+        let expect: Vec<u8> = p
+            .interval_deltas()
+            .iter()
+            .map(|d| (d * 64.0 + 0.5).floor() as u8)
+            .collect();
+        assert_eq!(sig.levels(), &expect[..]);
     }
 }

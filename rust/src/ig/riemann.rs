@@ -9,7 +9,10 @@
 use anyhow::{bail, Result};
 
 /// Quadrature rule for a uniform grid.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+///
+/// `Hash` is derived because the rule is part of the probe-schedule
+/// cache key ([`crate::ig::schedule::cache::CacheKey`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Rule {
     /// Left Riemann sum: points 0..m-1, weight 1/m.
     Left,

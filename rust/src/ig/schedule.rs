@@ -38,6 +38,17 @@
 //! `nonuniform(bounds, alloc)` is pointwise identical to building
 //! `nonuniform(bounds, 2 * alloc)` directly — doubling every interval's
 //! grid — so the refined schedule is itself a legal stage-2 schedule.
+//!
+//! # Cross-request caching
+//!
+//! The [`cache`] submodule amortizes stage 1 across requests: a bounded,
+//! sharded LRU keyed by `(target class, baseline id, quantized probe
+//! signature, m, rule, allocation)` stores *canonical* fused schedules
+//! together with their lazily-extended refine ladders, and a probe memo
+//! lets deadline-tier serving skip stage 1 entirely on warm traffic. See
+//! [`cache::ScheduleCache`].
+
+pub mod cache;
 
 use anyhow::{ensure, Result};
 

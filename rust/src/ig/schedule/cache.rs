@@ -1,0 +1,553 @@
+//! The probe-schedule cache: amortize stage 1 across requests.
+//!
+//! The paper prices stage 1 at 0.2–3.2 % of an explanation (worse at
+//! small m), and the serving path pays it per request — `n_int + 1`
+//! forward passes plus allocation + grid building + fusion, all to
+//! produce a schedule that is *almost always the same* for traffic that
+//! explains the same class against the same baseline (Fig. 3: the path
+//! information profile is a property of the class's saturation shape far
+//! more than of the individual input). This module makes that reuse
+//! explicit:
+//!
+//! * [`ProbeSignature`] — the probe's normalized interval deltas,
+//!   quantized to a `1/64` grid ([`SIGNATURE_QUANT`]). Two probes whose
+//!   deltas agree to the quantization step produce the same signature and
+//!   therefore share one cached schedule. The quantization is mirrored
+//!   bit-for-bit by `python/compile/igref.py::quantize_signature` and
+//!   pinned by parity tests on both sides.
+//! * [`CacheKey`] — `(target class, baseline id, signature, m, rule,
+//!   allocation)`: everything the fused schedule depends on. The cached
+//!   schedule is **canonical**: built from the *dequantized* signature,
+//!   not from whichever request populated the entry, so cache content is
+//!   deterministic and hit/miss is invisible in the served numbers.
+//! * [`CachedSchedule`] — the canonical fused schedule plus its lazily
+//!   extended refine ladder (`level(k)` = `refine` applied `k` times),
+//!   so anytime rounds reuse schedule construction too.
+//! * [`ScheduleCache`] — a bounded, sharded LRU over those entries, plus
+//!   a probe *memo* (most recent signature + endpoint gap per
+//!   `(target, baseline, n_int)`) that lets deadline-tier admission skip
+//!   stage 1 entirely on warm traffic — zero probe passes.
+//!
+//! The memo trade is explicit: a warm request reuses the class-level
+//! signature and endpoint gap instead of probing its own input, so its
+//! reported completeness residual δ is computed against the memoized gap
+//! (an estimate). Tight-latency tiers accept that — their round budget is
+//! a hard cap, not a convergence search; quality tiers keep probing. See
+//! `docs/TUNING.md` for the tier guidance and `benches/fig_warmcache.rs`
+//! for the measured stage-1 collapse.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{ensure, Result};
+
+use crate::ig::allocator::Allocation;
+use crate::ig::riemann::Rule;
+use crate::metrics::CacheCounters;
+
+use super::Schedule;
+
+/// Quantization resolution for probe signatures: normalized interval
+/// deltas are snapped to multiples of `1/SIGNATURE_QUANT`. At 64 the
+/// allocation derived from a dequantized signature differs from the
+/// exact-delta allocation by at most ±1 step per interval — below the
+/// schedule's own discretization error. Mirrored by
+/// `python/compile/igref.py::SIGNATURE_QUANT`.
+pub const SIGNATURE_QUANT: f64 = 64.0;
+
+/// FNV-1a 64 offset basis (the id of an empty baseline).
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a 64 prime.
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Stable identity for a baseline image: FNV-1a 64 over the f32
+/// little-endian bytes. Deterministic across runs and mirrored by
+/// `python/compile/igref.py::baseline_id` (parity-tested goldens).
+pub fn baseline_id(baseline: &[f32]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for v in baseline {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+/// A probe's normalized interval deltas, quantized to the
+/// [`SIGNATURE_QUANT`] grid — the cache-key component that makes
+/// near-identical probes collide onto one schedule.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ProbeSignature {
+    /// One quantized level per probe interval (`round(delta * 64)`,
+    /// clamped to u8).
+    levels: Vec<u8>,
+}
+
+impl ProbeSignature {
+    /// Quantize normalized interval deltas. Uses `floor(d * Q + 0.5)`
+    /// (round-half-up) so the Rust and Python sides are bit-identical.
+    pub fn quantize(deltas: &[f64]) -> ProbeSignature {
+        let levels = deltas
+            .iter()
+            .map(|d| {
+                let q = (d.abs() * SIGNATURE_QUANT + 0.5).floor();
+                if q >= 255.0 {
+                    255
+                } else {
+                    q as u8
+                }
+            })
+            .collect();
+        ProbeSignature { levels }
+    }
+
+    /// Number of probe intervals this signature covers.
+    pub fn n_int(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// The raw quantized levels (for diagnostics and parity tests).
+    pub fn levels(&self) -> &[u8] {
+        &self.levels
+    }
+
+    /// Reconstruct normalized deltas from the quantized levels
+    /// (renormalized so they sum to 1; an all-zero signature falls back
+    /// to an even split, matching the probe's flat-path fallback). The
+    /// canonical cached schedule is built from these, so cache content
+    /// does not depend on which request populated an entry.
+    pub fn dequantize(&self) -> Vec<f64> {
+        let n = self.levels.len();
+        let sum: u32 = self.levels.iter().map(|&q| q as u32).sum();
+        if sum == 0 {
+            vec![1.0 / n as f64; n]
+        } else {
+            self.levels.iter().map(|&q| q as f64 / sum as f64).collect()
+        }
+    }
+}
+
+/// Everything a fused non-uniform schedule depends on: the cache key.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    /// Explained class (schedules are class-conditional: the probe reads
+    /// p(target) along the path).
+    pub target: usize,
+    /// [`baseline_id`] of the path's start point.
+    pub baseline_id: u64,
+    /// Quantized probe signature (also fixes `n_int` via its length).
+    pub signature: ProbeSignature,
+    /// Total grid intervals m of the base (round-0) schedule.
+    pub m: usize,
+    /// Quadrature rule.
+    pub rule: Rule,
+    /// Stage-1 step-allocation policy.
+    pub allocation: Allocation,
+}
+
+impl CacheKey {
+    /// Build the canonical fused schedule this key denotes: equal-width
+    /// probe boundaries for `signature.n_int()` intervals, the allocation
+    /// applied to the *dequantized* signature, fused. Deterministic given
+    /// the key alone — the property the Rust↔Python parity test pins.
+    pub fn canonical_schedule(&self) -> Result<Schedule> {
+        ensure!(self.signature.n_int() >= 1, "empty probe signature");
+        let bounds = Schedule::probe_boundaries(self.signature.n_int());
+        let deltas = self.signature.dequantize();
+        let alloc = self.allocation.allocate(self.m, &deltas)?;
+        Schedule::nonuniform(&bounds, &alloc, self.rule)
+    }
+}
+
+/// A cached canonical schedule plus its lazily extended refine ladder.
+///
+/// `level(0)` is the base schedule; `level(k)` is [`Schedule::refine`]
+/// applied `k` times, memoized — so anytime refinement rounds served
+/// from the cache also skip schedule construction, and every consumer of
+/// the same entry shares one `Arc<Schedule>` per level.
+pub struct CachedSchedule {
+    levels: Mutex<Vec<Arc<Schedule>>>,
+}
+
+impl CachedSchedule {
+    /// Wrap a base (round-0) schedule.
+    pub fn new(base: Schedule) -> CachedSchedule {
+        CachedSchedule { levels: Mutex::new(vec![Arc::new(base)]) }
+    }
+
+    /// The base (round-0) schedule.
+    pub fn base(&self) -> Arc<Schedule> {
+        self.levels.lock().unwrap()[0].clone()
+    }
+
+    /// The `k`-times-refined schedule, extending the ladder on demand.
+    /// Errors only if the base is not refinable (endpoint-pruned rules).
+    pub fn level(&self, k: usize) -> Result<Arc<Schedule>> {
+        let mut levels = self.levels.lock().unwrap();
+        while levels.len() <= k {
+            let next = levels.last().expect("ladder is never empty").refine()?;
+            levels.push(Arc::new(next));
+        }
+        Ok(levels[k].clone())
+    }
+
+    /// Ladder depth materialized so far (≥ 1).
+    pub fn ladder_len(&self) -> usize {
+        self.levels.lock().unwrap().len()
+    }
+}
+
+/// The most recent probe observation for a `(target, baseline, n_int)`
+/// stream: what deadline-tier admission reuses to skip stage 1.
+#[derive(Debug, Clone)]
+pub struct ProbeMemo {
+    /// Quantized signature of the last cold probe.
+    pub signature: ProbeSignature,
+    /// Endpoint gap `f(x) − f(x′)` observed by that probe. Warm requests
+    /// report δ against this class-level estimate instead of their own
+    /// (unprobed) gap — the documented tight-tier quality trade.
+    pub gap: f64,
+}
+
+struct Entry {
+    val: Arc<CachedSchedule>,
+    last_used: u64,
+}
+
+/// Memo map: `(target, baseline id, n_int)` → most recent probe memo,
+/// stamped with an LRU tick.
+type MemoMap = HashMap<(usize, u64, usize), (ProbeMemo, u64)>;
+
+/// Bounded, sharded LRU of canonical schedules plus the probe memo.
+///
+/// Sharding bounds lock contention: the shard index is the key hash
+/// modulo the shard count, and each shard enforces `ceil(capacity /
+/// shards)` entries with least-recently-used eviction (a linear min-scan — shards
+/// stay small, and eviction is off the hot hit path). All counter
+/// traffic lands in a shared [`CacheCounters`] so the coordinator can
+/// export hit/miss/evict rates without touching the shards.
+pub struct ScheduleCache {
+    shards: Vec<Mutex<HashMap<CacheKey, Entry>>>,
+    per_shard: usize,
+    memos: Mutex<MemoMap>,
+    memo_cap: usize,
+    tick: AtomicU64,
+    counters: Arc<CacheCounters>,
+}
+
+impl ScheduleCache {
+    /// A bounded cache over `shards` shards (both args clamped to ≥ 1;
+    /// shards are clamped to `capacity`).
+    ///
+    /// Exact bound: each shard holds at most `ceil(capacity / shards)`
+    /// entries, so the total can reach `shards * ceil(capacity / shards)`
+    /// — equal to `capacity` when `shards` divides it, up to
+    /// `capacity + shards - 1` otherwise. Size memory off that ceiling
+    /// (or pick `capacity` a multiple of `shards`, as the defaults do).
+    pub fn new(capacity: usize, shards: usize) -> ScheduleCache {
+        Self::with_counters(capacity, shards, Arc::new(CacheCounters::default()))
+    }
+
+    /// Like [`ScheduleCache::new`] but sharing externally owned counters
+    /// (the coordinator passes the ones it exports from its stats).
+    pub fn with_counters(
+        capacity: usize,
+        shards: usize,
+        counters: Arc<CacheCounters>,
+    ) -> ScheduleCache {
+        let capacity = capacity.max(1);
+        let shards = shards.clamp(1, capacity);
+        ScheduleCache {
+            shards: (0..shards).map(|_| Mutex::new(HashMap::new())).collect(),
+            per_shard: capacity.div_ceil(shards),
+            memos: Mutex::new(HashMap::new()),
+            memo_cap: 2 * capacity,
+            tick: AtomicU64::new(0),
+            counters,
+        }
+    }
+
+    /// The shared hit/miss/evict/insert counters.
+    pub fn counters(&self) -> &CacheCounters {
+        &self.counters
+    }
+
+    fn shard_of(&self, key: &CacheKey) -> usize {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        (h.finish() as usize) % self.shards.len()
+    }
+
+    fn next_tick(&self) -> u64 {
+        self.tick.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Pure lookup (refreshes recency; counts a hit or a miss).
+    pub fn get(&self, key: &CacheKey) -> Option<Arc<CachedSchedule>> {
+        let mut shard = self.shards[self.shard_of(key)].lock().unwrap();
+        match shard.get_mut(key) {
+            Some(e) => {
+                e.last_used = self.next_tick();
+                self.counters.hits.inc();
+                Some(e.val.clone())
+            }
+            None => {
+                self.counters.misses.inc();
+                None
+            }
+        }
+    }
+
+    /// Lookup, building and inserting the canonical schedule on a miss
+    /// (the cold-traffic populate path). The build runs outside the
+    /// shard lock; a racing populator's entry wins, so all callers of
+    /// one key share a single [`CachedSchedule`].
+    pub fn get_or_build(&self, key: &CacheKey) -> Result<Arc<CachedSchedule>> {
+        let idx = self.shard_of(key);
+        {
+            let mut shard = self.shards[idx].lock().unwrap();
+            if let Some(e) = shard.get_mut(key) {
+                e.last_used = self.next_tick();
+                self.counters.hits.inc();
+                return Ok(e.val.clone());
+            }
+        }
+        self.counters.misses.inc();
+        let built = Arc::new(CachedSchedule::new(key.canonical_schedule()?));
+        let mut shard = self.shards[idx].lock().unwrap();
+        if let Some(e) = shard.get_mut(key) {
+            // A racing builder inserted first: reuse its entry.
+            e.last_used = self.next_tick();
+            return Ok(e.val.clone());
+        }
+        if shard.len() >= self.per_shard {
+            let victim = shard.iter().min_by_key(|(_, e)| e.last_used).map(|(k, _)| k.clone());
+            if let Some(victim) = victim {
+                shard.remove(&victim);
+                self.counters.evictions.inc();
+            }
+        }
+        self.counters.insertions.inc();
+        shard.insert(key.clone(), Entry { val: built.clone(), last_used: self.next_tick() });
+        Ok(built)
+    }
+
+    /// Entries currently cached, across all shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    /// Whether no schedule is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The most recent probe memo for `(target, baseline, n_int)`, if
+    /// any cold probe has populated it — the warm-admission lookup.
+    pub fn memo(&self, target: usize, baseline_id: u64, n_int: usize) -> Option<ProbeMemo> {
+        self.memos.lock().unwrap().get(&(target, baseline_id, n_int)).map(|(m, _)| m.clone())
+    }
+
+    /// Record a cold probe's observation so subsequent requests for the
+    /// same `(target, baseline, n_int)` can skip stage 1. Bounded at
+    /// `2 × capacity` memos with oldest-entry eviction.
+    pub fn memo_put(&self, target: usize, baseline_id: u64, memo: ProbeMemo) {
+        let mut memos = self.memos.lock().unwrap();
+        let key = (target, baseline_id, memo.signature.n_int());
+        let tick = self.next_tick();
+        memos.insert(key, (memo, tick));
+        if memos.len() > self.memo_cap {
+            let victim = memos.iter().min_by_key(|(_, (_, t))| *t).map(|(k, _)| *k);
+            if let Some(victim) = victim {
+                memos.remove(&victim);
+            }
+        }
+    }
+
+    /// Probe memos currently held.
+    pub fn memo_len(&self) -> usize {
+        self.memos.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(target: usize, deltas: &[f64], m: usize) -> CacheKey {
+        CacheKey {
+            target,
+            baseline_id: baseline_id(&[0.0; 4]),
+            signature: ProbeSignature::quantize(deltas),
+            m,
+            rule: Rule::Trapezoid,
+            allocation: Allocation::Sqrt,
+        }
+    }
+
+    #[test]
+    fn quantization_parity_goldens() {
+        // Pinned on the Python side by tests/test_cache_parity.py — any
+        // drift breaks cross-language cache-key agreement.
+        let sig = ProbeSignature::quantize(&[0.625, 0.25, 0.0625, 0.0625]);
+        assert_eq!(sig.levels(), &[40, 16, 4, 4]);
+        assert_eq!(ProbeSignature::quantize(&[0.7, 0.2, 0.08, 0.02]).levels(), &[45, 13, 5, 1]);
+        assert_eq!(ProbeSignature::quantize(&[1.0]).levels(), &[64]);
+        // Out-of-range inputs clamp instead of wrapping.
+        assert_eq!(ProbeSignature::quantize(&[5.0]).levels(), &[255]);
+    }
+
+    #[test]
+    fn baseline_id_parity_goldens() {
+        // Pinned on the Python side by tests/test_cache_parity.py.
+        assert_eq!(baseline_id(&[]), 0xcbf29ce484222325);
+        assert_eq!(baseline_id(&[0.0; 4]), 0x88201fb960ff6465);
+        assert_eq!(baseline_id(&[0.0, 0.25, 0.5, 1.0]), 0xd831ed359a404d8b);
+        assert_eq!(baseline_id(&[0.5; 64]), 0xed65da9ccebf6d25);
+    }
+
+    #[test]
+    fn dequantize_renormalizes_exactly() {
+        let sig = ProbeSignature::quantize(&[0.7, 0.2, 0.08, 0.02]);
+        // Levels [45, 13, 5, 1] sum to 64: dyadic, exact in f64.
+        assert_eq!(sig.dequantize(), vec![0.703125, 0.203125, 0.078125, 0.015625]);
+        let flat = ProbeSignature { levels: vec![0, 0, 0] };
+        assert_eq!(flat.dequantize(), vec![1.0 / 3.0; 3]);
+    }
+
+    #[test]
+    fn quantization_collapses_near_identical_probes() {
+        let a = ProbeSignature::quantize(&[0.7001, 0.1999, 0.08, 0.02]);
+        let b = ProbeSignature::quantize(&[0.6999, 0.2001, 0.08, 0.02]);
+        assert_eq!(a, b, "probes within the quantization step must share a key");
+    }
+
+    #[test]
+    fn canonical_schedule_is_fused_and_deterministic() {
+        let k = key(0, &[0.7, 0.2, 0.08, 0.02], 32);
+        let s = k.canonical_schedule().unwrap();
+        assert!(s.is_fused());
+        assert_eq!(s.len(), 32 + 1, "trapezoid fused len is m + 1");
+        assert_eq!(s.m_total, 32);
+        // Identical to building directly from the dequantized deltas.
+        let bounds = Schedule::probe_boundaries(4);
+        let alloc = Allocation::Sqrt.allocate(32, &k.signature.dequantize()).unwrap();
+        let direct = Schedule::nonuniform(&bounds, &alloc, Rule::Trapezoid).unwrap();
+        assert_eq!(s, direct);
+    }
+
+    #[test]
+    fn get_or_build_counts_miss_then_hit_and_shares_the_entry() {
+        let cache = ScheduleCache::new(8, 2);
+        let k = key(1, &[0.6, 0.25, 0.1, 0.05], 16);
+        let a = cache.get_or_build(&k).unwrap();
+        assert_eq!(cache.counters().misses.get(), 1);
+        assert_eq!(cache.counters().insertions.get(), 1);
+        let b = cache.get_or_build(&k).unwrap();
+        assert_eq!(cache.counters().hits.get(), 1);
+        assert!(Arc::ptr_eq(&a, &b), "one canonical entry per key");
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn get_reports_miss_without_building() {
+        let cache = ScheduleCache::new(4, 1);
+        assert!(cache.get(&key(0, &[1.0], 8)).is_none());
+        assert_eq!(cache.counters().misses.get(), 1);
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn lru_evicts_the_stale_entry() {
+        let cache = ScheduleCache::new(2, 1);
+        let k1 = key(1, &[0.9, 0.1], 8);
+        let k2 = key(2, &[0.9, 0.1], 8);
+        let k3 = key(3, &[0.9, 0.1], 8);
+        cache.get_or_build(&k1).unwrap();
+        cache.get_or_build(&k2).unwrap();
+        // Touch k1 so k2 is the LRU victim.
+        assert!(cache.get(&k1).is_some());
+        cache.get_or_build(&k3).unwrap();
+        assert_eq!(cache.counters().evictions.get(), 1);
+        assert_eq!(cache.len(), 2);
+        assert!(cache.get(&k1).is_some(), "recently used entry survives");
+        assert!(cache.get(&k2).is_none(), "LRU entry evicted");
+    }
+
+    #[test]
+    fn sharded_capacity_is_bounded() {
+        let cache = ScheduleCache::new(8, 4);
+        for t in 0..50 {
+            cache.get_or_build(&key(t, &[0.5, 0.3, 0.15, 0.05], 16)).unwrap();
+        }
+        assert!(cache.len() <= 8, "total entries {} exceed capacity", cache.len());
+        assert!(cache.counters().evictions.get() >= 42);
+    }
+
+    #[test]
+    fn refine_ladder_levels_match_direct_refinement() {
+        let cache = ScheduleCache::new(4, 1);
+        let k = key(0, &[0.7, 0.2, 0.08, 0.02], 16);
+        let cached = cache.get_or_build(&k).unwrap();
+        let base = cached.base();
+        let l2 = cached.level(2).unwrap();
+        assert_eq!(l2.m_total, 4 * base.m_total);
+        let direct = base.refine().unwrap().refine().unwrap();
+        assert_eq!(*l2, direct);
+        assert_eq!(cached.ladder_len(), 3);
+        // Re-requesting a level reuses the memoized Arc.
+        assert!(Arc::ptr_eq(&l2, &cached.level(2).unwrap()));
+    }
+
+    #[test]
+    fn memo_roundtrip_and_bound() {
+        let cache = ScheduleCache::new(2, 1); // memo_cap = 4
+        let sig = ProbeSignature::quantize(&[0.8, 0.1, 0.05, 0.05]);
+        cache.memo_put(3, 42, ProbeMemo { signature: sig.clone(), gap: 0.87 });
+        let m = cache.memo(3, 42, 4).expect("memo present");
+        assert_eq!(m.signature, sig);
+        assert!((m.gap - 0.87).abs() < 1e-12);
+        assert!(cache.memo(3, 42, 8).is_none(), "n_int is part of the memo key");
+        assert!(cache.memo(4, 42, 4).is_none());
+        // Overwrite is an update, not a second entry.
+        cache.memo_put(3, 42, ProbeMemo { signature: sig.clone(), gap: 0.5 });
+        assert_eq!(cache.memo_len(), 1);
+        assert!((cache.memo(3, 42, 4).unwrap().gap - 0.5).abs() < 1e-12);
+        // Bound: oldest memo evicted past 2 x capacity.
+        for t in 0..10 {
+            cache.memo_put(t, 7, ProbeMemo { signature: sig.clone(), gap: 0.0 });
+        }
+        assert!(cache.memo_len() <= 4);
+    }
+
+    #[test]
+    fn concurrent_populate_converges_to_one_entry() {
+        let cache = Arc::new(ScheduleCache::new(8, 2));
+        let k = key(0, &[0.6, 0.25, 0.1, 0.05], 32);
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let cache = cache.clone();
+                let k = k.clone();
+                std::thread::spawn(move || cache.get_or_build(&k).unwrap())
+            })
+            .collect();
+        let arcs: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for a in &arcs[1..] {
+            assert!(Arc::ptr_eq(&arcs[0], a), "racing populators must share one entry");
+        }
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.counters().insertions.get(), 1);
+    }
+
+    #[test]
+    fn left_rule_key_builds_but_cannot_ladder() {
+        let k = CacheKey { rule: Rule::Left, ..key(0, &[0.7, 0.3], 8) };
+        let cached = CachedSchedule::new(k.canonical_schedule().unwrap());
+        assert!(cached.level(0).is_ok());
+        assert!(cached.level(1).is_err(), "endpoint-pruned rules cannot refine");
+    }
+}

@@ -14,7 +14,7 @@ use anyhow::{bail, Result};
 
 use nuig::cli::Args;
 use nuig::config::CoordinatorConfig;
-use nuig::coordinator::{Coordinator, ExplainRequest, Policy};
+use nuig::coordinator::{Coordinator, ExplainRequest, LatencyBudget, Policy};
 use nuig::data::{synth, Corpus};
 use nuig::ig::{self, convergence::ConvergencePolicy, ensemble, Allocation, BaselineKind, IgOptions, Rule, Scheme};
 use nuig::runtime::Runtime;
@@ -41,6 +41,10 @@ COMMANDS:
   serve     Serve a synthetic request stream through the coordinator
             [--requests N] [--workers N] [--scheme S] [--m N]
             [--batch-wait-us N] [--policy fifo|round-robin|shortest-first]
+            [--tier unbounded|tight|standard|thorough] [--cache N]
+            (--tier pins every request's latency budget; --cache N
+             enables the probe-schedule cache with N entries — tight-tier
+             requests pin their target so warm traffic skips stage 1)
   sweep     Convergence sweep: delta vs m for schemes
             [--class N] [--grid 8,16,32,...] [--schemes uniform,nonuniform:4]
   render    Write overlay heatmaps for the eval corpus
@@ -144,19 +148,28 @@ fn cmd_serve(mut args: Args, artifacts: &str) -> Result<()> {
     let workers = args.opt("workers", 2usize)?;
     let batch_wait_us = args.opt("batch-wait-us", 200u64)?;
     let policy = Policy::parse(&args.opt_str("policy").unwrap_or_else(|| "fifo".into()))?;
+    let tier = LatencyBudget::parse(&args.opt_str("tier").unwrap_or_else(|| "unbounded".into()))?;
+    let cache_capacity = args.opt("cache", 0usize)?;
     let opts = parse_opts(&mut args)?;
     args.finish()?;
 
     let rt = Runtime::load_default(artifacts)?;
-    let cfg = CoordinatorConfig { workers, batch_wait_us, policy, ..Default::default() };
+    let mut cfg = CoordinatorConfig { workers, batch_wait_us, policy, ..Default::default() };
+    cfg.admission.cache_capacity = cache_capacity;
     let coord = Coordinator::start(&rt, cfg)?;
 
     let corpus = Corpus::generate((requests / synth::NUM_CLASSES).max(1));
     let t0 = std::time::Instant::now();
     let handles: Vec<_> = (0..requests)
         .map(|i| {
-            let img = corpus.images[i % corpus.len()].pixels.clone();
-            coord.submit(ExplainRequest::new(img, opts))
+            let li = &corpus.images[i % corpus.len()];
+            let mut req = ExplainRequest::new(li.pixels.clone(), opts).with_budget(tier);
+            if tier == LatencyBudget::Tight {
+                // The probe memo is class-keyed: tight-tier traffic pins
+                // its target so warm requests can skip stage 1 entirely.
+                req = req.with_target(li.class);
+            }
+            coord.submit(req)
         })
         .collect::<Result<_>>()?;
     let mut max_delta = 0f64;
@@ -173,6 +186,26 @@ fn cmd_serve(mut args: Args, artifacts: &str) -> Result<()> {
     println!("queue wait       : {}", stats.queue_wait.format_ms());
     println!("batch occupancy  : {:.1}%", 100.0 * stats.mean_occupancy(coord.config().chunk));
     println!("max delta        : {max_delta:.6}");
+    if tier != LatencyBudget::Unbounded {
+        let ts = stats.tier(tier);
+        println!(
+            "tier {:<11} : {} completed, {} warm (zero-probe), e2e {}",
+            tier,
+            ts.completed.get(),
+            ts.warm_admissions.get(),
+            ts.e2e_latency.format_ms()
+        );
+    }
+    if coord.schedule_cache().is_some() {
+        let c = &stats.cache;
+        println!(
+            "schedule cache   : {:.1}% hit rate ({} hits, {} misses, {} evictions)",
+            100.0 * c.hit_rate(),
+            c.hits.get(),
+            c.misses.get(),
+            c.evictions.get()
+        );
+    }
     let rstats = rt.stats();
     println!("device execs     : {} total", rstats.total_executions());
     coord.shutdown();

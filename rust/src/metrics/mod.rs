@@ -73,6 +73,36 @@ impl Ewma {
     }
 }
 
+/// Hit/miss/evict/insert counters for the probe-schedule cache
+/// ([`crate::ig::schedule::cache::ScheduleCache`]). Shared by `Arc`
+/// between the cache and [`crate::coordinator::CoordinatorStats`] so the
+/// serving layer reports cache effectiveness without reaching into the
+/// cache's shards.
+#[derive(Default)]
+pub struct CacheCounters {
+    /// Lookups served from the cache (warm traffic).
+    pub hits: Counter,
+    /// Lookups that found nothing (cold traffic; a build + insert follows).
+    pub misses: Counter,
+    /// Entries displaced by the per-shard LRU bound.
+    pub evictions: Counter,
+    /// Entries built and inserted (one per cold miss that populated).
+    pub insertions: Counter,
+}
+
+impl CacheCounters {
+    /// `hits / (hits + misses)`, or 0 before any lookup.
+    pub fn hit_rate(&self) -> f64 {
+        let h = self.hits.get() as f64;
+        let m = self.misses.get() as f64;
+        if h + m == 0.0 {
+            0.0
+        } else {
+            h / (h + m)
+        }
+    }
+}
+
 /// RAII timer recording elapsed time into a [`Histogram`] on drop.
 pub struct Timer<'a> {
     hist: &'a Histogram,
@@ -203,5 +233,16 @@ mod tests {
     #[test]
     fn stage_breakdown_zero_total() {
         assert_eq!(StageBreakdown::default().stage1_fraction(), 0.0);
+    }
+
+    #[test]
+    fn cache_counters_hit_rate() {
+        let c = CacheCounters::default();
+        assert_eq!(c.hit_rate(), 0.0, "no lookups yet");
+        c.misses.inc();
+        assert_eq!(c.hit_rate(), 0.0);
+        c.hits.inc();
+        c.hits.inc();
+        assert!((c.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
     }
 }

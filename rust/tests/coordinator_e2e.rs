@@ -8,7 +8,7 @@ use std::time::Duration;
 
 use common::{close, have_artifacts, runtime, skip};
 use nuig::config::CoordinatorConfig;
-use nuig::coordinator::{Coordinator, ExplainRequest};
+use nuig::coordinator::{Coordinator, ExplainRequest, LatencyBudget};
 use nuig::data::synth;
 use nuig::ig::{self, IgOptions, Rule, Scheme};
 
@@ -189,6 +189,83 @@ fn shutdown_completes_in_flight_work() {
     for h in handles {
         assert!(h.wait().is_ok(), "in-flight request dropped during shutdown");
     }
+}
+
+#[test]
+fn tight_tier_warm_cache_skips_probe_passes() {
+    if !have_artifacts() {
+        return skip("tight_tier_warm_cache_skips_probe_passes");
+    }
+    let rt = runtime();
+    let mut c = cfg(1);
+    c.admission.cache_capacity = 64;
+    let coord = Coordinator::start(rt, c).unwrap();
+    let opts = IgOptions { scheme: Scheme::NonUniform { n_int: 4 }, m: 64, ..Default::default() };
+
+    // Cold tight-tier request: probes, populates memo + schedule cache.
+    // Tight admission rewrites m to the tier's m0 (16): 17 fused evals.
+    let req = ExplainRequest::new(synth::gen_image(2, 0), opts)
+        .with_budget(LatencyBudget::Tight)
+        .with_target(2);
+    let cold = coord.explain(req).unwrap();
+    assert_eq!(cold.attribution.probe_passes, 5, "cold request pays the probe");
+    assert_eq!(cold.attribution.steps, 17, "tight tier serves m0 = 16");
+
+    // Warm: same class + baseline, different input — zero stage-1 passes,
+    // the same canonical schedule off the cache.
+    let req = ExplainRequest::new(synth::gen_image(2, 1), opts)
+        .with_budget(LatencyBudget::Tight)
+        .with_target(2);
+    let warm = coord.explain(req).unwrap();
+    assert_eq!(warm.attribution.probe_passes, 0, "warm tight-tier request must skip stage 1");
+    assert_eq!(warm.attribution.steps, 17);
+    assert!(warm.attribution.delta.is_finite());
+
+    let stats = coord.stats();
+    assert_eq!(stats.tier(LatencyBudget::Tight).submitted.get(), 2);
+    assert_eq!(stats.tier(LatencyBudget::Tight).completed.get(), 2);
+    assert_eq!(stats.tier(LatencyBudget::Tight).warm_admissions.get(), 1);
+    assert!(stats.cache.hits.get() >= 1, "warm round 0 must hit the schedule cache");
+    assert_eq!(stats.cache.insertions.get(), 1);
+    assert_eq!(coord.schedule_cache().unwrap().memo_len(), 1);
+    coord.shutdown();
+}
+
+#[test]
+fn tier_mix_accounts_per_tier_and_unbounded_is_untouched() {
+    if !have_artifacts() {
+        return skip("tier_mix_accounts_per_tier_and_unbounded_is_untouched");
+    }
+    let rt = runtime();
+    let coord = Coordinator::start(rt, cfg(2)).unwrap();
+    let opts = IgOptions { scheme: Scheme::NonUniform { n_int: 4 }, m: 48, ..Default::default() };
+
+    // Unbounded request: the admission path must not rewrite its m.
+    let img = synth::gen_image(0, 0);
+    let unb = coord.explain(ExplainRequest::new(img.clone(), opts)).unwrap();
+    assert_eq!(unb.attribution.steps, 49, "unbounded keeps the requested m");
+    let direct = ig::explain(&rt.model(), &img, None, &opts).unwrap();
+    close(unb.attribution.sum(), direct.sum(), 1e-4, 1e-7);
+
+    // Tier requests: m comes from the tier policy, rounds are capped.
+    let std_resp = coord
+        .explain(ExplainRequest::new(img.clone(), opts).with_budget(LatencyBudget::Standard))
+        .unwrap();
+    assert!(std_resp.attribution.rounds <= 3, "standard tier caps rounds at 3");
+    let tho_resp = coord
+        .explain(ExplainRequest::new(img, opts).with_budget(LatencyBudget::Thorough))
+        .unwrap();
+    assert!(tho_resp.attribution.rounds <= 6);
+    assert!(tho_resp.attribution.delta.is_finite());
+
+    let stats = coord.stats();
+    assert_eq!(stats.tier(LatencyBudget::Unbounded).completed.get(), 1);
+    assert_eq!(stats.tier(LatencyBudget::Standard).completed.get(), 1);
+    assert_eq!(stats.tier(LatencyBudget::Thorough).completed.get(), 1);
+    assert_eq!(stats.tier(LatencyBudget::Tight).completed.get(), 0);
+    assert_eq!(stats.completed.get(), 3);
+    assert_eq!(stats.cache.hits.get() + stats.cache.misses.get(), 0, "cache off by default");
+    coord.shutdown();
 }
 
 #[test]
