@@ -39,6 +39,11 @@ def uniform_alphas(m: int) -> np.ndarray:
 
 FUSE_EPS = 1e-12
 
+#: Coincidence tolerance for recognizing the path endpoints on a fused
+#: schedule — symmetric at both ends, mirroring the Rust engine's
+#: ``at_endpoint`` (``engine::ENDPOINT_EPS``).
+ENDPOINT_EPS = 1e-12
+
 
 def fuse_schedule(alphas: Sequence[float], weights: Sequence[float],
                   eps: float = FUSE_EPS) -> Tuple[np.ndarray, np.ndarray]:
@@ -386,6 +391,32 @@ class IgResult:
     residuals: List[float] | None = None
 
 
+#: Points per execution chunk in the Rust batched backend — mirrors
+#: ``exec::batch::DEFAULT_CHUNK``. The engines accumulate chunk-local
+#: partials over spans of this size and reduce them in span order, the
+#: same deterministic ordered reduction the Rust side applies at any
+#: worker count, so both languages share one accumulation order.
+BATCH_CHUNK = 64
+
+
+def chunk_spans(n: int, chunk: int = BATCH_CHUNK) -> List[Tuple[int, int]]:
+    """Contiguous ``(start, len)`` spans of at most ``chunk`` points.
+
+    Mirrors ``exec::batch::chunk_spans`` exactly (shared integer goldens
+    in ``tests/test_batch_parity.py`` and the Rust unit tests): the span
+    layout is part of the cross-language determinism contract.
+    """
+    if chunk < 1:
+        raise ValueError("chunk must be >= 1")
+    out: List[Tuple[int, int]] = []
+    start = 0
+    while start < n:
+        length = min(chunk, n - start)
+        out.append((start, length))
+        start += length
+    return out
+
+
 def _run_points(flat, x, baseline, alphas: np.ndarray, weights: np.ndarray,
                 target: int, chunk: int = 16) -> Tuple[np.ndarray, List[float]]:
     """Evaluate sum_k w_k grad_k (x-x') via the AOT ig_chunk fn, chunked.
@@ -415,6 +446,30 @@ def _run_points(flat, x, baseline, alphas: np.ndarray, weights: np.ndarray,
     return acc, tprobs
 
 
+def _run_points_batched(flat, x, baseline, alphas: np.ndarray,
+                        weights: np.ndarray, target: int, chunk: int = 16,
+                        batch_chunk: int = BATCH_CHUNK,
+                        ) -> Tuple[np.ndarray, List[float]]:
+    """The batched-backend accumulation order: evaluate each
+    :func:`chunk_spans` span into its own chunk-local f64 partial, then
+    reduce the span partials **in span order** — mirroring
+    ``ig::model::eval_points``'s deterministic ordered reduction, so the
+    reference's f64 association matches what the Rust engines serve at
+    any worker count. For streams of ≤ ``batch_chunk`` points (every
+    Table-I operating point at m ≤ 63) this is bit-identical to the
+    pre-batch flat accumulation.
+    """
+    acc = np.zeros(model.F, dtype=np.float64)
+    tprobs: List[float] = []
+    for start, length in chunk_spans(len(alphas), batch_chunk):
+        part, probs = _run_points(flat, x, baseline,
+                                  alphas[start:start + length],
+                                  weights[start:start + length], target, chunk)
+        acc = acc + part
+        tprobs.extend(probs)
+    return acc, tprobs
+
+
 def _endpoint_gap(flat, x, baseline, target: int) -> float:
     probs = model.fwd_jit(flat, jnp.stack([x, baseline]))[0]
     p = np.asarray(probs, dtype=np.float64)
@@ -435,17 +490,21 @@ def uniform_ig(flat, x, baseline, m: int, target: int,
     endpoint gap is read off the schedule's own probabilities when the
     grid includes both path endpoints; a pruned endpoint is evaluated
     directly and counted in probe_passes — mirroring the Rust engine.
+    Both ends use the same ENDPOINT_EPS tolerance (the old exact
+    ``alphas[0] == 0.0`` left-end check meant a ``0.0 + ε`` first point
+    double-paid a probe pass the right end would have absorbed —
+    mirrors the Rust engine's symmetric ``at_endpoint``).
     """
     alphas, weights = fuse_schedule(uniform_alphas(m), riemann_weights(m + 1, rule))
-    attr, tprobs = _run_points(flat, x, baseline, alphas, weights, target, chunk)
+    attr, tprobs = _run_points_batched(flat, x, baseline, alphas, weights, target, chunk)
     probe_passes = 0
-    if alphas[0] == 0.0:
+    if abs(alphas[0]) < ENDPOINT_EPS:
         p0 = tprobs[0]
     else:
         probe_passes += 1
         p0 = float(np.asarray(model.fwd_jit(flat, jnp.asarray(baseline)[None, :])[0],
                               np.float64)[0, target])
-    if abs(alphas[-1] - 1.0) < 1e-12:
+    if abs(alphas[-1] - 1.0) < ENDPOINT_EPS:
         p1 = tprobs[-1]
     else:
         probe_passes += 1
@@ -503,7 +562,7 @@ def nonuniform_ig(flat, x, baseline, m: int, n_int: int, target: int,
     # cost one model evaluation, so steps == m + 1 for the trapezoid rule
     # (not the m + n_int the raw concatenation would pay).
     alphas, weights = nonuniform_schedule(bounds, alloc, rule)
-    attr, _ = _run_points(flat, x, baseline, alphas, weights, target, chunk)
+    attr, _ = _run_points_batched(flat, x, baseline, alphas, weights, target, chunk)
 
     delta = abs(float(attr.sum()) - gap)
     return IgResult(attr, delta, len(alphas), n_int + 1, target)
@@ -543,14 +602,14 @@ def anytime_ig(flat, x, baseline, m0: int, n_int: int, target: int,
     alphas, weights = nonuniform_schedule(bounds, alloc, rule)
 
     # ---- Stage 2: initial level, then refinement rounds. -----------------
-    attr, _ = _run_points(flat, x, baseline, alphas, weights, target, chunk)
+    attr, _ = _run_points_batched(flat, x, baseline, alphas, weights, target, chunk)
     evals = len(alphas)
     m = int(sum(alloc))
     residuals = [abs(float(attr.sum()) - gap)]
     while residuals[-1] > delta_target and 2 * m <= max_m:
         ref_a, ref_w = refine_schedule(alphas, weights)
         nov_a, nov_w = novel_points(ref_a, ref_w, alphas)
-        novel_attr, _ = _run_points(flat, x, baseline, nov_a, nov_w, target, chunk)
+        novel_attr, _ = _run_points_batched(flat, x, baseline, nov_a, nov_w, target, chunk)
         attr = attr * REFINE_CARRY + novel_attr
         evals += len(nov_a)
         alphas, weights = ref_a, ref_w

@@ -1,0 +1,176 @@
+"""Parity pins for the batched execution backend's accumulation order.
+
+The Rust engines evaluate stage 2 in fixed-size chunks with a
+deterministic ordered reduction (``exec::batch``); ``igref`` mirrors that
+order in ``_run_points_batched``. These tests pin the shared contract:
+
+  * the span layout (``chunk_spans``) against integer goldens shared
+    verbatim with the Rust unit tests (``exec/batch.rs``);
+  * order-independence of the reduction: span partials combined in span
+    order are bit-identical no matter which order the spans were
+    *computed* in — the numpy face of the Rust claim "bit-identical at
+    any worker count";
+  * the engine-level mirror: ``_run_points_batched`` vs the flat
+    pre-batch accumulation (bit-identical within one chunk, f64
+    round-off across chunks);
+  * the symmetric-endpoint bugfix in ``uniform_ig`` (probe passes per
+    rule), mirroring ``engine::at_endpoint``.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import data, igref, model
+
+
+@pytest.fixture(scope="module")
+def flat():
+    return model.flatten_params(model.init_params())
+
+
+@pytest.fixture(scope="module")
+def case(flat):
+    x = jnp.asarray(data.gen_image(0, 0))
+    baseline = jnp.zeros_like(x)
+    target = igref.predict_target(flat, x)
+    return x, baseline, target
+
+
+class TestChunkSpans:
+    def test_goldens_shared_with_rust(self):
+        # MUST match exec/batch.rs::tests::chunk_spans_layout verbatim.
+        assert igref.chunk_spans(0, 64) == []
+        assert igref.chunk_spans(1, 64) == [(0, 1)]
+        assert igref.chunk_spans(64, 64) == [(0, 64)]
+        assert igref.chunk_spans(65, 64) == [(0, 64), (64, 1)]
+        assert igref.chunk_spans(257, 64) == [
+            (0, 64), (64, 64), (128, 64), (192, 64), (256, 1)]
+        assert igref.chunk_spans(7, 3) == [(0, 3), (3, 3), (6, 1)]
+
+    def test_default_chunk_mirrors_rust(self):
+        assert igref.BATCH_CHUNK == 64
+
+    def test_spans_cover_exactly(self):
+        rng = np.random.default_rng(11)
+        for _ in range(50):
+            n = int(rng.integers(0, 2000))
+            chunk = int(rng.integers(1, 129))
+            spans = igref.chunk_spans(n, chunk)
+            nxt = 0
+            for start, length in spans:
+                assert start == nxt
+                assert 1 <= length <= chunk
+                nxt = start + length
+            assert nxt == n
+
+    def test_rejects_bad_chunk(self):
+        with pytest.raises(ValueError):
+            igref.chunk_spans(10, 0)
+
+
+class TestOrderedReduction:
+    """The determinism claim, in pure numpy: reducing span partials in
+    span order is invariant to the order the spans were computed in."""
+
+    def test_completion_order_never_changes_bits(self):
+        rng = np.random.default_rng(7)
+        contrib = rng.uniform(-1.0, 1.0, size=(403, 8))  # points x features
+        spans = igref.chunk_spans(len(contrib), 64)
+        # Span partials, computed "out of order" (reversed — worst case).
+        partials = {}
+        for start, length in reversed(spans):
+            local = np.zeros(8)
+            for k in range(start, start + length):
+                local = local + contrib[k]
+            partials[start] = local
+        # Reduced IN SPAN ORDER: must equal the in-order computation bit
+        # for bit.
+        acc_shuffled = np.zeros(8)
+        for start, _ in spans:
+            acc_shuffled = acc_shuffled + partials[start]
+        acc_ordered = np.zeros(8)
+        for start, length in spans:
+            local = np.zeros(8)
+            for k in range(start, start + length):
+                local = local + contrib[k]
+            acc_ordered = acc_ordered + local
+        assert acc_shuffled.tobytes() == acc_ordered.tobytes()
+
+    def test_reassociation_differs_from_flat_sum_only_at_roundoff(self):
+        rng = np.random.default_rng(13)
+        contrib = rng.uniform(-1.0, 1.0, size=(403, 8))
+        flat_acc = np.zeros(8)
+        for row in contrib:
+            flat_acc = flat_acc + row
+        chunked = np.zeros(8)
+        for start, length in igref.chunk_spans(len(contrib), 64):
+            local = np.zeros(8)
+            for k in range(start, start + length):
+                local = local + contrib[k]
+            chunked = chunked + local
+        assert_allclose(chunked, flat_acc, rtol=1e-12, atol=1e-14)
+
+
+class TestEngineMirror:
+    def test_single_chunk_bit_identical_to_flat(self, flat, case):
+        # Every stream of <= BATCH_CHUNK points reduces over one span:
+        # the batched path must reproduce the flat path to the bit.
+        x, baseline, target = case
+        alphas, weights = igref.nonuniform_schedule(
+            [0.0, 0.25, 0.5, 0.75, 1.0], [8, 4, 2, 2])
+        assert len(alphas) <= igref.BATCH_CHUNK
+        a_flat, _ = igref._run_points(flat, x, baseline, alphas, weights, target)
+        a_batch, _ = igref._run_points_batched(flat, x, baseline, alphas,
+                                               weights, target)
+        assert a_batch.tobytes() == a_flat.tobytes()
+
+    def test_multi_chunk_matches_flat_to_roundoff(self, flat, case):
+        x, baseline, target = case
+        alphas, weights = igref.fuse_schedule(
+            igref.uniform_alphas(150), igref.riemann_weights(151, "trapezoid"))
+        a_flat, p_flat = igref._run_points(flat, x, baseline, alphas, weights,
+                                           target)
+        a_batch, p_batch = igref._run_points_batched(flat, x, baseline, alphas,
+                                                     weights, target)
+        assert p_batch == p_flat, "per-point probs keep stream order"
+        assert_allclose(a_batch, a_flat, rtol=1e-9, atol=1e-12)
+
+    def test_uniform_engine_unchanged_at_small_m(self, flat, case):
+        # The engines now accumulate through the batched mirror; at the
+        # paper's operating points (m <= 63: one span) the attribution is
+        # bit-identical to the pre-batch reference, so existing goldens
+        # stay valid.
+        x, baseline, target = case
+        r16 = igref.uniform_ig(flat, x, baseline, 16, target)
+        a_flat, _ = igref._run_points(
+            flat, x, baseline,
+            *igref.fuse_schedule(igref.uniform_alphas(16),
+                                 igref.riemann_weights(17, "trapezoid")),
+            target)
+        assert r16.attr.tobytes() == a_flat.tobytes()
+
+
+class TestEndpointSymmetry:
+    """Mirror of the Rust `at_endpoint` bugfix: one tolerance, both ends."""
+
+    def test_trapezoid_reads_both_endpoints_off_schedule(self, flat, case):
+        x, baseline, target = case
+        r = igref.uniform_ig(flat, x, baseline, 8, target, rule="trapezoid")
+        assert r.probe_passes == 0
+
+    def test_left_right_pay_exactly_one_probe_pass(self, flat, case):
+        x, baseline, target = case
+        assert igref.uniform_ig(flat, x, baseline, 8, target,
+                                rule="left").probe_passes == 1
+        assert igref.uniform_ig(flat, x, baseline, 8, target,
+                                rule="right").probe_passes == 1
+
+    def test_epsilon_perturbed_left_endpoint_not_double_paid(self):
+        # The bug: an exact `== 0.0` left-end check sent a 0 + ε schedule
+        # to a direct probe pass while the right end absorbed its ε. Both
+        # ends now share ENDPOINT_EPS.
+        assert abs(np.float64(1e-13)) < igref.ENDPOINT_EPS
+        assert abs((1.0 - 1e-13) - 1.0) < igref.ENDPOINT_EPS
+        assert not (abs(np.float64(1e-9)) < igref.ENDPOINT_EPS)

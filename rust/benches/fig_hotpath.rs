@@ -1,0 +1,138 @@
+//! Hot-path kernel throughput: the batched execution backend vs the
+//! scalar reference, on the closed-form [`AnalyticModel`] at the corpus
+//! dimensions (F = 3072, 8 classes) — no artifacts needed.
+//!
+//! Three modes per operating point m ∈ {16, 64, 256, 1024}:
+//!
+//!   scalar    — `AnalyticModel::ig_points_scalar`: one point at a time,
+//!               fresh buffers per point (the pre-batch engine path);
+//!   batched   — `eval_points` with `BatchExec::Sequential`: planar
+//!               `PointBatch` fill + per-worker scratch arena, one core;
+//!   parallel  — `eval_points` with `BatchExec::parallel`: the same
+//!               chunks sharded across the `exec::ThreadPool`.
+//!
+//!     cargo bench --bench fig_hotpath
+//!
+//! Emits `BENCH_hotpath.json` (path override: `NUIG_HOTPATH_JSON`) with
+//! the schema CI gates on — see `docs/BENCHES.md` §fig_hotpath. Smoke
+//! mode (`NUIG_HOTPATH_SMOKE=1`) shrinks the grid to m ∈ {8, 16} and
+//! skips the wall-clock speedup assertion (shared CI runners), keeping
+//! the bit-identity assertion, which is never timing-dependent.
+//!
+//! Shape assertions (full mode): batched-parallel reaches ≥ 2× the
+//! scalar baseline's points/sec at m = 256 when ≥ 4 workers are
+//! available, and every mode's attribution matches the scalar reference
+//! (parallel vs sequential-batched: bit-identical at 0 ULP).
+
+use std::sync::Arc;
+
+use nuig::bench::{fmt3, measure, BenchConfig, Table};
+use nuig::exec::{batch::DEFAULT_CHUNK, BatchExec, ThreadPool};
+use nuig::ig::engine::argmax;
+use nuig::ig::model::eval_points;
+use nuig::ig::{AnalyticModel, Model, Rule};
+use nuig::ig::schedule::Schedule;
+use nuig::jsonio::Json;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = BenchConfig::from_env();
+    let smoke = std::env::var("NUIG_HOTPATH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let ms: &[usize] = if smoke { &[8, 16] } else { &[16, 64, 256, 1024] };
+
+    let model = AnalyticModel::standard();
+    let x = nuig::data::synth::gen_image(0, 0);
+    let baseline = vec![0f32; model.features()];
+    let target = argmax(&model.probs(&[&x])?[0]);
+
+    let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8);
+    let pool = Arc::new(ThreadPool::new(workers));
+    let seq = BatchExec::Sequential;
+    let par = BatchExec::parallel(pool);
+
+    let mut table = Table::new(
+        &format!("fig_hotpath: stage-2 kernel throughput ({workers} workers, chunk {DEFAULT_CHUNK})"),
+        &["m", "mode", "points", "ns_per_point", "points_per_s", "speedup_vs_scalar"],
+    );
+
+    let mut speedup_at_256 = None;
+    for &m in ms {
+        let schedule = Schedule::uniform(m, Rule::Trapezoid)?;
+        let (alphas, weights) = schedule.to_f32();
+        let points = schedule.len();
+
+        // Correctness gates before the clocks: the batched kernel matches
+        // the scalar reference (chunk reassociation only), and parallel
+        // matches sequential-batched to the bit.
+        let ref_scalar = model.ig_points_scalar(&x, &baseline, &alphas, &weights, target)?;
+        let ref_seq = eval_points(&model, &x, &baseline, &alphas, &weights, target, &seq)?;
+        let ref_par = eval_points(&model, &x, &baseline, &alphas, &weights, target, &par)?;
+        nuig::testutil::assert_allclose(&ref_seq.partial, &ref_scalar.partial, 1e-10, 1e-13);
+        for (a, b) in ref_par.partial.iter().zip(&ref_seq.partial) {
+            assert_eq!(a.to_bits(), b.to_bits(), "parallel must be bit-identical to sequential");
+        }
+
+        let runs = [
+            ("scalar", None),
+            ("batched", Some(&seq)),
+            ("parallel", Some(&par)),
+        ];
+        let mut scalar_pps = 0.0;
+        for (mode, exec) in runs {
+            let meas = match exec {
+                None => measure(&cfg, mode, || {
+                    model.ig_points_scalar(&x, &baseline, &alphas, &weights, target).unwrap();
+                }),
+                Some(exec) => measure(&cfg, mode, || {
+                    eval_points(&model, &x, &baseline, &alphas, &weights, target, exec).unwrap();
+                }),
+            };
+            let secs = meas.mean_s();
+            let pps = points as f64 / secs;
+            let ns_per_point = secs * 1e9 / points as f64;
+            if mode == "scalar" {
+                scalar_pps = pps;
+            }
+            let speedup = pps / scalar_pps;
+            if mode == "parallel" && m == 256 {
+                speedup_at_256 = Some(speedup);
+            }
+            table.row(vec![
+                m.to_string(),
+                mode.to_string(),
+                points.to_string(),
+                fmt3(ns_per_point),
+                fmt3(pps),
+                fmt3(speedup),
+            ]);
+        }
+    }
+    table.print();
+
+    // ---- Machine-readable trajectory point: BENCH_hotpath.json. ---------
+    let path = std::env::var("NUIG_HOTPATH_JSON").unwrap_or_else(|_| "BENCH_hotpath.json".into());
+    let json = Json::obj(vec![
+        ("bench", Json::Str("fig_hotpath".into())),
+        ("schema_version", Json::Num(1.0)),
+        ("workers", Json::Num(workers as f64)),
+        ("chunk", Json::Num(DEFAULT_CHUNK as f64)),
+        ("smoke", Json::Bool(smoke)),
+        ("rows", table.to_json().get("rows").expect("table has rows").clone()),
+    ]);
+    std::fs::write(&path, json.to_string_pretty())?;
+    println!("wrote {path}");
+
+    // ---- Shape assertion: the acceptance claim (full mode only; smoke
+    // runs on shared CI runners where wall-clock claims flake). ----------
+    if !smoke {
+        let speedup = speedup_at_256.expect("m=256 parallel row present");
+        if workers >= 4 {
+            assert!(
+                speedup >= 2.0,
+                "batched-parallel must reach >= 2x scalar points/sec at m=256 on {workers} workers, got {speedup:.2}x"
+            );
+        } else {
+            eprintln!("NOTE: only {workers} workers available; 2x speedup assertion skipped");
+        }
+    }
+    Ok(())
+}

@@ -42,7 +42,10 @@
 //!   handle;
 //! * [`state`] — in-flight request state (f64 accumulator, countdown,
 //!   anytime round state machine);
-//! * [`batcher`] — lane queue + chunk assembly with bounded fill-wait;
+//! * [`batcher`] — device-chunk assembly from per-request chunk-plan
+//!   streams (plans expand into lanes as chunks pack; overflow carries)
+//!   for policy-less FIFO deployments, plus the feeder's occupancy
+//!   stats; the live feeder pops chunks from [`scheduler`] instead;
 //! * [`server`] — the [`server::Coordinator`]: lifecycle, workers, stats.
 
 pub mod batcher;

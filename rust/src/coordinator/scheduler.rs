@@ -21,7 +21,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use super::state::Lane;
+use super::state::{ChunkPlan, Lane};
 
 /// Scheduling policy selector.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -57,19 +57,25 @@ impl Policy {
     }
 }
 
-struct ReqLanes {
+struct ReqPlans {
     /// Owning request id (diagnostics; scheduling itself is id-agnostic).
     #[allow(dead_code)]
     id: u64,
-    /// One lane per *fused* schedule point (routers emit fused schedules
-    /// only, so queue depth here is an exact model-eval backlog and
-    /// `RequestState::steps` bookkeeping matches the lanes dispatched).
-    lanes: VecDeque<Lane>,
+    /// Queued chunk plans, each a contiguous run of *fused* schedule
+    /// points (routers emit fused schedules only, so the point total is
+    /// an exact model-eval backlog and `RequestState::steps` bookkeeping
+    /// matches the lanes dispatched). The front plan is consumed
+    /// lane-by-lane through `head`.
+    plans: VecDeque<ChunkPlan>,
+    /// Next point index within the front plan.
+    head: usize,
+    /// Points remaining across all plans (ShortestFirst's key).
+    remaining: usize,
 }
 
 struct State {
-    /// Per-request lane queues, in arrival order.
-    reqs: VecDeque<ReqLanes>,
+    /// Per-request plan queues, in arrival order.
+    reqs: VecDeque<ReqPlans>,
     /// Round-robin cursor (index into `reqs`).
     cursor: usize,
     total: usize,
@@ -77,7 +83,11 @@ struct State {
 }
 
 /// A policy-aware replacement for the flat lane channel: routers push a
-/// whole request's lanes atomically; the feeder pops device chunks.
+/// whole request's chunk plans atomically; the feeder pops device chunks
+/// lane-by-lane. Capacity and `len` count *points*, so backpressure and
+/// occupancy semantics are unchanged from the per-lane queue this
+/// replaces — only the queue representation is coarser (one entry, one
+/// `Arc`, one allocation per chunk plan instead of per point).
 pub struct LaneScheduler {
     policy: Policy,
     capacity: usize,
@@ -110,28 +120,31 @@ impl LaneScheduler {
         self.policy
     }
 
-    /// Enqueue one request's lanes (blocks while over capacity; fails
-    /// after close). All-or-nothing: lanes of a request stay together.
-    pub fn push_request(&self, id: u64, lanes: Vec<Lane>) -> Result<()> {
-        self.push_impl(id, lanes, false)
+    /// Enqueue one request's chunk plans (blocks while over capacity;
+    /// fails after close). All-or-nothing: a request's plans stay
+    /// together, in schedule order.
+    pub fn push_request(&self, id: u64, plans: Vec<ChunkPlan>) -> Result<()> {
+        self.push_impl(id, plans, false)
     }
 
-    /// Enqueue one request's lanes at the FRONT of the request queue —
-    /// deadline-aware admission for tight-budget tiers: the request
-    /// overtakes everything already queued while its own lanes stay
-    /// together in alpha order. Same capacity/close semantics as
+    /// Enqueue one request's chunk plans at the FRONT of the request
+    /// queue — deadline-aware admission for tight-budget tiers: the
+    /// request overtakes everything already queued while its own lanes
+    /// stay together in alpha order. Same capacity/close semantics as
     /// [`LaneScheduler::push_request`]. Under `RoundRobin` the cursor is
     /// left untouched (the new request simply takes the current turn);
     /// `ShortestFirst` ignores queue order entirely, so front admission
     /// only guarantees priority under `Fifo` — the default.
-    pub fn push_request_front(&self, id: u64, lanes: Vec<Lane>) -> Result<()> {
-        self.push_impl(id, lanes, true)
+    pub fn push_request_front(&self, id: u64, plans: Vec<ChunkPlan>) -> Result<()> {
+        self.push_impl(id, plans, true)
     }
 
     /// Shared admission loop for both push ends: one copy of the
     /// closed-check / oversized-but-empty escape / condvar-wait logic.
-    fn push_impl(&self, id: u64, lanes: Vec<Lane>, front: bool) -> Result<()> {
-        if lanes.is_empty() {
+    fn push_impl(&self, id: u64, plans: Vec<ChunkPlan>, front: bool) -> Result<()> {
+        let plans: VecDeque<ChunkPlan> = plans.into_iter().filter(|p| !p.is_empty()).collect();
+        let points: usize = plans.iter().map(|p| p.len()).sum();
+        if points == 0 {
             return Ok(());
         }
         let mut st = self.state.lock().unwrap();
@@ -141,9 +154,9 @@ impl LaneScheduler {
             }
             // Admit if there's room OR the queue is empty (oversized
             // requests must not deadlock on capacity).
-            if st.total + lanes.len() <= self.capacity || st.total == 0 {
-                st.total += lanes.len();
-                let req = ReqLanes { id, lanes: lanes.into() };
+            if st.total + points <= self.capacity || st.total == 0 {
+                st.total += points;
+                let req = ReqPlans { id, plans, head: 0, remaining: points };
                 if front {
                     st.reqs.push_front(req);
                 } else {
@@ -172,16 +185,18 @@ impl LaneScheduler {
     /// `not_full` gate admitted. At the default config (64-request queue,
     /// 24-byte lanes, max_m = 512) that is a few hundred KiB, accepted in
     /// exchange for converged requests exiting the batcher early.
-    pub fn push_refill(&self, id: u64, lanes: Vec<Lane>) -> Result<()> {
-        if lanes.is_empty() {
+    pub fn push_refill(&self, id: u64, plans: Vec<ChunkPlan>) -> Result<()> {
+        let plans: VecDeque<ChunkPlan> = plans.into_iter().filter(|p| !p.is_empty()).collect();
+        let points: usize = plans.iter().map(|p| p.len()).sum();
+        if points == 0 {
             return Ok(());
         }
         let mut st = self.state.lock().unwrap();
         if st.closed {
             bail!("lane scheduler closed");
         }
-        st.total += lanes.len();
-        st.reqs.push_back(ReqLanes { id, lanes: lanes.into() });
+        st.total += points;
+        st.reqs.push_back(ReqPlans { id, plans, head: 0, remaining: points });
         drop(st);
         self.not_empty.notify_all();
         Ok(())
@@ -244,16 +259,25 @@ impl LaneScheduler {
                     .reqs
                     .iter()
                     .enumerate()
-                    .min_by_key(|(_, r)| r.lanes.len())
+                    .min_by_key(|(_, r)| r.remaining)
                     .map(|(i, _)| i)
                     .unwrap_or(0),
             };
             let exhausted = {
                 let req = &mut st.reqs[idx];
-                let lane = req.lanes.pop_front().expect("non-empty request queue");
-                out.push(lane);
+                // One device lane off the front plan (plans are never
+                // empty: pushes filter them and drained plans pop here).
+                let plan = req.plans.front().expect("non-empty request queue");
+                let (alpha, weight) = plan.points[req.head];
+                out.push(Lane { state: plan.state.clone(), alpha, weight });
+                req.head += 1;
+                req.remaining -= 1;
                 st.total -= 1;
-                req.lanes.is_empty()
+                if req.head == plan.len() {
+                    req.plans.pop_front();
+                    req.head = 0;
+                }
+                req.plans.is_empty()
             };
             if exhausted {
                 st.reqs.remove(idx);
@@ -275,12 +299,12 @@ impl LaneScheduler {
         self.not_full.notify_all();
     }
 
-    /// Lanes currently queued.
+    /// Gradient points (device lanes) currently queued across all plans.
     pub fn len(&self) -> usize {
         self.state.lock().unwrap().total
     }
 
-    /// Whether no lanes are queued.
+    /// Whether no points are queued.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -296,7 +320,7 @@ mod tests {
     use std::sync::atomic::{AtomicBool, AtomicUsize};
     use std::sync::{Arc, Mutex as StdMutex};
 
-    fn lanes(id: u64, n: usize) -> Vec<Lane> {
+    fn lanes(id: u64, n: usize) -> Vec<ChunkPlan> {
         let (tx, _h) = ResponseHandle::pair(id);
         let state = Arc::new(RequestState {
             id,
@@ -318,7 +342,11 @@ mod tests {
             in_flight: Arc::new(AtomicUsize::new(1)),
             anytime: None,
         });
-        (0..n).map(|k| Lane { state: state.clone(), alpha: k as f32, weight: 1.0 }).collect()
+        // Chunk width 3 on purpose: most tests span several plans, so
+        // the lane-by-lane consumption across plan boundaries is what
+        // every policy assertion below actually exercises.
+        let points: Vec<(f32, f32)> = (0..n).map(|k| (k as f32, 1.0)).collect();
+        ChunkPlan::build(&state, &points, 3)
     }
 
     fn pop_ids(s: &LaneScheduler, chunk: usize) -> Vec<u64> {

@@ -20,7 +20,7 @@ use crate::runtime::{Arg, ExeKind, Runtime, RuntimeHandle};
 use super::batcher::BatchStats;
 use super::request::{ExplainRequest, ExplainResponse, LatencyBudget, ResponseHandle};
 use super::scheduler::{LaneScheduler, Popped};
-use super::state::{AnytimeRounds, Lane, RequestState, RoundOutcome};
+use super::state::{AnytimeRounds, ChunkPlan, RequestState, RoundOutcome};
 
 /// Per-tier serving statistics (one block per [`LatencyBudget`] tier).
 pub struct TierStats {
@@ -139,6 +139,9 @@ struct RouterCtx {
     in_flight: Arc<AtomicUsize>,
     admission: AdmissionConfig,
     cache: Option<Arc<ScheduleCache>>,
+    /// Device chunk width — the grain requests' schedules are split into
+    /// [`ChunkPlan`]s at.
+    chunk: usize,
 }
 
 impl Coordinator {
@@ -181,6 +184,7 @@ impl Coordinator {
                 in_flight: in_flight.clone(),
                 admission: cfg.admission,
                 cache: cache.clone(),
+                chunk: cfg.chunk,
             });
             let cancel = cancel.clone();
             threads.push(
@@ -380,7 +384,7 @@ fn router_loop(rx: Receiver<Submission>, ctx: Arc<RouterCtx>, cancel: CancelToke
 }
 
 fn route_one(sub: Submission, queue_wait: Duration, ctx: &RouterCtx) -> Result<()> {
-    let RouterCtx { lanes, handle, stats, in_flight, admission, cache } = ctx;
+    let RouterCtx { lanes, handle, stats, in_flight, admission, cache, chunk } = ctx;
     let features = handle.features();
     let classes = handle.num_classes();
     let Submission { req, reply, id, submitted_at } = sub;
@@ -589,20 +593,19 @@ fn route_one(sub: Submission, queue_wait: Duration, ctx: &RouterCtx) -> Result<(
         anytime,
     });
 
-    // ---- Fan out lanes (atomically, so the scheduler sees the whole
-    // request and within-request alpha order is preserved). One lane per
-    // fused schedule point: `Attribution.steps` reported back equals the
-    // number of device-batch slots this request actually consumes. Tight-
-    // budget requests are admitted at the FRONT of the lane queue so they
+    // ---- Fan out chunk plans (atomically, so the scheduler sees the
+    // whole request and within-request alpha order is preserved). One
+    // point per fused schedule entry, grouped into device-width chunk
+    // plans: `Attribution.steps` reported back equals the number of
+    // device-batch slots this request actually consumes, while the queue
+    // carries one entry per chunk instead of per point. Tight-budget
+    // requests are admitted at the FRONT of the lane queue so they
     // overtake queued work (deadline-aware admission). -------------------
-    let req_lanes: Vec<Lane> = lane_points
-        .iter()
-        .map(|&(alpha, weight)| Lane { state: state.clone(), alpha, weight })
-        .collect();
+    let req_plans = ChunkPlan::build(&state, &lane_points, *chunk);
     let pushed = if budget == LatencyBudget::Tight {
-        lanes.push_request_front(id, req_lanes)
+        lanes.push_request_front(id, req_plans)
     } else {
-        lanes.push_request(id, req_lanes)
+        lanes.push_request(id, req_plans)
     };
     if let Err(e) = pushed {
         if state.fail(anyhow!("lane scheduler closed during fan-out: {e}")) {
@@ -699,9 +702,9 @@ fn feeder_loop(
                     }
                     // Last lane of this request's round: finalize, or
                     // refine and re-enqueue the novel midpoint lanes.
-                    match lane.state.on_round_complete() {
+                    match lane.state.on_round_complete(chunk) {
                         RoundOutcome::Refine(next) => {
-                            let novel = next.len();
+                            let novel: usize = next.iter().map(|p| p.len()).sum();
                             match scheduler.push_refill(lane.state.id, next) {
                                 Ok(()) => stats.refine_rounds.inc(),
                                 Err(_) => {
@@ -855,12 +858,12 @@ mod tests {
         st.add_lane(&[1.0, 0.0, 0.0, 0.0]);
         st.add_lane(&[1.0, 0.0, 0.0, 0.0]);
         assert!(st.add_lane(&[1.0, 0.0, 0.0, 0.0]));
-        let lanes = match st.on_round_complete() {
-            RoundOutcome::Refine(l) => l,
+        let plans = match st.on_round_complete(16) {
+            RoundOutcome::Refine(p) => p,
             RoundOutcome::Finalize => panic!("unconverged round must refine"),
         };
         // Scheduler closed mid-round: abort the refinement and settle.
-        st.abort_refinement(lanes.len());
+        st.abort_refinement(plans.iter().map(|p| p.len()).sum());
         finish_request(&s, &st);
         finish_request(&s, &st);
         assert_eq!(s.completed.get(), 1);

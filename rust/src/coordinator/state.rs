@@ -32,9 +32,9 @@ pub struct AnytimeRounds {
 pub enum RoundOutcome {
     /// Done (fixed-m, converged, or budget-capped): finalize + reply.
     Finalize,
-    /// Unconverged and in budget: re-enqueue these novel midpoint lanes
-    /// as the next refinement round.
-    Refine(Vec<Lane>),
+    /// Unconverged and in budget: re-enqueue these novel-midpoint chunk
+    /// plans as the next refinement round.
+    Refine(Vec<ChunkPlan>),
 }
 
 /// Shared state for one in-flight request. Lanes (device batch slots)
@@ -113,7 +113,8 @@ impl RequestState {
     }
 
     /// Decide what happens after a round fully lands: finalize, or refine
-    /// the schedule and hand back the next round's novel lanes.
+    /// the schedule and hand back the next round's novel points as chunk
+    /// plans of at most `chunk` points each (the caller's device width).
     ///
     /// Only the thread that observed `add_lane` return `true` may call
     /// this (the feeder); it is not re-entrant within a round. The
@@ -121,7 +122,7 @@ impl RequestState {
     /// accumulator is scaled by `Schedule::REFINE_CARRY` (every carried
     /// lane's weight halves bit-exactly under refinement) and only the
     /// novel midpoints are re-enqueued — no gradient is ever recomputed.
-    pub fn on_round_complete(self: &Arc<Self>) -> RoundOutcome {
+    pub fn on_round_complete(self: &Arc<Self>, chunk: usize) -> RoundOutcome {
         // A request that already settled (e.g. a device failure on an
         // earlier chunk of this round) must not spawn refinement rounds
         // from a partial accumulator; the caller's finalize() is then a
@@ -160,11 +161,9 @@ impl RequestState {
         *sched = refined;
         drop(sched);
 
-        let lanes = novel
-            .iter()
-            .map(|p| Lane { state: self.clone(), alpha: p.alpha as f32, weight: p.weight as f32 })
-            .collect();
-        RoundOutcome::Refine(lanes)
+        let points: Vec<(f32, f32)> =
+            novel.iter().map(|p| (p.alpha as f32, p.weight as f32)).collect();
+        RoundOutcome::Refine(ChunkPlan::build(self, &points, chunk))
     }
 
     /// Undo the state mutations of a refinement round whose novel lanes
@@ -258,6 +257,43 @@ pub struct Lane {
     pub alpha: f32,
     /// Quadrature weight of this gradient point.
     pub weight: f32,
+}
+
+/// A contiguous run of ONE request's gradient points — the unit routers
+/// enqueue and refinement rounds re-enqueue.
+///
+/// The lane scheduler holds chunk plans and pops single device [`Lane`]s
+/// off the front plan, so device-batch assembly (and the scheduling
+/// policies' lane-granular semantics) are unchanged while the queue
+/// carries `O(points / chunk)` entries — one `Arc` clone and one
+/// allocation per *chunk* instead of per point.
+pub struct ChunkPlan {
+    /// The owning request's shared state.
+    pub state: Arc<RequestState>,
+    /// `(alpha, weight)` of each point, in fused-schedule order.
+    pub points: Vec<(f32, f32)>,
+}
+
+impl ChunkPlan {
+    /// Split `points` into plans of at most `chunk` points each (the
+    /// schedule-order chunking mirror of `exec::batch::chunk_spans`).
+    pub fn build(state: &Arc<RequestState>, points: &[(f32, f32)], chunk: usize) -> Vec<ChunkPlan> {
+        assert!(chunk >= 1, "chunk must be >= 1");
+        points
+            .chunks(chunk)
+            .map(|c| ChunkPlan { state: state.clone(), points: c.to_vec() })
+            .collect()
+    }
+
+    /// Points carried by this plan.
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    /// Whether the plan carries no points.
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
 }
 
 #[cfg(test)]
@@ -367,7 +403,7 @@ mod tests {
     fn fixed_m_round_completion_finalizes() {
         let (st, handle) = mk_state(1, 0.5);
         assert!(st.add_lane(&[0.5, 0.0, 0.0, 0.0]));
-        assert!(matches!(st.on_round_complete(), RoundOutcome::Finalize));
+        assert!(matches!(st.on_round_complete(16), RoundOutcome::Finalize));
         st.finalize();
         let a = handle.wait().unwrap().attribution;
         assert_eq!(a.rounds, 1);
@@ -381,7 +417,7 @@ mod tests {
         st.add_lane(&[0.5, 0.0, 0.0, 0.0]);
         st.add_lane(&[0.25, 0.0, 0.0, 0.0]);
         assert!(st.add_lane(&[0.25, 0.0, 0.0, 0.0]));
-        assert!(matches!(st.on_round_complete(), RoundOutcome::Finalize));
+        assert!(matches!(st.on_round_complete(16), RoundOutcome::Finalize));
         st.finalize();
         let a = handle.wait().unwrap().attribution;
         assert_eq!(a.rounds, 1);
@@ -397,16 +433,19 @@ mod tests {
         st.add_lane(&[1.0, 0.0, 0.0, 0.0]);
         st.add_lane(&[1.0, 0.0, 0.0, 0.0]);
         assert!(st.add_lane(&[2.0, 0.0, 0.0, 0.0]));
-        let lanes = match st.on_round_complete() {
-            RoundOutcome::Refine(l) => l,
+        let plans = match st.on_round_complete(16) {
+            RoundOutcome::Refine(p) => p,
             RoundOutcome::Finalize => panic!("must refine"),
         };
-        // Novel lanes are the two midpoints of the 3-point grid, at the
-        // refined interior weight (0.25 for m = 4).
-        assert_eq!(lanes.len(), 2);
-        let alphas: Vec<f32> = lanes.iter().map(|l| l.alpha).collect();
+        // Novel points are the two midpoints of the 3-point grid, at the
+        // refined interior weight (0.25 for m = 4) — one chunk plan at
+        // device width 16.
+        assert_eq!(plans.len(), 1);
+        assert_eq!(plans[0].len(), 2);
+        assert!(!plans[0].is_empty());
+        let alphas: Vec<f32> = plans[0].points.iter().map(|&(a, _)| a).collect();
         assert_eq!(alphas, vec![0.25, 0.75]);
-        assert!(lanes.iter().all(|l| (l.weight - 0.25).abs() < 1e-6));
+        assert!(plans[0].points.iter().all(|&(_, w)| (w - 0.25).abs() < 1e-6));
         // Accumulator carried at half weight; countdown reset for round 2.
         assert_eq!(st.acc.lock().unwrap()[0], 2.0);
         assert_eq!(st.remaining.load(Ordering::Acquire), 2);
@@ -426,7 +465,7 @@ mod tests {
         st.add_lane(&[1.0, 0.0, 0.0, 0.0]);
         st.add_lane(&[1.0, 0.0, 0.0, 0.0]);
         assert!(st.add_lane(&[1.0, 0.0, 0.0, 0.0]));
-        assert!(matches!(st.on_round_complete(), RoundOutcome::Finalize));
+        assert!(matches!(st.on_round_complete(16), RoundOutcome::Finalize));
         assert!(!st.finalize(), "already settled: finalize must report a no-op");
         assert!(handle.wait().is_err());
     }
@@ -440,11 +479,11 @@ mod tests {
         st.add_lane(&[1.0, 0.0, 0.0, 0.0]);
         st.add_lane(&[1.0, 0.0, 0.0, 0.0]);
         assert!(st.add_lane(&[1.0, 0.0, 0.0, 0.0]));
-        let lanes = match st.on_round_complete() {
-            RoundOutcome::Refine(l) => l,
+        let plans = match st.on_round_complete(16) {
+            RoundOutcome::Refine(p) => p,
             RoundOutcome::Finalize => panic!("must refine"),
         };
-        st.abort_refinement(lanes.len());
+        st.abort_refinement(plans.iter().map(|p| p.len()).sum());
         st.finalize();
         let a = handle.wait().unwrap().attribution;
         assert_eq!(a.values[0], 3.0, "accumulator restored, not halved");
@@ -460,7 +499,7 @@ mod tests {
         st.add_lane(&[1.0, 0.0, 0.0, 0.0]);
         st.add_lane(&[1.0, 0.0, 0.0, 0.0]);
         assert!(st.add_lane(&[1.0, 0.0, 0.0, 0.0]));
-        assert!(matches!(st.on_round_complete(), RoundOutcome::Finalize));
+        assert!(matches!(st.on_round_complete(16), RoundOutcome::Finalize));
         st.finalize();
         let a = handle.wait().unwrap().attribution;
         assert!(a.delta > 1.0, "unconverged best effort is still delivered");
@@ -474,15 +513,17 @@ mod tests {
             st.add_lane(&[1.0, 0.0, 0.0, 0.0]);
         }
         assert!(st.add_lane(&[1.0, 0.0, 0.0, 0.0])); // acc 3.0, δ = 1.0 > .51
-        let lanes = match st.on_round_complete() {
-            RoundOutcome::Refine(l) => l,
+        let plans = match st.on_round_complete(1) {
+            RoundOutcome::Refine(p) => p,
             RoundOutcome::Finalize => panic!("round 1 must refine"),
         };
-        assert_eq!(lanes.len(), 2);
+        // chunk = 1: each novel midpoint rides its own plan.
+        assert_eq!(plans.len(), 2);
+        assert!(plans.iter().all(|p| p.len() == 1));
         // Round 2: carried 1.5 + novel 2.0 → δ = 0.5 ≤ target → finalize.
         st.add_lane(&[1.0, 0.0, 0.0, 0.0]);
         assert!(st.add_lane(&[1.0, 0.0, 0.0, 0.0]));
-        assert!(matches!(st.on_round_complete(), RoundOutcome::Finalize));
+        assert!(matches!(st.on_round_complete(1), RoundOutcome::Finalize));
         st.finalize();
         let a = handle.wait().unwrap().attribution;
         assert_eq!(a.rounds, 2);

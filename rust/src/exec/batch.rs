@@ -1,0 +1,542 @@
+//! Batched execution backend for the IG hot path.
+//!
+//! Stage 2 of every explanation is "evaluate a fused point stream": a
+//! list of `(alpha, weight)` points, each a full forward+backward model
+//! pass. Before this module the engines handed the whole stream to
+//! `Model::ig_points`, which walked it one point at a time with fresh
+//! `Vec` allocations per point on a single core. This module is the
+//! substrate that replaces that walk:
+//!
+//! * [`PointBatch`] — one planar, contiguous `points × features` f32
+//!   buffer. [`PointBatch::fill`] fuses the interpolation
+//!   `x′ + α(x − x′)` into the write, so interpolated images are never
+//!   materialized as per-point `Vec`s anywhere in the pipeline.
+//! * [`ScratchArena`] — per-worker (thread-local) reusable scratch for
+//!   the analytic kernel's logits/softmax/gradient intermediates; a
+//!   steady-state worker performs zero per-point heap allocations.
+//! * [`BatchPlan`] / [`BatchOut`] — the chunk-evaluation contract the
+//!   [`Model`](crate::ig::Model) trait's `eval_batch` implements: one
+//!   contiguous run of points in, a chunk-local f64 partial plus the
+//!   per-point target probabilities out.
+//! * [`BatchExec`] — the dispatch policy: evaluate chunks inline
+//!   ([`BatchExec::Sequential`]) or fan them out across the existing
+//!   [`ThreadPool`] ([`BatchExec::parallel`]), with a **deterministic
+//!   ordered reduction** either way.
+//!
+//! # Determinism contract
+//!
+//! [`run_chunks`] shards a point stream into fixed-size chunks
+//! ([`chunk_spans`]), evaluates each chunk into its own f64 partial, and
+//! reduces the chunk partials **in chunk-index order** — regardless of
+//! the order workers finish. Chunk contents, chunk boundaries, and the
+//! reduction order are all pure functions of `(n_points, chunk)`, so for
+//! a fixed chunk size the result is bit-identical at *any* worker count,
+//! including the sequential path (property-tested in
+//! `tests/engine_properties.rs` at worker counts {1, 2, 4, 8}). This
+//! invariant is what keeps the schedule-cache goldens and the Python
+//! parity suite valid no matter how the serving host is provisioned.
+//! Changing `chunk` re-associates the f64 sums and may move attributions
+//! at the ~1e-16 relative scale — see `docs/TUNING.md`.
+
+use std::cell::RefCell;
+use std::sync::Arc;
+
+use anyhow::{anyhow, ensure, Result};
+
+use super::ThreadPool;
+
+/// Default points per execution chunk.
+///
+/// Large enough that chunk-dispatch overhead (one pool task + one f64
+/// reduction per chunk) is negligible next to a chunk's model passes,
+/// small enough that the paper's operating points (m ∈ {16..256}) still
+/// shard across several workers. Mirrored as `igref.BATCH_CHUNK` on the
+/// Python side; the `fig_hotpath` bench justifies the value (see
+/// `docs/TUNING.md` §Execution backend).
+pub const DEFAULT_CHUNK: usize = 64;
+
+/// Split `n` points into contiguous `(start, len)` spans of at most
+/// `chunk` points each (the final span carries the remainder).
+///
+/// This layout is part of the determinism contract: chunk boundaries are
+/// a pure function of `(n, chunk)`, mirrored bit-for-bit by
+/// `igref.chunk_spans` and pinned by shared goldens on both sides.
+pub fn chunk_spans(n: usize, chunk: usize) -> Vec<(usize, usize)> {
+    assert!(chunk >= 1, "chunk must be >= 1");
+    let mut out = Vec::with_capacity(n.div_ceil(chunk));
+    let mut start = 0;
+    while start < n {
+        let len = chunk.min(n - start);
+        out.push((start, len));
+        start += len;
+    }
+    out
+}
+
+/// A planar `points × features` batch of interpolated images: one
+/// contiguous f32 buffer, row `k` holding `x′ + α_k (x − x′)`.
+///
+/// The buffer is reused across fills (capacity only grows), so the
+/// steady-state cost of materializing a batch is the fused interpolation
+/// writes themselves — no per-point allocation, ever.
+#[derive(Debug, Default)]
+pub struct PointBatch {
+    features: usize,
+    rows: usize,
+    buf: Vec<f32>,
+}
+
+impl PointBatch {
+    /// An empty batch (first [`PointBatch::fill`] sizes it).
+    pub fn new() -> PointBatch {
+        PointBatch::default()
+    }
+
+    /// Fill the batch with one row per alpha: `row_k[i] = x′_i + α_k (x_i − x′_i)`.
+    ///
+    /// The interpolation is fused into the buffer write — the exact f32
+    /// expression the scalar reference kernel uses per point, so a filled
+    /// row is bit-identical to the per-point materialization it replaces
+    /// (property-tested in this module).
+    pub fn fill(&mut self, x: &[f32], baseline: &[f32], alphas: &[f32]) {
+        assert_eq!(x.len(), baseline.len(), "endpoint width mismatch");
+        self.features = x.len();
+        self.rows = alphas.len();
+        // resize (not clear+resize): only a grown tail is zero-filled, and
+        // every row is overwritten by the fused interpolation below.
+        self.buf.resize(self.rows * self.features, 0.0);
+        for (row, &a) in self.buf.chunks_mut(self.features.max(1)).zip(alphas) {
+            for ((r, &b), &xv) in row.iter_mut().zip(baseline).zip(x) {
+                *r = b + a * (xv - b);
+            }
+        }
+    }
+
+    /// Row `k` as a flat feature slice.
+    pub fn row(&self, k: usize) -> &[f32] {
+        &self.buf[k * self.features..(k + 1) * self.features]
+    }
+
+    /// Number of filled rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Whether the batch holds no rows.
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    /// Feature width of the filled rows.
+    pub fn features(&self) -> usize {
+        self.features
+    }
+
+    /// The whole planar buffer (`rows × features`, row-major).
+    pub fn as_flat(&self) -> &[f32] {
+        &self.buf[..self.rows * self.features]
+    }
+}
+
+/// One contiguous chunk of a fused point stream, borrowed from the
+/// caller — the unit [`Model::eval_batch`](crate::ig::Model::eval_batch)
+/// evaluates.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPlan<'a> {
+    /// The explained input image (full feature width).
+    pub x: &'a [f32],
+    /// The baseline x′.
+    pub baseline: &'a [f32],
+    /// Interpolation constants of this chunk's points.
+    pub alphas: &'a [f32],
+    /// Quadrature weights (zero weight ⇒ forward-only point).
+    pub weights: &'a [f32],
+    /// The explained class.
+    pub target: usize,
+}
+
+impl BatchPlan<'_> {
+    /// Points in this chunk.
+    pub fn len(&self) -> usize {
+        self.alphas.len()
+    }
+
+    /// Whether the chunk is empty.
+    pub fn is_empty(&self) -> bool {
+        self.alphas.is_empty()
+    }
+}
+
+/// Output of one chunk evaluation: the chunk-local partial attribution
+/// (f64-accumulated in point order) and p(target) at every point.
+#[derive(Debug, Clone)]
+pub struct BatchOut {
+    /// (F,) chunk-local weighted gradient sum.
+    pub partial: Vec<f64>,
+    /// Target-class probability at each of the chunk's points.
+    pub target_probs: Vec<f64>,
+}
+
+/// Per-worker reusable scratch for batched kernels: the planar point
+/// batch plus f64 slots for logits, softmax probabilities, and the
+/// probability-weighted row average the softmax gradient needs.
+///
+/// Access goes through [`ScratchArena::with`], which hands out the
+/// calling thread's arena — one arena per worker thread, reused across
+/// chunks and requests, so a warmed-up worker allocates nothing on the
+/// hot path. Not re-entrant: `with` must not be nested on one thread.
+#[derive(Debug, Default)]
+pub struct ScratchArena {
+    /// Planar interpolated-point buffer.
+    pub batch: PointBatch,
+    /// (C,) per-point logits slot.
+    pub logits: Vec<f64>,
+    /// (C,) per-point softmax slot.
+    pub probs: Vec<f64>,
+    /// (F,) probability-weighted average weight row (softmax gradient).
+    pub wavg: Vec<f64>,
+}
+
+impl ScratchArena {
+    /// Run `f` with the calling thread's arena (created on first use).
+    pub fn with<R>(f: impl FnOnce(&mut ScratchArena) -> R) -> R {
+        thread_local! {
+            static ARENA: RefCell<ScratchArena> = RefCell::new(ScratchArena::default());
+        }
+        ARENA.with(|a| f(&mut a.borrow_mut()))
+    }
+}
+
+/// How a fused point stream is executed: inline on the calling thread,
+/// or sharded across a [`ThreadPool`]. Both paths use the same chunking
+/// and the same ordered reduction, so at equal `chunk` they produce
+/// bit-identical attributions (see the module doc).
+#[derive(Clone)]
+pub enum BatchExec {
+    /// Evaluate chunks inline, in order, on the calling thread.
+    Sequential,
+    /// Fan chunks out across `pool`; results reduce in chunk order.
+    Parallel {
+        /// The worker pool chunks are dispatched on.
+        pool: Arc<ThreadPool>,
+        /// Points per chunk (the work-sharding grain).
+        chunk: usize,
+    },
+}
+
+impl BatchExec {
+    /// The sequential policy (what the public fixed-signature engines use).
+    pub fn sequential() -> BatchExec {
+        BatchExec::Sequential
+    }
+
+    /// Parallel dispatch on `pool` at the default chunk size.
+    pub fn parallel(pool: Arc<ThreadPool>) -> BatchExec {
+        BatchExec::Parallel { pool, chunk: DEFAULT_CHUNK }
+    }
+
+    /// Parallel dispatch with an explicit chunk size (>= 1). Changing the
+    /// chunk size re-associates the f64 reduction — see `docs/TUNING.md`.
+    pub fn parallel_with_chunk(pool: Arc<ThreadPool>, chunk: usize) -> BatchExec {
+        assert!(chunk >= 1, "chunk must be >= 1");
+        BatchExec::Parallel { pool, chunk }
+    }
+
+    /// Points per execution chunk under this policy.
+    pub fn chunk(&self) -> usize {
+        match self {
+            BatchExec::Sequential => DEFAULT_CHUNK,
+            BatchExec::Parallel { chunk, .. } => *chunk,
+        }
+    }
+
+    /// Worker threads this policy can occupy (1 for sequential).
+    pub fn workers(&self) -> usize {
+        match self {
+            BatchExec::Sequential => 1,
+            BatchExec::Parallel { pool, .. } => pool.worker_count(),
+        }
+    }
+}
+
+impl std::fmt::Debug for BatchExec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BatchExec::Sequential => write!(f, "Sequential"),
+            BatchExec::Parallel { pool, chunk } => {
+                write!(f, "Parallel {{ workers: {}, chunk: {} }}", pool.worker_count(), chunk)
+            }
+        }
+    }
+}
+
+/// Shard `n` points into `exec.chunk()`-sized chunks, evaluate each via
+/// `eval(start, len)`, and reduce the chunk outputs with the
+/// deterministic ordered reduction (chunk partials summed in chunk-index
+/// order; per-point probabilities concatenated in stream order).
+///
+/// Under [`BatchExec::Parallel`] chunks run on the pool via
+/// [`ThreadPool::scoped_map`]: a chunk that *panics* fails the whole
+/// evaluation with `Err` after every sibling chunk has settled — the
+/// pool and any concurrent evaluations survive. Under
+/// [`BatchExec::Sequential`] a panic propagates to the caller unchanged
+/// (the pre-batch behaviour); an `Err` from `eval` fails the evaluation
+/// on both paths.
+pub fn run_chunks<E>(exec: &BatchExec, n: usize, features: usize, eval: E) -> Result<BatchOut>
+where
+    E: Fn(usize, usize) -> Result<BatchOut> + Sync,
+{
+    // Deterministic ordered reduction: chunk index order, always.
+    fn reduce(acc: &mut BatchOut, out: BatchOut, features: usize) -> Result<()> {
+        ensure!(out.partial.len() == features, "chunk partial width {} != {features}", out.partial.len());
+        for (a, v) in acc.partial.iter_mut().zip(&out.partial) {
+            *a += v;
+        }
+        acc.target_probs.extend(out.target_probs);
+        Ok(())
+    }
+
+    let spans = chunk_spans(n, exec.chunk());
+    let mut acc =
+        BatchOut { partial: vec![0f64; features], target_probs: Vec::with_capacity(n) };
+    match exec {
+        // Inline: evaluate in order and FAIL FAST — a chunk's Err (e.g. a
+        // dead device) stops the stream before later chunks pay for it.
+        BatchExec::Sequential => {
+            for &(s, l) in &spans {
+                reduce(&mut acc, eval(s, l)?, features)?;
+            }
+        }
+        // Pool: chunks are already in flight together, so all settle
+        // before the first Err surfaces (panics are mapped to Err after
+        // every sibling has been joined — the pool survives).
+        BatchExec::Parallel { pool, .. } => {
+            let outs = pool
+                .scoped_map(spans.len(), |ci| {
+                    let (s, l) = spans[ci];
+                    eval(s, l)
+                })
+                .map_err(|panic| anyhow!("batch chunk panicked: {panic}"))?;
+            for out in outs {
+                reduce(&mut acc, out?, features)?;
+            }
+        }
+    }
+    Ok(acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{self, TestRng};
+
+    #[test]
+    fn chunk_spans_layout() {
+        // Shared goldens with igref.chunk_spans (test_batch_parity.py):
+        // the span layout is part of the cross-language contract.
+        assert_eq!(chunk_spans(0, 64), vec![]);
+        assert_eq!(chunk_spans(1, 64), vec![(0, 1)]);
+        assert_eq!(chunk_spans(64, 64), vec![(0, 64)]);
+        assert_eq!(chunk_spans(65, 64), vec![(0, 64), (64, 1)]);
+        assert_eq!(chunk_spans(257, 64), vec![(0, 64), (64, 64), (128, 64), (192, 64), (256, 1)]);
+        assert_eq!(chunk_spans(7, 3), vec![(0, 3), (3, 3), (6, 1)]);
+    }
+
+    #[test]
+    fn chunk_spans_cover_exactly() {
+        testutil::prop(50, 11, |rng| {
+            let n = rng.range(0, 2000);
+            let chunk = rng.range(1, 129);
+            let spans = chunk_spans(n, chunk);
+            let mut next = 0;
+            for &(s, l) in &spans {
+                assert_eq!(s, next, "spans must be contiguous");
+                assert!(l >= 1 && l <= chunk);
+                next = s + l;
+            }
+            assert_eq!(next, n, "spans must cover the stream exactly");
+        });
+    }
+
+    #[test]
+    fn point_batch_fill_matches_per_point_interpolation() {
+        // The satellite property: the fused planar fill is bit-identical
+        // to the per-point scratch-buffer materialization it replaces.
+        testutil::prop(30, 123, |rng| {
+            let f = rng.range(1, 40);
+            let n = rng.range(0, 20);
+            let x = rng.vec_f32(f, 0.0, 1.0);
+            let b = rng.vec_f32(f, 0.0, 1.0);
+            let alphas = rng.vec_f32(n, 0.0, 1.0);
+            let mut batch = PointBatch::new();
+            batch.fill(&x, &b, &alphas);
+            assert_eq!(batch.rows(), n);
+            assert_eq!(batch.features(), f);
+            for (k, &a) in alphas.iter().enumerate() {
+                let row = batch.row(k);
+                for i in 0..f {
+                    let expect = b[i] + a * (x[i] - b[i]);
+                    assert_eq!(row[i].to_bits(), expect.to_bits(), "row {k} feature {i}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn point_batch_reuse_shrinks_and_grows() {
+        let mut batch = PointBatch::new();
+        let x = vec![1.0f32; 8];
+        let b = vec![0.0f32; 8];
+        batch.fill(&x, &b, &[0.25, 0.5, 0.75]);
+        assert_eq!(batch.rows(), 3);
+        assert_eq!(batch.as_flat().len(), 24);
+        batch.fill(&x, &b, &[0.5]);
+        assert_eq!(batch.rows(), 1);
+        assert_eq!(batch.as_flat(), &[0.5; 8]);
+        assert!(!batch.is_empty());
+        batch.fill(&x, &b, &[]);
+        assert!(batch.is_empty());
+    }
+
+    #[test]
+    fn scratch_arena_is_per_thread_and_reused() {
+        ScratchArena::with(|a| {
+            a.logits.resize(8, 0.0);
+            a.logits[0] = 42.0;
+        });
+        // Same thread: the slot persists (reuse).
+        ScratchArena::with(|a| {
+            assert_eq!(a.logits.len(), 8);
+            assert_eq!(a.logits[0], 42.0);
+        });
+        // Another thread: a fresh arena.
+        std::thread::spawn(|| {
+            ScratchArena::with(|a| assert!(a.logits.is_empty()));
+        })
+        .join()
+        .unwrap();
+    }
+
+    fn toy_eval(start: usize, len: usize) -> Result<BatchOut> {
+        // Per-point contribution i + 1 into a 2-wide partial; probs = alpha index.
+        let mut partial = vec![0f64; 2];
+        let mut probs = Vec::new();
+        for k in start..start + len {
+            partial[0] += (k + 1) as f64;
+            partial[1] += 0.5;
+            probs.push(k as f64);
+        }
+        Ok(BatchOut { partial, target_probs: probs })
+    }
+
+    #[test]
+    fn run_chunks_sequential_reduces_in_order() {
+        let out = run_chunks(&BatchExec::Sequential, 10, 2, toy_eval).unwrap();
+        assert_eq!(out.partial, vec![55.0, 5.0]);
+        assert_eq!(out.target_probs, (0..10).map(|k| k as f64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn run_chunks_empty_stream() {
+        let out = run_chunks(&BatchExec::Sequential, 0, 3, toy_eval).unwrap();
+        assert_eq!(out.partial, vec![0.0; 3]);
+        assert!(out.target_probs.is_empty());
+    }
+
+    #[test]
+    fn run_chunks_parallel_matches_sequential_bitwise() {
+        let mut rng = TestRng::new(7);
+        let contrib: Vec<f64> = (0..200).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let eval = |start: usize, len: usize| -> Result<BatchOut> {
+            let mut partial = vec![0f64; 1];
+            let mut probs = Vec::new();
+            for k in start..start + len {
+                partial[0] += contrib[k];
+                probs.push(contrib[k]);
+            }
+            Ok(BatchOut { partial, target_probs: probs })
+        };
+        for workers in [1usize, 2, 4, 8] {
+            let pool = Arc::new(ThreadPool::new(workers));
+            for chunk in [1usize, 7, 64] {
+                let seq = run_chunks(
+                    &BatchExec::Parallel { pool: pool.clone(), chunk },
+                    contrib.len(),
+                    1,
+                    eval,
+                )
+                .unwrap();
+                // Sequential reference at the SAME chunk size: pin via a
+                // single-worker pool vs inline manual reduction.
+                let mut expect = 0f64;
+                for &(s, l) in &chunk_spans(contrib.len(), chunk) {
+                    let mut local = 0f64;
+                    for k in s..s + l {
+                        local += contrib[k];
+                    }
+                    expect += local;
+                }
+                assert_eq!(seq.partial[0].to_bits(), expect.to_bits(), "workers={workers} chunk={chunk}");
+                assert_eq!(seq.target_probs, contrib, "probs keep stream order");
+            }
+        }
+    }
+
+    #[test]
+    fn run_chunks_parallel_panic_fails_with_err() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let exec = BatchExec::parallel_with_chunk(pool.clone(), 4);
+        let eval = |start: usize, _len: usize| -> Result<BatchOut> {
+            if start == 4 {
+                panic!("poisoned chunk at {start}");
+            }
+            Ok(BatchOut { partial: vec![0.0], target_probs: vec![] })
+        };
+        let err = run_chunks(&exec, 12, 1, eval).unwrap_err().to_string();
+        assert!(err.contains("poisoned chunk"), "{err}");
+        // The pool survives: a fresh evaluation succeeds.
+        let ok = run_chunks(&exec, 12, 1, |_, l| {
+            Ok(BatchOut { partial: vec![l as f64], target_probs: vec![] })
+        })
+        .unwrap();
+        assert_eq!(ok.partial, vec![12.0]);
+    }
+
+    #[test]
+    fn run_chunks_err_from_eval_propagates() {
+        let out = run_chunks(&BatchExec::Sequential, 10, 1, |s, _| {
+            if s >= 64 {
+                unreachable!()
+            }
+            anyhow::bail!("device down")
+        });
+        assert!(out.unwrap_err().to_string().contains("device down"));
+    }
+
+    #[test]
+    fn run_chunks_sequential_fails_fast() {
+        // A failing chunk on the sequential path must stop the stream
+        // immediately: later chunks never pay for a dead backend.
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let calls = AtomicUsize::new(0);
+        let out = run_chunks(&BatchExec::Sequential, 5 * DEFAULT_CHUNK, 1, |_, _| {
+            calls.fetch_add(1, Ordering::SeqCst);
+            anyhow::bail!("device down")
+        });
+        assert!(out.is_err());
+        assert_eq!(calls.load(Ordering::SeqCst), 1, "must stop at the first failing chunk");
+    }
+
+    #[test]
+    fn exec_accessors() {
+        assert_eq!(BatchExec::sequential().chunk(), DEFAULT_CHUNK);
+        assert_eq!(BatchExec::Sequential.workers(), 1);
+        let pool = Arc::new(ThreadPool::new(3));
+        let p = BatchExec::parallel(pool.clone());
+        assert_eq!(p.chunk(), DEFAULT_CHUNK);
+        assert_eq!(p.workers(), 3);
+        let pc = BatchExec::parallel_with_chunk(pool, 8);
+        assert_eq!(pc.chunk(), 8);
+        assert!(format!("{pc:?}").contains("chunk: 8"));
+    }
+}

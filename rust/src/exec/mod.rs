@@ -6,15 +6,21 @@
 //! serving layer is built on:
 //!
 //! * [`ThreadPool`] — fixed worker pool with joinable task handles and
-//!   panic containment (a panicking task poisons only its handle).
+//!   panic containment (a panicking task poisons only its handle), plus
+//!   [`ThreadPool::scoped_map`] for lending stack borrows to workers;
 //! * [`channel::bounded`] — a Condvar-based bounded MPMC channel with
 //!   blocking/backpressure semantics and explicit close.
 //! * [`CancelToken`] — cooperative cancellation shared across threads.
+//! * [`batch`] — the batched IG execution backend: planar point batches,
+//!   per-worker scratch arenas, and deterministic chunked dispatch
+//!   ([`BatchExec`]) over the pool.
 
+pub mod batch;
 pub mod channel;
 mod pool;
 mod token;
 
+pub use batch::BatchExec;
 pub use channel::{bounded, Receiver, RecvError, SendError, Sender};
 pub use pool::{JoinHandle, ThreadPool};
 pub use token::CancelToken;

@@ -81,6 +81,73 @@ impl ThreadPool {
         handles.into_iter().map(|h| h.join()).collect()
     }
 
+    /// Run `f` over `0..n` on the pool, collecting results in index
+    /// order, while **borrowing from the caller's stack frame**.
+    ///
+    /// Unlike [`ThreadPool::parallel_map`], `f` need not be `'static`:
+    /// every task is joined before this function returns — including when
+    /// it unwinds mid-submission — so borrows lent to the workers cannot
+    /// dangle. This is the primitive the batched IG backend
+    /// (`exec::batch::run_chunks`) shards chunk plans on.
+    ///
+    /// Panic containment: a panicking task poisons only this call — the
+    /// first (lowest-index) panic message is returned as `Err` after all
+    /// sibling tasks have settled, and the pool plus any concurrent
+    /// `scoped_map`/`spawn` users keep running.
+    ///
+    /// Deadlock hazard: must not be called from a task already running on
+    /// the same pool (the caller would block on workers it occupies).
+    pub fn scoped_map<T, F>(&self, n: usize, f: F) -> Result<Vec<T>, String>
+    where
+        T: Send + 'static,
+        F: Fn(usize) -> T + Sync,
+    {
+        /// Joins any not-yet-joined handles on drop, so an unwind between
+        /// spawn and join still waits out every task that borrows `f`.
+        struct JoinAll<T>(Vec<Option<JoinHandle<T>>>);
+        impl<T> Drop for JoinAll<T> {
+            fn drop(&mut self) {
+                for h in self.0.iter_mut() {
+                    if let Some(h) = h.take() {
+                        let _ = h.join();
+                    }
+                }
+            }
+        }
+
+        // SAFETY: the only lifetime being erased is the borrow of `f`.
+        // Workers touch `f` exclusively while their task runs; every
+        // task's result slot is filled even on panic (`catch_unwind`
+        // inside `spawn`'s wrapper), so `join` always returns; and
+        // `guard` — declared *after* the `f` parameter, hence dropped
+        // before it — joins every handle before this frame releases the
+        // borrow. `F: Sync` makes the shared reference thread-safe.
+        let f_ref: &(dyn Fn(usize) -> T + Sync) = &f;
+        let f_static: &'static (dyn Fn(usize) -> T + Sync) =
+            unsafe { std::mem::transmute(f_ref) };
+
+        let mut guard = JoinAll(Vec::with_capacity(n));
+        for i in 0..n {
+            guard.0.push(Some(self.spawn(move || f_static(i))));
+        }
+        let mut out = Vec::with_capacity(n);
+        let mut first_panic: Option<String> = None;
+        for slot in guard.0.iter_mut() {
+            match slot.take().expect("each handle joined once").join() {
+                Ok(v) => out.push(v),
+                Err(msg) => {
+                    if first_panic.is_none() {
+                        first_panic = Some(msg);
+                    }
+                }
+            }
+        }
+        match first_panic {
+            None => Ok(out),
+            Some(msg) => Err(msg),
+        }
+    }
+
     /// Number of worker threads in the pool.
     pub fn worker_count(&self) -> usize {
         self.workers.len()
@@ -216,6 +283,62 @@ mod tests {
             }
         } // drop waits for queue drain
         assert_eq!(counter.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn scoped_map_borrows_caller_state() {
+        // The point of scoped_map: the closure borrows non-'static data.
+        let pool = ThreadPool::new(4);
+        let data: Vec<u64> = (0..100).collect();
+        let out = pool.scoped_map(100, |i| data[i] * 2).unwrap();
+        assert_eq!(out, (0..100).map(|i| i * 2).collect::<Vec<_>>());
+        assert_eq!(data.len(), 100, "borrow returned intact");
+    }
+
+    #[test]
+    fn scoped_map_panic_poisons_call_not_pool() {
+        let pool = ThreadPool::new(2);
+        let err = pool
+            .scoped_map(8, |i| {
+                if i == 3 {
+                    panic!("chunk {i} poisoned");
+                }
+                i
+            })
+            .unwrap_err();
+        assert!(err.contains("chunk 3 poisoned"), "{err}");
+        // The pool survives and serves the next call.
+        assert_eq!(pool.scoped_map(4, |i| i + 1).unwrap(), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn scoped_map_sibling_requests_survive_a_panic() {
+        // Two concurrent "requests" share the pool; one has a poisoned
+        // chunk. The poisoned one fails with Err, the sibling completes.
+        let pool = Arc::new(ThreadPool::new(4));
+        let good_pool = pool.clone();
+        let good = std::thread::spawn(move || {
+            let data: Vec<usize> = (0..64).collect();
+            good_pool.scoped_map(64, |i| {
+                std::thread::sleep(Duration::from_micros(200));
+                data[i]
+            })
+        });
+        let bad = pool.scoped_map(16, |i| {
+            if i % 5 == 0 {
+                panic!("boom");
+            }
+            i
+        });
+        assert!(bad.is_err());
+        let good = good.join().unwrap().unwrap();
+        assert_eq!(good, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scoped_map_empty() {
+        let pool = ThreadPool::new(1);
+        assert_eq!(pool.scoped_map(0, |i| i).unwrap(), Vec::<usize>::new());
     }
 
     #[test]

@@ -23,12 +23,13 @@ use std::time::Instant;
 
 use anyhow::{bail, ensure, Result};
 
+use crate::exec::batch::BatchExec;
 use crate::metrics::StageBreakdown;
 
 use super::attribution::Attribution;
 use super::convergence::{delta as delta_fn, ConvergencePolicy};
 use super::engine::{self, IgOptions};
-use super::model::Model;
+use super::model::{eval_points, Model};
 use super::Scheme;
 
 /// Result of an adaptive run.
@@ -112,6 +113,7 @@ pub fn explain_to_threshold(
         initial,
         |s, _| s.refine(),
         |delta, m| delta > policy.delta_th && m * 2 <= cap,
+        &BatchExec::Sequential,
     )?;
 
     let delta = *run.residuals.last().expect("at least one round");
@@ -168,7 +170,8 @@ fn walk_grid(
         let t_sched = t1.elapsed();
 
         let t2 = Instant::now();
-        let out = model.ig_points(x, baseline, &alphas, &weights, probed.target)?;
+        let out =
+            eval_points(model, x, baseline, &alphas, &weights, probed.target, &BatchExec::Sequential)?;
         let t_exec = t2.elapsed();
 
         let sum: f64 = out.partial.iter().sum();

@@ -4,7 +4,9 @@
 
 use anyhow::{ensure, Result};
 
-use super::model::Model;
+use crate::exec::batch::BatchExec;
+
+use super::model::{eval_points, Model};
 use super::schedule::Schedule;
 use super::riemann::Rule;
 
@@ -25,7 +27,7 @@ pub struct PathInfo {
 }
 
 /// Sample the path at `samples+1` uniform points and compute Fig. 3's
-/// series. Uses `Model::ig_points` with zero weights — forward-only cost.
+/// series. Runs the batched backend with zero weights — forward-only cost.
 pub fn path_info(
     model: &dyn Model,
     x: &[f32],
@@ -39,7 +41,7 @@ pub fn path_info(
     let sched = Schedule::uniform(samples, Rule::Trapezoid)?;
     let (alphas_f32, _) = sched.to_f32();
     let zeros = vec![0f32; alphas_f32.len()];
-    let out = model.ig_points(x, baseline, &alphas_f32, &zeros, target)?;
+    let out = eval_points(model, x, baseline, &alphas_f32, &zeros, target, &BatchExec::Sequential)?;
 
     let alphas: Vec<f64> = sched.points.iter().map(|p| p.alpha).collect();
     let probs = out.target_probs;

@@ -3,8 +3,11 @@
 //!
 //! The fixed-m engines are thin orchestrations over [`Model`]: build a
 //! fused [`Schedule`] (coincident boundary points merged, zero-weight
-//! points pruned — see `schedule.rs`), evaluate it via
-//! `Model::ig_points` (which chunks to the executable width), and account
+//! points pruned — see `schedule.rs`), evaluate it through the batched
+//! execution backend (`model::eval_points`: fixed-size chunks, per-chunk
+//! `Model::eval_batch`, deterministic ordered reduction — the `*_exec`
+//! engine variants shard those chunks across the `exec::ThreadPool`
+//! bit-identically), and account
 //! for completeness. `Attribution.steps` is exactly `schedule.len()`, the
 //! true number of gradient (fwd+bwd) model evaluations; forward-only
 //! passes are counted in `probe_passes`. Stage timing is recorded so the
@@ -24,12 +27,13 @@ use std::time::{Duration, Instant};
 
 use anyhow::{ensure, Result};
 
+use crate::exec::batch::{BatchExec, PointBatch};
 use crate::metrics::StageBreakdown;
 
 use super::allocator::Allocation;
 use super::attribution::Attribution;
 use super::convergence::{self, AnytimePolicy};
-use super::model::Model;
+use super::model::{eval_points, Model};
 use super::probe::Probe;
 use super::riemann::Rule;
 use super::schedule::cache::{baseline_id, CacheKey, ProbeMemo, ProbeSignature, ScheduleCache};
@@ -62,12 +66,28 @@ impl Default for IgOptions {
 }
 
 /// Explain `x` against `baseline` (black if `None`), targeting the model's
-/// predicted class.
+/// predicted class. Sequential execution; see [`explain_exec`] for
+/// intra-request parallelism.
 pub fn explain(
     model: &dyn Model,
     x: &[f32],
     baseline: Option<&[f32]>,
     opts: &IgOptions,
+) -> Result<Attribution> {
+    explain_exec(model, x, baseline, None, opts, &BatchExec::Sequential)
+}
+
+/// Explain under an explicit execution policy: `target` pinned or argmax
+/// at the input endpoint, stage 2 dispatched through the batched backend
+/// (`exec` decides inline vs pool-parallel chunk execution; attributions
+/// are bit-identical either way — see `exec::batch`).
+pub fn explain_exec(
+    model: &dyn Model,
+    x: &[f32],
+    baseline: Option<&[f32]>,
+    target: Option<usize>,
+    opts: &IgOptions,
+    exec: &BatchExec,
 ) -> Result<Attribution> {
     let black;
     let baseline = match baseline {
@@ -77,12 +97,14 @@ pub fn explain(
             &black
         }
     };
-    let probs = model.probs(&[x])?;
-    let target = argmax(&probs[0]);
-    explain_with_target(model, x, baseline, target, opts)
+    let target = match target {
+        Some(t) => t,
+        None => argmax(&model.probs(&[x])?[0]),
+    };
+    explain_with_target_exec(model, x, baseline, target, opts, exec)
 }
 
-/// Explain with a pinned target class.
+/// Explain with a pinned target class (sequential execution).
 pub fn explain_with_target(
     model: &dyn Model,
     x: &[f32],
@@ -90,15 +112,38 @@ pub fn explain_with_target(
     target: usize,
     opts: &IgOptions,
 ) -> Result<Attribution> {
+    explain_with_target_exec(model, x, baseline, target, opts, &BatchExec::Sequential)
+}
+
+/// Explain with a pinned target class under an explicit execution policy.
+pub fn explain_with_target_exec(
+    model: &dyn Model,
+    x: &[f32],
+    baseline: &[f32],
+    target: usize,
+    opts: &IgOptions,
+    exec: &BatchExec,
+) -> Result<Attribution> {
     ensure!(x.len() == model.features(), "image width {} != model features {}", x.len(), model.features());
     ensure!(baseline.len() == x.len(), "baseline width mismatch");
     ensure!(target < model.num_classes(), "target {target} out of range");
     ensure!(opts.m >= 1, "m must be >= 1");
 
     match opts.scheme {
-        Scheme::Uniform => uniform_ig(model, x, baseline, target, opts),
-        Scheme::NonUniform { n_int } => nonuniform_ig(model, x, baseline, target, n_int, opts),
+        Scheme::Uniform => uniform_ig(model, x, baseline, target, opts, exec),
+        Scheme::NonUniform { n_int } => nonuniform_ig(model, x, baseline, target, n_int, opts, exec),
     }
+}
+
+/// Coincidence tolerance for recognizing the path endpoints on a fused
+/// schedule. Symmetric by construction: a `0.0 + ε` first point must be
+/// treated exactly like a `1.0 − ε` last point, or an ε-perturbed
+/// schedule double-pays a probe pass at one end only.
+const ENDPOINT_EPS: f64 = 1e-12;
+
+/// Whether `alpha` is (within tolerance) the path endpoint `endpoint`.
+fn at_endpoint(alpha: f64, endpoint: f64) -> bool {
+    (alpha - endpoint).abs() < ENDPOINT_EPS
 }
 
 fn uniform_ig(
@@ -107,6 +152,7 @@ fn uniform_ig(
     baseline: &[f32],
     target: usize,
     opts: &IgOptions,
+    exec: &BatchExec,
 ) -> Result<Attribution> {
     let t0 = Instant::now();
     let schedule = Schedule::uniform(opts.m, opts.rule)?;
@@ -114,7 +160,7 @@ fn uniform_ig(
     let t_sched = t0.elapsed();
 
     let t1 = Instant::now();
-    let out = model.ig_points(x, baseline, &alphas, &weights, target)?;
+    let out = eval_points(model, x, baseline, &alphas, &weights, target, exec)?;
     let t_exec = t1.elapsed();
 
     // Endpoint gap: read off the schedule's own endpoint probabilities
@@ -123,17 +169,20 @@ fn uniform_ig(
     // so the missing endpoint is evaluated directly — a forward-only
     // pass, counted in `probe_passes` and timed under `breakdown.probe`
     // (it is probe-shaped work, and Fig. 6b reads overheads off probe).
+    // Both ends use the same `at_endpoint` tolerance: the old exact
+    // `alpha == 0.0` check at the left end meant a `0.0 + ε` first point
+    // double-paid a probe pass the right end would have absorbed.
     let t2 = Instant::now();
     let first = schedule.points.first().expect("fused schedule is non-empty");
     let last = schedule.points.last().expect("fused schedule is non-empty");
     let mut probe_passes = 0;
-    let p_at_0 = if first.alpha == 0.0 {
+    let p_at_0 = if at_endpoint(first.alpha, 0.0) {
         out.target_probs[0]
     } else {
         probe_passes += 1;
         model.probs(&[baseline])?[0][target]
     };
-    let p_at_1 = if (last.alpha - 1.0).abs() < 1e-12 {
+    let p_at_1 = if at_endpoint(last.alpha, 1.0) {
         out.target_probs[out.target_probs.len() - 1]
     } else {
         probe_passes += 1;
@@ -165,6 +214,16 @@ fn uniform_ig(
     })
 }
 
+/// Materialize the probe-boundary images for `bounds` as one planar
+/// [`PointBatch`] (fused interpolation write, no per-boundary `Vec`) and
+/// return the batch; callers borrow rows for `Model::probs`.
+fn probe_batch(x: &[f32], baseline: &[f32], bounds: &[f64]) -> PointBatch {
+    let alphas_f32: Vec<f32> = bounds.iter().map(|&b| b as f32).collect();
+    let mut batch = PointBatch::new();
+    batch.fill(x, baseline, &alphas_f32);
+    batch
+}
+
 fn nonuniform_ig(
     model: &dyn Model,
     x: &[f32],
@@ -172,6 +231,7 @@ fn nonuniform_ig(
     target: usize,
     n_int: usize,
     opts: &IgOptions,
+    exec: &BatchExec,
 ) -> Result<Attribution> {
     ensure!(n_int >= 1, "n_int must be >= 1");
     ensure!(opts.m >= n_int, "m ({}) must be >= n_int ({n_int})", opts.m);
@@ -179,16 +239,8 @@ fn nonuniform_ig(
     // ---- Stage 1: probe boundary probabilities (forward-only). ----------
     let t0 = Instant::now();
     let bounds = Schedule::probe_boundaries(n_int);
-    let f = x.len();
-    let boundary_imgs: Vec<Vec<f32>> = bounds
-        .iter()
-        .map(|&a| {
-            (0..f)
-                .map(|i| baseline[i] + a as f32 * (x[i] - baseline[i]))
-                .collect()
-        })
-        .collect();
-    let refs: Vec<&[f32]> = boundary_imgs.iter().map(|v| v.as_slice()).collect();
+    let batch = probe_batch(x, baseline, &bounds);
+    let refs: Vec<&[f32]> = (0..batch.rows()).map(|k| batch.row(k)).collect();
     let probe_probs = model.probs(&refs)?;
     let probe = Probe::new(bounds.clone(), probe_probs.iter().map(|p| p[target]).collect())?;
     let t_probe = t0.elapsed();
@@ -203,7 +255,7 @@ fn nonuniform_ig(
 
     // ---- Stage 2: one fused point stream (m + 1 evals for trapezoid). ---
     let t2 = Instant::now();
-    let out = model.ig_points(x, baseline, &alphas, &weights, target)?;
+    let out = eval_points(model, x, baseline, &alphas, &weights, target, exec)?;
     let t_exec = t2.elapsed();
 
     let t3 = Instant::now();
@@ -260,13 +312,8 @@ pub fn probe_path(
     pin: Option<usize>,
 ) -> Result<ProbedPath> {
     let bounds = Schedule::probe_boundaries(n_int);
-    let boundary_imgs: Vec<Vec<f32>> = bounds
-        .iter()
-        .map(|&a| {
-            (0..x.len()).map(|i| baseline[i] + a as f32 * (x[i] - baseline[i])).collect()
-        })
-        .collect();
-    let refs: Vec<&[f32]> = boundary_imgs.iter().map(|v| v.as_slice()).collect();
+    let batch = probe_batch(x, baseline, &bounds);
+    let refs: Vec<&[f32]> = (0..batch.rows()).map(|k| batch.row(k)).collect();
     let probs = model.probs(&refs)?;
     let target = pin.unwrap_or_else(|| argmax(&probs[probs.len() - 1]));
     let probe = Probe::new(bounds.clone(), probs.iter().map(|p| p[target]).collect())?;
@@ -324,6 +371,7 @@ pub(crate) fn refine_loop(
     initial: Schedule,
     mut next_level: impl FnMut(&Schedule, usize) -> Result<Schedule>,
     mut should_refine: impl FnMut(f64, usize) -> bool,
+    exec: &BatchExec,
 ) -> Result<RefineRun> {
     let mut t_sched = Duration::ZERO;
     let mut t_exec = Duration::ZERO;
@@ -334,7 +382,7 @@ pub(crate) fn refine_loop(
     t_sched += t.elapsed();
 
     let t = Instant::now();
-    let out = model.ig_points(x, baseline, &alphas, &weights, target)?;
+    let out = eval_points(model, x, baseline, &alphas, &weights, target, exec)?;
     t_exec += t.elapsed();
 
     let mut partial = out.partial;
@@ -352,7 +400,8 @@ pub(crate) fn refine_loop(
         t_sched += t.elapsed();
 
         let t = Instant::now();
-        let novel_out = model.ig_points(x, baseline, &novel_alphas, &novel_weights, target)?;
+        let novel_out =
+            eval_points(model, x, baseline, &novel_alphas, &novel_weights, target, exec)?;
         t_exec += t.elapsed();
 
         for (acc, nv) in partial.iter_mut().zip(&novel_out.partial) {
@@ -391,6 +440,20 @@ pub fn explain_anytime(
     baseline: Option<&[f32]>,
     opts: &IgOptions,
     policy: &AnytimePolicy,
+) -> Result<Attribution> {
+    explain_anytime_exec(model, x, baseline, opts, policy, &BatchExec::Sequential)
+}
+
+/// [`explain_anytime`] under an explicit execution policy: every round's
+/// point stream (initial schedule and each round's novel midpoints) is
+/// dispatched through the batched backend.
+pub fn explain_anytime_exec(
+    model: &dyn Model,
+    x: &[f32],
+    baseline: Option<&[f32]>,
+    opts: &IgOptions,
+    policy: &AnytimePolicy,
+    exec: &BatchExec,
 ) -> Result<Attribution> {
     let black;
     let baseline = match baseline {
@@ -440,6 +503,7 @@ pub fn explain_anytime(
         initial,
         |s, _| s.refine(),
         |delta, m| policy.should_refine(delta, m),
+        exec,
     )?;
 
     let delta = *run.residuals.last().expect("at least one round");
@@ -490,9 +554,24 @@ pub fn explain_anytime_cached(
     policy: &AnytimePolicy,
     cache: &ScheduleCache,
 ) -> Result<Attribution> {
+    explain_anytime_cached_exec(model, x, baseline, target, opts, policy, cache, &BatchExec::Sequential)
+}
+
+/// [`explain_anytime_cached`] under an explicit execution policy.
+#[allow(clippy::too_many_arguments)]
+pub fn explain_anytime_cached_exec(
+    model: &dyn Model,
+    x: &[f32],
+    baseline: Option<&[f32]>,
+    target: Option<usize>,
+    opts: &IgOptions,
+    policy: &AnytimePolicy,
+    cache: &ScheduleCache,
+    exec: &BatchExec,
+) -> Result<Attribution> {
     let n_int = match opts.scheme {
         Scheme::NonUniform { n_int } => n_int,
-        Scheme::Uniform => return explain_anytime(model, x, baseline, opts, policy),
+        Scheme::Uniform => return explain_anytime_exec(model, x, baseline, opts, policy, exec),
     };
     let black;
     let baseline = match baseline {
@@ -566,6 +645,7 @@ pub fn explain_anytime_cached(
         initial,
         |_, level| cached.level(level).map(|s| (*s).clone()),
         |delta, m| policy.should_refine(delta, m),
+        exec,
     )?;
 
     let delta = *run.residuals.last().expect("at least one round");
@@ -1082,6 +1162,109 @@ mod tests {
         assert!(explain_anytime_cached(&m, &x, None, Some(99), &opts, &policy, &cache).is_err());
         let over = IgOptions { m: 1024, ..Default::default() };
         assert!(explain_anytime_cached(&m, &x, None, None, &over, &policy, &cache).is_err());
+    }
+
+    #[test]
+    fn endpoint_detection_is_symmetric() {
+        // The satellite bugfix: both path ends share one tolerance, so an
+        // ε-perturbed endpoint is recognized on the left exactly like on
+        // the right (the old code compared `alpha == 0.0` exactly).
+        assert!(at_endpoint(0.0, 0.0));
+        assert!(at_endpoint(1e-13, 0.0));
+        assert!(at_endpoint(-1e-13, 0.0));
+        assert!(at_endpoint(1.0, 1.0));
+        assert!(at_endpoint(1.0 - 1e-13, 1.0));
+        assert!(!at_endpoint(1e-9, 0.0));
+        assert!(!at_endpoint(1.0 - 1e-9, 1.0));
+        assert!(!at_endpoint(0.5, 0.0));
+    }
+
+    #[test]
+    fn parallel_engines_bit_identical_to_sequential() {
+        // The engine-level face of the determinism contract: the same
+        // request through `explain_exec` on a pool reproduces the
+        // sequential attribution to the bit, for both schemes.
+        use crate::exec::ThreadPool;
+        let m = saturating_model();
+        let x = input();
+        let pool = std::sync::Arc::new(ThreadPool::new(4));
+        for scheme in [Scheme::Uniform, Scheme::NonUniform { n_int: 4 }] {
+            let opts = IgOptions { scheme, m: 96, ..Default::default() };
+            let seq = explain(&m, &x, None, &opts).unwrap();
+            let par =
+                explain_exec(&m, &x, None, None, &opts, &BatchExec::parallel(pool.clone())).unwrap();
+            assert_eq!(par.target, seq.target);
+            assert_eq!(par.steps, seq.steps);
+            assert_eq!(par.values, seq.values, "{scheme}: parallel must be bit-identical");
+            assert_eq!(par.delta, seq.delta);
+        }
+        // Anytime: every refinement round's stream is dispatched in
+        // parallel; the carried accumulator must still match exactly.
+        let policy = AnytimePolicy::with_max_m(0.0, 64).unwrap();
+        let opts = IgOptions { scheme: Scheme::NonUniform { n_int: 4 }, m: 16, ..Default::default() };
+        let seq = explain_anytime(&m, &x, None, &opts, &policy).unwrap();
+        let par =
+            explain_anytime_exec(&m, &x, None, &opts, &policy, &BatchExec::parallel(pool)).unwrap();
+        assert_eq!(par.values, seq.values);
+        assert_eq!(par.rounds, seq.rounds);
+        assert_eq!(par.residuals, seq.residuals);
+    }
+
+    /// Model whose `eval_batch` panics on any chunk containing an alpha
+    /// above `poison_from` — the poisoned-chunk fault injection.
+    struct PoisonModel<'a> {
+        inner: &'a AnalyticModel,
+        poison_from: f32,
+    }
+
+    impl Model for PoisonModel<'_> {
+        fn features(&self) -> usize {
+            self.inner.features()
+        }
+        fn num_classes(&self) -> usize {
+            self.inner.num_classes()
+        }
+        fn probs(&self, imgs: &[&[f32]]) -> anyhow::Result<Vec<Vec<f64>>> {
+            self.inner.probs(imgs)
+        }
+        fn ig_points(
+            &self,
+            x: &[f32],
+            baseline: &[f32],
+            alphas: &[f32],
+            weights: &[f32],
+            target: usize,
+        ) -> anyhow::Result<crate::ig::model::IgPointsOut> {
+            assert!(
+                alphas.iter().all(|&a| a < self.poison_from),
+                "poisoned chunk: alpha >= {}",
+                self.poison_from
+            );
+            self.inner.ig_points(x, baseline, alphas, weights, target)
+        }
+    }
+
+    #[test]
+    fn poisoned_chunk_fails_request_pool_and_siblings_survive() {
+        // One request hits a panicking chunk mid-stream: it must come
+        // back as Err (not a process abort), and both the pool and a
+        // sibling request running on the same pool must be unaffected.
+        use crate::exec::ThreadPool;
+        let inner = saturating_model();
+        let x = input();
+        let pool = std::sync::Arc::new(ThreadPool::new(4));
+        let exec = BatchExec::parallel_with_chunk(pool.clone(), 16);
+        let opts = IgOptions { scheme: Scheme::Uniform, m: 128, ..Default::default() };
+
+        let poisoned = PoisonModel { inner: &inner, poison_from: 0.5 };
+        let err = explain_exec(&poisoned, &x, None, Some(0), &opts, &exec).unwrap_err();
+        assert!(err.to_string().contains("poisoned chunk"), "{err}");
+
+        // Sibling request on the same pool, healthy model: still served,
+        // and still bit-identical to the sequential path.
+        let ok = explain_exec(&inner, &x, None, None, &opts, &exec).unwrap();
+        let seq = explain(&inner, &x, None, &opts).unwrap();
+        assert_eq!(ok.values, seq.values);
     }
 
     #[test]

@@ -19,9 +19,13 @@
 //! * [`convergence`] — the completeness residual δ (Eq. 3), the
 //!   iso-convergence search protocol (Fig. 5b), and the anytime gate
 //!   (`AnytimePolicy`);
-//! * [`model`] — the [`Model`] abstraction the engine runs against: the
+//! * [`model`] — the [`Model`] abstraction the engine runs against (the
 //!   PJRT-backed model at serving time, a closed-form analytic model in
-//!   tests and coordinator benches;
+//!   tests and coordinator benches) and [`eval_points`], the batched
+//!   stage-2 entry: fixed-size chunks through `Model::eval_batch` with a
+//!   deterministic ordered reduction, optionally sharded across the
+//!   `exec::ThreadPool` ([`crate::exec::BatchExec`]) — bit-identical at
+//!   any worker count;
 //! * [`engine`] — the engines: baseline uniform IG, the paper's
 //!   two-stage non-uniform IG, and the anytime engine
 //!   (`explain_anytime`: incremental refinement with convergence-gated
@@ -47,8 +51,11 @@ pub use allocator::Allocation;
 pub use attribution::Attribution;
 pub use baselines::BaselineKind;
 pub use convergence::{AnytimePolicy, ConvergencePolicy};
-pub use engine::{explain, explain_anytime, explain_anytime_cached, IgOptions};
-pub use model::{AnalyticModel, Model};
+pub use engine::{
+    explain, explain_anytime, explain_anytime_cached, explain_anytime_cached_exec,
+    explain_anytime_exec, explain_exec, IgOptions,
+};
+pub use model::{eval_points, AnalyticModel, Model};
 pub use riemann::Rule;
 pub use schedule::cache::{CacheKey, ProbeSignature, ScheduleCache};
 

@@ -11,13 +11,29 @@
 //!   integrals (logits are exactly linear in α along a black-baseline
 //!   path — the same positive-homogeneity the zero-bias MiniInception
 //!   has, so the path behaviour matches the real model family).
+//!
+//! # Batched evaluation
+//!
+//! The stage-2 hot path goes through [`eval_points`]: the fused point
+//! stream is sharded into fixed-size chunks
+//! ([`exec::batch`](crate::exec::batch)), each chunk evaluated via
+//! [`Model::eval_batch`], and the chunk partials reduced **in chunk
+//! order** — so attributions are bit-identical at any worker count (the
+//! determinism contract the schedule-cache goldens and the Python parity
+//! suite rely on). Models with a native batch kernel ([`AnalyticModel`],
+//! `runtime::PjrtModel`) override `eval_batch`; everything else (test
+//! doubles, ablation models) rides the default shim over
+//! [`Model::ig_points`].
 
 use anyhow::{ensure, Result};
+
+use crate::exec::batch::{self, BatchExec, BatchOut, BatchPlan, ScratchArena};
 
 /// A differentiable classifier the IG engines can drive.
 ///
 /// Implementations must be thread-safe (`Sync`): the coordinator calls
-/// them from worker threads.
+/// them from worker threads, and [`eval_points`] may shard a request's
+/// chunks across the pool.
 pub trait Model: Sync {
     /// Flat input width F the model consumes.
     fn features(&self) -> usize;
@@ -32,7 +48,11 @@ pub trait Model: Sync {
     /// probability at every point.
     ///
     /// Implementations chunk internally to their executable width (zero
-    /// weight ⇒ padding lane ⇒ exactly no contribution).
+    /// weight ⇒ padding lane ⇒ exactly no contribution). The engines do
+    /// not call this directly anymore — they go through [`eval_points`],
+    /// which shards onto [`Model::eval_batch`]; this method remains the
+    /// required building block the default `eval_batch` shim rides on
+    /// (and the convenient whole-stream entry for tests and tools).
     fn ig_points(
         &self,
         x: &[f32],
@@ -41,6 +61,18 @@ pub trait Model: Sync {
         weights: &[f32],
         target: usize,
     ) -> Result<IgPointsOut>;
+
+    /// Evaluate one contiguous chunk of the fused point stream into a
+    /// chunk-local partial (the batched backend's unit of work).
+    ///
+    /// The default shim delegates to [`Model::ig_points`], so existing
+    /// implementations — the engine tests' `Recorder`, the batching
+    /// ablation's batch-1 model — participate in the chunked backend
+    /// unchanged. Backends with a native batch kernel override it.
+    fn eval_batch(&self, plan: &BatchPlan<'_>) -> Result<BatchOut> {
+        let out = self.ig_points(plan.x, plan.baseline, plan.alphas, plan.weights, plan.target)?;
+        Ok(BatchOut { partial: out.partial, target_probs: out.target_probs })
+    }
 }
 
 /// Output of [`Model::ig_points`].
@@ -50,6 +82,45 @@ pub struct IgPointsOut {
     pub partial: Vec<f64>,
     /// Target-class probability at each requested point.
     pub target_probs: Vec<f64>,
+}
+
+/// Evaluate a fused point stream through the batched execution backend —
+/// THE stage-2 entry point every engine uses.
+///
+/// The stream is sharded into `exec.chunk()`-sized chunks
+/// ([`batch::chunk_spans`]), each chunk evaluated via
+/// [`Model::eval_batch`] (inline, or fanned out across the pool under
+/// [`BatchExec::Parallel`]), and the chunk partials reduced in chunk
+/// order. For a fixed chunk size the result is **bit-identical at any
+/// worker count** — see the `exec::batch` module doc for the full
+/// determinism contract. A chunk that panics on the pool fails the
+/// stream with `Err` after its siblings settle; the pool and concurrent
+/// requests survive.
+pub fn eval_points(
+    model: &dyn Model,
+    x: &[f32],
+    baseline: &[f32],
+    alphas: &[f32],
+    weights: &[f32],
+    target: usize,
+    exec: &BatchExec,
+) -> Result<IgPointsOut> {
+    ensure!(
+        x.len() == model.features() && baseline.len() == model.features(),
+        "bad endpoint widths"
+    );
+    ensure!(alphas.len() == weights.len(), "alpha/weight length mismatch");
+    ensure!(target < model.num_classes(), "target {target} out of range");
+    let out = batch::run_chunks(exec, alphas.len(), model.features(), |start, len| {
+        model.eval_batch(&BatchPlan {
+            x,
+            baseline,
+            alphas: &alphas[start..start + len],
+            weights: &weights[start..start + len],
+            target,
+        })
+    })?;
+    Ok(IgPointsOut { partial: out.partial, target_probs: out.target_probs })
 }
 
 /// Closed-form test model: `p = softmax(gain · W · x / F)` with fixed
@@ -119,27 +190,17 @@ impl AnalyticModel {
             })
             .collect()
     }
-}
 
-impl Model for AnalyticModel {
-    fn features(&self) -> usize {
-        self.features
-    }
-
-    fn num_classes(&self) -> usize {
-        self.classes
-    }
-
-    fn probs(&self, imgs: &[&[f32]]) -> Result<Vec<Vec<f64>>> {
-        imgs.iter()
-            .map(|img| {
-                ensure!(img.len() == self.features, "bad image width {}", img.len());
-                Ok(Self::softmax(&self.logits(img)))
-            })
-            .collect()
-    }
-
-    fn ig_points(
+    /// The pre-batch scalar reference kernel: one point at a time, a
+    /// fresh scratch image and gradient `Vec` per point, one global f64
+    /// accumulator — exactly what `ig_points` dispatched before the
+    /// batched backend existed.
+    ///
+    /// Kept public on purpose: it is the oracle the batched kernel's
+    /// property tests compare against (bit-identical within a single
+    /// chunk, ≤ f64-reassociation distance across chunks) and the
+    /// `fig_hotpath` bench's sequential baseline.
+    pub fn ig_points_scalar(
         &self,
         x: &[f32],
         baseline: &[f32],
@@ -171,9 +232,129 @@ impl Model for AnalyticModel {
     }
 }
 
+impl Model for AnalyticModel {
+    fn features(&self) -> usize {
+        self.features
+    }
+
+    fn num_classes(&self) -> usize {
+        self.classes
+    }
+
+    fn probs(&self, imgs: &[&[f32]]) -> Result<Vec<Vec<f64>>> {
+        imgs.iter()
+            .map(|img| {
+                ensure!(img.len() == self.features, "bad image width {}", img.len());
+                Ok(Self::softmax(&self.logits(img)))
+            })
+            .collect()
+    }
+
+    fn ig_points(
+        &self,
+        x: &[f32],
+        baseline: &[f32],
+        alphas: &[f32],
+        weights: &[f32],
+        target: usize,
+    ) -> Result<IgPointsOut> {
+        // The canonical chunked order, sequentially: bit-identical to any
+        // parallel evaluation of the same stream.
+        eval_points(self, x, baseline, alphas, weights, target, &BatchExec::Sequential)
+    }
+
+    /// The batched kernel: planar [`PointBatch`](batch::PointBatch) fill
+    /// (interpolation fused into the write), per-worker scratch arena for
+    /// logits/softmax/gradient intermediates, autovectorizable f32 inner
+    /// loops with f64 accumulation — and zero per-point allocations.
+    ///
+    /// Arithmetic is the scalar reference kernel's, in the same per-point
+    /// order, so a single-chunk stream reproduces
+    /// [`AnalyticModel::ig_points_scalar`] to the bit.
+    fn eval_batch(&self, plan: &BatchPlan<'_>) -> Result<BatchOut> {
+        let f = self.features;
+        let c = self.classes;
+        ensure!(plan.x.len() == f && plan.baseline.len() == f, "bad endpoint widths");
+        ensure!(plan.alphas.len() == plan.weights.len(), "alpha/weight length mismatch");
+        ensure!(plan.target < c, "target {} out of range", plan.target);
+
+        let n = plan.len();
+        let scale = self.gain / f as f64;
+        let mut partial = vec![0f64; f];
+        let mut target_probs = Vec::with_capacity(n);
+        ScratchArena::with(|arena| {
+            // One planar fill for the whole chunk: x′ + α(x − x′) goes
+            // straight into the reused buffer, no per-point image Vec.
+            arena.batch.fill(plan.x, plan.baseline, plan.alphas);
+            arena.logits.resize(c, 0.0);
+            arena.probs.resize(c, 0.0);
+            arena.wavg.resize(f, 0.0);
+
+            for (k, &wgt) in plan.weights.iter().enumerate() {
+                let row = arena.batch.row(k);
+
+                // Logits: f32 products accumulated in f64, class by class
+                // (same addend order as the scalar kernel).
+                for cc in 0..c {
+                    let wrow = &self.w[cc * f..(cc + 1) * f];
+                    let mut dot = 0f64;
+                    for (&wv, &pv) in wrow.iter().zip(row) {
+                        dot += wv as f64 * pv as f64;
+                    }
+                    arena.logits[cc] = self.gain * dot / f as f64;
+                }
+
+                // Softmax in f64, into the reused probs slot.
+                let mx = arena.logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let mut sum = 0f64;
+                for cc in 0..c {
+                    let e = (arena.logits[cc] - mx).exp();
+                    arena.probs[cc] = e;
+                    sum += e;
+                }
+                for p in arena.probs.iter_mut() {
+                    *p /= sum;
+                }
+                target_probs.push(arena.probs[plan.target]);
+
+                if wgt != 0.0 {
+                    // wavg_i = Σ_c p_c W_{c,i}, accumulated class-major so
+                    // the inner loop is a contiguous (vectorizable) sweep;
+                    // per feature the addend order over classes matches
+                    // the scalar kernel's sum exactly.
+                    for v in arena.wavg.iter_mut() {
+                        *v = 0.0;
+                    }
+                    for cc in 0..c {
+                        let p = arena.probs[cc];
+                        let wrow = &self.w[cc * f..(cc + 1) * f];
+                        for (acc, &wv) in arena.wavg.iter_mut().zip(wrow) {
+                            *acc += p * wv as f64;
+                        }
+                    }
+                    // Gradient × (x − x′) fused into the accumulate: the
+                    // scalar kernel's `w · g_i · (x_i − x′_i)` expression,
+                    // without materializing g.
+                    let pt = arena.probs[plan.target];
+                    let trow = &self.w[plan.target * f..(plan.target + 1) * f];
+                    let w64 = wgt as f64;
+                    for i in 0..f {
+                        let g = pt * (trow[i] as f64 - arena.wavg[i]) * scale;
+                        partial[i] += w64 * g * (plan.x[i] - plan.baseline[i]) as f64;
+                    }
+                }
+            }
+        });
+        Ok(BatchOut { partial, target_probs })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::exec::ThreadPool;
+    use crate::testutil::{self, TestRng};
+    use std::sync::Arc;
 
     fn tiny() -> AnalyticModel {
         AnalyticModel::new(8, 3, 42, 6.0)
@@ -278,5 +459,126 @@ mod tests {
         assert!(m.ig_points(&x, &x, &[0.5], &[0.5, 0.5], 0).is_err());
         assert!(m.ig_points(&x, &x, &[0.5], &[0.5], 9).is_err());
         assert!(m.ig_points(&x, &vec![0f32; 4], &[0.5], &[0.5], 0).is_err());
+        assert!(m.ig_points_scalar(&x, &x, &[0.5], &[0.5, 0.5], 0).is_err());
+        assert!(m.ig_points_scalar(&x, &x, &[0.5], &[0.5], 9).is_err());
+    }
+
+    // ---- Batched-kernel properties ------------------------------------
+
+    fn rand_stream(rng: &mut TestRng, n: usize) -> (Vec<f32>, Vec<f32>) {
+        let alphas = rng.vec_f32(n, 0.0, 1.0);
+        let mut weights = rng.vec_f32(n, -0.1, 0.3);
+        // Sprinkle exact zeros: forward-only points must stay free.
+        for k in 0..n {
+            if rng.bool() && k % 5 == 0 {
+                weights[k] = 0.0;
+            }
+        }
+        (alphas, weights)
+    }
+
+    #[test]
+    fn batched_kernel_matches_scalar_bitwise_within_one_chunk() {
+        // A single chunk accumulates per point in the scalar order, so
+        // the batched kernel must reproduce the scalar reference to the
+        // bit (0 ULP) for any stream that fits one chunk.
+        let m = AnalyticModel::new(48, 5, 9, 20.0);
+        testutil::prop(20, 4141, |rng| {
+            let x = rng.vec_f32(48, 0.0, 1.0);
+            let b = rng.vec_f32(48, 0.0, 0.5);
+            let n = rng.range(0, batch::DEFAULT_CHUNK + 1);
+            let (alphas, weights) = rand_stream(rng, n);
+            let target = rng.range(0, 5);
+            let scalar = m.ig_points_scalar(&x, &b, &alphas, &weights, target).unwrap();
+            let batched = m.ig_points(&x, &b, &alphas, &weights, target).unwrap();
+            assert_eq!(batched.target_probs, scalar.target_probs);
+            for i in 0..48 {
+                assert_eq!(
+                    batched.partial[i].to_bits(),
+                    scalar.partial[i].to_bits(),
+                    "feature {i}: {} vs {}",
+                    batched.partial[i],
+                    scalar.partial[i]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn batched_kernel_matches_scalar_across_chunks_to_reassociation() {
+        // Across chunk boundaries the f64 sum re-associates; agreement
+        // stays at round-off scale.
+        let m = AnalyticModel::new(32, 4, 11, 30.0);
+        let mut rng = TestRng::new(77);
+        let x = rng.vec_f32(32, 0.0, 1.0);
+        let b = vec![0f32; 32];
+        let n = 3 * batch::DEFAULT_CHUNK + 17;
+        let (alphas, weights) = rand_stream(&mut rng, n);
+        let scalar = m.ig_points_scalar(&x, &b, &alphas, &weights, 1).unwrap();
+        let batched = m.ig_points(&x, &b, &alphas, &weights, 1).unwrap();
+        assert_eq!(batched.target_probs, scalar.target_probs);
+        testutil::assert_allclose(&batched.partial, &scalar.partial, 1e-11, 1e-14);
+    }
+
+    #[test]
+    fn parallel_eval_points_bit_identical_at_any_worker_count() {
+        // The determinism contract: same chunk size ⇒ same bits, whether
+        // the chunks run inline or on 1/2/4/8 workers.
+        let m = AnalyticModel::new(40, 4, 5, 25.0);
+        let mut rng = TestRng::new(2024);
+        let x = rng.vec_f32(40, 0.0, 1.0);
+        let b = rng.vec_f32(40, 0.0, 0.3);
+        let n = 5 * batch::DEFAULT_CHUNK + 3;
+        let (alphas, weights) = rand_stream(&mut rng, n);
+        let seq = eval_points(&m, &x, &b, &alphas, &weights, 2, &BatchExec::Sequential).unwrap();
+        for workers in [1usize, 2, 4, 8] {
+            let pool = Arc::new(ThreadPool::new(workers));
+            let par =
+                eval_points(&m, &x, &b, &alphas, &weights, 2, &BatchExec::parallel(pool)).unwrap();
+            assert_eq!(par.target_probs, seq.target_probs, "workers={workers}");
+            for i in 0..40 {
+                assert_eq!(
+                    par.partial[i].to_bits(),
+                    seq.partial[i].to_bits(),
+                    "workers={workers} feature {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn eval_batch_default_shim_delegates_to_ig_points() {
+        // A Model that only implements ig_points still serves eval_batch.
+        struct Shim(AnalyticModel);
+        impl Model for Shim {
+            fn features(&self) -> usize {
+                self.0.features()
+            }
+            fn num_classes(&self) -> usize {
+                self.0.num_classes()
+            }
+            fn probs(&self, imgs: &[&[f32]]) -> Result<Vec<Vec<f64>>> {
+                self.0.probs(imgs)
+            }
+            fn ig_points(
+                &self,
+                x: &[f32],
+                baseline: &[f32],
+                alphas: &[f32],
+                weights: &[f32],
+                target: usize,
+            ) -> Result<IgPointsOut> {
+                self.0.ig_points_scalar(x, baseline, alphas, weights, target)
+            }
+        }
+        let m = Shim(tiny());
+        let x = vec![0.7f32; 8];
+        let b = vec![0f32; 8];
+        let plan =
+            BatchPlan { x: &x, baseline: &b, alphas: &[0.25, 0.75], weights: &[0.5, 0.5], target: 1 };
+        let shimmed = m.eval_batch(&plan).unwrap();
+        let direct = m.0.ig_points_scalar(&x, &b, &[0.25, 0.75], &[0.5, 0.5], 1).unwrap();
+        assert_eq!(shimmed.partial, direct.partial);
+        assert_eq!(shimmed.target_probs, direct.target_probs);
     }
 }

@@ -3,7 +3,8 @@
 
 use anyhow::{ensure, Result};
 
-use crate::ig::model::{IgPointsOut, Model};
+use crate::exec::batch::{BatchExec, BatchOut, BatchPlan};
+use crate::ig::model::{eval_points, IgPointsOut, Model};
 
 use super::service::{Arg, ExeKind, RuntimeHandle};
 
@@ -120,20 +121,33 @@ impl Model for PjrtModel {
         weights: &[f32],
         target: usize,
     ) -> Result<IgPointsOut> {
-        ensure!(x.len() == self.features && baseline.len() == self.features, "endpoint width mismatch");
-        ensure!(alphas.len() == weights.len(), "alpha/weight length mismatch");
-        ensure!(target < self.num_classes, "target {target} out of range");
+        // The canonical chunked order, sequentially (the batched backend's
+        // execution chunks are multiples of the device width, so the
+        // device-call sequence is unchanged from the pre-batch path).
+        eval_points(self, x, baseline, alphas, weights, target, &BatchExec::Sequential)
+    }
+
+    /// The device batch kernel: the chunk's point stream packed into
+    /// `igchunk_b16` calls, ragged tails padded with zero-weight lanes
+    /// (exactly no contribution; validated by the kernel tests on both
+    /// sides), f64 accumulation across device chunks in stream order.
+    fn eval_batch(&self, plan: &BatchPlan<'_>) -> Result<BatchOut> {
+        ensure!(
+            plan.x.len() == self.features && plan.baseline.len() == self.features,
+            "endpoint width mismatch"
+        );
+        ensure!(plan.alphas.len() == plan.weights.len(), "alpha/weight length mismatch");
+        ensure!(plan.target < self.num_classes, "target {} out of range", plan.target);
 
         let mut onehot = vec![0f32; self.num_classes];
-        onehot[target] = 1.0;
+        onehot[plan.target] = 1.0;
 
         let mut partial = vec![0f64; self.features];
-        let mut target_probs = Vec::with_capacity(alphas.len());
+        let mut target_probs = Vec::with_capacity(plan.len());
 
-        for (a_chunk, w_chunk) in alphas.chunks(self.chunk).zip(weights.chunks(self.chunk)) {
+        for (a_chunk, w_chunk) in plan.alphas.chunks(self.chunk).zip(plan.weights.chunks(self.chunk))
+        {
             let n = a_chunk.len();
-            // Pad ragged tails with zero-weight lanes (exactly no
-            // contribution; validated by the kernel tests on both sides).
             let mut a = vec![0f32; self.chunk];
             let mut w = vec![0f32; self.chunk];
             a[..n].copy_from_slice(a_chunk);
@@ -142,8 +156,8 @@ impl Model for PjrtModel {
             let outs = self.handle.execute(
                 ExeKind::IgChunk16,
                 vec![
-                    Arg::vec(x.to_vec()),
-                    Arg::vec(baseline.to_vec()),
+                    Arg::vec(plan.x.to_vec()),
+                    Arg::vec(plan.baseline.to_vec()),
                     Arg::vec(a),
                     Arg::vec(w),
                     Arg::vec(onehot.clone()),
@@ -156,10 +170,10 @@ impl Model for PjrtModel {
                 *acc += v as f64;
             }
             for k in 0..n {
-                target_probs.push(probs[k * self.num_classes + target] as f64);
+                target_probs.push(probs[k * self.num_classes + plan.target] as f64);
             }
         }
-        Ok(IgPointsOut { partial, target_probs })
+        Ok(BatchOut { partial, target_probs })
     }
 }
 

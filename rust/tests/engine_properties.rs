@@ -234,3 +234,41 @@ fn n_int_quality_bounded_at_iso_total_cost() {
         "iso-cost quality spread too wide across n_int: {delta_by_n:?}"
     );
 }
+
+#[test]
+fn property_parallel_attribution_bit_identical_at_any_worker_count() {
+    // The batched backend's determinism contract, end-to-end: for random
+    // inputs, schemes, and step counts, the engine's attribution under
+    // pool-parallel chunk dispatch is 0 ULP from the sequential path at
+    // every worker count in {1, 2, 4, 8}.
+    use nuig::exec::{BatchExec, ThreadPool};
+    use std::sync::Arc;
+
+    let m = model();
+    let pools: Vec<Arc<ThreadPool>> =
+        [1usize, 2, 4, 8].iter().map(|&n| Arc::new(ThreadPool::new(n))).collect();
+    testutil::prop(12, 5150, |rng| {
+        let x = rand_input(rng);
+        let steps = rng.range(8, 200);
+        let scheme =
+            if rng.bool() { Scheme::Uniform } else { Scheme::NonUniform { n_int: rng.range(2, 6) } };
+        let opts = IgOptions { scheme, m: steps, ..Default::default() };
+        let seq = ig::explain(&m, &x, None, &opts).unwrap();
+        for pool in &pools {
+            let par =
+                ig::explain_exec(&m, &x, None, None, &opts, &BatchExec::parallel(pool.clone()))
+                    .unwrap();
+            assert_eq!(par.target, seq.target);
+            assert_eq!(par.steps, seq.steps);
+            for (i, (a, b)) in par.values.iter().zip(&seq.values).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "workers={} feature {i}: {a} vs {b}",
+                    pool.worker_count()
+                );
+            }
+            assert_eq!(par.delta.to_bits(), seq.delta.to_bits());
+        }
+    });
+}
