@@ -6,7 +6,7 @@
 //!
 //!     make artifacts && cargo run --release --example serve -- [requests] [workers]
 //!
-//! The run is recorded in EXPERIMENTS.md §End-to-end.
+//! The run is recorded in docs/EXPERIMENTS.md §End-to-end.
 
 use std::time::Instant;
 

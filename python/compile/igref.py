@@ -417,6 +417,47 @@ def chunk_spans(n: int, chunk: int = BATCH_CHUNK) -> List[Tuple[int, int]]:
     return out
 
 
+def ordered_lane_commit(rows, arrival) -> np.ndarray:
+    """Mirror of the Rust serving accumulator
+    (``coordinator::state::Accum``): per-lane f32 partial rows commit
+    into an f64 accumulator in **lane-index order**, regardless of
+    arrival order — rows arriving early park until their index comes up.
+
+    This is the order contract behind the sharded feeder's determinism
+    guarantee: with several feeder workers racing on chunk completion, a
+    request's rows arrive in nondeterministic order, but since every f64
+    addition happens at the same position in the same sequence, the
+    accumulated attribution is bit-identical at any feeder count
+    (property-tested at feeder counts {1, 2, 4} in
+    ``rust/tests/sharded_feeder.rs``; the arrival-permutation invariance
+    is pinned on this mirror by ``tests/test_serving_parity.py``).
+
+    ``rows`` is an ``(n, F)`` f32 array (lane-index order);
+    ``arrival`` is a permutation of ``range(n)`` giving arrival order.
+    """
+    rows = np.asarray(rows, dtype=np.float32)
+    n, f = rows.shape
+    arrival = list(arrival)
+    if sorted(arrival) != list(range(n)):
+        raise ValueError("arrival must be a permutation of range(n)")
+    acc = np.zeros(f, dtype=np.float64)
+    # Park the ROW (as Rust's Accum does — the lane is consumed at
+    # arrival and its row held until its index comes up), keyed by index.
+    parked: dict = {}
+    next_idx = 0
+    for k in arrival:
+        if k == next_idx:
+            acc = acc + rows[k].astype(np.float64)
+            next_idx += 1
+            while next_idx in parked:
+                acc = acc + parked.pop(next_idx).astype(np.float64)
+                next_idx += 1
+        else:
+            parked[k] = rows[k].copy()
+    assert not parked and next_idx == n, "every lane commits exactly once"
+    return acc
+
+
 def _run_points(flat, x, baseline, alphas: np.ndarray, weights: np.ndarray,
                 target: int, chunk: int = 16) -> Tuple[np.ndarray, List[float]]:
     """Evaluate sum_k w_k grad_k (x-x') via the AOT ig_chunk fn, chunked.

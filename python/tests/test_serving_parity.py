@@ -1,0 +1,86 @@
+"""Parity pins for the serving layer's ordered lane commit.
+
+The Rust coordinator scatters per-lane f32 partial rows from gather
+chunks into each request's f64 accumulator. With several feeder workers,
+rows arrive in chunk-completion order — nondeterministic — so the
+accumulator (``coordinator::state::Accum``) commits them in lane-INDEX
+order, parking early arrivals. ``igref.ordered_lane_commit`` mirrors
+that state machine; these tests pin the contract the sharded feeder's
+0-ULP feeder-count guarantee rests on:
+
+  * arrival-permutation invariance: every arrival order produces
+    bit-identical f64 sums (the numpy face of "bit-identical at any
+    feeder count");
+  * the committed order IS plain index order (so the serving round-0
+    accumulation order matches the lane order the schedule fan-out
+    emitted);
+  * adversarial float magnitudes (where f64 addition is maximally
+    non-associative) still commute across arrival orders.
+
+Numpy-only at the function level; importing ``igref`` pulls JAX like the
+rest of the parity suite.
+"""
+
+import numpy as np
+import pytest
+
+from compile import igref
+
+
+def _rows(n: int, f: int, seed: int, spread: float = 1.0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    scale = rng.uniform(-spread, spread, size=(n, 1))
+    return (rng.standard_normal((n, f)) * 10.0 ** scale).astype(np.float32)
+
+
+def test_in_order_commit_is_plain_index_sum():
+    rows = _rows(7, 5, seed=1)
+    got = igref.ordered_lane_commit(rows, range(7))
+    expect = np.zeros(5, dtype=np.float64)
+    for k in range(7):
+        expect = expect + rows[k].astype(np.float64)
+    assert got.tobytes() == expect.tobytes(), "in-order commit == index-order sum, bit-exact"
+
+
+@pytest.mark.parametrize("n,f", [(1, 3), (2, 4), (9, 8), (33, 6)])
+def test_arrival_permutation_invariance(n, f):
+    # The serving determinism property: ANY arrival order commits to
+    # bit-identical f64 sums, because commits happen in index order.
+    rows = _rows(n, f, seed=n * 100 + f)
+    reference = igref.ordered_lane_commit(rows, range(n))
+    rng = np.random.default_rng(7)
+    for _ in range(8):
+        arrival = rng.permutation(n)
+        got = igref.ordered_lane_commit(rows, arrival)
+        assert got.tobytes() == reference.tobytes(), f"arrival {arrival} moved a bit"
+    # Chunk-shaped disorder: two "feeders" finishing out of order.
+    if n > 2:
+        half = n // 2
+        swapped = list(range(half, n)) + list(range(half))
+        got = igref.ordered_lane_commit(rows, swapped)
+        assert got.tobytes() == reference.tobytes()
+
+
+def test_adversarial_magnitudes_still_commute():
+    # Wildly mixed magnitudes maximize f64 non-associativity; index-order
+    # commits must still make arrival order irrelevant.
+    rows = _rows(24, 4, seed=9, spread=12.0)
+    reference = igref.ordered_lane_commit(rows, range(24))
+    got = igref.ordered_lane_commit(rows, reversed(range(24)))
+    assert got.tobytes() == reference.tobytes()
+    # ...while a genuinely different COMMIT order (reversed index sum)
+    # generally lands on different bits — the reason ordering matters.
+    rev = np.zeros(4, dtype=np.float64)
+    for k in reversed(range(24)):
+        rev = rev + rows[k].astype(np.float64)
+    # (Not asserted unequal — reassociation can coincide — but document
+    # the magnitude: the two orders differ at round-off scale at most.)
+    np.testing.assert_allclose(rev, reference, rtol=1e-12, atol=1e-12)
+
+
+def test_rejects_non_permutations():
+    rows = _rows(4, 2, seed=3)
+    with pytest.raises(ValueError):
+        igref.ordered_lane_commit(rows, [0, 1, 1, 2])
+    with pytest.raises(ValueError):
+        igref.ordered_lane_commit(rows, [0, 1])

@@ -78,7 +78,7 @@ fn main() -> anyhow::Result<()> {
     table.print();
     println!(
         "shape: sjf/rr should cut small-request latency vs fifo at ~equal throughput\n\
-         (recorded in EXPERIMENTS.md §Perf)"
+         (recorded in docs/EXPERIMENTS.md §Perf)"
     );
     Ok(())
 }

@@ -75,7 +75,7 @@ pub fn measure<F: FnMut()>(cfg: &BenchConfig, label: &str, mut f: F) -> Measurem
 
 /// A printable results table with fixed columns, plus JSON row export.
 /// Every figure-bench builds one of these; the `reproduce_paper` example
-/// collects the JSON into EXPERIMENTS.md data blocks.
+/// collects the JSON into docs/EXPERIMENTS.md data blocks.
 pub struct Table {
     /// Table heading.
     pub title: String,
@@ -145,7 +145,7 @@ impl Table {
         out
     }
 
-    /// Machine-readable JSON block (one object per row) for EXPERIMENTS.md.
+    /// Machine-readable JSON block (one object per row) for docs/EXPERIMENTS.md.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("table", Json::Str(self.title.clone())),

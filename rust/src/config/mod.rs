@@ -144,6 +144,21 @@ pub struct CoordinatorConfig {
     pub chunk: usize,
     /// Router worker threads (request preparation / reduction).
     pub workers: usize,
+    /// Feeder worker threads (gather-chunk dispatch + scatter). Feeder
+    /// `i` is pinned to device shard `i % devices`; attributions are
+    /// bit-identical at any feeder count (ordered lane commit).
+    pub feeders: usize,
+    /// Device shards the coordinator drives (one device thread each;
+    /// the runtime must be loaded with at least this many —
+    /// `Runtime::load_sharded`). Resident request tensors are broadcast
+    /// to every shard, so per-request resident memory scales with this.
+    pub devices: usize,
+    /// Resident-pool admission bound: live `(x, baseline)` registrations
+    /// per device shard. Requests arriving with the pool at the cap are
+    /// rejected at admission (soft bound — concurrent routers may
+    /// overshoot by `workers − 1` entries). Size it above the in-flight
+    /// request ceiling; see `docs/TUNING.md`.
+    pub resident_cap: usize,
     /// Bounded request-queue capacity (backpressure beyond this).
     pub queue_capacity: usize,
     /// Max microseconds the batcher waits to fill a chunk before
@@ -161,6 +176,12 @@ impl Default for CoordinatorConfig {
         CoordinatorConfig {
             chunk: 16,
             workers: 2,
+            feeders: 1,
+            devices: 1,
+            // Default queue capacity (64 requests) + lane-queue
+            // run-ahead tops out far below this; the cap exists to bound
+            // resident memory when callers raise the queues.
+            resident_cap: 1024,
             queue_capacity: 64,
             batch_wait_us: 200,
             policy: Policy::Fifo,
@@ -202,6 +223,28 @@ impl NuigConfig {
         }
         if self.coordinator.queue_capacity == 0 {
             bail!("coordinator.queue_capacity must be >= 1");
+        }
+        if self.coordinator.feeders == 0 || self.coordinator.devices == 0 {
+            bail!("coordinator.feeders and coordinator.devices must be >= 1");
+        }
+        if self.coordinator.devices > self.coordinator.feeders {
+            bail!(
+                "coordinator.devices ({}) > feeders ({}): a shard without a feeder never \
+                 receives work",
+                self.coordinator.devices,
+                self.coordinator.feeders
+            );
+        }
+        if self.coordinator.resident_cap == 0 {
+            bail!("coordinator.resident_cap must be >= 1");
+        }
+        if self.coordinator.resident_cap < self.coordinator.queue_capacity {
+            bail!(
+                "coordinator.resident_cap ({}) < queue_capacity ({}): admission would reject \
+                 requests the queue admits under steady load",
+                self.coordinator.resident_cap,
+                self.coordinator.queue_capacity
+            );
         }
         let adm = &self.coordinator.admission;
         for (name, tier) in [("tight", &adm.tight), ("standard", &adm.standard), ("thorough", &adm.thorough)] {
@@ -245,6 +288,9 @@ impl NuigConfig {
                 Json::obj(vec![
                     ("chunk", self.coordinator.chunk.into()),
                     ("workers", self.coordinator.workers.into()),
+                    ("feeders", self.coordinator.feeders.into()),
+                    ("devices", self.coordinator.devices.into()),
+                    ("resident_cap", self.coordinator.resident_cap.into()),
                     ("queue_capacity", self.coordinator.queue_capacity.into()),
                     ("batch_wait_us", (self.coordinator.batch_wait_us as usize).into()),
                     ("policy", Json::Str(self.coordinator.policy.to_string())),
@@ -350,6 +396,35 @@ mod tests {
     }
 
     #[test]
+    fn rejects_bad_feeder_and_resident_config() {
+        let mut c = NuigConfig::default();
+        c.coordinator.feeders = 0;
+        assert!(c.validate().is_err());
+        let mut c = NuigConfig::default();
+        c.coordinator.devices = 0;
+        assert!(c.validate().is_err());
+        // A shard without a feeder never receives work.
+        let mut c = NuigConfig::default();
+        c.coordinator.feeders = 2;
+        c.coordinator.devices = 4;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("feeder"), "{err}");
+        // Resident cap must admit at least the request queue.
+        let mut c = NuigConfig::default();
+        c.coordinator.resident_cap = 0;
+        assert!(c.validate().is_err());
+        let mut c = NuigConfig::default();
+        c.coordinator.resident_cap = 8;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("resident_cap"), "{err}");
+        // Valid sharded shape: feeders >= devices, generous pool.
+        let mut c = NuigConfig::default();
+        c.coordinator.feeders = 4;
+        c.coordinator.devices = 2;
+        c.validate().unwrap();
+    }
+
+    #[test]
     fn uniform_scheme_ignores_n_int_constraint() {
         let mut c = NuigConfig::default();
         c.ig.scheme = Scheme::Uniform;
@@ -362,6 +437,12 @@ mod tests {
         let j = NuigConfig::default().to_json();
         assert!(j.get("ig").is_ok());
         assert_eq!(j.get("coordinator").unwrap().get("chunk").unwrap().as_usize().unwrap(), 16);
+        assert_eq!(j.get("coordinator").unwrap().get("feeders").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(j.get("coordinator").unwrap().get("devices").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(
+            j.get("coordinator").unwrap().get("resident_cap").unwrap().as_usize().unwrap(),
+            1024
+        );
         let adm = j.get("coordinator").unwrap().get("admission").unwrap();
         assert_eq!(adm.get("tight").unwrap().get("max_rounds").unwrap().as_usize().unwrap(), 1);
         assert_eq!(adm.get("cache_capacity").unwrap().as_usize().unwrap(), 0);

@@ -1,116 +1,15 @@
-//! Chunk assembly from a stream of per-request [`ChunkPlan`]s.
+//! Feeder-side batching accounting.
 //!
-//! Queue items are chunk plans — contiguous runs of one request's fused
-//! schedule points — not individual lanes, so producers pay one send per
-//! chunk instead of per point. [`assemble`] expands plans into device
-//! lanes as it packs a chunk; a plan that overflows the chunk spills its
-//! tail into the caller's `carry` deque, which the next assembly drains
-//! first (lanes are never dropped or reordered).
-//!
-//! NOTE: the live coordinator feeder does NOT go through this module's
-//! [`assemble`] — it pops lanes from the policy-aware
-//! [`LaneScheduler`](super::scheduler::LaneScheduler), which owns the
-//! same chunk-plan representation internally. `assemble` is the
-//! channel-based assembly for plain-FIFO deployments without a
-//! scheduling policy; it is kept under test so the two consumers of the
-//! chunk-plan stream stay interchangeable. [`BatchStats`] below IS on
-//! the live path (feeder occupancy accounting).
-//!
-//! Policy: take what's immediately available; if the chunk isn't full,
-//! wait up to `batch_wait` for more plans, then dispatch partial. This is
-//! the classic throughput/latency knob — benches sweep it in the batching
-//! ablation. Under saturation chunks are always full, which is where the
-//! paper's GPU batching argument (§V) lives.
-
-use std::collections::VecDeque;
-use std::time::{Duration, Instant};
-
-use crate::exec::channel::Receiver;
-
-use super::state::{ChunkPlan, Lane};
-
-/// Outcome of one assembly attempt.
-pub enum Assembled {
-    /// A chunk of 1..=capacity lanes ready for the device.
-    Chunk(Vec<Lane>),
-    /// Queue closed and drained (carry included) — feeder should exit.
-    Closed,
-}
-
-/// Expand one plan into device lanes: fill `chunk` up to `capacity`,
-/// spill the tail into `carry` in order.
-fn expand(plan: ChunkPlan, capacity: usize, chunk: &mut Vec<Lane>, carry: &mut VecDeque<Lane>) {
-    for &(alpha, weight) in &plan.points {
-        let lane = Lane { state: plan.state.clone(), alpha, weight };
-        if chunk.len() < capacity {
-            chunk.push(lane);
-        } else {
-            carry.push_back(lane);
-        }
-    }
-}
-
-/// Pull chunk plans until up to `capacity` lanes are packed, waiting at
-/// most `wait` to top up a non-empty partial chunk (an empty queue with
-/// an empty carry blocks indefinitely on the first plan — idle feeders
-/// cost nothing). `carry` holds lanes spilled by plans that overflowed a
-/// chunk; it is drained first and refilled as needed, preserving
-/// within-request alpha order across calls.
-pub fn assemble(
-    rx: &Receiver<ChunkPlan>,
-    capacity: usize,
-    wait: Duration,
-    carry: &mut VecDeque<Lane>,
-) -> Assembled {
-    let mut chunk = Vec::with_capacity(capacity);
-    // Leftovers from the previous chunk go first.
-    while chunk.len() < capacity {
-        match carry.pop_front() {
-            Some(lane) => chunk.push(lane),
-            None => break,
-        }
-    }
-
-    // Block for the first plan only when we have nothing at all.
-    if chunk.is_empty() {
-        match rx.recv() {
-            Ok(plan) => expand(plan, capacity, &mut chunk, carry),
-            Err(_) => return Assembled::Closed,
-        }
-    }
-
-    // Opportunistic immediate drain, one plan at a time (a plan may carry
-    // many lanes, so draining greedily by item count would over-spill).
-    while chunk.len() < capacity {
-        match rx.drain_up_to(1).pop() {
-            Some(plan) => expand(plan, capacity, &mut chunk, carry),
-            None => break,
-        }
-    }
-
-    // Bounded top-up wait for a fuller chunk.
-    let deadline = Instant::now() + wait;
-    while chunk.len() < capacity {
-        let now = Instant::now();
-        if now >= deadline {
-            break;
-        }
-        match rx.recv_timeout(deadline - now) {
-            Ok(Some(plan)) => {
-                expand(plan, capacity, &mut chunk, carry);
-                while chunk.len() < capacity {
-                    match rx.drain_up_to(1).pop() {
-                        Some(p) => expand(p, capacity, &mut chunk, carry),
-                        None => break,
-                    }
-                }
-            }
-            Ok(None) => break,           // timed out
-            Err(_) => break,             // closed: dispatch what we have
-        }
-    }
-    Assembled::Chunk(chunk)
-}
+//! Device-chunk assembly itself lives in the policy-aware
+//! [`LaneScheduler`](super::scheduler::LaneScheduler) (the feeders pop
+//! ready-made lane chunks; a channel-based alternate assembler that
+//! duplicated that logic was deleted along with the feeder's
+//! materialized-chunk path — one execution path, one assembler). What
+//! remains here is [`BatchStats`], the occupancy bookkeeping every
+//! dispatched chunk feeds: mean lanes per chunk is the §V
+//! continuous-batching claim made measurable (`mean_occupancy` on
+//! `CoordinatorStats`, the batching ablation, and the `fig_serving`
+//! bench all read it).
 
 /// Occupancy bookkeeping for the batching ablation (Fig. 6-adjacent).
 #[derive(Debug, Default, Clone, Copy)]
@@ -140,243 +39,6 @@ impl BatchStats {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::request::ResponseHandle;
-    use crate::coordinator::state::RequestState;
-    use crate::exec::channel::bounded;
-    use crate::ig::IgOptions;
-    use crate::metrics::StageBreakdown;
-    use std::sync::atomic::AtomicUsize;
-    use std::sync::{Arc, Mutex};
-    use std::time::Instant;
-
-    fn plan(points: &[f32]) -> ChunkPlan {
-        let (tx, _handle) = ResponseHandle::pair(0);
-        // _handle dropped: replies are ignored, fine for batcher tests.
-        let state = Arc::new(RequestState {
-            id: 0,
-            image: Arc::new(vec![0.0; 4]),
-            baseline: Arc::new(vec![0.0; 4]),
-            target: 0,
-            opts: IgOptions::default(),
-            budget: crate::coordinator::request::LatencyBudget::Unbounded,
-            acc: Mutex::new(vec![0.0; 4]),
-            remaining: AtomicUsize::new(points.len().max(1)),
-            steps: points.len().max(1),
-            probe_passes: 0,
-            endpoint_gap: 0.0,
-            breakdown: Mutex::new(StageBreakdown::default()),
-            submitted_at: Instant::now(),
-            queue_wait: Duration::ZERO,
-            reply: tx,
-            completed: std::sync::atomic::AtomicBool::new(false),
-            in_flight: Arc::new(AtomicUsize::new(1)),
-            anytime: None,
-        });
-        ChunkPlan { state, points: points.iter().map(|&a| (a, 1.0)).collect() }
-    }
-
-    fn lane(alpha: f32) -> ChunkPlan {
-        plan(&[alpha])
-    }
-
-    #[test]
-    fn takes_available_immediately() {
-        let (tx, rx) = bounded(32);
-        for i in 0..5 {
-            assert!(tx.send(lane(i as f32)).is_ok());
-        }
-        let mut carry = VecDeque::new();
-        match assemble(&rx, 16, Duration::from_millis(1), &mut carry) {
-            Assembled::Chunk(c) => {
-                assert_eq!(c.len(), 5);
-                assert_eq!(c[0].alpha, 0.0);
-                assert_eq!(c[4].alpha, 4.0);
-            }
-            Assembled::Closed => panic!("closed"),
-        }
-        assert!(carry.is_empty());
-    }
-
-    #[test]
-    fn multi_point_plans_expand_into_lanes() {
-        let (tx, rx) = bounded(32);
-        assert!(tx.send(plan(&[0.0, 0.25, 0.5])).is_ok());
-        assert!(tx.send(plan(&[0.75, 1.0])).is_ok());
-        let mut carry = VecDeque::new();
-        match assemble(&rx, 16, Duration::from_millis(1), &mut carry) {
-            Assembled::Chunk(c) => {
-                let alphas: Vec<f32> = c.iter().map(|l| l.alpha).collect();
-                assert_eq!(alphas, vec![0.0, 0.25, 0.5, 0.75, 1.0]);
-            }
-            Assembled::Closed => panic!("closed"),
-        }
-    }
-
-    #[test]
-    fn caps_at_capacity() {
-        let (tx, rx) = bounded(64);
-        for i in 0..40 {
-            assert!(tx.send(lane(i as f32)).is_ok());
-        }
-        let mut carry = VecDeque::new();
-        match assemble(&rx, 16, Duration::from_millis(1), &mut carry) {
-            Assembled::Chunk(c) => assert_eq!(c.len(), 16),
-            Assembled::Closed => panic!(),
-        }
-        // Next call picks up the rest.
-        match assemble(&rx, 16, Duration::from_millis(1), &mut carry) {
-            Assembled::Chunk(c) => assert_eq!(c.len(), 16),
-            Assembled::Closed => panic!(),
-        }
-    }
-
-    #[test]
-    fn oversized_plan_spills_into_carry_without_loss() {
-        // One 20-point plan against a 16-wide device: the tail spills to
-        // carry and leads the next chunk — order preserved, nothing lost.
-        let (tx, rx) = bounded(8);
-        let alphas: Vec<f32> = (0..20).map(|i| i as f32 / 20.0).collect();
-        assert!(tx.send(plan(&alphas)).is_ok());
-        let mut carry = VecDeque::new();
-        let first = match assemble(&rx, 16, Duration::from_millis(1), &mut carry) {
-            Assembled::Chunk(c) => c,
-            Assembled::Closed => panic!(),
-        };
-        assert_eq!(first.len(), 16);
-        assert_eq!(carry.len(), 4);
-        let second = match assemble(&rx, 16, Duration::from_millis(1), &mut carry) {
-            Assembled::Chunk(c) => c,
-            Assembled::Closed => panic!(),
-        };
-        assert_eq!(second.len(), 4);
-        assert!(carry.is_empty());
-        let got: Vec<f32> =
-            first.iter().chain(second.iter()).map(|l| l.alpha).collect();
-        assert_eq!(got, alphas, "spill must preserve alpha order");
-    }
-
-    #[test]
-    fn waits_to_top_up() {
-        let (tx, rx) = bounded(32);
-        assert!(tx.send(lane(0.0)).is_ok());
-        let t = std::thread::spawn(move || {
-            std::thread::sleep(Duration::from_millis(10));
-            assert!(tx.send(lane(1.0)).is_ok());
-            tx // keep alive until assemble returns
-        });
-        let mut carry = VecDeque::new();
-        match assemble(&rx, 16, Duration::from_millis(100), &mut carry) {
-            Assembled::Chunk(c) => assert!(c.len() >= 2, "{}", c.len()),
-            Assembled::Closed => panic!(),
-        }
-        drop(t.join().unwrap());
-    }
-
-    #[test]
-    fn dispatches_partial_after_wait() {
-        let (tx, rx) = bounded(32);
-        assert!(tx.send(lane(0.0)).is_ok());
-        let t0 = Instant::now();
-        let mut carry = VecDeque::new();
-        match assemble(&rx, 16, Duration::from_millis(20), &mut carry) {
-            Assembled::Chunk(c) => {
-                assert_eq!(c.len(), 1);
-                assert!(t0.elapsed() >= Duration::from_millis(15));
-            }
-            Assembled::Closed => panic!(),
-        }
-    }
-
-    #[test]
-    fn partial_top_up_still_dispatches_at_deadline() {
-        // The deadline top-up path: one plan arrives immediately, one
-        // mid-wait; the deadline then fires with the chunk still partial
-        // (2 of 16) and assemble must dispatch it rather than block for
-        // the full chunk.
-        let (tx, rx) = bounded(32);
-        assert!(tx.send(lane(0.0)).is_ok());
-        let t = std::thread::spawn(move || {
-            std::thread::sleep(Duration::from_millis(10));
-            assert!(tx.send(lane(1.0)).is_ok());
-            tx // keep the channel open: only the deadline can end the wait
-        });
-        let t0 = Instant::now();
-        let mut carry = VecDeque::new();
-        match assemble(&rx, 16, Duration::from_millis(40), &mut carry) {
-            Assembled::Chunk(c) => {
-                assert_eq!(c.len(), 2, "partial chunk with the topped-up lane");
-                let waited = t0.elapsed();
-                assert!(waited >= Duration::from_millis(35), "must wait out the deadline: {waited:?}");
-                assert!(waited < Duration::from_millis(500), "must not block past the deadline");
-            }
-            Assembled::Closed => panic!("channel is open"),
-        }
-        drop(t.join().unwrap());
-    }
-
-    #[test]
-    fn close_during_top_up_dispatches_partial() {
-        // Closing mid-wait must flush the partial chunk immediately, not
-        // hold it until the deadline.
-        let (tx, rx) = bounded(32);
-        assert!(tx.send(lane(0.0)).is_ok());
-        let t = std::thread::spawn(move || {
-            std::thread::sleep(Duration::from_millis(10));
-            assert!(tx.send(lane(1.0)).is_ok());
-            tx.close();
-        });
-        let t0 = Instant::now();
-        let mut carry = VecDeque::new();
-        match assemble(&rx, 16, Duration::from_secs(5), &mut carry) {
-            Assembled::Chunk(c) => {
-                assert_eq!(c.len(), 2);
-                assert!(t0.elapsed() < Duration::from_secs(2), "close must cut the wait short");
-            }
-            Assembled::Closed => panic!("items must drain before Closed"),
-        }
-        t.join().unwrap();
-    }
-
-    #[test]
-    fn closed_empty_reports_closed() {
-        let (tx, rx) = bounded::<ChunkPlan>(4);
-        tx.close();
-        let mut carry = VecDeque::new();
-        assert!(matches!(assemble(&rx, 16, Duration::from_millis(1), &mut carry), Assembled::Closed));
-    }
-
-    #[test]
-    fn closed_with_items_dispatches_then_closes() {
-        let (tx, rx) = bounded(4);
-        assert!(tx.send(lane(0.5)).is_ok());
-        tx.close();
-        let mut carry = VecDeque::new();
-        match assemble(&rx, 16, Duration::from_millis(1), &mut carry) {
-            Assembled::Chunk(c) => assert_eq!(c.len(), 1),
-            Assembled::Closed => panic!("should drain first"),
-        }
-        assert!(matches!(assemble(&rx, 16, Duration::from_millis(1), &mut carry), Assembled::Closed));
-    }
-
-    #[test]
-    fn carry_drains_even_after_close() {
-        // Lanes spilled to carry must still be served once the channel is
-        // closed and drained — Closed only fires with an empty carry.
-        let (tx, rx) = bounded(4);
-        let alphas: Vec<f32> = (0..6).map(|i| i as f32).collect();
-        assert!(tx.send(plan(&alphas)).is_ok());
-        tx.close();
-        let mut carry = VecDeque::new();
-        match assemble(&rx, 4, Duration::from_millis(1), &mut carry) {
-            Assembled::Chunk(c) => assert_eq!(c.len(), 4),
-            Assembled::Closed => panic!(),
-        }
-        match assemble(&rx, 4, Duration::from_millis(1), &mut carry) {
-            Assembled::Chunk(c) => assert_eq!(c.len(), 2, "carry tail dispatched"),
-            Assembled::Closed => panic!("carry must drain before Closed"),
-        }
-        assert!(matches!(assemble(&rx, 4, Duration::from_millis(1), &mut carry), Assembled::Closed));
-    }
 
     #[test]
     fn occupancy_math() {
@@ -385,5 +47,12 @@ mod tests {
         s.record(8);
         assert!((s.occupancy(16) - 0.75).abs() < 1e-12);
         assert_eq!(BatchStats::default().occupancy(16), 0.0);
+    }
+
+    #[test]
+    fn occupancy_zero_capacity_with_zero_chunks() {
+        // The serve CLI prints occupancy unconditionally: zero chunks
+        // must short-circuit before any division, even at capacity 0.
+        assert_eq!(BatchStats::default().occupancy(0), 0.0);
     }
 }

@@ -11,21 +11,32 @@
 //!
 //! ```text
 //!  submit() ─► request queue ─► router workers ─┐ (stage 1: probe +
-//!                                               │  schedule + enqueue)
-//!                  device ◄─ feeder ◄─ lane queue┘   ▲
-//!                    │  igchunk_m16 (16 lanes,       │ anytime: novel
-//!                    │  cross-request)               │ midpoint lanes
-//!                    └─► per-lane partials ─► request accumulators ─►
-//!                        round complete ─► converged? ─┬─► response
-//!                                                      └─► refine ──┘
+//!                    (register resident x/x′ ────┤  schedule + enqueue)
+//!                     once per request)          │
+//!              devices ◄─ feeders ◄─── lane queue┘   ▲
+//!               (×D)  │  (×N, gather-indexed:        │ anytime: novel
+//!                     │  (slot, α, w, target)        │ midpoint lanes
+//!                     │  records — O(chunk) bytes)   │
+//!                     └─► per-lane rows ─► ORDERED request accumulators
+//!                         round complete ─► converged? ─┬─► response
+//!                                                       └─► refine ──┘
 //! ```
+//!
+//! Feeders dispatch **gather-indexed** chunks: per-lane
+//! `(slot, alpha, weight, target)` records referencing request tensors
+//! registered once at admission (`exec::gather`), instead of
+//! materializing `chunk × features` endpoint copies per chunk. Several
+//! feeders run concurrently over a sharded runtime; rows commit into
+//! each request's accumulator in lane-index order
+//! ([`state::Accum`]), so attributions are bit-identical (0 ULP) at any
+//! feeder count.
 //!
 //! Anytime requests (`ExplainRequest::anytime`) add the loop on the
 //! right: when a request's round fully lands, the feeder checks the
 //! completeness residual and either replies or re-enqueues **only the
 //! novel midpoint lanes** of the refined (doubled) schedule — carried
 //! gradients are reused via the exact weight-halving identity, and a
-//! short-converging request exits the batcher early, freeing its device
+//! short-converging request exits the lane queue early, freeing its device
 //! chunk capacity for its neighbours.
 //!
 //! Deadline-aware admission (`ExplainRequest::budget`) sits in front of
@@ -42,10 +53,9 @@
 //!   handle;
 //! * [`state`] — in-flight request state (f64 accumulator, countdown,
 //!   anytime round state machine);
-//! * [`batcher`] — device-chunk assembly from per-request chunk-plan
-//!   streams (plans expand into lanes as chunks pack; overflow carries)
-//!   for policy-less FIFO deployments, plus the feeder's occupancy
-//!   stats; the live feeder pops chunks from [`scheduler`] instead;
+//! * [`batcher`] — the feeders' chunk-occupancy accounting
+//!   (`BatchStats`); chunk assembly itself lives in [`scheduler`], the
+//!   single assembler on the serving path;
 //! * [`server`] — the [`server::Coordinator`]: lifecycle, workers, stats.
 
 pub mod batcher;
@@ -56,4 +66,4 @@ pub mod state;
 
 pub use request::{ExplainRequest, ExplainResponse, LatencyBudget, ResponseHandle};
 pub use scheduler::Policy;
-pub use server::{Coordinator, CoordinatorStats, TierStats};
+pub use server::{Coordinator, CoordinatorStats, FeederStats, TierStats};

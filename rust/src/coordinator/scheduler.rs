@@ -13,7 +13,7 @@
 //!   can starve large requests under sustained load.
 //!
 //! `benches/ablation_batching` and the serve example expose the policy;
-//! EXPERIMENTS.md §Perf records the measured p50/p95 differences.
+//! docs/EXPERIMENTS.md §Perf records the measured p50/p95 differences.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
@@ -96,7 +96,7 @@ pub struct LaneScheduler {
     not_full: Condvar,
 }
 
-/// Chunk-pop outcome (mirrors `batcher::Assembled`).
+/// Chunk-pop outcome.
 pub enum Popped {
     Chunk(Vec<Lane>),
     Closed,
@@ -184,7 +184,7 @@ impl LaneScheduler {
     /// anytime requests × `max_m / 2` lanes beyond what the routers'
     /// `not_full` gate admitted. At the default config (64-request queue,
     /// 24-byte lanes, max_m = 512) that is a few hundred KiB, accepted in
-    /// exchange for converged requests exiting the batcher early.
+    /// exchange for converged requests exiting the lane queue early.
     pub fn push_refill(&self, id: u64, plans: Vec<ChunkPlan>) -> Result<()> {
         let plans: VecDeque<ChunkPlan> = plans.into_iter().filter(|p| !p.is_empty()).collect();
         let points: usize = plans.iter().map(|p| p.len()).sum();
@@ -269,7 +269,8 @@ impl LaneScheduler {
                 // empty: pushes filter them and drained plans pop here).
                 let plan = req.plans.front().expect("non-empty request queue");
                 let (alpha, weight) = plan.points[req.head];
-                out.push(Lane { state: plan.state.clone(), alpha, weight });
+                let lane_idx = plan.base + req.head as u32;
+                out.push(Lane { state: plan.state.clone(), alpha, weight, idx: lane_idx });
                 req.head += 1;
                 req.remaining -= 1;
                 st.total -= 1;
@@ -329,7 +330,7 @@ mod tests {
             target: 0,
             opts: IgOptions::default(),
             budget: crate::coordinator::request::LatencyBudget::Unbounded,
-            acc: StdMutex::new(vec![0.0; 4]),
+            acc: StdMutex::new(crate::coordinator::state::Accum::new(4)),
             remaining: AtomicUsize::new(n),
             steps: n,
             probe_passes: 0,
@@ -341,6 +342,7 @@ mod tests {
             completed: AtomicBool::new(false),
             in_flight: Arc::new(AtomicUsize::new(1)),
             anytime: None,
+            resident: None,
         });
         // Chunk width 3 on purpose: most tests span several plans, so
         // the lane-by-lane consumption across plan boundaries is what
@@ -392,6 +394,26 @@ mod tests {
             Popped::Chunk(c) => {
                 let alphas: Vec<f32> = c.iter().map(|l| l.alpha).collect();
                 assert_eq!(alphas, vec![0.0, 1.0, 2.0, 3.0]);
+            }
+            Popped::Closed => panic!(),
+        }
+    }
+
+    #[test]
+    fn lane_indices_sequential_across_plan_boundaries() {
+        // The ordered-commit key: lanes pop with round-local indices
+        // 0..n in schedule order even though the queue carries 3-point
+        // plans — and interleaving policies keep per-request order.
+        let s = LaneScheduler::new(Policy::RoundRobin, 64);
+        s.push_request(1, lanes(1, 7)).unwrap();
+        s.push_request(2, lanes(2, 7)).unwrap();
+        match s.pop_chunk(14, Duration::from_millis(1)) {
+            Popped::Chunk(c) => {
+                for id in [1u64, 2] {
+                    let idxs: Vec<u32> =
+                        c.iter().filter(|l| l.state.id == id).map(|l| l.idx).collect();
+                    assert_eq!(idxs, (0..7).collect::<Vec<u32>>(), "request {id}");
+                }
             }
             Popped::Closed => panic!(),
         }

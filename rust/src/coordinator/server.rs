@@ -1,4 +1,12 @@
-//! The [`Coordinator`]: lifecycle, router workers, device feeder, stats.
+//! The [`Coordinator`]: lifecycle, router workers, sharded feeder pool,
+//! stats.
+//!
+//! The coordinator is generic over its execution surface
+//! ([`GatherExec`]): production serves over the PJRT runtime
+//! (`Runtime::sharded_backend` — one device thread per shard with
+//! resident request tensors), while tests and the `fig_serving` bench
+//! inject `ig::model::AnalyticExec` and exercise the identical serving
+//! path without artifacts.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -8,6 +16,7 @@ use anyhow::{anyhow, ensure, Context, Result};
 
 use crate::config::{AdmissionConfig, CoordinatorConfig};
 use crate::exec::channel::{bounded, Receiver, Sender};
+use crate::exec::gather::{GatherExec, GatherLane};
 use crate::exec::CancelToken;
 use crate::ig::engine::argmax;
 use crate::ig::probe::Probe;
@@ -15,12 +24,12 @@ use crate::ig::schedule::cache::{baseline_id, CacheKey, ProbeMemo, ScheduleCache
 use crate::ig::schedule::Schedule;
 use crate::ig::Scheme;
 use crate::metrics::{CacheCounters, Counter, Ewma, Histogram, StageBreakdown};
-use crate::runtime::{Arg, ExeKind, Runtime, RuntimeHandle};
+use crate::runtime::Runtime;
 
 use super::batcher::BatchStats;
 use super::request::{ExplainRequest, ExplainResponse, LatencyBudget, ResponseHandle};
 use super::scheduler::{LaneScheduler, Popped};
-use super::state::{AnytimeRounds, ChunkPlan, RequestState, RoundOutcome};
+use super::state::{Accum, AnytimeRounds, ChunkPlan, RequestState, ResidentGuard, RoundOutcome};
 
 /// Per-tier serving statistics (one block per [`LatencyBudget`] tier).
 pub struct TierStats {
@@ -43,6 +52,21 @@ impl TierStats {
             e2e_latency: Histogram::new_latency(),
             warm_admissions: Counter::new(),
         }
+    }
+}
+
+/// Per-feeder dispatch accounting (one block per feeder worker; feeder
+/// `i` drives device shard `i % shards`).
+pub struct FeederStats {
+    /// Device chunks this feeder dispatched.
+    pub chunks: Counter,
+    /// Lanes carried across those chunks.
+    pub lanes: Counter,
+}
+
+impl FeederStats {
+    fn new() -> Self {
+        FeederStats { chunks: Counter::new(), lanes: Counter::new() }
     }
 }
 
@@ -69,6 +93,12 @@ pub struct CoordinatorStats {
     /// Per-tier accounting, indexed by [`LatencyBudget::index`] (use
     /// [`CoordinatorStats::tier`] for named access).
     pub tiers: [TierStats; LatencyBudget::COUNT],
+    /// Per-feeder dispatch accounting, indexed by feeder id (use
+    /// [`CoordinatorStats::feeder`] for bounds-checked access).
+    pub feeders: Vec<FeederStats>,
+    /// Requests rejected at admission because the resident pool was at
+    /// its configured cap.
+    pub resident_rejections: Counter,
     /// Probe-schedule cache counters (shared with the cache when it is
     /// enabled; all zero otherwise).
     pub cache: Arc<CacheCounters>,
@@ -76,7 +106,7 @@ pub struct CoordinatorStats {
 }
 
 impl CoordinatorStats {
-    fn new() -> Self {
+    fn new(feeders: usize) -> Self {
         CoordinatorStats {
             submitted: Counter::new(),
             completed: Counter::new(),
@@ -89,6 +119,8 @@ impl CoordinatorStats {
             // 1..4096 rounds, far beyond any real refinement depth.
             rounds_per_request: Histogram::new(1.0, 1, 12),
             tiers: std::array::from_fn(|_| TierStats::new()),
+            feeders: (0..feeders).map(|_| FeederStats::new()).collect(),
+            resident_rejections: Counter::new(),
             cache: Arc::new(CacheCounters::default()),
             batch: Mutex::new(BatchStats::default()),
         }
@@ -105,6 +137,11 @@ impl CoordinatorStats {
     pub fn tier(&self, tier: LatencyBudget) -> &TierStats {
         &self.tiers[tier.index()]
     }
+
+    /// Per-feeder stats for feeder `i`.
+    pub fn feeder(&self, i: usize) -> &FeederStats {
+        &self.feeders[i]
+    }
 }
 
 struct Submission {
@@ -114,12 +151,12 @@ struct Submission {
     submitted_at: Instant,
 }
 
-/// The explanation server. Owns router workers + the device feeder;
+/// The explanation server. Owns router workers + the feeder pool;
 /// `submit` is thread-safe and applies backpressure via the bounded
 /// request queue.
 pub struct Coordinator {
     cfg: CoordinatorConfig,
-    handle: RuntimeHandle,
+    backend: Arc<dyn GatherExec>,
     req_tx: Sender<Submission>,
     lanes: Arc<LaneScheduler>,
     stats: Arc<CoordinatorStats>,
@@ -130,11 +167,12 @@ pub struct Coordinator {
     in_flight: Arc<AtomicUsize>,
 }
 
-/// Everything a router worker needs per request: queues, device handle,
-/// stats, and the admission machinery (tier policies + schedule cache).
+/// Everything a router worker needs per request: queues, execution
+/// backend, stats, and the admission machinery (tier policies + schedule
+/// cache + resident-pool cap).
 struct RouterCtx {
     lanes: Arc<LaneScheduler>,
-    handle: RuntimeHandle,
+    backend: Arc<dyn GatherExec>,
     stats: Arc<CoordinatorStats>,
     in_flight: Arc<AtomicUsize>,
     admission: AdmissionConfig,
@@ -142,21 +180,54 @@ struct RouterCtx {
     /// Device chunk width — the grain requests' schedules are split into
     /// [`ChunkPlan`]s at.
     chunk: usize,
+    /// Resident-pool admission bound (see `CoordinatorConfig::resident_cap`).
+    resident_cap: usize,
 }
 
 impl Coordinator {
-    /// Start router workers and the device feeder over `runtime`.
+    /// Start router workers and the feeder pool over `runtime`, using
+    /// its first `cfg.devices` device shards (load the runtime with
+    /// [`Runtime::load_sharded`] for `cfg.devices > 1`).
     pub fn start(runtime: &Runtime, cfg: CoordinatorConfig) -> Result<Coordinator> {
-        ensure!(cfg.workers >= 1 && cfg.chunk >= 1, "bad coordinator config");
-        let handle = runtime.handle();
+        let backend = Arc::new(runtime.sharded_backend(cfg.devices)?);
+        Self::start_with_backend(backend, cfg)
+    }
+
+    /// Start over an explicit execution backend — the artifact-free
+    /// entry tests and benches use (`ig::model::AnalyticExec`). The
+    /// backend must expose exactly `cfg.devices` shards so the config
+    /// remains the single source of truth for the feeder→shard spread.
+    pub fn start_with_backend(
+        backend: Arc<dyn GatherExec>,
+        cfg: CoordinatorConfig,
+    ) -> Result<Coordinator> {
+        ensure!(
+            cfg.workers >= 1 && cfg.chunk >= 1 && cfg.feeders >= 1,
+            "bad coordinator config"
+        );
+        ensure!(
+            backend.shards() == cfg.devices,
+            "backend exposes {} shard(s) but cfg.devices = {}",
+            backend.shards(),
+            cfg.devices
+        );
+        // Feeder i is pinned to shard i % devices: with fewer feeders
+        // than devices a shard would be compiled, broadcast-registered,
+        // and then never receive a single chunk — refuse up front.
+        ensure!(
+            cfg.feeders >= cfg.devices,
+            "feeders ({}) < devices ({}): a shard without a feeder never receives work",
+            cfg.feeders,
+            cfg.devices
+        );
         let (req_tx, req_rx) = bounded::<Submission>(cfg.queue_capacity);
         // Lane scheduler sized for a few full requests per worker so
-        // routers can run ahead of the device without unbounded memory.
+        // routers can run ahead of the devices without unbounded memory.
         let lanes = Arc::new(LaneScheduler::new(
             cfg.policy,
             cfg.chunk * 16 * (1 + cfg.workers),
         ));
-        let stats = Arc::new(CoordinatorStats::new());
+        let stats = Arc::new(CoordinatorStats::new(cfg.feeders));
         // The probe-schedule cache shares its counters with the stats
         // snapshot so hit/miss/evict rates are visible without touching
         // the cache's shards.
@@ -179,12 +250,13 @@ impl Coordinator {
             let rx = req_rx.clone();
             let ctx = Arc::new(RouterCtx {
                 lanes: lanes.clone(),
-                handle: handle.clone(),
+                backend: backend.clone(),
                 stats: stats.clone(),
                 in_flight: in_flight.clone(),
                 admission: cfg.admission,
                 cache: cache.clone(),
                 chunk: cfg.chunk,
+                resident_cap: cfg.resident_cap,
             });
             let cancel = cancel.clone();
             threads.push(
@@ -198,20 +270,23 @@ impl Coordinator {
         }
         drop(req_rx);
 
-        // Device feeder: assemble chunks, execute, scatter partials.
-        {
+        // Feeder pool: one worker per cfg.feeders, each pinned to device
+        // shard `i % devices` — chunks from different feeders execute
+        // concurrently on different shards while the ordered lane commit
+        // keeps attributions bit-identical at any feeder count.
+        let shards = backend.shards();
+        for i in 0..cfg.feeders {
             let lanes = lanes.clone();
-            let handle = handle.clone();
+            let backend = backend.clone();
             let stats = stats.clone();
             let chunk = cfg.chunk;
             let wait = Duration::from_micros(cfg.batch_wait_us);
-            let features = handle.features();
-            let classes = handle.num_classes();
+            let shard = i % shards;
             threads.push(
                 std::thread::Builder::new()
-                    .name("nuig-feeder".to_string())
+                    .name(format!("nuig-feeder-{i}"))
                     .spawn(move || {
-                        feeder_loop(&lanes, handle, stats, chunk, wait, features, classes);
+                        feeder_loop(&lanes, backend, stats, i, shard, chunk, wait);
                     })
                     .context("spawning feeder")?,
             );
@@ -219,7 +294,7 @@ impl Coordinator {
 
         Ok(Coordinator {
             cfg,
-            handle,
+            backend,
             req_tx,
             lanes,
             stats,
@@ -234,15 +309,15 @@ impl Coordinator {
     /// Submit a request; blocks only if the request queue is full.
     pub fn submit(&self, req: ExplainRequest) -> Result<ResponseHandle> {
         ensure!(
-            req.image.len() == self.handle.features(),
+            req.image.len() == self.backend.features(),
             "image width {} != model features {}",
             req.image.len(),
-            self.handle.features()
+            self.backend.features()
         );
         if let Some(b) = &req.baseline {
             ensure!(b.len() == req.image.len(), "baseline width mismatch");
         }
-        req.opts_valid(self.handle.num_classes())?;
+        req.opts_valid(self.backend.num_classes())?;
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (reply, handle) = ResponseHandle::pair(id);
         self.stats.submitted.inc();
@@ -265,6 +340,12 @@ impl Coordinator {
     /// Requests submitted but not yet completed/failed.
     pub fn in_flight(&self) -> usize {
         self.in_flight.load(Ordering::Acquire)
+    }
+
+    /// Live resident-pool registrations on the backend (per shard; the
+    /// resident lifecycle is admit → upload → gather → evict-on-drain).
+    pub fn resident_len(&self) -> usize {
+        self.backend.resident_len()
     }
 
     /// Wait until all in-flight requests are done (poll-based; serving
@@ -304,7 +385,7 @@ impl Coordinator {
     fn shutdown_inner(&mut self) {
         self.cancel.cancel();
         self.req_tx.close();
-        // Routers exit when the request queue drains; feeder exits when
+        // Routers exit when the request queue drains; feeders exit when
         // the lane queue closes. Close lanes only after routers joined so
         // in-flight requests still complete.
         let mut routers = Vec::new();
@@ -384,9 +465,10 @@ fn router_loop(rx: Receiver<Submission>, ctx: Arc<RouterCtx>, cancel: CancelToke
 }
 
 fn route_one(sub: Submission, queue_wait: Duration, ctx: &RouterCtx) -> Result<()> {
-    let RouterCtx { lanes, handle, stats, in_flight, admission, cache, chunk } = ctx;
-    let features = handle.features();
-    let classes = handle.num_classes();
+    let RouterCtx { lanes, backend, stats, in_flight, admission, cache, chunk, resident_cap } =
+        ctx;
+    let features = backend.features();
+    let classes = backend.num_classes();
     let Submission { req, reply, id, submitted_at } = sub;
 
     // Pre-state failures reply directly and settle the accounting here;
@@ -398,6 +480,22 @@ fn route_one(sub: Submission, queue_wait: Duration, ctx: &RouterCtx) -> Result<(
         let _ = reply_for_fail.send(Err(e));
         anyhow!("failed")
     };
+
+    // ---- Resident-pool gate, FIRST: a request destined for rejection
+    // must not pay stage-1 device passes on a saturated system. The cap
+    // is a soft bound either way (concurrent routers may overshoot by
+    // `workers − 1`), so checking before the probe loses no accuracy —
+    // registration itself still happens after stage 1, under the same
+    // slot accounting. -----------------------------------------------------
+    if backend.resident_len() >= *resident_cap {
+        stats.resident_rejections.inc();
+        return Err(fail(anyhow!(
+            "resident pool full ({} live entries >= resident_cap {}); raise \
+             coordinator.resident_cap or lower concurrency",
+            backend.resident_len(),
+            resident_cap
+        )));
+    }
 
     // ---- Admission: map the latency tier onto schedule options. ---------
     // Deadline tiers override the request's m and anytime gate with the
@@ -468,32 +566,33 @@ fn route_one(sub: Submission, queue_wait: Duration, ctx: &RouterCtx) -> Result<(
             return Err(fail(anyhow!("n_int {} too large for probe batch", n_int)));
         }
         // PERF: padded lanes cost real compute on CPU-PJRT, so small probes
-        // go through fwd_b1 sequentially (see runtime::PROBE_BATCH_CROSSOVER
-        // and EXPERIMENTS.md §Perf); large ones batch through fwd_b16.
-        let mut probs = vec![0f32; 16 * classes];
+        // go through batch-1 forwards sequentially (see
+        // runtime::PROBE_BATCH_CROSSOVER and docs/EXPERIMENTS.md §Perf);
+        // large ones batch through one padded forward call.
+        let mut probs = vec![0f32; bounds.len() * classes];
         if bounds.len() < crate::runtime::PROBE_BATCH_CROSSOVER {
             for (k, &b) in bounds.iter().enumerate() {
                 let img: Vec<f32> = (0..features)
                     .map(|i| baseline[i] + b as f32 * (req.image[i] - baseline[i]))
                     .collect();
-                let outs = match handle.execute(ExeKind::Fwd1, vec![Arg::mat(img, 1, features)]) {
+                let out = match backend.forward(&img, 1) {
                     Ok(o) => o,
                     Err(e) => return Err(fail(e)),
                 };
-                probs[k * classes..(k + 1) * classes].copy_from_slice(&outs[0]);
+                probs[k * classes..(k + 1) * classes].copy_from_slice(&out[..classes]);
             }
         } else {
-            let mut flat = vec![0f32; 16 * features];
+            let mut flat = vec![0f32; bounds.len() * features];
             for (k, &b) in bounds.iter().enumerate() {
                 for i in 0..features {
                     flat[k * features + i] = baseline[i] + b as f32 * (req.image[i] - baseline[i]);
                 }
             }
-            let outs = match handle.execute(ExeKind::Fwd16, vec![Arg::mat(flat, 16, features)]) {
+            let out = match backend.forward(&flat, bounds.len()) {
                 Ok(o) => o,
                 Err(e) => return Err(fail(e)),
             };
-            probs[..outs[0].len()].copy_from_slice(&outs[0]);
+            probs.copy_from_slice(&out[..bounds.len() * classes]);
         }
         let probs = &probs;
 
@@ -556,6 +655,19 @@ fn route_one(sub: Submission, queue_wait: Duration, ctx: &RouterCtx) -> Result<(
         (target, probe.endpoint_gap(), bounds.len(), schedule, t_probe, t_sched)
     };
 
+    // ---- Resident registration: upload the request's endpoints ONCE;
+    // every later device chunk references them by slot (the request id),
+    // so per-chunk host traffic is O(chunk) lane records instead of
+    // O(chunk × features) endpoint copies. The pool-cap gate already ran
+    // at the top of routing (before stage 1); eviction fires when the
+    // last in-flight reference to the request drops — settlement plus
+    // every queued lane drained — so no live chunk can reference an
+    // evicted slot. -----------------------------------------------------
+    if let Err(e) = backend.register_request(id, &req.image, &baseline) {
+        return Err(fail(e.context("registering resident request tensors")));
+    }
+    let resident = Some(ResidentGuard::new(backend.clone(), id));
+
     // Round-0 lane specs, captured before the schedule moves into the
     // anytime state (which owns it for refinement between rounds).
     let lane_points: Vec<(f32, f32)> =
@@ -575,7 +687,7 @@ fn route_one(sub: Submission, queue_wait: Duration, ctx: &RouterCtx) -> Result<(
         target,
         opts,
         budget,
-        acc: Mutex::new(vec![0f64; features]),
+        acc: Mutex::new(Accum::new(features)),
         remaining: AtomicUsize::new(steps0),
         steps: steps0,
         probe_passes,
@@ -591,6 +703,7 @@ fn route_one(sub: Submission, queue_wait: Duration, ctx: &RouterCtx) -> Result<(
         completed: std::sync::atomic::AtomicBool::new(false),
         in_flight: in_flight.clone(),
         anytime,
+        resident,
     });
 
     // ---- Fan out chunk plans (atomically, so the scheduler sees the
@@ -617,7 +730,7 @@ fn route_one(sub: Submission, queue_wait: Duration, ctx: &RouterCtx) -> Result<(
 }
 
 // ---------------------------------------------------------------------------
-// Feeder: chunk assembly + device execution + scatter.
+// Feeders: gather-chunk dispatch + scatter, one worker per shard slot.
 // ---------------------------------------------------------------------------
 
 /// Book a request's completion: stamp the execute time, send the reply,
@@ -646,14 +759,26 @@ fn finish_request(stats: &Arc<CoordinatorStats>, state: &Arc<RequestState>) {
     }
 }
 
+/// One feeder worker: pop cross-request chunks off the shared lane
+/// scheduler, dispatch them as **gather-indexed plans** on this feeder's
+/// device shard, and scatter the per-lane rows into each request's
+/// ordered accumulator.
+///
+/// The feeder moves `O(chunk)` bytes per chunk — one [`GatherLane`]
+/// record per lane; the `chunk × features` endpoint staging happens once
+/// on the backend from its resident pool (and in PJRT's case, into one
+/// reused device-thread buffer). Multiple feeders race on chunk
+/// completion, but rows commit in lane-index order
+/// (`RequestState::add_lane`), so attributions are bit-identical at any
+/// feeder count.
 fn feeder_loop(
     scheduler: &LaneScheduler,
-    handle: RuntimeHandle,
+    backend: Arc<dyn GatherExec>,
     stats: Arc<CoordinatorStats>,
+    feeder: usize,
+    shard: usize,
     chunk: usize,
     wait: Duration,
-    features: usize,
-    classes: usize,
 ) {
     loop {
         let lanes = match scheduler.pop_chunk(chunk, wait) {
@@ -665,39 +790,26 @@ fn feeder_loop(
         }
         stats.batch_occupancy.observe(lanes.len() as f64 / chunk as f64);
         stats.batch.lock().unwrap().record(lanes.len());
+        stats.feeders[feeder].chunks.inc();
+        stats.feeders[feeder].lanes.add(lanes.len() as u64);
 
-        // Build the igchunk_m16 args: per-lane xs/baselines/onehots, with
-        // zero-weight padding for unused lanes.
-        let mut xs = vec![0f32; chunk * features];
-        let mut bs = vec![0f32; chunk * features];
-        let mut alphas = vec![0f32; chunk];
-        let mut weights = vec![0f32; chunk];
-        let mut onehots = vec![0f32; chunk * classes];
-        for (k, lane) in lanes.iter().enumerate() {
-            xs[k * features..(k + 1) * features].copy_from_slice(&lane.state.image);
-            bs[k * features..(k + 1) * features].copy_from_slice(&lane.state.baseline);
-            alphas[k] = lane.alpha;
-            weights[k] = lane.weight;
-            onehots[k * classes + lane.state.target] = 1.0;
-        }
+        // The gather plan: per-lane records referencing the resident
+        // endpoint tensors registered at admission — no image/baseline
+        // copies here, ever.
+        let recs: Vec<GatherLane> = lanes
+            .iter()
+            .map(|l| GatherLane {
+                slot: l.state.id,
+                alpha: l.alpha,
+                weight: l.weight,
+                target: l.state.target,
+            })
+            .collect();
 
-        let result = handle.execute(
-            ExeKind::IgChunkMulti16,
-            vec![
-                Arg::mat(xs, chunk, features),
-                Arg::mat(bs, chunk, features),
-                Arg::vec(alphas),
-                Arg::vec(weights),
-                Arg::mat(onehots, chunk, classes),
-            ],
-        );
-
-        match result {
-            Ok(outs) => {
-                let partials = &outs[0];
+        match backend.eval_gather(shard, &recs) {
+            Ok(out) => {
                 for (k, lane) in lanes.iter().enumerate() {
-                    let row = &partials[k * features..(k + 1) * features];
-                    if !lane.state.add_lane(row) {
+                    if !lane.state.add_lane(lane.idx, out.row(k)) {
                         continue;
                     }
                     // Last lane of this request's round: finalize, or
@@ -726,7 +838,8 @@ fn feeder_loop(
                 // Device failure: fail every distinct request in the chunk.
                 // RequestState::fail is idempotent and reports whether THIS
                 // call settled the request, so one spanning several failed
-                // chunks settles — and is counted — exactly once.
+                // chunks — possibly on different feeders — settles, and is
+                // counted, exactly once.
                 let msg = format!("device execution failed: {e}");
                 let mut seen = std::collections::BTreeSet::new();
                 for lane in &lanes {
@@ -746,7 +859,7 @@ mod tests {
     use std::sync::atomic::AtomicBool;
 
     fn stats() -> Arc<CoordinatorStats> {
-        Arc::new(CoordinatorStats::new())
+        Arc::new(CoordinatorStats::new(1))
     }
 
     fn mk_state(
@@ -764,7 +877,7 @@ mod tests {
             target: 0,
             opts: IgOptions::default(),
             budget,
-            acc: Mutex::new(vec![0.0; 4]),
+            acc: Mutex::new(Accum::new(4)),
             remaining: AtomicUsize::new(n_lanes),
             steps: n_lanes,
             probe_passes: 0,
@@ -776,6 +889,7 @@ mod tests {
             completed: AtomicBool::new(false),
             in_flight,
             anytime,
+            resident: None,
         });
         (st, handle)
     }
@@ -789,7 +903,7 @@ mod tests {
         s.batch.lock().unwrap().record(8);
         assert!((s.mean_occupancy(16) - 0.5).abs() < 1e-12);
         // Degenerate chunk width with zero chunks: still 0.0, no division.
-        assert_eq!(CoordinatorStats::new().mean_occupancy(0), 0.0);
+        assert_eq!(CoordinatorStats::new(1).mean_occupancy(0), 0.0);
     }
 
     #[test]
@@ -806,11 +920,23 @@ mod tests {
     }
 
     #[test]
+    fn feeder_stats_sized_per_feeder() {
+        let s = CoordinatorStats::new(3);
+        assert_eq!(s.feeders.len(), 3);
+        s.feeders[2].chunks.inc();
+        s.feeders[2].lanes.add(9);
+        assert_eq!(s.feeder(2).chunks.get(), 1);
+        assert_eq!(s.feeder(2).lanes.get(), 9);
+        assert_eq!(s.feeder(0).chunks.get(), 0);
+        assert_eq!(s.resident_rejections.get(), 0);
+    }
+
+    #[test]
     fn finish_request_counts_completion_exactly_once() {
         let s = stats();
         let in_flight = Arc::new(AtomicUsize::new(1));
         let (st, handle) = mk_state(1, 0.5, LatencyBudget::Standard, None, in_flight.clone());
-        assert!(st.add_lane(&[0.5, 0.0, 0.0, 0.0]));
+        assert!(st.add_lane(0, &[0.5, 0.0, 0.0, 0.0]));
         finish_request(&s, &st);
         finish_request(&s, &st); // double finish: the later call is a no-op
         assert_eq!(s.completed.get(), 1);
@@ -829,7 +955,7 @@ mod tests {
         let (st, handle) = mk_state(1, 0.5, LatencyBudget::Tight, None, in_flight.clone());
         assert!(st.fail(anyhow!("device down")));
         s.failed.inc(); // what the feeder does when fail() reports true
-        st.add_lane(&[0.5, 0.0, 0.0, 0.0]);
+        st.add_lane(0, &[0.5, 0.0, 0.0, 0.0]);
         finish_request(&s, &st); // late round completion after the failure
         assert_eq!(s.completed.get(), 0, "a failed request must not also complete");
         assert_eq!(s.failed.get(), 1);
@@ -855,9 +981,9 @@ mod tests {
         };
         let (st, handle) =
             mk_state(3, 10.0, LatencyBudget::Thorough, Some(any), in_flight.clone());
-        st.add_lane(&[1.0, 0.0, 0.0, 0.0]);
-        st.add_lane(&[1.0, 0.0, 0.0, 0.0]);
-        assert!(st.add_lane(&[1.0, 0.0, 0.0, 0.0]));
+        st.add_lane(0, &[1.0, 0.0, 0.0, 0.0]);
+        st.add_lane(1, &[1.0, 0.0, 0.0, 0.0]);
+        assert!(st.add_lane(2, &[1.0, 0.0, 0.0, 0.0]));
         let plans = match st.on_round_complete(16) {
             RoundOutcome::Refine(p) => p,
             RoundOutcome::Finalize => panic!("unconverged round must refine"),

@@ -1,17 +1,101 @@
 //! In-flight request state: the accumulator each device lane writes into,
 //! the countdown that triggers round completion, and the anytime
 //! refinement state machine (finalize vs refine-and-re-enqueue).
+//!
+//! With several feeder workers, a request's lane rows land in chunk-
+//! completion order — nondeterministic across runs and feeder counts.
+//! The accumulator therefore commits rows in **lane-index order**
+//! ([`Accum`]): in-order rows fold into the f64 sum immediately,
+//! out-of-order rows park until their index comes up. Since every f64
+//! addition then happens in the same order no matter how chunks raced,
+//! attributions are bit-identical (0 ULP) at any feeder count — the
+//! serving-layer face of `exec::batch`'s ordered-reduction contract.
+//! Parking is bounded by dispatch disorder (≈ feeders × chunk rows), not
+//! by the round size: the lane scheduler emits each request's lanes in
+//! index order, so only chunk-completion races park rows.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::exec::channel::Sender;
+use crate::exec::gather::GatherExec;
 use crate::ig::schedule::Schedule;
 use crate::ig::{AnytimePolicy, Attribution, IgOptions};
 use crate::metrics::StageBreakdown;
 
 use super::request::{ExplainResponse, LatencyBudget};
+
+/// RAII eviction of a request's resident endpoint tensors: dropped when
+/// the last in-flight reference to the [`RequestState`] goes away
+/// (settlement + every queued lane drained), so no live chunk can ever
+/// reference an evicted slot — even when a failure settles the request
+/// while later chunks of it are still queued.
+pub struct ResidentGuard {
+    backend: Arc<dyn GatherExec>,
+    slot: u64,
+}
+
+impl ResidentGuard {
+    /// Guard `slot` (already registered with `backend`).
+    pub fn new(backend: Arc<dyn GatherExec>, slot: u64) -> ResidentGuard {
+        ResidentGuard { backend, slot }
+    }
+}
+
+impl Drop for ResidentGuard {
+    fn drop(&mut self) {
+        self.backend.evict_request(self.slot);
+    }
+}
+
+/// The ordered lane accumulator (see the module doc): f64 values plus
+/// the in-order commit cursor and the parked out-of-order rows.
+pub struct Accum {
+    /// (F,) f64 attribution values committed so far.
+    pub values: Vec<f64>,
+    /// Next lane index (round-local) to commit.
+    next: u32,
+    /// Rows that arrived ahead of their turn, keyed by lane index.
+    parked: BTreeMap<u32, Vec<f32>>,
+}
+
+impl Accum {
+    /// A zeroed accumulator of `features` width.
+    pub fn new(features: usize) -> Accum {
+        Accum { values: vec![0f64; features], next: 0, parked: BTreeMap::new() }
+    }
+
+    fn commit(values: &mut [f64], row: &[f32]) {
+        debug_assert_eq!(values.len(), row.len());
+        for (a, &p) in values.iter_mut().zip(row) {
+            *a += p as f64;
+        }
+    }
+
+    /// Fold `row` in at lane index `idx`, committing any parked rows
+    /// that become in-order.
+    fn add(&mut self, idx: u32, row: &[f32]) {
+        if idx == self.next {
+            Self::commit(&mut self.values, row);
+            self.next += 1;
+            while let Some(parked) = self.parked.remove(&self.next) {
+                Self::commit(&mut self.values, &parked);
+                self.next += 1;
+            }
+        } else {
+            self.parked.insert(idx, row.to_vec());
+        }
+    }
+
+    /// Start a new round: reset the cursor (all prior rows committed).
+    fn reset_round(&mut self) {
+        debug_assert!(self.parked.is_empty(), "round completed with parked rows");
+        self.next = 0;
+        self.parked.clear();
+    }
+}
 
 /// Mutable anytime-refinement state for one request (present only when
 /// the request opted in via `ExplainRequest::anytime`).
@@ -56,11 +140,12 @@ pub struct RequestState {
     /// The latency tier this request was admitted under (per-tier
     /// accounting at completion).
     pub budget: LatencyBudget,
-    /// f64 attribution accumulator (lanes add under the mutex; adds are
-    /// ~3k doubles per lane — negligible next to a device execution).
-    /// On refinement the whole vector is scaled by
-    /// `Schedule::REFINE_CARRY` (carried weights halve exactly).
-    pub acc: Mutex<Vec<f64>>,
+    /// Ordered f64 attribution accumulator (lanes commit under the
+    /// mutex in lane-index order — see [`Accum`]; adds are ~3k doubles
+    /// per lane — negligible next to a device execution). On refinement
+    /// the whole vector is scaled by `Schedule::REFINE_CARRY` (carried
+    /// weights halve exactly).
+    pub acc: Mutex<Accum>,
     /// Gradient-point lanes still outstanding in the current round.
     pub remaining: AtomicUsize,
     /// Round-0 gradient evaluations — the initial fused schedule's point
@@ -86,6 +171,10 @@ pub struct RequestState {
     pub in_flight: Arc<AtomicUsize>,
     /// Anytime refinement state; `None` = single fixed-m round.
     pub anytime: Option<AnytimeRounds>,
+    /// Resident-tensor eviction guard: fires when the last in-flight
+    /// reference to this state drops. `None` in unit tests and for
+    /// backends without residency.
+    pub resident: Option<ResidentGuard>,
 }
 
 impl RequestState {
@@ -98,17 +187,18 @@ impl RequestState {
         true
     }
 
-    /// Add one lane's partial row; returns `true` if this was the last
-    /// outstanding lane of the current round (caller must then call
+    /// Add one lane's partial row at round-local lane index `idx`;
+    /// returns `true` if this was the last outstanding lane of the
+    /// current round (caller must then call
     /// [`RequestState::on_round_complete`] and act on the outcome).
-    pub fn add_lane(&self, partial: &[f32]) -> bool {
-        {
-            let mut acc = self.acc.lock().unwrap();
-            debug_assert_eq!(acc.len(), partial.len());
-            for (a, &p) in acc.iter_mut().zip(partial) {
-                *a += p as f64;
-            }
-        }
+    ///
+    /// Rows commit into the f64 accumulator in **lane-index order**
+    /// regardless of arrival order (see [`Accum`]), so the final sum is
+    /// bit-identical at any feeder count. The final arrival necessarily
+    /// drains every parked row (all indices are then present), so a
+    /// `true` return implies the accumulator is fully committed.
+    pub fn add_lane(&self, idx: u32, partial: &[f32]) -> bool {
+        self.acc.lock().unwrap().add(idx, partial);
         self.remaining.fetch_sub(1, Ordering::AcqRel) == 1
     }
 
@@ -135,7 +225,7 @@ impl RequestState {
         };
         let delta = {
             let acc = self.acc.lock().unwrap();
-            let sum: f64 = acc.iter().sum();
+            let sum: f64 = acc.values.iter().sum();
             (sum - self.endpoint_gap).abs()
         };
         any.residuals.lock().unwrap().push(delta);
@@ -152,9 +242,11 @@ impl RequestState {
         let novel = refined.novel_vs(&sched);
         {
             let mut acc = self.acc.lock().unwrap();
-            for v in acc.iter_mut() {
+            for v in acc.values.iter_mut() {
                 *v *= Schedule::REFINE_CARRY;
             }
+            // New round: the next round's lanes re-index from 0.
+            acc.reset_round();
         }
         self.remaining.store(novel.len(), Ordering::Release);
         any.evals.fetch_add(novel.len(), Ordering::AcqRel);
@@ -176,7 +268,7 @@ impl RequestState {
         let Some(any) = &self.anytime else { return };
         {
             let mut acc = self.acc.lock().unwrap();
-            for v in acc.iter_mut() {
+            for v in acc.values.iter_mut() {
                 *v /= Schedule::REFINE_CARRY;
             }
         }
@@ -199,7 +291,7 @@ impl RequestState {
         if !self.try_complete() {
             return false;
         }
-        let values = self.acc.lock().unwrap().clone();
+        let values = self.acc.lock().unwrap().values.clone();
         let sum: f64 = values.iter().sum();
         let delta = (sum - self.endpoint_gap).abs();
         let (steps, rounds, residuals) = match &self.anytime {
@@ -257,6 +349,9 @@ pub struct Lane {
     pub alpha: f32,
     /// Quadrature weight of this gradient point.
     pub weight: f32,
+    /// Round-local lane index — the accumulator's commit key (see
+    /// [`Accum`]); assigned in fused-schedule order at plan build.
+    pub idx: u32,
 }
 
 /// A contiguous run of ONE request's gradient points — the unit routers
@@ -272,16 +367,25 @@ pub struct ChunkPlan {
     pub state: Arc<RequestState>,
     /// `(alpha, weight)` of each point, in fused-schedule order.
     pub points: Vec<(f32, f32)>,
+    /// Round-local lane index of `points[0]` (point `k` of this plan is
+    /// lane `base + k` of its round).
+    pub base: u32,
 }
 
 impl ChunkPlan {
     /// Split `points` into plans of at most `chunk` points each (the
-    /// schedule-order chunking mirror of `exec::batch::chunk_spans`).
+    /// schedule-order chunking mirror of `exec::batch::chunk_spans`),
+    /// with round-local lane indices assigned in order from 0.
     pub fn build(state: &Arc<RequestState>, points: &[(f32, f32)], chunk: usize) -> Vec<ChunkPlan> {
         assert!(chunk >= 1, "chunk must be >= 1");
         points
             .chunks(chunk)
-            .map(|c| ChunkPlan { state: state.clone(), points: c.to_vec() })
+            .enumerate()
+            .map(|(i, c)| ChunkPlan {
+                state: state.clone(),
+                points: c.to_vec(),
+                base: (i * chunk) as u32,
+            })
             .collect()
     }
 
@@ -319,7 +423,7 @@ mod tests {
             target: 0,
             opts: IgOptions::default(),
             budget: LatencyBudget::Unbounded,
-            acc: Mutex::new(vec![0.0; 4]),
+            acc: Mutex::new(Accum::new(4)),
             remaining: AtomicUsize::new(n_lanes),
             steps: n_lanes,
             probe_passes: 0,
@@ -331,6 +435,7 @@ mod tests {
             completed: AtomicBool::new(false),
             in_flight: Arc::new(AtomicUsize::new(1)),
             anytime,
+            resident: None,
         });
         (st, handle)
     }
@@ -338,9 +443,9 @@ mod tests {
     #[test]
     fn countdown_and_accumulate() {
         let (st, handle) = mk_state(3, 0.9);
-        assert!(!st.add_lane(&[0.1, 0.0, 0.0, 0.0]));
-        assert!(!st.add_lane(&[0.2, 0.1, 0.0, 0.0]));
-        assert!(st.add_lane(&[0.3, 0.1, 0.1, 0.0]));
+        assert!(!st.add_lane(0, &[0.1, 0.0, 0.0, 0.0]));
+        assert!(!st.add_lane(1, &[0.2, 0.1, 0.0, 0.0]));
+        assert!(st.add_lane(2, &[0.3, 0.1, 0.1, 0.0]));
         st.finalize();
         let resp = handle.wait().unwrap();
         let a = &resp.attribution;
@@ -353,7 +458,7 @@ mod tests {
     #[test]
     fn delta_reflects_incompleteness() {
         let (st, handle) = mk_state(1, 1.0);
-        assert!(st.add_lane(&[0.25, 0.25, 0.0, 0.0]));
+        assert!(st.add_lane(0, &[0.25, 0.25, 0.0, 0.0]));
         st.finalize();
         let resp = handle.wait().unwrap();
         assert!((resp.attribution.delta - 0.5).abs() < 1e-9);
@@ -371,7 +476,7 @@ mod tests {
     #[test]
     fn completion_is_idempotent() {
         let (st, handle) = mk_state(1, 0.5);
-        assert!(st.add_lane(&[0.5, 0.0, 0.0, 0.0]));
+        assert!(st.add_lane(0, &[0.5, 0.0, 0.0, 0.0]));
         st.finalize();
         st.fail(anyhow::anyhow!("late failure must be ignored"));
         st.finalize();
@@ -402,7 +507,7 @@ mod tests {
     #[test]
     fn fixed_m_round_completion_finalizes() {
         let (st, handle) = mk_state(1, 0.5);
-        assert!(st.add_lane(&[0.5, 0.0, 0.0, 0.0]));
+        assert!(st.add_lane(0, &[0.5, 0.0, 0.0, 0.0]));
         assert!(matches!(st.on_round_complete(16), RoundOutcome::Finalize));
         st.finalize();
         let a = handle.wait().unwrap().attribution;
@@ -414,9 +519,9 @@ mod tests {
     fn converged_anytime_round_finalizes_with_trajectory() {
         // acc sums to the gap exactly: δ = 0 ≤ target → finalize.
         let (st, handle) = mk_state_anytime(3, 1.0, Some(mk_anytime(0.01, 64, 2)));
-        st.add_lane(&[0.5, 0.0, 0.0, 0.0]);
-        st.add_lane(&[0.25, 0.0, 0.0, 0.0]);
-        assert!(st.add_lane(&[0.25, 0.0, 0.0, 0.0]));
+        st.add_lane(0, &[0.5, 0.0, 0.0, 0.0]);
+        st.add_lane(1, &[0.25, 0.0, 0.0, 0.0]);
+        assert!(st.add_lane(2, &[0.25, 0.0, 0.0, 0.0]));
         assert!(matches!(st.on_round_complete(16), RoundOutcome::Finalize));
         st.finalize();
         let a = handle.wait().unwrap().attribution;
@@ -430,9 +535,9 @@ mod tests {
     fn unconverged_round_refines_with_novel_midpoint_lanes() {
         // m0 = 2 (3 lanes, alphas 0/.5/1); δ far above target → refine.
         let (st, _handle) = mk_state_anytime(3, 10.0, Some(mk_anytime(1e-9, 64, 2)));
-        st.add_lane(&[1.0, 0.0, 0.0, 0.0]);
-        st.add_lane(&[1.0, 0.0, 0.0, 0.0]);
-        assert!(st.add_lane(&[2.0, 0.0, 0.0, 0.0]));
+        st.add_lane(0, &[1.0, 0.0, 0.0, 0.0]);
+        st.add_lane(1, &[1.0, 0.0, 0.0, 0.0]);
+        assert!(st.add_lane(2, &[2.0, 0.0, 0.0, 0.0]));
         let plans = match st.on_round_complete(16) {
             RoundOutcome::Refine(p) => p,
             RoundOutcome::Finalize => panic!("must refine"),
@@ -447,7 +552,7 @@ mod tests {
         assert_eq!(alphas, vec![0.25, 0.75]);
         assert!(plans[0].points.iter().all(|&(_, w)| (w - 0.25).abs() < 1e-6));
         // Accumulator carried at half weight; countdown reset for round 2.
-        assert_eq!(st.acc.lock().unwrap()[0], 2.0);
+        assert_eq!(st.acc.lock().unwrap().values[0], 2.0);
         assert_eq!(st.remaining.load(Ordering::Acquire), 2);
         let any = st.anytime.as_ref().unwrap();
         assert_eq!(any.evals.load(Ordering::Acquire), 5, "3 + 2 novel");
@@ -462,9 +567,9 @@ mod tests {
         // from the partial accumulator (and finalize stays a no-op).
         let (st, handle) = mk_state_anytime(3, 10.0, Some(mk_anytime(1e-9, 64, 2)));
         st.fail(anyhow::anyhow!("device down"));
-        st.add_lane(&[1.0, 0.0, 0.0, 0.0]);
-        st.add_lane(&[1.0, 0.0, 0.0, 0.0]);
-        assert!(st.add_lane(&[1.0, 0.0, 0.0, 0.0]));
+        st.add_lane(0, &[1.0, 0.0, 0.0, 0.0]);
+        st.add_lane(1, &[1.0, 0.0, 0.0, 0.0]);
+        assert!(st.add_lane(2, &[1.0, 0.0, 0.0, 0.0]));
         assert!(matches!(st.on_round_complete(16), RoundOutcome::Finalize));
         assert!(!st.finalize(), "already settled: finalize must report a no-op");
         assert!(handle.wait().is_err());
@@ -476,9 +581,9 @@ mod tests {
         // corrupt the delivered attribution: the halved accumulator and
         // bumped eval count are rolled back bit-exactly.
         let (st, handle) = mk_state_anytime(3, 10.0, Some(mk_anytime(1e-9, 64, 2)));
-        st.add_lane(&[1.0, 0.0, 0.0, 0.0]);
-        st.add_lane(&[1.0, 0.0, 0.0, 0.0]);
-        assert!(st.add_lane(&[1.0, 0.0, 0.0, 0.0]));
+        st.add_lane(0, &[1.0, 0.0, 0.0, 0.0]);
+        st.add_lane(1, &[1.0, 0.0, 0.0, 0.0]);
+        assert!(st.add_lane(2, &[1.0, 0.0, 0.0, 0.0]));
         let plans = match st.on_round_complete(16) {
             RoundOutcome::Refine(p) => p,
             RoundOutcome::Finalize => panic!("must refine"),
@@ -496,9 +601,9 @@ mod tests {
     fn budget_cap_finalizes_unconverged() {
         // max_m == m0: no refinement allowed, deliver best effort.
         let (st, handle) = mk_state_anytime(3, 10.0, Some(mk_anytime(1e-9, 2, 2)));
-        st.add_lane(&[1.0, 0.0, 0.0, 0.0]);
-        st.add_lane(&[1.0, 0.0, 0.0, 0.0]);
-        assert!(st.add_lane(&[1.0, 0.0, 0.0, 0.0]));
+        st.add_lane(0, &[1.0, 0.0, 0.0, 0.0]);
+        st.add_lane(1, &[1.0, 0.0, 0.0, 0.0]);
+        assert!(st.add_lane(2, &[1.0, 0.0, 0.0, 0.0]));
         assert!(matches!(st.on_round_complete(16), RoundOutcome::Finalize));
         st.finalize();
         let a = handle.wait().unwrap().attribution;
@@ -509,10 +614,10 @@ mod tests {
     #[test]
     fn two_round_refinement_accumulates_and_reports() {
         let (st, handle) = mk_state_anytime(3, 4.0, Some(mk_anytime(0.51, 64, 2)));
-        for _ in 0..2 {
-            st.add_lane(&[1.0, 0.0, 0.0, 0.0]);
+        for k in 0..2 {
+            st.add_lane(k, &[1.0, 0.0, 0.0, 0.0]);
         }
-        assert!(st.add_lane(&[1.0, 0.0, 0.0, 0.0])); // acc 3.0, δ = 1.0 > .51
+        assert!(st.add_lane(2, &[1.0, 0.0, 0.0, 0.0])); // acc 3.0, δ = 1.0 > .51
         let plans = match st.on_round_complete(1) {
             RoundOutcome::Refine(p) => p,
             RoundOutcome::Finalize => panic!("round 1 must refine"),
@@ -520,9 +625,10 @@ mod tests {
         // chunk = 1: each novel midpoint rides its own plan.
         assert_eq!(plans.len(), 2);
         assert!(plans.iter().all(|p| p.len() == 1));
-        // Round 2: carried 1.5 + novel 2.0 → δ = 0.5 ≤ target → finalize.
-        st.add_lane(&[1.0, 0.0, 0.0, 0.0]);
-        assert!(st.add_lane(&[1.0, 0.0, 0.0, 0.0]));
+        // Round 2: carried 1.5 + novel 2.0 → δ = 0.5 ≤ target → finalize
+        // (lane indices restart at 0 — the accumulator's round reset).
+        st.add_lane(0, &[1.0, 0.0, 0.0, 0.0]);
+        assert!(st.add_lane(1, &[1.0, 0.0, 0.0, 0.0]));
         assert!(matches!(st.on_round_complete(1), RoundOutcome::Finalize));
         st.finalize();
         let a = handle.wait().unwrap().attribution;
@@ -538,11 +644,11 @@ mod tests {
     #[test]
     fn concurrent_lane_adds() {
         let (st, handle) = mk_state(16, 16.0);
-        let threads: Vec<_> = (0..16)
-            .map(|_| {
+        let threads: Vec<_> = (0..16u32)
+            .map(|k| {
                 let st = st.clone();
                 std::thread::spawn(move || {
-                    if st.add_lane(&[1.0, 0.0, 0.0, 0.0]) {
+                    if st.add_lane(k, &[1.0, 0.0, 0.0, 0.0]) {
                         st.finalize();
                     }
                 })
@@ -554,5 +660,41 @@ mod tests {
         let resp = handle.wait().unwrap();
         assert!((resp.attribution.values[0] - 16.0).abs() < 1e-9);
         assert!(resp.attribution.delta < 1e-9);
+    }
+
+    #[test]
+    fn ordered_commit_is_arrival_order_invariant() {
+        // The sharded-feeder determinism property at the unit level: the
+        // SAME rows delivered in any arrival order commit to bit-identical
+        // f64 sums, because commits happen in lane-index order.
+        let rows: Vec<[f32; 4]> = (0..7)
+            .map(|k| {
+                let v = 0.1f32 + 0.37 * k as f32;
+                [v, -v * 0.5, v * v, 1.0 / (1.0 + v)]
+            })
+            .collect();
+        let commit_in = |order: &[usize]| -> Vec<u64> {
+            let (st, handle) = mk_state(rows.len(), 0.0);
+            for &k in order {
+                st.add_lane(k as u32, &rows[k]);
+            }
+            st.finalize();
+            handle.wait().unwrap().attribution.values.iter().map(|v| v.to_bits()).collect()
+        };
+        let reference = commit_in(&[0, 1, 2, 3, 4, 5, 6]);
+        assert_eq!(commit_in(&[6, 5, 4, 3, 2, 1, 0]), reference, "reverse arrival");
+        assert_eq!(commit_in(&[3, 0, 6, 1, 5, 2, 4]), reference, "shuffled arrival");
+        // Chunk-shaped disorder (two feeders finishing out of order).
+        assert_eq!(commit_in(&[4, 5, 6, 0, 1, 2, 3]), reference, "chunk swap");
+    }
+
+    #[test]
+    fn chunk_plans_carry_round_local_bases() {
+        let (st, _handle) = mk_state(7, 0.0);
+        let points: Vec<(f32, f32)> = (0..7).map(|k| (k as f32, 1.0)).collect();
+        let plans = ChunkPlan::build(&st, &points, 3);
+        assert_eq!(plans.len(), 3);
+        assert_eq!(plans.iter().map(|p| p.base).collect::<Vec<_>>(), vec![0, 3, 6]);
+        assert_eq!(plans.iter().map(|p| p.len()).collect::<Vec<_>>(), vec![3, 3, 1]);
     }
 }

@@ -153,6 +153,13 @@ pub struct BatchPlan<'a> {
     pub weights: &'a [f32],
     /// The explained class.
     pub target: usize,
+    /// Resident-tensor slot `x`/`baseline` were registered under with the
+    /// executing backend ([`crate::exec::gather::GatherExec`]), when the
+    /// caller holds one. Backends with a resident path (e.g.
+    /// `runtime::PjrtModel`) then skip re-uploading the endpoints per
+    /// chunk; every other backend ignores it. `None` = self-contained
+    /// plan (the default everywhere outside the serving path).
+    pub slot: Option<u64>,
 }
 
 impl BatchPlan<'_> {

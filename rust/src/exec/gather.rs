@@ -1,0 +1,252 @@
+//! Gather-indexed cross-request execution: the serving-side face of the
+//! batched backend.
+//!
+//! The coordinator's device chunks mix gradient points from *different*
+//! requests (cross-request continuous batching, the paper's §V argument).
+//! Before this module the feeder materialized every chunk by copying each
+//! lane's full image and baseline into freshly allocated
+//! `chunk × features` host buffers — `O(chunk × features)` host bytes per
+//! chunk for endpoints the backend had already seen on every previous
+//! chunk of the same request. This module replaces that with a
+//! **gather-indexed plan** over **resident request tensors**:
+//!
+//! * [`GatherLane`] — one device-batch slot as a *reference*:
+//!   `(slot, alpha, weight, target)`. A chunk is just a slice of these —
+//!   `O(chunk)` bytes, no feature-width payload.
+//! * [`GatherExec`] — the execution surface the coordinator drives:
+//!   register a request's endpoints **once** at admission
+//!   ([`GatherExec::register_request`]), execute gather chunks that
+//!   reference them by slot ([`GatherExec::eval_gather`]), evict on
+//!   settlement ([`GatherExec::evict_request`]). Implemented by the PJRT
+//!   runtime (`runtime::RuntimeHandle`, `runtime::ShardedRuntime` — the
+//!   device thread owns the resident tensors and a reused staging
+//!   buffer) and by `ig::model::AnalyticExec` (closed-form model +
+//!   [`ResidentPool`]) so the whole serving path is testable and
+//!   benchable without artifacts.
+//! * [`GatherOut`] — the planar per-lane partial rows
+//!   (`lanes × features`, row `k` = `w_k · ∂p_{t_k}/∂x|_{α_k} ⊙ (x_k −
+//!   x′_k)`) the feeder scatters into request accumulators.
+//!
+//! # Determinism contract
+//!
+//! A lane's output row is a pure function of the lane (its resident
+//! endpoints, alpha, weight, target) — never of its neighbours in the
+//! chunk or of which shard executed it. Combined with the coordinator's
+//! ordered lane commit (`coordinator::state`), attributions are
+//! bit-identical (0 ULP) at **any feeder count** — the serving-layer
+//! extension of `exec::batch`'s any-worker-count guarantee, property-
+//! tested at feeder counts {1, 2, 4} in `tests/sharded_feeder.rs`.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, ensure, Result};
+
+/// One device-batch slot of a cross-request gather chunk: a *reference*
+/// to a request's resident endpoint tensors plus the lane's scalars.
+///
+/// This is the entire per-lane payload the feeder moves per chunk —
+/// `O(chunk)` bytes total, replacing the `chunk × features` endpoint
+/// copies the pre-gather feeder materialized.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GatherLane {
+    /// Resident-tensor slot the lane's endpoints were registered under
+    /// (the coordinator uses the request id).
+    pub slot: u64,
+    /// Interpolation constant of this gradient point.
+    pub alpha: f32,
+    /// Quadrature weight of this gradient point.
+    pub weight: f32,
+    /// The lane's explained class.
+    pub target: usize,
+}
+
+/// Planar per-lane output of one gather chunk: `lanes × features` f32
+/// partial rows, row `k` belonging to the chunk's lane `k`.
+#[derive(Debug, Clone)]
+pub struct GatherOut {
+    /// Row-major `lanes × features` partial rows.
+    pub rows: Vec<f32>,
+    /// Feature width of each row.
+    pub features: usize,
+}
+
+impl GatherOut {
+    /// Lane `k`'s partial row.
+    pub fn row(&self, k: usize) -> &[f32] {
+        &self.rows[k * self.features..(k + 1) * self.features]
+    }
+
+    /// Number of lane rows carried.
+    pub fn lanes(&self) -> usize {
+        if self.features == 0 {
+            0
+        } else {
+            self.rows.len() / self.features
+        }
+    }
+}
+
+/// The execution surface the serving coordinator drives — resident
+/// request tensors plus gather-indexed cross-request chunks.
+///
+/// One backend instance may expose several device `shards` (independent
+/// submission streams); the coordinator pins each feeder worker to one
+/// shard. Registration is backend-global: a chunk may execute on any
+/// shard, so every shard must be able to resolve every live slot.
+pub trait GatherExec: Send + Sync {
+    /// Model input width F.
+    fn features(&self) -> usize;
+
+    /// Number of output classes C.
+    fn num_classes(&self) -> usize;
+
+    /// Forward-only probabilities for `rows` images packed row-major in
+    /// `imgs` (`rows × features`); returns `rows × classes` f32
+    /// probabilities. Stage-1 probes go through this.
+    fn forward(&self, imgs: &[f32], rows: usize) -> Result<Vec<f32>>;
+
+    /// Upload a request's endpoints once; subsequent gather lanes
+    /// reference them by `slot`. Slots are caller-assigned (the
+    /// coordinator uses the request id) and must be unique among live
+    /// registrations.
+    fn register_request(&self, slot: u64, x: &[f32], baseline: &[f32]) -> Result<()>;
+
+    /// Release a request's resident tensors. Must be a no-op for unknown
+    /// slots (eviction and late chunk failures may race benignly).
+    fn evict_request(&self, slot: u64);
+
+    /// Live resident registrations (the coordinator's pool gauge; for
+    /// sharded backends, per-shard — registration is broadcast).
+    fn resident_len(&self) -> usize;
+
+    /// Independent device submission streams this backend exposes; the
+    /// coordinator pins feeder `i` to shard `i % shards()`.
+    fn shards(&self) -> usize {
+        1
+    }
+
+    /// Execute one cross-request gather chunk on `shard`: one gradient
+    /// model pass per lane, returning the planar per-lane partial rows.
+    /// Each row must be a pure function of its lane alone (see the
+    /// module doc's determinism contract). Lanes referencing an
+    /// unregistered slot fail the whole chunk.
+    fn eval_gather(&self, shard: usize, lanes: &[GatherLane]) -> Result<GatherOut>;
+}
+
+/// A host-side resident-tensor pool: the reusable registration store for
+/// in-process [`GatherExec`] backends (`ig::model::AnalyticExec`; the
+/// PJRT device thread keeps its own non-`Send` twin with device
+/// buffers).
+///
+/// Entries are handed out as `Arc`s ([`ResidentPool::entry`]), so the
+/// pool's mutex is held only for the map lookup — never across the
+/// caller's per-lane compute. Concurrent shards therefore share the
+/// pool without serializing their gather work on it.
+#[derive(Debug, Default)]
+pub struct ResidentPool {
+    entries: Mutex<HashMap<u64, Arc<(Vec<f32>, Vec<f32>)>>>,
+}
+
+impl ResidentPool {
+    /// An empty pool.
+    pub fn new() -> ResidentPool {
+        ResidentPool::default()
+    }
+
+    /// Store `(x, baseline)` under `slot`; duplicate live slots are a
+    /// caller bug and fail loudly.
+    pub fn register(&self, slot: u64, x: &[f32], baseline: &[f32]) -> Result<()> {
+        ensure!(x.len() == baseline.len(), "endpoint width mismatch");
+        let mut map = self.entries.lock().unwrap();
+        if map.contains_key(&slot) {
+            bail!("resident slot {slot} already registered");
+        }
+        map.insert(slot, Arc::new((x.to_vec(), baseline.to_vec())));
+        Ok(())
+    }
+
+    /// Drop `slot`'s entry; `true` if it was present.
+    pub fn evict(&self, slot: u64) -> bool {
+        self.entries.lock().unwrap().remove(&slot).is_some()
+    }
+
+    /// `slot`'s `(x, baseline)` entry, shared — the lock is released
+    /// before the caller computes on it. `None` when not registered.
+    pub fn entry(&self, slot: u64) -> Option<Arc<(Vec<f32>, Vec<f32>)>> {
+        self.entries.lock().unwrap().get(&slot).cloned()
+    }
+
+    /// Run `f` over `slot`'s `(x, baseline)` without copying them out;
+    /// `None` when the slot is not registered. NOTE: holds the pool
+    /// lock for the duration of `f` — keep `f` cheap, or use
+    /// [`ResidentPool::entry`] for heavy per-lane work.
+    pub fn with_entry<R>(&self, slot: u64, f: impl FnOnce(&[f32], &[f32]) -> R) -> Option<R> {
+        let map = self.entries.lock().unwrap();
+        map.get(&slot).map(|e| f(&e.0, &e.1))
+    }
+
+    /// Live registrations.
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    /// Whether no registrations are live.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_register_get_evict() {
+        let pool = ResidentPool::new();
+        assert!(pool.is_empty());
+        pool.register(7, &[1.0, 2.0], &[0.0, 0.5]).unwrap();
+        assert_eq!(pool.len(), 1);
+        let got = pool.with_entry(7, |x, b| (x.to_vec(), b.to_vec())).unwrap();
+        assert_eq!(got.0, vec![1.0, 2.0]);
+        assert_eq!(got.1, vec![0.0, 0.5]);
+        assert!(pool.with_entry(8, |_, _| ()).is_none());
+        // The shared-entry accessor: lock released, data intact.
+        let shared = pool.entry(7).unwrap();
+        assert_eq!(shared.0, vec![1.0, 2.0]);
+        assert!(pool.entry(8).is_none());
+        assert!(pool.evict(7));
+        assert!(!pool.evict(7), "second evict is a no-op");
+        assert!(pool.is_empty());
+    }
+
+    #[test]
+    fn pool_rejects_duplicate_slot_and_width_mismatch() {
+        let pool = ResidentPool::new();
+        pool.register(1, &[0.0; 4], &[0.0; 4]).unwrap();
+        assert!(pool.register(1, &[0.0; 4], &[0.0; 4]).is_err(), "duplicate live slot");
+        assert!(pool.register(2, &[0.0; 4], &[0.0; 3]).is_err(), "width mismatch");
+        // Evicting frees the slot for re-registration (id reuse after a
+        // settled request is legal).
+        pool.evict(1);
+        pool.register(1, &[1.0; 4], &[0.0; 4]).unwrap();
+        assert_eq!(pool.len(), 2);
+    }
+
+    #[test]
+    fn gather_out_rows() {
+        let out = GatherOut { rows: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], features: 3 };
+        assert_eq!(out.lanes(), 2);
+        assert_eq!(out.row(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(out.row(1), &[4.0, 5.0, 6.0]);
+        let empty = GatherOut { rows: vec![], features: 0 };
+        assert_eq!(empty.lanes(), 0);
+    }
+
+    #[test]
+    fn gather_lane_is_copy() {
+        let l = GatherLane { slot: 3, alpha: 0.5, weight: 0.25, target: 1 };
+        let m = l;
+        assert_eq!(l, m);
+    }
+}

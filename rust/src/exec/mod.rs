@@ -14,13 +14,19 @@
 //! * [`batch`] — the batched IG execution backend: planar point batches,
 //!   per-worker scratch arenas, and deterministic chunked dispatch
 //!   ([`BatchExec`]) over the pool.
+//! * [`gather`] — the serving-side face of the same backend:
+//!   gather-indexed cross-request chunks over resident request tensors
+//!   (the [`gather::GatherExec`] surface the coordinator's sharded
+//!   feeders drive).
 
 pub mod batch;
 pub mod channel;
+pub mod gather;
 mod pool;
 mod token;
 
 pub use batch::BatchExec;
+pub use gather::{GatherExec, GatherLane, GatherOut, ResidentPool};
 pub use channel::{bounded, Receiver, RecvError, SendError, Sender};
 pub use pool::{JoinHandle, ThreadPool};
 pub use token::CancelToken;

@@ -55,7 +55,7 @@ pub use engine::{
     explain, explain_anytime, explain_anytime_cached, explain_anytime_cached_exec,
     explain_anytime_exec, explain_exec, IgOptions,
 };
-pub use model::{eval_points, AnalyticModel, Model};
+pub use model::{eval_points, eval_points_resident, AnalyticExec, AnalyticModel, Model};
 pub use riemann::Rule;
 pub use schedule::cache::{CacheKey, ProbeSignature, ScheduleCache};
 

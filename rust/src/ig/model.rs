@@ -28,6 +28,7 @@
 use anyhow::{ensure, Result};
 
 use crate::exec::batch::{self, BatchExec, BatchOut, BatchPlan, ScratchArena};
+use crate::exec::gather::{GatherExec, GatherLane, GatherOut, ResidentPool};
 
 /// A differentiable classifier the IG engines can drive.
 ///
@@ -105,6 +106,42 @@ pub fn eval_points(
     target: usize,
     exec: &BatchExec,
 ) -> Result<IgPointsOut> {
+    eval_points_at(model, x, baseline, alphas, weights, target, exec, None)
+}
+
+/// [`eval_points`] over endpoints already **resident** with the executing
+/// backend: identical chunking/reduction semantics, but each chunk's
+/// [`BatchPlan`] carries `slot`, so backends with a resident-tensor path
+/// (e.g. `runtime::PjrtModel`) pass the registered device buffers by
+/// reference instead of re-uploading `x`/`baseline` per chunk — the host
+/// bytes moved per chunk drop from `O(chunk × features)` to `O(chunk)`.
+/// The caller still provides the endpoint slices (they size validation
+/// and serve backends without residency unchanged).
+#[allow(clippy::too_many_arguments)]
+pub fn eval_points_resident(
+    model: &dyn Model,
+    x: &[f32],
+    baseline: &[f32],
+    alphas: &[f32],
+    weights: &[f32],
+    target: usize,
+    exec: &BatchExec,
+    slot: u64,
+) -> Result<IgPointsOut> {
+    eval_points_at(model, x, baseline, alphas, weights, target, exec, Some(slot))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn eval_points_at(
+    model: &dyn Model,
+    x: &[f32],
+    baseline: &[f32],
+    alphas: &[f32],
+    weights: &[f32],
+    target: usize,
+    exec: &BatchExec,
+    slot: Option<u64>,
+) -> Result<IgPointsOut> {
     ensure!(
         x.len() == model.features() && baseline.len() == model.features(),
         "bad endpoint widths"
@@ -118,6 +155,7 @@ pub fn eval_points(
             alphas: &alphas[start..start + len],
             weights: &weights[start..start + len],
             target,
+            slot,
         })
     })?;
     Ok(IgPointsOut { partial: out.partial, target_probs: out.target_probs })
@@ -349,6 +387,114 @@ impl Model for AnalyticModel {
     }
 }
 
+/// Serving-path execution backend over the closed-form
+/// [`AnalyticModel`]: implements [`GatherExec`] with a host-side
+/// [`ResidentPool`], so the whole coordinator — gather-indexed chunks,
+/// resident registration/eviction, sharded feeders — is testable and
+/// benchable without artifacts (`tests/sharded_feeder.rs`,
+/// `benches/fig_serving.rs`).
+///
+/// A lane's output row mirrors the device kernel's per-lane semantics
+/// exactly: `row_k = w_k · ∂p_{t_k}/∂x|_{α_k} ⊙ (x_k − x′_k)` computed in
+/// f64, cast to f32 — a pure function of the lane alone, never of its
+/// chunk neighbours or the executing shard (the gather determinism
+/// contract; see `exec::gather`).
+pub struct AnalyticExec {
+    model: AnalyticModel,
+    pool: ResidentPool,
+    shards: usize,
+}
+
+impl AnalyticExec {
+    /// A single-shard backend over `model`.
+    pub fn new(model: AnalyticModel) -> AnalyticExec {
+        AnalyticExec::with_shards(model, 1)
+    }
+
+    /// A backend advertising `shards` submission streams. All shards
+    /// evaluate on the same in-process model (there is no per-shard state
+    /// to diverge), so this only spreads the coordinator's feeders — the
+    /// analytic stand-in for a multi-device runtime.
+    pub fn with_shards(model: AnalyticModel, shards: usize) -> AnalyticExec {
+        assert!(shards >= 1, "shards must be >= 1");
+        AnalyticExec { model, pool: ResidentPool::new(), shards }
+    }
+
+    /// The wrapped model (engine-side parity checks in tests/benches).
+    pub fn model(&self) -> &AnalyticModel {
+        &self.model
+    }
+}
+
+impl GatherExec for AnalyticExec {
+    fn features(&self) -> usize {
+        self.model.features()
+    }
+
+    fn num_classes(&self) -> usize {
+        self.model.num_classes()
+    }
+
+    fn forward(&self, imgs: &[f32], rows: usize) -> Result<Vec<f32>> {
+        let f = self.model.features();
+        ensure!(imgs.len() == rows * f, "probe batch size mismatch");
+        let mut out = Vec::with_capacity(rows * self.model.num_classes());
+        for r in 0..rows {
+            let probs = self.model.probs(&[&imgs[r * f..(r + 1) * f]])?;
+            out.extend(probs[0].iter().map(|&v| v as f32));
+        }
+        Ok(out)
+    }
+
+    fn register_request(&self, slot: u64, x: &[f32], baseline: &[f32]) -> Result<()> {
+        let f = self.model.features();
+        ensure!(x.len() == f && baseline.len() == f, "endpoint width mismatch");
+        self.pool.register(slot, x, baseline)
+    }
+
+    fn evict_request(&self, slot: u64) {
+        self.pool.evict(slot);
+    }
+
+    fn resident_len(&self) -> usize {
+        self.pool.len()
+    }
+
+    fn shards(&self) -> usize {
+        self.shards
+    }
+
+    fn eval_gather(&self, _shard: usize, lanes: &[GatherLane]) -> Result<GatherOut> {
+        let f = self.model.features();
+        let c = self.model.num_classes();
+        let mut rows = vec![0f32; lanes.len() * f];
+        let mut point = vec![0f32; f];
+        for (k, lane) in lanes.iter().enumerate() {
+            ensure!(lane.target < c, "lane target {} out of range", lane.target);
+            // Grab the endpoints as a shared entry — the pool lock is
+            // released before the gradient runs, so concurrent shards'
+            // gather work never serializes on the pool.
+            let entry = self
+                .pool
+                .entry(lane.slot)
+                .ok_or_else(|| anyhow::anyhow!("resident slot {} not registered", lane.slot))?;
+            let (x, b) = (&entry.0, &entry.1);
+            for i in 0..f {
+                point[i] = b[i] + lane.alpha * (x[i] - b[i]);
+            }
+            if lane.weight != 0.0 {
+                let g = self.model.grad(&point, lane.target);
+                let row = &mut rows[k * f..(k + 1) * f];
+                let w64 = lane.weight as f64;
+                for i in 0..f {
+                    row[i] = (w64 * g[i] * (x[i] - b[i]) as f64) as f32;
+                }
+            }
+        }
+        Ok(GatherOut { rows, features: f })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -546,6 +692,79 @@ mod tests {
         }
     }
 
+    // ---- AnalyticExec (gather backend) properties ---------------------
+
+    #[test]
+    fn gather_rows_match_scalar_kernel_contributions() {
+        // One lane's row summed over features must equal the scalar
+        // kernel's partial for that single point (cast through f32, the
+        // device row dtype).
+        let m = AnalyticModel::new(16, 3, 5, 10.0);
+        let exec = AnalyticExec::new(AnalyticModel::new(16, 3, 5, 10.0));
+        let mut rng = TestRng::new(99);
+        let x = rng.vec_f32(16, 0.0, 1.0);
+        let b = rng.vec_f32(16, 0.0, 0.5);
+        exec.register_request(1, &x, &b).unwrap();
+        let lanes = [
+            GatherLane { slot: 1, alpha: 0.25, weight: 0.5, target: 0 },
+            GatherLane { slot: 1, alpha: 0.75, weight: 0.0, target: 2 },
+        ];
+        let out = exec.eval_gather(0, &lanes).unwrap();
+        assert_eq!(out.lanes(), 2);
+        let scalar = m.ig_points_scalar(&x, &b, &[0.25], &[0.5], 0).unwrap();
+        for i in 0..16 {
+            assert_eq!(out.row(0)[i], scalar.partial[i] as f32, "feature {i}");
+        }
+        assert!(out.row(1).iter().all(|&v| v == 0.0), "zero-weight lane contributes nothing");
+    }
+
+    #[test]
+    fn gather_rows_are_pure_per_lane() {
+        // The gather determinism contract: a lane's row never depends on
+        // its chunk neighbours or on the executing shard.
+        let exec = AnalyticExec::with_shards(AnalyticModel::new(12, 4, 3, 8.0), 4);
+        assert_eq!(exec.shards(), 4);
+        let mut rng = TestRng::new(7);
+        let zeros = vec![0f32; 12];
+        for slot in 0..3u64 {
+            let x = rng.vec_f32(12, 0.0, 1.0);
+            exec.register_request(slot, &x, &zeros).unwrap();
+        }
+        let lane = GatherLane { slot: 1, alpha: 0.5, weight: 0.25, target: 2 };
+        let alone = exec.eval_gather(0, &[lane]).unwrap();
+        let crowded = exec
+            .eval_gather(3, &[
+                GatherLane { slot: 0, alpha: 0.1, weight: 0.9, target: 0 },
+                lane,
+                GatherLane { slot: 2, alpha: 0.9, weight: 0.1, target: 3 },
+            ])
+            .unwrap();
+        assert_eq!(alone.row(0), crowded.row(1), "row must be a pure function of the lane");
+        assert_eq!(exec.resident_len(), 3);
+        exec.evict_request(1);
+        assert_eq!(exec.resident_len(), 2);
+        let err = exec.eval_gather(0, &[lane]).unwrap_err().to_string();
+        assert!(err.contains("not registered"), "{err}");
+    }
+
+    #[test]
+    fn gather_forward_matches_model_probs() {
+        let exec = AnalyticExec::new(AnalyticModel::new(8, 3, 42, 6.0));
+        let mut imgs = vec![0f32; 2 * 8];
+        for (i, v) in imgs.iter_mut().enumerate() {
+            *v = (i as f32) / 16.0;
+        }
+        let out = exec.forward(&imgs, 2).unwrap();
+        assert_eq!(out.len(), 2 * 3);
+        let direct = exec.model().probs(&[&imgs[..8], &imgs[8..]]).unwrap();
+        for r in 0..2 {
+            for c in 0..3 {
+                assert_eq!(out[r * 3 + c], direct[r][c] as f32);
+            }
+        }
+        assert!(exec.forward(&imgs, 3).is_err(), "row/payload mismatch must fail");
+    }
+
     #[test]
     fn eval_batch_default_shim_delegates_to_ig_points() {
         // A Model that only implements ig_points still serves eval_batch.
@@ -574,8 +793,14 @@ mod tests {
         let m = Shim(tiny());
         let x = vec![0.7f32; 8];
         let b = vec![0f32; 8];
-        let plan =
-            BatchPlan { x: &x, baseline: &b, alphas: &[0.25, 0.75], weights: &[0.5, 0.5], target: 1 };
+        let plan = BatchPlan {
+            x: &x,
+            baseline: &b,
+            alphas: &[0.25, 0.75],
+            weights: &[0.5, 0.5],
+            target: 1,
+            slot: None,
+        };
         let shimmed = m.eval_batch(&plan).unwrap();
         let direct = m.0.ig_points_scalar(&x, &b, &[0.25, 0.75], &[0.5, 0.5], 1).unwrap();
         assert_eq!(shimmed.partial, direct.partial);

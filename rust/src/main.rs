@@ -13,7 +13,7 @@
 use anyhow::{bail, Result};
 
 use nuig::cli::Args;
-use nuig::config::CoordinatorConfig;
+use nuig::config::{CoordinatorConfig, IgConfig, NuigConfig, RuntimeConfig};
 use nuig::coordinator::{Coordinator, ExplainRequest, LatencyBudget, Policy};
 use nuig::data::{synth, Corpus};
 use nuig::ig::{self, convergence::ConvergencePolicy, ensemble, Allocation, BaselineKind, IgOptions, Rule, Scheme};
@@ -42,9 +42,13 @@ COMMANDS:
             [--requests N] [--workers N] [--scheme S] [--m N]
             [--batch-wait-us N] [--policy fifo|round-robin|shortest-first]
             [--tier unbounded|tight|standard|thorough] [--cache N]
+            [--feeders N] [--devices N] [--resident-cap N]
             (--tier pins every request's latency budget; --cache N
              enables the probe-schedule cache with N entries — tight-tier
-             requests pin their target so warm traffic skips stage 1)
+             requests pin their target so warm traffic skips stage 1;
+             --feeders/--devices shard the gather-indexed feeder pool
+             over N device threads, --resident-cap bounds the resident
+             request-tensor pool per device)
   sweep     Convergence sweep: delta vs m for schemes
             [--class N] [--grid 8,16,32,...] [--schemes uniform,nonuniform:4]
   render    Write overlay heatmaps for the eval corpus
@@ -150,12 +154,40 @@ fn cmd_serve(mut args: Args, artifacts: &str) -> Result<()> {
     let policy = Policy::parse(&args.opt_str("policy").unwrap_or_else(|| "fifo".into()))?;
     let tier = LatencyBudget::parse(&args.opt_str("tier").unwrap_or_else(|| "unbounded".into()))?;
     let cache_capacity = args.opt("cache", 0usize)?;
+    let devices = args.opt("devices", 1usize)?;
+    let feeders = args.opt("feeders", devices.max(1))?;
+    let resident_cap = args.opt("resident-cap", 1024usize)?;
     let opts = parse_opts(&mut args)?;
     args.finish()?;
 
-    let rt = Runtime::load_default(artifacts)?;
-    let mut cfg = CoordinatorConfig { workers, batch_wait_us, policy, ..Default::default() };
+    let mut cfg = CoordinatorConfig {
+        workers,
+        batch_wait_us,
+        policy,
+        feeders,
+        devices,
+        resident_cap,
+        ..Default::default()
+    };
     cfg.admission.cache_capacity = cache_capacity;
+    // Validate the full composed config BEFORE loading artifacts: the
+    // feeders/devices/resident-cap invariants (a shard without a feeder,
+    // a cap below the queue, zero values) must fail with a pointed error
+    // instead of compiling N device shards first — or worse, starting a
+    // coordinator that rejects every request at admission.
+    let nuig_cfg = NuigConfig {
+        runtime: RuntimeConfig { artifacts_dir: artifacts.into(), verify_corpus: true },
+        ig: IgConfig {
+            scheme: opts.scheme,
+            m: opts.m,
+            rule: opts.rule,
+            allocation: opts.allocation,
+        },
+        coordinator: cfg.clone(),
+    };
+    nuig_cfg.validate()?;
+
+    let rt = Runtime::load_sharded(artifacts, true, devices)?;
     let coord = Coordinator::start(&rt, cfg)?;
 
     let corpus = Corpus::generate((requests / synth::NUM_CLASSES).max(1));
@@ -185,6 +217,19 @@ fn cmd_serve(mut args: Args, artifacts: &str) -> Result<()> {
     println!("e2e latency      : {}", stats.e2e_latency.format_ms());
     println!("queue wait       : {}", stats.queue_wait.format_ms());
     println!("batch occupancy  : {:.1}%", 100.0 * stats.mean_occupancy(coord.config().chunk));
+    for (i, fs) in stats.feeders.iter().enumerate() {
+        println!(
+            "feeder {i} (shard {}) : {} chunks, {} lanes",
+            i % coord.config().devices,
+            fs.chunks.get(),
+            fs.lanes.get()
+        );
+    }
+    println!(
+        "resident pool    : {} live entries (cap {})",
+        coord.resident_len(),
+        coord.config().resident_cap
+    );
     println!("max delta        : {max_delta:.6}");
     if tier != LatencyBudget::Unbounded {
         let ts = stats.tier(tier);
@@ -206,8 +251,11 @@ fn cmd_serve(mut args: Args, artifacts: &str) -> Result<()> {
             c.evictions.get()
         );
     }
-    let rstats = rt.stats();
-    println!("device execs     : {} total", rstats.total_executions());
+    // Sum across device shards: feeder i dispatches on shard i % devices,
+    // so shard 0 alone undercounts whenever --devices > 1.
+    let total_execs: u64 =
+        rt.shard_stats().iter().map(|s| s.total_executions()).sum();
+    println!("device execs     : {total_execs} total across {} shard(s)", rt.shards());
     coord.shutdown();
     Ok(())
 }

@@ -1,13 +1,21 @@
-//! PJRT runtime: load the AOT artifacts and serve executions from a
-//! dedicated device thread.
+//! PJRT runtime: load the AOT artifacts and serve executions from
+//! dedicated device threads.
 //!
 //! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), which is an
 //! accurate model of the underlying device anyway: one accelerator, one
-//! submission stream. The runtime therefore spawns ONE device thread that
-//! owns the client, the compiled executables, and the resident parameter
-//! literal; everything else talks to it through a channel of [`Job`]s.
-//! On CPU-PJRT this costs one channel hop (~µs) per multi-millisecond
-//! execution and lets XLA's intra-op thread pool own the cores.
+//! submission stream. The runtime therefore spawns ONE device thread per
+//! **shard** that owns its client, compiled executables, resident
+//! parameter literal, and resident request pool; everything else talks
+//! to it through a channel of jobs. On CPU-PJRT this costs one channel
+//! hop (~µs) per multi-millisecond execution and lets XLA's intra-op
+//! thread pool own the cores.
+//!
+//! A default [`Runtime::load`] spawns one shard; [`Runtime::load_sharded`]
+//! spawns several independent device threads (each compiles its own
+//! executable set), and [`Runtime::sharded_backend`] wraps them as one
+//! [`GatherExec`] surface the coordinator's feeder workers spread over —
+//! registration broadcasts to every shard (any feeder may execute any
+//! request's chunk), gather chunks route to the caller's shard.
 //!
 //! Loading path (see /opt/xla-example/README.md for the gotchas):
 //! HLO **text** → `HloModuleProto::from_text_file` → `XlaComputation` →
@@ -24,15 +32,18 @@ pub use pjrt_model::{PjrtModel, ProbeMode, PROBE_BATCH_CROSSOVER};
 pub use service::{Arg, ExeKind, RuntimeHandle, RuntimeStats};
 
 use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
-use anyhow::{Context, Result};
+use anyhow::{ensure, Context, Result};
 
-/// A loaded runtime: manifest + live device thread.
+use crate::exec::gather::{GatherExec, GatherLane, GatherOut};
+
+/// A loaded runtime: manifest + one or more live device threads.
 pub struct Runtime {
     /// The parsed AOT manifest the artifacts were loaded against.
     pub manifest: Manifest,
-    handle: RuntimeHandle,
+    handles: Vec<RuntimeHandle>,
 }
 
 impl Runtime {
@@ -45,6 +56,20 @@ impl Runtime {
     /// Load with optional corpus verification (benches skip it to start
     /// faster; tests exercise both paths).
     pub fn load<P: AsRef<Path>>(dir: P, verify_corpus: bool) -> Result<Runtime> {
+        Self::load_sharded(dir, verify_corpus, 1)
+    }
+
+    /// Load with `devices` independent device shards: each shard is its
+    /// own device thread with its own PJRT client and compiled
+    /// executables (the client is not `Send`, so sharding is the only
+    /// way to open several submission streams). Artifacts are read once;
+    /// compilation runs per shard.
+    pub fn load_sharded<P: AsRef<Path>>(
+        dir: P,
+        verify_corpus: bool,
+        devices: usize,
+    ) -> Result<Runtime> {
+        ensure!(devices >= 1, "devices must be >= 1");
         let dir = dir.as_ref();
         let manifest = Manifest::load(dir).with_context(|| {
             format!(
@@ -55,23 +80,118 @@ impl Runtime {
         if verify_corpus {
             manifest.verify_corpus()?;
         }
+        // Read the params payload once; each shard's device thread takes
+        // its own copy (it uploads and then owns a device buffer).
         let params = manifest.load_params(dir)?;
-        let handle = service::spawn(dir, &manifest, params)?;
-        Ok(Runtime { manifest, handle })
+        let mut handles = Vec::with_capacity(devices);
+        for shard in 0..devices {
+            handles.push(
+                service::spawn(dir, &manifest, params.clone())
+                    .with_context(|| format!("spawning device shard {shard}"))?,
+            );
+        }
+        Ok(Runtime { manifest, handles })
     }
 
-    /// Handle for raw executions (the coordinator uses this directly).
+    /// Handle for raw executions on the first shard (the engines and
+    /// single-device tools use this directly).
     pub fn handle(&self) -> RuntimeHandle {
-        self.handle.clone()
+        self.handles[0].clone()
     }
 
-    /// An [`crate::ig::Model`] over this runtime (default probe mode).
+    /// Live device shards.
+    pub fn shards(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// An [`crate::ig::Model`] over this runtime's first shard (default
+    /// probe mode).
     pub fn model(&self) -> PjrtModel {
-        PjrtModel::new(self.handle.clone(), self.manifest.features, self.manifest.num_classes)
+        PjrtModel::new(self.handle(), self.manifest.features, self.manifest.num_classes)
     }
 
-    /// Cumulative execution statistics from the device thread.
+    /// Cumulative execution statistics of the first device shard.
     pub fn stats(&self) -> Arc<RuntimeStats> {
-        self.handle.stats()
+        self.handles[0].stats()
+    }
+
+    /// Per-shard execution statistics.
+    pub fn shard_stats(&self) -> Vec<Arc<RuntimeStats>> {
+        self.handles.iter().map(|h| h.stats()).collect()
+    }
+
+    /// A [`GatherExec`] backend over the first `devices` shards — what
+    /// `Coordinator::start` drives. Fails if fewer shards are loaded
+    /// than asked for (load with [`Runtime::load_sharded`]).
+    pub fn sharded_backend(&self, devices: usize) -> Result<ShardedRuntime> {
+        ensure!(devices >= 1, "devices must be >= 1");
+        ensure!(
+            devices <= self.handles.len(),
+            "runtime has {} device shard(s) but {devices} were requested; load with Runtime::load_sharded",
+            self.handles.len()
+        );
+        Ok(ShardedRuntime {
+            shards: self.handles[..devices].to_vec(),
+            next_probe: AtomicUsize::new(0),
+        })
+    }
+}
+
+/// A [`GatherExec`] over several device shards: registration broadcasts
+/// to every shard (a chunk may execute anywhere), gather chunks route to
+/// the caller's shard, probes round-robin.
+pub struct ShardedRuntime {
+    shards: Vec<RuntimeHandle>,
+    next_probe: AtomicUsize,
+}
+
+impl GatherExec for ShardedRuntime {
+    fn features(&self) -> usize {
+        self.shards[0].features()
+    }
+
+    fn num_classes(&self) -> usize {
+        self.shards[0].num_classes()
+    }
+
+    fn forward(&self, imgs: &[f32], rows: usize) -> Result<Vec<f32>> {
+        // Round-robin probes across shards so stage 1 does not serialize
+        // on shard 0 while gradient chunks spread.
+        let k = self.next_probe.fetch_add(1, Ordering::Relaxed) % self.shards.len();
+        self.shards[k].forward(imgs, rows)
+    }
+
+    fn register_request(&self, slot: u64, x: &[f32], baseline: &[f32]) -> Result<()> {
+        for (k, shard) in self.shards.iter().enumerate() {
+            if let Err(e) = shard.register_request(slot, x, baseline) {
+                // Roll back the shards that already admitted the slot so
+                // a failed registration leaves no orphan residents.
+                for done in &self.shards[..k] {
+                    done.evict_request(slot);
+                }
+                return Err(e);
+            }
+        }
+        Ok(())
+    }
+
+    fn evict_request(&self, slot: u64) {
+        for shard in &self.shards {
+            shard.evict_request(slot);
+        }
+    }
+
+    fn resident_len(&self) -> usize {
+        // Registration is broadcast, so any shard's count is the pool
+        // gauge; use the first.
+        self.shards[0].resident_len()
+    }
+
+    fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn eval_gather(&self, shard: usize, lanes: &[GatherLane]) -> Result<GatherOut> {
+        self.shards[shard % self.shards.len()].eval_gather(0, lanes)
     }
 }

@@ -4,6 +4,7 @@
 use anyhow::{ensure, Result};
 
 use crate::exec::batch::{BatchExec, BatchOut, BatchPlan};
+use crate::exec::gather::GatherExec;
 use crate::ig::model::{eval_points, IgPointsOut, Model};
 
 use super::service::{Arg, ExeKind, RuntimeHandle};
@@ -15,7 +16,7 @@ pub enum ProbeMode {
     /// batch size, padded `fwd_b16` above it. PERF: on CPU-PJRT a padded
     /// lane costs real compute (~0.75 ms), so a 5-boundary probe is ~2x
     /// cheaper as five batch-1 calls (5 x ~1.0 ms) than as one padded
-    /// batch-16 call (~12 ms). See EXPERIMENTS.md §Perf.
+    /// batch-16 call (~12 ms). See docs/EXPERIMENTS.md §Perf.
     Auto,
     /// Always pack into `fwd_b16` (padding unused lanes).
     Batched,
@@ -50,6 +51,20 @@ impl PjrtModel {
     pub fn with_probe_mode(mut self, mode: ProbeMode) -> PjrtModel {
         self.probe_mode = mode;
         self
+    }
+
+    /// Upload a request's endpoints to the device once; point streams
+    /// evaluated through [`crate::ig::model::eval_points_resident`] with
+    /// this slot then skip the per-chunk `x`/baseline upload (the
+    /// resident-tensor path — `O(chunk)` host bytes per device chunk).
+    /// Pair with [`PjrtModel::evict_request`] when the request settles.
+    pub fn register_request(&self, slot: u64, x: &[f32], baseline: &[f32]) -> Result<()> {
+        self.handle.register_request(slot, x, baseline)
+    }
+
+    /// Release a slot registered with [`PjrtModel::register_request`].
+    pub fn evict_request(&self, slot: u64) {
+        self.handle.evict_request(slot);
     }
 
     fn probs_batched(&self, imgs: &[&[f32]]) -> Result<Vec<Vec<f64>>> {
@@ -131,6 +146,15 @@ impl Model for PjrtModel {
     /// `igchunk_b16` calls, ragged tails padded with zero-weight lanes
     /// (exactly no contribution; validated by the kernel tests on both
     /// sides), f64 accumulation across device chunks in stream order.
+    ///
+    /// With `plan.slot` set (endpoints registered via
+    /// [`PjrtModel::register_request`]) the per-device-chunk payload is
+    /// only alphas/weights/onehot — the resident `x`/baseline device
+    /// buffers are passed by reference, so host bytes per chunk drop
+    /// from `O(features)` to `O(chunk)`. The device-side arithmetic is
+    /// identical either way (same executable, same buffers' contents),
+    /// so attributions are bit-identical across the two paths
+    /// (artifact-gated test in `tests/runtime_artifacts.rs`).
     fn eval_batch(&self, plan: &BatchPlan<'_>) -> Result<BatchOut> {
         ensure!(
             plan.x.len() == self.features && plan.baseline.len() == self.features,
@@ -153,16 +177,23 @@ impl Model for PjrtModel {
             a[..n].copy_from_slice(a_chunk);
             w[..n].copy_from_slice(w_chunk);
 
-            let outs = self.handle.execute(
-                ExeKind::IgChunk16,
-                vec![
-                    Arg::vec(plan.x.to_vec()),
-                    Arg::vec(plan.baseline.to_vec()),
-                    Arg::vec(a),
-                    Arg::vec(w),
-                    Arg::vec(onehot.clone()),
-                ],
-            )?;
+            let outs = match plan.slot {
+                Some(slot) => self.handle.execute_resident(
+                    ExeKind::IgChunk16,
+                    slot,
+                    vec![Arg::vec(a), Arg::vec(w), Arg::vec(onehot.clone())],
+                )?,
+                None => self.handle.execute(
+                    ExeKind::IgChunk16,
+                    vec![
+                        Arg::vec(plan.x.to_vec()),
+                        Arg::vec(plan.baseline.to_vec()),
+                        Arg::vec(a),
+                        Arg::vec(w),
+                        Arg::vec(onehot.clone()),
+                    ],
+                )?,
+            };
             let chunk_partial = &outs[0];
             let probs = &outs[1];
             ensure!(chunk_partial.len() == self.features, "bad partial width");

@@ -1,13 +1,25 @@
 //! The device thread: owns the PJRT client + executables, executes jobs
 //! from a channel. See `runtime/mod.rs` for why this is a single thread.
+//!
+//! Besides raw executions the device thread owns the **resident request
+//! pool**: a request's `x`/baseline are uploaded once at admission
+//! ([`GatherExec::register_request`]) and referenced by later work —
+//! gather chunks stage their `chunk × features` device payload from the
+//! resident host copies into one reused buffer (no per-chunk allocation,
+//! `O(chunk)` bytes crossing the feeder→device channel), and
+//! resident-slot `igchunk_b*` executions pass the uploaded device
+//! buffers by reference (`O(chunk)` host bytes total). Entries are
+//! evicted on request settlement ([`GatherExec::evict_request`]).
 
+use std::collections::{HashMap, HashSet};
 use std::path::Path;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, ensure, Context, Result};
 
 use crate::exec::channel::{bounded, Sender};
+use crate::exec::gather::{GatherExec, GatherLane, GatherOut};
 use crate::metrics::{Counter, Histogram};
 
 use super::manifest::Manifest;
@@ -54,6 +66,9 @@ impl ExeKind {
     }
 }
 
+/// Fixed batch width of the `fwd_b16` / `igchunk_*16` executables.
+const BATCH16: usize = 16;
+
 /// One argument: flat f32 data + dims to reshape to (rank 1 or 2).
 #[derive(Debug, Clone)]
 pub struct Arg {
@@ -77,32 +92,57 @@ impl Arg {
     }
 }
 
-struct Job {
-    kind: ExeKind,
-    /// Args EXCLUDING the leading params (the device thread prepends the
-    /// resident parameter buffer).
-    args: Vec<Arg>,
-    reply: Sender<Result<Vec<Vec<f32>>>>,
+enum Job {
+    /// Raw execution: args EXCLUDING the leading params (the device
+    /// thread prepends the resident parameter buffer).
+    Execute { kind: ExeKind, args: Vec<Arg>, reply: Sender<Result<Vec<Vec<f32>>>> },
+    /// Execution whose `x`/`baseline` args are the resident device
+    /// buffers of `slot` (args carry only the per-chunk remainder:
+    /// alphas/weights/onehot — `O(chunk)` host bytes).
+    ExecuteResident {
+        kind: ExeKind,
+        slot: u64,
+        args: Vec<Arg>,
+        reply: Sender<Result<Vec<Vec<f32>>>>,
+    },
+    /// One gather-indexed cross-request chunk (`igchunk_m16`): per-lane
+    /// records only; endpoints come from the resident pool.
+    Gather { lanes: Vec<GatherLane>, reply: Sender<Result<GatherOut>> },
+    /// Upload a request's endpoints into the resident pool.
+    Register { slot: u64, x: Vec<f32>, baseline: Vec<f32>, reply: Sender<Result<()>> },
+    /// Drop a request's resident entry (no-op for unknown slots).
+    Evict { slot: u64 },
 }
 
-impl ExeKind {
+impl Job {
     /// Forward-only probes are latency-critical (they gate a request's
     /// schedule fan-out) and ~30x cheaper than gradient chunks, so they
-    /// jump the device queue. PERF: without this, a sequential 5-boundary
-    /// probe waits behind up to 5 in-flight ~30 ms gradient chunks.
+    /// jump the device queue — as do resident-pool registrations and
+    /// evictions, which gate admission/settlement and cost one buffer
+    /// upload. PERF: without this, a sequential 5-boundary probe waits
+    /// behind up to 5 in-flight ~30 ms gradient chunks.
     fn is_priority(&self) -> bool {
-        matches!(self, ExeKind::Fwd1 | ExeKind::Fwd16)
+        match self {
+            Job::Execute { kind, .. } => matches!(kind, ExeKind::Fwd1 | ExeKind::Fwd16),
+            Job::ExecuteResident { .. } | Job::Gather { .. } => false,
+            Job::Register { .. } | Job::Evict { .. } => true,
+        }
     }
 }
 
 /// Cumulative per-executable execution statistics (shared, lock-free).
 pub struct RuntimeStats {
-    /// Executions per [`ExeKind`] (indexed by kind).
+    /// Executions per [`ExeKind`] (indexed by kind; gather chunks count
+    /// under [`ExeKind::IgChunkMulti16`]).
     pub exec_count: [Counter; 5],
     /// Execution latency per [`ExeKind`] (indexed by kind).
     pub exec_latency: [Histogram; 5],
     /// Time jobs spent queued before the device picked them up.
     pub queue_wait: Histogram,
+    /// Resident-pool registrations served.
+    pub registrations: Counter,
+    /// Resident-pool evictions served.
+    pub evictions: Counter,
 }
 
 impl RuntimeStats {
@@ -111,6 +151,8 @@ impl RuntimeStats {
             exec_count: std::array::from_fn(|_| Counter::new()),
             exec_latency: std::array::from_fn(|_| Histogram::new_latency()),
             queue_wait: Histogram::new_latency(),
+            registrations: Counter::new(),
+            evictions: Counter::new(),
         }
     }
 
@@ -138,18 +180,50 @@ pub struct RuntimeHandle {
     stats: Arc<RuntimeStats>,
     features: usize,
     num_classes: usize,
+    /// Live resident slots as seen from the handle side (inserted on
+    /// successful register, removed on evict) — the coordinator's pool
+    /// gauge without a device round-trip. Tracking slots rather than a
+    /// counter keeps evictions of unknown slots exact no-ops (the
+    /// [`GatherExec::evict_request`] contract): a double evict can
+    /// never make the gauge under-report live registrations.
+    resident: Arc<Mutex<HashSet<u64>>>,
 }
 
 impl RuntimeHandle {
     /// Execute `kind` with `args` (params prepended device-side); returns
     /// the tuple outputs as flat f32 vectors. Forward probes take the
-    /// priority queue (see `ExeKind::is_priority`).
+    /// priority queue (see `Job::is_priority`).
     pub fn execute(&self, kind: ExeKind, args: Vec<Arg>) -> Result<Vec<Vec<f32>>> {
         let (rtx, rrx) = bounded(1);
-        let tx = if kind.is_priority() { &self.tx_hi } else { &self.tx_lo };
-        tx.send(Job { kind, args, reply: rtx })
-            .map_err(|_| anyhow!("runtime device thread is down"))?;
+        self.send(Job::Execute { kind, args, reply: rtx })?;
         rrx.recv().map_err(|_| anyhow!("runtime device thread dropped the reply"))?
+    }
+
+    /// Execute `kind` against the resident endpoints of `slot`: the
+    /// device passes the registered `x`/`baseline` buffers by reference
+    /// and `args` carries only the per-chunk remainder (alphas, weights,
+    /// onehot) — `O(chunk)` host bytes instead of `O(features)`. Valid
+    /// for the `igchunk_b*` executables, whose first two (post-params)
+    /// args are the endpoints. Fails if `slot` is not registered.
+    pub fn execute_resident(
+        &self,
+        kind: ExeKind,
+        slot: u64,
+        args: Vec<Arg>,
+    ) -> Result<Vec<Vec<f32>>> {
+        ensure!(
+            matches!(kind, ExeKind::IgChunk1 | ExeKind::IgChunk16),
+            "execute_resident only serves igchunk_b* executables, got {}",
+            kind.manifest_name()
+        );
+        let (rtx, rrx) = bounded(1);
+        self.send(Job::ExecuteResident { kind, slot, args, reply: rtx })?;
+        rrx.recv().map_err(|_| anyhow!("runtime device thread dropped the reply"))?
+    }
+
+    fn send(&self, job: Job) -> Result<()> {
+        let tx = if job.is_priority() { &self.tx_hi } else { &self.tx_lo };
+        tx.send(job).map_err(|_| anyhow!("runtime device thread is down"))
     }
 
     /// Shared execution statistics.
@@ -165,6 +239,70 @@ impl RuntimeHandle {
     /// Model class count.
     pub fn num_classes(&self) -> usize {
         self.num_classes
+    }
+}
+
+impl GatherExec for RuntimeHandle {
+    fn features(&self) -> usize {
+        self.features
+    }
+
+    fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    fn forward(&self, imgs: &[f32], rows: usize) -> Result<Vec<f32>> {
+        ensure!(rows >= 1 && rows <= BATCH16, "forward rows {rows} outside 1..={BATCH16}");
+        ensure!(imgs.len() == rows * self.features, "probe batch size mismatch");
+        if rows == 1 {
+            let arg = Arg::mat(imgs.to_vec(), 1, self.features);
+            let outs = self.execute(ExeKind::Fwd1, vec![arg])?;
+            let mut probs = outs.into_iter().next().ok_or_else(|| anyhow!("empty fwd output"))?;
+            probs.truncate(self.num_classes);
+            Ok(probs)
+        } else {
+            // Pad to the fixed fwd_b16 width; padding rows are discarded.
+            let mut flat = vec![0f32; BATCH16 * self.features];
+            flat[..imgs.len()].copy_from_slice(imgs);
+            let outs = self.execute(ExeKind::Fwd16, vec![Arg::mat(flat, BATCH16, self.features)])?;
+            let mut probs = outs.into_iter().next().ok_or_else(|| anyhow!("empty fwd output"))?;
+            probs.truncate(rows * self.num_classes);
+            Ok(probs)
+        }
+    }
+
+    fn register_request(&self, slot: u64, x: &[f32], baseline: &[f32]) -> Result<()> {
+        ensure!(
+            x.len() == self.features && baseline.len() == self.features,
+            "endpoint width mismatch"
+        );
+        let (rtx, rrx) = bounded(1);
+        self.send(Job::Register { slot, x: x.to_vec(), baseline: baseline.to_vec(), reply: rtx })?;
+        rrx.recv()
+            .map_err(|_| anyhow!("runtime device thread dropped the reply"))??;
+        self.resident.lock().unwrap().insert(slot);
+        Ok(())
+    }
+
+    fn evict_request(&self, slot: u64) {
+        // Unknown slots are exact no-ops; for known ones the device
+        // eviction is best-effort (a dead device thread has already
+        // dropped its pool, so the gauge removal alone is correct).
+        if self.resident.lock().unwrap().remove(&slot) {
+            let _ = self.send(Job::Evict { slot });
+        }
+    }
+
+    fn resident_len(&self) -> usize {
+        self.resident.lock().unwrap().len()
+    }
+
+    fn eval_gather(&self, _shard: usize, lanes: &[GatherLane]) -> Result<GatherOut> {
+        let n = lanes.len();
+        ensure!(n <= BATCH16, "gather chunk {n} exceeds device width {BATCH16}");
+        let (rtx, rrx) = bounded(1);
+        self.send(Job::Gather { lanes: lanes.to_vec(), reply: rtx })?;
+        rrx.recv().map_err(|_| anyhow!("runtime device thread dropped the reply"))?
     }
 }
 
@@ -203,7 +341,37 @@ pub fn spawn(dir: &Path, manifest: &Manifest, params: Vec<f32>) -> Result<Runtim
         .recv()
         .map_err(|_| anyhow!("device thread died during setup"))??;
 
-    Ok(RuntimeHandle { tx_hi, tx_lo, stats, features, num_classes })
+    Ok(RuntimeHandle {
+        tx_hi,
+        tx_lo,
+        stats,
+        features,
+        num_classes,
+        resident: Arc::new(Mutex::new(HashSet::new())),
+    })
+}
+
+/// One request's resident endpoints: device buffers (referenced by
+/// resident-slot executions) plus host copies (staged into gather
+/// chunks; the `igchunk_m16` executable takes concatenated
+/// `chunk × features` endpoint matrices, so per-request device buffers
+/// cannot feed it directly — see `docs/ARCHITECTURE.md` §resident).
+struct Resident {
+    x_host: Vec<f32>,
+    b_host: Vec<f32>,
+    x_dev: xla::PjRtBuffer,
+    b_dev: xla::PjRtBuffer,
+}
+
+/// Reused gather staging: one set of `chunk`-shaped host buffers the
+/// device thread fills from the resident pool per chunk — zero
+/// steady-state allocation on the gather hot path.
+struct GatherStaging {
+    xs: Vec<f32>,
+    bs: Vec<f32>,
+    alphas: Vec<f32>,
+    weights: Vec<f32>,
+    onehots: Vec<f32>,
 }
 
 /// Device-side state (NOT Send; lives only on the device thread).
@@ -214,6 +382,13 @@ struct Device {
     /// to every execution (PERF: saves a ~116 KiB host copy per exec vs
     /// rebuilding a params literal each time).
     params: xla::PjRtBuffer,
+    features: usize,
+    num_classes: usize,
+    /// Chunk width of the cross-request executable (`igchunk_m16`).
+    chunk: usize,
+    /// Resident request endpoints by slot.
+    resident: HashMap<u64, Resident>,
+    staging: GatherStaging,
 }
 
 impl Device {
@@ -243,18 +418,41 @@ impl Device {
             .buffer_from_host_buffer(&params, &[n], None)
             .map_err(into_anyhow)
             .context("uploading params buffer")?;
-        Ok(Device { client, exes, params })
+        let features = manifest.features;
+        let num_classes = manifest.num_classes;
+        let chunk = manifest
+            .executables
+            .get(ExeKind::IgChunkMulti16.manifest_name())
+            .map(|m| m.chunk)
+            .unwrap_or(BATCH16);
+        Ok(Device {
+            client,
+            exes,
+            params,
+            features,
+            num_classes,
+            chunk,
+            resident: HashMap::new(),
+            staging: GatherStaging {
+                xs: vec![0f32; chunk * features],
+                bs: vec![0f32; chunk * features],
+                alphas: vec![0f32; chunk],
+                weights: vec![0f32; chunk],
+                onehots: vec![0f32; chunk * num_classes],
+            },
+        })
     }
 
     fn serve(
-        self,
+        mut self,
         rx_hi: crate::exec::channel::Receiver<Job>,
         rx_lo: crate::exec::channel::Receiver<Job>,
         stats: &RuntimeStats,
     ) {
-        // Two-level priority: drain hi (forward probes) before lo
-        // (gradient chunks); park briefly on lo when both are empty so a
-        // newly-arrived hi job is picked up within ~500 µs.
+        // Two-level priority: drain hi (forward probes, resident-pool
+        // admin) before lo (gradient chunks); park briefly on lo when
+        // both are empty so a newly-arrived hi job is picked up within
+        // ~500 µs.
         let mut hi_closed = false;
         let mut lo_closed = false;
         while !(hi_closed && lo_closed) {
@@ -291,17 +489,68 @@ impl Device {
                     }
                 }
             };
-            let t0 = Instant::now();
-            let result = self.run(job.kind, &job.args);
-            stats.exec_count[job.kind.index()].inc();
-            stats.exec_latency[job.kind.index()].record(t0.elapsed().as_secs_f64());
-            // Receiver may have given up (cancelled request): ignore.
-            let _ = job.reply.send(result);
+            self.dispatch(job, stats);
         }
     }
 
+    fn dispatch(&mut self, job: Job, stats: &RuntimeStats) {
+        // Receivers may have given up (cancelled request): ignore send errors.
+        match job {
+            Job::Execute { kind, args, reply } => {
+                let t0 = Instant::now();
+                let result = self.run(kind, &args);
+                stats.exec_count[kind.index()].inc();
+                stats.exec_latency[kind.index()].record(t0.elapsed().as_secs_f64());
+                let _ = reply.send(result);
+            }
+            Job::ExecuteResident { kind, slot, args, reply } => {
+                let t0 = Instant::now();
+                let result = self.run_resident(kind, slot, &args);
+                stats.exec_count[kind.index()].inc();
+                stats.exec_latency[kind.index()].record(t0.elapsed().as_secs_f64());
+                let _ = reply.send(result);
+            }
+            Job::Gather { lanes, reply } => {
+                let t0 = Instant::now();
+                let result = self.run_gather(&lanes);
+                let k = ExeKind::IgChunkMulti16;
+                stats.exec_count[k.index()].inc();
+                stats.exec_latency[k.index()].record(t0.elapsed().as_secs_f64());
+                let _ = reply.send(result);
+            }
+            Job::Register { slot, x, baseline, reply } => {
+                stats.registrations.inc();
+                let _ = reply.send(self.register(slot, x, baseline));
+            }
+            Job::Evict { slot } => {
+                stats.evictions.inc();
+                self.resident.remove(&slot);
+            }
+        }
+    }
+
+    fn register(&mut self, slot: u64, x: Vec<f32>, baseline: Vec<f32>) -> Result<()> {
+        ensure!(
+            !self.resident.contains_key(&slot),
+            "resident slot {slot} already registered"
+        );
+        let f = self.features;
+        ensure!(x.len() == f && baseline.len() == f, "endpoint width mismatch");
+        let x_dev = self
+            .client
+            .buffer_from_host_buffer(&x, &[f], None)
+            .map_err(into_anyhow)
+            .context("uploading resident x")?;
+        let b_dev = self
+            .client
+            .buffer_from_host_buffer(&baseline, &[f], None)
+            .map_err(into_anyhow)
+            .context("uploading resident baseline")?;
+        self.resident.insert(slot, Resident { x_host: x, b_host: baseline, x_dev, b_dev });
+        Ok(())
+    }
+
     fn run(&self, kind: ExeKind, args: &[Arg]) -> Result<Vec<Vec<f32>>> {
-        let exe = &self.exes[kind.index()];
         // Upload job args as device buffers; params are already resident.
         let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(args.len());
         for a in args {
@@ -314,6 +563,84 @@ impl Device {
         let mut refs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(args.len() + 1);
         refs.push(&self.params);
         refs.extend(bufs.iter());
+        self.execute_refs(kind, refs)
+    }
+
+    /// Execute `kind` with `slot`'s resident endpoint buffers spliced in
+    /// as the first two post-params args (the `igchunk_b*` arg order:
+    /// params, x, baseline, alphas, weights, onehot).
+    fn run_resident(&self, kind: ExeKind, slot: u64, args: &[Arg]) -> Result<Vec<Vec<f32>>> {
+        let res = self
+            .resident
+            .get(&slot)
+            .ok_or_else(|| anyhow!("resident slot {slot} not registered"))?;
+        let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(args.len());
+        for a in args {
+            bufs.push(
+                self.client
+                    .buffer_from_host_buffer(&a.data, &a.dims, None)
+                    .map_err(into_anyhow)?,
+            );
+        }
+        let mut refs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(args.len() + 3);
+        refs.push(&self.params);
+        refs.push(&res.x_dev);
+        refs.push(&res.b_dev);
+        refs.extend(bufs.iter());
+        self.execute_refs(kind, refs)
+    }
+
+    /// One gather chunk: stage per-lane endpoints from the resident host
+    /// copies into the reused `chunk × features` buffers, zero-pad the
+    /// scalar lanes, execute `igchunk_m16`, and return the per-lane
+    /// partial rows (padding rows excluded).
+    ///
+    /// Stale endpoint rows from the previous chunk are left in place for
+    /// padding lanes: their weight and one-hot are zero, so they
+    /// contribute exactly nothing (the same padding contract the
+    /// pre-gather feeder relied on) and their output rows are discarded.
+    fn run_gather(&mut self, lanes: &[GatherLane]) -> Result<GatherOut> {
+        let f = self.features;
+        let c = self.num_classes;
+        let chunk = self.chunk;
+        ensure!(lanes.len() <= chunk, "gather chunk {} exceeds device width {chunk}", lanes.len());
+        for (k, lane) in lanes.iter().enumerate() {
+            let res = self
+                .resident
+                .get(&lane.slot)
+                .ok_or_else(|| anyhow!("resident slot {} not registered", lane.slot))?;
+            ensure!(lane.target < c, "lane target {} out of range", lane.target);
+            self.staging.xs[k * f..(k + 1) * f].copy_from_slice(&res.x_host);
+            self.staging.bs[k * f..(k + 1) * f].copy_from_slice(&res.b_host);
+            self.staging.alphas[k] = lane.alpha;
+            self.staging.weights[k] = lane.weight;
+            let row = &mut self.staging.onehots[k * c..(k + 1) * c];
+            row.fill(0.0);
+            row[lane.target] = 1.0;
+        }
+        for k in lanes.len()..chunk {
+            self.staging.alphas[k] = 0.0;
+            self.staging.weights[k] = 0.0;
+            self.staging.onehots[k * c..(k + 1) * c].fill(0.0);
+        }
+
+        let upload = |data: &[f32], dims: &[usize]| -> Result<xla::PjRtBuffer> {
+            self.client.buffer_from_host_buffer(data, dims, None).map_err(into_anyhow)
+        };
+        let xs = upload(&self.staging.xs, &[chunk, f])?;
+        let bs = upload(&self.staging.bs, &[chunk, f])?;
+        let alphas = upload(&self.staging.alphas, &[chunk])?;
+        let weights = upload(&self.staging.weights, &[chunk])?;
+        let onehots = upload(&self.staging.onehots, &[chunk, c])?;
+        let refs = vec![&self.params, &xs, &bs, &alphas, &weights, &onehots];
+        let outs = self.execute_refs(ExeKind::IgChunkMulti16, refs)?;
+        let partials = outs.into_iter().next().ok_or_else(|| anyhow!("empty gather output"))?;
+        ensure!(partials.len() >= lanes.len() * f, "bad gather partial width");
+        Ok(GatherOut { rows: partials[..lanes.len() * f].to_vec(), features: f })
+    }
+
+    fn execute_refs(&self, kind: ExeKind, refs: Vec<&xla::PjRtBuffer>) -> Result<Vec<Vec<f32>>> {
+        let exe = &self.exes[kind.index()];
         let result = exe.execute_b(&refs).map_err(into_anyhow)?;
         let tuple = result[0][0].to_literal_sync().map_err(into_anyhow)?;
         let outs = tuple.to_tuple().map_err(into_anyhow)?;
@@ -364,5 +691,24 @@ mod tests {
         let s = RuntimeStats::new();
         assert_eq!(s.total_executions(), 0);
         assert_eq!(s.count(ExeKind::Fwd1), 0);
+        assert_eq!(s.registrations.get(), 0);
+        assert_eq!(s.evictions.get(), 0);
+    }
+
+    #[test]
+    fn job_priority_classes() {
+        let (tx, _rx) = bounded::<Result<Vec<Vec<f32>>>>(1);
+        let probe = Job::Execute { kind: ExeKind::Fwd1, args: vec![], reply: tx.clone() };
+        assert!(probe.is_priority());
+        let grad = Job::Execute { kind: ExeKind::IgChunk16, args: vec![], reply: tx.clone() };
+        assert!(!grad.is_priority());
+        let res =
+            Job::ExecuteResident { kind: ExeKind::IgChunk16, slot: 0, args: vec![], reply: tx };
+        assert!(!res.is_priority());
+        let (gtx, _grx) = bounded::<Result<GatherOut>>(1);
+        assert!(!Job::Gather { lanes: vec![], reply: gtx }.is_priority());
+        let (rtx, _rrx) = bounded::<Result<()>>(1);
+        assert!(Job::Register { slot: 1, x: vec![], baseline: vec![], reply: rtx }.is_priority());
+        assert!(Job::Evict { slot: 1 }.is_priority());
     }
 }

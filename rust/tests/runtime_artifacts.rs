@@ -254,6 +254,115 @@ fn runtime_stats_accumulate() {
 }
 
 #[test]
+fn resident_path_bit_identical_to_upload_path() {
+    if !have_artifacts() {
+        return skip("resident_path_bit_identical_to_upload_path");
+    }
+    // The resident-tensor path (endpoints uploaded once, igchunk_b16 fed
+    // O(chunk) bytes per call) must reproduce the per-chunk upload path
+    // to the bit: same executable, same buffer contents, only the
+    // transport changes.
+    let rt = runtime();
+    let model = rt.model();
+    let img = synth::gen_image(4, 0);
+    let baseline = vec![0f32; synth::F];
+    let alphas: Vec<f32> = (0..21).map(|k| k as f32 / 20.0).collect();
+    let weights: Vec<f32> = vec![1.0 / 21.0; 21];
+
+    let seq = nuig::exec::BatchExec::Sequential;
+    let uploaded =
+        nuig::ig::eval_points(&model, &img, &baseline, &alphas, &weights, 0, &seq).unwrap();
+
+    model.register_request(7, &img, &baseline).unwrap();
+    let resident =
+        nuig::ig::eval_points_resident(&model, &img, &baseline, &alphas, &weights, 0, &seq, 7)
+            .unwrap();
+    model.evict_request(7);
+
+    assert_eq!(resident.target_probs, uploaded.target_probs);
+    for (i, (a, b)) in resident.partial.iter().zip(&uploaded.partial).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "feature {i}: resident path moved a bit");
+    }
+    // An evicted slot fails loudly rather than silently re-uploading.
+    let err = nuig::ig::eval_points_resident(&model, &img, &baseline, &alphas, &weights, 0, &seq, 7)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("not registered"), "{err}");
+}
+
+#[test]
+fn gather_chunk_matches_materialized_multi16() {
+    if !have_artifacts() {
+        return skip("gather_chunk_matches_materialized_multi16");
+    }
+    // The gather-indexed cross-request path (resident endpoints staged
+    // device-side) must reproduce the hand-materialized igchunk_m16 call
+    // it replaced, bit for bit.
+    use nuig::exec::gather::{GatherExec, GatherLane};
+    let rt = runtime();
+    let handle = rt.handle();
+    let img_a = synth::gen_image(0, 0);
+    let img_b = synth::gen_image(3, 0);
+    let f = synth::F;
+    let c = synth::NUM_CLASSES;
+    let black = vec![0f32; f];
+
+    handle.register_request(1, &img_a, &black).unwrap();
+    handle.register_request(2, &img_b, &black).unwrap();
+    assert_eq!(handle.resident_len(), 2);
+
+    let lanes: Vec<GatherLane> = (0..6)
+        .map(|k| GatherLane {
+            slot: 1 + (k % 2) as u64,
+            alpha: k as f32 / 5.0,
+            weight: 1.0 / 6.0,
+            target: k % c,
+        })
+        .collect();
+    let gathered = handle.eval_gather(0, &lanes).unwrap();
+    assert_eq!(gathered.lanes(), 6);
+
+    // Hand-materialized reference (the pre-gather feeder's exact args).
+    let mut xs = vec![0f32; 16 * f];
+    let mut onehots = vec![0f32; 16 * c];
+    let mut alphas = vec![0f32; 16];
+    let mut weights = vec![0f32; 16];
+    for (k, lane) in lanes.iter().enumerate() {
+        let src = if lane.slot == 1 { &img_a } else { &img_b };
+        xs[k * f..(k + 1) * f].copy_from_slice(src);
+        onehots[k * c + lane.target] = 1.0;
+        alphas[k] = lane.alpha;
+        weights[k] = lane.weight;
+    }
+    let outs = handle
+        .execute(
+            nuig::runtime::ExeKind::IgChunkMulti16,
+            vec![
+                Arg::mat(xs, 16, f),
+                Arg::mat(vec![0f32; 16 * f], 16, f),
+                Arg::vec(alphas),
+                Arg::vec(weights),
+                Arg::mat(onehots, 16, c),
+            ],
+        )
+        .unwrap();
+    for k in 0..6 {
+        let got = gathered.row(k);
+        let want = &outs[0][k * f..(k + 1) * f];
+        for i in 0..f {
+            assert_eq!(
+                got[i].to_bits(),
+                want[i].to_bits(),
+                "lane {k} feature {i}: gather staging moved a bit"
+            );
+        }
+    }
+    handle.evict_request(1);
+    handle.evict_request(2);
+    assert_eq!(handle.resident_len(), 0);
+}
+
+#[test]
 fn ragged_tail_padding_is_exact() {
     if !have_artifacts() {
         return skip("ragged_tail_padding_is_exact");
