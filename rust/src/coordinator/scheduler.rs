@@ -16,10 +16,11 @@
 //! docs/EXPERIMENTS.md §Perf records the measured p50/p95 differences.
 
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
+
+use crate::exec::sync::{self, Condvar, Mutex};
 
 use super::state::{ChunkPlan, Lane};
 
@@ -147,7 +148,7 @@ impl LaneScheduler {
         if points == 0 {
             return Ok(());
         }
-        let mut st = self.state.lock().unwrap();
+        let mut st = sync::lock(&self.state);
         loop {
             if st.closed {
                 bail!("lane scheduler closed");
@@ -166,7 +167,7 @@ impl LaneScheduler {
                 self.not_empty.notify_all();
                 return Ok(());
             }
-            st = self.not_full.wait(st).unwrap();
+            st = sync::wait(&self.not_full, st);
         }
     }
 
@@ -191,7 +192,7 @@ impl LaneScheduler {
         if points == 0 {
             return Ok(());
         }
-        let mut st = self.state.lock().unwrap();
+        let mut st = sync::lock(&self.state);
         if st.closed {
             bail!("lane scheduler closed");
         }
@@ -206,7 +207,7 @@ impl LaneScheduler {
     /// `wait` to top up a non-empty chunk (blocks indefinitely for the
     /// first lane; returns `Closed` once closed and drained).
     pub fn pop_chunk(&self, chunk: usize, wait: Duration) -> Popped {
-        let mut st = self.state.lock().unwrap();
+        let mut st = sync::lock(&self.state);
         // Block for the first available lane.
         loop {
             if st.total > 0 {
@@ -215,7 +216,7 @@ impl LaneScheduler {
             if st.closed {
                 return Popped::Closed;
             }
-            st = self.not_empty.wait(st).unwrap();
+            st = sync::wait(&self.not_empty, st);
         }
         let mut out = Vec::with_capacity(chunk);
         Self::fill(&mut st, self.policy, chunk, &mut out);
@@ -234,7 +235,7 @@ impl LaneScheduler {
             if now >= deadline {
                 break;
             }
-            let (guard, timeout) = self.not_empty.wait_timeout(st, deadline - now).unwrap();
+            let (guard, timeout) = sync::wait_timeout(&self.not_empty, st, deadline - now);
             st = guard;
             if timeout.timed_out() && st.total == 0 {
                 break;
@@ -293,7 +294,7 @@ impl LaneScheduler {
 
     /// Close: pushes fail, pops drain then report `Closed`.
     pub fn close(&self) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = sync::lock(&self.state);
         st.closed = true;
         drop(st);
         self.not_empty.notify_all();
@@ -302,7 +303,7 @@ impl LaneScheduler {
 
     /// Gradient points (device lanes) currently queued across all plans.
     pub fn len(&self) -> usize {
-        self.state.lock().unwrap().total
+        sync::lock(&self.state).total
     }
 
     /// Whether no points are queued.
@@ -318,8 +319,8 @@ mod tests {
     use crate::coordinator::state::RequestState;
     use crate::ig::IgOptions;
     use crate::metrics::StageBreakdown;
-    use std::sync::atomic::{AtomicBool, AtomicUsize};
-    use std::sync::{Arc, Mutex as StdMutex};
+    use crate::exec::sync::atomic::{AtomicBool, AtomicUsize};
+    use std::sync::Arc;
 
     fn lanes(id: u64, n: usize) -> Vec<ChunkPlan> {
         let (tx, _h) = ResponseHandle::pair(id);
@@ -330,12 +331,12 @@ mod tests {
             target: 0,
             opts: IgOptions::default(),
             budget: crate::coordinator::request::LatencyBudget::Unbounded,
-            acc: StdMutex::new(crate::coordinator::state::Accum::new(4)),
+            acc: Mutex::new(crate::coordinator::state::Accum::new(4)),
             remaining: AtomicUsize::new(n),
             steps: n,
             probe_passes: 0,
             endpoint_gap: 0.0,
-            breakdown: StdMutex::new(StageBreakdown::default()),
+            breakdown: Mutex::new(StageBreakdown::default()),
             submitted_at: Instant::now(),
             queue_wait: Duration::ZERO,
             reply: tx,

@@ -8,14 +8,15 @@
 //! inject `ig::model::AnalyticExec` and exercise the identical serving
 //! path without artifacts.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, ensure, Context, Result};
 
 use crate::config::{AdmissionConfig, CoordinatorConfig};
 use crate::exec::channel::{bounded, Receiver, Sender};
+use crate::exec::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use crate::exec::sync::{self, Mutex};
 use crate::exec::gather::{GatherExec, GatherLane};
 use crate::exec::CancelToken;
 use crate::ig::engine::argmax;
@@ -130,7 +131,7 @@ impl CoordinatorStats {
     /// zero completed chunks (nothing dispatched yet) this is 0.0, not
     /// NaN — callers can print it unconditionally.
     pub fn mean_occupancy(&self, chunk: usize) -> f64 {
-        self.batch.lock().unwrap().occupancy(chunk)
+        sync::lock(&self.batch).occupancy(chunk)
     }
 
     /// Per-tier stats for `tier`.
@@ -700,7 +701,7 @@ fn route_one(sub: Submission, queue_wait: Duration, ctx: &RouterCtx) -> Result<(
         submitted_at,
         queue_wait,
         reply,
-        completed: std::sync::atomic::AtomicBool::new(false),
+        completed: AtomicBool::new(false),
         in_flight: in_flight.clone(),
         anytime,
         resident,
@@ -739,7 +740,7 @@ fn route_one(sub: Submission, queue_wait: Duration, ctx: &RouterCtx) -> Result<(
 /// request that already failed on an earlier chunk settles exactly once.
 fn finish_request(stats: &Arc<CoordinatorStats>, state: &Arc<RequestState>) {
     {
-        let mut bd = state.breakdown.lock().unwrap();
+        let mut bd = sync::lock(&state.breakdown);
         // Execute time ≈ submit-to-finalize minus probe and schedule
         // (good enough for the overhead fractions; per-chunk attribution
         // would need device-side tagging).
@@ -789,7 +790,7 @@ fn feeder_loop(
             continue;
         }
         stats.batch_occupancy.observe(lanes.len() as f64 / chunk as f64);
-        stats.batch.lock().unwrap().record(lanes.len());
+        sync::lock(&stats.batch).record(lanes.len());
         stats.feeders[feeder].chunks.inc();
         stats.feeders[feeder].lanes.add(lanes.len() as u64);
 
@@ -856,7 +857,6 @@ fn feeder_loop(
 mod tests {
     use super::*;
     use crate::ig::IgOptions;
-    use std::sync::atomic::AtomicBool;
 
     fn stats() -> Arc<CoordinatorStats> {
         Arc::new(CoordinatorStats::new(1))

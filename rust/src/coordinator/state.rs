@@ -15,9 +15,11 @@
 //! index order, so only chunk-completion races park rows.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
+
+use crate::exec::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use crate::exec::sync::{self, Mutex};
 
 use crate::exec::channel::Sender;
 use crate::exec::gather::GatherExec;
@@ -198,7 +200,7 @@ impl RequestState {
     /// drains every parked row (all indices are then present), so a
     /// `true` return implies the accumulator is fully committed.
     pub fn add_lane(&self, idx: u32, partial: &[f32]) -> bool {
-        self.acc.lock().unwrap().add(idx, partial);
+        sync::lock(&self.acc).add(idx, partial);
         self.remaining.fetch_sub(1, Ordering::AcqRel) == 1
     }
 
@@ -224,13 +226,14 @@ impl RequestState {
             return RoundOutcome::Finalize;
         };
         let delta = {
-            let acc = self.acc.lock().unwrap();
+            let acc = sync::lock(&self.acc);
+            // nuig:allow(float-reduce): sequential in-order Vec iteration — fixed order
             let sum: f64 = acc.values.iter().sum();
             (sum - self.endpoint_gap).abs()
         };
-        any.residuals.lock().unwrap().push(delta);
+        sync::lock(&any.residuals).push(delta);
 
-        let mut sched = any.schedule.lock().unwrap();
+        let mut sched = sync::lock(&any.schedule);
         if !any.policy.should_refine(delta, sched.m_total) {
             return RoundOutcome::Finalize;
         }
@@ -241,7 +244,7 @@ impl RequestState {
         };
         let novel = refined.novel_vs(&sched);
         {
-            let mut acc = self.acc.lock().unwrap();
+            let mut acc = sync::lock(&self.acc);
             for v in acc.values.iter_mut() {
                 *v *= Schedule::REFINE_CARRY;
             }
@@ -267,7 +270,7 @@ impl RequestState {
     pub fn abort_refinement(&self, novel_lanes: usize) {
         let Some(any) = &self.anytime else { return };
         {
-            let mut acc = self.acc.lock().unwrap();
+            let mut acc = sync::lock(&self.acc);
             for v in acc.values.iter_mut() {
                 *v /= Schedule::REFINE_CARRY;
             }
@@ -279,7 +282,7 @@ impl RequestState {
     pub fn rounds(&self) -> usize {
         self.anytime
             .as_ref()
-            .map(|a| a.residuals.lock().unwrap().len().max(1))
+            .map(|a| sync::lock(&a.residuals).len().max(1))
             .unwrap_or(1)
     }
 
@@ -291,13 +294,14 @@ impl RequestState {
         if !self.try_complete() {
             return false;
         }
-        let values = self.acc.lock().unwrap().values.clone();
+        let values = sync::lock(&self.acc).values.clone();
+        // nuig:allow(float-reduce): sequential in-order Vec iteration — fixed order
         let sum: f64 = values.iter().sum();
         let delta = (sum - self.endpoint_gap).abs();
         let (steps, rounds, residuals) = match &self.anytime {
             None => (self.steps, 1, vec![delta]),
             Some(any) => {
-                let residuals = any.residuals.lock().unwrap().clone();
+                let residuals = sync::lock(&any.residuals).clone();
                 (
                     any.evals.load(Ordering::Acquire),
                     residuals.len().max(1),
@@ -314,7 +318,7 @@ impl RequestState {
             endpoint_gap: self.endpoint_gap,
             rounds,
             residuals,
-            breakdown: *self.breakdown.lock().unwrap(),
+            breakdown: *sync::lock(&self.breakdown),
         };
         let resp = ExplainResponse {
             id: self.id,

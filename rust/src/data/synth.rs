@@ -131,6 +131,7 @@ pub fn gen_image(class_id: usize, index: usize) -> Image {
 
 /// f64 sum of an image (the cross-language checksum primitive).
 pub fn image_sum(img: &[f32]) -> f64 {
+    // nuig:allow(float-reduce): sequential in-order slice iteration — fixed order
     img.iter().map(|&v| v as f64).sum()
 }
 

@@ -7,12 +7,23 @@
 //! * `send` blocks while full; returns `Err(SendError)` once closed.
 //! * `recv` blocks while empty; returns `Err(RecvError)` once closed AND
 //!   drained — in-flight items are never lost on close.
-//! * Any handle may `close()`; dropping all Senders also closes.
+//! * Any handle may [`Sender::close`]/[`Receiver::close`]; dropping all
+//!   Senders also closes, and so does dropping all Receivers — a sender
+//!   parked on a full queue with no receiver left alive would otherwise
+//!   wait forever (the interleaving model in `tests/interleave_models.rs`
+//!   surfaces exactly that as a deadlock).
+//!
+//! All synchronization goes through [`crate::exec::sync`]: poison-safe
+//! lock helpers in production, instrumented shims under
+//! `--features loom-models` so the close/wakeup protocol is exhaustively
+//! interleaved by `exec::interleave`.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::time::Duration;
+
+use crate::exec::sync::atomic::{AtomicUsize, Ordering};
+use crate::exec::sync::{self, Condvar, Mutex};
 
 /// Error returned by [`Sender::send`] on a closed channel; carries the
 /// rejected value back to the caller.
@@ -29,11 +40,26 @@ struct Shared<T> {
     not_empty: Condvar,
     cap: usize,
     senders: AtomicUsize,
+    receivers: AtomicUsize,
 }
 
 struct State<T> {
     items: VecDeque<T>,
     closed: bool,
+}
+
+impl<T> Shared<T> {
+    /// Set `closed` under the lock and wake every parked thread on both
+    /// sides. The flag and the wakeups must agree: the flag is only ever
+    /// set while the queue mutex is held, so a parked thread cannot
+    /// re-check the predicate between the flag write and its notify.
+    fn close(&self) {
+        let mut st = sync::lock(&self.q);
+        st.closed = true;
+        drop(st);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
 }
 
 /// Create a bounded channel of capacity `cap` (>= 1).
@@ -45,6 +71,7 @@ pub fn bounded<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
         not_empty: Condvar::new(),
         cap,
         senders: AtomicUsize::new(1),
+        receivers: AtomicUsize::new(1),
     });
     (Sender { shared: shared.clone() }, Receiver { shared })
 }
@@ -68,6 +95,7 @@ impl<T> Clone for Sender<T> {
 
 impl<T> Clone for Receiver<T> {
     fn clone(&self) -> Self {
+        self.shared.receivers.fetch_add(1, Ordering::Relaxed);
         Receiver { shared: self.shared.clone() }
     }
 }
@@ -75,12 +103,22 @@ impl<T> Clone for Receiver<T> {
 impl<T> Drop for Sender<T> {
     fn drop(&mut self) {
         if self.shared.senders.fetch_sub(1, Ordering::AcqRel) == 1 {
-            // Last sender gone: close so receivers drain and stop.
-            let mut st = self.shared.q.lock().unwrap();
-            st.closed = true;
-            drop(st);
-            self.shared.not_empty.notify_all();
-            self.shared.not_full.notify_all();
+            // Last sender gone: close so receivers drain and stop. The
+            // count can only hit zero once (cloning requires a live
+            // sender), so this close races nothing but parked receivers —
+            // which Shared::close wakes under the lock.
+            self.shared.close();
+        }
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        if self.shared.receivers.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // Last receiver gone: nobody can ever drain the queue again,
+            // so close to fail parked and future senders instead of
+            // leaving them blocked on backpressure forever.
+            self.shared.close();
         }
     }
 }
@@ -88,7 +126,7 @@ impl<T> Drop for Sender<T> {
 impl<T> Sender<T> {
     /// Blocking send with backpressure. Fails only if the channel closed.
     pub fn send(&self, item: T) -> Result<(), SendError<T>> {
-        let mut st = self.shared.q.lock().unwrap();
+        let mut st = sync::lock(&self.shared.q);
         loop {
             if st.closed {
                 return Err(SendError(item));
@@ -99,13 +137,13 @@ impl<T> Sender<T> {
                 self.shared.not_empty.notify_one();
                 return Ok(());
             }
-            st = self.shared.not_full.wait(st).unwrap();
+            st = sync::wait(&self.shared.not_full, st);
         }
     }
 
     /// Non-blocking send: `Err` with the value if full or closed.
     pub fn try_send(&self, item: T) -> Result<(), SendError<T>> {
-        let mut st = self.shared.q.lock().unwrap();
+        let mut st = sync::lock(&self.shared.q);
         if st.closed || st.items.len() >= self.shared.cap {
             return Err(SendError(item));
         }
@@ -117,16 +155,12 @@ impl<T> Sender<T> {
 
     /// Close the channel; senders fail fast, receivers drain then stop.
     pub fn close(&self) {
-        let mut st = self.shared.q.lock().unwrap();
-        st.closed = true;
-        drop(st);
-        self.shared.not_empty.notify_all();
-        self.shared.not_full.notify_all();
+        self.shared.close();
     }
 
     /// Queue depth right now (diagnostic; racy by nature).
     pub fn len(&self) -> usize {
-        self.shared.q.lock().unwrap().items.len()
+        sync::lock(&self.shared.q).items.len()
     }
 
     /// Whether the queue is empty right now (diagnostic; racy by nature).
@@ -138,7 +172,7 @@ impl<T> Sender<T> {
 impl<T> Receiver<T> {
     /// Blocking receive; drains remaining items after close, then errors.
     pub fn recv(&self) -> Result<T, RecvError> {
-        let mut st = self.shared.q.lock().unwrap();
+        let mut st = sync::lock(&self.shared.q);
         loop {
             if let Some(item) = st.items.pop_front() {
                 drop(st);
@@ -148,14 +182,14 @@ impl<T> Receiver<T> {
             if st.closed {
                 return Err(RecvError);
             }
-            st = self.shared.not_empty.wait(st).unwrap();
+            st = sync::wait(&self.shared.not_empty, st);
         }
     }
 
     /// Receive with a timeout; `Ok(None)` on timeout.
     pub fn recv_timeout(&self, dur: Duration) -> Result<Option<T>, RecvError> {
         let deadline = std::time::Instant::now() + dur;
-        let mut st = self.shared.q.lock().unwrap();
+        let mut st = sync::lock(&self.shared.q);
         loop {
             if let Some(item) = st.items.pop_front() {
                 drop(st);
@@ -169,7 +203,7 @@ impl<T> Receiver<T> {
             if now >= deadline {
                 return Ok(None);
             }
-            let (guard, res) = self.shared.not_empty.wait_timeout(st, deadline - now).unwrap();
+            let (guard, res) = sync::wait_timeout(&self.shared.not_empty, st, deadline - now);
             st = guard;
             if res.timed_out() && st.items.is_empty() {
                 if st.closed {
@@ -182,7 +216,7 @@ impl<T> Receiver<T> {
 
     /// Non-blocking receive.
     pub fn try_recv(&self) -> Result<Option<T>, RecvError> {
-        let mut st = self.shared.q.lock().unwrap();
+        let mut st = sync::lock(&self.shared.q);
         if let Some(item) = st.items.pop_front() {
             drop(st);
             self.shared.not_full.notify_one();
@@ -198,7 +232,7 @@ impl<T> Receiver<T> {
     /// the coordinator's batcher uses this to opportunistically fill a
     /// chunk without waiting).
     pub fn drain_up_to(&self, max: usize) -> Vec<T> {
-        let mut st = self.shared.q.lock().unwrap();
+        let mut st = sync::lock(&self.shared.q);
         let n = st.items.len().min(max);
         let out: Vec<T> = st.items.drain(..n).collect();
         drop(st);
@@ -208,9 +242,15 @@ impl<T> Receiver<T> {
         out
     }
 
+    /// Close the channel; senders fail fast, receivers drain then stop.
+    /// (Symmetric with [`Sender::close`] — "any handle may close".)
+    pub fn close(&self) {
+        self.shared.close();
+    }
+
     /// Queue depth right now (diagnostic; racy by nature).
     pub fn len(&self) -> usize {
-        self.shared.q.lock().unwrap().items.len()
+        sync::lock(&self.shared.q).items.len()
     }
 
     /// Whether the queue is empty right now (diagnostic; racy by nature).
@@ -220,7 +260,7 @@ impl<T> Receiver<T> {
 
     /// Whether the channel has been closed (items may still be queued).
     pub fn is_closed(&self) -> bool {
-        self.shared.q.lock().unwrap().closed
+        sync::lock(&self.shared.q).closed
     }
 }
 
@@ -241,6 +281,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "wall-clock heavy; covered natively")]
     fn backpressure_blocks_until_recv() {
         let (tx, rx) = bounded(1);
         tx.send(1).unwrap();
@@ -279,6 +320,46 @@ mod tests {
     }
 
     #[test]
+    fn dropping_all_receivers_closes() {
+        // Regression (ISSUE 6 satellite): with every receiver gone the
+        // queue can never drain, so senders must fail instead of blocking
+        // on backpressure forever.
+        let (tx, rx) = bounded::<u32>(1);
+        let rx2 = rx.clone();
+        drop(rx);
+        drop(rx2);
+        assert!(tx.try_send(1).is_err(), "closed channel must reject sends");
+        assert!(tx.send(2).is_err(), "blocking send must fail, not park");
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "wall-clock heavy; covered natively")]
+    fn dropping_last_receiver_wakes_parked_sender() {
+        // Regression (ISSUE 6 satellite): a sender already parked on a
+        // full queue must be woken — not leaked — when the last receiver
+        // drops.
+        let (tx, rx) = bounded::<u32>(1);
+        tx.send(1).unwrap(); // fill the queue
+        let t = thread::spawn(move || tx.send(2));
+        thread::sleep(Duration::from_millis(20)); // let the sender park
+        drop(rx);
+        let res = t.join().unwrap();
+        assert!(res.is_err(), "parked sender must observe the close");
+    }
+
+    #[test]
+    fn receiver_close_fails_senders_and_drains() {
+        // Regression (ISSUE 6 satellite): close from the receiving side —
+        // the documented "any handle may close" contract.
+        let (tx, rx) = bounded(4);
+        tx.send(1).unwrap();
+        rx.close();
+        assert!(tx.send(2).is_err());
+        assert_eq!(rx.recv().unwrap(), 1, "queued items still drain");
+        assert_eq!(rx.recv(), Err(RecvError));
+    }
+
+    #[test]
     fn try_send_full() {
         let (tx, _rx) = bounded(1);
         tx.try_send(1).unwrap();
@@ -294,6 +375,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "wall-clock heavy; covered natively")]
     fn recv_timeout_times_out() {
         let (_tx, rx) = bounded::<u32>(1);
         let t0 = std::time::Instant::now();
@@ -313,6 +395,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "large thread fan-out; covered natively")]
     fn mpmc_stress() {
         let (tx, rx) = bounded(4);
         let producers: Vec<_> = (0..4)

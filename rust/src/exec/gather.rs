@@ -38,9 +38,11 @@
 //! tested at feeder counts {1, 2, 4} in `tests/sharded_feeder.rs`.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use anyhow::{bail, ensure, Result};
+
+use crate::exec::sync::{self, Mutex};
 
 /// One device-batch slot of a cross-request gather chunk: a *reference*
 /// to a request's resident endpoint tensors plus the lane's scalars.
@@ -158,7 +160,7 @@ impl ResidentPool {
     /// caller bug and fail loudly.
     pub fn register(&self, slot: u64, x: &[f32], baseline: &[f32]) -> Result<()> {
         ensure!(x.len() == baseline.len(), "endpoint width mismatch");
-        let mut map = self.entries.lock().unwrap();
+        let mut map = sync::lock(&self.entries);
         if map.contains_key(&slot) {
             bail!("resident slot {slot} already registered");
         }
@@ -168,13 +170,13 @@ impl ResidentPool {
 
     /// Drop `slot`'s entry; `true` if it was present.
     pub fn evict(&self, slot: u64) -> bool {
-        self.entries.lock().unwrap().remove(&slot).is_some()
+        sync::lock(&self.entries).remove(&slot).is_some()
     }
 
     /// `slot`'s `(x, baseline)` entry, shared — the lock is released
     /// before the caller computes on it. `None` when not registered.
     pub fn entry(&self, slot: u64) -> Option<Arc<(Vec<f32>, Vec<f32>)>> {
-        self.entries.lock().unwrap().get(&slot).cloned()
+        sync::lock(&self.entries).get(&slot).cloned()
     }
 
     /// Run `f` over `slot`'s `(x, baseline)` without copying them out;
@@ -182,13 +184,13 @@ impl ResidentPool {
     /// lock for the duration of `f` — keep `f` cheap, or use
     /// [`ResidentPool::entry`] for heavy per-lane work.
     pub fn with_entry<R>(&self, slot: u64, f: impl FnOnce(&[f32], &[f32]) -> R) -> Option<R> {
-        let map = self.entries.lock().unwrap();
+        let map = sync::lock(&self.entries);
         map.get(&slot).map(|e| f(&e.0, &e.1))
     }
 
     /// Live registrations.
     pub fn len(&self) -> usize {
-        self.entries.lock().unwrap().len()
+        sync::lock(&self.entries).len()
     }
 
     /// Whether no registrations are live.

@@ -1,0 +1,682 @@
+//! Deterministic thread-interleaving explorer for the concurrency models.
+//!
+//! The `loom-models` test suite (ISSUE 6) needs to exhaustively explore
+//! thread interleavings of the hand-rolled serving primitives —
+//! [`crate::exec::channel::bounded`], `Accum` ordered commit,
+//! [`crate::exec::gather::ResidentPool`], and `LaneScheduler` shutdown.
+//! The vendored registry only carries the `xla` closure, so upstream
+//! `loom` is not available as a dependency; this module is a small,
+//! loom-shaped explorer built on the same idea loom uses:
+//!
+//! * Threads in a model run one at a time. Every instrumented operation
+//!   (mutex acquire, condvar wait/notify, atomic access) is a *decision
+//!   point* where the scheduler chooses the next runnable thread.
+//! * One execution = one vector of decisions. The explorer replays the
+//!   model under depth-first enumeration of decision vectors until the
+//!   space is exhausted (or a run cap is hit, reported in the
+//!   [`Report`]).
+//! * A state where no live thread is runnable is a **deadlock** and fails
+//!   the model with the decision trace — this is how lost condvar
+//!   notifications surface deterministically.
+//! * The modeled [`shim::Condvar`] never delivers spurious wakeups, so a
+//!   predicate loop that only terminates via spurious wakeups also shows
+//!   up as a deadlock.
+//!
+//! Differences from loom, kept deliberately: atomics are explored at
+//! `SeqCst` only (the substrate's invariants do not rely on weaker-order
+//! reorderings — see `docs/INVARIANTS.md`), and there is no partial-order
+//! reduction, so models must stay small (a handful of threads, a handful
+//! of operations each). The [`shim`] types passthrough to `std` behaviour
+//! on any thread that is not part of an active model, which is what lets
+//! the whole crate compile against them under `--features loom-models`
+//! while only the model tests drive exploration.
+//!
+//! Models must create every shim primitive *inside* the model closure:
+//! resource identity is per-execution, and the closure is re-run from
+//! scratch for every explored schedule. Wall-clock timeouts inside a
+//! model are modeled logically: a timed wait only fires its timeout when
+//! no other thread can run (timeouts are "long"), which keeps timed waits
+//! from masking genuine lost-wakeup deadlocks.
+
+pub mod shim;
+
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{
+    Arc, Condvar as StdCondvar, Mutex as StdMutex, MutexGuard as StdMutexGuard, PoisonError,
+};
+
+/// Sentinel panic payload used to unwind model threads when an execution
+/// is aborted (failure elsewhere, deadlock, step cap). Never user-visible:
+/// the panic hook installed by [`Explorer::run`] swallows it.
+struct Abort;
+
+/// Scheduling state of one model thread.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum TState {
+    /// Eligible to be scheduled.
+    Runnable,
+    /// Parked on a resource (mutex, condvar waiter list, or join).
+    Blocked {
+        /// Resource the thread is parked on.
+        rid: usize,
+        /// Whether the park is a timed wait (eligible for a modeled
+        /// timeout when nothing else can run).
+        timed: bool,
+    },
+    /// The thread's closure has returned (or unwound).
+    Finished,
+}
+
+/// One schedulable resource: a mutex (uses `held` + `waiters`), a condvar
+/// (uses `waiters`), or a thread's join point (uses `waiters`).
+#[derive(Default)]
+struct Resource {
+    held: bool,
+    waiters: Vec<usize>,
+}
+
+struct Core {
+    states: Vec<TState>,
+    /// Thread currently holding the run token.
+    current: usize,
+    /// Decision trace of this execution: `(options, chosen)` per point.
+    trace: Vec<(usize, usize)>,
+    /// Forced decision prefix for deterministic replay.
+    prefix: Vec<usize>,
+    resources: Vec<Resource>,
+    /// Set per thread when its timed wait was ended by a modeled timeout.
+    timeout_fired: Vec<bool>,
+    abort: bool,
+    failure: Option<String>,
+    max_steps: usize,
+}
+
+impl Core {
+    /// Record one scheduling decision with `n` options and return the
+    /// chosen index (forced by the replay prefix, 0 past its end).
+    fn decide(&mut self, n: usize) -> Result<usize, String> {
+        debug_assert!(n >= 1);
+        if self.trace.len() >= self.max_steps {
+            return Err(format!(
+                "execution exceeded {} decision points (livelock or unbounded model)",
+                self.max_steps
+            ));
+        }
+        let d = self.trace.len();
+        let pick = if d < self.prefix.len() {
+            let p = self.prefix[d];
+            if p >= n {
+                return Err(format!(
+                    "nondeterministic model: replay decision {d} wants option {p} of {n} — \
+                     the closure must be deterministic given the schedule"
+                ));
+            }
+            p
+        } else {
+            0
+        };
+        self.trace.push((n, pick));
+        Ok(pick)
+    }
+}
+
+/// One model execution: the single-token scheduler all shim operations
+/// report to. Threads park on `cv` until `current` names them.
+pub(crate) struct Execution {
+    m: StdMutex<Core>,
+    cv: StdCondvar,
+}
+
+type CoreGuard<'a> = StdMutexGuard<'a, Core>;
+
+impl Execution {
+    fn new(prefix: Vec<usize>, max_steps: usize) -> Execution {
+        Execution {
+            m: StdMutex::new(Core {
+                states: Vec::new(),
+                current: 0,
+                trace: Vec::new(),
+                prefix,
+                resources: Vec::new(),
+                timeout_fired: Vec::new(),
+                abort: false,
+                failure: None,
+                max_steps,
+            }),
+            cv: StdCondvar::new(),
+        }
+    }
+
+    fn lock_core(&self) -> CoreGuard<'_> {
+        self.m.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Record `msg` as the execution failure, abort every thread, and
+    /// unwind the caller.
+    fn abort_now(&self, mut core: CoreGuard<'_>, msg: String) -> ! {
+        if core.failure.is_none() {
+            core.failure = Some(msg);
+        }
+        core.abort = true;
+        self.cv.notify_all();
+        drop(core);
+        panic::panic_any(Abort);
+    }
+
+    pub(crate) fn register_thread(&self) -> usize {
+        let mut core = self.lock_core();
+        core.states.push(TState::Runnable);
+        core.timeout_fired.push(false);
+        core.states.len() - 1
+    }
+
+    pub(crate) fn new_resource(&self) -> usize {
+        let mut core = self.lock_core();
+        core.resources.push(Resource::default());
+        core.resources.len() - 1
+    }
+
+    /// Choose the next running thread. Returns `Err` on deadlock or step
+    /// cap; notifies all parked threads about the new `current`.
+    fn schedule(&self, core: &mut Core) -> Result<(), String> {
+        let runnable: Vec<usize> = (0..core.states.len())
+            .filter(|&i| core.states[i] == TState::Runnable)
+            .collect();
+        if !runnable.is_empty() {
+            let pick = core.decide(runnable.len())?;
+            core.current = runnable[pick];
+            self.cv.notify_all();
+            return Ok(());
+        }
+        // Nothing runnable: a timed waiter may fire its modeled timeout.
+        let timed: Vec<usize> = (0..core.states.len())
+            .filter(|&i| matches!(core.states[i], TState::Blocked { timed: true, .. }))
+            .collect();
+        if !timed.is_empty() {
+            let pick = core.decide(timed.len())?;
+            let t = timed[pick];
+            if let TState::Blocked { rid, .. } = core.states[t] {
+                core.resources[rid].waiters.retain(|&w| w != t);
+            }
+            core.states[t] = TState::Runnable;
+            core.timeout_fired[t] = true;
+            core.current = t;
+            self.cv.notify_all();
+            return Ok(());
+        }
+        if core.states.iter().all(|s| matches!(s, TState::Finished)) {
+            self.cv.notify_all(); // wake the controller
+            return Ok(());
+        }
+        let blocked: Vec<usize> = (0..core.states.len())
+            .filter(|&i| matches!(core.states[i], TState::Blocked { .. }))
+            .collect();
+        Err(format!(
+            "deadlock: threads {blocked:?} are blocked with nothing runnable \
+             (lost notification or lock cycle); trace: {:?}",
+            core.trace
+        ))
+    }
+
+    /// Park until this thread holds the run token again (or the execution
+    /// aborts, in which case the thread unwinds).
+    fn park(&self, mut core: CoreGuard<'_>, me: usize) -> CoreGuard<'_> {
+        loop {
+            if core.abort {
+                drop(core);
+                panic::panic_any(Abort);
+            }
+            if core.current == me && core.states[me] == TState::Runnable {
+                return core;
+            }
+            core = self.cv.wait(core).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    /// Preemption point: let the scheduler pick any runnable thread
+    /// (including the caller) before the caller's next shared-state op.
+    pub(crate) fn yield_point(&self, me: usize) {
+        let mut core = self.lock_core();
+        if core.abort {
+            drop(core);
+            panic::panic_any(Abort);
+        }
+        match self.schedule(&mut core) {
+            Ok(()) => {}
+            Err(m) => self.abort_now(core, m),
+        }
+        if core.current != me {
+            let _ = self.park(core, me);
+        }
+    }
+
+    /// Park the caller on `rid` and hand the token to another thread.
+    /// Returns once the caller is unblocked *and* rescheduled.
+    fn block_on<'a>(
+        &'a self,
+        mut core: CoreGuard<'a>,
+        me: usize,
+        rid: usize,
+        timed: bool,
+    ) -> CoreGuard<'a> {
+        core.states[me] = TState::Blocked { rid, timed };
+        core.resources[rid].waiters.push(me);
+        match self.schedule(&mut core) {
+            Ok(()) => {}
+            Err(m) => self.abort_now(core, m),
+        }
+        self.park(core, me)
+    }
+
+    /// Acquire modeled mutex `rid` for thread `me` (blocking).
+    pub(crate) fn acquire(&self, me: usize, rid: usize) {
+        loop {
+            self.yield_point(me);
+            let core = self.lock_core();
+            if core.abort {
+                drop(core);
+                panic::panic_any(Abort);
+            }
+            let mut core = core;
+            if !core.resources[rid].held {
+                core.resources[rid].held = true;
+                return;
+            }
+            let _ = self.block_on(core, me, rid, false);
+            // Woken by a release: loop and re-contend.
+        }
+    }
+
+    /// Release modeled mutex `rid`; every waiter re-contends.
+    pub(crate) fn release(&self, rid: usize) {
+        let mut core = self.lock_core();
+        core.resources[rid].held = false;
+        let ws = std::mem::take(&mut core.resources[rid].waiters);
+        for w in ws {
+            core.states[w] = TState::Runnable;
+        }
+    }
+
+    /// Modeled condvar wait: atomically release `mutex_rid` and park on
+    /// `cv_rid`; re-acquires the mutex before returning. Returns whether a
+    /// modeled timeout (timed waits only) ended the park.
+    pub(crate) fn cv_wait(&self, me: usize, cv_rid: usize, mutex_rid: usize, timed: bool) -> bool {
+        // Preemption point *before* the release+register step: this is the
+        // window where a notifier that does not hold the mutex can fire
+        // ahead of the registration — the classic lost-notification race.
+        self.yield_point(me);
+        let mut core = self.lock_core();
+        if core.abort {
+            drop(core);
+            panic::panic_any(Abort);
+        }
+        core.resources[mutex_rid].held = false;
+        let ws = std::mem::take(&mut core.resources[mutex_rid].waiters);
+        for w in ws {
+            core.states[w] = TState::Runnable;
+        }
+        core.timeout_fired[me] = false;
+        let core = self.block_on(core, me, cv_rid, timed);
+        let fired = core.timeout_fired[me];
+        drop(core);
+        self.acquire(me, mutex_rid);
+        fired
+    }
+
+    /// Modeled notify: wake one (scheduler-chosen) waiter or all waiters.
+    /// Notifying an empty waiter set is a no-op, exactly as with
+    /// [`std::sync::Condvar`] — which is what makes lost notifications
+    /// reproducible.
+    pub(crate) fn cv_notify(&self, me: usize, cv_rid: usize, all: bool) {
+        self.yield_point(me);
+        let mut core = self.lock_core();
+        if core.abort {
+            drop(core);
+            panic::panic_any(Abort);
+        }
+        if core.resources[cv_rid].waiters.is_empty() {
+            return;
+        }
+        if all {
+            let ws = std::mem::take(&mut core.resources[cv_rid].waiters);
+            for w in ws {
+                core.states[w] = TState::Runnable;
+            }
+        } else {
+            let n = core.resources[cv_rid].waiters.len();
+            let pick = match core.decide(n) {
+                Ok(p) => p,
+                Err(m) => self.abort_now(core, m),
+            };
+            let w = core.resources[cv_rid].waiters.remove(pick);
+            core.states[w] = TState::Runnable;
+        }
+    }
+
+    /// Block `me` until thread with join resource `join_rid` finishes.
+    pub(crate) fn join_wait(&self, me: usize, target: usize, join_rid: usize) {
+        let core = self.lock_core();
+        if core.abort {
+            drop(core);
+            panic::panic_any(Abort);
+        }
+        if core.states[target] == TState::Finished {
+            return;
+        }
+        let _ = self.block_on(core, me, join_rid, false);
+    }
+
+    /// Mark `me` finished, wake joiners, and hand off the token. A
+    /// non-`Abort` panic payload fails the whole execution.
+    pub(crate) fn finish(&self, me: usize, join_rid: usize, panic_msg: Option<String>) {
+        let mut core = self.lock_core();
+        core.states[me] = TState::Finished;
+        let ws = std::mem::take(&mut core.resources[join_rid].waiters);
+        for w in ws {
+            core.states[w] = TState::Runnable;
+        }
+        if let Some(msg) = panic_msg {
+            if core.failure.is_none() {
+                core.failure = Some(format!("model thread {me} panicked: {msg}"));
+            }
+            core.abort = true;
+            self.cv.notify_all();
+            return;
+        }
+        if core.abort {
+            self.cv.notify_all();
+            return;
+        }
+        if let Err(m) = self.schedule(&mut core) {
+            if core.failure.is_none() {
+                core.failure = Some(m);
+            }
+            core.abort = true;
+            self.cv.notify_all();
+        }
+    }
+}
+
+/// Outcome of one [`Explorer::run`]: how many executions ran and whether
+/// the decision space was fully enumerated (false only when the run cap
+/// was hit first).
+#[derive(Debug, Clone, Copy)]
+pub struct Report {
+    /// Executions (distinct schedules) explored.
+    pub executions: usize,
+    /// True when every schedule was visited before the cap.
+    pub exhausted: bool,
+}
+
+/// Exploration budget knobs. The defaults suit the in-tree models (a few
+/// threads, a few operations each); raise `max_runs` locally when growing
+/// a model.
+#[derive(Debug, Clone, Copy)]
+pub struct Explorer {
+    /// Cap on explored schedules before giving up (reported, not fatal).
+    pub max_runs: usize,
+    /// Cap on decision points within one execution (fatal: a model that
+    /// hits it is livelocked or unbounded).
+    pub max_steps: usize,
+}
+
+impl Default for Explorer {
+    fn default() -> Self {
+        Explorer { max_runs: 60_000, max_steps: 10_000 }
+    }
+}
+
+/// Run `f` under every schedule the default [`Explorer`] budget allows.
+/// Panics (with the failing decision trace) if any schedule deadlocks,
+/// panics, or fails an assertion.
+pub fn explore(f: impl Fn() + Send + Sync + 'static) -> Report {
+    Explorer::default().run(f)
+}
+
+impl Explorer {
+    /// Explore `f` under this budget. See [`explore`].
+    pub fn run(&self, f: impl Fn() + Send + Sync + 'static) -> Report {
+        install_abort_hook();
+        let f = Arc::new(f);
+        let mut prefix: Vec<usize> = Vec::new();
+        let mut executions = 0usize;
+        loop {
+            executions += 1;
+            let (trace, failure) = run_one(prefix, self.max_steps, f.clone());
+            if let Some(msg) = failure {
+                panic!("interleave model failed on execution {executions}: {msg}");
+            }
+            match next_prefix(&trace) {
+                Some(p) => prefix = p,
+                None => return Report { executions, exhausted: true },
+            }
+            if executions >= self.max_runs {
+                eprintln!(
+                    "interleave: exploration capped at {} executions (space not exhausted)",
+                    self.max_runs
+                );
+                return Report { executions, exhausted: false };
+            }
+        }
+    }
+}
+
+/// First depth-first successor of `trace`: bump the deepest decision that
+/// still has an unexplored option, dropping everything after it.
+fn next_prefix(trace: &[(usize, usize)]) -> Option<Vec<usize>> {
+    let mut i = trace.len();
+    while i > 0 {
+        i -= 1;
+        let (n, c) = trace[i];
+        if c + 1 < n {
+            let mut p: Vec<usize> = trace[..i].iter().map(|&(_, c)| c).collect();
+            p.push(c + 1);
+            return Some(p);
+        }
+    }
+    None
+}
+
+/// Execute the model once under the given decision prefix. Returns the
+/// full trace and any failure.
+fn run_one(
+    prefix: Vec<usize>,
+    max_steps: usize,
+    f: Arc<dyn Fn() + Send + Sync>,
+) -> (Vec<(usize, usize)>, Option<String>) {
+    let exec = Arc::new(Execution::new(prefix, max_steps));
+    let root = exec.register_thread();
+    let root_join = exec.new_resource();
+    {
+        let mut core = exec.lock_core();
+        core.current = root;
+    }
+    let exec2 = exec.clone();
+    let h = std::thread::spawn(move || {
+        shim::enter_model(exec2.clone(), root);
+        let r = panic::catch_unwind(AssertUnwindSafe(|| f()));
+        let msg = panic_message(r);
+        exec2.finish(root, root_join, msg);
+        shim::leave_model();
+    });
+    // Wait for every registered thread (root + everything it spawned) to
+    // reach Finished; aborted executions converge here too because parked
+    // threads unwind on abort.
+    {
+        let mut core = exec.lock_core();
+        loop {
+            if core.states.iter().all(|s| matches!(s, TState::Finished)) {
+                break;
+            }
+            core = exec.cv.wait(core).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+    let _ = h.join();
+    let core = exec.lock_core();
+    (core.trace.clone(), core.failure.clone())
+}
+
+/// Map a `catch_unwind` result to a failure message; the `Abort` sentinel
+/// (scheduler-initiated unwind) is not a failure.
+pub(crate) fn panic_message(r: Result<(), Box<dyn std::any::Any + Send>>) -> Option<String> {
+    match r {
+        Ok(()) => None,
+        Err(p) => {
+            if p.downcast_ref::<Abort>().is_some() {
+                None
+            } else if let Some(s) = p.downcast_ref::<&str>() {
+                Some((*s).to_string())
+            } else if let Some(s) = p.downcast_ref::<String>() {
+                Some(s.clone())
+            } else {
+                Some("non-string panic payload".to_string())
+            }
+        }
+    }
+}
+
+/// Install (once, process-wide) a panic hook that silences the `Abort`
+/// sentinel unwinds; every other panic goes to the previously installed
+/// hook unchanged.
+fn install_abort_hook() {
+    static INSTALLED: AtomicBool = AtomicBool::new(false);
+    if INSTALLED.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    let prev = panic::take_hook();
+    panic::set_hook(Box::new(move |info| {
+        if info.payload().downcast_ref::<Abort>().is_some() {
+            return;
+        }
+        prev(info);
+    }));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::shim::atomic::{AtomicUsize, Ordering};
+    use super::shim::{self, Mutex};
+    use super::*;
+
+    #[test]
+    #[cfg_attr(miri, ignore = "spawns thousands of OS threads; covered natively")]
+    fn explores_more_than_one_schedule() {
+        // Two mutex-guarded increments: race-free, but the explorer must
+        // still visit multiple schedules and exhaust the space.
+        let report = explore(|| {
+            let m = Arc::new(Mutex::new(0u32));
+            let m2 = m.clone();
+            let h = shim::spawn(move || {
+                *m2.lock().unwrap() += 1;
+            });
+            *m.lock().unwrap() += 1;
+            h.join().unwrap();
+            assert_eq!(*m.lock().unwrap(), 2);
+        });
+        assert!(report.exhausted);
+        assert!(report.executions > 1, "saw {} schedules", report.executions);
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "spawns thousands of OS threads; covered natively")]
+    fn finds_lost_update() {
+        // Unsynchronized read-modify-write through the instrumented
+        // atomics: some schedule interleaves the two loads before either
+        // store, losing an update. The explorer must find it.
+        let r = panic::catch_unwind(|| {
+            explore(|| {
+                let a = Arc::new(AtomicUsize::new(0));
+                let a2 = a.clone();
+                let h = shim::spawn(move || {
+                    let v = a2.load(Ordering::SeqCst);
+                    a2.store(v + 1, Ordering::SeqCst);
+                });
+                let v = a.load(Ordering::SeqCst);
+                a.store(v + 1, Ordering::SeqCst);
+                h.join().unwrap();
+                assert_eq!(a.load(Ordering::SeqCst), 2, "lost update");
+            })
+        });
+        let msg = format!("{:?}", r.unwrap_err().downcast_ref::<String>());
+        assert!(msg.contains("lost update"), "{msg}");
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "spawns thousands of OS threads; covered natively")]
+    fn finds_lock_order_deadlock() {
+        let r = panic::catch_unwind(|| {
+            explore(|| {
+                let a = Arc::new(Mutex::new(()));
+                let b = Arc::new(Mutex::new(()));
+                let (a2, b2) = (a.clone(), b.clone());
+                let h = shim::spawn(move || {
+                    let _ga = a2.lock().unwrap();
+                    let _gb = b2.lock().unwrap();
+                });
+                {
+                    let _gb = b.lock().unwrap();
+                    let _ga = a.lock().unwrap();
+                }
+                h.join().unwrap();
+            })
+        });
+        let msg = format!("{:?}", r.unwrap_err().downcast_ref::<String>());
+        assert!(msg.contains("deadlock"), "{msg}");
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "spawns thousands of OS threads; covered natively")]
+    fn finds_lost_notification() {
+        // The notifier flips the flag and notifies WITHOUT holding the
+        // mutex: a schedule exists where the waiter has checked the flag
+        // but not yet registered — the notification is lost and the
+        // waiter parks forever. Must surface as a deadlock.
+        use super::shim::Condvar;
+        let r = panic::catch_unwind(|| {
+            explore(|| {
+                let pair = Arc::new((Mutex::new(()), Condvar::new(), AtomicUsize::new(0)));
+                let pair2 = pair.clone();
+                let h = shim::spawn(move || {
+                    let (_, cv, flag) = &*pair2;
+                    flag.store(1, Ordering::SeqCst); // BUG: not under the mutex
+                    cv.notify_one();
+                });
+                let (m, cv, flag) = &*pair;
+                let mut g = m.lock().unwrap();
+                while flag.load(Ordering::SeqCst) == 0 {
+                    g = cv.wait(g).unwrap();
+                }
+                drop(g);
+                h.join().unwrap();
+            })
+        });
+        let msg = format!("{:?}", r.unwrap_err().downcast_ref::<String>());
+        assert!(msg.contains("deadlock"), "{msg}");
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "spawns thousands of OS threads; covered natively")]
+    fn timed_wait_fires_when_idle() {
+        // A timed wait nobody notifies must not deadlock: the modeled
+        // timeout fires once nothing else can run.
+        use super::shim::Condvar;
+        let report = explore(|| {
+            let m = Mutex::new(());
+            let cv = Condvar::new();
+            let g = m.lock().unwrap();
+            let (g, res) = cv.wait_timeout(g, std::time::Duration::from_millis(1)).unwrap();
+            assert!(res.timed_out());
+            drop(g);
+        });
+        assert!(report.exhausted);
+    }
+
+    #[test]
+    fn next_prefix_enumerates_depth_first() {
+        assert_eq!(next_prefix(&[(1, 0), (1, 0)]), None);
+        assert_eq!(next_prefix(&[(2, 0), (3, 2)]), Some(vec![1]));
+        assert_eq!(next_prefix(&[(2, 1), (3, 1)]), Some(vec![1, 2]));
+        assert_eq!(next_prefix(&[]), None);
+    }
+}

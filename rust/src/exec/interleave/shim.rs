@@ -1,0 +1,438 @@
+//! Instrumented `std::sync` stand-ins for the interleaving explorer.
+//!
+//! These types have two personalities:
+//!
+//! * **Passthrough** — on a thread that is not part of an active model
+//!   (everything outside [`super::explore`]), they delegate straight to
+//!   their `std::sync` counterparts. This is what lets the whole crate
+//!   build and run its normal test suite with the facade
+//!   ([`crate::exec::sync`]) routed here under `--features loom-models`.
+//! * **Modeled** — on a model thread, every operation reports to the
+//!   execution's scheduler: a preemption point before the operation, and
+//!   logical blocking (mutex contention, condvar parks, joins) handed to
+//!   the single-token scheduler so the explorer controls every
+//!   interleaving.
+//!
+//! The API mirrors the `std::sync` signatures (`lock()` returns a
+//! `LockResult`, condvar waits return `LockResult`) so the facade helpers
+//! compile against either personality unchanged. Only the surface the
+//! serving substrate actually uses is implemented.
+
+use std::cell::RefCell;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::{Arc, LockResult, PoisonError};
+use std::sync::{Condvar as StdCondvar, Mutex as StdMutex, MutexGuard as StdMutexGuard, OnceLock};
+use std::time::Duration;
+
+use super::Execution;
+
+thread_local! {
+    static CURRENT: RefCell<Option<(Arc<Execution>, usize)>> = const { RefCell::new(None) };
+}
+
+pub(crate) fn enter_model(exec: Arc<Execution>, id: usize) {
+    CURRENT.with(|c| *c.borrow_mut() = Some((exec, id)));
+}
+
+pub(crate) fn leave_model() {
+    CURRENT.with(|c| *c.borrow_mut() = None);
+}
+
+fn ctx() -> Option<(Arc<Execution>, usize)> {
+    CURRENT.with(|c| c.borrow().clone())
+}
+
+/// Mutex with the same `lock() -> LockResult` shape as
+/// [`std::sync::Mutex`]; modeled acquisition is a scheduler decision
+/// point and logical blocking.
+pub struct Mutex<T> {
+    inner: StdMutex<T>,
+    id: OnceLock<usize>,
+}
+
+impl<T> Mutex<T> {
+    /// A new unlocked mutex.
+    pub fn new(t: T) -> Mutex<T> {
+        Mutex { inner: StdMutex::new(t), id: OnceLock::new() }
+    }
+
+    fn rid(&self, exec: &Arc<Execution>) -> usize {
+        *self.id.get_or_init(|| exec.new_resource())
+    }
+
+    /// Acquire the lock (blocking). Mirrors [`std::sync::Mutex::lock`].
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        match ctx() {
+            None => match self.inner.lock() {
+                Ok(g) => Ok(MutexGuard { lock: self, inner: Some(g), model: None }),
+                Err(p) => Err(PoisonError::new(MutexGuard {
+                    lock: self,
+                    inner: Some(p.into_inner()),
+                    model: None,
+                })),
+            },
+            Some((exec, me)) => {
+                let rid = self.rid(&exec);
+                exec.acquire(me, rid);
+                // The logical owner is unique, so the std-level lock below
+                // is uncontended by construction.
+                let g = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+                Ok(MutexGuard { lock: self, inner: Some(g), model: Some((exec, rid)) })
+            }
+        }
+    }
+}
+
+impl<T: std::fmt::Debug> std::fmt::Debug for Mutex<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.inner.fmt(f)
+    }
+}
+
+impl<T: Default> Default for Mutex<T> {
+    fn default() -> Self {
+        Mutex::new(T::default())
+    }
+}
+
+/// Guard returned by [`Mutex::lock`]; releasing it (drop) releases the
+/// std-level lock first, then the modeled ownership.
+pub struct MutexGuard<'a, T> {
+    lock: &'a Mutex<T>,
+    inner: Option<StdMutexGuard<'a, T>>,
+    /// `(execution, mutex resource id)` when the guard is model-owned.
+    model: Option<(Arc<Execution>, usize)>,
+}
+
+impl<T> std::ops::Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard accessed after release")
+    }
+}
+
+impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard accessed after release")
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        self.inner.take();
+        if let Some((exec, rid)) = self.model.take() {
+            exec.release(rid);
+        }
+    }
+}
+
+/// Result of a timed condvar wait; mirrors
+/// [`std::sync::WaitTimeoutResult::timed_out`].
+#[derive(Debug, Clone, Copy)]
+pub struct WaitTimeoutResult(bool);
+
+impl WaitTimeoutResult {
+    /// Whether the wait ended by timeout rather than notification.
+    pub fn timed_out(&self) -> bool {
+        self.0
+    }
+}
+
+/// Condition variable with the [`std::sync::Condvar`] wait/notify shape.
+/// The modeled variant never delivers spurious wakeups, and a modeled
+/// timed wait only times out when no other thread can run (see the
+/// module doc of [`crate::exec::interleave`]).
+pub struct Condvar {
+    inner: StdCondvar,
+    id: OnceLock<usize>,
+}
+
+impl Condvar {
+    /// A new condition variable.
+    pub fn new() -> Condvar {
+        Condvar { inner: StdCondvar::new(), id: OnceLock::new() }
+    }
+
+    fn rid(&self, exec: &Arc<Execution>) -> usize {
+        *self.id.get_or_init(|| exec.new_resource())
+    }
+
+    fn wait_impl<'a, T>(
+        &self,
+        mut guard: MutexGuard<'a, T>,
+        timeout: Option<Duration>,
+    ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+        match guard.model.take() {
+            None => {
+                let lock = guard.lock;
+                let inner = guard.inner.take().expect("guard accessed after release");
+                drop(guard);
+                match timeout {
+                    None => match self.inner.wait(inner) {
+                        Ok(g) => Ok((
+                            MutexGuard { lock, inner: Some(g), model: None },
+                            WaitTimeoutResult(false),
+                        )),
+                        Err(p) => Err(PoisonError::new((
+                            MutexGuard { lock, inner: Some(p.into_inner()), model: None },
+                            WaitTimeoutResult(false),
+                        ))),
+                    },
+                    Some(dur) => match self.inner.wait_timeout(inner, dur) {
+                        Ok((g, r)) => Ok((
+                            MutexGuard { lock, inner: Some(g), model: None },
+                            WaitTimeoutResult(r.timed_out()),
+                        )),
+                        Err(p) => {
+                            let (g, r) = p.into_inner();
+                            Err(PoisonError::new((
+                                MutexGuard { lock, inner: Some(g), model: None },
+                                WaitTimeoutResult(r.timed_out()),
+                            )))
+                        }
+                    },
+                }
+            }
+            Some((exec, mutex_rid)) => {
+                let (_, me) = ctx().expect("model-owned guard used off a model thread");
+                let lock = guard.lock;
+                // Drop the std-level guard now; the *logical* release
+                // happens inside cv_wait atomically with registration.
+                guard.inner.take();
+                drop(guard);
+                let cv_rid = self.rid(&exec);
+                let fired = exec.cv_wait(me, cv_rid, mutex_rid, timeout.is_some());
+                let g = lock.inner.lock().unwrap_or_else(PoisonError::into_inner);
+                Ok((
+                    MutexGuard { lock, inner: Some(g), model: Some((exec, mutex_rid)) },
+                    WaitTimeoutResult(fired),
+                ))
+            }
+        }
+    }
+
+    /// Block until notified. Mirrors [`std::sync::Condvar::wait`].
+    pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        match self.wait_impl(guard, None) {
+            Ok((g, _)) => Ok(g),
+            Err(p) => Err(PoisonError::new(p.into_inner().0)),
+        }
+    }
+
+    /// Block until notified or `dur` elapses. Mirrors
+    /// [`std::sync::Condvar::wait_timeout`].
+    pub fn wait_timeout<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+        self.wait_impl(guard, Some(dur))
+    }
+
+    /// Wake one waiter (scheduler-chosen under a model; lost if no waiter
+    /// is registered, exactly as with `std`).
+    pub fn notify_one(&self) {
+        match ctx() {
+            None => self.inner.notify_one(),
+            Some((exec, me)) => {
+                let rid = self.rid(&exec);
+                exec.cv_notify(me, rid, false);
+            }
+        }
+    }
+
+    /// Wake every waiter.
+    pub fn notify_all(&self) {
+        match ctx() {
+            None => self.inner.notify_all(),
+            Some((exec, me)) => {
+                let rid = self.rid(&exec);
+                exec.cv_notify(me, rid, true);
+            }
+        }
+    }
+}
+
+impl Default for Condvar {
+    fn default() -> Self {
+        Condvar::new()
+    }
+}
+
+impl std::fmt::Debug for Condvar {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("Condvar")
+    }
+}
+
+/// Instrumented atomics: every access is a scheduler preemption point
+/// under a model, passthrough otherwise. Explored at the given ordering
+/// (the single-token scheduler makes every modeled execution sequentially
+/// consistent — the explorer checks interleavings, not weak-memory
+/// reorderings; see the module doc).
+pub mod atomic {
+    pub use std::sync::atomic::Ordering;
+
+    use super::ctx;
+
+    fn preempt() {
+        if let Some((exec, me)) = ctx() {
+            exec.yield_point(me);
+        }
+    }
+
+    macro_rules! shim_atomic {
+        ($name:ident, $std:ty, $prim:ty, int) => {
+            shim_atomic!($name, $std, $prim, base);
+
+            impl $name {
+                /// Add, returning the previous value (preemption point).
+                pub fn fetch_add(&self, v: $prim, order: Ordering) -> $prim {
+                    preempt();
+                    self.inner.fetch_add(v, order)
+                }
+
+                /// Subtract, returning the previous value (preemption point).
+                pub fn fetch_sub(&self, v: $prim, order: Ordering) -> $prim {
+                    preempt();
+                    self.inner.fetch_sub(v, order)
+                }
+            }
+        };
+        ($name:ident, $std:ty, $prim:ty, base) => {
+            /// Instrumented counterpart of the matching `std::sync::atomic` type.
+            #[derive(Default)]
+            pub struct $name {
+                inner: $std,
+            }
+
+            impl $name {
+                /// A new atomic holding `v`.
+                pub const fn new(v: $prim) -> Self {
+                    Self { inner: <$std>::new(v) }
+                }
+
+                /// Load (preemption point under a model).
+                pub fn load(&self, order: Ordering) -> $prim {
+                    preempt();
+                    self.inner.load(order)
+                }
+
+                /// Store (preemption point under a model).
+                pub fn store(&self, v: $prim, order: Ordering) {
+                    preempt();
+                    self.inner.store(v, order)
+                }
+
+                /// Swap, returning the previous value (preemption point).
+                pub fn swap(&self, v: $prim, order: Ordering) -> $prim {
+                    preempt();
+                    self.inner.swap(v, order)
+                }
+
+                /// Compare-and-exchange (preemption point).
+                pub fn compare_exchange(
+                    &self,
+                    current: $prim,
+                    new: $prim,
+                    success: Ordering,
+                    failure: Ordering,
+                ) -> Result<$prim, $prim> {
+                    preempt();
+                    self.inner.compare_exchange(current, new, success, failure)
+                }
+            }
+
+            impl std::fmt::Debug for $name {
+                fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                    self.inner.fmt(f)
+                }
+            }
+        };
+    }
+
+    shim_atomic!(AtomicBool, std::sync::atomic::AtomicBool, bool, base);
+    shim_atomic!(AtomicUsize, std::sync::atomic::AtomicUsize, usize, int);
+    shim_atomic!(AtomicU64, std::sync::atomic::AtomicU64, u64, int);
+    shim_atomic!(AtomicU32, std::sync::atomic::AtomicU32, u32, int);
+}
+
+struct ModelJoin<T> {
+    exec: Arc<Execution>,
+    target: usize,
+    join_rid: usize,
+    slot: Arc<StdMutex<Option<T>>>,
+}
+
+/// Join handle for [`spawn`]; modeled joins block through the scheduler.
+pub struct JoinHandle<T> {
+    inner: Option<std::thread::JoinHandle<()>>,
+    passthrough: Option<std::thread::JoinHandle<T>>,
+    model: Option<ModelJoin<T>>,
+}
+
+impl<T> JoinHandle<T> {
+    /// Wait for the thread to finish and return its value. A modeled
+    /// thread that panicked aborts the whole execution, so this only
+    /// returns `Err` in passthrough mode.
+    pub fn join(mut self) -> std::thread::Result<T> {
+        if let Some(h) = self.passthrough.take() {
+            return h.join();
+        }
+        let mj = self.model.take().expect("join handle already consumed");
+        let (_, me) = ctx().expect("modeled join off a model thread");
+        mj.exec.join_wait(me, mj.target, mj.join_rid);
+        // The model thread has reached Finished; its OS thread is in
+        // teardown and joins without scheduler involvement.
+        let _ = self.inner.take().expect("join handle already consumed").join();
+        match mj.slot.lock().unwrap_or_else(PoisonError::into_inner).take() {
+            Some(v) => Ok(v),
+            // Target unwound (execution aborting): unwind the joiner too.
+            None => panic::panic_any(super::Abort),
+        }
+    }
+}
+
+/// Spawn a thread. Under a model the child registers with the execution
+/// and does not run until the scheduler picks it; outside a model this is
+/// [`std::thread::spawn`].
+pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    match ctx() {
+        None => JoinHandle { inner: None, passthrough: Some(std::thread::spawn(f)), model: None },
+        Some((exec, _)) => {
+            let id = exec.register_thread();
+            let join_rid = exec.new_resource();
+            let slot: Arc<StdMutex<Option<T>>> = Arc::new(StdMutex::new(None));
+            let (slot2, exec2) = (slot.clone(), exec.clone());
+            let os = std::thread::spawn(move || {
+                enter_model(exec2.clone(), id);
+                // Park until scheduled for the first time.
+                {
+                    let core = exec2.lock_core();
+                    let _ = exec2.park(core, id);
+                }
+                let r = panic::catch_unwind(AssertUnwindSafe(f));
+                match r {
+                    Ok(v) => {
+                        *slot2.lock().unwrap_or_else(PoisonError::into_inner) = Some(v);
+                        exec2.finish(id, join_rid, None);
+                    }
+                    Err(e) => {
+                        let msg = super::panic_message(Err(e));
+                        exec2.finish(id, join_rid, msg);
+                    }
+                }
+                leave_model();
+            });
+            JoinHandle {
+                inner: Some(os),
+                passthrough: None,
+                model: Some(ModelJoin { exec, target: id, join_rid, slot }),
+            }
+        }
+    }
+}

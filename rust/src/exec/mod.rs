@@ -22,7 +22,9 @@
 pub mod batch;
 pub mod channel;
 pub mod gather;
+pub mod interleave;
 mod pool;
+pub mod sync;
 mod token;
 
 pub use batch::BatchExec;

@@ -1,0 +1,112 @@
+//! Synchronization facade for the serving substrate.
+//!
+//! Every serving-path module (`exec::channel`, `exec::pool`,
+//! `exec::gather`, `coordinator`, `runtime::service`) takes its mutex,
+//! condvar, and atomic primitives from here instead of `std::sync`
+//! directly. The facade buys two properties:
+//!
+//! * **Poison recovery.** [`lock`], [`wait`], and [`wait_timeout`] recover
+//!   a poisoned mutex instead of unwrapping it. A panic on one serving
+//!   thread already fails its own request (chunk panics map to `Err` and
+//!   settle the request exactly once); letting the *next* thread that
+//!   touches the same lock panic too would cascade a single bad request
+//!   into a dead coordinator. Every invariant guarded by these locks is
+//!   re-validated by settlement idempotence (`RequestState::try_complete`)
+//!   and ordered commit (`Accum::add`), so observing a post-panic value is
+//!   safe — `nuig-analyze` lint `lock-unwrap-serving` enforces that the
+//!   serving path never bypasses these helpers.
+//! * **Model checking.** Under `--features loom-models` the re-exported
+//!   types route to the instrumented shims in [`crate::exec::interleave`],
+//!   which explore thread interleavings deterministically (a vendored,
+//!   loom-shaped explorer — see that module for why loom itself is not a
+//!   dependency). Production code is oblivious: the shim types passthrough
+//!   to `std` behaviour outside an active model.
+//!
+//! The facade deliberately re-exports the `std::sync` *names* so switching
+//! a module onto it is a one-line `use` change.
+
+use std::sync::PoisonError;
+use std::time::Duration;
+
+#[cfg(feature = "loom-models")]
+pub use crate::exec::interleave::shim::{atomic, Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+#[cfg(not(feature = "loom-models"))]
+pub use std::sync::{atomic, Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+
+/// Lock `m`, recovering the guard if a previous holder panicked.
+///
+/// See the module doc for why the serving path recovers rather than
+/// propagates poison: the panicking thread's request has already failed,
+/// and the data under these locks stays consistent across unwinds
+/// (commits are ordered and settlement is idempotent).
+pub fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Block on `cv` releasing `g`, recovering the guard on poison.
+///
+/// Callers must re-check their predicate in a loop exactly as with
+/// [`std::sync::Condvar::wait`]; the model-checking shim never delivers a
+/// spurious wakeup, so a predicate loop that only works because of
+/// spurious wakeups shows up as a deadlock under the interleaving models.
+pub fn wait<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Block on `cv` for at most `dur`, recovering the guard on poison.
+pub fn wait_timeout<'a, T>(
+    cv: &Condvar,
+    g: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+    cv.wait_timeout(g, dur).unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn lock_recovers_from_poison() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = lock(&m2);
+            panic!("poison the lock");
+        })
+        .join();
+        // A poisoned serving lock must still hand out its (consistent) value.
+        assert_eq!(*lock(&m), 7);
+        *lock(&m) = 8;
+        assert_eq!(*lock(&m), 8);
+    }
+
+    #[test]
+    fn wait_timeout_times_out() {
+        let m = Mutex::new(());
+        let cv = Condvar::new();
+        let (g, res) = wait_timeout(&cv, lock(&m), Duration::from_millis(1));
+        assert!(res.timed_out());
+        drop(g);
+    }
+
+    #[test]
+    fn wait_wakes_on_notify() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let pair2 = pair.clone();
+        let h = std::thread::spawn(move || {
+            let (m, cv) = &*pair2;
+            let mut done = lock(m);
+            while !*done {
+                done = wait(cv, done);
+            }
+        });
+        {
+            let (m, cv) = &*pair;
+            *lock(m) = true;
+            cv.notify_all();
+        }
+        h.join().unwrap();
+    }
+}

@@ -19,12 +19,10 @@
 //! those rules the driver falls back to the
 //! paper's literal protocol — rebuild and re-evaluate at each grid entry.
 
-use std::time::Instant;
-
 use anyhow::{bail, ensure, Result};
 
 use crate::exec::batch::BatchExec;
-use crate::metrics::StageBreakdown;
+use crate::metrics::{StageBreakdown, StageTimer};
 
 use super::attribution::Attribution;
 use super::convergence::{delta as delta_fn, ConvergencePolicy};
@@ -79,9 +77,9 @@ pub fn explain_to_threshold(
     };
 
     // ---- Stage 1 once: probe (also yields the target + endpoint gap). --
-    let t0 = Instant::now();
+    let mut timer = StageTimer::start();
     let probed = engine::probe_path(model, x, baseline, n_int, None)?;
-    let t_probe = t0.elapsed();
+    let t_probe = timer.lap();
 
     // Round plan from the grid, read as a [start, budget] pair: nested
     // refinement doubles m between rounds, so interior grid entries are
@@ -164,16 +162,16 @@ fn walk_grid(
         if m < n_int {
             continue;
         }
-        let t1 = Instant::now();
+        let mut timer = StageTimer::start();
         let schedule = engine::initial_schedule(opts, m, probed)?;
         let (alphas, weights) = schedule.to_f32();
-        let t_sched = t1.elapsed();
+        let t_sched = timer.lap();
 
-        let t2 = Instant::now();
         let out =
             eval_points(model, x, baseline, &alphas, &weights, probed.target, &BatchExec::Sequential)?;
-        let t_exec = t2.elapsed();
+        let t_exec = timer.lap();
 
+        // nuig:allow(float-reduce): sequential in-order Vec iteration — fixed order
         let sum: f64 = out.partial.iter().sum();
         let d = delta_fn(sum, probed.gap);
         rounds.push(m);

@@ -78,8 +78,10 @@ impl Allocation {
 /// remainders (ties broken toward the earlier interval).
 fn largest_remainder(m_total: usize, scores: &[f64]) -> Vec<usize> {
     let n = scores.len();
+    // nuig:allow(float-reduce): sequential in-order slice iteration — fixed order
     let total: f64 = scores.iter().sum();
     let scores: Vec<f64> = if total <= 0.0 { vec![1.0; n] } else { scores.to_vec() };
+    // nuig:allow(float-reduce): sequential in-order slice iteration — fixed order
     let total: f64 = scores.iter().sum();
 
     let rest = (m_total - n) as f64;

@@ -64,9 +64,11 @@ pub fn path_info(
     // segment masses so the shares partition exactly (sum to 1).
     let per = samples / n_int;
     let seg_mass = |k: usize| (dprob[k] + dprob[k + 1]) / 2.0;
+    // nuig:allow(float-reduce): sequential in-order range iteration — fixed order
     let total: f64 = (0..samples).map(seg_mass).sum();
     let interval_share: Vec<f64> = (0..n_int)
         .map(|i| {
+            // nuig:allow(float-reduce): sequential in-order range iteration — fixed order
             let s: f64 = (i * per..(i + 1) * per).map(seg_mass).sum();
             if total > 0.0 {
                 s / total

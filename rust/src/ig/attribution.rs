@@ -45,6 +45,7 @@ pub struct Attribution {
 impl Attribution {
     /// Σφ — should approach `endpoint_gap` as m grows (completeness).
     pub fn sum(&self) -> f64 {
+        // nuig:allow(float-reduce): sequential in-order Vec iteration — fixed order
         self.values.iter().sum()
     }
 
@@ -72,8 +73,11 @@ impl Attribution {
     /// Cosine similarity against another attribution (used to check the
     /// uniform and non-uniform engines converge to the same explanation).
     pub fn cosine_similarity(&self, other: &Attribution) -> f64 {
+        // nuig:allow(float-reduce): sequential in-order Vec iteration — fixed order
         let dot: f64 = self.values.iter().zip(&other.values).map(|(a, b)| a * b).sum();
+        // nuig:allow(float-reduce): sequential in-order Vec iteration — fixed order
         let na: f64 = self.values.iter().map(|v| v * v).sum::<f64>().sqrt();
+        // nuig:allow(float-reduce): sequential in-order Vec iteration — fixed order
         let nb: f64 = other.values.iter().map(|v| v * v).sum::<f64>().sqrt();
         if na == 0.0 || nb == 0.0 {
             return 0.0;

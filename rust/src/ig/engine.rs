@@ -23,12 +23,12 @@
 //! schedule's length, not the sum over rounds: iso-convergence without
 //! ever re-evaluating an alpha.
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{ensure, Result};
 
 use crate::exec::batch::{BatchExec, PointBatch};
-use crate::metrics::StageBreakdown;
+use crate::metrics::{StageBreakdown, StageTimer};
 
 use super::allocator::Allocation;
 use super::attribution::Attribution;
@@ -154,14 +154,13 @@ fn uniform_ig(
     opts: &IgOptions,
     exec: &BatchExec,
 ) -> Result<Attribution> {
-    let t0 = Instant::now();
+    let mut timer = StageTimer::start();
     let schedule = Schedule::uniform(opts.m, opts.rule)?;
     let (alphas, weights) = schedule.to_f32();
-    let t_sched = t0.elapsed();
+    let t_sched = timer.lap();
 
-    let t1 = Instant::now();
     let out = eval_points(model, x, baseline, &alphas, &weights, target, exec)?;
-    let t_exec = t1.elapsed();
+    let t_exec = timer.lap();
 
     // Endpoint gap: read off the schedule's own endpoint probabilities
     // when the fused grid still includes the path endpoints (trapezoid,
@@ -172,7 +171,6 @@ fn uniform_ig(
     // Both ends use the same `at_endpoint` tolerance: the old exact
     // `alpha == 0.0` check at the left end meant a `0.0 + ε` first point
     // double-paid a probe pass the right end would have absorbed.
-    let t2 = Instant::now();
     let first = schedule.points.first().expect("fused schedule is non-empty");
     let last = schedule.points.last().expect("fused schedule is non-empty");
     let mut probe_passes = 0;
@@ -189,11 +187,11 @@ fn uniform_ig(
         model.probs(&[x])?[0][target]
     };
     let gap = p_at_1 - p_at_0;
-    let t_probe = t2.elapsed();
+    let t_probe = timer.lap();
 
-    let t3 = Instant::now();
+    // nuig:allow(float-reduce): sequential in-order Vec iteration — fixed order
     let sum: f64 = out.partial.iter().sum();
-    let t_reduce = t3.elapsed();
+    let t_reduce = timer.lap();
 
     let delta = convergence::delta(sum, gap);
     Ok(Attribution {
@@ -237,31 +235,29 @@ fn nonuniform_ig(
     ensure!(opts.m >= n_int, "m ({}) must be >= n_int ({n_int})", opts.m);
 
     // ---- Stage 1: probe boundary probabilities (forward-only). ----------
-    let t0 = Instant::now();
+    let mut timer = StageTimer::start();
     let bounds = Schedule::probe_boundaries(n_int);
     let batch = probe_batch(x, baseline, &bounds);
     let refs: Vec<&[f32]> = (0..batch.rows()).map(|k| batch.row(k)).collect();
     let probe_probs = model.probs(&refs)?;
     let probe = Probe::new(bounds.clone(), probe_probs.iter().map(|p| p[target]).collect())?;
-    let t_probe = t0.elapsed();
+    let t_probe = timer.lap();
 
     // ---- Allocate + build the fused composite schedule. ------------------
-    let t1 = Instant::now();
     let deltas = probe.interval_deltas();
     let alloc = opts.allocation.allocate(opts.m, &deltas)?;
     let schedule = Schedule::nonuniform(&bounds, &alloc, opts.rule)?;
     let (alphas, weights) = schedule.to_f32();
-    let t_sched = t1.elapsed();
+    let t_sched = timer.lap();
 
     // ---- Stage 2: one fused point stream (m + 1 evals for trapezoid). ---
-    let t2 = Instant::now();
     let out = eval_points(model, x, baseline, &alphas, &weights, target, exec)?;
-    let t_exec = t2.elapsed();
+    let t_exec = timer.lap();
 
-    let t3 = Instant::now();
     let gap = probe.endpoint_gap();
+    // nuig:allow(float-reduce): sequential in-order Vec iteration — fixed order
     let sum: f64 = out.partial.iter().sum();
-    let t_reduce = t3.elapsed();
+    let t_reduce = timer.lap();
 
     let delta = convergence::delta(sum, gap);
     Ok(Attribution {
@@ -376,39 +372,41 @@ pub(crate) fn refine_loop(
     let mut t_sched = Duration::ZERO;
     let mut t_exec = Duration::ZERO;
 
-    let t = Instant::now();
+    let mut timer = StageTimer::start();
     let mut schedule = initial;
     let (alphas, weights) = schedule.to_f32();
-    t_sched += t.elapsed();
+    t_sched += timer.lap();
 
-    let t = Instant::now();
     let out = eval_points(model, x, baseline, &alphas, &weights, target, exec)?;
-    t_exec += t.elapsed();
+    t_exec += timer.lap();
 
     let mut partial = out.partial;
     let mut evals = schedule.len();
+    // nuig:allow(float-reduce): sequential in-order Vec iteration — fixed order
     let mut residuals = vec![convergence::delta(partial.iter().sum(), gap)];
     let mut level = 0usize;
 
     while should_refine(*residuals.last().expect("non-empty"), schedule.m_total) {
-        let t = Instant::now();
+        // Discard the between-round accumulation time so the sched/exec
+        // split matches what each lap actually covers.
+        timer.lap();
         level += 1;
         let refined = next_level(&schedule, level)?;
         let novel = refined.novel_vs(&schedule);
         let novel_alphas: Vec<f32> = novel.iter().map(|p| p.alpha as f32).collect();
         let novel_weights: Vec<f32> = novel.iter().map(|p| p.weight as f32).collect();
-        t_sched += t.elapsed();
+        t_sched += timer.lap();
 
-        let t = Instant::now();
         let novel_out =
             eval_points(model, x, baseline, &novel_alphas, &novel_weights, target, exec)?;
-        t_exec += t.elapsed();
+        t_exec += timer.lap();
 
         for (acc, nv) in partial.iter_mut().zip(&novel_out.partial) {
             *acc = *acc * Schedule::REFINE_CARRY + nv;
         }
         evals += novel.len();
         schedule = refined;
+        // nuig:allow(float-reduce): sequential in-order Vec iteration — fixed order
         residuals.push(convergence::delta(partial.iter().sum(), gap));
     }
     debug_assert_eq!(evals, schedule.len(), "reuse invariant: evals == final schedule length");
@@ -488,9 +486,9 @@ pub fn explain_anytime_exec(
 
     // Stage 1 once: the probe serves every round (it depends only on
     // (x, baseline, n_int), not on the refinement level).
-    let t0 = Instant::now();
+    let mut timer = StageTimer::start();
     let probed = probe_path(model, x, baseline, n_int, None)?;
-    let t_probe = t0.elapsed();
+    let t_probe = timer.lap();
 
     let initial = initial_schedule(opts, opts.m, &probed)?;
 
@@ -609,12 +607,12 @@ pub fn explain_anytime_cached_exec(
             (t, memo.gap, 0, Duration::ZERO)
         }
         None => {
-            let t0 = Instant::now();
+            let mut timer = StageTimer::start();
             let probed = probe_path(model, x, baseline, n_int, target)?;
             signature = ProbeSignature::quantize(&probed.deltas);
             let memo = ProbeMemo { signature: signature.clone(), gap: probed.gap };
             cache.memo_put(probed.target, bid, memo);
-            (probed.target, probed.gap, probed.bounds.len(), t0.elapsed())
+            (probed.target, probed.gap, probed.bounds.len(), timer.lap())
         }
     };
 
@@ -631,10 +629,10 @@ pub fn explain_anytime_cached_exec(
     // the memoized ladder (`cached.level(k)`) through the SAME
     // `refine_loop` the uncached engine uses — one copy of the round
     // arithmetic, so hit/miss can never change served numbers.
-    let t1 = Instant::now();
+    let mut timer = StageTimer::start();
     let cached = cache.get_or_build(&key)?;
     let initial = (*cached.base()).clone();
-    let t_lookup = t1.elapsed();
+    let t_lookup = timer.lap();
 
     let run = refine_loop(
         model,

@@ -68,6 +68,7 @@ pub fn multi_baseline(
         breakdown.execute += a.breakdown.execute;
         breakdown.reduce += a.breakdown.reduce;
     }
+    // nuig:allow(float-reduce): sequential in-order Vec iteration — fixed order
     let sum: f64 = acc.iter().sum();
     let delta = (sum - gap_acc).abs();
     Ok(EnsembleAttribution {
@@ -130,6 +131,7 @@ pub fn noise_tunnel(
         breakdown.probe += a.breakdown.probe;
         breakdown.execute += a.breakdown.execute;
     }
+    // nuig:allow(float-reduce): sequential in-order Vec iteration — fixed order
     let sum: f64 = acc.iter().sum();
     let delta = (sum - gap_acc).abs();
     Ok(EnsembleAttribution {

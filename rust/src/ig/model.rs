@@ -201,6 +201,7 @@ impl AnalyticModel {
         (0..self.classes)
             .map(|c| {
                 let row = &self.w[c * f..(c + 1) * f];
+                // nuig:allow(float-reduce): sequential in-order slice iteration — fixed order
                 let dot: f64 = row.iter().zip(x).map(|(&w, &v)| w as f64 * v as f64).sum();
                 self.gain * dot / f as f64
             })
@@ -208,8 +209,10 @@ impl AnalyticModel {
     }
 
     fn softmax(logits: &[f64]) -> Vec<f64> {
+        // nuig:allow(float-reduce): max is order-independent (single NaN-free reduction)
         let mx = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
         let e: Vec<f64> = logits.iter().map(|l| (l - mx).exp()).collect();
+        // nuig:allow(float-reduce): sequential in-order Vec iteration — fixed order
         let s: f64 = e.iter().sum();
         e.iter().map(|v| v / s).collect()
     }
@@ -223,6 +226,7 @@ impl AnalyticModel {
             .map(|i| {
                 let wt = self.w[target * f + i] as f64;
                 let wavg: f64 =
+                    // nuig:allow(float-reduce): sequential in-order range iteration — fixed order
                     (0..self.classes).map(|c| p[c] * self.w[c * f + i] as f64).sum();
                 p[target] * (wt - wavg) * scale
             })
@@ -343,6 +347,7 @@ impl Model for AnalyticModel {
                 }
 
                 // Softmax in f64, into the reused probs slot.
+                // nuig:allow(float-reduce): max is order-independent (single NaN-free reduction)
                 let mx = arena.logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
                 let mut sum = 0f64;
                 for cc in 0..c {

@@ -31,6 +31,7 @@ impl Probe {
     pub fn interval_deltas(&self) -> Vec<f64> {
         let n = self.n_int();
         let raw: Vec<f64> = (0..n).map(|i| (self.probs[i + 1] - self.probs[i]).abs()).collect();
+        // nuig:allow(float-reduce): sequential in-order Vec iteration — fixed order
         let total: f64 = raw.iter().sum();
         if total > 0.0 {
             raw.iter().map(|d| d / total).collect()
@@ -59,6 +60,7 @@ impl Probe {
         let total: f64 = self
             .interval_deltas()
             .iter()
+            // nuig:allow(float-reduce): sequential in-order Vec iteration — fixed order
             .sum();
         if total == 0.0 {
             return 0.0;

@@ -260,6 +260,7 @@ impl Schedule {
     /// rules over the full path ((m+1)/m for Eq2-built schedules).
     /// Invariant under [`Schedule::fused`].
     pub fn total_weight(&self) -> f64 {
+        // nuig:allow(float-reduce): sequential in-order Vec iteration — fixed order
         self.points.iter().map(|p| p.weight).sum()
     }
 

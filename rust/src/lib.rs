@@ -24,6 +24,9 @@
 // Every public item is part of the reproduction's documented surface;
 // keep rustdoc complete (CI runs `cargo doc` with warnings denied).
 #![warn(missing_docs)]
+// Unsafe operations must be visible even inside `unsafe fn` bodies; every
+// unsafe block carries a `// SAFETY:` comment (enforced by nuig-analyze).
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod bench;
 pub mod cli;

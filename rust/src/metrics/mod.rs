@@ -127,6 +127,30 @@ impl Drop for Timer<'_> {
     }
 }
 
+/// Lap timer for filling a [`StageBreakdown`]: one wall-clock read per
+/// stage boundary, owned here so the deterministic kernels in `ig::`
+/// carry no time source of their own (the `wallclock-kernel` lint in
+/// tools/nuig-analyze keeps them that way).
+pub struct StageTimer {
+    last: Instant,
+}
+
+impl StageTimer {
+    /// Start timing at the current instant.
+    pub fn start() -> StageTimer {
+        StageTimer { last: Instant::now() }
+    }
+
+    /// Time since construction or the previous lap; resets the origin,
+    /// so consecutive laps partition the elapsed time into stages.
+    pub fn lap(&mut self) -> Duration {
+        let now = Instant::now();
+        let d = now.saturating_duration_since(self.last);
+        self.last = now;
+        d
+    }
+}
+
 /// Fixed-stage latency breakdown for one request: probe / schedule /
 /// execute / reduce — the decomposition Fig. 6(b)'s overhead analysis
 /// needs (stage-1 time as a fraction of total).

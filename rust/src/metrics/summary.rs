@@ -46,6 +46,7 @@ impl Summary {
         if self.values.is_empty() {
             return 0.0;
         }
+        // nuig:allow(float-reduce): sequential in-order Vec iteration — fixed order
         self.values.iter().sum::<f64>() / self.values.len() as f64
     }
 
@@ -56,6 +57,7 @@ impl Summary {
             return 0.0;
         }
         let m = self.mean();
+        // nuig:allow(float-reduce): sequential in-order Vec iteration — fixed order
         (self.values.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / (n - 1) as f64).sqrt()
     }
 

@@ -13,13 +13,14 @@
 
 use std::collections::{HashMap, HashSet};
 use std::path::Path;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, ensure, Context, Result};
 
 use crate::exec::channel::{bounded, Sender};
 use crate::exec::gather::{GatherExec, GatherLane, GatherOut};
+use crate::exec::sync::{self, Mutex};
 use crate::metrics::{Counter, Histogram};
 
 use super::manifest::Manifest;
@@ -280,7 +281,7 @@ impl GatherExec for RuntimeHandle {
         self.send(Job::Register { slot, x: x.to_vec(), baseline: baseline.to_vec(), reply: rtx })?;
         rrx.recv()
             .map_err(|_| anyhow!("runtime device thread dropped the reply"))??;
-        self.resident.lock().unwrap().insert(slot);
+        sync::lock(&self.resident).insert(slot);
         Ok(())
     }
 
@@ -288,13 +289,13 @@ impl GatherExec for RuntimeHandle {
         // Unknown slots are exact no-ops; for known ones the device
         // eviction is best-effort (a dead device thread has already
         // dropped its pool, so the gauge removal alone is correct).
-        if self.resident.lock().unwrap().remove(&slot) {
+        if sync::lock(&self.resident).remove(&slot) {
             let _ = self.send(Job::Evict { slot });
         }
     }
 
     fn resident_len(&self) -> usize {
-        self.resident.lock().unwrap().len()
+        sync::lock(&self.resident).len()
     }
 
     fn eval_gather(&self, _shard: usize, lanes: &[GatherLane]) -> Result<GatherOut> {

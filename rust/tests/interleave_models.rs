@@ -1,0 +1,353 @@
+//! Interleaving models for the serving-path concurrency invariants
+//! (ISSUE 6 tentpole b): run with `cargo test -p nuig --features
+//! loom-models`.
+//!
+//! Each model re-runs its closure under every thread schedule the
+//! vendored explorer (`nuig::exec::interleave`) can enumerate, with the
+//! production code routed through the instrumented shims via
+//! `nuig::exec::sync`. A lost notification shows up as a deadlock (the
+//! modeled condvar never wakes spuriously); a broken invariant shows up
+//! as an assertion failure with the offending decision trace.
+//!
+//! Models covered, mirroring `docs/INVARIANTS.md`:
+//! * `exec::channel::bounded` — close/sender-drop wakeups, no lost
+//!   notifications, parked senders observe receiver-side close.
+//! * `coordinator::state::Accum` — ordered commit: the f64 sum is
+//!   bit-identical under every arrival interleaving.
+//! * `exec::gather::ResidentPool` — RAII eviction: an in-flight gather
+//!   lane's `Arc` entry stays intact across a concurrent evict.
+//! * `coordinator::scheduler::LaneScheduler` — shutdown: a closed-queue
+//!   refill settles its request exactly once; parked pushes are woken by
+//!   close, never leaked.
+
+#![cfg(feature = "loom-models")]
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use nuig::coordinator::request::{ExplainResponse, LatencyBudget};
+use nuig::coordinator::scheduler::{LaneScheduler, Policy, Popped};
+use nuig::coordinator::state::{Accum, AnytimeRounds, ChunkPlan, RequestState, RoundOutcome};
+use nuig::exec::channel::{bounded, Receiver, RecvError};
+use nuig::exec::gather::ResidentPool;
+use nuig::exec::interleave::{explore, shim};
+use nuig::exec::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use nuig::exec::sync::Mutex;
+use nuig::ig::schedule::Schedule;
+use nuig::ig::{AnytimePolicy, IgOptions, Rule};
+use nuig::metrics::StageBreakdown;
+
+type ReplyRx = Receiver<anyhow::Result<ExplainResponse>>;
+
+/// A minimal in-flight request for the models: `features`-wide
+/// accumulator, `n_lanes` outstanding, reply over a fresh shim-routed
+/// channel. Everything is created inside the model closure (resource
+/// identity is per-execution).
+fn mk_state(
+    n_lanes: usize,
+    features: usize,
+    gap: f64,
+    anytime: Option<AnytimeRounds>,
+) -> (Arc<RequestState>, ReplyRx) {
+    let (tx, rx) = bounded(1);
+    let st = Arc::new(RequestState {
+        id: 1,
+        image: Arc::new(vec![1.0; features]),
+        baseline: Arc::new(vec![0.0; features]),
+        target: 0,
+        opts: IgOptions::default(),
+        budget: LatencyBudget::Unbounded,
+        acc: Mutex::new(Accum::new(features)),
+        remaining: AtomicUsize::new(n_lanes),
+        steps: n_lanes,
+        probe_passes: 0,
+        endpoint_gap: gap,
+        breakdown: Mutex::new(StageBreakdown::default()),
+        submitted_at: Instant::now(),
+        queue_wait: Duration::ZERO,
+        reply: tx,
+        completed: AtomicBool::new(false),
+        in_flight: Arc::new(AtomicUsize::new(1)),
+        anytime,
+        resident: None,
+    });
+    (st, rx)
+}
+
+/// Anytime state that refines exactly once: m0 = 2 (3 lanes) with
+/// `max_m` = 4, so round 1 refines to the two novel midpoints and
+/// round 2 must finalize regardless of the residual.
+fn one_refinement_round() -> AnytimeRounds {
+    let schedule = Schedule::uniform(2, Rule::Trapezoid).expect("valid uniform schedule");
+    AnytimeRounds {
+        policy: AnytimePolicy::with_max_m(1e-12, 4).unwrap(),
+        evals: AtomicUsize::new(schedule.len()),
+        schedule: Mutex::new(schedule),
+        residuals: Mutex::new(Vec::new()),
+    }
+}
+
+// ---------------------------------------------------------------------
+// exec::channel::bounded
+// ---------------------------------------------------------------------
+
+#[test]
+fn channel_sender_drop_wakes_receiver() {
+    // The receiver may park before the send, after the send, or after
+    // the drop; in every schedule it must get the item and then the
+    // close — never a lost wakeup (deadlock), never a lost item.
+    let report = explore(|| {
+        let (tx, rx) = bounded::<u32>(1);
+        let h = shim::spawn(move || {
+            tx.send(7).unwrap();
+            // tx drops here: last sender gone => channel closes.
+        });
+        assert_eq!(rx.recv(), Ok(7));
+        assert_eq!(rx.recv(), Err(RecvError));
+        h.join().unwrap();
+    });
+    assert!(report.exhausted, "explored {} schedules", report.executions);
+    assert!(report.executions > 1);
+}
+
+#[test]
+fn channel_receiver_close_wakes_parked_sender() {
+    // Queue full, a sender parked on backpressure, the receiver closes:
+    // the parked send must fail — not succeed, not park forever.
+    let report = explore(|| {
+        let (tx, rx) = bounded::<u32>(1);
+        tx.send(1).unwrap();
+        let tx2 = tx.clone();
+        let h = shim::spawn(move || tx2.send(2));
+        rx.close();
+        assert!(h.join().unwrap().is_err(), "send must observe the close");
+        // In-flight items still drain after close.
+        assert_eq!(rx.recv(), Ok(1));
+        assert_eq!(rx.recv(), Err(RecvError));
+    });
+    assert!(report.exhausted, "explored {} schedules", report.executions);
+}
+
+#[test]
+fn channel_send_recv_no_lost_notification() {
+    // Two sends through a capacity-1 queue: the second send parks until
+    // the first recv; both wakeup directions (not_empty, not_full) are
+    // exercised under every schedule.
+    let report = explore(|| {
+        let (tx, rx) = bounded::<u32>(1);
+        let h = shim::spawn(move || {
+            tx.send(1).unwrap();
+            tx.send(2).unwrap();
+        });
+        assert_eq!(rx.recv(), Ok(1));
+        assert_eq!(rx.recv(), Ok(2));
+        assert_eq!(rx.recv(), Err(RecvError));
+        h.join().unwrap();
+    });
+    assert!(report.exhausted, "explored {} schedules", report.executions);
+}
+
+// ---------------------------------------------------------------------
+// coordinator::state::Accum — ordered commit + parking
+// ---------------------------------------------------------------------
+
+#[test]
+fn accum_commit_is_schedule_order_invariant() {
+    // Two feeder threads land one lane each, in every interleaving the
+    // explorer can produce (including the out-of-order one that parks
+    // lane 1). The committed f64 sums must be BIT-identical across all
+    // schedules: commits happen in lane-index order, not arrival order.
+    let row_a: [f32; 2] = [0.1, -2.5];
+    let row_b: [f32; 2] = [0.37, 1.0];
+    let expected: Vec<u64> = (0..2)
+        .map(|j| (row_a[j] as f64 + row_b[j] as f64).to_bits())
+        .collect();
+    let report = explore(move || {
+        let (st, rx) = mk_state(2, 2, 0.0, None);
+        let st1 = st.clone();
+        let h1 = shim::spawn(move || {
+            if st1.add_lane(0, &[0.1, -2.5]) {
+                assert!(st1.finalize());
+            }
+        });
+        let st2 = st.clone();
+        let h2 = shim::spawn(move || {
+            if st2.add_lane(1, &[0.37, 1.0]) {
+                assert!(st2.finalize());
+            }
+        });
+        h1.join().unwrap();
+        h2.join().unwrap();
+        let resp = rx.recv().unwrap().unwrap();
+        let bits: Vec<u64> = resp.attribution.values.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(bits, expected, "ordered commit must be 0 ULP across schedules");
+        assert_eq!(st.in_flight.load(Ordering::Acquire), 0, "settled exactly once");
+    });
+    assert!(report.executions > 1, "explored {} schedules", report.executions);
+}
+
+#[test]
+fn settlement_race_completes_exactly_once() {
+    // A late device failure racing the finalizing feeder: exactly one
+    // side settles the request (in_flight hits 0, never underflows, the
+    // reply channel carries exactly one message).
+    let report = explore(|| {
+        let (st, rx) = mk_state(1, 1, 0.0, None);
+        let st1 = st.clone();
+        let h = shim::spawn(move || {
+            if st1.add_lane(0, &[1.0]) {
+                st1.finalize();
+            }
+        });
+        let failed = st.fail(anyhow::anyhow!("device down"));
+        h.join().unwrap();
+        assert_eq!(st.in_flight.load(Ordering::Acquire), 0);
+        // Exactly one settlement message, whichever side won.
+        let first = rx.recv().expect("one settlement must be delivered");
+        assert_eq!(first.is_err(), failed);
+    });
+    assert!(report.executions > 1, "explored {} schedules", report.executions);
+}
+
+// ---------------------------------------------------------------------
+// exec::gather::ResidentPool — RAII eviction vs in-flight lanes
+// ---------------------------------------------------------------------
+
+#[test]
+fn resident_entry_survives_concurrent_evict() {
+    // A gather lane that resolved its slot to an `Arc` entry keeps
+    // working data even when settlement evicts the slot mid-chunk; a
+    // lane that resolves after the evict sees a clean None — never torn
+    // state, in every schedule.
+    let report = explore(|| {
+        let pool = Arc::new(ResidentPool::new());
+        pool.register(1, &[3.5, 0.5], &[0.0, 0.25]).unwrap();
+        let pool2 = pool.clone();
+        let h = shim::spawn(move || match pool2.entry(1) {
+            Some(e) => {
+                // In-flight lane: the entry must be fully intact.
+                assert_eq!(e.0, vec![3.5, 0.5]);
+                assert_eq!(e.1, vec![0.0, 0.25]);
+                true
+            }
+            None => false,
+        });
+        let evicted = pool.evict(1);
+        assert!(evicted, "first evict always wins");
+        let lane_saw_entry = h.join().unwrap();
+        // Whichever order the schedule chose, the slot is gone now.
+        assert!(pool.entry(1).is_none());
+        assert!(pool.is_empty());
+        let _ = lane_saw_entry; // both outcomes are legal; torn state is not
+    });
+    assert!(report.exhausted, "explored {} schedules", report.executions);
+    assert!(report.executions > 1);
+}
+
+// ---------------------------------------------------------------------
+// coordinator::scheduler::LaneScheduler — shutdown protocol
+// ---------------------------------------------------------------------
+
+/// One request's chunk plans for the scheduler models (built on a fresh
+/// shim-routed `RequestState`).
+fn mk_plans(
+    n: usize,
+    chunk: usize,
+    anytime: Option<AnytimeRounds>,
+) -> (Arc<RequestState>, ReplyRx, Vec<ChunkPlan>) {
+    let (st, rx) = mk_state(n, 1, 0.0, anytime);
+    let points: Vec<(f32, f32)> = (0..n).map(|k| (k as f32 / n as f32, 1.0)).collect();
+    let plans = ChunkPlan::build(&st, &points, chunk);
+    (st, rx, plans)
+}
+
+#[test]
+fn scheduler_close_wakes_parked_push() {
+    // A router parked on the capacity gate must fail cleanly when the
+    // coordinator closes the queue — not park forever (lost not_full
+    // notification), not enqueue after close.
+    let report = explore(|| {
+        let s = Arc::new(LaneScheduler::new(Policy::Fifo, 2));
+        let (_st1, _rx1, plans1) = mk_plans(2, 2, None);
+        s.push_request(1, plans1).unwrap();
+        let s2 = s.clone();
+        let h = shim::spawn(move || {
+            let (_st2, _rx2, plans2) = mk_plans(1, 1, None);
+            s2.push_request(2, plans2).is_err()
+        });
+        s.close();
+        assert!(h.join().unwrap(), "push must fail after close, not block");
+        // The admitted request still drains, then Closed.
+        match s.pop_chunk(4, Duration::ZERO) {
+            Popped::Chunk(c) => assert_eq!(c.len(), 2),
+            Popped::Closed => panic!("queued lanes must drain before Closed"),
+        }
+        assert!(matches!(s.pop_chunk(4, Duration::ZERO), Popped::Closed));
+    });
+    assert!(report.executions > 1, "explored {} schedules", report.executions);
+}
+
+#[test]
+fn scheduler_refill_vs_close_settles_exactly_once() {
+    // Satellite 3: the feeder completes an anytime round while the
+    // coordinator shuts the lane queue down. In every interleaving the
+    // request must settle exactly once with an Ok response — either the
+    // refill lands (round 2 runs to completion) or the closed queue
+    // rejects it (the refinement is rolled back and the completed
+    // round's attribution is delivered).
+    let report = explore(|| {
+        let s = Arc::new(LaneScheduler::new(Policy::Fifo, 64));
+        let (st, rx, plans) = mk_plans(3, 3, Some(one_refinement_round()));
+        s.push_request(1, plans).unwrap();
+        let s2 = s.clone();
+        let closer = shim::spawn(move || s2.close());
+
+        // Feeder: drain round 1 (3 lanes are already queued; pop drains
+        // them even after close).
+        let lanes = match s.pop_chunk(3, Duration::ZERO) {
+            Popped::Chunk(c) => c,
+            Popped::Closed => panic!("queued round-1 lanes must drain"),
+        };
+        assert_eq!(lanes.len(), 3);
+        let mut complete = false;
+        for l in &lanes {
+            complete = l.state.add_lane(l.idx, &[1.0]);
+        }
+        assert!(complete, "last lane of the round flips the countdown");
+        match st.on_round_complete(3) {
+            RoundOutcome::Refine(next) => {
+                let novel: usize = next.iter().map(|p| p.len()).sum();
+                assert_eq!(novel, 2, "m 2 -> 4 adds the two midpoints");
+                if s.push_refill(1, next).is_ok() {
+                    // Refill won the race: run round 2 to completion.
+                    let lanes = match s.pop_chunk(2, Duration::ZERO) {
+                        Popped::Chunk(c) => c,
+                        Popped::Closed => panic!("refill lanes must drain"),
+                    };
+                    assert_eq!(lanes.len(), 2);
+                    let mut done = false;
+                    for l in &lanes {
+                        done = l.state.add_lane(l.idx, &[1.0]);
+                    }
+                    assert!(done);
+                    assert!(matches!(st.on_round_complete(3), RoundOutcome::Finalize));
+                } else {
+                    // Close won: roll the refinement back, deliver the
+                    // completed round unchanged.
+                    st.abort_refinement(novel);
+                }
+            }
+            RoundOutcome::Finalize => panic!("round 1 must refine (target 1e-12)"),
+        }
+        assert!(st.finalize(), "exactly one settlement");
+        assert!(!st.finalize(), "second finalize must be a no-op");
+        assert_eq!(st.in_flight.load(Ordering::Acquire), 0);
+        let resp = rx.recv().unwrap().expect("anytime best effort is Ok");
+        // Round-1 sum is 3.0; a rolled-back refinement must deliver it
+        // bit-exactly, a completed round 2 delivers 1.5 + 2.0.
+        let v = resp.attribution.values[0];
+        assert!(v == 3.0 || v == 3.5, "got {v}");
+        closer.join().unwrap();
+    });
+    assert!(report.executions > 1, "explored {} schedules", report.executions);
+}

@@ -1,0 +1,173 @@
+//! Plain (always-on) stress tests for the `LaneScheduler` shutdown
+//! protocol — ISSUE 6 satellite 3's non-model half, run by the default
+//! `cargo test` tier.
+//!
+//! The exhaustive interleaving models live in `tests/interleave_models.rs`
+//! (`--features loom-models`); these tests hammer the same race — a
+//! feeder completing an anytime round while the coordinator closes the
+//! lane queue — with real OS threads and varied close timing, asserting
+//! the exactly-once settlement invariant end to end (see
+//! `docs/INVARIANTS.md`).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use nuig::coordinator::request::{ExplainResponse, LatencyBudget};
+use nuig::coordinator::scheduler::{LaneScheduler, Policy, Popped};
+use nuig::coordinator::state::{Accum, AnytimeRounds, ChunkPlan, RequestState, RoundOutcome};
+use nuig::exec::channel::{bounded, Receiver};
+use nuig::exec::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use nuig::exec::sync::Mutex;
+use nuig::ig::schedule::Schedule;
+use nuig::ig::{AnytimePolicy, IgOptions, Rule};
+use nuig::metrics::StageBreakdown;
+
+type ReplyRx = Receiver<anyhow::Result<ExplainResponse>>;
+
+fn mk_request(
+    id: u64,
+    n_lanes: usize,
+    chunk: usize,
+    anytime: Option<AnytimeRounds>,
+) -> (Arc<RequestState>, ReplyRx, Vec<ChunkPlan>) {
+    let (tx, rx) = bounded(1);
+    let st = Arc::new(RequestState {
+        id,
+        image: Arc::new(vec![1.0]),
+        baseline: Arc::new(vec![0.0]),
+        target: 0,
+        opts: IgOptions::default(),
+        budget: LatencyBudget::Unbounded,
+        acc: Mutex::new(Accum::new(1)),
+        remaining: AtomicUsize::new(n_lanes),
+        steps: n_lanes,
+        probe_passes: 0,
+        endpoint_gap: 0.0,
+        breakdown: Mutex::new(StageBreakdown::default()),
+        submitted_at: Instant::now(),
+        queue_wait: Duration::ZERO,
+        reply: tx,
+        completed: AtomicBool::new(false),
+        in_flight: Arc::new(AtomicUsize::new(1)),
+        anytime,
+        resident: None,
+    });
+    let points: Vec<(f32, f32)> = (0..n_lanes).map(|k| (k as f32 / n_lanes as f32, 1.0)).collect();
+    let plans = ChunkPlan::build(&st, &points, chunk);
+    (st, rx, plans)
+}
+
+/// Anytime state that refines exactly once (m 2 -> 4, capped).
+fn one_refinement_round() -> AnytimeRounds {
+    let schedule = Schedule::uniform(2, Rule::Trapezoid).expect("valid uniform schedule");
+    AnytimeRounds {
+        policy: AnytimePolicy::with_max_m(1e-12, 4).unwrap(),
+        evals: AtomicUsize::new(schedule.len()),
+        schedule: Mutex::new(schedule),
+        residuals: Mutex::new(Vec::new()),
+    }
+}
+
+/// The feeder's refill-or-rollback protocol for one drained round,
+/// exactly as `coordinator::server`'s feeder loop runs it.
+fn feed_to_settlement(s: &LaneScheduler, st: &Arc<RequestState>) {
+    loop {
+        let lanes = match s.pop_chunk(8, Duration::ZERO) {
+            Popped::Chunk(c) => c,
+            Popped::Closed => break,
+        };
+        let mut complete = false;
+        for l in &lanes {
+            complete = l.state.add_lane(l.idx, &[1.0]);
+        }
+        if !complete {
+            continue;
+        }
+        match st.on_round_complete(8) {
+            RoundOutcome::Refine(next) => {
+                let novel: usize = next.iter().map(|p| p.len()).sum();
+                if s.push_refill(st.id, next).is_err() {
+                    // Closed mid-refinement: roll back, deliver the
+                    // completed round (the anytime best-effort contract).
+                    st.abort_refinement(novel);
+                    assert!(st.finalize(), "rollback path settles once");
+                    return;
+                }
+            }
+            RoundOutcome::Finalize => {
+                assert!(st.finalize(), "finalize path settles once");
+                return;
+            }
+        }
+    }
+    panic!("queue closed with the round's lanes already drained — unreachable");
+}
+
+#[test]
+fn refill_racing_close_settles_exactly_once() {
+    // 200 rounds of the race with the closer's timing swept from
+    // "immediately" to "well after the refill": whichever side wins,
+    // the request settles exactly once with an Ok attribution that is
+    // either the completed round 1 (3.0) or the full round 2 (3.5).
+    for iter in 0..200u32 {
+        let s = Arc::new(LaneScheduler::new(Policy::Fifo, 64));
+        let (st, rx, plans) = mk_request(1, 3, 3, Some(one_refinement_round()));
+        s.push_request(1, plans).unwrap();
+        let s2 = s.clone();
+        let closer = std::thread::spawn(move || {
+            for _ in 0..(iter % 40) * 25 {
+                std::hint::spin_loop();
+            }
+            s2.close();
+        });
+        feed_to_settlement(&s, &st);
+        closer.join().unwrap();
+
+        assert!(!st.finalize(), "second settlement must be a no-op (iter {iter})");
+        assert!(!st.fail(anyhow::anyhow!("late")), "late failure must be a no-op");
+        assert_eq!(st.in_flight.load(Ordering::Acquire), 0, "iter {iter}");
+        let resp = rx.recv().unwrap().expect("anytime settles Ok under shutdown");
+        let v = resp.attribution.values[0];
+        assert!(v == 3.0 || v == 3.5, "iter {iter}: best-effort sum was {v}");
+    }
+}
+
+#[test]
+fn close_during_multi_request_drain_loses_nothing() {
+    // Several plain requests queued, a feeder draining, close landing
+    // mid-drain: every admitted lane still pops (close drains before
+    // reporting Closed), so every admitted request settles exactly once.
+    for iter in 0..50u32 {
+        let s = Arc::new(LaneScheduler::new(Policy::RoundRobin, 256));
+        let mut reqs = Vec::new();
+        for id in 0..6u64 {
+            let (st, rx, plans) = mk_request(id, 5, 2, None);
+            s.push_request(id, plans).unwrap();
+            reqs.push((st, rx));
+        }
+        let s2 = s.clone();
+        let closer = std::thread::spawn(move || {
+            for _ in 0..(iter % 10) * 40 {
+                std::hint::spin_loop();
+            }
+            s2.close();
+        });
+        loop {
+            let lanes = match s.pop_chunk(4, Duration::ZERO) {
+                Popped::Chunk(c) => c,
+                Popped::Closed => break,
+            };
+            for l in &lanes {
+                if l.state.add_lane(l.idx, &[1.0]) {
+                    assert!(l.state.finalize());
+                }
+            }
+        }
+        closer.join().unwrap();
+        for (st, rx) in reqs {
+            assert_eq!(st.in_flight.load(Ordering::Acquire), 0, "iter {iter}");
+            let resp = rx.recv().unwrap().unwrap();
+            assert_eq!(resp.attribution.values[0], 5.0, "iter {iter}: all 5 lanes landed");
+        }
+    }
+}

@@ -1,0 +1,40 @@
+//! Serving-path violations: `.unwrap()`/`.expect()` on lock, condvar,
+//! and channel results inside `coordinator/`, plus hash-order iteration
+//! feeding a committed ordering. Never compiled — analyzer input only.
+
+use std::collections::HashMap;
+use std::sync::{Condvar, Mutex};
+
+pub struct Queue {
+    state: Mutex<Vec<u64>>,
+    cv: Condvar,
+    by_id: HashMap<u64, usize>,
+}
+
+impl Queue {
+    pub fn drain(&self) -> Vec<u64> {
+        let mut g = self.state.lock().unwrap(); //~ lock-unwrap-serving
+        std::mem::take(&mut g)
+    }
+
+    pub fn park(&self) {
+        let g = self.state.lock().unwrap(); //~ lock-unwrap-serving
+        let _g = self.cv.wait(g).expect("queue poisoned"); //~ lock-unwrap-serving
+    }
+
+    pub fn commit_order(&self) -> Vec<u64> {
+        let mut out = Vec::new();
+        for (id, _) in self.by_id.iter() { //~ hash-iter
+            out.push(*id);
+        }
+        out
+    }
+
+    pub fn helper_mediated_is_fine(&self) -> usize {
+        // The blessed shape: poison-recovering helper, no raw unwrap.
+        fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+            m.lock().unwrap_or_else(|p| p.into_inner())
+        }
+        lock(&self.state).len()
+    }
+}

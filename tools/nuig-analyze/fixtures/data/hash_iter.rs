@@ -1,0 +1,29 @@
+//! hash-iter fixtures outside the serving scope: the lint is global,
+//! because hash-order nondeterminism poisons whatever accumulates the
+//! result, wherever it lives. Never compiled — analyzer input only.
+
+use std::collections::{HashMap, HashSet};
+
+pub fn sum_in_hash_order(weights: &HashMap<u64, f64>) -> f64 {
+    let mut total = 0.0;
+    for (_, w) in weights.iter() { //~ hash-iter
+        total += w;
+    }
+    total
+}
+
+pub fn collect_in_hash_order(seen: &HashSet<u64>) -> Vec<u64> {
+    let mut out: Vec<u64> = seen.iter().copied().collect(); //~ hash-iter
+    out.sort();
+    out
+}
+
+pub fn keyed_lookup_is_fine(weights: &HashMap<u64, f64>, order: &[u64]) -> f64 {
+    // The blessed shape: iterate an explicitly ordered key list and use
+    // the hash map only for point lookups.
+    let mut total = 0.0;
+    for id in order {
+        total += weights.get(id).copied().unwrap_or(0.0);
+    }
+    total
+}

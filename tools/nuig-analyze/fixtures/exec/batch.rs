@@ -1,0 +1,15 @@
+//! Allowlist proof: `exec/batch.rs` is the one blessed ordered-reduce
+//! site, so the float `.sum()` below is NOT a finding (no marker). The
+//! allowlist is per-lint: wall-clock reads in the same file still flag.
+//! Never compiled — analyzer input only.
+
+pub fn ordered_commit(partials: &[f64]) -> f64 {
+    let total: f64 = partials.iter().sum();
+    total
+}
+
+pub fn timed_commit(partials: &[f64]) -> (f64, std::time::Duration) {
+    let start = std::time::Instant::now(); //~ wallclock-kernel
+    let total: f64 = partials.iter().sum();
+    (total, start.elapsed())
+}

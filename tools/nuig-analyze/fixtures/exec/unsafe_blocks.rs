@@ -1,0 +1,53 @@
+//! unsafe-safety fixtures: an undocumented `unsafe` flags everywhere —
+//! including inside `#[cfg(test)]`, which exempts the determinism lints
+//! but never this one. Never compiled — analyzer input only.
+
+pub fn undocumented(ptr: *const u32) -> u32 {
+    unsafe { *ptr } //~ unsafe-safety
+}
+
+pub fn documented(slice: &[u32]) -> u32 {
+    // SAFETY: index 0 is in bounds — the caller guarantees a non-empty
+    // slice, asserted in debug builds on the line below.
+    debug_assert!(!slice.is_empty());
+    unsafe { *slice.get_unchecked(0) }
+}
+
+// Padding so the documented block's SAFETY comment falls outside the
+// 24-line lookback window of the test-module unsafe below — the flag
+// there must come from its own missing comment, not window spillover.
+pub fn pad_a(x: u32) -> u32 {
+    x + 1
+}
+
+pub fn pad_b(x: u32) -> u32 {
+    x + 2
+}
+
+pub fn pad_c(x: u32) -> u32 {
+    x + 3
+}
+
+pub fn pad_d(x: u32) -> u32 {
+    x + 4
+}
+
+pub fn pad_e(x: u32) -> u32 {
+    x + 5
+}
+
+pub fn pad_f(x: u32) -> u32 {
+    x + 6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unsafe_in_tests_still_needs_safety() {
+        let x = 7u32;
+        let r = unsafe { *(&x as *const u32) }; //~ unsafe-safety
+        assert_eq!(undocumented(&r), 7);
+    }
+}

@@ -1,0 +1,66 @@
+//! Seeded violations for the `ig/` kernel scope: float-reduce,
+//! wallclock-kernel, and waiver hygiene. Expected findings carry a
+//! trailing tilde-comment marker naming the lint (carets point the
+//! marker N lines up, rustc-UI style); `tests/fixtures.rs` diffs the
+//! marker set against the analyzer output.
+//!
+//! This file is never compiled — it is input data for the analyzer.
+
+use std::time::Instant;
+
+pub fn unordered_sum(values: &[f64]) -> f64 {
+    let total: f64 = values.iter().sum(); //~ float-reduce
+    total
+}
+
+pub fn unordered_fold(values: &[f32]) -> f32 {
+    let total: f32 = values.iter().fold(0.0, |a, b| a + b); //~ float-reduce
+    total
+}
+
+pub fn chained_sum(values: &[f64]) -> f64 {
+    values
+        .iter()
+        .map(|v| v * 2.0)
+        .sum::<f64>() //~ float-reduce
+}
+
+pub fn integer_sum_is_fine(values: &[u64]) -> u64 {
+    let total: u64 = values.iter().sum();
+    total
+}
+
+pub fn waived_sum(values: &[f64]) -> f64 {
+    // nuig:allow(float-reduce): sequential in-order slice iteration — fixed order
+    let total: f64 = values.iter().sum();
+    total
+}
+
+pub fn badly_waived_sum(values: &[f64]) -> f64 {
+    // nuig:allow(float-reduce):
+    let total: f64 = values.iter().sum(); //~ float-reduce
+    //~^^ waiver
+    total
+}
+
+// nuig:allow(no-such-lint): believed harmless
+//~^ waiver
+pub fn misnamed_waiver() {}
+
+pub fn timed_kernel() -> std::time::Duration {
+    let start = Instant::now(); //~ wallclock-kernel
+    start.elapsed()
+}
+
+#[cfg(test)]
+mod tests {
+    // The determinism lints stop at the first #[cfg(test)]: test-internal
+    // sums never feed a committed attribution, so none of these flag.
+    #[test]
+    fn sums_in_tests_are_exempt() {
+        let v: Vec<f64> = vec![1.0, 2.0];
+        let s: f64 = v.iter().sum();
+        let start = std::time::Instant::now();
+        assert!(s == 3.0 && start.elapsed().as_secs() < 1);
+    }
+}

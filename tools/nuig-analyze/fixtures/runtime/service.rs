@@ -1,0 +1,18 @@
+//! Serving-path violations in the `runtime/service.rs` scope: channel
+//! unwraps that would cascade a panicked peer into a dead service.
+//! Never compiled — analyzer input only.
+
+use std::sync::mpsc::{Receiver, Sender};
+
+pub fn reply(tx: &Sender<u64>, value: u64) {
+    tx.send(value).unwrap(); //~ lock-unwrap-serving
+}
+
+pub fn next(rx: &Receiver<u64>) -> u64 {
+    rx.recv().unwrap() //~ lock-unwrap-serving
+}
+
+pub fn reply_checked(tx: &Sender<u64>, value: u64) -> bool {
+    // The blessed shape: handle the disconnect, don't unwrap it.
+    tx.send(value).is_ok()
+}

@@ -1,0 +1,790 @@
+//! Repo-specific invariant lints for the nuig serving substrate (ISSUE 6
+//! tentpole a). Five lints, each guarding one of the invariants cataloged
+//! in `docs/INVARIANTS.md`:
+//!
+//! * `float-reduce` — no `.sum()` / `.product()` / `.fold(` over
+//!   f32/f64 outside `exec/batch.rs` (the one blessed ordered-reduce
+//!   site). Floating-point addition is non-associative; an unordered
+//!   reduction silently breaks the 0-ULP determinism contract.
+//! * `hash-iter` — no iteration over `HashMap`/`HashSet` bindings:
+//!   `std` hash iteration order is randomized per process, so anything
+//!   accumulated or committed in that order is nondeterministic.
+//! * `wallclock-kernel` — no `Instant::now` / `SystemTime::now` inside
+//!   the deterministic kernels (`src/ig/`, `src/exec/batch.rs`); stage
+//!   timing belongs to `metrics::StageTimer`, owned by the callers.
+//! * `lock-unwrap-serving` — no `.unwrap()` / `.expect()` on
+//!   lock/condvar/channel results in the serving path
+//!   (`src/coordinator/`, `src/runtime/service.rs`); those modules must
+//!   go through the poison-recovering `exec::sync` helpers so one
+//!   panicked request cannot cascade into a dead coordinator.
+//! * `unsafe-safety` — every `unsafe` token carries a `// SAFETY:`
+//!   comment within the preceding 24 lines.
+//!
+//! The scanner is lexical: comments and string/char literals are blanked
+//! (layout-preserving) before matching, so neither doc text nor string
+//! contents can trip a lint. Lints other than `unsafe-safety` stop at
+//! the file's first `#[cfg(test)]` (test modules sit at the end of every
+//! file in this repo by convention); determinism lints protect what the
+//! serving path commits, not test-internal arithmetic.
+//!
+//! # Waivers
+//!
+//! A finding is waived by a comment on the flagged line or the line
+//! directly above:
+//!
+//! ```text
+//! // nuig:allow(float-reduce): sequential in-order Vec iteration — fixed order
+//! let sum: f64 = values.iter().sum();
+//! ```
+//!
+//! The justification is mandatory: a waiver without one is itself a
+//! finding, as is a waiver naming an unknown lint. Waive only sites that
+//! are provably order-independent or sequentially ordered; anything
+//! load-bearing gets fixed, not waived.
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// Lint identifiers, in reporting order.
+pub const LINTS: [&str; 5] = [
+    "float-reduce",
+    "hash-iter",
+    "wallclock-kernel",
+    "lock-unwrap-serving",
+    "unsafe-safety",
+];
+
+/// Pseudo-lint under which malformed waivers (unknown lint name, missing
+/// justification) are reported. Not waivable itself.
+pub const WAIVER_LINT: &str = "waiver";
+
+/// One lint hit.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Path relative to the scan root, `/`-separated.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Lint identifier (one of [`LINTS`]).
+    pub lint: &'static str,
+    /// Human-readable description.
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.lint, self.message)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Lexical preprocessing
+// ---------------------------------------------------------------------
+
+/// Blank comments and string/char literals, preserving the line layout
+/// exactly (every `\n` survives, including string line-continuations),
+/// so that byte offsets map to the same line numbers in raw and code
+/// text. Quote delimiters are kept so strings still read as opaque
+/// tokens; their contents become spaces.
+pub fn strip_code(text: &str) -> String {
+    #[derive(PartialEq)]
+    enum Mode {
+        Code,
+        LineComment,
+        BlockComment(u32),
+        Str,
+        RawStr(usize),
+        Char,
+    }
+    let b = text.as_bytes();
+    let n = b.len();
+    let mut out = Vec::with_capacity(n);
+    let mut mode = Mode::Code;
+    let mut i = 0;
+    // Push `b[i]` if it is a newline, else a space.
+    fn blank(out: &mut Vec<u8>, c: u8) {
+        out.push(if c == b'\n' { b'\n' } else { b' ' });
+    }
+    while i < n {
+        let c = b[i];
+        let nxt = if i + 1 < n { b[i + 1] } else { 0 };
+        match mode {
+            Mode::Code => {
+                if c == b'/' && nxt == b'/' {
+                    mode = Mode::LineComment;
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                } else if c == b'/' && nxt == b'*' {
+                    mode = Mode::BlockComment(1);
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                } else if c == b'"' {
+                    mode = Mode::Str;
+                    out.push(b'"');
+                    i += 1;
+                } else if c == b'r' && (nxt == b'"' || nxt == b'#') {
+                    // Possible raw string: r"..." or r#"..."#. Only enter
+                    // raw mode when the hashes are followed by a quote
+                    // (`r#foo` is a raw identifier, not a string).
+                    let mut j = i + 1;
+                    let mut hashes = 0usize;
+                    while j < n && b[j] == b'#' {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if j < n && b[j] == b'"' {
+                        mode = Mode::RawStr(hashes);
+                        for _ in i..=j {
+                            out.push(b' ');
+                        }
+                        i = j + 1;
+                    } else {
+                        out.push(c);
+                        i += 1;
+                    }
+                } else if c == b'\''
+                    && (nxt == b'\\' || (i + 2 < n && b[i + 2] == b'\''))
+                {
+                    // Char literal ('x' or '\x'); lifetimes ('a) stay code.
+                    mode = Mode::Char;
+                    out.push(b'\'');
+                    i += 1;
+                } else {
+                    out.push(c);
+                    i += 1;
+                }
+            }
+            Mode::LineComment => {
+                if c == b'\n' {
+                    mode = Mode::Code;
+                    out.push(b'\n');
+                } else {
+                    out.push(b' ');
+                }
+                i += 1;
+            }
+            Mode::BlockComment(d) => {
+                if c == b'*' && nxt == b'/' {
+                    mode = if d == 1 { Mode::Code } else { Mode::BlockComment(d - 1) };
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                } else if c == b'/' && nxt == b'*' {
+                    mode = Mode::BlockComment(d + 1);
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                } else {
+                    blank(&mut out, c);
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if c == b'\\' {
+                    // Keep a continuation's newline so lines stay aligned.
+                    out.push(b' ');
+                    if i + 1 < n {
+                        blank(&mut out, b[i + 1]);
+                    }
+                    i += 2;
+                } else if c == b'"' {
+                    mode = Mode::Code;
+                    out.push(b'"');
+                    i += 1;
+                } else {
+                    blank(&mut out, c);
+                    i += 1;
+                }
+            }
+            Mode::RawStr(hashes) => {
+                if c == b'"' && i + hashes < n && b[i + 1..].starts_with(&vec![b'#'; hashes]) {
+                    mode = Mode::Code;
+                    for _ in 0..=hashes {
+                        out.push(b' ');
+                    }
+                    i += 1 + hashes;
+                } else {
+                    blank(&mut out, c);
+                    i += 1;
+                }
+            }
+            Mode::Char => {
+                if c == b'\\' {
+                    out.push(b' ');
+                    if i + 1 < n {
+                        blank(&mut out, b[i + 1]);
+                    }
+                    i += 2;
+                } else if c == b'\'' {
+                    mode = Mode::Code;
+                    out.push(b'\'');
+                    i += 1;
+                } else {
+                    blank(&mut out, c);
+                    i += 1;
+                }
+            }
+        }
+    }
+    String::from_utf8(out).expect("blanking preserves UTF-8 (multibyte only inside literals)")
+}
+
+fn is_word(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Does `hay` contain `needle` as a whole word (identifier boundaries)?
+fn has_token(hay: &str, needle: &str) -> bool {
+    find_token(hay, needle, 0).is_some()
+}
+
+/// Position of the next whole-word occurrence of `needle` at or after
+/// `from`.
+fn find_token(hay: &str, needle: &str, from: usize) -> Option<usize> {
+    let hb = hay.as_bytes();
+    let mut start = from;
+    while let Some(p) = hay[start..].find(needle) {
+        let p = start + p;
+        let before_ok = p == 0 || !is_word(hb[p - 1]);
+        let end = p + needle.len();
+        let after_ok = end >= hb.len() || !is_word(hb[end]);
+        if before_ok && after_ok {
+            return Some(p);
+        }
+        start = p + 1;
+    }
+    None
+}
+
+// ---------------------------------------------------------------------
+// Waivers
+// ---------------------------------------------------------------------
+
+struct Waiver {
+    lint: String,
+    justification: String,
+}
+
+/// Parse `// nuig:allow(<lint>): <justification>` waivers from the raw
+/// lines; returns `(line -> waiver)` entries (0-based index).
+fn parse_waivers(raw_lines: &[&str]) -> Vec<(usize, Waiver)> {
+    let mut out = Vec::new();
+    for (idx, line) in raw_lines.iter().enumerate() {
+        let Some(p) = line.find("nuig:allow(") else { continue };
+        let rest = &line[p + "nuig:allow(".len()..];
+        let Some(close) = rest.find(')') else { continue };
+        let lint = rest[..close].trim().to_string();
+        let after = rest[close + 1..].trim_start();
+        let justification = after.strip_prefix(':').unwrap_or("").trim().to_string();
+        out.push((idx, Waiver { lint, justification }));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Per-file analysis
+// ---------------------------------------------------------------------
+
+/// Scope/allowlist decisions, all on `/`-separated paths relative to the
+/// scan root (mirroring `rust/src`).
+fn in_kernel_scope(rel: &str) -> bool {
+    rel.starts_with("ig/") || rel == "exec/batch.rs"
+}
+
+fn in_serving_scope(rel: &str) -> bool {
+    rel.starts_with("coordinator/") || rel == "runtime/service.rs"
+}
+
+fn float_reduce_allowlisted(rel: &str) -> bool {
+    // The ordered-reduce site: exec::batch commits partials in a fixed
+    // chunk order by construction (its module doc carries the proof
+    // obligation) and is property-tested for 0-ULP at any worker count.
+    rel == "exec/batch.rs"
+}
+
+/// Analyze one file's text; `rel` is its `/`-separated path relative to
+/// the scan root.
+pub fn analyze_file(rel: &str, text: &str) -> Vec<Finding> {
+    let code = strip_code(text);
+    let raw_lines: Vec<&str> = text.split('\n').collect();
+    let code_lines: Vec<&str> = code.split('\n').collect();
+    debug_assert_eq!(raw_lines.len(), code_lines.len(), "{rel}: stripper shifted lines");
+    let waivers = parse_waivers(&raw_lines);
+    let mut findings = Vec::new();
+
+    // Waiver hygiene: unknown lint names and missing justifications are
+    // findings in their own right (a waiver must say *why*).
+    for (idx, w) in &waivers {
+        if !LINTS.contains(&w.lint.as_str()) {
+            findings.push(Finding {
+                file: rel.to_string(),
+                line: idx + 1,
+                lint: WAIVER_LINT,
+                message: format!("waiver names unknown lint `{}`", w.lint),
+            });
+        } else if w.justification.is_empty() {
+            findings.push(Finding {
+                file: rel.to_string(),
+                line: idx + 1,
+                lint: WAIVER_LINT,
+                message: format!("waiver for `{}` missing a justification", w.lint),
+            });
+        }
+    }
+
+    // First `#[cfg(test)]`: the non-unsafe lints stop there (test
+    // modules close out every file in this repo).
+    let test_start = code_lines.iter().position(|l| l.contains("#[cfg(test)]"));
+    let prod_end = test_start.unwrap_or(code_lines.len());
+
+    let waived = |lint: &str, line_idx: usize| -> bool {
+        waivers.iter().any(|(idx, w)| {
+            w.lint == lint
+                && !w.justification.is_empty()
+                && (*idx == line_idx || idx + 1 == line_idx)
+        })
+    };
+    let mut emit = |lint: &'static str, line_idx: usize, message: String| {
+        if !waived(lint, line_idx) {
+            findings.push(Finding { file: rel.to_string(), line: line_idx + 1, lint, message });
+        }
+    };
+
+    // ---- float-reduce -------------------------------------------------
+    if !float_reduce_allowlisted(rel) {
+        for i in 0..prod_end {
+            if !has_reduce_call(code_lines[i]) {
+                continue;
+            }
+            let stmt = statement_window(&code_lines, i);
+            if has_token(&stmt, "f32") || has_token(&stmt, "f64") {
+                emit(
+                    "float-reduce",
+                    i,
+                    "unordered float reduction (sum/product/fold over f32/f64); \
+                     order-sensitive math must go through exec::batch's ordered \
+                     reduce or be waived as provably order-independent"
+                        .to_string(),
+                );
+            }
+        }
+    }
+
+    // ---- hash-iter ----------------------------------------------------
+    let names = hash_bindings(&code);
+    if !names.is_empty() {
+        for i in 0..prod_end {
+            if let Some(name) = hash_iteration_on(code_lines[i], &names) {
+                emit(
+                    "hash-iter",
+                    i,
+                    format!(
+                        "iteration over hash collection `{name}`: std hash order is \
+                         per-process random, so anything accumulated or committed \
+                         in this order is nondeterministic"
+                    ),
+                );
+            }
+        }
+    }
+
+    // ---- wallclock-kernel ---------------------------------------------
+    if in_kernel_scope(rel) {
+        for i in 0..prod_end {
+            let l = code_lines[i];
+            if l.contains("Instant::now") || l.contains("SystemTime::now") {
+                emit(
+                    "wallclock-kernel",
+                    i,
+                    "wall-clock read inside a deterministic kernel; stage timing \
+                     belongs to the caller via metrics::StageTimer"
+                        .to_string(),
+                );
+            }
+        }
+    }
+
+    // ---- lock-unwrap-serving ------------------------------------------
+    if in_serving_scope(rel) {
+        for i in 0..prod_end {
+            if let Some(m) = lockish_unwrap(code_lines[i]) {
+                emit(
+                    "lock-unwrap-serving",
+                    i,
+                    format!(
+                        "`.{m}(..).unwrap()/expect()` in the serving path; use the \
+                         poison-recovering exec::sync helpers (one panicked request \
+                         must not cascade into a dead coordinator)"
+                    ),
+                );
+            }
+        }
+    }
+
+    // ---- unsafe-safety (whole file, tests included) --------------------
+    for i in 0..code_lines.len() {
+        if !has_token(code_lines[i], "unsafe") {
+            continue;
+        }
+        let lo = i.saturating_sub(24);
+        let documented = raw_lines[lo..=i].iter().any(|l| l.contains("SAFETY:"));
+        if !documented {
+            emit(
+                "unsafe-safety",
+                i,
+                "unsafe without a `// SAFETY:` comment in the preceding 24 lines"
+                    .to_string(),
+            );
+        }
+    }
+
+    findings
+}
+
+/// Does the code line contain a reduction call (`.sum()`, `.sum::<..>()`,
+/// `.product()`, `.fold(`)?
+fn has_reduce_call(line: &str) -> bool {
+    for pat in [".sum(", ".sum::<", ".product(", ".product::<", ".fold("] {
+        if line.contains(pat) {
+            return true;
+        }
+    }
+    false
+}
+
+/// The enclosing statement around line `i`, approximated as the lines
+/// from the previous terminator (`;`, `{`, `}`, or blank) through the
+/// next `;`, capped at 8 lines each way — enough for every rustfmt'd
+/// chain in this repo.
+fn statement_window(code_lines: &[&str], i: usize) -> String {
+    let mut lo = i;
+    for k in (i.saturating_sub(8)..i).rev() {
+        let s = code_lines[k].trim_end();
+        if s.ends_with(';') || s.ends_with('{') || s.ends_with('}') || s.trim().is_empty() {
+            break;
+        }
+        lo = k;
+    }
+    let mut hi = i;
+    for (k, line) in code_lines.iter().enumerate().skip(i).take(9) {
+        hi = k;
+        if line.trim_end().ends_with(';') {
+            break;
+        }
+    }
+    code_lines[lo..=hi].join("\n")
+}
+
+/// Identifiers bound to `HashMap`/`HashSet` in this file: type
+/// ascriptions (`name: HashMap<..>`, fields and params alike) and
+/// constructor bindings (`let name = HashMap::new()`).
+fn hash_bindings(code: &str) -> Vec<String> {
+    let mut names = Vec::new();
+    for ty in ["HashMap", "HashSet"] {
+        let mut from = 0;
+        while let Some(p) = find_token(code, ty, from) {
+            from = p + ty.len();
+            let after = &code[from..];
+            let b = code.as_bytes();
+            if after.trim_start().starts_with('<') {
+                // `name : [&][mut] [std::collections::] HashMap<`
+                let mut q = p;
+                q = skip_back_ws(b, q);
+                q = skip_back_path_prefix(b, q, "std::collections::");
+                q = skip_back_ws(b, q);
+                q = skip_back_kw(b, q, "mut");
+                q = skip_back_ws(b, q);
+                if q > 0 && b[q - 1] == b'&' {
+                    q -= 1;
+                    q = skip_back_ws(b, q);
+                }
+                if q > 0 && b[q - 1] == b':' && !(q > 1 && b[q - 2] == b':') {
+                    q -= 1;
+                    q = skip_back_ws(b, q);
+                    if let Some(name) = ident_ending_at(code, q) {
+                        names.push(name);
+                    }
+                }
+            } else if after.starts_with("::") {
+                // `let [mut] name [ : .. ] = [std::collections::]HashMap::..`
+                let mut q = p;
+                q = skip_back_ws(b, q);
+                q = skip_back_path_prefix(b, q, "std::collections::");
+                q = skip_back_ws(b, q);
+                if q > 0 && b[q - 1] == b'=' {
+                    q -= 1;
+                    q = skip_back_ws(b, q);
+                    // Optional type ascription between name and `=` is
+                    // rare for constructor bindings; handle the plain
+                    // `let name =` shape.
+                    if let Some(name) = ident_ending_at(code, q) {
+                        names.push(name);
+                    }
+                }
+            }
+        }
+    }
+    names.sort();
+    names.dedup();
+    names
+}
+
+fn skip_back_ws(b: &[u8], mut q: usize) -> usize {
+    while q > 0 && (b[q - 1] as char).is_whitespace() {
+        q -= 1;
+    }
+    q
+}
+
+fn skip_back_kw(b: &[u8], q: usize, kw: &str) -> usize {
+    let k = kw.as_bytes();
+    if q >= k.len() && &b[q - k.len()..q] == k && (q == k.len() || !is_word(b[q - k.len() - 1])) {
+        q - k.len()
+    } else {
+        q
+    }
+}
+
+fn skip_back_path_prefix(b: &[u8], q: usize, prefix: &str) -> usize {
+    let p = prefix.as_bytes();
+    if q >= p.len() && &b[q - p.len()..q] == p {
+        q - p.len()
+    } else {
+        q
+    }
+}
+
+fn ident_ending_at(code: &str, q: usize) -> Option<String> {
+    let b = code.as_bytes();
+    let mut s = q;
+    while s > 0 && is_word(b[s - 1]) {
+        s -= 1;
+    }
+    if s == q {
+        return None;
+    }
+    let name = &code[s..q];
+    if name.as_bytes()[0].is_ascii_digit() || name == "let" || name == "mut" {
+        return None;
+    }
+    Some(name.to_string())
+}
+
+const ITER_METHODS: [&str; 10] = [
+    "iter",
+    "iter_mut",
+    "into_iter",
+    "keys",
+    "values",
+    "values_mut",
+    "drain",
+    "retain",
+    "min_by_key",
+    "max_by_key",
+];
+
+/// If this line iterates one of the hash-bound `names` (method call or
+/// `for .. in name`), return that name.
+fn hash_iteration_on(line: &str, names: &[String]) -> Option<String> {
+    for name in names {
+        let mut from = 0;
+        while let Some(p) = find_token(line, name, from) {
+            from = p + name.len();
+            let after = line[from..].trim_start();
+            if let Some(rest) = after.strip_prefix('.') {
+                let rest = rest.trim_start();
+                for m in ITER_METHODS {
+                    if rest.starts_with(m)
+                        && rest[m.len()..].trim_start().starts_with('(')
+                    {
+                        return Some(name.clone());
+                    }
+                }
+            }
+            // `for x in name` / `for x in &name` / `for x in &mut name`
+            let before = &line[..p];
+            let trimmed = before.trim_end();
+            let bare = trimmed
+                .strip_suffix("&mut")
+                .or_else(|| trimmed.strip_suffix('&'))
+                .unwrap_or(trimmed);
+            if bare.trim_end().ends_with(" in") && find_token(line, "for", 0).is_some() {
+                return Some(name.clone());
+            }
+        }
+    }
+    None
+}
+
+const LOCKISH: [&str; 8] = [
+    "lock",
+    "wait",
+    "wait_timeout",
+    "send",
+    "try_send",
+    "recv",
+    "try_recv",
+    "recv_timeout",
+];
+
+/// If this line calls a lock/condvar/channel method and immediately
+/// unwraps/expects its result, return the method name.
+fn lockish_unwrap(line: &str) -> Option<&'static str> {
+    let b = line.as_bytes();
+    for m in LOCKISH {
+        let pat = format!(".{m}(");
+        let mut from = 0;
+        while let Some(p) = line[from..].find(&pat) {
+            let p = from + p;
+            from = p + 1;
+            // Method-name boundary: `.lock(` must not match `.unlock(`.
+            let end = p + 1 + m.len();
+            if end < b.len() && is_word(b[end]) {
+                continue;
+            }
+            // Find the matching close paren of the call.
+            let open = p + pat.len() - 1;
+            let mut depth = 0i32;
+            let mut close = None;
+            for (k, &c) in b.iter().enumerate().skip(open) {
+                if c == b'(' {
+                    depth += 1;
+                } else if c == b')' {
+                    depth -= 1;
+                    if depth == 0 {
+                        close = Some(k);
+                        break;
+                    }
+                }
+            }
+            let Some(close) = close else { continue };
+            let rest = line[close + 1..].trim_start();
+            if rest.starts_with(".unwrap()") || rest.starts_with(".expect(") {
+                return Some(m);
+            }
+        }
+    }
+    None
+}
+
+// ---------------------------------------------------------------------
+// Tree walk
+// ---------------------------------------------------------------------
+
+/// Recursively analyze every `.rs` file under `root` (sorted walk, so
+/// output order is stable). Returns findings plus the number of files
+/// scanned.
+pub fn analyze_tree(root: &Path) -> std::io::Result<(Vec<Finding>, usize)> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    files.sort();
+    let mut findings = Vec::new();
+    for path in &files {
+        let text = std::fs::read_to_string(path)?;
+        let rel = path
+            .strip_prefix(root)
+            .expect("collected under root")
+            .to_string_lossy()
+            .replace('\\', "/");
+        findings.extend(analyze_file(&rel, &text));
+    }
+    Ok((findings, files.len()))
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stripper_preserves_line_count_and_blanks_literals() {
+        let src = "let a = \"has // no comment\"; // real comment\n\
+                   let b = r#\"raw \"quoted\" text\"#;\n\
+                   /* block\n   spanning */ let c = 'x';\n\
+                   let d = \"continued \\\n    string\";\n";
+        let code = strip_code(src);
+        assert_eq!(src.matches('\n').count(), code.matches('\n').count());
+        assert!(!code.contains("no comment"));
+        assert!(!code.contains("real comment"));
+        assert!(!code.contains("raw"));
+        assert!(!code.contains("spanning"));
+        assert!(code.contains("let a"));
+        assert!(code.contains("let c"));
+        // The continuation backslash's newline survives.
+        assert_eq!(code.split('\n').count(), src.split('\n').count());
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let code = strip_code("fn f<'a>(x: &'a str) -> &'a str { x }");
+        assert!(code.contains("'a>"));
+        assert!(code.contains("&'a str"));
+    }
+
+    #[test]
+    fn token_boundaries() {
+        assert!(has_token("let x: f64 = 0.0;", "f64"));
+        assert!(!has_token("let f64x = 0;", "f64"));
+        assert!(!has_token("unsafe_op_in_unsafe_fn", "unsafe"));
+        assert!(has_token("unsafe { }", "unsafe"));
+    }
+
+    #[test]
+    fn statement_window_spans_chains() {
+        let lines = ["let x = v", "    .iter()", "    .sum();", "let y = 1;"];
+        let refs: Vec<&str> = lines.to_vec();
+        let w = statement_window(&refs, 2);
+        assert!(w.contains("let x"));
+        assert!(!w.contains("let y"));
+    }
+
+    #[test]
+    fn hash_bindings_found() {
+        let code = "struct S { entries: Mutex<u32>, m: HashMap<u64, u32> }\n\
+                    fn f() { let mut set = HashSet::new(); let v: Vec<u32> = vec![]; }";
+        let names = hash_bindings(code);
+        assert_eq!(names, vec!["m".to_string(), "set".to_string()]);
+    }
+
+    #[test]
+    fn lockish_unwrap_matches_calls_with_args() {
+        assert_eq!(lockish_unwrap("self.cv.wait(guard).unwrap();"), Some("wait"));
+        assert_eq!(lockish_unwrap("let g = self.state.lock().unwrap();"), Some("lock"));
+        assert_eq!(lockish_unwrap("tx.send(Ok(resp)).expect(\"x\");"), Some("send"));
+        assert_eq!(lockish_unwrap("let _ = tx.send(Ok(resp));"), None);
+        assert_eq!(lockish_unwrap("sync::lock(&self.state)"), None);
+    }
+
+    #[test]
+    fn waiver_requires_justification() {
+        let findings = analyze_file(
+            "ig/x.rs",
+            "// nuig:allow(float-reduce):\nfn f(v: &[f64]) -> f64 { v.iter().sum() }\n",
+        );
+        assert!(findings.iter().any(|f| f.message.contains("missing a justification")));
+        assert!(
+            findings.iter().any(|f| f.lint == "float-reduce"),
+            "unjustified waiver must not suppress"
+        );
+    }
+
+    #[test]
+    fn waiver_with_justification_suppresses() {
+        let findings = analyze_file(
+            "ig/x.rs",
+            "// nuig:allow(float-reduce): ordered Vec iteration\n\
+             fn f(v: &[f64]) -> f64 { v.iter().sum() }\n",
+        );
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+}

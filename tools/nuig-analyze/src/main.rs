@@ -1,0 +1,34 @@
+//! `cargo run -p nuig-analyze [-- <path>]` — scan a Rust source tree
+//! (default: the repo's `rust/src`) with the nuig invariant lints and
+//! exit nonzero on any finding. CI runs this on every push; see
+//! `docs/INVARIANTS.md` for what each lint protects.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let root = match std::env::args().nth(1) {
+        Some(p) => PathBuf::from(p),
+        None => {
+            // tools/nuig-analyze -> repo root -> rust/src
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../../rust/src")
+        }
+    };
+    let (findings, scanned) = match nuig_analyze::analyze_tree(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("nuig-analyze: cannot scan {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    for f in &findings {
+        println!("{f}");
+    }
+    if findings.is_empty() {
+        println!("nuig-analyze: {scanned} files clean ({} lints)", nuig_analyze::LINTS.len());
+        ExitCode::SUCCESS
+    } else {
+        println!("nuig-analyze: {} finding(s) in {scanned} files", findings.len());
+        ExitCode::FAILURE
+    }
+}

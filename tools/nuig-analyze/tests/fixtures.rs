@@ -1,0 +1,100 @@
+//! Fixture expectations: every `//~ <lint>` marker in a fixture file
+//! (with `//~^` / `//~^^` pointing one / two lines up, rustc-UI style)
+//! must correspond to exactly one analyzer finding, and vice versa —
+//! the diff is asserted per file, so a lint that over- or under-fires
+//! names the exact line it got wrong.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+fn fixtures_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("fixtures")
+}
+
+/// `(1-based line, lint)` pairs declared by `//~` markers.
+fn expected_markers(rel: &str, text: &str) -> BTreeSet<(usize, String)> {
+    let mut out = BTreeSet::new();
+    for (idx, line) in text.split('\n').enumerate() {
+        let Some(p) = line.find("//~") else { continue };
+        let rest = &line[p + 3..];
+        let carets = rest.bytes().take_while(|&b| b == b'^').count();
+        let lint = rest[carets..].trim();
+        assert!(!lint.is_empty(), "{rel}:{}: empty //~ marker", idx + 1);
+        assert!(
+            idx + 1 > carets,
+            "{rel}:{}: marker points above the file start",
+            idx + 1
+        );
+        out.insert((idx + 1 - carets, lint.to_string()));
+    }
+    out
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    for entry in std::fs::read_dir(dir).expect("fixtures dir readable") {
+        let path = entry.expect("dir entry").path();
+        if path.is_dir() {
+            collect_rs(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+#[test]
+fn fixtures_match_their_markers() {
+    let root = fixtures_root();
+    let mut files = Vec::new();
+    collect_rs(&root, &mut files);
+    files.sort();
+    assert!(files.len() >= 6, "fixture suite went missing: {files:?}");
+
+    let mut total_expected = 0usize;
+    for path in &files {
+        let text = std::fs::read_to_string(path).expect("fixture readable");
+        let rel = path
+            .strip_prefix(&root)
+            .expect("under fixtures root")
+            .to_string_lossy()
+            .replace('\\', "/");
+        let want = expected_markers(&rel, &text);
+        let got: BTreeSet<(usize, String)> = nuig_analyze::analyze_file(&rel, &text)
+            .into_iter()
+            .map(|f| (f.line, f.lint.to_string()))
+            .collect();
+        assert_eq!(
+            got, want,
+            "{rel}: analyzer findings (left) diverge from //~ markers (right)"
+        );
+        total_expected += want.len();
+    }
+    // Guard against a marker-parsing regression silently emptying the
+    // suite: the seeded violations cover every lint at least once.
+    assert!(total_expected >= 12, "only {total_expected} markers found");
+}
+
+#[test]
+fn every_lint_is_exercised_by_a_fixture() {
+    let root = fixtures_root();
+    let mut files = Vec::new();
+    collect_rs(&root, &mut files);
+    let mut seen = BTreeSet::new();
+    for path in &files {
+        let text = std::fs::read_to_string(path).expect("fixture readable");
+        let rel = path
+            .strip_prefix(&root)
+            .expect("under fixtures root")
+            .to_string_lossy()
+            .replace('\\', "/");
+        for f in nuig_analyze::analyze_file(&rel, &text) {
+            seen.insert(f.lint);
+        }
+    }
+    for lint in nuig_analyze::LINTS {
+        assert!(seen.contains(lint), "no fixture exercises `{lint}`");
+    }
+    assert!(
+        seen.contains(nuig_analyze::WAIVER_LINT),
+        "no fixture exercises waiver hygiene"
+    );
+}

@@ -1,0 +1,23 @@
+//! The analyzer's acceptance gate on the real tree: `rust/src` must scan
+//! clean. This runs in the default test tier, so a PR that introduces an
+//! unordered float reduction, hash-order commit, kernel wall-clock read,
+//! serving-path unwrap, or undocumented `unsafe` fails `cargo test`
+//! before CI even reaches the dedicated analyzer job.
+
+use std::path::PathBuf;
+
+#[test]
+fn nuig_tree_is_clean() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../../rust/src");
+    let (findings, scanned) = nuig_analyze::analyze_tree(&root).expect("rust/src readable");
+    for f in &findings {
+        eprintln!("{f}");
+    }
+    assert!(
+        findings.is_empty(),
+        "{} finding(s) in rust/src — fix or waive with a justification",
+        findings.len()
+    );
+    // The walk found the whole tree, not a stray subdirectory.
+    assert!(scanned >= 45, "expected the full nuig tree, scanned only {scanned} files");
+}
