@@ -458,6 +458,57 @@ def ordered_lane_commit(rows, arrival) -> np.ndarray:
     return acc
 
 
+# --------------------------------------------------------------------------
+# Admission load shedding (mirrors rust/src/config/mod.rs::ShedConfig).
+#
+# The serving coordinator sheds tight-tier requests BEFORE stage 1 when an
+# overload gauge (resident-pool occupancy or lane-queue depth) sits at or
+# above its high-water mark, replying with a deterministic retry-after
+# hint. The decision and the hint are pure integer functions of the gauge
+# readings — no clocks, no floats — so this reference can mirror them
+# bit-for-bit; tests/test_resilience_parity.py pins them against goldens
+# shared with the Rust unit tests (config/mod.rs::tests).
+# --------------------------------------------------------------------------
+
+#: Hint growth cap — mirrors ``ShedConfig::MAX_FACTOR``: the retry-after
+#: hint saturates at ``retry_after_ms * 16`` however deep the overload runs.
+SHED_MAX_FACTOR = 16
+
+
+def shed_decision(resident_len: int, lane_depth: int,
+                  resident_high_water: int, lane_high_water: int) -> bool:
+    """Mirror of ``ShedConfig::should_shed``: shed when any *enabled*
+    gauge (mark > 0) sits at or above its high-water mark. Marks of 0
+    disable their gauge — the default config sheds nothing."""
+    return ((resident_high_water > 0 and resident_len >= resident_high_water)
+            or (lane_high_water > 0 and lane_depth >= lane_high_water))
+
+
+def shed_overload_factor(resident_len: int, lane_depth: int,
+                         resident_high_water: int, lane_high_water: int) -> int:
+    """Mirror of ``ShedConfig::overload_factor``: the worst
+    ``ceil(gauge / mark)`` across enabled gauges, clamped to
+    ``1..=SHED_MAX_FACTOR``. Integer-only (Rust's ``u64::div_ceil``), so
+    the two languages agree exactly at every reading."""
+    def ratio(gauge: int, mark: int) -> int:
+        if mark == 0:
+            return 0
+        return -(-int(gauge) // int(mark))  # ceil-div on non-negative ints
+    factor = max(ratio(resident_len, resident_high_water),
+                 ratio(lane_depth, lane_high_water))
+    return min(max(factor, 1), SHED_MAX_FACTOR)
+
+
+def shed_retry_after_ms(resident_len: int, lane_depth: int,
+                        resident_high_water: int, lane_high_water: int,
+                        retry_after_ms: int) -> int:
+    """Mirror of ``ShedConfig::retry_after``: the deterministic hint a
+    shed tight-tier request carries — ``retry_after_ms`` times the
+    overload factor, in integer milliseconds."""
+    return int(retry_after_ms) * shed_overload_factor(
+        resident_len, lane_depth, resident_high_water, lane_high_water)
+
+
 def _run_points(flat, x, baseline, alphas: np.ndarray, weights: np.ndarray,
                 target: int, chunk: int = 16) -> Tuple[np.ndarray, List[float]]:
     """Evaluate sum_k w_k grad_k (x-x') via the AOT ig_chunk fn, chunked.

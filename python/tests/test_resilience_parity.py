@@ -1,0 +1,133 @@
+"""Parity pins for the elastic-resilience layer's pure decision math.
+
+Two cross-language contracts ride under chaos (rust/tests/
+chaos_resilience.rs) and both reduce to clock-free functions this file
+pins against goldens shared with the Rust unit tests:
+
+  * **Admission shedding** (``config/mod.rs::ShedConfig``): the shed
+    decision and the retry-after hint are integer-only functions of the
+    overload gauges, mirrored by ``igref.shed_decision`` /
+    ``igref.shed_overload_factor`` / ``igref.shed_retry_after_ms``. The
+    goldens here are the same numbers asserted by
+    ``config::tests::shed_disabled_by_default_and_decision_math``.
+  * **Migration-order independence** (``coordinator::state::Accum``):
+    when a draining or killed shard's chunks migrate to a sibling, their
+    rows arrive in a *different order* than the home shard would have
+    delivered — but commits happen in lane-index order, so the settled
+    attribution is bit-identical. ``igref.ordered_lane_commit`` mirrors
+    that state machine; the tests here drive it with failover-shaped
+    arrival orders (a chunk retried after its successors completed).
+
+Numpy-only at the function level; importing ``igref`` pulls JAX like the
+rest of the parity suite.
+"""
+
+import numpy as np
+import pytest
+
+from compile import igref
+
+
+# --------------------------------------------------------------------------
+# Shed decision + retry hint (goldens shared with config/mod.rs tests)
+# --------------------------------------------------------------------------
+
+def test_disabled_marks_never_shed():
+    # Default ShedConfig: both marks 0 = shedding off, however hot the
+    # gauges run.
+    assert not igref.shed_decision(2**63, 2**63, 0, 0)
+    # A disabled gauge is ignored even when the other is enabled.
+    assert not igref.shed_decision(7, 2**63, 8, 0)
+
+
+def test_single_gauge_decision_and_factor_series():
+    # Resident mark 8, lane gauge disabled — the series pinned in
+    # config::tests::shed_disabled_by_default_and_decision_math.
+    assert igref.shed_decision(8, 0, 8, 0), "at the mark = shed"
+    assert igref.shed_decision(9, 0, 8, 0)
+    assert not igref.shed_decision(7, 0, 8, 0)
+    assert igref.shed_overload_factor(8, 0, 8, 0) == 1
+    assert igref.shed_overload_factor(9, 0, 8, 0) == 2
+    assert igref.shed_overload_factor(17, 0, 8, 0) == 3
+    assert igref.shed_overload_factor(2**63, 0, 8, 0) == igref.SHED_MAX_FACTOR
+    assert igref.shed_retry_after_ms(9, 0, 8, 0, 25) == 50
+
+
+def test_two_gauges_worst_factor_wins():
+    # Marks 8/64: either gauge crossing sheds; the hint scales by the
+    # WORST ceil-ratio.
+    assert igref.shed_decision(0, 64, 8, 64)
+    assert not igref.shed_decision(7, 63, 8, 64)
+    assert igref.shed_overload_factor(8, 256, 8, 64) == 4, "lane gauge dominates"
+    assert igref.shed_retry_after_ms(8, 256, 8, 64, 10) == 40
+
+
+def test_pinned_rust_golden():
+    # THE pinned cross-language golden: ShedConfig { resident_high_water:
+    # 8, lane_high_water: 64, retry_after_ms: 10 }.retry_after(20, 100)
+    # == 30ms in config/mod.rs::tests — resident ceil(20/8) = 3 beats
+    # lane ceil(100/64) = 2.
+    assert igref.shed_overload_factor(20, 100, 8, 64) == 3
+    assert igref.shed_retry_after_ms(20, 100, 8, 64, 10) == 30
+
+
+def test_factor_floor_is_one_below_the_mark():
+    # retry_after is only consulted after a shed decision, but the
+    # factor itself is total: below every mark it floors at 1 so the
+    # hint is always actionable (never 0 ms).
+    assert igref.shed_overload_factor(0, 0, 8, 64) == 1
+    assert igref.shed_retry_after_ms(0, 0, 8, 64, 25) == 25
+
+
+def test_hint_saturates_at_max_factor():
+    base = 10
+    cap = igref.shed_retry_after_ms(10**9, 10**9, 1, 1, base)
+    assert cap == base * igref.SHED_MAX_FACTOR
+    # Deeper overload cannot grow the hint further.
+    assert igref.shed_retry_after_ms(10**12, 10**12, 1, 1, base) == cap
+
+
+# --------------------------------------------------------------------------
+# Migration-order independence of the settled attribution
+# --------------------------------------------------------------------------
+
+def _rows(n: int, f: int, seed: int, spread: float = 1.0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    scale = rng.uniform(-spread, spread, size=(n, 1))
+    return (rng.standard_normal((n, f)) * 10.0 ** scale).astype(np.float32)
+
+
+@pytest.mark.parametrize("n,chunk", [(8, 4), (24, 8), (33, 16)])
+def test_failover_retry_arrival_is_bit_identical(n, chunk):
+    # A killed shard's chunk is retried on a sibling and lands AFTER all
+    # its successors — the most disordered arrival failover produces.
+    # Index-ordered commits make it bit-identical to the in-order run.
+    rows = _rows(n, 6, seed=n * 10 + chunk, spread=8.0)
+    reference = igref.ordered_lane_commit(rows, range(n))
+    spans = igref.chunk_spans(n, chunk)
+    for victim in range(len(spans)):
+        start, length = spans[victim]
+        arrival = [k for s, l in spans[:victim] + spans[victim + 1:]
+                   for k in range(s, s + l)]
+        arrival += list(range(start, start + length))  # retried chunk, last
+        got = igref.ordered_lane_commit(rows, arrival)
+        assert got.tobytes() == reference.tobytes(), \
+            f"retrying chunk {victim} moved a bit"
+
+
+def test_drain_migration_interleaves_without_moving_bits():
+    # Drain rebalancing: the draining shard's queued chunks migrate to a
+    # sibling mid-stream, so arrivals interleave home-executed and
+    # migrated chunks arbitrarily. Seeded shuffles of whole chunks (the
+    # granularity failover actually moves) all settle identically.
+    n, chunk = 40, 8
+    rows = _rows(n, 5, seed=77, spread=10.0)
+    reference = igref.ordered_lane_commit(rows, range(n))
+    spans = igref.chunk_spans(n, chunk)
+    rng = np.random.default_rng(0xD00F)
+    for _ in range(12):
+        order = rng.permutation(len(spans))
+        arrival = [k for i in order for k in range(spans[i][0],
+                                                   spans[i][0] + spans[i][1])]
+        got = igref.ordered_lane_commit(rows, arrival)
+        assert got.tobytes() == reference.tobytes(), f"chunk order {order} moved a bit"

@@ -24,15 +24,21 @@
 //! * the resident pool drains to zero after shutdown (admit → upload →
 //!   gather → evict lifecycle leaks nothing);
 //! * gather host-bytes-per-chunk sit ≥ 100× below the legacy copies at
-//!   the corpus feature width (3072).
+//!   the corpus feature width (3072);
+//! * elastic-resilience rows: `respawn_latency_us` times a killed
+//!   shard's resident-tensor re-registration replay (chaos harness,
+//!   `exec::fault`), and `shed_rate` drives a tight/soft burst through
+//!   a shed-configured coordinator over a saturated gauge — every
+//!   tight request sheds, every soft one serves (rate exactly 0.5).
 
 use std::sync::Arc;
 
 use nuig::bench::{fmt3, Table};
 use nuig::config::CoordinatorConfig;
-use nuig::coordinator::{Coordinator, ExplainRequest, LatencyBudget};
+use nuig::coordinator::{Coordinator, ExplainRequest, LatencyBudget, ShedRejection};
 use nuig::data::synth;
 use nuig::exec::gather::{GatherExec, GatherLane};
+use nuig::exec::{FaultAction, FaultEvent, FaultInjector, FaultPlan};
 use nuig::ig::{AnalyticExec, AnalyticModel, IgOptions, Scheme};
 use nuig::jsonio::Json;
 
@@ -84,6 +90,8 @@ fn main() -> anyhow::Result<()> {
             "legacy_host_bytes_per_chunk",
             "throughput_rps",
             "bit_identical",
+            "respawn_latency_us",
+            "shed_rate",
         ],
     );
 
@@ -150,6 +158,84 @@ fn main() -> anyhow::Result<()> {
             "resident pool must drain to zero after shutdown"
         );
 
+        // ---- Respawn latency: plan a kill on shard 0 under the chaos
+        // harness, fire it, then time the re-registration replay a
+        // respawn performs (ISSUE: the elastic-resilience cost row).
+        let zeros = vec![0f32; features];
+        let respawn_replay = 8usize;
+        let respawn_latency_us = {
+            let plan = FaultPlan::new(vec![FaultEvent {
+                shard: 0,
+                at: 0,
+                action: FaultAction::Kill,
+            }]);
+            let injector = FaultInjector::new(
+                Arc::new(AnalyticExec::with_shards(AnalyticModel::standard(), feeders)),
+                &plan,
+            )?;
+            for slot in 0..respawn_replay as u64 {
+                let img = synth::gen_image(slot as usize % synth::NUM_CLASSES, slot as usize);
+                injector.register_request(slot, &img, &zeros)?;
+            }
+            let lane = [GatherLane { slot: 0, alpha: 0.5, weight: 1.0, target: 0 }];
+            assert!(
+                injector.eval_gather(0, &lane).is_err(),
+                "the planned kill fires on the shard's first gather call"
+            );
+            let t0 = std::time::Instant::now();
+            injector.respawn_shard(0)?;
+            let us = t0.elapsed().as_secs_f64() * 1e6;
+            assert_eq!(
+                injector.resident_on(0).len(),
+                respawn_replay,
+                "respawn replays every resident slot"
+            );
+            injector.eval_gather(0, &lane)?;
+            us
+        };
+
+        // ---- Shed rate: saturate the overload gauge out-of-band, then
+        // drive a half-tight burst — every tight request sheds with a
+        // typed rejection, every soft one rides through (rate = 0.5,
+        // deterministic at every feeder count).
+        let shed_rate = {
+            let backend = Arc::new(AnalyticExec::with_shards(AnalyticModel::standard(), feeders));
+            backend.register_request(u64::MAX, &synth::gen_image(0, 0), &zeros)?;
+            let mut cfg = CoordinatorConfig {
+                feeders,
+                devices: feeders,
+                workers: 2,
+                ..Default::default()
+            };
+            cfg.shed.resident_high_water = 1;
+            let coord = Coordinator::start_with_backend(backend.clone(), cfg)?;
+            let burst = if smoke { 4u64 } else { 8 };
+            let mut shed = 0u64;
+            for i in 0..burst as usize {
+                let img = synth::gen_image(i % synth::NUM_CLASSES, i);
+                let scheme = Scheme::NonUniform { n_int: 4 };
+                let req =
+                    ExplainRequest::new(img, IgOptions { scheme, m: 16, ..Default::default() });
+                let req = if i % 2 == 0 { req.with_budget(LatencyBudget::Tight) } else { req };
+                match coord.explain(req) {
+                    Ok(resp) => assert!(resp.attribution.delta.is_finite()),
+                    Err(e) => {
+                        assert!(
+                            e.downcast_ref::<ShedRejection>().is_some(),
+                            "only typed sheds may fail under the saturated gauge: {e}"
+                        );
+                        shed += 1;
+                    }
+                }
+            }
+            assert_eq!(coord.stats().shed_rejections.get(), shed);
+            assert_eq!(shed, burst / 2, "exactly the tight half of the burst sheds");
+            coord.shutdown();
+            backend.evict_request(u64::MAX);
+            assert_eq!(backend.resident_len(), 0);
+            shed as f64 / burst as f64
+        };
+
         table.row(vec![
             feeders.to_string(),
             feeders.to_string(),
@@ -160,6 +246,8 @@ fn main() -> anyhow::Result<()> {
             fmt3(n_requests as f64 / wall.as_secs_f64()),
             // Asserted above: reaching this row means the bits matched.
             "1".to_string(),
+            fmt3(respawn_latency_us),
+            fmt3(shed_rate),
         ]);
     }
     table.print();

@@ -6,6 +6,7 @@
 //! eagerly (`validate()`) so misconfiguration fails before artifacts load.
 
 use std::path::PathBuf;
+use std::time::Duration;
 
 use anyhow::{bail, Result};
 
@@ -137,6 +138,85 @@ impl AdmissionConfig {
     }
 }
 
+/// Admission-side load shedding: high-water marks over the two overload
+/// gauges (resident-pool occupancy, lane-queue depth) plus the
+/// `retry_after` hint base. When either gauge crosses its mark,
+/// tight-tier requests are rejected **before** stage 1 (zero probe
+/// passes) with a [`crate::coordinator::request::ShedRejection`] carrying
+/// a deterministic retry-after hint; standard/thorough tiers keep
+/// queueing — they have slack to wait, tight-tier requests would blow
+/// their deadline in the queue anyway. Both marks default to 0
+/// (shedding disabled), so existing deployments are unchanged until
+/// they opt in. The decision and hint math is mirrored bit-for-bit in
+/// `igref.shed_decision` / `igref.shed_retry_after_ms` (integer-only,
+/// no clocks) and parity-tested in `python/tests/test_resilience_parity.py`.
+#[derive(Debug, Clone, Copy)]
+pub struct ShedConfig {
+    /// Resident-pool occupancy at/above which tight-tier requests shed;
+    /// 0 disables this gauge. Must sit at or below `resident_cap` —
+    /// above it the hard cap rejects first and the hint is never sent.
+    pub resident_high_water: usize,
+    /// Lane-queue depth (queued interpolation points) at/above which
+    /// tight-tier requests shed; 0 disables this gauge.
+    pub lane_high_water: usize,
+    /// Base retry-after hint in milliseconds; the emitted hint is
+    /// `base × overload factor` (capped at 16×), where the factor is
+    /// the worst ceil-ratio of gauge to mark across enabled gauges.
+    pub retry_after_ms: u64,
+}
+
+impl Default for ShedConfig {
+    fn default() -> Self {
+        // Marks of 0 = shedding off; the base hint only matters once a
+        // deployment opts in by raising a mark.
+        ShedConfig { resident_high_water: 0, lane_high_water: 0, retry_after_ms: 25 }
+    }
+}
+
+impl ShedConfig {
+    /// Hint growth cap: the retry-after hint saturates at
+    /// `retry_after_ms × 16` however deep the overload runs.
+    pub const MAX_FACTOR: u64 = 16;
+
+    /// Whether any shedding gauge is enabled.
+    pub fn enabled(&self) -> bool {
+        self.resident_high_water > 0 || self.lane_high_water > 0
+    }
+
+    /// Shed decision: `true` when any enabled gauge sits at or above its
+    /// high-water mark. Pure and clock-free (mirrored in
+    /// `igref.shed_decision`).
+    pub fn should_shed(&self, resident_len: usize, lane_depth: usize) -> bool {
+        (self.resident_high_water > 0 && resident_len >= self.resident_high_water)
+            || (self.lane_high_water > 0 && lane_depth >= self.lane_high_water)
+    }
+
+    /// Deterministic overload factor: the worst `ceil(gauge / mark)`
+    /// across enabled gauges, clamped to `1..=`[`ShedConfig::MAX_FACTOR`].
+    /// Integer-only so the python mirror is exact.
+    pub fn overload_factor(&self, resident_len: usize, lane_depth: usize) -> u64 {
+        let ratio = |gauge: usize, mark: usize| -> u64 {
+            if mark == 0 {
+                0
+            } else {
+                (gauge as u64).div_ceil(mark as u64)
+            }
+        };
+        ratio(resident_len, self.resident_high_water)
+            .max(ratio(lane_depth, self.lane_high_water))
+            .clamp(1, Self::MAX_FACTOR)
+    }
+
+    /// The retry-after hint for a shed decision at the given gauge
+    /// readings: `retry_after_ms × overload_factor` (mirrored in
+    /// `igref.shed_retry_after_ms`).
+    pub fn retry_after(&self, resident_len: usize, lane_depth: usize) -> Duration {
+        Duration::from_millis(
+            self.retry_after_ms.saturating_mul(self.overload_factor(resident_len, lane_depth)),
+        )
+    }
+}
+
 /// Coordinator / serving configuration.
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
@@ -169,6 +249,9 @@ pub struct CoordinatorConfig {
     pub policy: Policy,
     /// Deadline-aware admission: tier policies + probe-schedule cache.
     pub admission: AdmissionConfig,
+    /// Admission load shedding (high-water marks + retry-after hint);
+    /// disabled by default.
+    pub shed: ShedConfig,
 }
 
 impl Default for CoordinatorConfig {
@@ -186,6 +269,7 @@ impl Default for CoordinatorConfig {
             batch_wait_us: 200,
             policy: Policy::Fifo,
             admission: AdmissionConfig::default(),
+            shed: ShedConfig::default(),
         }
     }
 }
@@ -261,6 +345,18 @@ impl NuigConfig {
         if adm.cache_enabled() && adm.cache_shards == 0 {
             bail!("admission.cache_shards must be >= 1 when the cache is enabled");
         }
+        let shed = &self.coordinator.shed;
+        if shed.enabled() && shed.retry_after_ms == 0 {
+            bail!("coordinator.shed.retry_after_ms must be >= 1 when a high-water mark is set");
+        }
+        if shed.resident_high_water > self.coordinator.resident_cap {
+            bail!(
+                "coordinator.shed.resident_high_water ({}) > resident_cap ({}): the hard cap \
+                 rejects first and the retry-after hint is never sent",
+                shed.resident_high_water,
+                self.coordinator.resident_cap
+            );
+        }
         Ok(())
     }
 
@@ -295,6 +391,7 @@ impl NuigConfig {
                     ("batch_wait_us", (self.coordinator.batch_wait_us as usize).into()),
                     ("policy", Json::Str(self.coordinator.policy.to_string())),
                     ("admission", admission_json(&self.coordinator.admission)),
+                    ("shed", shed_json(&self.coordinator.shed)),
                 ]),
             ),
         ])
@@ -306,6 +403,14 @@ fn tier_json(t: &TierPolicy) -> Json {
         ("m0", t.m0.into()),
         ("max_rounds", t.max_rounds.into()),
         ("delta_target", Json::Num(t.delta_target)),
+    ])
+}
+
+fn shed_json(s: &ShedConfig) -> Json {
+    Json::obj(vec![
+        ("resident_high_water", s.resident_high_water.into()),
+        ("lane_high_water", s.lane_high_water.into()),
+        ("retry_after_ms", (s.retry_after_ms as usize).into()),
     ])
 }
 
@@ -361,6 +466,56 @@ mod tests {
         c.coordinator.admission.cache_shards = 0;
         assert!(c.validate().is_err());
         c.coordinator.admission.cache_shards = 4;
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn shed_disabled_by_default_and_decision_math() {
+        let shed = ShedConfig::default();
+        assert!(!shed.enabled());
+        assert!(!shed.should_shed(usize::MAX, usize::MAX), "disabled gauges never shed");
+
+        let shed = ShedConfig { resident_high_water: 8, lane_high_water: 0, retry_after_ms: 25 };
+        assert!(!shed.should_shed(7, usize::MAX), "disabled lane gauge is ignored");
+        assert!(shed.should_shed(8, 0), "at the mark = shed");
+        assert!(shed.should_shed(9, 0));
+        // Factor is the ceil-ratio of gauge to mark, clamped to 1..=16.
+        assert_eq!(shed.overload_factor(8, 0), 1);
+        assert_eq!(shed.overload_factor(9, 0), 2);
+        assert_eq!(shed.overload_factor(17, 0), 3);
+        assert_eq!(shed.overload_factor(usize::MAX, 0), ShedConfig::MAX_FACTOR);
+        assert_eq!(shed.retry_after(9, 0), Duration::from_millis(50));
+
+        // Two enabled gauges: worst factor wins; either crossing sheds.
+        let shed = ShedConfig { resident_high_water: 8, lane_high_water: 64, retry_after_ms: 10 };
+        assert!(shed.should_shed(0, 64));
+        assert!(!shed.should_shed(7, 63));
+        assert_eq!(shed.overload_factor(8, 256), 4, "lane gauge dominates");
+        assert_eq!(shed.retry_after(8, 256), Duration::from_millis(40));
+        // The pinned golden shared with python/tests/test_resilience_parity.py.
+        assert_eq!(shed.retry_after(20, 100).as_millis(), 30);
+    }
+
+    #[test]
+    fn rejects_bad_shed_config() {
+        let mut c = NuigConfig::default();
+        c.coordinator.shed.resident_high_water = 16;
+        c.coordinator.shed.retry_after_ms = 0;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("retry_after_ms"), "{err}");
+        // retry_after_ms = 0 is fine while shedding is disabled.
+        let mut c = NuigConfig::default();
+        c.coordinator.shed.retry_after_ms = 0;
+        c.validate().unwrap();
+        // The resident mark must sit below the hard cap.
+        let mut c = NuigConfig::default();
+        c.coordinator.shed.resident_high_water = c.coordinator.resident_cap + 1;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("resident_high_water"), "{err}");
+        // A valid opted-in shape.
+        let mut c = NuigConfig::default();
+        c.coordinator.shed =
+            ShedConfig { resident_high_water: 64, lane_high_water: 4096, retry_after_ms: 25 };
         c.validate().unwrap();
     }
 
@@ -446,5 +601,8 @@ mod tests {
         let adm = j.get("coordinator").unwrap().get("admission").unwrap();
         assert_eq!(adm.get("tight").unwrap().get("max_rounds").unwrap().as_usize().unwrap(), 1);
         assert_eq!(adm.get("cache_capacity").unwrap().as_usize().unwrap(), 0);
+        let shed = j.get("coordinator").unwrap().get("shed").unwrap();
+        assert_eq!(shed.get("resident_high_water").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(shed.get("retry_after_ms").unwrap().as_usize().unwrap(), 25);
     }
 }

@@ -64,6 +64,6 @@ pub mod scheduler;
 pub mod server;
 pub mod state;
 
-pub use request::{ExplainRequest, ExplainResponse, LatencyBudget, ResponseHandle};
+pub use request::{ExplainRequest, ExplainResponse, LatencyBudget, ResponseHandle, ShedRejection};
 pub use scheduler::Policy;
-pub use server::{Coordinator, CoordinatorStats, FeederStats, TierStats};
+pub use server::{dispatch_failover, Coordinator, CoordinatorStats, FeederStats, TierStats};

@@ -146,6 +146,43 @@ impl ExplainRequest {
     }
 }
 
+/// Typed admission rejection under overload: the coordinator shed this
+/// tight-tier request **before** stage 1 (zero probe passes paid)
+/// because an overload gauge crossed its configured high-water mark
+/// (see [`crate::config::ShedConfig`]).
+///
+/// Downcast it from the [`ResponseHandle::wait`] error to read the
+/// hint:
+///
+/// ```ignore
+/// if let Some(shed) = err.downcast_ref::<ShedRejection>() {
+///     sleep(shed.retry_after);
+/// }
+/// ```
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShedRejection {
+    /// Deterministic back-off hint: `retry_after_ms × overload factor`
+    /// ([`crate::config::ShedConfig::retry_after`]).
+    pub retry_after: Duration,
+    /// Resident-pool occupancy observed at the shed decision.
+    pub resident_len: usize,
+    /// Lane-queue depth (queued interpolation points) observed at the
+    /// shed decision.
+    pub lane_depth: usize,
+}
+
+impl std::fmt::Display for ShedRejection {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "request shed under overload (resident {}, lane depth {}); retry after {:?}",
+            self.resident_len, self.lane_depth, self.retry_after
+        )
+    }
+}
+
+impl std::error::Error for ShedRejection {}
+
 /// The served result.
 #[derive(Debug, Clone)]
 pub struct ExplainResponse {
@@ -254,6 +291,23 @@ mod tests {
         let r = r.with_budget(LatencyBudget::Tight).with_target(3);
         assert_eq!(r.budget, LatencyBudget::Tight);
         assert_eq!(r.target, Some(3));
+    }
+
+    #[test]
+    fn shed_rejection_displays_and_downcasts() {
+        let shed = ShedRejection {
+            retry_after: Duration::from_millis(50),
+            resident_len: 9,
+            lane_depth: 0,
+        };
+        let msg = shed.to_string();
+        assert!(msg.contains("retry after"), "{msg}");
+        assert!(msg.contains("resident 9"), "{msg}");
+        // The coordinator surfaces it through anyhow; clients downcast.
+        let err = anyhow::Error::new(shed.clone());
+        let back = err.downcast_ref::<ShedRejection>().unwrap();
+        assert_eq!(*back, shed);
+        assert_eq!(back.retry_after, Duration::from_millis(50));
     }
 
     #[test]

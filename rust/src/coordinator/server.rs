@@ -13,22 +13,22 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, ensure, Context, Result};
 
-use crate::config::{AdmissionConfig, CoordinatorConfig};
+use crate::config::{AdmissionConfig, CoordinatorConfig, ShedConfig};
 use crate::exec::channel::{bounded, Receiver, Sender};
 use crate::exec::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use crate::exec::sync::{self, Mutex};
-use crate::exec::gather::{GatherExec, GatherLane};
+use crate::exec::gather::{GatherExec, GatherLane, GatherOut, ShardHealth};
 use crate::exec::CancelToken;
 use crate::ig::engine::argmax;
 use crate::ig::probe::Probe;
 use crate::ig::schedule::cache::{baseline_id, CacheKey, ProbeMemo, ScheduleCache};
 use crate::ig::schedule::Schedule;
 use crate::ig::Scheme;
-use crate::metrics::{CacheCounters, Counter, Ewma, Histogram, StageBreakdown};
+use crate::metrics::{CacheCounters, Counter, Ewma, Histogram, StageBreakdown, Watermark};
 use crate::runtime::Runtime;
 
 use super::batcher::BatchStats;
-use super::request::{ExplainRequest, ExplainResponse, LatencyBudget, ResponseHandle};
+use super::request::{ExplainRequest, ExplainResponse, LatencyBudget, ResponseHandle, ShedRejection};
 use super::scheduler::{LaneScheduler, Popped};
 use super::state::{Accum, AnytimeRounds, ChunkPlan, RequestState, ResidentGuard, RoundOutcome};
 
@@ -43,6 +43,10 @@ pub struct TierStats {
     /// Warm admissions: requests served without a single stage-1 pass
     /// (probe memo + schedule cache hit; `Tight` tier only).
     pub warm_admissions: Counter,
+    /// Requests shed at admission under overload (before stage 1, with a
+    /// [`ShedRejection`] retry hint; `Tight` tier only — see
+    /// [`crate::config::ShedConfig`]).
+    pub shed: Counter,
 }
 
 impl TierStats {
@@ -52,6 +56,7 @@ impl TierStats {
             completed: Counter::new(),
             e2e_latency: Histogram::new_latency(),
             warm_admissions: Counter::new(),
+            shed: Counter::new(),
         }
     }
 }
@@ -100,6 +105,23 @@ pub struct CoordinatorStats {
     /// Requests rejected at admission because the resident pool was at
     /// its configured cap.
     pub resident_rejections: Counter,
+    /// Tight-tier requests shed at admission under overload, before any
+    /// stage-1 pass (sum of the per-tier [`TierStats::shed`] counters;
+    /// the reply error downcasts to [`ShedRejection`]).
+    pub shed_rejections: Counter,
+    /// Gather chunks a feeder executed on a shard other than its pinned
+    /// home (drain migration or dead-shard failover; see
+    /// [`dispatch_failover`]).
+    pub rerouted_chunks: Counter,
+    /// Dead shards respawned in-line by a feeder (resident tensors
+    /// replayed from the host pool; see `GatherExec::respawn_shard`).
+    pub shard_respawns: Counter,
+    /// Peak resident-pool occupancy observed at admission — tune
+    /// `shed.resident_high_water` from this (docs/TUNING.md §shedding).
+    pub resident_peak: Watermark,
+    /// Peak lane-queue depth (queued interpolation points) observed at
+    /// admission — tune `shed.lane_high_water` from this.
+    pub lane_peak: Watermark,
     /// Probe-schedule cache counters (shared with the cache when it is
     /// enabled; all zero otherwise).
     pub cache: Arc<CacheCounters>,
@@ -122,6 +144,11 @@ impl CoordinatorStats {
             tiers: std::array::from_fn(|_| TierStats::new()),
             feeders: (0..feeders).map(|_| FeederStats::new()).collect(),
             resident_rejections: Counter::new(),
+            shed_rejections: Counter::new(),
+            rerouted_chunks: Counter::new(),
+            shard_respawns: Counter::new(),
+            resident_peak: Watermark::new(),
+            lane_peak: Watermark::new(),
             cache: Arc::new(CacheCounters::default()),
             batch: Mutex::new(BatchStats::default()),
         }
@@ -183,6 +210,9 @@ struct RouterCtx {
     chunk: usize,
     /// Resident-pool admission bound (see `CoordinatorConfig::resident_cap`).
     resident_cap: usize,
+    /// Overload load-shedding marks (see `CoordinatorConfig::shed`);
+    /// disabled by default.
+    shed: ShedConfig,
 }
 
 impl Coordinator {
@@ -258,6 +288,7 @@ impl Coordinator {
                 cache: cache.clone(),
                 chunk: cfg.chunk,
                 resident_cap: cfg.resident_cap,
+                shed: cfg.shed,
             });
             let cancel = cancel.clone();
             threads.push(
@@ -378,6 +409,35 @@ impl Coordinator {
         &self.cfg
     }
 
+    /// Lifecycle state of backend shard `shard`.
+    pub fn shard_health(&self, shard: usize) -> Result<ShardHealth> {
+        ensure!(shard < self.backend.shards(), "shard {shard} out of range");
+        Ok(self.backend.shard_health(shard))
+    }
+
+    /// Begin draining shard `shard`: it stops receiving new gather
+    /// chunks; its pinned feeder migrates queued chunks to live sibling
+    /// shards via [`dispatch_failover`] (bit-identical — lane rows are a
+    /// pure function of the lane, and commit order is fixed by lane
+    /// index, not by which shard executed them). Idempotent; a `Dead`
+    /// shard stays dead.
+    pub fn drain_shard(&self, shard: usize) -> Result<()> {
+        ensure!(shard < self.backend.shards(), "shard {shard} out of range");
+        self.backend.drain_shard(shard);
+        Ok(())
+    }
+
+    /// Respawn shard `shard`: rebuild its device state and replay every
+    /// live resident registration from the host-side pool, then return
+    /// it to `Live`. On an already-live (or draining) shard this just
+    /// clears the drain fence. Feeders also respawn dead home shards
+    /// in-line when no sibling can serve a chunk; this entry point is
+    /// the operator-driven path.
+    pub fn respawn_shard(&self, shard: usize) -> Result<()> {
+        ensure!(shard < self.backend.shards(), "shard {shard} out of range");
+        self.backend.respawn_shard(shard)
+    }
+
     /// Graceful shutdown: stop intake, drain queues, join threads.
     pub fn shutdown(mut self) {
         self.shutdown_inner();
@@ -466,8 +526,17 @@ fn router_loop(rx: Receiver<Submission>, ctx: Arc<RouterCtx>, cancel: CancelToke
 }
 
 fn route_one(sub: Submission, queue_wait: Duration, ctx: &RouterCtx) -> Result<()> {
-    let RouterCtx { lanes, backend, stats, in_flight, admission, cache, chunk, resident_cap } =
-        ctx;
+    let RouterCtx {
+        lanes,
+        backend,
+        stats,
+        in_flight,
+        admission,
+        cache,
+        chunk,
+        resident_cap,
+        shed,
+    } = ctx;
     let features = backend.features();
     let classes = backend.num_classes();
     let Submission { req, reply, id, submitted_at } = sub;
@@ -482,7 +551,32 @@ fn route_one(sub: Submission, queue_wait: Duration, ctx: &RouterCtx) -> Result<(
         anyhow!("failed")
     };
 
-    // ---- Resident-pool gate, FIRST: a request destined for rejection
+    // ---- Overload gauges: sampled once per admission, shared by the
+    // shed decision and the peak telemetry the marks are tuned from. ----
+    let gauge_resident = backend.resident_len();
+    let gauge_lanes = lanes.len();
+    stats.resident_peak.observe(gauge_resident as u64);
+    stats.lane_peak.observe(gauge_lanes as u64);
+
+    // ---- Load shedding, FIRST of all gates: under overload a tight-
+    // deadline request is better served by an immediate, *typed* reject
+    // with a deterministic back-off hint than by a response that will
+    // blow its deadline anyway. Sheds happen before stage 1, so a shed
+    // request pays zero probe passes. Only the Tight tier sheds — the
+    // soft tiers queue through the overload (their deadline contract
+    // already tolerates it). Decision math lives in
+    // `ShedConfig::should_shed`, mirrored by `igref.shed_decision`. -----
+    if req.budget == LatencyBudget::Tight && shed.should_shed(gauge_resident, gauge_lanes) {
+        stats.shed_rejections.inc();
+        stats.tiers[req.budget.index()].shed.inc();
+        return Err(fail(anyhow::Error::new(ShedRejection {
+            retry_after: shed.retry_after(gauge_resident, gauge_lanes),
+            resident_len: gauge_resident,
+            lane_depth: gauge_lanes,
+        })));
+    }
+
+    // ---- Resident-pool gate, before stage 1: a request destined for rejection
     // must not pay stage-1 device passes on a saturated system. The cap
     // is a soft bound either way (concurrent routers may overshoot by
     // `workers − 1`), so checking before the probe loses no accuracy —
@@ -760,6 +854,72 @@ fn finish_request(stats: &Arc<CoordinatorStats>, state: &Arc<RequestState>) {
     }
 }
 
+/// Dispatch one gather chunk with drain-aware routing and dead-shard
+/// failover. Returns `(executed_shard, did_respawn, out)`.
+///
+/// Candidate order: the feeder's pinned `home` shard first — attempted
+/// even when it reads `Dead`, because against a really-dead shard the
+/// attempt fast-fails for the cost of one channel send, while a backend
+/// that heals between the health read and the dispatch (or a chaos
+/// harness whose revive events are indexed by the shard's own call
+/// clock) gets to serve it — then every *`Live`* sibling in ascending
+/// index, one try each. `Draining` shards are NEVER dispatched to, home
+/// or sibling: that is the drain fence (docs/INVARIANTS.md §I7). If
+/// every candidate fails and `home` is `Dead`, the feeder respawns it
+/// in-line (device state rebuilt, resident tensors replayed from the
+/// host pool) and retries once on the fresh shard.
+///
+/// Rerouting and retrying are safe *because* of the determinism
+/// contract (docs/INVARIANTS.md §I1, §I7): a lane's partial row is a
+/// pure function of the lane record and the resident endpoints — no
+/// shard-local state leaks into it — and rows commit in lane-index
+/// order regardless of which shard produced them, so a migrated or
+/// retried chunk yields bit-identical attributions. A failed
+/// `eval_gather` call has no side effects, so the retry is exactly-once
+/// at the settlement layer even when it is at-least-once at dispatch.
+pub fn dispatch_failover(
+    backend: &dyn GatherExec,
+    home: usize,
+    lanes: &[GatherLane],
+) -> Result<(usize, bool, GatherOut)> {
+    let shards = backend.shards();
+    let mut last_err: Option<anyhow::Error> = None;
+    if backend.shard_health(home) != ShardHealth::Draining {
+        match backend.eval_gather(home, lanes) {
+            Ok(out) => return Ok((home, false, out)),
+            Err(e) => last_err = Some(e),
+        }
+    }
+    for s in (0..shards).filter(|&s| s != home) {
+        if backend.shard_health(s) != ShardHealth::Live {
+            continue;
+        }
+        match backend.eval_gather(s, lanes) {
+            Ok(out) => return Ok((s, false, out)),
+            Err(e) => last_err = Some(e),
+        }
+    }
+    // Every candidate failed: if the home shard is dead, rebuild it and
+    // retry once. (A *draining* home is left alone — the drain fence
+    // outranks failover.)
+    if backend.shard_health(home) == ShardHealth::Dead {
+        match backend.respawn_shard(home) {
+            Ok(()) if backend.shard_health(home) == ShardHealth::Live => {
+                match backend.eval_gather(home, lanes) {
+                    Ok(out) => return Ok((home, true, out)),
+                    Err(e) => last_err = Some(e),
+                }
+            }
+            Ok(()) => {}
+            Err(e) => {
+                last_err = Some(e.context(format!("respawning dead shard {home}")));
+            }
+        }
+    }
+    Err(last_err
+        .unwrap_or_else(|| anyhow!("no live shard available to execute the gather chunk")))
+}
+
 /// One feeder worker: pop cross-request chunks off the shared lane
 /// scheduler, dispatch them as **gather-indexed plans** on this feeder's
 /// device shard, and scatter the per-lane rows into each request's
@@ -772,6 +932,11 @@ fn finish_request(stats: &Arc<CoordinatorStats>, state: &Arc<RequestState>) {
 /// completion, but rows commit in lane-index order
 /// (`RequestState::add_lane`), so attributions are bit-identical at any
 /// feeder count.
+///
+/// Dispatch goes through [`dispatch_failover`]: a draining or dead home
+/// shard's chunks migrate to live siblings, and a dead home shard with
+/// no live sibling is respawned in-line — the same 0-ULP guarantee
+/// holds because execution shard never affects a lane's row.
 fn feeder_loop(
     scheduler: &LaneScheduler,
     backend: Arc<dyn GatherExec>,
@@ -807,8 +972,14 @@ fn feeder_loop(
             })
             .collect();
 
-        match backend.eval_gather(shard, &recs) {
-            Ok(out) => {
+        match dispatch_failover(backend.as_ref(), shard, &recs) {
+            Ok((executed, respawned, out)) => {
+                if executed != shard {
+                    stats.rerouted_chunks.inc();
+                }
+                if respawned {
+                    stats.shard_respawns.inc();
+                }
                 for (k, lane) in lanes.iter().enumerate() {
                     if !lane.state.add_lane(lane.idx, out.row(k)) {
                         continue;
@@ -836,7 +1007,9 @@ fn feeder_loop(
                 }
             }
             Err(e) => {
-                // Device failure: fail every distinct request in the chunk.
+                // Failover exhausted (every live shard failed and the dead
+                // home could not be respawned): fail every distinct request
+                // in the chunk.
                 // RequestState::fail is idempotent and reports whether THIS
                 // call settled the request, so one spanning several failed
                 // chunks — possibly on different feeders — settles, and is
@@ -929,6 +1102,173 @@ mod tests {
         assert_eq!(s.feeder(2).lanes.get(), 9);
         assert_eq!(s.feeder(0).chunks.get(), 0);
         assert_eq!(s.resident_rejections.get(), 0);
+        // Resilience counters start at zero and the overload peaks are
+        // untouched until an admission samples the gauges.
+        assert_eq!(s.shed_rejections.get(), 0);
+        assert_eq!(s.rerouted_chunks.get(), 0);
+        assert_eq!(s.shard_respawns.get(), 0);
+        assert_eq!(s.resident_peak.get(), 0);
+        assert_eq!(s.lane_peak.get(), 0);
+        assert_eq!(s.tier(LatencyBudget::Tight).shed.get(), 0);
+    }
+
+    /// Scripted multi-shard exec for [`dispatch_failover`]: per-shard
+    /// health, per-shard forced failures, and an optional respawn that
+    /// heals the shard. Rows encode the executing shard so tests can
+    /// see where a chunk actually ran.
+    struct ScriptedExec {
+        health: Mutex<Vec<ShardHealth>>,
+        fail_eval: Mutex<Vec<bool>>,
+        respawn_heals: bool,
+        evals: Counter,
+        respawns: Counter,
+    }
+
+    impl ScriptedExec {
+        fn new(shards: usize) -> Self {
+            ScriptedExec {
+                health: Mutex::new(vec![ShardHealth::Live; shards]),
+                fail_eval: Mutex::new(vec![false; shards]),
+                respawn_heals: true,
+                evals: Counter::new(),
+                respawns: Counter::new(),
+            }
+        }
+
+        fn set_health(&self, shard: usize, h: ShardHealth) {
+            sync::lock(&self.health)[shard] = h;
+        }
+    }
+
+    impl GatherExec for ScriptedExec {
+        fn features(&self) -> usize {
+            1
+        }
+        fn num_classes(&self) -> usize {
+            1
+        }
+        fn forward(&self, _imgs: &[f32], rows: usize) -> Result<Vec<f32>> {
+            Ok(vec![0.0; rows])
+        }
+        fn register_request(&self, _slot: u64, _x: &[f32], _b: &[f32]) -> Result<()> {
+            Ok(())
+        }
+        fn evict_request(&self, _slot: u64) {}
+        fn resident_len(&self) -> usize {
+            0
+        }
+        fn shards(&self) -> usize {
+            sync::lock(&self.health).len()
+        }
+        fn eval_gather(&self, shard: usize, lanes: &[GatherLane]) -> Result<GatherOut> {
+            self.evals.inc();
+            if sync::lock(&self.health)[shard] != ShardHealth::Live {
+                anyhow::bail!("shard {shard} is not live");
+            }
+            if sync::lock(&self.fail_eval)[shard] {
+                anyhow::bail!("scripted eval failure on shard {shard}");
+            }
+            Ok(GatherOut { rows: vec![shard as f32; lanes.len()], features: 1 })
+        }
+        fn shard_health(&self, shard: usize) -> ShardHealth {
+            sync::lock(&self.health)[shard]
+        }
+        fn drain_shard(&self, shard: usize) {
+            let mut h = sync::lock(&self.health);
+            if h[shard] == ShardHealth::Live {
+                h[shard] = ShardHealth::Draining;
+            }
+        }
+        fn respawn_shard(&self, shard: usize) -> Result<()> {
+            if !self.respawn_heals {
+                anyhow::bail!("scripted respawn failure on shard {shard}");
+            }
+            sync::lock(&self.health)[shard] = ShardHealth::Live;
+            sync::lock(&self.fail_eval)[shard] = false;
+            self.respawns.inc();
+            Ok(())
+        }
+    }
+
+    fn lanes1() -> Vec<GatherLane> {
+        vec![GatherLane { slot: 1, alpha: 0.5, weight: 1.0, target: 0 }]
+    }
+
+    #[test]
+    fn failover_prefers_live_home() {
+        let exec = ScriptedExec::new(2);
+        let (shard, respawned, out) = dispatch_failover(&exec, 1, &lanes1()).unwrap();
+        assert_eq!(shard, 1, "a live home shard serves its own chunk");
+        assert!(!respawned);
+        assert_eq!(out.rows, vec![1.0]);
+        assert_eq!(exec.evals.get(), 1, "no other shard was touched");
+    }
+
+    #[test]
+    fn failover_migrates_off_draining_home_without_respawn() {
+        // The drain fence: a draining shard gets no new chunks and is
+        // NOT respawned (it is not dead); its chunk runs on the lowest
+        // live sibling.
+        let exec = ScriptedExec::new(3);
+        exec.drain_shard(1);
+        let (shard, respawned, out) = dispatch_failover(&exec, 1, &lanes1()).unwrap();
+        assert_eq!(shard, 0);
+        assert!(!respawned);
+        assert_eq!(out.rows, vec![0.0]);
+        assert_eq!(exec.respawns.get(), 0, "draining home must not be respawned");
+        assert_eq!(exec.shard_health(1), ShardHealth::Draining);
+    }
+
+    #[test]
+    fn failover_reroutes_off_dead_home_when_siblings_live() {
+        let exec = ScriptedExec::new(2);
+        exec.set_health(0, ShardHealth::Dead);
+        let (shard, respawned, _) = dispatch_failover(&exec, 0, &lanes1()).unwrap();
+        assert_eq!(shard, 1, "a live sibling outranks respawning the dead home");
+        assert!(!respawned);
+        assert_eq!(exec.respawns.get(), 0);
+        assert_eq!(
+            exec.evals.get(),
+            2,
+            "the dead home is probed optimistically (fast-fail) before the sibling"
+        );
+    }
+
+    #[test]
+    fn failover_respawns_dead_home_as_last_resort() {
+        let exec = ScriptedExec::new(2);
+        exec.set_health(0, ShardHealth::Dead);
+        exec.set_health(1, ShardHealth::Dead);
+        let (shard, respawned, out) = dispatch_failover(&exec, 0, &lanes1()).unwrap();
+        assert_eq!(shard, 0);
+        assert!(respawned, "the dead home was rebuilt in-line");
+        assert_eq!(out.rows, vec![0.0]);
+        assert_eq!(exec.respawns.get(), 1);
+        assert_eq!(exec.shard_health(0), ShardHealth::Live);
+        assert_eq!(exec.shard_health(1), ShardHealth::Dead, "only the home respawns");
+    }
+
+    #[test]
+    fn failover_tries_every_live_shard_before_giving_up() {
+        let exec = ScriptedExec::new(3);
+        for s in 0..3 {
+            sync::lock(&exec.fail_eval)[s] = true;
+        }
+        let err = dispatch_failover(&exec, 1, &lanes1()).unwrap_err();
+        assert_eq!(exec.evals.get(), 3, "each live shard gets exactly one try");
+        assert!(err.to_string().contains("scripted eval failure"), "{err}");
+    }
+
+    #[test]
+    fn failover_reports_held_down_respawn() {
+        let mut exec = ScriptedExec::new(1);
+        exec.respawn_heals = false;
+        exec.set_health(0, ShardHealth::Dead);
+        let err = dispatch_failover(&exec, 0, &lanes1()).unwrap_err();
+        let chain = format!("{err:#}");
+        assert!(chain.contains("respawning dead shard 0"), "{chain}");
+        assert!(chain.contains("scripted respawn failure"), "{chain}");
+        assert_eq!(exec.evals.get(), 1, "one optimistic fast-fail probe of the dead home");
     }
 
     #[test]

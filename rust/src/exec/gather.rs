@@ -63,6 +63,29 @@ pub struct GatherLane {
     pub target: usize,
 }
 
+/// Lifecycle state of one backend shard (see `docs/ARCHITECTURE.md`
+/// §"Shard lifecycle" for the full live → draining → dead → respawned
+/// diagram).
+///
+/// * `Live` — accepting gather chunks.
+/// * `Draining` — administratively fenced: the shard rejects new gather
+///   chunks so its queued work migrates to sibling shards. Because a
+///   lane's row is a pure function of the lane (never of the executing
+///   shard), migration preserves the 0-ULP identity
+///   (`docs/INVARIANTS.md` §I7).
+/// * `Dead` — the shard's device state (resident tensors included) is
+///   gone; chunks targeting it must be re-routed or the shard respawned
+///   ([`GatherExec::respawn_shard`], §I8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardHealth {
+    /// Accepting gather chunks.
+    Live,
+    /// Fenced for rebalancing: rejects new chunks, siblings take over.
+    Draining,
+    /// Device state lost; needs a respawn before serving again.
+    Dead,
+}
+
 /// Planar per-lane output of one gather chunk: `lanes × features` f32
 /// partial rows, row `k` belonging to the chunk's lane `k`.
 #[derive(Debug, Clone)]
@@ -134,6 +157,28 @@ pub trait GatherExec: Send + Sync {
     /// module doc's determinism contract). Lanes referencing an
     /// unregistered slot fail the whole chunk.
     fn eval_gather(&self, shard: usize, lanes: &[GatherLane]) -> Result<GatherOut>;
+
+    /// Lifecycle state of `shard`. Single-shard / always-healthy
+    /// backends keep the default (`Live` forever); elastic backends
+    /// (`runtime::ShardedRuntime`, the chaos `FaultInjector`) report
+    /// real health so the feeder failover can route around outages.
+    fn shard_health(&self, _shard: usize) -> ShardHealth {
+        ShardHealth::Live
+    }
+
+    /// Administratively fence `shard`: it stops accepting new gather
+    /// chunks (`eval_gather` fails) so queued work migrates to sibling
+    /// shards. No-op default for backends without a lifecycle.
+    fn drain_shard(&self, _shard: usize) {}
+
+    /// Bring a dead or draining `shard` back to `Live`, replaying every
+    /// live resident registration into it so no slot is stranded
+    /// (`docs/INVARIANTS.md` §I8). No-op default for backends without a
+    /// lifecycle; elastic backends return an error when the shard
+    /// cannot be revived yet.
+    fn respawn_shard(&self, _shard: usize) -> Result<()> {
+        Ok(())
+    }
 }
 
 /// A host-side resident-tensor pool: the reusable registration store for
@@ -186,6 +231,19 @@ impl ResidentPool {
     pub fn with_entry<R>(&self, slot: u64, f: impl FnOnce(&[f32], &[f32]) -> R) -> Option<R> {
         let map = sync::lock(&self.entries);
         map.get(&slot).map(|e| f(&e.0, &e.1))
+    }
+
+    /// Every live registration as `(slot, entry)` pairs sorted by slot —
+    /// the deterministic replay source for shard respawn
+    /// ([`GatherExec::respawn_shard`]): re-registering in slot order
+    /// makes the replay sequence a pure function of pool content, so
+    /// chaos runs with the same `FaultPlan` re-upload identically.
+    pub fn snapshot_sorted(&self) -> Vec<(u64, Arc<(Vec<f32>, Vec<f32>)>)> {
+        let map = sync::lock(&self.entries);
+        // nuig:allow(hash-iter): iteration order cannot leak — the snapshot is sorted by slot immediately below
+        let mut all: Vec<_> = map.iter().map(|(s, e)| (*s, Arc::clone(e))).collect();
+        all.sort_by_key(|(slot, _)| *slot);
+        all
     }
 
     /// Live registrations.
@@ -250,5 +308,52 @@ mod tests {
         let l = GatherLane { slot: 3, alpha: 0.5, weight: 0.25, target: 1 };
         let m = l;
         assert_eq!(l, m);
+    }
+
+    #[test]
+    fn pool_snapshot_is_sorted_by_slot() {
+        let pool = ResidentPool::new();
+        for slot in [9u64, 2, 40, 17] {
+            pool.register(slot, &[slot as f32], &[0.0]).unwrap();
+        }
+        let snap = pool.snapshot_sorted();
+        let slots: Vec<u64> = snap.iter().map(|(s, _)| *s).collect();
+        assert_eq!(slots, vec![2, 9, 17, 40]);
+        assert_eq!(snap[1].1 .0, vec![9.0], "entries travel with their slots");
+        // A snapshot is a point-in-time copy: later evictions don't
+        // invalidate held entries.
+        pool.evict(9);
+        assert_eq!(snap[1].1 .0, vec![9.0]);
+    }
+
+    #[test]
+    fn lifecycle_defaults_are_always_live() {
+        struct Fixed;
+        impl GatherExec for Fixed {
+            fn features(&self) -> usize {
+                1
+            }
+            fn num_classes(&self) -> usize {
+                1
+            }
+            fn forward(&self, _imgs: &[f32], rows: usize) -> Result<Vec<f32>> {
+                Ok(vec![1.0; rows])
+            }
+            fn register_request(&self, _slot: u64, _x: &[f32], _b: &[f32]) -> Result<()> {
+                Ok(())
+            }
+            fn evict_request(&self, _slot: u64) {}
+            fn resident_len(&self) -> usize {
+                0
+            }
+            fn eval_gather(&self, _shard: usize, lanes: &[GatherLane]) -> Result<GatherOut> {
+                Ok(GatherOut { rows: vec![0.0; lanes.len()], features: 1 })
+            }
+        }
+        let exec: &dyn GatherExec = &Fixed;
+        assert_eq!(exec.shard_health(0), ShardHealth::Live);
+        exec.drain_shard(0);
+        assert_eq!(exec.shard_health(0), ShardHealth::Live, "default drain is a no-op");
+        exec.respawn_shard(0).unwrap();
     }
 }

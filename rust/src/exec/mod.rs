@@ -18,9 +18,14 @@
 //!   gather-indexed cross-request chunks over resident request tensors
 //!   (the [`gather::GatherExec`] surface the coordinator's sharded
 //!   feeders drive).
+//! * [`fault`] — the deterministic chaos harness: seeded, step-indexed
+//!   [`fault::FaultPlan`]s injected at the [`gather::GatherExec`] seam
+//!   by [`fault::FaultInjector`], making kill/revive/stall runs
+//!   reproducible (`tests/chaos_resilience.rs`).
 
 pub mod batch;
 pub mod channel;
+pub mod fault;
 pub mod gather;
 pub mod interleave;
 mod pool;
@@ -28,7 +33,8 @@ pub mod sync;
 mod token;
 
 pub use batch::BatchExec;
-pub use gather::{GatherExec, GatherLane, GatherOut, ResidentPool};
+pub use fault::{FaultAction, FaultEvent, FaultInjector, FaultPlan};
+pub use gather::{GatherExec, GatherLane, GatherOut, ResidentPool, ShardHealth};
 pub use channel::{bounded, Receiver, RecvError, SendError, Sender};
 pub use pool::{JoinHandle, ThreadPool};
 pub use token::CancelToken;

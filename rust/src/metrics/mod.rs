@@ -44,6 +44,33 @@ impl Counter {
     }
 }
 
+/// Peak gauge: remembers the maximum value ever observed (lock-free
+/// compare-and-swap). Used for high-water telemetry on the overload
+/// gauges the admission shed decision reads (peak resident-pool
+/// occupancy, peak lane-queue depth) — "how close did we get to the
+/// mark" is the number `docs/TUNING.md` says to tune the marks from.
+#[derive(Default)]
+pub struct Watermark {
+    max: AtomicU64,
+}
+
+impl Watermark {
+    /// A watermark at zero.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold one gauge reading into the peak.
+    pub fn observe(&self, v: u64) {
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// The largest value observed so far (0 before any observation).
+    pub fn get(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+}
+
 /// Exponentially-weighted moving average (thread-safe, short critical
 /// section). Used for queue-depth and batch-occupancy gauges.
 pub struct Ewma {
@@ -211,6 +238,36 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(c.get(), 8000);
+    }
+
+    #[test]
+    fn watermark_tracks_peak() {
+        let w = Watermark::new();
+        assert_eq!(w.get(), 0);
+        w.observe(4);
+        w.observe(2);
+        assert_eq!(w.get(), 4, "lower readings never move the peak");
+        w.observe(9);
+        assert_eq!(w.get(), 9);
+    }
+
+    #[test]
+    fn watermark_threads() {
+        let w = std::sync::Arc::new(Watermark::new());
+        let hs: Vec<_> = (0..8)
+            .map(|t| {
+                let w = w.clone();
+                std::thread::spawn(move || {
+                    for i in 0..1000u64 {
+                        w.observe(t * 1000 + i);
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(w.get(), 7999);
     }
 
     #[test]

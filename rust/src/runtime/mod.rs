@@ -31,19 +31,27 @@ pub use manifest::{ExeMeta, Manifest};
 pub use pjrt_model::{PjrtModel, ProbeMode, PROBE_BATCH_CROSSOVER};
 pub use service::{Arg, ExeKind, RuntimeHandle, RuntimeStats};
 
-use std::path::Path;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
-use crate::exec::gather::{GatherExec, GatherLane, GatherOut};
+use crate::exec::gather::{GatherExec, GatherLane, GatherOut, ResidentPool, ShardHealth};
+use crate::exec::sync::{self, Mutex};
 
 /// A loaded runtime: manifest + one or more live device threads.
+///
+/// The artifact directory and params payload are retained after load:
+/// they are the respawn recipe — [`Runtime::sharded_backend`] hands them
+/// to the [`ShardedRuntime`] so a dead device shard can be re-spawned
+/// and its resident tensors replayed without re-reading artifacts.
 pub struct Runtime {
     /// The parsed AOT manifest the artifacts were loaded against.
     pub manifest: Manifest,
     handles: Vec<RuntimeHandle>,
+    dir: PathBuf,
+    params: Vec<f32>,
 }
 
 impl Runtime {
@@ -90,7 +98,7 @@ impl Runtime {
                     .with_context(|| format!("spawning device shard {shard}"))?,
             );
         }
-        Ok(Runtime { manifest, handles })
+        Ok(Runtime { manifest, handles, dir: dir.to_path_buf(), params })
     }
 
     /// Handle for raw executions on the first shard (the engines and
@@ -122,7 +130,10 @@ impl Runtime {
 
     /// A [`GatherExec`] backend over the first `devices` shards — what
     /// `Coordinator::start` drives. Fails if fewer shards are loaded
-    /// than asked for (load with [`Runtime::load_sharded`]).
+    /// than asked for (load with [`Runtime::load_sharded`]). The backend
+    /// carries the respawn recipe (artifact dir, manifest, params) plus a
+    /// host-copy [`ResidentPool`], so a dead shard can be re-spawned with
+    /// every live registration replayed ([`GatherExec::respawn_shard`]).
     pub fn sharded_backend(&self, devices: usize) -> Result<ShardedRuntime> {
         ensure!(devices >= 1, "devices must be >= 1");
         ensure!(
@@ -131,44 +142,123 @@ impl Runtime {
             self.handles.len()
         );
         Ok(ShardedRuntime {
-            shards: self.handles[..devices].to_vec(),
+            shards: self.handles[..devices]
+                .iter()
+                .map(|h| ShardSlot {
+                    handle: Mutex::new(h.clone()),
+                    draining: AtomicBool::new(false),
+                })
+                .collect(),
+            pool: ResidentPool::new(),
+            respawner: Respawner {
+                dir: self.dir.clone(),
+                manifest: self.manifest.clone(),
+                params: self.params.clone(),
+            },
             next_probe: AtomicUsize::new(0),
         })
     }
 }
 
+/// The recipe for bringing up a fresh device shard: everything
+/// `service::spawn` needs, retained from load time.
+struct Respawner {
+    dir: PathBuf,
+    manifest: Manifest,
+    params: Vec<f32>,
+}
+
+/// One shard's mutable lifecycle state: the (swappable) device-thread
+/// handle plus the administrative drain fence. The handle mutex is held
+/// only to clone the handle (or, rarely, across a respawn swap) — never
+/// across a device execution.
+struct ShardSlot {
+    handle: Mutex<RuntimeHandle>,
+    draining: AtomicBool,
+}
+
+impl ShardSlot {
+    fn handle(&self) -> RuntimeHandle {
+        sync::lock(&self.handle).clone()
+    }
+}
+
 /// A [`GatherExec`] over several device shards: registration broadcasts
-/// to every shard (a chunk may execute anywhere), gather chunks route to
-/// the caller's shard, probes round-robin.
+/// to every live shard (a chunk may execute anywhere), gather chunks
+/// route to the caller's shard, probes round-robin over live shards.
+///
+/// Implements the full elastic lifecycle (`docs/ARCHITECTURE.md` §"Shard
+/// lifecycle"): [`GatherExec::shard_health`] reports per-shard
+/// live/draining/dead state (a dead device thread is detected through
+/// [`RuntimeHandle::is_alive`]), [`GatherExec::drain_shard`] fences a
+/// shard from new gather chunks so the coordinator's feeder failover
+/// migrates them to siblings, and [`GatherExec::respawn_shard`] spawns a
+/// fresh device thread and replays every live resident registration into
+/// it from the host-copy pool — no stranded slots
+/// (`docs/INVARIANTS.md` §I8).
 pub struct ShardedRuntime {
-    shards: Vec<RuntimeHandle>,
+    shards: Vec<ShardSlot>,
+    /// Host-copy replay source: registration lands here first, so a
+    /// respawn can re-upload every live request's endpoints even though
+    /// the dead device thread took its own copies with it.
+    pool: ResidentPool,
+    respawner: Respawner,
     next_probe: AtomicUsize,
 }
 
 impl GatherExec for ShardedRuntime {
     fn features(&self) -> usize {
-        self.shards[0].features()
+        self.shards[0].handle().features()
     }
 
     fn num_classes(&self) -> usize {
-        self.shards[0].num_classes()
+        self.shards[0].handle().num_classes()
     }
 
     fn forward(&self, imgs: &[f32], rows: usize) -> Result<Vec<f32>> {
         // Round-robin probes across shards so stage 1 does not serialize
-        // on shard 0 while gradient chunks spread.
-        let k = self.next_probe.fetch_add(1, Ordering::Relaxed) % self.shards.len();
-        self.shards[k].forward(imgs, rows)
+        // on shard 0 while gradient chunks spread; dead shards are
+        // skipped (draining ones still probe — the drain fence covers
+        // gather chunks only).
+        let n = self.shards.len();
+        let k = self.next_probe.fetch_add(1, Ordering::Relaxed) % n;
+        for off in 0..n {
+            let handle = self.shards[(k + off) % n].handle();
+            if handle.is_alive() {
+                return handle.forward(imgs, rows);
+            }
+        }
+        bail!("no live device shard to serve the probe")
     }
 
     fn register_request(&self, slot: u64, x: &[f32], baseline: &[f32]) -> Result<()> {
+        // Host copy first: it is the replay source, and ordering it
+        // before the broadcast means a concurrent respawn either sees
+        // the slot in its pool snapshot or blocks the broadcast on the
+        // handle lock until the fresh handle is in place — no window
+        // where the slot can strand.
+        self.pool.register(slot, x, baseline)?;
         for (k, shard) in self.shards.iter().enumerate() {
-            if let Err(e) = shard.register_request(slot, x, baseline) {
+            let handle = shard.handle();
+            if let Err(e) = handle.register_request(slot, x, baseline) {
+                if !handle.is_alive() {
+                    // Dead shard: skipped now, replayed at respawn.
+                    continue;
+                }
+                if e.to_string().contains("already registered") {
+                    // A concurrent respawn replayed this slot between our
+                    // pool insert and this broadcast — the slot IS
+                    // resident, which is the goal. (Genuine duplicates
+                    // are caught by the pool insert above, before any
+                    // broadcast.)
+                    continue;
+                }
                 // Roll back the shards that already admitted the slot so
                 // a failed registration leaves no orphan residents.
                 for done in &self.shards[..k] {
-                    done.evict_request(slot);
+                    done.handle().evict_request(slot);
                 }
+                self.pool.evict(slot);
                 return Err(e);
             }
         }
@@ -176,15 +266,16 @@ impl GatherExec for ShardedRuntime {
     }
 
     fn evict_request(&self, slot: u64) {
+        self.pool.evict(slot);
         for shard in &self.shards {
-            shard.evict_request(slot);
+            shard.handle().evict_request(slot);
         }
     }
 
     fn resident_len(&self) -> usize {
-        // Registration is broadcast, so any shard's count is the pool
-        // gauge; use the first.
-        self.shards[0].resident_len()
+        // The host-copy pool is the authoritative gauge: broadcast may
+        // legitimately skip dead shards, so per-shard counts can lag.
+        self.pool.len()
     }
 
     fn shards(&self) -> usize {
@@ -192,6 +283,72 @@ impl GatherExec for ShardedRuntime {
     }
 
     fn eval_gather(&self, shard: usize, lanes: &[GatherLane]) -> Result<GatherOut> {
-        self.shards[shard % self.shards.len()].eval_gather(0, lanes)
+        let idx = shard % self.shards.len();
+        let slot = &self.shards[idx];
+        if slot.draining.load(Ordering::SeqCst) {
+            bail!("shard {idx} is draining");
+        }
+        slot.handle().eval_gather(0, lanes)
+    }
+
+    fn shard_health(&self, shard: usize) -> ShardHealth {
+        let idx = shard % self.shards.len();
+        let slot = &self.shards[idx];
+        if !slot.handle().is_alive() {
+            ShardHealth::Dead
+        } else if slot.draining.load(Ordering::SeqCst) {
+            ShardHealth::Draining
+        } else {
+            ShardHealth::Live
+        }
+    }
+
+    fn drain_shard(&self, shard: usize) {
+        let idx = shard % self.shards.len();
+        self.shards[idx].draining.store(true, Ordering::SeqCst);
+    }
+
+    fn respawn_shard(&self, shard: usize) -> Result<()> {
+        let idx = shard % self.shards.len();
+        let slot = &self.shards[idx];
+        // Hold the handle lock across the whole respawn: concurrent
+        // respawners serialize (no double spawn), and a concurrent
+        // registration broadcast blocks here until the fresh handle is
+        // in place (see register_request's ordering argument).
+        let mut handle = sync::lock(&slot.handle);
+        if handle.is_alive() {
+            // Nothing to respawn; treat as an un-drain.
+            slot.draining.store(false, Ordering::SeqCst);
+            return Ok(());
+        }
+        let rs = &self.respawner;
+        let fresh = service::spawn(&rs.dir, &rs.manifest, rs.params.clone())
+            .with_context(|| format!("respawning device shard {idx}"))?;
+        let replayed = self.pool.snapshot_sorted();
+        for (slot_id, entry) in &replayed {
+            fresh
+                .register_request(*slot_id, &entry.0, &entry.1)
+                .with_context(|| format!("replaying resident slot {slot_id} into shard {idx}"))?;
+        }
+        // A request that settled mid-replay evicted its pool entry but
+        // may already have been replayed; sweep those out so the fresh
+        // shard holds exactly the live set.
+        for (slot_id, _) in &replayed {
+            if self.pool.entry(*slot_id).is_none() {
+                fresh.evict_request(*slot_id);
+            }
+        }
+        *handle = fresh;
+        slot.draining.store(false, Ordering::SeqCst);
+        Ok(())
+    }
+}
+
+impl ShardedRuntime {
+    /// Whether `shard`'s device thread is still serving (liveness probe
+    /// for admin surfaces; [`GatherExec::shard_health`] folds this into
+    /// the lifecycle state).
+    pub fn shard_alive(&self, shard: usize) -> bool {
+        self.shards[shard % self.shards.len()].handle().is_alive()
     }
 }

@@ -20,6 +20,7 @@ use anyhow::{anyhow, ensure, Context, Result};
 
 use crate::exec::channel::{bounded, Sender};
 use crate::exec::gather::{GatherExec, GatherLane, GatherOut};
+use crate::exec::sync::atomic::{AtomicBool, Ordering};
 use crate::exec::sync::{self, Mutex};
 use crate::metrics::{Counter, Histogram};
 
@@ -188,6 +189,11 @@ pub struct RuntimeHandle {
     /// [`GatherExec::evict_request`] contract): a double evict can
     /// never make the gauge under-report live registrations.
     resident: Arc<Mutex<HashSet<u64>>>,
+    /// Cleared by a drop guard when the device thread's serve loop exits
+    /// (clean shutdown *or* panic) — the liveness signal
+    /// `ShardedRuntime` polls to classify a shard as dead and eligible
+    /// for respawn.
+    alive: Arc<AtomicBool>,
 }
 
 impl RuntimeHandle {
@@ -240,6 +246,23 @@ impl RuntimeHandle {
     /// Model class count.
     pub fn num_classes(&self) -> usize {
         self.num_classes
+    }
+
+    /// Whether the device thread behind this handle is still serving.
+    /// Flips to `false` the moment the thread exits — clean shutdown or
+    /// panic alike (a drop guard clears it on unwind).
+    pub fn is_alive(&self) -> bool {
+        self.alive.load(Ordering::SeqCst)
+    }
+}
+
+/// Clears the shared liveness flag when the device thread exits, however
+/// it exits — the unwind path of a panicking FFI wrapper included.
+struct AliveGuard(Arc<AtomicBool>);
+
+impl Drop for AliveGuard {
+    fn drop(&mut self) {
+        self.0.store(false, Ordering::SeqCst);
     }
 }
 
@@ -321,10 +344,13 @@ pub fn spawn(dir: &Path, manifest: &Manifest, params: Vec<f32>) -> Result<Runtim
     // Compile errors must reach the caller: report readiness over a
     // one-shot channel before entering the serve loop.
     let (ready_tx, ready_rx) = bounded::<Result<()>>(1);
+    let alive = Arc::new(AtomicBool::new(true));
+    let alive2 = alive.clone();
 
     std::thread::Builder::new()
         .name("nuig-device".to_string())
         .spawn(move || {
+            let _guard = AliveGuard(alive2);
             let setup = (|| -> Result<Device> { Device::new(&dir, &manifest, params) })();
             match setup {
                 Ok(device) => {
@@ -349,6 +375,7 @@ pub fn spawn(dir: &Path, manifest: &Manifest, params: Vec<f32>) -> Result<Runtim
         features,
         num_classes,
         resident: Arc::new(Mutex::new(HashSet::new())),
+        alive,
     })
 }
 

@@ -19,20 +19,28 @@
 //! * `coordinator::scheduler::LaneScheduler` — shutdown: a closed-queue
 //!   refill settles its request exactly once; parked pushes are woken by
 //!   close, never leaked.
+//! * `exec::fault::FaultInjector` + `coordinator::dispatch_failover` —
+//!   the elastic lifecycle handshake (ISSUE 7): the drain fence routes
+//!   chunks off a draining shard, and a respawn replay racing a fresh
+//!   registration lands every resident slot exactly once (no stranding,
+//!   no double registration).
 
 #![cfg(feature = "loom-models")]
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use anyhow::Result;
 use nuig::coordinator::request::{ExplainResponse, LatencyBudget};
 use nuig::coordinator::scheduler::{LaneScheduler, Policy, Popped};
 use nuig::coordinator::state::{Accum, AnytimeRounds, ChunkPlan, RequestState, RoundOutcome};
+use nuig::coordinator::dispatch_failover;
 use nuig::exec::channel::{bounded, Receiver, RecvError};
-use nuig::exec::gather::ResidentPool;
+use nuig::exec::gather::{GatherExec, GatherLane, GatherOut, ResidentPool, ShardHealth};
 use nuig::exec::interleave::{explore, shim};
 use nuig::exec::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use nuig::exec::sync::Mutex;
+use nuig::exec::{FaultAction, FaultEvent, FaultInjector, FaultPlan};
 use nuig::ig::schedule::Schedule;
 use nuig::ig::{AnytimePolicy, IgOptions, Rule};
 use nuig::metrics::StageBreakdown;
@@ -348,6 +356,141 @@ fn scheduler_refill_vs_close_settles_exactly_once() {
         let v = resp.attribution.values[0];
         assert!(v == 3.0 || v == 3.5, "got {v}");
         closer.join().unwrap();
+    });
+    assert!(report.executions > 1, "explored {} schedules", report.executions);
+}
+
+// ---------------------------------------------------------------------
+// exec::fault + coordinator::dispatch_failover — elastic lifecycle
+// ---------------------------------------------------------------------
+
+/// Minimal pure backend for the lifecycle models: shim-routed resident
+/// pool, a register-call counter (the double-registration witness), and
+/// lane rows that are a pure function of the lane.
+struct TinyExec {
+    pool: ResidentPool,
+    shards: usize,
+    registers: AtomicUsize,
+}
+
+impl TinyExec {
+    fn new(shards: usize) -> TinyExec {
+        TinyExec { pool: ResidentPool::new(), shards, registers: AtomicUsize::new(0) }
+    }
+}
+
+impl GatherExec for TinyExec {
+    fn features(&self) -> usize {
+        2
+    }
+    fn num_classes(&self) -> usize {
+        2
+    }
+    fn forward(&self, _imgs: &[f32], rows: usize) -> Result<Vec<f32>> {
+        Ok(vec![0.5; rows * 2])
+    }
+    fn register_request(&self, slot: u64, x: &[f32], baseline: &[f32]) -> Result<()> {
+        self.registers.fetch_add(1, Ordering::Relaxed);
+        self.pool.register(slot, x, baseline)
+    }
+    fn evict_request(&self, slot: u64) {
+        self.pool.evict(slot);
+    }
+    fn resident_len(&self) -> usize {
+        self.pool.len()
+    }
+    fn shards(&self) -> usize {
+        self.shards
+    }
+    fn eval_gather(&self, _shard: usize, lanes: &[GatherLane]) -> Result<GatherOut> {
+        let mut rows = Vec::with_capacity(lanes.len() * 2);
+        for lane in lanes {
+            anyhow::ensure!(self.pool.entry(lane.slot).is_some(), "slot {} unknown", lane.slot);
+            let v = lane.alpha * lane.weight + lane.slot as f32;
+            rows.push(v);
+            rows.push(v + 1.0);
+        }
+        Ok(GatherOut { rows, features: 2 })
+    }
+}
+
+#[test]
+fn drain_fence_migrates_chunks_in_every_interleaving() {
+    // A feeder dispatching through dispatch_failover races an operator
+    // draining its home shard. In every schedule the chunk must be
+    // served (home before the fence lands, the sibling after — both are
+    // legal), and once drain_shard has returned, dispatch MUST route to
+    // the sibling: no chunk executes on a draining shard. Respawn then
+    // clears the fence and home routing resumes.
+    let report = explore(|| {
+        let inner = Arc::new(TinyExec::new(2));
+        let inj = Arc::new(FaultInjector::new(inner, &FaultPlan::new(vec![])).unwrap());
+        inj.register_request(5, &[1.0, 0.0], &[0.0, 0.0]).unwrap();
+        let lane = [GatherLane { slot: 5, alpha: 0.5, weight: 1.0, target: 0 }];
+
+        let inj2 = inj.clone();
+        let drainer = shim::spawn(move || inj2.drain_shard(0));
+        // Concurrent with the drain: the chunk is never dropped, never
+        // respawns anything, and lands on a legal shard.
+        let (ex1, respawned1, out1) = dispatch_failover(&*inj, 0, &lane).unwrap();
+        assert!(!respawned1);
+        assert!(ex1 == 0 || ex1 == 1, "executed on unknown shard {ex1}");
+        assert_eq!(out1.row(0), &[0.5 + 5.0, 0.5 + 6.0], "migration cannot move bits");
+        drainer.join().unwrap();
+
+        // Fence established: chunks migrate, the draining shard is idle.
+        assert_eq!(inj.shard_health(0), ShardHealth::Draining);
+        let (ex2, respawned2, _) = dispatch_failover(&*inj, 0, &lane).unwrap();
+        assert_eq!(ex2, 1, "post-drain chunks must execute on the sibling");
+        assert!(!respawned2);
+        assert_eq!(inj.respawn_count(), 0, "drain never triggers a respawn");
+
+        // Respawn un-drains; home routing resumes.
+        inj.respawn_shard(0).unwrap();
+        assert_eq!(inj.shard_health(0), ShardHealth::Live);
+        let (ex3, _, _) = dispatch_failover(&*inj, 0, &lane).unwrap();
+        assert_eq!(ex3, 0, "an un-drained home serves its own chunks again");
+    });
+    assert!(report.executions > 1, "explored {} schedules", report.executions);
+}
+
+#[test]
+fn respawn_replay_vs_registration_lands_each_slot_exactly_once() {
+    // Satellite 3's second invariant: a respawn replaying the resident
+    // pool races a fresh registration. Whichever order the schedule
+    // picks (register first and the replay snapshot carries the slot;
+    // respawn first and the post-respawn Live shard takes the direct
+    // insert; or interleaved through the pool-first ordering), the shard
+    // view must end up with BOTH slots exactly once, the inner backend
+    // must see each slot registered exactly once (no double
+    // registration), and a gather over both slots must serve.
+    let report = explore(|| {
+        let inner = Arc::new(TinyExec::new(1));
+        let plan =
+            FaultPlan::new(vec![FaultEvent { shard: 0, at: 0, action: FaultAction::Kill }]);
+        let inj = Arc::new(FaultInjector::new(inner.clone(), &plan).unwrap());
+        inj.register_request(7, &[1.0, 0.0], &[0.0, 0.0]).unwrap();
+        let lane7 = GatherLane { slot: 7, alpha: 0.5, weight: 1.0, target: 0 };
+        // Fire the kill: shard 0 dies, its resident view is wiped.
+        assert!(inj.eval_gather(0, &[lane7]).is_err());
+
+        let inj2 = inj.clone();
+        let registrar =
+            shim::spawn(move || inj2.register_request(9, &[2.0, 0.0], &[0.0, 0.0]).unwrap());
+        inj.respawn_shard(0).unwrap();
+        registrar.join().unwrap();
+
+        assert_eq!(inj.shard_health(0), ShardHealth::Live);
+        assert_eq!(inj.resident_on(0), vec![7, 9], "both slots, each exactly once");
+        assert_eq!(inj.pool_slots(), vec![7, 9]);
+        assert_eq!(
+            inner.registers.load(Ordering::Relaxed),
+            2,
+            "the inner backend saw each slot registered exactly once"
+        );
+        let lane9 = GatherLane { slot: 9, alpha: 0.25, weight: 1.0, target: 1 };
+        inj.eval_gather(0, &[lane7, lane9]).unwrap();
+        assert_eq!(inj.respawn_count(), 1);
     });
     assert!(report.executions > 1, "explored {} schedules", report.executions);
 }

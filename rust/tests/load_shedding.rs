@@ -1,0 +1,177 @@
+//! Admission load shedding: overload marks, typed `ShedRejection`
+//! replies with deterministic retry hints, and the zero-probe-passes
+//! guarantee (docs/INVARIANTS.md §I9).
+//!
+//! Artifact-free: runs over `AnalyticExec` in every tier-1 `cargo test`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+use nuig::config::CoordinatorConfig;
+use nuig::coordinator::{Coordinator, ExplainRequest, LatencyBudget, ShedRejection};
+use nuig::exec::gather::{GatherExec, GatherLane, GatherOut};
+use nuig::ig::{AnalyticExec, AnalyticModel, IgOptions, Scheme};
+
+const F: usize = 32;
+const C: usize = 4;
+
+fn model() -> AnalyticModel {
+    AnalyticModel::new(F, C, 0xFEED, 12.0)
+}
+
+fn image(i: usize) -> Vec<f32> {
+    (0..F).map(|k| (((i * 31 + k * 7) % 64) as f32) / 64.0).collect()
+}
+
+fn request(i: usize) -> ExplainRequest {
+    ExplainRequest::new(
+        image(i),
+        IgOptions { scheme: Scheme::NonUniform { n_int: 4 }, m: 8, ..Default::default() },
+    )
+}
+
+/// Wraps `AnalyticExec`, counting `forward` calls — the witness that a
+/// shed request paid zero stage-1 probe passes.
+struct ProbeCountingExec {
+    inner: AnalyticExec,
+    forwards: AtomicU64,
+}
+
+impl ProbeCountingExec {
+    fn new(inner: AnalyticExec) -> ProbeCountingExec {
+        ProbeCountingExec { inner, forwards: AtomicU64::new(0) }
+    }
+}
+
+impl GatherExec for ProbeCountingExec {
+    fn features(&self) -> usize {
+        self.inner.features()
+    }
+    fn num_classes(&self) -> usize {
+        self.inner.num_classes()
+    }
+    fn forward(&self, imgs: &[f32], rows: usize) -> Result<Vec<f32>> {
+        self.forwards.fetch_add(1, Ordering::Relaxed);
+        self.inner.forward(imgs, rows)
+    }
+    fn register_request(&self, slot: u64, x: &[f32], baseline: &[f32]) -> Result<()> {
+        self.inner.register_request(slot, x, baseline)
+    }
+    fn evict_request(&self, slot: u64) {
+        self.inner.evict_request(slot);
+    }
+    fn resident_len(&self) -> usize {
+        self.inner.resident_len()
+    }
+    fn shards(&self) -> usize {
+        self.inner.shards()
+    }
+    fn eval_gather(&self, shard: usize, lanes: &[GatherLane]) -> Result<GatherOut> {
+        self.inner.eval_gather(shard, lanes)
+    }
+}
+
+fn cfg() -> CoordinatorConfig {
+    CoordinatorConfig { feeders: 1, devices: 1, workers: 1, ..Default::default() }
+}
+
+#[test]
+fn above_mark_sheds_tight_before_stage_one() {
+    // Saturate the resident gauge out-of-band, then submit a tight-tier
+    // request: it must be rejected with a typed ShedRejection BEFORE any
+    // probe pass, with the deterministic retry hint and the shed
+    // counters bumped.
+    let backend = Arc::new(ProbeCountingExec::new(AnalyticExec::new(model())));
+    backend.register_request(9_999, &image(0), &[0f32; F]).unwrap();
+    let mut c = cfg();
+    c.shed.resident_high_water = 1;
+    c.shed.retry_after_ms = 25;
+    let coord = Coordinator::start_with_backend(backend.clone(), c).unwrap();
+
+    let err = coord.explain(request(1).with_budget(LatencyBudget::Tight)).unwrap_err();
+    let shed = err
+        .downcast_ref::<ShedRejection>()
+        .unwrap_or_else(|| panic!("expected a typed ShedRejection, got: {err}"));
+    // Gauge 1 at mark 1 ⇒ overload factor 1 ⇒ base hint.
+    assert_eq!(shed.retry_after, Duration::from_millis(25));
+    assert!(shed.retry_after > Duration::ZERO, "the hint is always actionable");
+    assert_eq!(shed.resident_len, 1);
+    assert!(err.to_string().contains("shed under overload"), "{err}");
+
+    assert_eq!(backend.forwards.load(Ordering::Relaxed), 0, "shed = zero probe passes");
+    let stats = coord.stats();
+    assert_eq!(stats.shed_rejections.get(), 1);
+    assert_eq!(stats.tier(LatencyBudget::Tight).shed.get(), 1);
+    assert_eq!(stats.failed.get(), 1, "a shed settles the request's accounting");
+    assert_eq!(stats.resident_rejections.get(), 0, "shed outranks the resident-cap gate");
+    assert!(stats.resident_peak.get() >= 1, "admission sampled the overload gauges");
+    assert_eq!(coord.in_flight(), 0);
+
+    // Draining the gauge un-wedges tight admission on the same coordinator.
+    backend.evict_request(9_999);
+    let resp = coord.explain(request(1).with_budget(LatencyBudget::Tight)).unwrap();
+    assert!(resp.attribution.delta.is_finite());
+    assert_eq!(stats.shed_rejections.get(), 1, "no further sheds below the mark");
+    coord.shutdown();
+}
+
+#[test]
+fn soft_tiers_ride_through_overload_unshed() {
+    // The same overloaded gauge must NOT shed Standard (or Unbounded)
+    // traffic — soft tiers queue through; only the hard-deadline tier
+    // prefers a fast typed reject.
+    let backend = Arc::new(ProbeCountingExec::new(AnalyticExec::new(model())));
+    backend.register_request(9_999, &image(0), &[0f32; F]).unwrap();
+    let mut c = cfg();
+    c.shed.resident_high_water = 1;
+    let coord = Coordinator::start_with_backend(backend.clone(), c).unwrap();
+
+    let resp = coord.explain(request(2).with_budget(LatencyBudget::Standard)).unwrap();
+    assert!(resp.attribution.delta.is_finite());
+    let resp = coord.explain(request(3)).unwrap(); // Unbounded
+    assert!(resp.attribution.delta.is_finite());
+
+    let stats = coord.stats();
+    assert_eq!(stats.shed_rejections.get(), 0);
+    assert_eq!(stats.tier(LatencyBudget::Standard).shed.get(), 0);
+    assert_eq!(stats.tier(LatencyBudget::Standard).completed.get(), 1);
+    assert!(backend.forwards.load(Ordering::Relaxed) > 0, "soft tiers really probed");
+    coord.shutdown();
+}
+
+#[test]
+fn below_mark_tight_serves_with_untouched_shed_stats() {
+    // Marks configured but not crossed: tight traffic is served
+    // normally and every shed counter stays zero — enabling the knobs
+    // must be a no-op until overload actually happens.
+    let backend = Arc::new(ProbeCountingExec::new(AnalyticExec::new(model())));
+    let mut c = cfg();
+    c.shed.resident_high_water = 100;
+    c.shed.lane_high_water = 10_000;
+    let coord = Coordinator::start_with_backend(backend.clone(), c).unwrap();
+    let resp = coord.explain(request(4).with_budget(LatencyBudget::Tight)).unwrap();
+    assert!(resp.attribution.delta.is_finite());
+    let stats = coord.stats();
+    assert_eq!(stats.shed_rejections.get(), 0);
+    assert_eq!(stats.tier(LatencyBudget::Tight).shed.get(), 0);
+    assert_eq!(stats.tier(LatencyBudget::Tight).completed.get(), 1);
+    assert_eq!(stats.failed.get(), 0);
+    coord.shutdown();
+    assert_eq!(backend.resident_len(), 0);
+}
+
+#[test]
+fn shedding_disabled_by_default() {
+    // Default config has both marks at 0 (disabled): even a saturated
+    // resident gauge sheds nothing — only the resident-cap gate applies,
+    // exactly the pre-shedding behaviour.
+    let backend = Arc::new(ProbeCountingExec::new(AnalyticExec::new(model())));
+    backend.register_request(9_999, &image(0), &[0f32; F]).unwrap();
+    let coord = Coordinator::start_with_backend(backend.clone(), cfg()).unwrap();
+    let resp = coord.explain(request(5).with_budget(LatencyBudget::Tight)).unwrap();
+    assert!(resp.attribution.delta.is_finite());
+    assert_eq!(coord.stats().shed_rejections.get(), 0);
+    coord.shutdown();
+}
