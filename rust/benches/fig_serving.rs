@@ -29,13 +29,19 @@
 //!   shard's resident-tensor re-registration replay (chaos harness,
 //!   `exec::fault`), and `shed_rate` drives a tight/soft burst through
 //!   a shed-configured coordinator over a saturated gauge — every
-//!   tight request sheds, every soft one serves (rate exactly 0.5).
+//!   tight request sheds, every soft one serves (rate exactly 0.5);
+//! * mixed-tier rows (`tier_rows`): an all-tier stream served twice at
+//!   the top feeder count — work stealing on (deep prefetch) vs off
+//!   (chunks pinned to the feeder that pulled them) — reporting per-tier
+//!   p99 and the dispatch `steal_rate`, with the two runs asserted
+//!   **bit-identical** (stealing is a dispatch-order change only,
+//!   docs/INVARIANTS.md §I10).
 
 use std::sync::Arc;
 
 use nuig::bench::{fmt3, Table};
 use nuig::config::CoordinatorConfig;
-use nuig::coordinator::{Coordinator, ExplainRequest, LatencyBudget, ShedRejection};
+use nuig::coordinator::{Coordinator, ExplainRequest, LatencyBudget, ShedRejection, StealConfig};
 use nuig::data::synth;
 use nuig::exec::gather::{GatherExec, GatherLane};
 use nuig::exec::{FaultAction, FaultEvent, FaultInjector, FaultPlan};
@@ -57,6 +63,27 @@ fn requests(n: usize) -> Vec<ExplainRequest> {
                 req.with_budget(LatencyBudget::Standard)
             } else {
                 req
+            }
+        })
+        .collect()
+}
+
+/// Every admission tier in one deterministic stream — unbounded, tight
+/// (pinned target), standard, thorough, round-robin — over both schemes,
+/// for the stealing-on/off comparison rows.
+fn tiered_requests(n: usize) -> Vec<ExplainRequest> {
+    (0..n)
+        .map(|i| {
+            let img = synth::gen_image(i % synth::NUM_CLASSES, i / synth::NUM_CLASSES);
+            let scheme =
+                if i % 8 == 7 { Scheme::Uniform } else { Scheme::NonUniform { n_int: 4 } };
+            let m = [16, 32, 48, 64][i % 4];
+            let req = ExplainRequest::new(img, IgOptions { scheme, m, ..Default::default() });
+            match LatencyBudget::ALL[i % 4] {
+                LatencyBudget::Tight => {
+                    req.with_budget(LatencyBudget::Tight).with_target(i % synth::NUM_CLASSES)
+                }
+                tier => req.with_budget(tier),
             }
         })
         .collect()
@@ -252,6 +279,76 @@ fn main() -> anyhow::Result<()> {
     }
     table.print();
 
+    // ---- Mixed-tier p99: work stealing on vs off. -----------------------
+    // One all-tier stream, served twice at the top feeder count: once
+    // with stealing enabled and a deep prefetch (the steal-heavy shape)
+    // and once with staging disabled (every chunk pinned to the feeder
+    // whose bucket pull assembled it). Stealing only changes which
+    // feeder executes a chunk — the ordered commit makes the two runs
+    // bit-identical, asserted below.
+    let tier_feeders = *feeder_grid.last().expect("feeder grid is non-empty");
+    let tier_requests = if smoke { 16 } else { 48 };
+    let mut tier_table = Table::new(
+        &format!(
+            "fig_serving: mixed-tier p99, stealing on vs off \
+             ({tier_requests} requests, {tier_feeders} feeders)"
+        ),
+        &["stealing", "tier", "completed", "p99_ms", "steal_rate"],
+    );
+    let mut tier_reference: Option<Vec<Vec<u64>>> = None;
+    for stealing in [true, false] {
+        let backend =
+            Arc::new(AnalyticExec::with_shards(AnalyticModel::standard(), tier_feeders));
+        let mut cfg = CoordinatorConfig {
+            feeders: tier_feeders,
+            devices: tier_feeders,
+            workers: 2,
+            ..Default::default()
+        };
+        cfg.steal = if stealing {
+            StealConfig { stealing: true, local_prefetch: 4, starvation_limit: 64 }
+        } else {
+            StealConfig { stealing: false, local_prefetch: 1, starvation_limit: 64 }
+        };
+        let coord = Coordinator::start_with_backend(backend.clone(), cfg)?;
+        let handles: Vec<_> = tiered_requests(tier_requests)
+            .into_iter()
+            .map(|r| coord.submit(r))
+            .collect::<Result<_, _>>()?;
+        let mut values: Vec<Vec<u64>> = Vec::with_capacity(handles.len());
+        for h in handles {
+            let resp = h.wait()?;
+            values.push(resp.attribution.values.iter().map(|v| v.to_bits()).collect());
+        }
+        let stats = coord.stats();
+        assert_eq!(stats.failed.get(), 0, "no tiered request may fail");
+        let steal_rate = stats.steal.steal_rate();
+        if !stealing {
+            assert_eq!(stats.steal.steals.get(), 0, "stealing off must never steal");
+        }
+        for tier in LatencyBudget::ALL {
+            let ts = stats.tier(tier);
+            tier_table.row(vec![
+                (stealing as u64).to_string(),
+                tier.label().to_string(),
+                ts.completed.get().to_string(),
+                fmt3(ts.e2e_latency.quantile(0.99) * 1e3),
+                fmt3(steal_rate),
+            ]);
+        }
+        coord.shutdown();
+        assert_eq!(backend.resident_len(), 0, "tiered run drains the resident pool");
+        match tier_reference.as_ref() {
+            Some(prev) => {
+                for (i, (a, b)) in prev.iter().zip(&values).enumerate() {
+                    assert_eq!(a, b, "request {i}: stealing moved attribution bits");
+                }
+            }
+            None => tier_reference = Some(values),
+        }
+    }
+    tier_table.print();
+
     // ---- Machine-readable trajectory point: BENCH_serving.json. ---------
     let path = std::env::var("NUIG_SERVING_JSON").unwrap_or_else(|_| "BENCH_serving.json".into());
     let json = Json::obj(vec![
@@ -261,6 +358,10 @@ fn main() -> anyhow::Result<()> {
         ("requests", Json::Num(n_requests as f64)),
         ("smoke", Json::Bool(smoke)),
         ("rows", table.to_json().get("rows").expect("table has rows").clone()),
+        (
+            "tier_rows",
+            tier_table.to_json().get("rows").expect("tier table has rows").clone(),
+        ),
     ]);
     std::fs::write(&path, json.to_string_pretty())?;
     println!("wrote {path}");

@@ -11,7 +11,7 @@ use std::time::Duration;
 use anyhow::{bail, Result};
 
 use crate::coordinator::request::LatencyBudget;
-use crate::coordinator::scheduler::Policy;
+use crate::coordinator::scheduler::{Policy, StealConfig};
 use crate::ig::{Allocation, AnytimePolicy, Rule, Scheme};
 use crate::jsonio::Json;
 
@@ -252,6 +252,11 @@ pub struct CoordinatorConfig {
     /// Admission load shedding (high-water marks + retry-after hint);
     /// disabled by default.
     pub shed: ShedConfig,
+    /// Tiered-scheduler work-stealing knobs: staging prefetch depth,
+    /// the steal toggle, and the tier-starvation bound. Stealing never
+    /// changes results — attributions are bit-identical at any steal
+    /// interleaving (ordered lane commit; docs/INVARIANTS.md I10).
+    pub steal: StealConfig,
 }
 
 impl Default for CoordinatorConfig {
@@ -270,6 +275,7 @@ impl Default for CoordinatorConfig {
             policy: Policy::Fifo,
             admission: AdmissionConfig::default(),
             shed: ShedConfig::default(),
+            steal: StealConfig::default(),
         }
     }
 }
@@ -357,6 +363,7 @@ impl NuigConfig {
                 self.coordinator.resident_cap
             );
         }
+        self.coordinator.steal.validate().map_err(|e| anyhow::anyhow!("coordinator.{e}"))?;
         Ok(())
     }
 
@@ -392,6 +399,7 @@ impl NuigConfig {
                     ("policy", Json::Str(self.coordinator.policy.to_string())),
                     ("admission", admission_json(&self.coordinator.admission)),
                     ("shed", shed_json(&self.coordinator.shed)),
+                    ("steal", steal_json(&self.coordinator.steal)),
                 ]),
             ),
         ])
@@ -411,6 +419,14 @@ fn shed_json(s: &ShedConfig) -> Json {
         ("resident_high_water", s.resident_high_water.into()),
         ("lane_high_water", s.lane_high_water.into()),
         ("retry_after_ms", (s.retry_after_ms as usize).into()),
+    ])
+}
+
+fn steal_json(s: &StealConfig) -> Json {
+    Json::obj(vec![
+        ("stealing", s.stealing.into()),
+        ("local_prefetch", s.local_prefetch.into()),
+        ("starvation_limit", s.starvation_limit.into()),
     ])
 }
 
@@ -604,5 +620,29 @@ mod tests {
         let shed = j.get("coordinator").unwrap().get("shed").unwrap();
         assert_eq!(shed.get("resident_high_water").unwrap().as_usize().unwrap(), 0);
         assert_eq!(shed.get("retry_after_ms").unwrap().as_usize().unwrap(), 25);
+        let steal = j.get("coordinator").unwrap().get("steal").unwrap();
+        assert_eq!(steal.get("local_prefetch").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(steal.get("starvation_limit").unwrap().as_usize().unwrap(), 64);
+    }
+
+    #[test]
+    fn steal_knobs_validated() {
+        // Defaults: stealing on, one staged chunk, bounded starvation.
+        let c = NuigConfig::default();
+        assert!(c.coordinator.steal.stealing);
+        c.validate().unwrap();
+        let mut c = NuigConfig::default();
+        c.coordinator.steal.local_prefetch = 0;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("local_prefetch"), "{err}");
+        let mut c = NuigConfig::default();
+        c.coordinator.steal.starvation_limit = 0;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("starvation_limit"), "{err}");
+        // Stealing off with deep prefetch is a legal (pinned) shape.
+        let mut c = NuigConfig::default();
+        c.coordinator.steal =
+            StealConfig { stealing: false, local_prefetch: 8, starvation_limit: 16 };
+        c.validate().unwrap();
     }
 }

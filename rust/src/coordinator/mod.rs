@@ -13,10 +13,11 @@
 //!  submit() ─► request queue ─► router workers ─┐ (stage 1: probe +
 //!                    (register resident x/x′ ────┤  schedule + enqueue)
 //!                     once per request)          │
-//!              devices ◄─ feeders ◄─── lane queue┘   ▲
-//!               (×D)  │  (×N, gather-indexed:        │ anytime: novel
-//!                     │  (slot, α, w, target)        │ midpoint lanes
-//!                     │  records — O(chunk) bytes)   │
+//!              devices ◄─ feeders ◄─ tier buckets┘   ▲
+//!               (×D)  │  (×N, per-feeder staged      │ anytime: novel
+//!                     │  deques, LIFO-local /        │ midpoint lanes
+//!                     │  FIFO-steal; gather-indexed  │ (refill bucket)
+//!                     │  (slot, α, w, target) recs)  │
 //!                     └─► per-lane rows ─► ORDERED request accumulators
 //!                         round complete ─► converged? ─┬─► response
 //!                                                       └─► refine ──┘
@@ -44,10 +45,17 @@
 //! [`crate::config::AdmissionConfig`], and the `Tight` tier serves warm
 //! traffic straight from the probe-schedule cache
 //! ([`crate::ig::schedule::cache`]) — zero stage-1 passes, lanes admitted
-//! at the front of the queue. Cold traffic populates the cache as a side
-//! effect of routing. Per-tier latency/completion counters live in
+//! into the tight priority bucket. Cold traffic populates the cache as a
+//! side effect of routing. The lane queue itself is tiered
+//! ([`scheduler::Bucket`]): refill → tight → standard → thorough, with a
+//! starvation guard bounding how long tight traffic can pass over the
+//! thorough bucket, and per-feeder staged deques whose whole chunks idle
+//! feeders steal (legal because of the ordered commit — 0 ULP at any
+//! interleaving). Per-tier latency/completion counters live in
 //! [`server::TierStats`]; cache hit/miss/evict counters in
-//! [`CoordinatorStats`]'s shared [`crate::metrics::CacheCounters`].
+//! [`CoordinatorStats`]'s shared [`crate::metrics::CacheCounters`];
+//! dispatch-path steal/park/wake counters in its shared
+//! [`crate::metrics::StealCounters`].
 //!
 //! * [`request`] — request/response types, latency tiers, the one-shot
 //!   handle;
@@ -65,5 +73,5 @@ pub mod server;
 pub mod state;
 
 pub use request::{ExplainRequest, ExplainResponse, LatencyBudget, ResponseHandle, ShedRejection};
-pub use scheduler::Policy;
+pub use scheduler::{Bucket, LaneScheduler, Policy, Popped, StealConfig};
 pub use server::{dispatch_failover, Coordinator, CoordinatorStats, FeederStats, TierStats};

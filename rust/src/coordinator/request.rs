@@ -10,29 +10,37 @@ use crate::ig::{AnytimePolicy, Attribution, IgOptions};
 ///
 /// Tiers map to concrete schedule policies via
 /// [`crate::config::AdmissionConfig`] (initial m, refinement-round cap,
-/// convergence target). The qualitative contract:
+/// convergence target), and to a lane-queue priority bucket via
+/// [`crate::coordinator::scheduler::Bucket::for_budget`] (tight →
+/// standard → thorough drain order, with anytime refill lanes above all
+/// tiers and a starvation guard bounding how long thorough work can be
+/// passed over). The qualitative contract:
 ///
 /// * [`Unbounded`](LatencyBudget::Unbounded) — legacy behaviour: the
 ///   request's own `opts`/`anytime` settings are served unrewritten and
-///   stage 1 always runs. One coordinator-level switch still applies:
-///   with the probe-schedule cache enabled, *every* non-uniform schedule
-///   (all tiers) is the canonical quantized-signature build, so that
-///   cold traffic of any tier populates entries warm tiers can reuse —
-///   see `docs/TUNING.md` §cache for the (±1 step per interval) bound.
+///   stage 1 always runs; lanes queue in the *standard* bucket. One
+///   coordinator-level switch still applies: with the probe-schedule
+///   cache enabled, *every* non-uniform schedule (all tiers) is the
+///   canonical quantized-signature build, so that cold traffic of any
+///   tier populates entries warm tiers can reuse — see `docs/TUNING.md`
+///   §cache for the (±1 step per interval) bound.
 /// * [`Tight`](LatencyBudget::Tight) — hard deadline: a single round at
-///   the tier's coarse `m0`, admitted at the *front* of the lane queue,
+///   the tier's coarse `m0`, admitted into the *tight* priority bucket
+///   (overtaking queued standard/thorough work under every policy),
 ///   and — when the probe memo is warm and the target is pinned — zero
 ///   stage-1 passes, with δ reported against the class-level memoized
 ///   gap (an estimate; see `docs/TUNING.md`).
 /// * [`Standard`](LatencyBudget::Standard) — soft deadline: anytime
 ///   refinement with a modest round cap.
 /// * [`Thorough`](LatencyBudget::Thorough) — quality tier: anytime
-///   refinement to the tier's convergence target under the full budget.
+///   refinement to the tier's convergence target under the full budget;
+///   lowest bucket priority, with starvation-bounded progress under
+///   sustained tight-tier load (`tests/tier_starvation.rs`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum LatencyBudget {
     /// Serve exactly as requested (default; no admission rewriting).
     Unbounded,
-    /// Hard deadline: cached schedule, round cap 1, queue-front admission.
+    /// Hard deadline: cached schedule, round cap 1, tight-bucket admission.
     Tight,
     /// Soft deadline: anytime refinement with a modest round cap.
     Standard,

@@ -1,8 +1,21 @@
-//! Lane scheduling policies — which request's gradient points fill the
-//! next device chunk.
+//! Tiered, work-stealing lane scheduler — which request's gradient
+//! points fill the next device chunk, and which feeder dispatches it.
 //!
-//! The paper's static schedule makes this a *choice* (dynamic methods
-//! have no queue to reorder, §V). Three classic policies:
+//! The queue is split into four priority buckets drained strictly in
+//! order: [`Bucket::Refill`] (anytime refinement rounds, capacity-exempt)
+//! → [`Bucket::Tight`] → [`Bucket::Standard`] → [`Bucket::Thorough`].
+//! Refill outranks admission tiers because a refinement round holds a
+//! nearly-converged request's latency hostage; tiers then drain in
+//! deadline order. A bounded-progress guard
+//! ([`StealConfig::starvation_limit`]) forces a draw from the
+//! lowest-priority non-empty bucket after too many consecutive
+//! pass-overs, so sustained tight-tier traffic cannot starve
+//! thorough-tier requests (docs/INVARIANTS.md I10 and the
+//! `tier_starvation` suite).
+//!
+//! Within a bucket the paper's static schedule makes ordering a *choice*
+//! (dynamic methods have no queue to reorder, §V). Three classic
+//! policies:
 //!
 //! * `Fifo` — requests drain in arrival order. Minimizes mean latency
 //!   for similar-size jobs; a big request head-of-line-blocks small ones.
@@ -12,16 +25,32 @@
 //!   first (SJF). Minimizes mean latency under heterogeneous sizes;
 //!   can starve large requests under sustained load.
 //!
+//! Feeders pop through per-feeder staging deques (the mmtk worker-local
+//! pattern): one bucket pull assembles the chunk it returns plus up to
+//! `local_prefetch - 1` whole chunks staged in the popping feeder's own
+//! deque. Owners pop their deque LIFO (newest, cache-warm chunk first);
+//! a feeder that finds its deque and the buckets empty steals the
+//! *oldest* staged chunk from the deepest sibling deque (FIFO-steal), so
+//! a shard whose requests converge early drains its siblings instead of
+//! idling. Stealing is legal because the ordered-commit accumulator
+//! ([`crate::coordinator::state::Accum`]) folds lane rows in lane-index
+//! order no matter which feeder executed them — the attribution is
+//! bit-identical (0 ULP) at any feeder count and any steal interleaving
+//! (docs/INVARIANTS.md I10; `tests/steal_determinism.rs`).
+//!
 //! `benches/ablation_batching` and the serve example expose the policy;
 //! docs/EXPERIMENTS.md §Perf records the measured p50/p95 differences.
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
 use crate::exec::sync::{self, Condvar, Mutex};
+use crate::metrics::StealCounters;
 
+use super::request::LatencyBudget;
 use super::state::{ChunkPlan, Lane};
 
 /// Scheduling policy selector.
@@ -58,6 +87,94 @@ impl Policy {
     }
 }
 
+/// Priority bucket a request's lanes queue under. Buckets drain in
+/// declaration order (lowest discriminant first); the scheduling policy
+/// only orders requests *within* a bucket.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bucket {
+    /// Anytime refinement rounds for in-flight requests. Capacity-exempt
+    /// (see [`LaneScheduler::push_refill`]) and highest priority: a
+    /// refill lane blocks a nearly-converged request's reply.
+    Refill = 0,
+    /// Tight-budget admissions (the old `push_request_front` fast lane).
+    Tight = 1,
+    /// Standard-tier admissions; `Unbounded` requests ride here too.
+    Standard = 2,
+    /// Thorough-tier admissions — throughput traffic, drained last.
+    Thorough = 3,
+}
+
+impl Bucket {
+    /// Number of buckets.
+    pub const COUNT: usize = 4;
+
+    /// Dense index for array storage, in priority order.
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Stable lowercase name for logs and bench rows.
+    pub fn label(self) -> &'static str {
+        match self {
+            Bucket::Refill => "refill",
+            Bucket::Tight => "tight",
+            Bucket::Standard => "standard",
+            Bucket::Thorough => "thorough",
+        }
+    }
+
+    /// The admission bucket for a request's latency budget. `Unbounded`
+    /// has no deadline contract, so it shares the standard bucket rather
+    /// than competing with thorough-tier refinement depth.
+    pub fn for_budget(budget: LatencyBudget) -> Bucket {
+        match budget {
+            LatencyBudget::Tight => Bucket::Tight,
+            LatencyBudget::Standard | LatencyBudget::Unbounded => Bucket::Standard,
+            LatencyBudget::Thorough => Bucket::Thorough,
+        }
+    }
+}
+
+/// Work-stealing and bucket-fairness knobs (config section
+/// `coordinator.steal`; docs/TUNING.md §Serving knobs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StealConfig {
+    /// Allow a feeder whose deque and buckets are empty to steal the
+    /// oldest staged chunk from a sibling. Close-drain steals regardless
+    /// of this flag so no staged chunk is ever stranded; disabling only
+    /// pins live traffic to the feeder that staged it.
+    pub stealing: bool,
+    /// Chunks a feeder assembles per bucket pull: one returned plus up
+    /// to `local_prefetch - 1` staged in its local deque. Only whole
+    /// chunks are staged — stragglers stay in the buckets so the
+    /// bounded top-up wait keeps its batching semantics. `1` disables
+    /// staging entirely (and with it, stealing).
+    pub local_prefetch: usize,
+    /// Consecutive lane draws that may pass over a non-empty
+    /// lower-priority bucket before the next draw is forced from the
+    /// lowest non-empty bucket (the bounded-progress guard).
+    pub starvation_limit: usize,
+}
+
+impl Default for StealConfig {
+    fn default() -> StealConfig {
+        StealConfig { stealing: true, local_prefetch: 2, starvation_limit: 64 }
+    }
+}
+
+impl StealConfig {
+    /// Field sanity, called from `NuigConfig::validate`.
+    pub fn validate(&self) -> Result<()> {
+        if self.local_prefetch == 0 {
+            bail!("steal.local_prefetch must be >= 1 (1 disables staging)");
+        }
+        if self.starvation_limit == 0 {
+            bail!("steal.starvation_limit must be >= 1");
+        }
+        Ok(())
+    }
+}
+
 struct ReqPlans {
     /// Owning request id (diagnostics; scheduling itself is id-agnostic).
     #[allow(dead_code)]
@@ -74,43 +191,102 @@ struct ReqPlans {
     remaining: usize,
 }
 
-struct State {
-    /// Per-request plan queues, in arrival order.
+/// One priority bucket: per-request plan queues in arrival order plus
+/// the policy cursor that walks them.
+struct BucketQ {
     reqs: VecDeque<ReqPlans>,
-    /// Round-robin cursor (index into `reqs`).
+    /// Round-robin cursor (index into `reqs`; per-bucket so tiers don't
+    /// perturb each other's turn order).
     cursor: usize,
-    total: usize,
+    points: usize,
+}
+
+struct Sched {
+    buckets: [BucketQ; Bucket::COUNT],
+    /// Per-feeder staged chunks: the owner pops the back (LIFO), thieves
+    /// and close-drain pop the front (FIFO).
+    locals: Vec<VecDeque<Vec<Lane>>>,
+    /// Points still queued in the buckets (not yet assembled).
+    queued: usize,
+    /// Lanes staged in local deques (assembled, not yet dispatched).
+    staged: usize,
+    /// Consecutive lane draws that passed over a non-empty lower bucket.
+    starved: usize,
     closed: bool,
 }
 
-/// A policy-aware replacement for the flat lane channel: routers push a
-/// whole request's chunk plans atomically; the feeder pops device chunks
-/// lane-by-lane. Capacity and `len` count *points*, so backpressure and
-/// occupancy semantics are unchanged from the per-lane queue this
-/// replaces — only the queue representation is coarser (one entry, one
-/// `Arc`, one allocation per chunk plan instead of per point).
+/// The tiered, work-stealing replacement for the flat lane channel:
+/// routers push a whole request's chunk plans atomically into the bucket
+/// matching its admission tier; feeders pop device chunks lane-by-lane
+/// through per-feeder staging deques with LIFO-local/FIFO-steal
+/// semantics. Capacity and `len` count *points* across buckets and
+/// staged chunks, so backpressure and occupancy semantics are unchanged
+/// from the single-queue scheduler this replaces.
 pub struct LaneScheduler {
     policy: Policy,
     capacity: usize,
-    state: Mutex<State>,
+    steal: StealConfig,
+    n_feeders: usize,
+    counters: Arc<StealCounters>,
+    state: Mutex<Sched>,
     not_empty: Condvar,
     not_full: Condvar,
 }
 
 /// Chunk-pop outcome.
 pub enum Popped {
+    /// Up to `chunk` lanes, policy-ordered across the priority buckets.
     Chunk(Vec<Lane>),
+    /// The scheduler is closed and fully drained.
     Closed,
 }
 
 impl LaneScheduler {
+    /// Single-feeder scheduler with default steal knobs — the
+    /// compatibility constructor every existing call site uses.
     /// `capacity` bounds total queued lanes (router backpressure).
     pub fn new(policy: Policy, capacity: usize) -> LaneScheduler {
+        LaneScheduler::with_feeders(
+            policy,
+            capacity,
+            1,
+            StealConfig::default(),
+            Arc::new(StealCounters::default()),
+        )
+    }
+
+    /// Full constructor: `feeders` staging deques, steal knobs, and a
+    /// shared counter block (the coordinator hands in
+    /// `CoordinatorStats::steal` so serving telemetry sees dispatch
+    /// pressure without reaching into the queue).
+    pub fn with_feeders(
+        policy: Policy,
+        capacity: usize,
+        feeders: usize,
+        steal: StealConfig,
+        counters: Arc<StealCounters>,
+    ) -> LaneScheduler {
         assert!(capacity >= 1);
+        assert!(feeders >= 1);
+        steal.validate().expect("steal knobs validated at config load");
         LaneScheduler {
             policy,
             capacity,
-            state: Mutex::new(State { reqs: VecDeque::new(), cursor: 0, total: 0, closed: false }),
+            steal,
+            n_feeders: feeders,
+            counters,
+            state: Mutex::new(Sched {
+                buckets: std::array::from_fn(|_| BucketQ {
+                    reqs: VecDeque::new(),
+                    cursor: 0,
+                    points: 0,
+                }),
+                locals: (0..feeders).map(|_| VecDeque::new()).collect(),
+                queued: 0,
+                staged: 0,
+                starved: 0,
+                closed: false,
+            }),
             not_empty: Condvar::new(),
             not_full: Condvar::new(),
         }
@@ -121,28 +297,46 @@ impl LaneScheduler {
         self.policy
     }
 
-    /// Enqueue one request's chunk plans (blocks while over capacity;
-    /// fails after close). All-or-nothing: a request's plans stay
-    /// together, in schedule order.
+    /// Number of feeder staging deques.
+    pub fn feeders(&self) -> usize {
+        self.n_feeders
+    }
+
+    /// Dispatch-path counters (bucket pops, local pops, steals, parks,
+    /// wakes).
+    pub fn counters(&self) -> &StealCounters {
+        &self.counters
+    }
+
+    /// Enqueue one request's chunk plans into the standard bucket
+    /// (blocks while over capacity; fails after close). All-or-nothing:
+    /// a request's plans stay together, in schedule order.
     pub fn push_request(&self, id: u64, plans: Vec<ChunkPlan>) -> Result<()> {
-        self.push_impl(id, plans, false)
+        self.push_impl(id, plans, Bucket::Standard)
     }
 
-    /// Enqueue one request's chunk plans at the FRONT of the request
-    /// queue — deadline-aware admission for tight-budget tiers: the
-    /// request overtakes everything already queued while its own lanes
-    /// stay together in alpha order. Same capacity/close semantics as
-    /// [`LaneScheduler::push_request`]. Under `RoundRobin` the cursor is
-    /// left untouched (the new request simply takes the current turn);
-    /// `ShortestFirst` ignores queue order entirely, so front admission
-    /// only guarantees priority under `Fifo` — the default.
+    /// Enqueue one request's chunk plans into the TIGHT bucket —
+    /// deadline-aware admission: the request overtakes every standard-
+    /// and thorough-tier request already queued while its own lanes stay
+    /// together in alpha order. Same capacity/close semantics as
+    /// [`LaneScheduler::push_request`]. Unlike the push-front fast lane
+    /// this replaces, bucket priority holds under *every* policy
+    /// (policies only order requests within a bucket), and concurrent
+    /// tight requests drain FIFO among themselves rather than LIFO.
     pub fn push_request_front(&self, id: u64, plans: Vec<ChunkPlan>) -> Result<()> {
-        self.push_impl(id, plans, true)
+        self.push_impl(id, plans, Bucket::Tight)
     }
 
-    /// Shared admission loop for both push ends: one copy of the
-    /// closed-check / oversized-but-empty escape / condvar-wait logic.
-    fn push_impl(&self, id: u64, plans: Vec<ChunkPlan>, front: bool) -> Result<()> {
+    /// Enqueue into the bucket matching the request's admission tier
+    /// (see [`Bucket::for_budget`]). The router path for new requests.
+    pub fn push_tiered(&self, id: u64, budget: LatencyBudget, plans: Vec<ChunkPlan>) -> Result<()> {
+        self.push_impl(id, plans, Bucket::for_budget(budget))
+    }
+
+    /// Shared admission loop for every capacity-gated push: one copy of
+    /// the closed-check / oversized-but-empty escape / condvar-wait
+    /// logic.
+    fn push_impl(&self, id: u64, plans: Vec<ChunkPlan>, bucket: Bucket) -> Result<()> {
         let plans: VecDeque<ChunkPlan> = plans.into_iter().filter(|p| !p.is_empty()).collect();
         let points: usize = plans.iter().map(|p| p.len()).sum();
         if points == 0 {
@@ -155,15 +349,14 @@ impl LaneScheduler {
             }
             // Admit if there's room OR the queue is empty (oversized
             // requests must not deadlock on capacity).
-            if st.total + points <= self.capacity || st.total == 0 {
-                st.total += points;
-                let req = ReqPlans { id, plans, head: 0, remaining: points };
-                if front {
-                    st.reqs.push_front(req);
-                } else {
-                    st.reqs.push_back(req);
-                }
+            let total = st.queued + st.staged;
+            if total + points <= self.capacity || total == 0 {
+                st.queued += points;
+                let q = &mut st.buckets[bucket.index()];
+                q.points += points;
+                q.reqs.push_back(ReqPlans { id, plans, head: 0, remaining: points });
                 drop(st);
+                // Bucket activation: wake every parked feeder.
                 self.not_empty.notify_all();
                 return Ok(());
             }
@@ -171,11 +364,11 @@ impl LaneScheduler {
         }
     }
 
-    /// Re-enqueue a refinement round's lanes for an in-flight request,
-    /// bypassing the capacity gate.
+    /// Re-enqueue a refinement round's lanes for an in-flight request
+    /// into the refill bucket, bypassing the capacity gate.
     ///
-    /// The feeder calls this between anytime rounds; it must never block —
-    /// the feeder is the only consumer, so waiting on `not_full` here
+    /// Feeders call this between anytime rounds; it must never block —
+    /// feeders are the only consumers, so waiting on `not_full` here
     /// would deadlock the whole device pipeline. The bypass trades strict
     /// capacity enforcement for that deadlock-freedom: refill batches
     /// *grow* round over round (a round's novel midpoints are one fewer
@@ -196,103 +389,193 @@ impl LaneScheduler {
         if st.closed {
             bail!("lane scheduler closed");
         }
-        st.total += points;
-        st.reqs.push_back(ReqPlans { id, plans, head: 0, remaining: points });
+        st.queued += points;
+        let q = &mut st.buckets[Bucket::Refill.index()];
+        q.points += points;
+        q.reqs.push_back(ReqPlans { id, plans, head: 0, remaining: points });
         drop(st);
         self.not_empty.notify_all();
         Ok(())
     }
 
-    /// Pop up to `capacity` lanes according to the policy, waiting at most
-    /// `wait` to top up a non-empty chunk (blocks indefinitely for the
-    /// first lane; returns `Closed` once closed and drained).
+    /// Pop a chunk as feeder 0 — the single-feeder compatibility wrapper
+    /// around [`LaneScheduler::pop_chunk_for`].
     pub fn pop_chunk(&self, chunk: usize, wait: Duration) -> Popped {
+        self.pop_chunk_for(0, chunk, wait)
+    }
+
+    /// Pop up to `chunk` lanes for feeder `feeder`, waiting at most
+    /// `wait` to top up a non-empty chunk (parks indefinitely for the
+    /// first lane; returns `Closed` once closed and drained everywhere).
+    ///
+    /// Source order: the feeder's own staged deque (LIFO), then the
+    /// shared buckets (priority order, policy within a bucket), then a
+    /// steal from the deepest sibling deque (FIFO). A bucket pull also
+    /// stages up to `local_prefetch - 1` extra whole chunks locally —
+    /// the stealable surplus.
+    pub fn pop_chunk_for(&self, feeder: usize, chunk: usize, wait: Duration) -> Popped {
+        assert!(feeder < self.n_feeders, "feeder {feeder} out of range ({})", self.n_feeders);
         let mut st = sync::lock(&self.state);
-        // Block for the first available lane.
         loop {
-            if st.total > 0 {
+            // Own staged work first, newest chunk first (LIFO-local).
+            if let Some(c) = st.locals[feeder].pop_back() {
+                st.staged -= c.len();
+                drop(st);
+                self.not_full.notify_all();
+                self.counters.local_pops.inc();
+                return Popped::Chunk(c);
+            }
+            if st.queued > 0 {
                 break;
             }
+            // Steal the oldest staged chunk from the deepest sibling
+            // deque. Close-drain steals unconditionally so no chunk is
+            // stranded behind an idle (or dead) owner.
+            if self.steal.stealing || st.closed {
+                if let Some(c) = Self::steal(&mut st, feeder) {
+                    drop(st);
+                    self.not_full.notify_all();
+                    self.counters.steals.inc();
+                    return Popped::Chunk(c);
+                }
+            }
             if st.closed {
+                debug_assert_eq!(st.staged, 0, "close-drain must not strand staged chunks");
                 return Popped::Closed;
             }
+            // Park until a push activates a bucket (or close).
+            self.counters.parks.inc();
             st = sync::wait(&self.not_empty, st);
+            self.counters.wakes.inc();
         }
         let mut out = Vec::with_capacity(chunk);
-        Self::fill(&mut st, self.policy, chunk, &mut out);
+        self.fill(&mut st, chunk, &mut out);
 
-        // Bounded top-up wait.
+        // Bounded top-up wait, unchanged from the single-queue scheduler.
+        // nuig:allow(wallclock-kernel): pop-deadline timeout; never feeds attribution math
         let deadline = Instant::now() + wait;
         while out.len() < chunk {
-            if st.total > 0 {
-                Self::fill(&mut st, self.policy, chunk, &mut out);
+            if st.queued > 0 {
+                self.fill(&mut st, chunk, &mut out);
                 continue;
             }
             if st.closed {
                 break;
             }
+            // nuig:allow(wallclock-kernel): remaining-timeout arithmetic for the top-up wait
             let now = Instant::now();
             if now >= deadline {
                 break;
             }
             let (guard, timeout) = sync::wait_timeout(&self.not_empty, st, deadline - now);
             st = guard;
-            if timeout.timed_out() && st.total == 0 {
+            if timeout.timed_out() && st.queued == 0 {
                 break;
             }
         }
+
+        // Stage up to `local_prefetch - 1` extra WHOLE chunks in our own
+        // deque; partial chunks stay in the buckets so a later pop keeps
+        // the top-up batching semantics.
+        while st.locals[feeder].len() + 1 < self.steal.local_prefetch && st.queued >= chunk {
+            let mut extra = Vec::with_capacity(chunk);
+            self.fill(&mut st, chunk, &mut extra);
+            st.staged += extra.len();
+            st.locals[feeder].push_back(extra);
+        }
         drop(st);
         self.not_full.notify_all();
+        self.counters.bucket_pops.inc();
         Popped::Chunk(out)
     }
 
-    fn fill(st: &mut State, policy: Policy, chunk: usize, out: &mut Vec<Lane>) {
-        while out.len() < chunk && st.total > 0 {
-            let idx = match policy {
-                Policy::Fifo => 0,
-                Policy::RoundRobin => {
-                    if st.cursor >= st.reqs.len() {
-                        st.cursor = 0;
-                    }
-                    st.cursor
-                }
-                Policy::ShortestFirst => st
-                    .reqs
-                    .iter()
-                    .enumerate()
-                    .min_by_key(|(_, r)| r.remaining)
-                    .map(|(i, _)| i)
-                    .unwrap_or(0),
-            };
-            let exhausted = {
-                let req = &mut st.reqs[idx];
-                // One device lane off the front plan (plans are never
-                // empty: pushes filter them and drained plans pop here).
-                let plan = req.plans.front().expect("non-empty request queue");
-                let (alpha, weight) = plan.points[req.head];
-                let lane_idx = plan.base + req.head as u32;
-                out.push(Lane { state: plan.state.clone(), alpha, weight, idx: lane_idx });
-                req.head += 1;
-                req.remaining -= 1;
-                st.total -= 1;
-                if req.head == plan.len() {
-                    req.plans.pop_front();
-                    req.head = 0;
-                }
-                req.plans.is_empty()
-            };
-            if exhausted {
-                st.reqs.remove(idx);
-                if policy == Policy::RoundRobin && st.cursor > idx {
-                    st.cursor -= 1;
-                }
-            } else if policy == Policy::RoundRobin {
-                st.cursor = (idx + 1) % st.reqs.len().max(1);
+    /// Take the oldest staged chunk from the deepest sibling deque.
+    fn steal(st: &mut Sched, thief: usize) -> Option<Vec<Lane>> {
+        let victim = (0..st.locals.len())
+            .filter(|&i| i != thief && !st.locals[i].is_empty())
+            .max_by_key(|&i| st.locals[i].len())?;
+        let c = st.locals[victim].pop_front().expect("victim deque non-empty");
+        st.staged -= c.len();
+        Some(c)
+    }
+
+    /// Assemble lanes from the buckets into `out`, highest-priority
+    /// bucket first, with the bounded-progress guard: after
+    /// `starvation_limit` consecutive draws that passed over a non-empty
+    /// lower bucket, the next draw is forced from the lowest-priority
+    /// non-empty bucket. The guard state persists across pops, so the
+    /// bound holds over the whole dispatch stream, not per chunk.
+    fn fill(&self, st: &mut Sched, chunk: usize, out: &mut Vec<Lane>) {
+        while out.len() < chunk && st.queued > 0 {
+            let b = Self::pick_bucket(st, self.steal.starvation_limit);
+            Self::draw(&mut st.buckets[b], self.policy, out);
+            st.queued -= 1;
+            if st.buckets[b + 1..].iter().any(|q| q.points > 0) {
+                st.starved += 1;
+            } else {
+                st.starved = 0;
             }
         }
     }
 
-    /// Close: pushes fail, pops drain then report `Closed`.
+    /// The bucket the next lane draws from (priority order, or the
+    /// starvation override). Caller guarantees `st.queued > 0`.
+    fn pick_bucket(st: &mut Sched, limit: usize) -> usize {
+        if st.starved >= limit {
+            st.starved = 0;
+            (0..Bucket::COUNT).rev().find(|&b| st.buckets[b].points > 0).expect("queued > 0")
+        } else {
+            (0..Bucket::COUNT).find(|&b| st.buckets[b].points > 0).expect("queued > 0")
+        }
+    }
+
+    /// Draw one lane from bucket `q` according to `policy`.
+    fn draw(q: &mut BucketQ, policy: Policy, out: &mut Vec<Lane>) {
+        let idx = match policy {
+            Policy::Fifo => 0,
+            Policy::RoundRobin => {
+                if q.cursor >= q.reqs.len() {
+                    q.cursor = 0;
+                }
+                q.cursor
+            }
+            Policy::ShortestFirst => q
+                .reqs
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, r)| r.remaining)
+                .map(|(i, _)| i)
+                .unwrap_or(0),
+        };
+        let exhausted = {
+            let req = &mut q.reqs[idx];
+            // One device lane off the front plan (plans are never
+            // empty: pushes filter them and drained plans pop here).
+            let plan = req.plans.front().expect("non-empty request queue");
+            let (alpha, weight) = plan.points[req.head];
+            let lane_idx = plan.base + req.head as u32;
+            out.push(Lane { state: plan.state.clone(), alpha, weight, idx: lane_idx });
+            req.head += 1;
+            req.remaining -= 1;
+            q.points -= 1;
+            if req.head == plan.len() {
+                req.plans.pop_front();
+                req.head = 0;
+            }
+            req.plans.is_empty()
+        };
+        if exhausted {
+            q.reqs.remove(idx);
+            if policy == Policy::RoundRobin && q.cursor > idx {
+                q.cursor -= 1;
+            }
+        } else if policy == Policy::RoundRobin {
+            q.cursor = (idx + 1) % q.reqs.len().max(1);
+        }
+    }
+
+    /// Close: pushes fail, pops drain (deques, buckets, then sibling
+    /// deques regardless of the stealing knob) and report `Closed`.
     pub fn close(&self) {
         let mut st = sync::lock(&self.state);
         st.closed = true;
@@ -301,12 +584,14 @@ impl LaneScheduler {
         self.not_full.notify_all();
     }
 
-    /// Gradient points (device lanes) currently queued across all plans.
+    /// Gradient points (device lanes) currently queued: bucket backlog
+    /// plus staged-but-undispatched chunks.
     pub fn len(&self) -> usize {
-        sync::lock(&self.state).total
+        let st = sync::lock(&self.state);
+        st.queued + st.staged
     }
 
-    /// Whether no points are queued.
+    /// Whether no points are queued or staged.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -317,10 +602,9 @@ mod tests {
     use super::*;
     use crate::coordinator::request::ResponseHandle;
     use crate::coordinator::state::RequestState;
+    use crate::exec::sync::atomic::{AtomicBool, AtomicUsize};
     use crate::ig::IgOptions;
     use crate::metrics::StageBreakdown;
-    use crate::exec::sync::atomic::{AtomicBool, AtomicUsize};
-    use std::sync::Arc;
 
     fn lanes(id: u64, n: usize) -> Vec<ChunkPlan> {
         let (tx, _h) = ResponseHandle::pair(id);
@@ -355,6 +639,23 @@ mod tests {
     fn pop_ids(s: &LaneScheduler, chunk: usize) -> Vec<u64> {
         match s.pop_chunk(chunk, Duration::from_millis(1)) {
             Popped::Chunk(c) => c.iter().map(|l| l.state.id).collect(),
+            Popped::Closed => panic!("closed"),
+        }
+    }
+
+    fn sched(feeders: usize, steal: StealConfig) -> LaneScheduler {
+        LaneScheduler::with_feeders(
+            Policy::Fifo,
+            1024,
+            feeders,
+            steal,
+            Arc::new(StealCounters::default()),
+        )
+    }
+
+    fn pop_idxs(s: &LaneScheduler, feeder: usize, chunk: usize) -> Vec<u32> {
+        match s.pop_chunk_for(feeder, chunk, Duration::ZERO) {
+            Popped::Chunk(c) => c.iter().map(|l| l.idx).collect(),
             Popped::Closed => panic!("closed"),
         }
     }
@@ -512,5 +813,82 @@ mod tests {
         s.push_request(2, lanes(2, 2)).unwrap();
         s.push_request(3, lanes(3, 2)).unwrap();
         assert_eq!(pop_ids(&s, 6), vec![1, 2, 3, 1, 2, 3]);
+    }
+
+    #[test]
+    fn budget_to_bucket_mapping() {
+        assert_eq!(Bucket::for_budget(LatencyBudget::Tight), Bucket::Tight);
+        assert_eq!(Bucket::for_budget(LatencyBudget::Standard), Bucket::Standard);
+        assert_eq!(Bucket::for_budget(LatencyBudget::Unbounded), Bucket::Standard);
+        assert_eq!(Bucket::for_budget(LatencyBudget::Thorough), Bucket::Thorough);
+        assert_eq!(Bucket::Refill.index(), 0, "refill must outrank every admission tier");
+    }
+
+    #[test]
+    fn tiered_buckets_drain_in_priority_order() {
+        let s = LaneScheduler::new(Policy::Fifo, 64);
+        // Pushed in reverse priority order on purpose.
+        s.push_tiered(4, LatencyBudget::Thorough, lanes(4, 2)).unwrap();
+        s.push_tiered(3, LatencyBudget::Standard, lanes(3, 2)).unwrap();
+        s.push_tiered(2, LatencyBudget::Tight, lanes(2, 2)).unwrap();
+        s.push_refill(1, lanes(1, 2)).unwrap();
+        assert_eq!(pop_ids(&s, 8), vec![1, 1, 2, 2, 3, 3, 4, 4]);
+    }
+
+    #[test]
+    fn thief_steals_oldest_staged_chunk() {
+        let s = sched(2, StealConfig { stealing: true, local_prefetch: 4, starvation_limit: 64 });
+        s.push_request(1, lanes(1, 12)).unwrap();
+        // Feeder 0's pull returns the first chunk and stages three more.
+        assert_eq!(pop_idxs(&s, 0, 3), vec![0, 1, 2]);
+        assert_eq!(s.len(), 9, "three whole chunks staged");
+        // Feeder 1 sees empty buckets and steals the OLDEST staged chunk.
+        assert_eq!(pop_idxs(&s, 1, 3), vec![3, 4, 5]);
+        assert_eq!(s.counters().steals.get(), 1);
+        // The owner keeps LIFO (newest-first) order over what remains.
+        assert_eq!(pop_idxs(&s, 0, 3), vec![9, 10, 11]);
+        assert_eq!(s.counters().local_pops.get(), 1);
+        assert_eq!(pop_idxs(&s, 1, 3), vec![6, 7, 8]);
+        assert!(s.is_empty());
+        assert_eq!(s.counters().chunks(), 4);
+        assert!((s.counters().steal_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn close_drains_sibling_staged_chunks_even_without_stealing() {
+        let s = sched(2, StealConfig { stealing: false, local_prefetch: 2, starvation_limit: 64 });
+        s.push_request(1, lanes(1, 6)).unwrap();
+        assert_eq!(pop_idxs(&s, 0, 3), vec![0, 1, 2]); // stages [3,4,5] locally
+        assert_eq!(s.len(), 3);
+        s.close();
+        // Feeder 1 must drain feeder 0's staged chunk before Closed.
+        assert_eq!(pop_idxs(&s, 1, 3), vec![3, 4, 5]);
+        assert!(matches!(s.pop_chunk_for(1, 3, Duration::ZERO), Popped::Closed));
+        assert!(matches!(s.pop_chunk_for(0, 3, Duration::ZERO), Popped::Closed));
+    }
+
+    #[test]
+    fn starvation_guard_bounds_priority_passes() {
+        let s = LaneScheduler::with_feeders(
+            Policy::Fifo,
+            1024,
+            1,
+            StealConfig { stealing: false, local_prefetch: 1, starvation_limit: 2 },
+            Arc::new(StealCounters::default()),
+        );
+        s.push_tiered(9, LatencyBudget::Thorough, lanes(9, 2)).unwrap();
+        for id in 1..=7 {
+            s.push_tiered(id, LatencyBudget::Tight, lanes(id, 1)).unwrap();
+        }
+        // Every 2 tight draws that pass over the waiting thorough bucket
+        // force one thorough draw: bounded progress, deterministically.
+        assert_eq!(pop_ids(&s, 9), vec![1, 2, 9, 3, 4, 9, 5, 6, 7]);
+    }
+
+    #[test]
+    fn steal_config_validates() {
+        assert!(StealConfig::default().validate().is_ok());
+        assert!(StealConfig { local_prefetch: 0, ..Default::default() }.validate().is_err());
+        assert!(StealConfig { starvation_limit: 0, ..Default::default() }.validate().is_err());
     }
 }

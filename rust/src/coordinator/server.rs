@@ -24,7 +24,9 @@ use crate::ig::probe::Probe;
 use crate::ig::schedule::cache::{baseline_id, CacheKey, ProbeMemo, ScheduleCache};
 use crate::ig::schedule::Schedule;
 use crate::ig::Scheme;
-use crate::metrics::{CacheCounters, Counter, Ewma, Histogram, StageBreakdown, Watermark};
+use crate::metrics::{
+    CacheCounters, Counter, Ewma, Histogram, StageBreakdown, StealCounters, Watermark,
+};
 use crate::runtime::Runtime;
 
 use super::batcher::BatchStats;
@@ -125,6 +127,10 @@ pub struct CoordinatorStats {
     /// Probe-schedule cache counters (shared with the cache when it is
     /// enabled; all zero otherwise).
     pub cache: Arc<CacheCounters>,
+    /// Lane-scheduler dispatch counters (shared with the tiered
+    /// work-stealing scheduler: bucket pops, local pops, steals,
+    /// parks, wakes — docs/TUNING.md §Serving knobs).
+    pub steal: Arc<StealCounters>,
     pub(crate) batch: Mutex<BatchStats>,
 }
 
@@ -150,6 +156,7 @@ impl CoordinatorStats {
             resident_peak: Watermark::new(),
             lane_peak: Watermark::new(),
             cache: Arc::new(CacheCounters::default()),
+            steal: Arc::new(StealCounters::default()),
             batch: Mutex::new(BatchStats::default()),
         }
     }
@@ -252,13 +259,18 @@ impl Coordinator {
             cfg.devices
         );
         let (req_tx, req_rx) = bounded::<Submission>(cfg.queue_capacity);
+        let stats = Arc::new(CoordinatorStats::new(cfg.feeders));
         // Lane scheduler sized for a few full requests per worker so
         // routers can run ahead of the devices without unbounded memory.
-        let lanes = Arc::new(LaneScheduler::new(
+        // One staging deque per feeder; dispatch counters shared with
+        // the stats snapshot.
+        let lanes = Arc::new(LaneScheduler::with_feeders(
             cfg.policy,
             cfg.chunk * 16 * (1 + cfg.workers),
+            cfg.feeders,
+            cfg.steal,
+            stats.steal.clone(),
         ));
-        let stats = Arc::new(CoordinatorStats::new(cfg.feeders));
         // The probe-schedule cache shares its counters with the stats
         // snapshot so hit/miss/evict rates are visible without touching
         // the cache's shards.
@@ -806,16 +818,12 @@ fn route_one(sub: Submission, queue_wait: Duration, ctx: &RouterCtx) -> Result<(
     // point per fused schedule entry, grouped into device-width chunk
     // plans: `Attribution.steps` reported back equals the number of
     // device-batch slots this request actually consumes, while the queue
-    // carries one entry per chunk instead of per point. Tight-budget
-    // requests are admitted at the FRONT of the lane queue so they
-    // overtake queued work (deadline-aware admission). -------------------
+    // carries one entry per chunk instead of per point. The push lands
+    // in the priority bucket matching the request's admission tier
+    // (tight → tight bucket, which overtakes queued standard/thorough
+    // work — deadline-aware admission; see `scheduler::Bucket`). -------
     let req_plans = ChunkPlan::build(&state, &lane_points, *chunk);
-    let pushed = if budget == LatencyBudget::Tight {
-        lanes.push_request_front(id, req_plans)
-    } else {
-        lanes.push_request(id, req_plans)
-    };
-    if let Err(e) = pushed {
+    if let Err(e) = lanes.push_tiered(id, budget, req_plans) {
         if state.fail(anyhow!("lane scheduler closed during fan-out: {e}")) {
             stats.failed.inc();
         }
@@ -936,7 +944,10 @@ pub fn dispatch_failover(
 /// Dispatch goes through [`dispatch_failover`]: a draining or dead home
 /// shard's chunks migrate to live siblings, and a dead home shard with
 /// no live sibling is respawned in-line — the same 0-ULP guarantee
-/// holds because execution shard never affects a lane's row.
+/// holds because execution shard never affects a lane's row. A *stolen*
+/// chunk simply dispatches with the thief's home shard, so the drain
+/// fence and failover ladder apply to it unchanged — including when the
+/// chunk's original owner's shard is dead (`tests/steal_determinism`).
 fn feeder_loop(
     scheduler: &LaneScheduler,
     backend: Arc<dyn GatherExec>,
@@ -947,7 +958,10 @@ fn feeder_loop(
     wait: Duration,
 ) {
     loop {
-        let lanes = match scheduler.pop_chunk(chunk, wait) {
+        // Pop as feeder `feeder`: own staged deque first (LIFO), then
+        // the shared tier buckets, then a steal from the deepest
+        // sibling deque (FIFO) — see `LaneScheduler::pop_chunk_for`.
+        let lanes = match scheduler.pop_chunk_for(feeder, chunk, wait) {
             Popped::Chunk(l) => l,
             Popped::Closed => return,
         };

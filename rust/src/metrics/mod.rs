@@ -130,6 +130,42 @@ impl CacheCounters {
     }
 }
 
+/// Dispatch-path counters for the tiered work-stealing lane scheduler
+/// ([`crate::coordinator::LaneScheduler`]). Shared by `Arc` between the
+/// scheduler and [`crate::coordinator::CoordinatorStats`] so serving
+/// telemetry reports steal pressure without reaching into the queue.
+#[derive(Default)]
+pub struct StealCounters {
+    /// Chunks assembled fresh from the shared priority buckets.
+    pub bucket_pops: Counter,
+    /// Chunks served LIFO from the popping feeder's own staged deque.
+    pub local_pops: Counter,
+    /// Chunks stolen FIFO from a sibling feeder's staged deque.
+    pub steals: Counter,
+    /// Waits entered by a feeder that found every source empty.
+    pub parks: Counter,
+    /// Parked-feeder wakeups (bucket activation or close).
+    pub wakes: Counter,
+}
+
+impl StealCounters {
+    /// Total chunks dispatched through any path.
+    pub fn chunks(&self) -> u64 {
+        self.bucket_pops.get() + self.local_pops.get() + self.steals.get()
+    }
+
+    /// `steals / chunks` — the fraction of dispatched chunks a feeder
+    /// took from a sibling's deque; 0 before any dispatch.
+    pub fn steal_rate(&self) -> f64 {
+        let total = self.chunks();
+        if total == 0 {
+            0.0
+        } else {
+            self.steals.get() as f64 / total as f64
+        }
+    }
+}
+
 /// RAII timer recording elapsed time into a [`Histogram`] on drop.
 pub struct Timer<'a> {
     hist: &'a Histogram,
@@ -325,5 +361,18 @@ mod tests {
         c.hits.inc();
         c.hits.inc();
         assert!((c.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn steal_counters_rate() {
+        let c = StealCounters::default();
+        assert_eq!(c.steal_rate(), 0.0, "no dispatches yet");
+        c.bucket_pops.inc();
+        c.local_pops.inc();
+        c.local_pops.inc();
+        assert_eq!(c.steal_rate(), 0.0);
+        c.steals.inc();
+        assert_eq!(c.chunks(), 4);
+        assert!((c.steal_rate() - 0.25).abs() < 1e-12);
     }
 }

@@ -19,6 +19,10 @@
 //! * `coordinator::scheduler::LaneScheduler` — shutdown: a closed-queue
 //!   refill settles its request exactly once; parked pushes are woken by
 //!   close, never leaked.
+//! * `coordinator::scheduler::LaneScheduler` — work stealing (ISSUE 8):
+//!   a bucket activation wakes a parked feeder (no lost wakeup), and a
+//!   steal racing close delivers every staged chunk exactly once —
+//!   never dropped, never double-executed.
 //! * `exec::fault::FaultInjector` + `coordinator::dispatch_failover` —
 //!   the elastic lifecycle handshake (ISSUE 7): the drain fence routes
 //!   chunks off a draining shard, and a respawn replay racing a fresh
@@ -356,6 +360,111 @@ fn scheduler_refill_vs_close_settles_exactly_once() {
         let v = resp.attribution.values[0];
         assert!(v == 3.0 || v == 3.5, "got {v}");
         closer.join().unwrap();
+    });
+    assert!(report.executions > 1, "explored {} schedules", report.executions);
+}
+
+// ---------------------------------------------------------------------
+// coordinator::scheduler::LaneScheduler — tiered buckets + stealing
+// ---------------------------------------------------------------------
+
+#[test]
+fn scheduler_bucket_activation_wakes_parked_feeder() {
+    // ISSUE 8 model a: a feeder may park on the empty queue before the
+    // router's push activates a bucket. In every schedule the push's
+    // notification must reach the parked feeder (a lost wakeup is a
+    // deadlock here — the modeled condvar never wakes spuriously), the
+    // lanes must all commit, and close must wake the re-parked feeder
+    // into Closed.
+    let report = explore(|| {
+        let s = Arc::new(LaneScheduler::new(Policy::Fifo, 64));
+        let (st, rx, plans) = mk_plans(2, 2, None);
+        let s2 = s.clone();
+        let feeder = shim::spawn(move || {
+            let mut committed = 0usize;
+            loop {
+                match s2.pop_chunk(2, Duration::ZERO) {
+                    Popped::Chunk(lanes) => {
+                        for l in &lanes {
+                            if l.state.add_lane(l.idx, &[1.0]) {
+                                assert!(l.state.finalize());
+                            }
+                        }
+                        committed += lanes.len();
+                    }
+                    Popped::Closed => return committed,
+                }
+            }
+        });
+        s.push_tiered(1, LatencyBudget::Tight, plans).unwrap();
+        s.close();
+        assert_eq!(feeder.join().unwrap(), 2, "both lanes pop exactly once");
+        assert_eq!(st.in_flight.load(Ordering::Acquire), 0);
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.attribution.values[0], 2.0, "both lanes committed");
+    });
+    assert!(report.executions > 1, "explored {} schedules", report.executions);
+}
+
+#[test]
+fn scheduler_steal_vs_close_delivers_staged_chunk_exactly_once() {
+    // ISSUE 8 model b: feeder 0's bucket pull stages a surplus chunk in
+    // its local deque; a thief (feeder 1) races the coordinator's close
+    // for it. In every interleaving the staged chunk is delivered
+    // exactly once — stolen live, or stolen by the close-drain path —
+    // never dropped (the request would underflow its countdown), never
+    // double-executed (add_lane would see a duplicate commit), and the
+    // thief parked after its steal must be woken by close into Closed.
+    let report = explore(|| {
+        let steal = nuig::coordinator::scheduler::StealConfig {
+            stealing: true,
+            local_prefetch: 2,
+            starvation_limit: 64,
+        };
+        let counters = Arc::new(nuig::metrics::StealCounters::default());
+        let s = Arc::new(LaneScheduler::with_feeders(Policy::Fifo, 64, 2, steal, counters));
+        let (st, rx, plans) = mk_plans(4, 2, None);
+        s.push_request(1, plans).unwrap();
+
+        // Feeder 0's bucket pull: returns lanes 0-1, stages lanes 2-3.
+        let own = match s.pop_chunk_for(0, 2, Duration::ZERO) {
+            Popped::Chunk(c) => c,
+            Popped::Closed => panic!("queued lanes must pop"),
+        };
+        assert_eq!(own.len(), 2);
+
+        let s2 = s.clone();
+        let thief = shim::spawn(move || {
+            let mut got = 0usize;
+            loop {
+                match s2.pop_chunk_for(1, 2, Duration::ZERO) {
+                    Popped::Chunk(lanes) => {
+                        for l in &lanes {
+                            if l.state.add_lane(l.idx, &[1.0]) {
+                                assert!(l.state.finalize());
+                            }
+                        }
+                        got += lanes.len();
+                    }
+                    Popped::Closed => return got,
+                }
+            }
+        });
+        let s3 = s.clone();
+        let closer = shim::spawn(move || s3.close());
+
+        for l in &own {
+            if l.state.add_lane(l.idx, &[1.0]) {
+                assert!(l.state.finalize());
+            }
+        }
+        assert_eq!(thief.join().unwrap(), 2, "the staged chunk is stolen exactly once");
+        closer.join().unwrap();
+        assert!(matches!(s.pop_chunk_for(0, 2, Duration::ZERO), Popped::Closed));
+        assert_eq!(s.counters().steals.get(), 1, "delivery path was a steal");
+        assert_eq!(st.in_flight.load(Ordering::Acquire), 0);
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.attribution.values[0], 4.0, "all four lanes, each exactly once");
     });
     assert!(report.executions > 1, "explored {} schedules", report.executions);
 }

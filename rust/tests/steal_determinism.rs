@@ -1,0 +1,314 @@
+//! Forced-steal determinism: the work-stealing acceptance suite.
+//!
+//! The tiered scheduler lets an idle feeder steal staged chunks from a
+//! sibling's deque (`coordinator::scheduler`). Stealing is only legal
+//! because the ordered-commit accumulator folds lane rows in lane-index
+//! order no matter which feeder executed them — docs/INVARIANTS.md §I10.
+//! This suite forces steals to actually happen and asserts the contract:
+//!
+//! * seeded, step-indexed [`FaultAction::Stall`] events slow shards at
+//!   known gather-call ordinals so feeders drift and steal; attributions
+//!   must stay **bit-identical** (0 ULP) to the unfaulted single-feeder
+//!   reference at feeder counts {1, 2, 4, 8};
+//! * a direct-drive script (no coordinator threads) makes the steal
+//!   deterministic — the thief provably pops a sibling's staged chunk —
+//!   and the committed attribution still cannot move a bit;
+//! * a stolen chunk whose thief's home shard is dead rides the PR 7
+//!   failover ladder unchanged: rerouted, replayed, bit-identical.
+//!
+//! Seed coverage scales with `NUIG_CHAOS_SEEDS` (default 4 in tier-1;
+//! the nightly sweep raises it).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use nuig::config::CoordinatorConfig;
+use nuig::coordinator::request::ExplainResponse;
+use nuig::coordinator::scheduler::{LaneScheduler, Policy, Popped, StealConfig};
+use nuig::coordinator::state::{Accum, ChunkPlan, RequestState};
+use nuig::coordinator::{dispatch_failover, Coordinator, ExplainRequest, LatencyBudget};
+use nuig::exec::channel::{bounded, Receiver};
+use nuig::exec::gather::{GatherExec, GatherLane};
+use nuig::exec::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use nuig::exec::sync::Mutex;
+use nuig::exec::{FaultAction, FaultEvent, FaultInjector, FaultPlan};
+use nuig::ig::{AnalyticExec, AnalyticModel, IgOptions, Scheme};
+use nuig::metrics::{StageBreakdown, StealCounters};
+
+const F: usize = 32;
+const C: usize = 4;
+const N: usize = 12;
+
+fn model() -> AnalyticModel {
+    AnalyticModel::new(F, C, 0xFEED, 12.0)
+}
+
+fn image(i: usize) -> Vec<f32> {
+    (0..F).map(|k| (((i * 31 + k * 7) % 64) as f32) / 64.0).collect()
+}
+
+/// The chaos suite's deterministic mixed workload: both schemes, several
+/// m levels, and a tier slice so every bucket sees traffic while stalls
+/// skew the feeders.
+fn workload(n: usize) -> Vec<ExplainRequest> {
+    (0..n)
+        .map(|i| {
+            let scheme =
+                if i % 4 == 3 { Scheme::Uniform } else { Scheme::NonUniform { n_int: 4 } };
+            let m = [8, 12, 16, 24][i % 4];
+            let req =
+                ExplainRequest::new(image(i), IgOptions { scheme, m, ..Default::default() });
+            match i % 3 {
+                0 if scheme != Scheme::Uniform => req.with_budget(LatencyBudget::Standard),
+                1 => req.with_budget(LatencyBudget::Thorough),
+                _ => req,
+            }
+        })
+        .collect()
+}
+
+/// Steal-heavy serving config: a deep prefetch keeps sibling deques full
+/// so a stalled shard's feeder leaves plenty to steal.
+fn cfg(feeders: usize) -> CoordinatorConfig {
+    CoordinatorConfig {
+        feeders,
+        devices: feeders,
+        workers: 2,
+        steal: StealConfig { stealing: true, local_prefetch: 4, starvation_limit: 64 },
+        ..Default::default()
+    }
+}
+
+/// Run `n` workload requests over `feeders` feeders with `plan` armed at
+/// the gather seam, asserting the universal post-conditions (exactly-once
+/// settlement, drained resident pool) and returning per-request bits.
+fn run_stalled(feeders: usize, n: usize, plan: &FaultPlan) -> Vec<Vec<u64>> {
+    let inner = Arc::new(AnalyticExec::with_shards(model(), feeders));
+    let injector = Arc::new(FaultInjector::new(inner, plan).unwrap());
+    let coord = Coordinator::start_with_backend(injector.clone(), cfg(feeders)).unwrap();
+    let handles: Vec<_> =
+        workload(n).into_iter().map(|r| coord.submit(r)).collect::<Result<_, _>>().unwrap();
+    let bits: Vec<Vec<u64>> = handles
+        .into_iter()
+        .enumerate()
+        .map(|(i, h)| {
+            let resp = h.wait().unwrap_or_else(|e| panic!("request {i} failed under stalls: {e}"));
+            resp.attribution.values.iter().map(|v| v.to_bits()).collect()
+        })
+        .collect();
+    assert_eq!(coord.stats().failed.get(), 0, "stalls are outcome-neutral");
+    assert_eq!(coord.stats().completed.get(), n as u64);
+    assert_eq!(coord.in_flight(), 0);
+    coord.shutdown();
+    assert_eq!(injector.resident_len(), 0, "resident pool drains after shutdown");
+    bits
+}
+
+/// Stall-only plan: slow `shards` round-robin at fixed gather ordinals.
+fn stall_plan(shards: usize, ordinals: &[u64], spins: u32) -> FaultPlan {
+    FaultPlan::new(
+        ordinals
+            .iter()
+            .enumerate()
+            .map(|(i, &at)| FaultEvent {
+                shard: i % shards,
+                at,
+                action: FaultAction::Stall { spins },
+            })
+            .collect(),
+    )
+}
+
+#[test]
+fn forced_stalls_cannot_move_bits_at_any_feeder_count() {
+    // Known-ordinal stalls skew shard pacing so idle feeders steal from
+    // the slowed shard's deque. Whatever interleaving results, every
+    // attribution must match the unfaulted single-feeder reference
+    // bit for bit, at feeders {1, 2, 4, 8}.
+    let reference = run_stalled(1, N, &FaultPlan::new(vec![]));
+    for feeders in [1usize, 2, 4, 8] {
+        let plan = stall_plan(feeders, &[0, 2, 5, 9, 14], 4096);
+        let bits = run_stalled(feeders, N, &plan);
+        assert_eq!(bits, reference, "feeders {feeders}: stall-induced stealing moved bits");
+    }
+}
+
+#[test]
+fn seeded_stall_sweep_is_bit_identical() {
+    // The seed sweep: stall ordinals, targets, and depths derived from a
+    // counter-keyed LCG so every scenario replays from its seed alone.
+    // Tier-1 runs a handful of seeds; nightly sets NUIG_CHAOS_SEEDS
+    // higher.
+    let seeds: u64 = std::env::var("NUIG_CHAOS_SEEDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    let reference = run_stalled(1, N, &FaultPlan::new(vec![]));
+    for seed in 0..seeds {
+        let mut state = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(0xD1B5);
+        let mut rand = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            state >> 33
+        };
+        let mut at = 0u64;
+        let events: Vec<FaultEvent> = (0..8)
+            .map(|_| {
+                at += 1 + rand() % 4;
+                FaultEvent {
+                    shard: (rand() % 4) as usize,
+                    at,
+                    action: FaultAction::Stall { spins: (512 + rand() % 4096) as u32 },
+                }
+            })
+            .collect();
+        let bits = run_stalled(4, N, &FaultPlan::with_seed(seed, events));
+        assert_eq!(bits, reference, "seed {seed}: seeded stalls moved bits");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Direct drive: deterministic steals, no coordinator threads.
+// ---------------------------------------------------------------------
+
+type ReplyRx = Receiver<anyhow::Result<ExplainResponse>>;
+
+/// A fixed-round request whose lanes gather against resident slot `id`
+/// (registered by the caller on the injector), mirroring the request
+/// state the router builds at admission.
+fn mk_request(
+    id: u64,
+    n_lanes: usize,
+    chunk: usize,
+) -> (Arc<RequestState>, ReplyRx, Vec<ChunkPlan>) {
+    let (tx, rx) = bounded(1);
+    let st = Arc::new(RequestState {
+        id,
+        image: Arc::new(image(id as usize)),
+        baseline: Arc::new(vec![0.0; F]),
+        target: (id as usize) % C,
+        opts: IgOptions::default(),
+        budget: LatencyBudget::Unbounded,
+        acc: Mutex::new(Accum::new(F)),
+        remaining: AtomicUsize::new(n_lanes),
+        steps: n_lanes,
+        probe_passes: 0,
+        endpoint_gap: 0.0,
+        breakdown: Mutex::new(StageBreakdown::default()),
+        submitted_at: Instant::now(),
+        queue_wait: Duration::ZERO,
+        reply: tx,
+        completed: AtomicBool::new(false),
+        in_flight: Arc::new(AtomicUsize::new(1)),
+        anytime: None,
+        resident: None,
+    });
+    let points: Vec<(f32, f32)> = (0..n_lanes)
+        .map(|k| ((k + 1) as f32 / n_lanes as f32, 1.0 / n_lanes as f32))
+        .collect();
+    let plans = ChunkPlan::build(&st, &points, chunk);
+    (st, rx, plans)
+}
+
+/// Drive the closed scheduler with an explicit per-pop feeder script,
+/// dispatching every popped chunk through the failover ladder with the
+/// popping feeder's index as home shard — exactly what the feeder loop
+/// does, minus the threads. Returns per-request attribution bits.
+fn drive_script(
+    plan: &FaultPlan,
+    feeders: usize,
+    steal: StealConfig,
+    script: &[usize],
+) -> DriveOut {
+    let inner = Arc::new(AnalyticExec::with_shards(model(), 2));
+    let inj = FaultInjector::new(inner, plan).unwrap();
+    let counters = Arc::new(StealCounters::default());
+    let s = LaneScheduler::with_feeders(Policy::Fifo, 256, feeders, steal, counters.clone());
+    let mut replies = Vec::new();
+    for id in [1u64, 2] {
+        let (st, rx, plans) = mk_request(id, 12, 3);
+        inj.register_request(id, &st.image, &st.baseline).unwrap();
+        s.push_request(id, plans).unwrap();
+        replies.push((st, rx));
+    }
+    s.close();
+    let mut rerouted = 0usize;
+    for &feeder in script {
+        let lanes = match s.pop_chunk_for(feeder, 3, Duration::ZERO) {
+            Popped::Chunk(l) => l,
+            Popped::Closed => continue,
+        };
+        let recs: Vec<GatherLane> = lanes
+            .iter()
+            .map(|l| GatherLane {
+                slot: l.state.id,
+                alpha: l.alpha,
+                weight: l.weight,
+                target: l.state.target,
+            })
+            .collect();
+        let (executed, _respawned, out) = dispatch_failover(&inj, feeder, &recs).unwrap();
+        if executed != feeder {
+            rerouted += 1;
+        }
+        for (k, lane) in lanes.iter().enumerate() {
+            if lane.state.add_lane(lane.idx, out.row(k)) {
+                assert!(lane.state.finalize(), "each request settles exactly once");
+            }
+        }
+    }
+    assert!(matches!(s.pop_chunk_for(0, 3, Duration::ZERO), Popped::Closed));
+    let bits = replies
+        .into_iter()
+        .map(|(_st, rx)| {
+            let resp = rx.recv().unwrap().expect("direct drive settles Ok");
+            resp.attribution.values.iter().map(|v| v.to_bits()).collect::<Vec<u64>>()
+        })
+        .collect();
+    DriveOut { bits, steals: s.counters().steals.get(), rerouted }
+}
+
+struct DriveOut {
+    bits: Vec<Vec<u64>>,
+    steals: u64,
+    rerouted: usize,
+}
+
+/// With prefetch 4 over 8 chunks: feeder 0's first pull stages 3 chunks,
+/// feeder 1's first pull stages the other 3; feeder 1 then drains its own
+/// deque LIFO and — buckets and deque empty — must steal from feeder 0's
+/// deque. The trailing pops drain the rest and absorb Closed.
+const STEAL_SCRIPT: &[usize] = &[0, 1, 1, 1, 1, 1, 0, 0, 0, 1];
+
+fn steal_heavy() -> StealConfig {
+    StealConfig { stealing: true, local_prefetch: 4, starvation_limit: 64 }
+}
+
+#[test]
+fn forced_steal_direct_drive_is_bit_identical() {
+    // Reference: one feeder, staging disabled — the plain sequential
+    // drain. Steal run: the scripted two-feeder drive above, where the
+    // thief provably pops chunks feeder 0 staged. 0 ULP between them.
+    let no_steal = StealConfig { stealing: false, local_prefetch: 1, starvation_limit: 64 };
+    let reference = drive_script(&FaultPlan::new(vec![]), 1, no_steal, &[0; 10]);
+    assert_eq!(reference.steals, 0, "single-feeder reference cannot steal");
+    let stolen = drive_script(&FaultPlan::new(vec![]), 2, steal_heavy(), STEAL_SCRIPT);
+    assert!(stolen.steals >= 1, "the script must force at least one steal");
+    assert_eq!(stolen.bits, reference.bits, "a stolen chunk moved bits");
+}
+
+#[test]
+fn stolen_chunk_survives_dead_home_shard() {
+    // Same scripted steals, but the thief's home shard (1) is killed on
+    // its first gather call and held down forever: every chunk feeder 1
+    // dispatches — stolen ones included — rides the failover ladder to
+    // shard 0. Nothing fails, and the bits still cannot move (§I7 + §I10
+    // compose).
+    let no_steal = StealConfig { stealing: false, local_prefetch: 1, starvation_limit: 64 };
+    let reference = drive_script(&FaultPlan::new(vec![]), 1, no_steal, &[0; 10]);
+    let plan = FaultPlan::with_seed(1, FaultPlan::kill_forever(1, 0));
+    let out = drive_script(&plan, 2, steal_heavy(), STEAL_SCRIPT);
+    assert!(out.steals >= 1, "the script must force at least one steal");
+    assert!(out.rerouted >= 1, "the dead home shard must reroute the thief's chunks");
+    assert_eq!(out.bits, reference.bits, "failover of a stolen chunk moved bits");
+}

@@ -1,0 +1,173 @@
+//! Tier-starvation regression: the bounded-progress guard.
+//!
+//! Strict priority buckets (refill → tight → standard → thorough) would
+//! let a sustained tight-tier stream starve thorough-tier requests
+//! forever. The scheduler's guard (`StealConfig::starvation_limit`)
+//! bounds the damage: after `limit` consecutive lane draws that passed
+//! over a non-empty lower-priority bucket, the next draw is forced from
+//! the **lowest**-priority non-empty bucket. These tests pin the
+//! resulting contract (docs/INVARIANTS.md §I10):
+//!
+//! * under a sustained tight stream, a thorough request's `T` lanes all
+//!   dispatch within `T × (limit + 1)` drawn lanes — never unbounded;
+//! * the forced draw serves the *most* starved bucket first (thorough
+//!   before standard);
+//! * the guard state persists across pops, so the bound holds over the
+//!   whole dispatch stream, not per chunk.
+//!
+//! All tests drive the scheduler directly and deterministically — one
+//! feeder, staging disabled — so the expected dispatch sequence is exact.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use nuig::coordinator::request::{ExplainResponse, LatencyBudget};
+use nuig::coordinator::scheduler::{LaneScheduler, Policy, Popped, StealConfig};
+use nuig::coordinator::state::{Accum, ChunkPlan, RequestState};
+use nuig::exec::channel::{bounded, Receiver};
+use nuig::exec::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use nuig::exec::sync::Mutex;
+use nuig::ig::IgOptions;
+use nuig::metrics::{StageBreakdown, StealCounters};
+
+type ReplyRx = Receiver<anyhow::Result<ExplainResponse>>;
+
+fn mk_request(id: u64, n_lanes: usize) -> (Arc<RequestState>, ReplyRx, Vec<ChunkPlan>) {
+    let (tx, rx) = bounded(1);
+    let st = Arc::new(RequestState {
+        id,
+        image: Arc::new(vec![1.0]),
+        baseline: Arc::new(vec![0.0]),
+        target: 0,
+        opts: IgOptions::default(),
+        budget: LatencyBudget::Unbounded,
+        acc: Mutex::new(Accum::new(1)),
+        remaining: AtomicUsize::new(n_lanes),
+        steps: n_lanes,
+        probe_passes: 0,
+        endpoint_gap: 0.0,
+        breakdown: Mutex::new(StageBreakdown::default()),
+        submitted_at: Instant::now(),
+        queue_wait: Duration::ZERO,
+        reply: tx,
+        completed: AtomicBool::new(false),
+        in_flight: Arc::new(AtomicUsize::new(1)),
+        anytime: None,
+        resident: None,
+    });
+    let points: Vec<(f32, f32)> = (0..n_lanes).map(|k| (k as f32 / n_lanes as f32, 1.0)).collect();
+    let plans = ChunkPlan::build(&st, &points, n_lanes);
+    (st, rx, plans)
+}
+
+/// A single-feeder scheduler with staging disabled (prefetch 1), so
+/// every popped lane comes straight out of the buckets and the guard's
+/// dispatch sequence is exact.
+fn sched(limit: usize) -> LaneScheduler {
+    let steal = StealConfig { stealing: false, local_prefetch: 1, starvation_limit: limit };
+    LaneScheduler::with_feeders(Policy::Fifo, 1024, 1, steal, Arc::new(StealCounters::default()))
+}
+
+/// Pop one lane and return the owning request's id.
+fn pop_id(s: &LaneScheduler) -> u64 {
+    match s.pop_chunk(1, Duration::ZERO) {
+        Popped::Chunk(c) => {
+            assert_eq!(c.len(), 1);
+            c[0].state.id
+        }
+        Popped::Closed => panic!("queue closed mid-test"),
+    }
+}
+
+const THOROUGH_ID: u64 = 1_000;
+const STANDARD_ID: u64 = 2_000;
+
+#[test]
+fn sustained_tight_load_cannot_starve_thorough() {
+    // A thorough request of 8 lanes, then an adversarial stream: one
+    // fresh tight lane pushed before every pop, so the tight bucket is
+    // never empty. With limit 4 the guard forces every 5th draw to the
+    // thorough bucket — the dispatch sequence is exactly periodic and
+    // the request drains in 8 × (4 + 1) = 40 draws.
+    let s = sched(4);
+    let mut keep = Vec::new();
+    let (st, rx, plans) = mk_request(THOROUGH_ID, 8);
+    s.push_tiered(THOROUGH_ID, LatencyBudget::Thorough, plans).unwrap();
+    keep.push((st, rx));
+    let mut thorough_at = Vec::new();
+    for i in 0..40u64 {
+        let (st, rx, plans) = mk_request(i, 1);
+        s.push_tiered(i, LatencyBudget::Tight, plans).unwrap();
+        keep.push((st, rx));
+        if pop_id(&s) == THOROUGH_ID {
+            thorough_at.push(i);
+        }
+    }
+    assert_eq!(
+        thorough_at,
+        vec![4, 9, 14, 19, 24, 29, 34, 39],
+        "the guard dispatches exactly one thorough lane per limit+1 draws"
+    );
+    assert_eq!(s.len(), 32, "the tight backlog is what remains");
+}
+
+#[test]
+fn guard_serves_the_lowest_bucket_first() {
+    // Standard AND thorough both waiting behind the tight stream: the
+    // forced draw must go to the *lowest*-priority non-empty bucket —
+    // thorough drains before standard sees a single forced lane, because
+    // thorough is the bucket the plain priority order starves hardest.
+    let s = sched(2);
+    let mut keep = Vec::new();
+    let (st, rx, plans) = mk_request(STANDARD_ID, 2);
+    s.push_tiered(STANDARD_ID, LatencyBudget::Standard, plans).unwrap();
+    keep.push((st, rx));
+    let (st, rx, plans) = mk_request(THOROUGH_ID, 2);
+    s.push_tiered(THOROUGH_ID, LatencyBudget::Thorough, plans).unwrap();
+    keep.push((st, rx));
+    let mut forced = Vec::new();
+    for i in 0..12u64 {
+        let (st, rx, plans) = mk_request(i, 1);
+        s.push_tiered(i, LatencyBudget::Tight, plans).unwrap();
+        keep.push((st, rx));
+        let id = pop_id(&s);
+        if id == THOROUGH_ID || id == STANDARD_ID {
+            forced.push(id);
+        }
+    }
+    assert_eq!(
+        forced,
+        vec![THOROUGH_ID, THOROUGH_ID, STANDARD_ID, STANDARD_ID],
+        "forced draws serve thorough to empty before touching standard"
+    );
+}
+
+#[test]
+fn progress_bound_scales_with_the_limit() {
+    // The advertised bound, not the exact sequence: for several
+    // (limit, lanes) pairs, a thorough request fully dispatches within
+    // lanes × (limit + 1) draws of adversarial tight load — and the
+    // guard state carries across pops (the stream here never aligns
+    // with a chunk boundary).
+    for (limit, lanes) in [(1usize, 3usize), (3, 5), (8, 2), (64, 1)] {
+        let s = sched(limit);
+        let mut keep = Vec::new();
+        let (st, rx, plans) = mk_request(THOROUGH_ID, lanes);
+        s.push_tiered(THOROUGH_ID, LatencyBudget::Thorough, plans).unwrap();
+        keep.push((st, rx));
+        let bound = lanes * (limit + 1);
+        let mut seen = 0usize;
+        for i in 0..bound as u64 {
+            let (st, rx, plans) = mk_request(i, 1);
+            s.push_tiered(i, LatencyBudget::Tight, plans).unwrap();
+            keep.push((st, rx));
+            if pop_id(&s) == THOROUGH_ID {
+                seen += 1;
+            }
+        }
+        assert_eq!(
+            seen, lanes,
+            "limit {limit}: {lanes} thorough lanes must dispatch within {bound} draws"
+        );
+    }
+}

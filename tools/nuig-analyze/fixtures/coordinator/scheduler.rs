@@ -1,0 +1,41 @@
+//! Tiered-scheduler violations: `coordinator/scheduler.rs` sits in the
+//! serving scope for `lock-unwrap-serving`, hash-order iteration is
+//! banned everywhere, and — since the work-stealing scheduler — the
+//! `wallclock-kernel` lint covers this path too, so pop-deadline reads
+//! must each carry an explicit waiver. Never compiled — analyzer input
+//! only.
+
+use std::collections::HashMap;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+pub struct TieredQueue {
+    buckets: Mutex<Vec<Vec<u64>>>,
+    not_empty: Condvar,
+    staged_by_feeder: HashMap<usize, Vec<u64>>,
+}
+
+impl TieredQueue {
+    pub fn pop_deadline(&self, wait: Duration) -> Instant {
+        Instant::now() + wait //~ wallclock-kernel
+    }
+
+    pub fn waived_deadline(&self, wait: Duration) -> Instant {
+        // nuig:allow(wallclock-kernel): pop-deadline timeout; never feeds attribution math
+        Instant::now() + wait
+    }
+
+    pub fn park(&self) {
+        let g = self.buckets.lock().unwrap(); //~ lock-unwrap-serving
+        let _g = self.not_empty.wait(g).expect("scheduler poisoned"); //~ lock-unwrap-serving
+    }
+
+    pub fn steal_victim_order(&self) -> Vec<usize> {
+        // Victim selection must be index-deterministic, never hash-order.
+        let mut victims = Vec::new();
+        for (feeder, _) in self.staged_by_feeder.iter() { //~ hash-iter
+            victims.push(*feeder);
+        }
+        victims
+    }
+}
