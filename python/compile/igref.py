@@ -17,8 +17,9 @@ and the test suite.
 from __future__ import annotations
 
 import math
+import struct
 from dataclasses import dataclass
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -507,6 +508,274 @@ def shed_retry_after_ms(resident_len: int, lane_depth: int,
     overload factor, in integer milliseconds."""
     return int(retry_after_ms) * shed_overload_factor(
         resident_len, lane_depth, resident_high_water, lane_high_water)
+
+
+# --------------------------------------------------------------------------
+# Serving front-end wire protocol
+# (mirrors rust/src/coordinator/frontend/framing.rs).
+#
+# Every frame is ``[len: u32 LE][kind: u8][payload]`` where ``len`` counts
+# the kind byte plus the payload; integers are little-endian and floats
+# are IEEE-754 bit patterns, so encoding is a pure byte-level function of
+# the frame. tests/test_frontend_parity.py pins these mirrors against the
+# golden hex vectors shared with framing.rs::tests.
+# --------------------------------------------------------------------------
+
+#: Frame kinds — mirror ``framing::KIND_*``.
+KIND_REQUEST = 1
+KIND_ROUND = 2
+KIND_FINAL = 3
+KIND_REJECT = 4
+KIND_ERROR = 5
+
+#: Rejection reasons — mirror ``framing::REJECT_*``.
+REJECT_OVERLOAD = 0
+REJECT_DEADLINE = 1
+REJECT_BACKLOG = 2
+REJECT_DRAINING = 3
+
+#: Smallest legal frame-size cap — mirrors ``framing::MIN_FRAME_CAP``.
+MIN_FRAME_CAP = 64
+
+
+def _wire_f32s(values: Sequence[float]) -> bytes:
+    """A counted f32 run: ``[n: u32][n × f32]`` (``framing::put_f32s``)."""
+    arr = np.asarray(values, dtype="<f4")
+    return struct.pack("<I", len(arr)) + arr.tobytes()
+
+
+def _wire_f64s(values: Sequence[float]) -> bytes:
+    """A counted f64 run: ``[n: u32][n × f64]`` (``framing::put_f64s``)."""
+    arr = np.asarray(values, dtype="<f8")
+    return struct.pack("<I", len(arr)) + arr.tobytes()
+
+
+def _wire_frame(body: bytes) -> bytes:
+    """Prefix one frame body with its u32 LE length."""
+    return struct.pack("<I", len(body)) + body
+
+
+def encode_request_frame(tag: int, deadline_ms: int = 0, budget: int = 0,
+                         target: int = -1, m: int = 0,
+                         anytime: Optional[Tuple[float, int]] = None,
+                         image: Sequence[float] = (),
+                         baseline: Optional[Sequence[float]] = None) -> bytes:
+    """Mirror of ``framing::encode`` for ``Frame::Request``: the client's
+    submission — correlation tag, per-request deadline (0 = the
+    front-end's default), ``LatencyBudget`` index, target class (-1 =
+    predict), initial m (0 = engine default), optional anytime policy
+    ``(delta_target, max_m)``, the flat image, optional baseline.
+    An absent anytime policy is encoded as flag 0 with zeroed fields,
+    exactly as the Rust side does."""
+    delta, max_m = anytime if anytime is not None else (0.0, 0)
+    body = struct.pack("<BQQBqIBdQ", KIND_REQUEST, tag, deadline_ms, budget,
+                       target, m, 1 if anytime is not None else 0, delta,
+                       max_m)
+    body += _wire_f32s(image)
+    if baseline is not None:
+        body += struct.pack("<B", 1) + _wire_f32s(baseline)
+    else:
+        body += struct.pack("<B", 0)
+    return _wire_frame(body)
+
+
+def encode_round_frame(tag: int, round_no: int, delta: float,
+                       values: Sequence[float]) -> bytes:
+    """Mirror of ``framing::encode`` for ``Frame::Round``: one converged
+    anytime round streamed mid-request — the values are bit-identical to
+    a standalone run stopped at that round (I12)."""
+    return _wire_frame(struct.pack("<BQId", KIND_ROUND, tag, round_no, delta)
+                       + _wire_f64s(values))
+
+
+def encode_final_frame(tag: int, partial: bool, rounds: int, steps: int,
+                       delta: float, values: Sequence[float]) -> bytes:
+    """Mirror of ``framing::encode`` for ``Frame::Final``: the settled
+    attribution; ``partial`` means the deadline cut refinement short and
+    the values are the last converged round."""
+    return _wire_frame(struct.pack("<BQBIQd", KIND_FINAL, tag,
+                                   1 if partial else 0, rounds, steps, delta)
+                       + _wire_f64s(values))
+
+
+def encode_reject_frame(tag: int, reason: int, retry_after_ms: int,
+                        resident: int, lane_depth: int) -> bytes:
+    """Mirror of ``framing::encode`` for ``Frame::Reject``: a typed
+    rejection carrying the integer-deterministic ``retry_after`` hint
+    (:func:`shed_retry_after_ms`) and the gauge readings it was computed
+    from."""
+    return _wire_frame(struct.pack("<BQBQQQ", KIND_REJECT, tag, reason,
+                                   retry_after_ms, resident, lane_depth))
+
+
+def encode_error_frame(tag: int, message: str) -> bytes:
+    """Mirror of ``framing::encode`` for ``Frame::Error``: failure text
+    (UTF-8, u32-counted bytes) for anything without a typed form."""
+    raw = message.encode("utf-8")
+    return _wire_frame(struct.pack("<BQI", KIND_ERROR, tag, len(raw)) + raw)
+
+
+class _WireCursor:
+    """Mirror of ``framing::Cur``: a strict byte cursor over one frame
+    body — truncation and trailing bytes are protocol errors."""
+
+    def __init__(self, body: bytes):
+        self.b = body
+        self.off = 0
+
+    def take(self, n: int) -> bytes:
+        end = self.off + n
+        if end > len(self.b):
+            raise ValueError("malformed frame: frame truncated")
+        out = self.b[self.off:end]
+        self.off = end
+        return out
+
+    def unpack(self, fmt: str):
+        return struct.unpack(fmt, self.take(struct.calcsize(fmt)))
+
+    def f32s(self) -> np.ndarray:
+        (n,) = self.unpack("<I")
+        return np.frombuffer(self.take(4 * n), dtype="<f4").copy()
+
+    def f64s(self) -> np.ndarray:
+        (n,) = self.unpack("<I")
+        return np.frombuffer(self.take(8 * n), dtype="<f8").copy()
+
+    def done(self) -> None:
+        if self.off != len(self.b):
+            raise ValueError("malformed frame: trailing bytes after frame payload")
+
+
+def decode_frame(body: bytes) -> dict:
+    """Mirror of ``framing::decode``: one frame body (kind byte +
+    payload, length prefix already stripped) to a dict with a ``kind``
+    key plus the frame's fields. Strict, like the Rust side: truncated
+    payloads, trailing bytes, unknown kinds, and non-UTF-8 error text
+    all raise ``ValueError``."""
+    c = _WireCursor(body)
+    (kind,) = c.unpack("<B")
+    if kind == KIND_REQUEST:
+        tag, deadline_ms, budget, target, m, has_any, delta, max_m = \
+            c.unpack("<QQBqIBdQ")
+        out = {"kind": kind, "tag": tag, "deadline_ms": deadline_ms,
+               "budget": budget, "target": target, "m": m,
+               "anytime": (delta, max_m) if has_any else None,
+               "image": c.f32s()}
+        (has_baseline,) = c.unpack("<B")
+        out["baseline"] = c.f32s() if has_baseline else None
+    elif kind == KIND_ROUND:
+        tag, round_no, delta = c.unpack("<QId")
+        out = {"kind": kind, "tag": tag, "round": round_no, "delta": delta,
+               "values": c.f64s()}
+    elif kind == KIND_FINAL:
+        tag, partial, rounds, steps, delta = c.unpack("<QBIQd")
+        out = {"kind": kind, "tag": tag, "partial": bool(partial),
+               "rounds": rounds, "steps": steps, "delta": delta,
+               "values": c.f64s()}
+    elif kind == KIND_REJECT:
+        tag, reason, retry_after_ms, resident, lane_depth = c.unpack("<QBQQQ")
+        out = {"kind": kind, "tag": tag, "reason": reason,
+               "retry_after_ms": retry_after_ms, "resident": resident,
+               "lane_depth": lane_depth}
+    elif kind == KIND_ERROR:
+        tag, msg_len = c.unpack("<QI")
+        try:
+            message = c.take(msg_len).decode("utf-8")
+        except UnicodeDecodeError:
+            raise ValueError("malformed frame: error text is not UTF-8") from None
+        out = {"kind": kind, "tag": tag, "message": message}
+    else:
+        raise ValueError(f"malformed frame: unknown frame kind {kind}")
+    c.done()
+    return out
+
+
+# --------------------------------------------------------------------------
+# Deadline-expiry graceful degradation
+# (mirrors rust/src/coordinator/state.rs::RequestState::finalize_partial).
+#
+# The serving coordinator snapshots every CONVERGED anytime round before
+# the refinement rescale; when a request's deadline fires, it settles
+# with the freshest snapshot as a partial response (docs/INVARIANTS.md
+# §I12: those values are 0-ULP identical to a standalone run stopped at
+# that round). With no converged round the deadline degenerates to a
+# typed rejection instead — there is nothing deterministic to stream.
+# --------------------------------------------------------------------------
+
+@dataclass
+class RoundSnapshot:
+    """One converged anytime round, snapped before the refinement
+    rescale — mirrors ``coordinator::state::RoundSnapshot``."""
+    values: np.ndarray     # (F,) attribution at this round
+    delta: float           # completeness residual at this round
+    round: int             # 1-based round number
+    evals: int             # gradient evaluations consumed so far
+
+
+def deadline_partial(snapshots: Sequence[RoundSnapshot],
+                     residuals: Optional[Sequence[float]] = None
+                     ) -> Optional[dict]:
+    """Mirror of ``RequestState::finalize_partial``'s selection rule: the
+    partial settlement for a deadline that fired after the given rounds
+    converged.
+
+    Returns a partial-``FinalFrame``-shaped dict built from the FRESHEST
+    snapshot (the last converged round), with the residual trajectory
+    truncated to that round (falling back to ``[delta]`` when no
+    trajectory was recorded) — or ``None`` when no round has converged,
+    in which case the serving side answers a typed deadline rejection
+    (:data:`REJECT_DEADLINE` carrying :func:`shed_retry_after_ms`).
+    """
+    if not snapshots:
+        return None
+    snap = snapshots[-1]
+    trail = list(residuals)[:snap.round] if residuals is not None else []
+    if not trail:
+        trail = [snap.delta]
+    return {"partial": True, "rounds": snap.round, "steps": snap.evals,
+            "delta": snap.delta, "values": np.asarray(snap.values),
+            "residuals": trail}
+
+
+def anytime_round_snapshots(flat, x, baseline, m0: int, n_int: int,
+                            target: int, delta_target: float,
+                            max_m: int = 512, rule: str = "trapezoid",
+                            allocation: str = "sqrt", chunk: int = 16
+                            ) -> List[RoundSnapshot]:
+    """The per-round snapshot stream :func:`anytime_ig` would emit: the
+    same stage-1 probe, the same refinement recurrence (carry ×
+    ``REFINE_CARRY`` + novel midpoints), with the attribution snapped
+    after every round exactly where the Rust serving path snapshots it
+    (``RequestState::on_round_complete``, before any rescale). Round
+    ``k``'s values are therefore bit-identical to
+    ``anytime_ig(..., max_m=m0 * 2**(k-1)).attr`` — the wire I12 claim,
+    pinned by tests/test_frontend_parity.py.
+    """
+    if rule not in ("trapezoid", "eq2"):
+        raise ValueError("anytime refinement requires an endpoint-inclusive rule (trapezoid/eq2)")
+    if m0 > max_m:
+        raise ValueError(f"initial m0 ({m0}) exceeds max_m ({max_m})")
+
+    bounds, deltas, gap = _probe_path(flat, x, baseline, n_int, target)
+    alloc = sqrt_allocate(m0, deltas) if allocation == "sqrt" else linear_allocate(m0, deltas)
+    alphas, weights = nonuniform_schedule(bounds, alloc, rule)
+
+    attr, _ = _run_points_batched(flat, x, baseline, alphas, weights, target, chunk)
+    evals = len(alphas)
+    m = int(sum(alloc))
+    snaps = [RoundSnapshot(attr.copy(), abs(float(attr.sum()) - gap), 1, evals)]
+    while snaps[-1].delta > delta_target and 2 * m <= max_m:
+        ref_a, ref_w = refine_schedule(alphas, weights)
+        nov_a, nov_w = novel_points(ref_a, ref_w, alphas)
+        novel_attr, _ = _run_points_batched(flat, x, baseline, nov_a, nov_w, target, chunk)
+        attr = attr * REFINE_CARRY + novel_attr
+        evals += len(nov_a)
+        alphas, weights = ref_a, ref_w
+        m *= 2
+        snaps.append(RoundSnapshot(attr.copy(), abs(float(attr.sum()) - gap),
+                                   len(snaps) + 1, evals))
+    return snaps
 
 
 def _run_points(flat, x, baseline, alphas: np.ndarray, weights: np.ndarray,

@@ -1,0 +1,232 @@
+"""Parity pins for the serving front-end's wire protocol and its
+deadline-expiry graceful degradation.
+
+Two cross-language contracts:
+
+  * **Frame encoding** (``coordinator/frontend/framing.rs``): every wire
+    frame is a pure byte-level function of its fields — mirrored by
+    ``igref.encode_*_frame`` / ``igref.decode_frame`` and pinned here on
+    the SAME golden hex vectors the Rust unit tests assert
+    (``framing::tests::golden_round_frame_bytes`` /
+    ``golden_request_frame_bytes``). Any drift on either side is a
+    protocol break, not a refactor.
+  * **Partial-response determinism** (docs/INVARIANTS.md §I12,
+    ``coordinator/state.rs::RequestState::finalize_partial``): a deadline
+    that fires mid-refinement settles with the last CONVERGED round's
+    snapshot, bit-identical to a standalone anytime run stopped at that
+    round. ``igref.deadline_partial`` mirrors the selection rule and
+    ``igref.anytime_round_snapshots`` the snapshot stream; the
+    model-driven test closes the loop through the wire encoding.
+"""
+
+import numpy as np
+import pytest
+
+from compile import data, igref, model
+
+
+# --------------------------------------------------------------------------
+# Golden wire bytes (shared with framing.rs::tests)
+# --------------------------------------------------------------------------
+
+def test_golden_round_frame_bytes():
+    wire = igref.encode_round_frame(0x0102030405060708, 2, 0.5, [1.0, -2.0])
+    assert wire.hex() == (
+        "29000000"
+        "02"
+        "0807060504030201"
+        "02000000"
+        "000000000000e03f"
+        "02000000"
+        "000000000000f03f"
+        "00000000000000c0"
+    )
+
+
+def test_golden_request_frame_bytes():
+    wire = igref.encode_request_frame(
+        tag=1, deadline_ms=100, budget=3, target=-1, m=8,
+        anytime=(0.25, 64), image=[0.5], baseline=None)
+    assert wire.hex() == (
+        "38000000"
+        "01"
+        "0100000000000000"
+        "6400000000000000"
+        "03"
+        "ffffffffffffffff"
+        "08000000"
+        "01"
+        "000000000000d03f"
+        "4000000000000000"
+        "01000000"
+        "0000003f"
+        "00"
+    )
+
+
+# --------------------------------------------------------------------------
+# Encode/decode roundtrips (every frame kind, every optional-field shape)
+# --------------------------------------------------------------------------
+
+def _body(wire: bytes) -> bytes:
+    (n,) = np.frombuffer(wire[:4], dtype="<u4")
+    assert len(wire) == 4 + n, "length prefix counts kind + payload"
+    return wire[4:]
+
+
+def test_request_roundtrip_all_optional_shapes():
+    image = np.linspace(-1.0, 1.0, 7, dtype=np.float32)
+    for anytime in (None, (1e-3, 512)):
+        for baseline in (None, np.full(7, 0.25, dtype=np.float32)):
+            wire = igref.encode_request_frame(
+                tag=2**64 - 1, deadline_ms=750, budget=2, target=5, m=48,
+                anytime=anytime, image=image, baseline=baseline)
+            got = igref.decode_frame(_body(wire))
+            assert got["kind"] == igref.KIND_REQUEST
+            assert got["tag"] == 2**64 - 1
+            assert got["deadline_ms"] == 750
+            assert got["budget"] == 2
+            assert got["target"] == 5
+            assert got["m"] == 48
+            assert got["anytime"] == anytime
+            assert got["image"].tobytes() == image.tobytes()
+            if baseline is None:
+                assert got["baseline"] is None
+            else:
+                assert got["baseline"].tobytes() == baseline.tobytes()
+
+
+def test_final_and_round_roundtrip_preserve_f64_bits():
+    # Signed zeros, subnormals, and huge magnitudes must survive the wire
+    # bit-for-bit — the encoding is the IEEE-754 pattern, nothing else.
+    values = np.array([0.0, -0.0, 5e-324, -1.7976931348623157e308, 3.5],
+                      dtype=np.float64)
+    rnd = igref.decode_frame(_body(igref.encode_round_frame(9, 4, -0.0, values)))
+    assert rnd["round"] == 4
+    assert np.signbit(rnd["delta"]) and rnd["delta"] == 0.0
+    assert rnd["values"].tobytes() == values.tobytes()
+
+    fin = igref.decode_frame(_body(igref.encode_final_frame(
+        9, True, 4, 1234, 2.5e-9, values)))
+    assert fin["partial"] is True
+    assert fin["rounds"] == 4 and fin["steps"] == 1234
+    assert fin["values"].tobytes() == values.tobytes()
+
+
+def test_reject_and_error_roundtrip():
+    rej = igref.decode_frame(_body(igref.encode_reject_frame(
+        0, igref.REJECT_BACKLOG, 25, 17, 400)))
+    assert rej == {"kind": igref.KIND_REJECT, "tag": 0,
+                   "reason": igref.REJECT_BACKLOG, "retry_after_ms": 25,
+                   "resident": 17, "lane_depth": 400}
+
+    err = igref.decode_frame(_body(igref.encode_error_frame(3, "δ went sideways")))
+    assert err == {"kind": igref.KIND_ERROR, "tag": 3,
+                   "message": "δ went sideways"}
+
+
+def test_reject_hint_matches_shed_mirror():
+    # The retry hint a shed request carries on the wire is exactly the
+    # integer shed mirror's output — the pinned Rust golden (factor 3).
+    hint = igref.shed_retry_after_ms(20, 100, 8, 64, 10)
+    wire = igref.encode_reject_frame(7, igref.REJECT_OVERLOAD, hint, 20, 100)
+    assert igref.decode_frame(_body(wire))["retry_after_ms"] == 30
+
+
+def test_malformed_frames_raise():
+    body = _body(igref.encode_round_frame(1, 1, 0.5, [1.0]))
+    with pytest.raises(ValueError, match="truncated"):
+        igref.decode_frame(body[:-1])
+    with pytest.raises(ValueError, match="trailing"):
+        igref.decode_frame(body + b"\x00")
+    with pytest.raises(ValueError, match="unknown frame kind"):
+        igref.decode_frame(b"\x2a" + body[1:])
+    with pytest.raises(ValueError, match="not UTF-8"):
+        igref.decode_frame(_body(igref.encode_error_frame(1, "ok"))[:-2] + b"\xff\xfe")
+
+
+# --------------------------------------------------------------------------
+# Deadline partial selection (pure logic, no model)
+# --------------------------------------------------------------------------
+
+def _snap(round_no: int, delta: float, evals: int) -> igref.RoundSnapshot:
+    rng = np.random.default_rng(round_no)
+    return igref.RoundSnapshot(rng.standard_normal(6), delta, round_no, evals)
+
+
+def test_no_converged_round_degenerates_to_rejection():
+    # finalize_partial returns false with an empty snapshot slot; the
+    # serving side then answers a typed REJECT_DEADLINE instead.
+    assert igref.deadline_partial([]) is None
+
+
+def test_selection_picks_the_freshest_snapshot():
+    snaps = [_snap(1, 0.5, 9), _snap(2, 0.2, 17), _snap(3, 0.05, 33)]
+    residuals = [0.5, 0.2, 0.05, 0.01]  # round 4 landed after the gate
+    got = igref.deadline_partial(snaps, residuals)
+    assert got["partial"] is True
+    assert got["rounds"] == 3 and got["steps"] == 33
+    assert got["delta"] == 0.05
+    assert got["values"].tobytes() == snaps[-1].values.tobytes()
+    # Trajectory truncated to the settled round, as finalize_partial does.
+    assert got["residuals"] == [0.5, 0.2, 0.05]
+
+
+def test_empty_trajectory_falls_back_to_snapshot_delta():
+    snaps = [_snap(1, 0.125, 9)]
+    for residuals in (None, []):
+        got = igref.deadline_partial(snaps, residuals)
+        assert got["residuals"] == [0.125]
+
+
+# --------------------------------------------------------------------------
+# I12 end-to-end: round snapshots == standalone runs, through the wire
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def flat():
+    return model.flatten_params(model.init_params())
+
+
+@pytest.fixture(scope="module")
+def case(flat):
+    import jax.numpy as jnp
+
+    x = jnp.asarray(data.gen_image(0, 0))
+    baseline = jnp.zeros_like(x)
+    target = igref.predict_target(flat, x)
+    return x, baseline, target
+
+
+def test_partial_is_bitwise_a_standalone_run_stopped_at_that_round(flat, case):
+    x, baseline, target = case
+    # Unreachable delta target => rounds are capped by max_m alone, the
+    # serving shape a deadline interrupts.
+    snaps = igref.anytime_round_snapshots(
+        flat, x, baseline, m0=8, n_int=4, target=target,
+        delta_target=0.0, max_m=32)
+    assert [s.round for s in snaps] == [1, 2, 3]
+    assert snaps[0].evals < snaps[1].evals < snaps[2].evals
+
+    for k, snap in enumerate(snaps, start=1):
+        # A deadline firing after round k settles with snapshot k...
+        got = igref.deadline_partial(snaps[:k], [s.delta for s in snaps])
+        assert got["rounds"] == k and got["steps"] == snap.evals
+        # ...whose bits equal a standalone anytime run stopped there
+        # (max_m pinned so refinement ends after exactly k rounds).
+        solo = igref.anytime_ig(flat, x, baseline, m0=8, n_int=4,
+                                target=target, delta_target=0.0,
+                                max_m=8 * 2 ** (k - 1))
+        assert solo.rounds == k
+        assert got["values"].tobytes() == np.asarray(solo.attr).tobytes(), \
+            f"round {k}: partial diverged from the standalone run"
+        assert got["delta"] == solo.delta
+
+        # The wire closes the loop losslessly: ROUND and partial-FINAL
+        # frames carry the same f64 bit patterns end to end.
+        rnd = igref.decode_frame(_body(igref.encode_round_frame(
+            5, k, snap.delta, snap.values)))
+        fin = igref.decode_frame(_body(igref.encode_final_frame(
+            5, True, k, snap.evals, got["delta"], got["values"])))
+        assert rnd["values"].tobytes() == fin["values"].tobytes() \
+            == got["values"].tobytes()

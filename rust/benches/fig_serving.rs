@@ -35,13 +35,24 @@
 //!   (chunks pinned to the feeder that pulled them) — reporting per-tier
 //!   p99 and the dispatch `steal_rate`, with the two runs asserted
 //!   **bit-identical** (stealing is a dispatch-order change only,
-//!   docs/INVARIANTS.md §I10).
+//!   docs/INVARIANTS.md §I10);
+//! * front-end rows (`frontend_rows`): two bursts over a real
+//!   `Frontend` loopback connection — an unconvergeable anytime stream
+//!   under a wire deadline (every request settles as a partial carrying
+//!   its best converged round: `deadline_hit_rate` and `partial_rate`
+//!   exactly 1.0) and an undeadlined control (both exactly 0.0) —
+//!   the graceful-degradation contract, docs/INVARIANTS.md §I12.
 
+use std::io::Write;
 use std::sync::Arc;
 
 use nuig::bench::{fmt3, Table};
-use nuig::config::CoordinatorConfig;
-use nuig::coordinator::{Coordinator, ExplainRequest, LatencyBudget, ShedRejection, StealConfig};
+use nuig::config::{CoordinatorConfig, FrontendConfig};
+use nuig::coordinator::frontend::framing::{self, Frame, FrameReader, RequestFrame};
+use nuig::coordinator::frontend::listener;
+use nuig::coordinator::{
+    Coordinator, ExplainRequest, Frontend, LatencyBudget, ShedRejection, StealConfig,
+};
 use nuig::data::synth;
 use nuig::exec::gather::{GatherExec, GatherLane};
 use nuig::exec::{FaultAction, FaultEvent, FaultInjector, FaultPlan};
@@ -349,6 +360,117 @@ fn main() -> anyhow::Result<()> {
     }
     tier_table.print();
 
+    // ---- Front-end graceful degradation: deadline hits + partials. ------
+    // Two bursts over a REAL `Frontend` loopback connection (framed wire
+    // protocol, deadline wheel, streaming writer). The deadline burst
+    // pairs an unconvergeable anytime policy (delta target 0) with a wire
+    // deadline, so every request MUST settle as a partial carrying its
+    // best converged round — hit rate and partial rate are exactly 1.0.
+    // The control burst carries no deadline and must settle complete
+    // (both rates exactly 0.0). Both are asserted, so smoke keeps them.
+    let fe_requests = if smoke { 8usize } else { 24 };
+    let fe_deadline_ms = 250u64;
+    let mut fe_table = Table::new(
+        &format!(
+            "fig_serving: front-end graceful degradation \
+             ({fe_requests} wire requests per burst)"
+        ),
+        &[
+            "requests",
+            "deadline_ms",
+            "deadline_hit_rate",
+            "partial_rate",
+            "rounds_streamed",
+            "throughput_rps",
+        ],
+    );
+    for deadline_ms in [fe_deadline_ms, 0] {
+        let backend = Arc::new(AnalyticExec::with_shards(AnalyticModel::standard(), 1));
+        let cfg = CoordinatorConfig { feeders: 1, devices: 1, workers: 2, ..Default::default() };
+        let coord = Arc::new(Coordinator::start_with_backend(backend.clone(), cfg)?);
+        let fcfg = FrontendConfig::default();
+        let max_frame = fcfg.max_frame_bytes;
+        let fe = Frontend::start(Arc::clone(&coord), fcfg)?;
+        let stream = listener::connect(fe.local_spec())?;
+        let mut wire = stream.try_clone()?;
+        let mut frames = FrameReader::new(stream, max_frame);
+
+        let t0 = std::time::Instant::now();
+        for i in 0..fe_requests {
+            let image = synth::gen_image(i % synth::NUM_CLASSES, i / synth::NUM_CLASSES);
+            let anytime = (deadline_ms > 0).then_some((0.0, 1u64 << 20));
+            wire.write_all(&framing::encode(&Frame::Request(RequestFrame {
+                tag: i as u64 + 1,
+                deadline_ms,
+                budget: 0,
+                target: -1,
+                m: 16,
+                anytime,
+                image,
+                baseline: None,
+            })))?;
+        }
+        wire.flush()?;
+
+        let mut settled = 0usize;
+        let mut partials = 0u64;
+        let mut rounds = 0u64;
+        while settled < fe_requests {
+            match frames.next()? {
+                Some(Frame::Round(_)) => rounds += 1,
+                Some(Frame::Final(f)) => {
+                    settled += 1;
+                    if deadline_ms > 0 {
+                        assert!(
+                            f.partial && f.rounds >= 1,
+                            "deadline'd anytime request must settle as a partial \
+                             carrying a converged round (tag {})",
+                            f.tag
+                        );
+                        partials += 1;
+                    } else {
+                        assert!(!f.partial, "undeadlined request must settle complete");
+                    }
+                }
+                Some(other) => anyhow::bail!("unexpected settlement frame: {other:?}"),
+                None => anyhow::bail!("front-end closed with {settled}/{fe_requests} settled"),
+            }
+        }
+        let wall = t0.elapsed();
+
+        let armed = if deadline_ms > 0 { fe_requests as u64 } else { 0 };
+        assert_eq!(fe.stats().deadlines_armed.get(), armed);
+        assert_eq!(
+            fe.deadlines_fired(),
+            armed,
+            "every armed deadline fires on the unconvergeable stream"
+        );
+        assert_eq!(fe.stats().partials_streamed.get(), partials);
+        let hit_rate =
+            if armed == 0 { 0.0 } else { fe.deadlines_fired() as f64 / armed as f64 };
+        let partial_rate =
+            if armed == 0 { 0.0 } else { partials as f64 / fe_requests as f64 };
+
+        fe_table.row(vec![
+            fe_requests.to_string(),
+            deadline_ms.to_string(),
+            fmt3(hit_rate),
+            fmt3(partial_rate),
+            rounds.to_string(),
+            fmt3(fe_requests as f64 / wall.as_secs_f64()),
+        ]);
+
+        drop(wire);
+        drop(frames);
+        fe.shutdown();
+        drop(fe);
+        if let Ok(c) = Arc::try_unwrap(coord) {
+            c.shutdown();
+        }
+        assert_eq!(backend.resident_len(), 0, "front-end burst drains the resident pool");
+    }
+    fe_table.print();
+
     // ---- Machine-readable trajectory point: BENCH_serving.json. ---------
     let path = std::env::var("NUIG_SERVING_JSON").unwrap_or_else(|_| "BENCH_serving.json".into());
     let json = Json::obj(vec![
@@ -361,6 +483,10 @@ fn main() -> anyhow::Result<()> {
         (
             "tier_rows",
             tier_table.to_json().get("rows").expect("tier table has rows").clone(),
+        ),
+        (
+            "frontend_rows",
+            fe_table.to_json().get("rows").expect("frontend table has rows").clone(),
         ),
     ]);
     std::fs::write(&path, json.to_string_pretty())?;

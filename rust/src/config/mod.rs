@@ -280,6 +280,90 @@ impl Default for CoordinatorConfig {
     }
 }
 
+/// Serving front-end configuration (the network surface over the
+/// coordinator — [`crate::coordinator::Frontend`]). Separate from
+/// [`CoordinatorConfig`] because the front-end is optional: embedded and
+/// bench deployments drive the coordinator in-process with no listener.
+#[derive(Debug, Clone)]
+pub struct FrontendConfig {
+    /// Listen spec: `tcp:HOST:PORT` (port 0 = ephemeral), `unix:/path`,
+    /// or bare `HOST:PORT` (TCP).
+    pub listen: String,
+    /// Bounded accepted-connection queue between the listener and the
+    /// connection workers. A connection arriving with the queue full is
+    /// turned away immediately with a typed backlog REJECT carrying the
+    /// coordinator's retry-after hint — explicit backpressure instead of
+    /// an unbounded accept backlog.
+    pub conn_backlog: usize,
+    /// Connection worker threads (each serves one connection at a time;
+    /// size to the expected concurrent-connection count).
+    pub conn_workers: usize,
+    /// Hard cap on a single wire frame (decode rejects larger before
+    /// buffering; bounds per-connection memory).
+    pub max_frame_bytes: usize,
+    /// Per-connection round-stream buffer depth (converged-round updates
+    /// queued between the feeders and the connection writer; overflow
+    /// drops the stream update, never the settlement).
+    pub stream_depth: usize,
+    /// Default per-request deadline in milliseconds applied when a
+    /// REQUEST frame carries none; 0 = no default deadline.
+    pub default_deadline_ms: u64,
+    /// How long [`crate::coordinator::Frontend::shutdown`] waits for
+    /// in-flight requests to settle before cancelling the front-end
+    /// subtree (stragglers then settle as disconnects).
+    pub drain_timeout_ms: u64,
+}
+
+impl Default for FrontendConfig {
+    fn default() -> Self {
+        FrontendConfig {
+            listen: "tcp:127.0.0.1:0".to_string(),
+            conn_backlog: 64,
+            conn_workers: 2,
+            max_frame_bytes: 16 << 20,
+            stream_depth: 64,
+            default_deadline_ms: 0,
+            drain_timeout_ms: 5000,
+        }
+    }
+}
+
+impl FrontendConfig {
+    /// Validate eagerly (called by `Frontend::start` before binding).
+    pub fn validate(&self) -> Result<()> {
+        if self.listen.is_empty() {
+            bail!("frontend.listen must be set (tcp:HOST:PORT or unix:/path)");
+        }
+        if self.conn_backlog == 0 || self.conn_workers == 0 {
+            bail!("frontend.conn_backlog and frontend.conn_workers must be >= 1");
+        }
+        if self.max_frame_bytes < crate::coordinator::frontend::framing::MIN_FRAME_CAP {
+            bail!(
+                "frontend.max_frame_bytes ({}) must be >= {} (smallest complete frame)",
+                self.max_frame_bytes,
+                crate::coordinator::frontend::framing::MIN_FRAME_CAP
+            );
+        }
+        if self.stream_depth == 0 {
+            bail!("frontend.stream_depth must be >= 1");
+        }
+        Ok(())
+    }
+
+    /// Serialize (for run provenance in bench output headers).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("listen", Json::Str(self.listen.clone())),
+            ("conn_backlog", self.conn_backlog.into()),
+            ("conn_workers", self.conn_workers.into()),
+            ("max_frame_bytes", self.max_frame_bytes.into()),
+            ("stream_depth", self.stream_depth.into()),
+            ("default_deadline_ms", (self.default_deadline_ms as usize).into()),
+            ("drain_timeout_ms", (self.drain_timeout_ms as usize).into()),
+        ])
+    }
+}
+
 /// The composed configuration.
 #[derive(Debug, Clone, Default)]
 pub struct NuigConfig {
@@ -623,6 +707,36 @@ mod tests {
         let steal = j.get("coordinator").unwrap().get("steal").unwrap();
         assert_eq!(steal.get("local_prefetch").unwrap().as_usize().unwrap(), 2);
         assert_eq!(steal.get("starvation_limit").unwrap().as_usize().unwrap(), 64);
+    }
+
+    #[test]
+    fn frontend_config_validates_and_serializes() {
+        let c = FrontendConfig::default();
+        c.validate().unwrap();
+        let j = c.to_json();
+        assert_eq!(j.get("listen").unwrap().as_str().unwrap(), "tcp:127.0.0.1:0");
+        assert_eq!(j.get("conn_backlog").unwrap().as_usize().unwrap(), 64);
+        assert_eq!(j.get("default_deadline_ms").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(j.get("drain_timeout_ms").unwrap().as_usize().unwrap(), 5000);
+
+        let mut c = FrontendConfig::default();
+        c.listen = String::new();
+        assert!(c.validate().is_err());
+        let mut c = FrontendConfig::default();
+        c.conn_workers = 0;
+        assert!(c.validate().is_err());
+        let mut c = FrontendConfig::default();
+        c.conn_backlog = 0;
+        assert!(c.validate().is_err());
+        let mut c = FrontendConfig::default();
+        c.stream_depth = 0;
+        assert!(c.validate().is_err());
+        // A frame cap below the smallest complete frame could never
+        // carry a response.
+        let mut c = FrontendConfig::default();
+        c.max_frame_bytes = 16;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("max_frame_bytes"), "{err}");
     }
 
     #[test]

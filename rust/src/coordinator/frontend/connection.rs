@@ -1,0 +1,436 @@
+//! One client connection: frame reader, response writer, and the
+//! connection's slice of the cancellation tree.
+//!
+//! The connection worker thread runs the **reader**: it decodes
+//! [`framing::Frame::Request`] frames, submits them through
+//! [`Coordinator::submit_with_stream`], arms the deadline wheel, and
+//! tracks each in-flight request under a per-request child token of the
+//! connection token. A spawned **writer** thread multiplexes the other
+//! direction: streamed [`RoundUpdate`]s become ROUND frames, settled
+//! handles become FINAL / REJECT / ERROR frames, and a cancelled
+//! request token (deadline fired, client vanished, coordinator
+//! shutting down) is translated into
+//! [`Coordinator::cancel_request`] with the matching reason — the
+//! settlement then flows back through the same handle poll, so every
+//! request settles on the wire exactly once.
+//!
+//! Cancellation tree (docs/INVARIANTS.md §I11): coordinator root →
+//! front-end → connection → request. A deadline cancels one request
+//! token; a disconnect cancels the connection token (and with it every
+//! request child); front-end shutdown cancels its root. Siblings are
+//! never disturbed, and settled requests disarm their deadline.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::config::FrontendConfig;
+use crate::coordinator::request::{
+    CancelReason, DeadlineExceeded, ExplainRequest, LatencyBudget, ResponseHandle, RoundUpdate,
+    ShedRejection,
+};
+use crate::coordinator::Coordinator;
+use crate::exec::channel::{bounded, Receiver};
+use crate::exec::sync::atomic::{AtomicBool, Ordering};
+use crate::exec::sync::{self, Mutex};
+use crate::exec::CancelToken;
+use crate::ig::{AnytimePolicy, IgOptions};
+
+use super::deadline::DeadlineWheel;
+use super::framing::{
+    self, ErrorFrame, FinalFrame, Frame, FrameReader, RejectFrame, RequestFrame, RoundFrame,
+    REJECT_DEADLINE, REJECT_DRAINING, REJECT_OVERLOAD,
+};
+use super::listener::ConnStream;
+use super::FrontendStats;
+
+/// Read timeout for the connection reader: the poll interval at which
+/// it notices cancellation/drain between frames.
+const READ_POLL: Duration = Duration::from_millis(20);
+
+/// Writer tick: how long one round-stream wait blocks before the
+/// writer re-polls outstanding handles and tokens.
+const WRITE_TICK: Duration = Duration::from_millis(2);
+
+/// One in-flight request as the connection sees it.
+struct Outstanding {
+    /// Client correlation tag, echoed on every reply frame.
+    tag: u64,
+    /// Settlement handle (polled by the writer).
+    handle: ResponseHandle,
+    /// This request's leaf of the cancellation tree.
+    token: CancelToken,
+    /// Whether the writer already forwarded this token's cancellation
+    /// into `Coordinator::cancel_request` (send exactly once; the
+    /// settlement arrives via `handle` on a later poll).
+    cancel_sent: bool,
+}
+
+/// State shared between the reader (worker thread) and writer thread.
+struct ConnShared {
+    /// id → in-flight entry. `BTreeMap` per the repo's hash-iter lint.
+    outstanding: Mutex<BTreeMap<u64, Outstanding>>,
+    /// The reader stopped taking input (EOF, error, drain, or cancel).
+    reader_done: AtomicBool,
+    /// The transport failed mid-stream (reader error or writer write
+    /// failure) — outstanding requests settle as disconnects.
+    disconnected: AtomicBool,
+}
+
+/// Serve one accepted connection to completion. Returns when every
+/// submitted request has settled on the wire (or the transport died).
+pub(super) fn serve_connection(
+    stream: ConnStream,
+    coord: &Arc<Coordinator>,
+    cfg: &FrontendConfig,
+    conn_token: CancelToken,
+    wheel: &Arc<DeadlineWheel>,
+    stats: &Arc<FrontendStats>,
+    accepting: &Arc<AtomicBool>,
+) {
+    let write_half = match stream.try_clone() {
+        Ok(w) => Arc::new(Mutex::new(w)),
+        Err(_) => {
+            stream.shutdown();
+            return;
+        }
+    };
+    if stream.set_read_timeout(Some(READ_POLL)).is_err() {
+        stream.shutdown();
+        return;
+    }
+
+    let shared = Arc::new(ConnShared {
+        outstanding: Mutex::new(BTreeMap::new()),
+        reader_done: AtomicBool::new(false),
+        disconnected: AtomicBool::new(false),
+    });
+    let (round_tx, round_rx) = bounded::<RoundUpdate>(cfg.stream_depth.max(1));
+
+    let writer = {
+        let shared = shared.clone();
+        let write_half = write_half.clone();
+        let coord = coord.clone();
+        let wheel = wheel.clone();
+        let stats = stats.clone();
+        let conn_token = conn_token.clone();
+        std::thread::Builder::new()
+            .name("nuig-conn-writer".into())
+            .spawn(move || {
+                writer_loop(&shared, &write_half, &round_rx, &coord, &wheel, &stats, &conn_token);
+            })
+            .expect("spawning connection writer")
+    };
+
+    let mut reader = FrameReader::new(stream, cfg.max_frame_bytes);
+    loop {
+        if conn_token.is_cancelled() {
+            break;
+        }
+        // Graceful drain: stop the moment nothing is in flight. New
+        // REQUESTs during the drain get a typed REJECT below.
+        if !accepting.load(Ordering::Acquire)
+            && sync::lock(&shared.outstanding).is_empty()
+        {
+            break;
+        }
+        match reader.next() {
+            Ok(Some(Frame::Request(rq))) => {
+                handle_request(rq, coord, cfg, &conn_token, wheel, stats, accepting, &shared, &write_half, &round_tx);
+            }
+            Ok(Some(_)) => {
+                // Server→client kinds arriving here are a protocol
+                // violation; drop the connection.
+                stats.bad_frames.inc();
+                shared.disconnected.store(true, Ordering::Release);
+                break;
+            }
+            Ok(None) => break, // clean EOF; half-close keeps the writer draining
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                continue
+            }
+            Err(e) => {
+                if e.kind() == std::io::ErrorKind::InvalidData {
+                    stats.bad_frames.inc();
+                }
+                shared.disconnected.store(true, Ordering::Release);
+                break;
+            }
+        }
+    }
+    shared.reader_done.store(true, Ordering::Release);
+    if shared.disconnected.load(Ordering::Acquire) {
+        // Take the connection's whole subtree: every in-flight request
+        // token cancels, and the writer settles them as disconnects.
+        if !sync::lock(&shared.outstanding).is_empty() {
+            stats.disconnects.inc();
+        }
+        conn_token.cancel();
+    }
+    let _ = writer.join();
+    // The writer exited with nothing outstanding (or a dead transport):
+    // nothing references the socket anymore.
+    sync::lock(&write_half).flush().ok();
+}
+
+/// Decode + admit one REQUEST frame.
+#[allow(clippy::too_many_arguments)] // nuig:allow(n/a): plain fn glue, not serving-path state
+fn handle_request(
+    rq: RequestFrame,
+    coord: &Arc<Coordinator>,
+    cfg: &FrontendConfig,
+    conn_token: &CancelToken,
+    wheel: &Arc<DeadlineWheel>,
+    stats: &Arc<FrontendStats>,
+    accepting: &Arc<AtomicBool>,
+    shared: &Arc<ConnShared>,
+    write_half: &Arc<Mutex<ConnStream>>,
+    round_tx: &crate::exec::channel::Sender<RoundUpdate>,
+) {
+    let tag = rq.tag;
+    if !accepting.load(Ordering::Acquire) || conn_token.is_cancelled() {
+        let hint = coord.overload_hint();
+        stats.draining_rejects.inc();
+        let _ = write_frame(
+            write_half,
+            &Frame::Reject(RejectFrame {
+                tag,
+                reason: REJECT_DRAINING,
+                retry_after_ms: hint.retry_after.as_millis() as u64,
+                resident: hint.resident_len as u64,
+                lane_depth: hint.lane_depth as u64,
+            }),
+        );
+        return;
+    }
+    let req = match build_request(&rq) {
+        Ok(req) => req,
+        Err(msg) => {
+            let _ = write_frame(write_half, &Frame::Error(ErrorFrame { tag, message: msg }));
+            return;
+        }
+    };
+    let handle = match coord.submit_with_stream(req, round_tx.clone()) {
+        Ok(h) => h,
+        Err(e) => {
+            let _ = write_frame(
+                write_half,
+                &Frame::Error(ErrorFrame { tag, message: format!("{e:#}") }),
+            );
+            return;
+        }
+    };
+    let id = handle.id;
+    let token = conn_token.child();
+    let deadline_ms = if rq.deadline_ms > 0 { rq.deadline_ms } else { cfg.default_deadline_ms };
+    // Insert BEFORE arming: a deadline so short it fires immediately
+    // must find the outstanding entry to settle against.
+    sync::lock(&shared.outstanding)
+        .insert(id, Outstanding { tag, handle, token: token.clone(), cancel_sent: false });
+    if deadline_ms > 0 {
+        wheel.arm(id, Instant::now() + Duration::from_millis(deadline_ms), token);
+        stats.deadlines_armed.inc();
+    }
+    stats.requests.inc();
+}
+
+/// Map a REQUEST frame onto an [`ExplainRequest`]; `Err` is the ERROR
+/// frame text for the client.
+fn build_request(rq: &RequestFrame) -> Result<ExplainRequest, String> {
+    let budget = *LatencyBudget::ALL
+        .get(rq.budget as usize)
+        .ok_or_else(|| format!("unknown latency budget index {}", rq.budget))?;
+    let target = if rq.target < 0 { None } else { Some(rq.target as usize) };
+    let mut opts = IgOptions::default();
+    if rq.m > 0 {
+        opts.m = rq.m as usize;
+    }
+    let anytime = match rq.anytime {
+        None => None,
+        Some((delta_target, max_m)) => Some(
+            AnytimePolicy::with_max_m(delta_target, max_m as usize)
+                .map_err(|e| format!("bad anytime policy: {e:#}"))?,
+        ),
+    };
+    Ok(ExplainRequest {
+        image: rq.image.clone(),
+        baseline: rq.baseline.clone(),
+        target,
+        opts,
+        anytime,
+        budget,
+    })
+}
+
+/// The writer thread: round stream + settlement multiplexer.
+fn writer_loop(
+    shared: &Arc<ConnShared>,
+    write_half: &Arc<Mutex<ConnStream>>,
+    round_rx: &Receiver<RoundUpdate>,
+    coord: &Arc<Coordinator>,
+    wheel: &Arc<DeadlineWheel>,
+    stats: &Arc<FrontendStats>,
+    conn_token: &CancelToken,
+) {
+    loop {
+        // 1. Stream converged rounds (also the tick pacing).
+        if let Ok(Some(update)) = round_rx.recv_timeout(WRITE_TICK) {
+            forward_round(shared, write_half, update, stats, conn_token);
+            while let Ok(Some(update)) = round_rx.try_recv() {
+                forward_round(shared, write_half, update, stats, conn_token);
+            }
+        }
+
+        // 2. Poll settlements and cancelled request tokens.
+        let mut settled: Vec<(u64, u64, anyhow::Result<crate::coordinator::ExplainResponse>)> =
+            Vec::new();
+        let mut to_cancel: Vec<u64> = Vec::new();
+        {
+            let mut out = sync::lock(&shared.outstanding);
+            for (&id, o) in out.iter_mut() {
+                if let Some(res) = o.handle.poll() {
+                    settled.push((id, o.tag, res));
+                } else if o.token.is_cancelled() && !o.cancel_sent {
+                    o.cancel_sent = true;
+                    to_cancel.push(id);
+                }
+            }
+            for (id, _, _) in &settled {
+                out.remove(id);
+            }
+        }
+        // A cancelled request token means deadline expiry — unless the
+        // whole connection is going down, which outranks it.
+        for id in to_cancel {
+            let reason = if shared.disconnected.load(Ordering::Acquire)
+                || conn_token.is_cancelled()
+            {
+                CancelReason::Disconnect
+            } else {
+                CancelReason::Deadline
+            };
+            coord.cancel_request(id, reason);
+        }
+        if !settled.is_empty() {
+            // Round updates enqueued before a settlement must hit the
+            // wire before its FINAL frame (the feeder sends the round
+            // strictly before the reply, so draining here preserves
+            // stream order per request).
+            while let Ok(Some(update)) = round_rx.try_recv() {
+                forward_round(shared, write_half, update, stats, conn_token);
+            }
+            for (id, tag, res) in settled {
+                wheel.disarm(id);
+                let frame = settlement_frame(tag, res, stats);
+                if write_frame(write_half, &frame).is_err() {
+                    mark_disconnected(shared, stats, conn_token);
+                }
+            }
+        }
+
+        // 3. Exit once the reader stopped and nothing is in flight.
+        if shared.reader_done.load(Ordering::Acquire)
+            && sync::lock(&shared.outstanding).is_empty()
+            && round_rx.is_empty()
+        {
+            return;
+        }
+    }
+}
+
+/// Write one streamed round for a still-outstanding request (updates
+/// for already-settled ids are dropped — their FINAL carried the data).
+fn forward_round(
+    shared: &Arc<ConnShared>,
+    write_half: &Arc<Mutex<ConnStream>>,
+    update: RoundUpdate,
+    stats: &Arc<FrontendStats>,
+    conn_token: &CancelToken,
+) {
+    let tag = match sync::lock(&shared.outstanding).get(&update.id) {
+        Some(o) => o.tag,
+        None => return,
+    };
+    let frame = Frame::Round(RoundFrame {
+        tag,
+        round: update.round as u32,
+        delta: update.delta,
+        values: update.values,
+    });
+    if write_frame(write_half, &frame).is_ok() {
+        stats.rounds_streamed.inc();
+    } else {
+        mark_disconnected(shared, stats, conn_token);
+    }
+}
+
+/// A failed socket write: the client is gone. Cancel the connection
+/// subtree so every in-flight request settles as a disconnect.
+fn mark_disconnected(
+    shared: &Arc<ConnShared>,
+    stats: &Arc<FrontendStats>,
+    conn_token: &CancelToken,
+) {
+    if !shared.disconnected.swap(true, Ordering::AcqRel) {
+        stats.disconnects.inc();
+        conn_token.cancel();
+    }
+}
+
+/// Map one settlement onto its wire frame.
+fn settlement_frame(
+    tag: u64,
+    res: anyhow::Result<crate::coordinator::ExplainResponse>,
+    stats: &Arc<FrontendStats>,
+) -> Frame {
+    match res {
+        Ok(resp) => {
+            if resp.partial {
+                stats.partials_streamed.inc();
+            }
+            Frame::Final(FinalFrame {
+                tag,
+                partial: resp.partial,
+                rounds: resp.attribution.rounds as u32,
+                steps: resp.attribution.steps as u64,
+                delta: resp.attribution.delta,
+                values: resp.attribution.values,
+            })
+        }
+        Err(e) => {
+            if let Some(s) = e.downcast_ref::<ShedRejection>() {
+                Frame::Reject(RejectFrame {
+                    tag,
+                    reason: REJECT_OVERLOAD,
+                    retry_after_ms: s.retry_after.as_millis() as u64,
+                    resident: s.resident_len as u64,
+                    lane_depth: s.lane_depth as u64,
+                })
+            } else if let Some(d) = e.downcast_ref::<DeadlineExceeded>() {
+                Frame::Reject(RejectFrame {
+                    tag,
+                    reason: REJECT_DEADLINE,
+                    retry_after_ms: d.retry_after.as_millis() as u64,
+                    resident: 0,
+                    lane_depth: 0,
+                })
+            } else {
+                Frame::Error(ErrorFrame { tag, message: format!("{e:#}") })
+            }
+        }
+    }
+}
+
+/// Serialize one frame onto the shared write half.
+fn write_frame(write_half: &Arc<Mutex<ConnStream>>, frame: &Frame) -> std::io::Result<()> {
+    let bytes = framing::encode(frame);
+    let mut w = sync::lock(write_half);
+    w.write_all(&bytes)?;
+    w.flush()
+}

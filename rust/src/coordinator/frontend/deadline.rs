@@ -1,0 +1,218 @@
+//! The front-end's deadline timer wheel.
+//!
+//! One thread serves every armed per-request deadline: a min-heap of
+//! `(expiry, id)` plus the armed id → request-token map. Firing a
+//! deadline does exactly one thing — cancel that request's
+//! [`CancelToken`], the leaf of the serving cancellation tree — so
+//! expiry takes the request's own subtree and nothing else
+//! (docs/INVARIANTS.md §I11). The connection writer observes the
+//! cancelled token and drives the coordinator-side settlement
+//! ([`crate::coordinator::Coordinator::cancel_request`]), which streams
+//! the last converged round as a partial response or returns the typed
+//! [`crate::coordinator::DeadlineExceeded`] rejection.
+//!
+//! Disarm-on-settle keeps a completed request's expiry from firing at
+//! all; a lost disarm race is benign (cancelling a settled request's
+//! token is a no-op at the settlement layer).
+
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap};
+use std::time::Instant;
+
+use crate::exec::sync::{self, Condvar, Mutex};
+use crate::exec::CancelToken;
+use crate::metrics::Counter;
+
+struct State {
+    /// Expiry order; entries whose id has been disarmed are skipped.
+    heap: BinaryHeap<Reverse<(Instant, u64)>>,
+    /// Armed request id → the request's cancellation token.
+    /// `BTreeMap` per the repo's hash-iter lint (deterministic walks).
+    armed: BTreeMap<u64, CancelToken>,
+    closed: bool,
+}
+
+/// The shared timer wheel; see the module doc.
+pub struct DeadlineWheel {
+    state: Mutex<State>,
+    cv: Condvar,
+    /// Deadlines that actually fired (armed and unexpired at expiry).
+    fired: Counter,
+    thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl DeadlineWheel {
+    /// Start the wheel's timer thread.
+    pub fn start() -> std::sync::Arc<DeadlineWheel> {
+        let wheel = std::sync::Arc::new(DeadlineWheel {
+            state: Mutex::new(State {
+                heap: BinaryHeap::new(),
+                armed: BTreeMap::new(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+            fired: Counter::new(),
+            thread: Mutex::new(None),
+        });
+        let w = wheel.clone();
+        let handle = std::thread::Builder::new()
+            .name("nuig-deadline".into())
+            .spawn(move || w.run())
+            .expect("spawning deadline wheel");
+        *sync::lock(&wheel.thread) = Some(handle);
+        wheel
+    }
+
+    /// Arm request `id`: at `at`, cancel `token` (and only its subtree).
+    pub fn arm(&self, id: u64, at: Instant, token: CancelToken) {
+        let mut st = sync::lock(&self.state);
+        if st.closed {
+            return;
+        }
+        st.armed.insert(id, token);
+        st.heap.push(Reverse((at, id)));
+        self.cv.notify_all();
+    }
+
+    /// Disarm request `id` (settled before its deadline). Idempotent.
+    pub fn disarm(&self, id: u64) {
+        sync::lock(&self.state).armed.remove(&id);
+    }
+
+    /// Deadlines that fired (armed at expiry).
+    pub fn fired(&self) -> u64 {
+        self.fired.get()
+    }
+
+    /// Currently armed deadlines.
+    pub fn armed_len(&self) -> usize {
+        sync::lock(&self.state).armed.len()
+    }
+
+    /// Stop the timer thread (pending deadlines never fire). Called by
+    /// the front-end after connections drained — their requests have
+    /// all settled and disarmed by then.
+    pub fn shutdown(&self) {
+        {
+            let mut st = sync::lock(&self.state);
+            st.closed = true;
+            self.cv.notify_all();
+        }
+        let handle = sync::lock(&self.thread).take();
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
+    }
+
+    fn run(&self) {
+        let mut st = sync::lock(&self.state);
+        loop {
+            if st.closed {
+                return;
+            }
+            let now = Instant::now();
+            // Fire everything due; disarmed ids were settled and just
+            // pop off without effect.
+            let mut due: Vec<CancelToken> = Vec::new();
+            while let Some(&Reverse((at, id))) = st.heap.peek() {
+                if at > now {
+                    break;
+                }
+                st.heap.pop();
+                if let Some(token) = st.armed.remove(&id) {
+                    due.push(token);
+                }
+            }
+            if !due.is_empty() {
+                drop(st);
+                for token in due {
+                    token.cancel();
+                    self.fired.inc();
+                }
+                st = sync::lock(&self.state);
+                continue;
+            }
+            st = match st.heap.peek() {
+                Some(&Reverse((at, _))) => {
+                    let wait = at.saturating_duration_since(Instant::now());
+                    sync::wait_timeout(&self.cv, st, wait).0
+                }
+                None => sync::wait(&self.cv, st),
+            };
+        }
+    }
+}
+
+impl Drop for DeadlineWheel {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn spin_until(what: &str, mut ready: impl FnMut() -> bool) {
+        let t0 = Instant::now();
+        while !ready() {
+            assert!(t0.elapsed() < Duration::from_secs(10), "timed out waiting for {what}");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    #[test]
+    fn fires_only_the_armed_token_subtree() {
+        let wheel = DeadlineWheel::start();
+        let conn = CancelToken::new();
+        let req_a = conn.child();
+        let req_b = conn.child();
+        wheel.arm(1, Instant::now() + Duration::from_millis(5), req_a.clone());
+        spin_until("deadline 1 to fire", || req_a.is_cancelled());
+        assert!(!req_b.is_cancelled(), "sibling request untouched (I11)");
+        assert!(!conn.is_cancelled(), "connection untouched");
+        assert_eq!(wheel.fired(), 1);
+        assert_eq!(wheel.armed_len(), 0, "fired entries disarm themselves");
+        wheel.shutdown();
+    }
+
+    #[test]
+    fn disarm_before_expiry_never_fires() {
+        let wheel = DeadlineWheel::start();
+        let token = CancelToken::new();
+        wheel.arm(2, Instant::now() + Duration::from_millis(20), token.clone());
+        wheel.disarm(2);
+        std::thread::sleep(Duration::from_millis(40));
+        assert!(!token.is_cancelled(), "a settled request's deadline is inert");
+        assert_eq!(wheel.fired(), 0);
+        wheel.shutdown();
+    }
+
+    #[test]
+    fn fires_in_expiry_order_across_out_of_order_arms() {
+        let wheel = DeadlineWheel::start();
+        let later = CancelToken::new();
+        let sooner = CancelToken::new();
+        let now = Instant::now();
+        wheel.arm(10, now + Duration::from_millis(60), later.clone());
+        wheel.arm(11, now + Duration::from_millis(5), sooner.clone());
+        spin_until("the sooner deadline", || sooner.is_cancelled());
+        assert!(!later.is_cancelled(), "re-arming sorted the heap, not arrival order");
+        spin_until("the later deadline", || later.is_cancelled());
+        assert_eq!(wheel.fired(), 2);
+        wheel.shutdown();
+    }
+
+    #[test]
+    fn shutdown_parks_pending_deadlines() {
+        let wheel = DeadlineWheel::start();
+        let token = CancelToken::new();
+        wheel.arm(3, Instant::now() + Duration::from_secs(60), token.clone());
+        wheel.shutdown();
+        assert!(!token.is_cancelled(), "shutdown does not fire pending deadlines");
+        // Arming after shutdown is a no-op, not a hang.
+        wheel.arm(4, Instant::now(), CancelToken::new());
+        assert_eq!(wheel.armed_len(), 1, "the pre-shutdown entry remains parked");
+    }
+}

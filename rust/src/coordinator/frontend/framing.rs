@@ -1,0 +1,645 @@
+//! The serving front-end's length-prefixed wire protocol.
+//!
+//! Every frame is `[len: u32 LE][kind: u8][payload]`, where `len` counts
+//! the kind byte plus the payload. All integers are little-endian and
+//! all floats are IEEE-754 bit patterns, so the encoding is a pure
+//! byte-level function of the frame — `python/compile/igref.py` mirrors
+//! it with `struct.pack` and `python/tests/test_frontend_parity.py`
+//! pins both sides to shared golden vectors.
+//!
+//! Client → server:
+//!
+//! * [`KIND_REQUEST`] — submit one explanation request. The `tag` is a
+//!   client-chosen correlation id echoed on every frame the server
+//!   sends back for this request, so one connection can multiplex.
+//!
+//! Server → client:
+//!
+//! * [`KIND_ROUND`] — one converged anytime round (streamed while the
+//!   request keeps refining); the values are bit-identical to a
+//!   standalone run stopped at that round (docs/INVARIANTS.md §I12).
+//! * [`KIND_FINAL`] — the settled attribution; `partial = 1` means the
+//!   deadline cut refinement short and this is the last converged
+//!   round.
+//! * [`KIND_REJECT`] — typed rejection (overload shed, deadline with no
+//!   converged round, acceptor backlog, drain) with the deterministic
+//!   `retry_after` hint on the wire.
+//! * [`KIND_ERROR`] — any other failure, as text.
+
+use std::io::{self, Read};
+
+/// Client → server: submit a request.
+pub const KIND_REQUEST: u8 = 1;
+/// Server → client: one converged anytime round.
+pub const KIND_ROUND: u8 = 2;
+/// Server → client: the settled attribution (full or partial).
+pub const KIND_FINAL: u8 = 3;
+/// Server → client: typed rejection with a retry hint.
+pub const KIND_REJECT: u8 = 4;
+/// Server → client: failure text.
+pub const KIND_ERROR: u8 = 5;
+
+/// [`RejectFrame::reason`]: shed at admission under overload.
+pub const REJECT_OVERLOAD: u8 = 0;
+/// [`RejectFrame::reason`]: deadline expired with no converged round.
+pub const REJECT_DEADLINE: u8 = 1;
+/// [`RejectFrame::reason`]: the acceptor's bounded connection backlog
+/// was full — the connection is closed right after this frame.
+pub const REJECT_BACKLOG: u8 = 2;
+/// [`RejectFrame::reason`]: the front-end is draining for shutdown and
+/// takes no new requests.
+pub const REJECT_DRAINING: u8 = 3;
+
+/// Smallest legal `max_frame_bytes` bound (fits every fixed-size frame).
+pub const MIN_FRAME_CAP: usize = 64;
+
+/// A client explanation request on the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestFrame {
+    /// Client correlation id, echoed on every reply frame.
+    pub tag: u64,
+    /// Per-request deadline in ms; 0 = the front-end's configured
+    /// default (which may itself be "none").
+    pub deadline_ms: u64,
+    /// [`crate::coordinator::LatencyBudget`] index (0–3).
+    pub budget: u8,
+    /// Explained class, or -1 for the model's prediction.
+    pub target: i64,
+    /// Initial interpolation steps m; 0 = the engine default.
+    pub m: u32,
+    /// Anytime refinement policy `(delta_target, max_m)`; `None` = one
+    /// fixed-m round.
+    pub anytime: Option<(f64, u64)>,
+    /// Flat (F,) input image.
+    pub image: Vec<f32>,
+    /// Optional baseline (length F); `None` = black.
+    pub baseline: Option<Vec<f32>>,
+}
+
+/// One converged anytime round, streamed mid-request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundFrame {
+    /// Echo of the request's tag.
+    pub tag: u64,
+    /// 1-based round number that just converged.
+    pub round: u32,
+    /// Completeness residual at this round.
+    pub delta: f64,
+    /// Attribution values at this round (length F).
+    pub values: Vec<f64>,
+}
+
+/// The settled attribution.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FinalFrame {
+    /// Echo of the request's tag.
+    pub tag: u64,
+    /// 1 when the deadline cut refinement short (the values are the
+    /// last converged round — still 0 ULP vs a standalone run stopped
+    /// there).
+    pub partial: bool,
+    /// Anytime rounds completed (1 for fixed-m).
+    pub rounds: u32,
+    /// Model gradient evaluations consumed.
+    pub steps: u64,
+    /// Final completeness residual.
+    pub delta: f64,
+    /// Attribution values (length F).
+    pub values: Vec<f64>,
+}
+
+/// Typed rejection with the deterministic retry hint on the wire.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RejectFrame {
+    /// Echo of the request's tag (0 for connection-level rejects, which
+    /// precede any request).
+    pub tag: u64,
+    /// One of [`REJECT_OVERLOAD`], [`REJECT_DEADLINE`],
+    /// [`REJECT_BACKLOG`], [`REJECT_DRAINING`].
+    pub reason: u8,
+    /// Integer-deterministic back-off hint
+    /// ([`crate::config::ShedConfig::retry_after`]).
+    pub retry_after_ms: u64,
+    /// Resident-pool occupancy at the decision.
+    pub resident: u64,
+    /// Lane-queue depth at the decision.
+    pub lane_depth: u64,
+}
+
+/// Failure text for anything without a typed form.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ErrorFrame {
+    /// Echo of the request's tag.
+    pub tag: u64,
+    /// Human-readable failure description.
+    pub message: String,
+}
+
+/// One decoded wire frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Client → server request submission.
+    Request(RequestFrame),
+    /// Streamed converged round.
+    Round(RoundFrame),
+    /// Settled attribution.
+    Final(FinalFrame),
+    /// Typed rejection.
+    Reject(RejectFrame),
+    /// Failure text.
+    Error(ErrorFrame),
+}
+
+fn put_u8(b: &mut Vec<u8>, v: u8) {
+    b.push(v);
+}
+fn put_u32(b: &mut Vec<u8>, v: u32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u64(b: &mut Vec<u8>, v: u64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+fn put_i64(b: &mut Vec<u8>, v: i64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+fn put_f64(b: &mut Vec<u8>, v: f64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+fn put_f32s(b: &mut Vec<u8>, vs: &[f32]) {
+    put_u32(b, vs.len() as u32);
+    for v in vs {
+        b.extend_from_slice(&v.to_le_bytes());
+    }
+}
+fn put_f64s(b: &mut Vec<u8>, vs: &[f64]) {
+    put_u32(b, vs.len() as u32);
+    for v in vs {
+        b.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Encode `frame` as its full wire bytes (length prefix included).
+pub fn encode(frame: &Frame) -> Vec<u8> {
+    let mut body = Vec::new();
+    match frame {
+        Frame::Request(r) => {
+            put_u8(&mut body, KIND_REQUEST);
+            put_u64(&mut body, r.tag);
+            put_u64(&mut body, r.deadline_ms);
+            put_u8(&mut body, r.budget);
+            put_i64(&mut body, r.target);
+            put_u32(&mut body, r.m);
+            match r.anytime {
+                Some((delta, max_m)) => {
+                    put_u8(&mut body, 1);
+                    put_f64(&mut body, delta);
+                    put_u64(&mut body, max_m);
+                }
+                None => {
+                    put_u8(&mut body, 0);
+                    put_f64(&mut body, 0.0);
+                    put_u64(&mut body, 0);
+                }
+            }
+            put_f32s(&mut body, &r.image);
+            match &r.baseline {
+                Some(b) => {
+                    put_u8(&mut body, 1);
+                    put_f32s(&mut body, b);
+                }
+                None => put_u8(&mut body, 0),
+            }
+        }
+        Frame::Round(r) => {
+            put_u8(&mut body, KIND_ROUND);
+            put_u64(&mut body, r.tag);
+            put_u32(&mut body, r.round);
+            put_f64(&mut body, r.delta);
+            put_f64s(&mut body, &r.values);
+        }
+        Frame::Final(r) => {
+            put_u8(&mut body, KIND_FINAL);
+            put_u64(&mut body, r.tag);
+            put_u8(&mut body, u8::from(r.partial));
+            put_u32(&mut body, r.rounds);
+            put_u64(&mut body, r.steps);
+            put_f64(&mut body, r.delta);
+            put_f64s(&mut body, &r.values);
+        }
+        Frame::Reject(r) => {
+            put_u8(&mut body, KIND_REJECT);
+            put_u64(&mut body, r.tag);
+            put_u8(&mut body, r.reason);
+            put_u64(&mut body, r.retry_after_ms);
+            put_u64(&mut body, r.resident);
+            put_u64(&mut body, r.lane_depth);
+        }
+        Frame::Error(r) => {
+            put_u8(&mut body, KIND_ERROR);
+            put_u64(&mut body, r.tag);
+            let msg = r.message.as_bytes();
+            put_u32(&mut body, msg.len() as u32);
+            body.extend_from_slice(msg);
+        }
+    }
+    let mut out = Vec::with_capacity(4 + body.len());
+    put_u32(&mut out, body.len() as u32);
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Byte cursor over one frame body.
+struct Cur<'a> {
+    b: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> io::Result<&'a [u8]> {
+        let end = self
+            .off
+            .checked_add(n)
+            .filter(|&e| e <= self.b.len())
+            .ok_or_else(|| bad("frame truncated"))?;
+        let s = &self.b[self.off..end];
+        self.off = end;
+        Ok(s)
+    }
+    fn u8(&mut self) -> io::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> io::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+    fn u64(&mut self) -> io::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+    fn i64(&mut self) -> io::Result<i64> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+    fn f64(&mut self) -> io::Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+    fn f32s(&mut self) -> io::Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n.checked_mul(4).ok_or_else(|| bad("f32 run overflows"))?)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().expect("4 bytes"))).collect())
+    }
+    fn f64s(&mut self) -> io::Result<Vec<f64>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n.checked_mul(8).ok_or_else(|| bad("f64 run overflows"))?)?;
+        Ok(raw.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().expect("8 bytes"))).collect())
+    }
+    fn done(&self) -> io::Result<()> {
+        if self.off == self.b.len() {
+            Ok(())
+        } else {
+            Err(bad("trailing bytes after frame payload"))
+        }
+    }
+}
+
+fn bad(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, format!("malformed frame: {msg}"))
+}
+
+/// Decode one frame body (`kind` byte + payload, length prefix already
+/// stripped).
+pub fn decode(body: &[u8]) -> io::Result<Frame> {
+    let mut c = Cur { b: body, off: 0 };
+    let kind = c.u8()?;
+    let frame = match kind {
+        KIND_REQUEST => {
+            let tag = c.u64()?;
+            let deadline_ms = c.u64()?;
+            let budget = c.u8()?;
+            let target = c.i64()?;
+            let m = c.u32()?;
+            let has_anytime = c.u8()?;
+            let delta = c.f64()?;
+            let max_m = c.u64()?;
+            let anytime = (has_anytime != 0).then_some((delta, max_m));
+            let image = c.f32s()?;
+            let baseline = if c.u8()? != 0 { Some(c.f32s()?) } else { None };
+            Frame::Request(RequestFrame {
+                tag,
+                deadline_ms,
+                budget,
+                target,
+                m,
+                anytime,
+                image,
+                baseline,
+            })
+        }
+        KIND_ROUND => Frame::Round(RoundFrame {
+            tag: c.u64()?,
+            round: c.u32()?,
+            delta: c.f64()?,
+            values: c.f64s()?,
+        }),
+        KIND_FINAL => Frame::Final(FinalFrame {
+            tag: c.u64()?,
+            partial: c.u8()? != 0,
+            rounds: c.u32()?,
+            steps: c.u64()?,
+            delta: c.f64()?,
+            values: c.f64s()?,
+        }),
+        KIND_REJECT => Frame::Reject(RejectFrame {
+            tag: c.u64()?,
+            reason: c.u8()?,
+            retry_after_ms: c.u64()?,
+            resident: c.u64()?,
+            lane_depth: c.u64()?,
+        }),
+        KIND_ERROR => {
+            let tag = c.u64()?;
+            let len = c.u32()? as usize;
+            let raw = c.take(len)?;
+            let message = std::str::from_utf8(raw)
+                .map_err(|_| bad("error text is not UTF-8"))?
+                .to_string();
+            Frame::Error(ErrorFrame { tag, message })
+        }
+        k => return Err(bad(&format!("unknown frame kind {k}"))),
+    };
+    c.done()?;
+    Ok(frame)
+}
+
+/// Incremental frame reader over a byte stream with read timeouts.
+///
+/// `next()` pulls at most one frame. Partial bytes (a timeout landing
+/// mid-frame) are retained across calls, so a socket read timeout never
+/// desynchronizes the stream — the connection reader uses short
+/// timeouts to poll its cancellation token between frames.
+pub struct FrameReader<R: Read> {
+    r: R,
+    buf: Vec<u8>,
+    max: usize,
+}
+
+impl<R: Read> FrameReader<R> {
+    /// Wrap `r`, rejecting any frame longer than `max` body bytes.
+    pub fn new(r: R, max: usize) -> Self {
+        FrameReader { r, buf: Vec::new(), max: max.max(MIN_FRAME_CAP) }
+    }
+
+    /// The next frame. `Ok(None)` = clean EOF at a frame boundary;
+    /// `Err(WouldBlock | TimedOut)` = no complete frame yet (partial
+    /// bytes retained); other errors are fatal for the connection.
+    pub fn next(&mut self) -> io::Result<Option<Frame>> {
+        loop {
+            if self.buf.len() >= 4 {
+                let len =
+                    u32::from_le_bytes(self.buf[..4].try_into().expect("4 bytes")) as usize;
+                if len < 1 || len > self.max {
+                    return Err(bad(&format!("frame length {len} outside 1..={}", self.max)));
+                }
+                if self.buf.len() >= 4 + len {
+                    let frame = decode(&self.buf[4..4 + len])?;
+                    self.buf.drain(..4 + len);
+                    return Ok(Some(frame));
+                }
+            }
+            let mut scratch = [0u8; 4096];
+            match self.r.read(&mut scratch) {
+                Ok(0) => {
+                    return if self.buf.is_empty() {
+                        Ok(None)
+                    } else {
+                        Err(io::Error::new(
+                            io::ErrorKind::UnexpectedEof,
+                            "connection closed mid-frame",
+                        ))
+                    };
+                }
+                Ok(n) => self.buf.extend_from_slice(&scratch[..n]),
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hex(bytes: &[u8]) -> String {
+        bytes.iter().map(|b| format!("{b:02x}")).collect()
+    }
+
+    fn roundtrip(f: Frame) {
+        let wire = encode(&f);
+        let len = u32::from_le_bytes(wire[..4].try_into().unwrap()) as usize;
+        assert_eq!(len, wire.len() - 4, "length prefix counts kind + payload");
+        assert_eq!(decode(&wire[4..]).unwrap(), f);
+    }
+
+    #[test]
+    fn every_frame_kind_roundtrips() {
+        roundtrip(Frame::Request(RequestFrame {
+            tag: 7,
+            deadline_ms: 250,
+            budget: 2,
+            target: -1,
+            m: 16,
+            anytime: Some((1e-3, 512)),
+            image: vec![0.0, 0.5, 1.0],
+            baseline: Some(vec![0.25, 0.25, 0.25]),
+        }));
+        roundtrip(Frame::Request(RequestFrame {
+            tag: u64::MAX,
+            deadline_ms: 0,
+            budget: 0,
+            target: 5,
+            m: 0,
+            anytime: None,
+            image: vec![],
+            baseline: None,
+        }));
+        roundtrip(Frame::Round(RoundFrame {
+            tag: 9,
+            round: 3,
+            delta: 0.125,
+            values: vec![1.5, -2.25],
+        }));
+        roundtrip(Frame::Final(FinalFrame {
+            tag: 9,
+            partial: true,
+            rounds: 2,
+            steps: 33,
+            delta: 0.5,
+            values: vec![0.75],
+        }));
+        roundtrip(Frame::Reject(RejectFrame {
+            tag: 0,
+            reason: REJECT_BACKLOG,
+            retry_after_ms: 25,
+            resident: 4,
+            lane_depth: 128,
+        }));
+        roundtrip(Frame::Error(ErrorFrame { tag: 3, message: "δ went sideways".into() }));
+    }
+
+    #[test]
+    fn golden_round_frame_bytes() {
+        // Pinned wire bytes, mirrored bit-for-bit by
+        // igref.encode_round_frame (python/tests/test_frontend_parity.py):
+        // any drift here is a protocol break, not a refactor.
+        let wire = encode(&Frame::Round(RoundFrame {
+            tag: 0x0102030405060708,
+            round: 2,
+            delta: 0.5,
+            values: vec![1.0, -2.0],
+        }));
+        assert_eq!(
+            hex(&wire),
+            "29000000\
+             02\
+             0807060504030201\
+             02000000\
+             000000000000e03f\
+             02000000\
+             000000000000f03f\
+             00000000000000c0"
+        );
+    }
+
+    #[test]
+    fn golden_request_frame_bytes() {
+        let wire = encode(&Frame::Request(RequestFrame {
+            tag: 1,
+            deadline_ms: 100,
+            budget: 3,
+            target: -1,
+            m: 8,
+            anytime: Some((0.25, 64)),
+            image: vec![0.5],
+            baseline: None,
+        }));
+        assert_eq!(
+            hex(&wire),
+            "38000000\
+             01\
+             0100000000000000\
+             6400000000000000\
+             03\
+             ffffffffffffffff\
+             08000000\
+             01\
+             000000000000d03f\
+             4000000000000000\
+             01000000\
+             0000003f\
+             00"
+        );
+    }
+
+    #[test]
+    fn reader_reassembles_split_frames_and_survives_timeouts() {
+        use std::collections::VecDeque;
+
+        /// Scripted reader: yields byte runs, interleaving WouldBlock.
+        struct Drip {
+            runs: VecDeque<Vec<u8>>,
+            block_next: bool,
+        }
+        impl Read for Drip {
+            fn read(&mut self, out: &mut [u8]) -> io::Result<usize> {
+                if self.block_next {
+                    self.block_next = false;
+                    return Err(io::Error::new(io::ErrorKind::WouldBlock, "drip"));
+                }
+                self.block_next = true;
+                match self.runs.pop_front() {
+                    Some(run) => {
+                        out[..run.len()].copy_from_slice(&run);
+                        Ok(run.len())
+                    }
+                    None => Ok(0),
+                }
+            }
+        }
+
+        let a = encode(&Frame::Reject(RejectFrame {
+            tag: 1,
+            reason: REJECT_OVERLOAD,
+            retry_after_ms: 50,
+            resident: 2,
+            lane_depth: 3,
+        }));
+        let b = encode(&Frame::Error(ErrorFrame { tag: 2, message: "x".into() }));
+        let mut all: Vec<u8> = Vec::new();
+        all.extend_from_slice(&a);
+        all.extend_from_slice(&b);
+        // Split at awkward boundaries: mid-prefix, mid-body, across frames.
+        let runs: VecDeque<Vec<u8>> =
+            [&all[..2], &all[2..7], &all[7..a.len() + 3], &all[a.len() + 3..]]
+                .into_iter()
+                .map(<[u8]>::to_vec)
+                .collect();
+        let mut rd = FrameReader::new(Drip { runs, block_next: false }, 1 << 20);
+
+        let mut got = Vec::new();
+        loop {
+            match rd.next() {
+                Ok(Some(f)) => got.push(f),
+                Ok(None) => break,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => continue,
+                Err(e) => panic!("unexpected error: {e}"),
+            }
+        }
+        assert_eq!(got, vec![decode(&a[4..]).unwrap(), decode(&b[4..]).unwrap()]);
+    }
+
+    #[test]
+    fn reader_rejects_oversized_and_truncated_frames() {
+        // Oversized declared length fails fast, before buffering the body.
+        let mut wire = vec![0u8; 8];
+        wire[..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = FrameReader::new(&wire[..], 1 << 10).next().unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+
+        // EOF mid-frame is an error, not a clean close.
+        let good = encode(&Frame::Error(ErrorFrame { tag: 1, message: "hi".into() }));
+        let err = FrameReader::new(&good[..good.len() - 1], 1 << 10).next().unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+
+        // Truncated payload inside a well-framed length also fails.
+        let mut bad_body = encode(&Frame::Round(RoundFrame {
+            tag: 1,
+            round: 1,
+            delta: 0.0,
+            values: vec![1.0],
+        }));
+        let n = bad_body.len();
+        bad_body.truncate(n - 8);
+        let new_len = (bad_body.len() - 4) as u32;
+        bad_body[..4].copy_from_slice(&new_len.to_le_bytes());
+        let err = FrameReader::new(&bad_body[..], 1 << 10).next().unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+
+        // Trailing garbage after a payload is a decode error.
+        let mut padded = encode(&Frame::Reject(RejectFrame {
+            tag: 1,
+            reason: 0,
+            retry_after_ms: 1,
+            resident: 0,
+            lane_depth: 0,
+        }));
+        padded.push(0xFF);
+        let new_len = (padded.len() - 4) as u32;
+        padded[..4].copy_from_slice(&new_len.to_le_bytes());
+        let err = FrameReader::new(&padded[..], 1 << 10).next().unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn decode_rejects_unknown_kind() {
+        let body = [99u8, 0, 0, 0];
+        let err = decode(&body).unwrap_err();
+        assert!(err.to_string().contains("unknown frame kind"), "{err}");
+    }
+}

@@ -1,0 +1,242 @@
+//! Listening sockets and accepted byte streams for the serving
+//! front-end: one abstraction over TCP (`tcp:HOST:PORT`) and Unix
+//! domain sockets (`unix:/path`), so the framed protocol, connection
+//! lifecycle, and tests are transport-agnostic.
+
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+/// An accepted client connection (blocking; reads carry a timeout so
+/// the connection loops can poll their cancellation tokens).
+pub enum ConnStream {
+    /// A TCP client.
+    Tcp(TcpStream),
+    /// A Unix-domain client.
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl ConnStream {
+    /// A second handle onto the same socket (reader/writer split).
+    pub fn try_clone(&self) -> io::Result<ConnStream> {
+        match self {
+            ConnStream::Tcp(s) => s.try_clone().map(ConnStream::Tcp),
+            #[cfg(unix)]
+            ConnStream::Unix(s) => s.try_clone().map(ConnStream::Unix),
+        }
+    }
+
+    /// Bound the blocking time of reads (`None` = block forever).
+    pub fn set_read_timeout(&self, dur: Option<Duration>) -> io::Result<()> {
+        match self {
+            ConnStream::Tcp(s) => s.set_read_timeout(dur),
+            #[cfg(unix)]
+            ConnStream::Unix(s) => s.set_read_timeout(dur),
+        }
+    }
+
+    /// Shut down both directions; subsequent reads see EOF, writes fail.
+    pub fn shutdown(&self) {
+        match self {
+            ConnStream::Tcp(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+            #[cfg(unix)]
+            ConnStream::Unix(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        }
+    }
+}
+
+impl Read for ConnStream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            ConnStream::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            ConnStream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for ConnStream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            ConnStream::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            ConnStream::Unix(s) => s.write(buf),
+        }
+    }
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            ConnStream::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            ConnStream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// A bound listening socket.
+pub enum ListenerSocket {
+    /// TCP listener.
+    Tcp(TcpListener),
+    /// Unix-domain listener, with the path for unlink-on-shutdown.
+    #[cfg(unix)]
+    Unix(UnixListener, std::path::PathBuf),
+}
+
+impl ListenerSocket {
+    /// Bind `spec`: `tcp:HOST:PORT` (port 0 = ephemeral), `unix:/path`
+    /// (a stale socket file is replaced), or a bare `HOST:PORT`
+    /// (treated as TCP, the CLI convenience form).
+    pub fn bind(spec: &str) -> Result<ListenerSocket> {
+        if let Some(addr) = spec.strip_prefix("tcp:") {
+            let l = TcpListener::bind(addr).with_context(|| format!("binding tcp:{addr}"))?;
+            return Ok(ListenerSocket::Tcp(l));
+        }
+        if let Some(path) = spec.strip_prefix("unix:") {
+            #[cfg(unix)]
+            {
+                let path = std::path::PathBuf::from(path);
+                // A stale socket file from an unclean exit blocks the
+                // bind; replace it. A *live* listener is not detected —
+                // the deployment owns path uniqueness.
+                let _ = std::fs::remove_file(&path);
+                let l = UnixListener::bind(&path)
+                    .with_context(|| format!("binding unix:{}", path.display()))?;
+                return Ok(ListenerSocket::Unix(l, path));
+            }
+            #[cfg(not(unix))]
+            bail!("unix: listeners are not supported on this platform");
+        }
+        if spec.contains(':') {
+            let l = TcpListener::bind(spec).with_context(|| format!("binding tcp:{spec}"))?;
+            return Ok(ListenerSocket::Tcp(l));
+        }
+        bail!("listen spec {spec:?} must be tcp:HOST:PORT or unix:/path")
+    }
+
+    /// The resolved address in bind-spec form (`tcp:127.0.0.1:41873`),
+    /// so an ephemeral-port bind can be dialled back.
+    pub fn local_spec(&self) -> String {
+        match self {
+            ListenerSocket::Tcp(l) => match l.local_addr() {
+                Ok(a) => format!("tcp:{a}"),
+                Err(_) => "tcp:?".to_string(),
+            },
+            #[cfg(unix)]
+            ListenerSocket::Unix(_, path) => format!("unix:{}", path.display()),
+        }
+    }
+
+    /// Switch the accept loop between blocking and polling mode.
+    pub fn set_nonblocking(&self, nb: bool) -> io::Result<()> {
+        match self {
+            ListenerSocket::Tcp(l) => l.set_nonblocking(nb),
+            #[cfg(unix)]
+            ListenerSocket::Unix(l, _) => l.set_nonblocking(nb),
+        }
+    }
+
+    /// Accept one connection. The accepted stream is always switched to
+    /// blocking mode (it may inherit the listener's non-blocking flag on
+    /// some platforms), with timeouts applied per-read by the connection.
+    pub fn accept(&self) -> io::Result<ConnStream> {
+        let stream = match self {
+            ListenerSocket::Tcp(l) => ConnStream::Tcp(l.accept()?.0),
+            #[cfg(unix)]
+            ListenerSocket::Unix(l, _) => ConnStream::Unix(l.accept()?.0),
+        };
+        match &stream {
+            ConnStream::Tcp(s) => s.set_nonblocking(false)?,
+            #[cfg(unix)]
+            ConnStream::Unix(s) => s.set_nonblocking(false)?,
+        }
+        Ok(stream)
+    }
+
+    /// Remove a Unix listener's socket file (no-op for TCP). Called on
+    /// front-end shutdown.
+    pub fn cleanup(&self) {
+        #[cfg(unix)]
+        if let ListenerSocket::Unix(_, path) = self {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+/// Dial a listen spec (tests and the CLI client side).
+pub fn connect(spec: &str) -> Result<ConnStream> {
+    if let Some(addr) = spec.strip_prefix("tcp:") {
+        let s = TcpStream::connect(addr).with_context(|| format!("connecting tcp:{addr}"))?;
+        return Ok(ConnStream::Tcp(s));
+    }
+    if let Some(path) = spec.strip_prefix("unix:") {
+        #[cfg(unix)]
+        {
+            let s = UnixStream::connect(path).with_context(|| format!("connecting unix:{path}"))?;
+            return Ok(ConnStream::Unix(s));
+        }
+        #[cfg(not(unix))]
+        bail!("unix: sockets are not supported on this platform");
+    }
+    if spec.contains(':') {
+        let s = TcpStream::connect(spec).with_context(|| format!("connecting tcp:{spec}"))?;
+        return Ok(ConnStream::Tcp(s));
+    }
+    bail!("connect spec {spec:?} must be tcp:HOST:PORT or unix:/path")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tcp_ephemeral_bind_reports_dialable_spec() {
+        let l = ListenerSocket::bind("tcp:127.0.0.1:0").unwrap();
+        let spec = l.local_spec();
+        assert!(spec.starts_with("tcp:127.0.0.1:"), "{spec}");
+        assert!(!spec.ends_with(":0"), "the resolved port is reported: {spec}");
+        let _client = connect(&spec).unwrap();
+        let served = l.accept().unwrap();
+        served.shutdown();
+    }
+
+    #[test]
+    fn bare_host_port_is_tcp() {
+        let l = ListenerSocket::bind("127.0.0.1:0").unwrap();
+        assert!(matches!(l, ListenerSocket::Tcp(_)));
+    }
+
+    #[test]
+    fn bad_specs_are_rejected_with_context() {
+        let err = ListenerSocket::bind("carrier-pigeon").unwrap_err();
+        assert!(err.to_string().contains("tcp:HOST:PORT"), "{err}");
+        let err = connect("carrier-pigeon").unwrap_err();
+        assert!(err.to_string().contains("tcp:HOST:PORT"), "{err}");
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn unix_bind_replaces_stale_socket_and_cleans_up() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("nuig-frontend-test-{}.sock", std::process::id()));
+        let spec = format!("unix:{}", path.display());
+        // First bind creates the file; binding again (stale file from an
+        // "unclean exit") must replace it rather than fail.
+        let l1 = ListenerSocket::bind(&spec).unwrap();
+        drop(l1);
+        let l2 = ListenerSocket::bind(&spec).unwrap();
+        assert!(path.exists());
+        let _client = connect(&spec).unwrap();
+        let served = l2.accept().unwrap();
+        served.shutdown();
+        l2.cleanup();
+        assert!(!path.exists(), "cleanup unlinks the socket file");
+    }
+}

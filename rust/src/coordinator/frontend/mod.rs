@@ -1,0 +1,295 @@
+//! Deadline-enforced serving front-end: the network surface over the
+//! [`Coordinator`].
+//!
+//! ```text
+//!  clients ──► listener (tcp:/unix:) ──► bounded conn queue ──► workers
+//!                  │ accept loop             │ full → REJECT        │
+//!                  ▼                         ▼   (backlog, hint)    ▼
+//!            non-blocking poll        exec::channel           one reader per
+//!            on the accepting flag    backpressure            conn + writer
+//!                                                             thread
+//!  cancellation tree:  coordinator root ─► front-end ─► connection ─► request
+//!  deadlines:          DeadlineWheel fires the REQUEST leaf only (I11)
+//!  expiry settlement:  last converged round streamed as a partial (I12)
+//! ```
+//!
+//! Lifecycle (docs/ARCHITECTURE.md §Front-end lifecycle):
+//!
+//! 1. **Accept** — a listener thread polls the socket and feeds accepted
+//!    connections into a *bounded* [`crate::exec::channel`]; when the
+//!    queue is full the front-end writes a typed REJECT frame carrying
+//!    the coordinator's [`ShedRejection::retry_after`] hint and closes —
+//!    backpressure is explicit and load-shaped, never an unbounded
+//!    accept backlog.
+//! 2. **Admit** — connection workers pull from the queue and run the
+//!    framed protocol ([`framing`]); each REQUEST becomes a coordinator
+//!    submission with its own child [`crate::exec::CancelToken`] and an
+//!    armed deadline.
+//! 3. **Stream** — converged anytime rounds are forwarded as ROUND
+//!    frames while the request refines; expiry settles with the last
+//!    converged round as a partial FINAL (bit-identical to a standalone
+//!    run stopped there), or a typed REJECT when none converged.
+//! 4. **Drain** — [`Frontend::shutdown`] stops accepting, lets in-flight
+//!    requests settle (bounded by `drain_timeout_ms`), then cancels the
+//!    front-end root so stragglers settle as disconnects — zero lost
+//!    settlements either way.
+//!
+//! [`ShedRejection::retry_after`]: crate::coordinator::ShedRejection
+
+pub mod framing;
+pub mod listener;
+
+mod connection;
+mod deadline;
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::config::FrontendConfig;
+use crate::coordinator::Coordinator;
+use crate::exec::channel::{bounded, Sender};
+use crate::exec::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use crate::exec::sync::{self, Mutex};
+use crate::exec::CancelToken;
+use crate::metrics::Counter;
+
+use deadline::DeadlineWheel;
+use framing::{Frame, RejectFrame, REJECT_BACKLOG};
+use listener::{ConnStream, ListenerSocket};
+
+/// Front-end counters (all monotonic; cheap relaxed atomics).
+#[derive(Default)]
+pub struct FrontendStats {
+    /// Connections accepted into the worker queue.
+    pub conns_accepted: Counter,
+    /// Connections turned away with a backlog REJECT (queue full).
+    pub conns_rejected: Counter,
+    /// REQUEST frames admitted into the coordinator.
+    pub requests: Counter,
+    /// Malformed or protocol-violating frames observed.
+    pub bad_frames: Counter,
+    /// ROUND frames streamed to clients.
+    pub rounds_streamed: Counter,
+    /// FINAL frames flagged partial (deadline-degraded responses).
+    pub partials_streamed: Counter,
+    /// Per-request deadlines armed on the wheel.
+    pub deadlines_armed: Counter,
+    /// Connections that died mid-stream (read/write failure).
+    pub disconnects: Counter,
+    /// REQUESTs refused with a DRAINING reject during shutdown.
+    pub draining_rejects: Counter,
+}
+
+/// The serving front-end; see the module doc for the lifecycle.
+pub struct Frontend {
+    cfg: FrontendConfig,
+    stats: Arc<FrontendStats>,
+    /// Accept/admit gate: cleared first thing in [`Frontend::shutdown`].
+    accepting: Arc<AtomicBool>,
+    /// Connections currently inside `serve_connection`.
+    active: Arc<AtomicUsize>,
+    /// The front-end's root of the cancellation tree (child of the
+    /// coordinator root, parent of every connection token).
+    root: CancelToken,
+    wheel: Arc<DeadlineWheel>,
+    listener: Arc<ListenerSocket>,
+    local: String,
+    /// Shutdown-side handle on the connection queue (drain observation
+    /// and the final close that releases parked workers).
+    conn_tx: Sender<ConnStream>,
+    threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    shut: AtomicBool,
+}
+
+/// Accept-loop poll interval while the listener is idle.
+const ACCEPT_POLL: Duration = Duration::from_millis(5);
+/// Drain-loop poll interval during shutdown.
+const DRAIN_POLL: Duration = Duration::from_millis(5);
+
+impl Frontend {
+    /// Bind `cfg.listen` and start the accept loop plus
+    /// `cfg.conn_workers` connection workers over `coord`.
+    pub fn start(coord: Arc<Coordinator>, cfg: FrontendConfig) -> Result<Arc<Frontend>> {
+        cfg.validate().context("frontend config")?;
+        let listener = Arc::new(ListenerSocket::bind(&cfg.listen)?);
+        listener.set_nonblocking(true).context("listener nonblocking")?;
+        let local = listener.local_spec();
+        let stats = Arc::new(FrontendStats::default());
+        let accepting = Arc::new(AtomicBool::new(true));
+        let active = Arc::new(AtomicUsize::new(0));
+        let root = coord.shutdown_child();
+        let wheel = DeadlineWheel::start();
+        let (conn_tx, conn_rx) = bounded::<ConnStream>(cfg.conn_backlog.max(1));
+
+        let mut threads = Vec::with_capacity(cfg.conn_workers + 1);
+        {
+            let listener = listener.clone();
+            let accepting = accepting.clone();
+            let stats = stats.clone();
+            let coord = coord.clone();
+            let tx = conn_tx.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("nuig-accept".into())
+                    .spawn(move || accept_loop(&listener, &tx, &accepting, &stats, &coord))
+                    .context("spawning acceptor")?,
+            );
+        }
+        for i in 0..cfg.conn_workers.max(1) {
+            let conn_rx = conn_rx.clone();
+            let coord = coord.clone();
+            let cfg = cfg.clone();
+            let root = root.clone();
+            let wheel = wheel.clone();
+            let stats = stats.clone();
+            let accepting = accepting.clone();
+            let active = active.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("nuig-conn-{i}"))
+                    .spawn(move || {
+                        while let Ok(stream) = conn_rx.recv() {
+                            active.fetch_add(1, Ordering::AcqRel);
+                            connection::serve_connection(
+                                stream,
+                                &coord,
+                                &cfg,
+                                root.child(),
+                                &wheel,
+                                &stats,
+                                &accepting,
+                            );
+                            active.fetch_sub(1, Ordering::AcqRel);
+                        }
+                    })
+                    .context("spawning connection worker")?,
+            );
+        }
+
+        Ok(Arc::new(Frontend {
+            cfg,
+            stats,
+            accepting,
+            active,
+            root,
+            wheel,
+            listener,
+            local,
+            conn_tx,
+            threads: Mutex::new(threads),
+            shut: AtomicBool::new(false),
+        }))
+    }
+
+    /// The resolved listen spec (dialable even for an ephemeral bind).
+    pub fn local_spec(&self) -> &str {
+        &self.local
+    }
+
+    /// Front-end counters.
+    pub fn stats(&self) -> &FrontendStats {
+        &self.stats
+    }
+
+    /// Connections currently being served.
+    pub fn active_connections(&self) -> usize {
+        self.active.load(Ordering::Acquire)
+    }
+
+    /// Deadlines that actually fired on the wheel.
+    pub fn deadlines_fired(&self) -> u64 {
+        self.wheel.fired()
+    }
+
+    /// Whether new connections/requests are still admitted (`false`
+    /// once a drain has begun).
+    pub fn is_accepting(&self) -> bool {
+        self.accepting.load(Ordering::Acquire)
+    }
+
+    /// Graceful drain: stop accepting, let in-flight requests settle
+    /// (up to `drain_timeout_ms`), then cancel the front-end subtree so
+    /// stragglers settle as disconnects. Idempotent.
+    pub fn shutdown(&self) {
+        if self.shut.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        self.accepting.store(false, Ordering::Release);
+        let deadline = Instant::now() + Duration::from_millis(self.cfg.drain_timeout_ms);
+        while Instant::now() < deadline {
+            if self.active.load(Ordering::Acquire) == 0 && self.conn_tx.is_empty() {
+                break;
+            }
+            std::thread::sleep(DRAIN_POLL);
+        }
+        // Past the drain window (or fully drained): take the subtree.
+        // Settled requests are unaffected; stragglers become disconnects
+        // and still settle exactly once.
+        self.root.cancel();
+        self.conn_tx.close();
+        let threads = std::mem::take(&mut *sync::lock(&self.threads));
+        for t in threads {
+            let _ = t.join();
+        }
+        self.wheel.shutdown();
+        self.listener.cleanup();
+    }
+}
+
+impl Drop for Frontend {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// The listener thread: poll-accept into the bounded queue; overflow
+/// gets a typed backlog REJECT with the coordinator's back-off hint.
+fn accept_loop(
+    listener: &Arc<ListenerSocket>,
+    tx: &Sender<ConnStream>,
+    accepting: &Arc<AtomicBool>,
+    stats: &Arc<FrontendStats>,
+    coord: &Arc<Coordinator>,
+) {
+    while accepting.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok(stream) => match tx.try_send(stream) {
+                Ok(()) => {
+                    stats.conns_accepted.inc();
+                }
+                Err(crate::exec::channel::SendError(stream)) => {
+                    stats.conns_rejected.inc();
+                    reject_backlogged(stream, coord);
+                }
+            },
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(_) => {
+                // Transient accept errors (e.g. the peer aborted during
+                // the handshake) — back off briefly and keep listening.
+                std::thread::sleep(ACCEPT_POLL);
+            }
+        }
+    }
+}
+
+/// Tell an over-backlog client when to come back, then hang up.
+fn reject_backlogged(mut stream: ConnStream, coord: &Arc<Coordinator>) {
+    use std::io::Write;
+    let hint = coord.overload_hint();
+    let frame = Frame::Reject(RejectFrame {
+        // The client never got to send a tagged REQUEST; 0 marks a
+        // connection-level reject.
+        tag: 0,
+        reason: REJECT_BACKLOG,
+        retry_after_ms: hint.retry_after.as_millis() as u64,
+        resident: hint.resident_len as u64,
+        lane_depth: hint.lane_depth as u64,
+    });
+    let _ = stream.write_all(&framing::encode(&frame));
+    let _ = stream.flush();
+    stream.shutdown();
+}

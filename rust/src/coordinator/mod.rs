@@ -64,14 +64,23 @@
 //! * [`batcher`] — the feeders' chunk-occupancy accounting
 //!   (`BatchStats`); chunk assembly itself lives in [`scheduler`], the
 //!   single assembler on the serving path;
-//! * [`server`] — the [`server::Coordinator`]: lifecycle, workers, stats.
+//! * [`server`] — the [`server::Coordinator`]: lifecycle, workers, stats;
+//! * [`frontend`] — the deadline-enforced network serving surface
+//!   (TCP/Unix listener, framed wire protocol, per-request cancellation
+//!   tree, streamed partial attributions — docs/ARCHITECTURE.md
+//!   §Front-end lifecycle).
 
 pub mod batcher;
+pub mod frontend;
 pub mod request;
 pub mod scheduler;
 pub mod server;
 pub mod state;
 
-pub use request::{ExplainRequest, ExplainResponse, LatencyBudget, ResponseHandle, ShedRejection};
+pub use frontend::{Frontend, FrontendStats};
+pub use request::{
+    CancelReason, DeadlineExceeded, ExplainRequest, ExplainResponse, LatencyBudget,
+    ResponseHandle, RoundUpdate, ShedRejection,
+};
 pub use scheduler::{Bucket, LaneScheduler, Policy, Popped, StealConfig};
 pub use server::{dispatch_failover, Coordinator, CoordinatorStats, FeederStats, TierStats};

@@ -202,6 +202,72 @@ pub struct ExplainResponse {
     pub total_latency: Duration,
     /// Time spent waiting in the request queue before a router picked it up.
     pub queue_wait: Duration,
+    /// `true` when refinement was cut short (deadline expiry) and
+    /// `attribution` is the last **converged** round's result rather
+    /// than the tier's full budget. A partial is still bit-identical
+    /// (0 ULP) to a standalone run stopped at that round
+    /// (docs/INVARIANTS.md §I12); `attribution.rounds` says which round.
+    pub partial: bool,
+}
+
+/// One converged anytime round, streamed to a subscriber while the
+/// request keeps refining (see [`crate::coordinator::RequestState`]'s
+/// round stream). Values are the round's *final* attribution — the same
+/// bits a standalone run stopped at `round` would return — so a client
+/// that hits its deadline can use the last update it received.
+#[derive(Debug, Clone)]
+pub struct RoundUpdate {
+    /// Submission id of the refining request.
+    pub id: u64,
+    /// 1-based round number that just converged.
+    pub round: usize,
+    /// Completeness residual |Σ attribution − endpoint gap| at this round.
+    pub delta: f64,
+    /// Attribution values at this round (length F).
+    pub values: Vec<f64>,
+}
+
+/// Typed rejection for a request whose deadline expired before **any**
+/// anytime round completed: there is no converged partial to stream, so
+/// the request settles with this error instead (the graceful-degradation
+/// floor). Like [`ShedRejection`] it carries a deterministic
+/// `retry_after` hint; downcast it from the [`ResponseHandle::wait`]
+/// error.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DeadlineExceeded {
+    /// Submission id of the expired request.
+    pub id: u64,
+    /// Anytime rounds that had fully converged when the deadline fired
+    /// (always 0 on this error path — otherwise the request would have
+    /// settled as a partial response).
+    pub rounds_completed: usize,
+    /// Deterministic back-off hint, scaled by the coordinator's shed
+    /// policy exactly like [`ShedRejection::retry_after`].
+    pub retry_after: Duration,
+}
+
+impl std::fmt::Display for DeadlineExceeded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "deadline expired before any round converged (request {}, {} rounds complete); retry after {:?}",
+            self.id, self.rounds_completed, self.retry_after
+        )
+    }
+}
+
+impl std::error::Error for DeadlineExceeded {}
+
+/// Why a request is being cancelled out-of-band (the non-completion
+/// settlement paths of [`crate::coordinator::Coordinator::cancel_request`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CancelReason {
+    /// Per-request deadline expired: settle with the last converged
+    /// round as a partial response, or [`DeadlineExceeded`] if none.
+    Deadline,
+    /// Client went away: nobody will read the response — settle with an
+    /// error, drop queued lanes, reclaim the resident slot.
+    Disconnect,
 }
 
 /// One-shot handle for an in-flight request.
@@ -259,6 +325,7 @@ mod tests {
             },
             total_latency: Duration::from_millis(1),
             queue_wait: Duration::ZERO,
+            partial: false,
         }
     }
 
@@ -316,6 +383,22 @@ mod tests {
         let back = err.downcast_ref::<ShedRejection>().unwrap();
         assert_eq!(*back, shed);
         assert_eq!(back.retry_after, Duration::from_millis(50));
+    }
+
+    #[test]
+    fn deadline_exceeded_displays_and_downcasts() {
+        let dl = DeadlineExceeded {
+            id: 42,
+            rounds_completed: 0,
+            retry_after: Duration::from_millis(75),
+        };
+        let msg = dl.to_string();
+        assert!(msg.contains("request 42"), "{msg}");
+        assert!(msg.contains("retry after"), "{msg}");
+        let err = anyhow::Error::new(dl.clone());
+        let back = err.downcast_ref::<DeadlineExceeded>().unwrap();
+        assert_eq!(*back, dl);
+        assert_eq!(back.retry_after, Duration::from_millis(75));
     }
 
     #[test]

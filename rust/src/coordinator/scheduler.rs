@@ -176,8 +176,8 @@ impl StealConfig {
 }
 
 struct ReqPlans {
-    /// Owning request id (diagnostics; scheduling itself is id-agnostic).
-    #[allow(dead_code)]
+    /// Owning request id — the cancellation key
+    /// ([`LaneScheduler::cancel_request`]) and diagnostics label.
     id: u64,
     /// Queued chunk plans, each a contiguous run of *fused* schedule
     /// points (routers emit fused schedules only, so the point total is
@@ -574,6 +574,83 @@ impl LaneScheduler {
         }
     }
 
+    /// Drop every queued or staged lane belonging to request `id` — the
+    /// out-of-band cancellation path (deadline expiry with no further
+    /// rounds wanted, client disconnect, chaos `Disconnect` events).
+    /// Returns the number of lanes dropped.
+    ///
+    /// Isolation contract (docs/INVARIANTS.md I11): sibling requests'
+    /// lanes — their ordering under every policy, their round-robin turn
+    /// position, and their staged chunks — are untouched, so a
+    /// cancellation is 0-ULP invisible to every other request. Dropped
+    /// lanes release their `Arc<RequestState>` references **after** the
+    /// scheduler lock is released: if the queue held the last
+    /// references, the `ResidentGuard` eviction runs without the
+    /// scheduler lock (no lock-order edge into the backend pool).
+    ///
+    /// Lanes of `id` already popped by a feeder are out of reach here;
+    /// they execute harmlessly — a settled request's `add_lane` commits
+    /// into an accumulator nobody will read and its `on_round_complete`
+    /// early-returns `Finalize` (see `RequestState`).
+    pub fn cancel_request(&self, id: u64) -> usize {
+        let mut dropped = 0usize;
+        // Holds the removed plans/lanes until after the lock drops.
+        let mut reaped_plans: Vec<VecDeque<ChunkPlan>> = Vec::new();
+        let mut reaped_lanes: Vec<Lane> = Vec::new();
+        let mut st = sync::lock(&self.state);
+        let Sched { buckets, locals, queued, staged, .. } = &mut *st;
+        for q in buckets.iter_mut() {
+            let mut i = 0;
+            while i < q.reqs.len() {
+                if q.reqs[i].id == id {
+                    let r = q.reqs.remove(i).expect("index in range");
+                    q.points -= r.remaining;
+                    *queued -= r.remaining;
+                    dropped += r.remaining;
+                    reaped_plans.push(r.plans);
+                    // Mirror `draw`'s removal bookkeeping so sibling
+                    // round-robin turns are unperturbed.
+                    if self.policy == Policy::RoundRobin && q.cursor > i {
+                        q.cursor -= 1;
+                    }
+                } else {
+                    i += 1;
+                }
+            }
+            if q.cursor >= q.reqs.len() {
+                q.cursor = 0;
+            }
+        }
+        for local in locals.iter_mut() {
+            for chunk in local.iter_mut() {
+                let before = chunk.len();
+                let mut kept = Vec::with_capacity(before);
+                for lane in chunk.drain(..) {
+                    if lane.state.id == id {
+                        reaped_lanes.push(lane);
+                    } else {
+                        kept.push(lane);
+                    }
+                }
+                *chunk = kept;
+                let removed = before - chunk.len();
+                *staged -= removed;
+                dropped += removed;
+            }
+            // A fully-cancelled staged chunk would pop as an empty batch;
+            // drop it here instead.
+            local.retain(|c| !c.is_empty());
+        }
+        drop(st);
+        if dropped > 0 {
+            // Capacity freed: wake routers parked on the admission gate.
+            self.not_full.notify_all();
+        }
+        drop(reaped_plans);
+        drop(reaped_lanes);
+        dropped
+    }
+
     /// Close: pushes fail, pops drain (deques, buckets, then sibling
     /// deques regardless of the stealing knob) and report `Closed`.
     pub fn close(&self) {
@@ -628,6 +705,8 @@ mod tests {
             in_flight: Arc::new(AtomicUsize::new(1)),
             anytime: None,
             resident: None,
+            last_round: Mutex::new(None),
+            round_tx: None,
         });
         // Chunk width 3 on purpose: most tests span several plans, so
         // the lane-by-lane consumption across plan boundaries is what
@@ -883,6 +962,81 @@ mod tests {
         // Every 2 tight draws that pass over the waiting thorough bucket
         // force one thorough draw: bounded progress, deterministically.
         assert_eq!(pop_ids(&s, 9), vec![1, 2, 9, 3, 4, 9, 5, 6, 7]);
+    }
+
+    #[test]
+    fn cancel_drops_only_target_lanes() {
+        let s = LaneScheduler::new(Policy::Fifo, 64);
+        s.push_request(1, lanes(1, 3)).unwrap();
+        s.push_request(2, lanes(2, 4)).unwrap();
+        s.push_request(3, lanes(3, 2)).unwrap();
+        assert_eq!(s.cancel_request(2), 4);
+        assert_eq!(s.len(), 5, "sibling lanes untouched");
+        assert_eq!(pop_ids(&s, 8), vec![1, 1, 1, 3, 3]);
+        assert_eq!(s.cancel_request(2), 0, "idempotent once drained");
+    }
+
+    #[test]
+    fn cancel_spans_buckets_and_refill() {
+        let s = LaneScheduler::new(Policy::Fifo, 64);
+        s.push_tiered(7, LatencyBudget::Tight, lanes(7, 2)).unwrap();
+        s.push_refill(7, lanes(7, 3)).unwrap();
+        s.push_tiered(8, LatencyBudget::Thorough, lanes(8, 2)).unwrap();
+        assert_eq!(s.cancel_request(7), 5, "tight + refill lanes all dropped");
+        assert_eq!(pop_ids(&s, 8), vec![8, 8]);
+    }
+
+    #[test]
+    fn cancel_reaps_staged_chunks() {
+        let s = sched(2, StealConfig { stealing: true, local_prefetch: 4, starvation_limit: 64 });
+        s.push_request(1, lanes(1, 6)).unwrap();
+        s.push_request(2, lanes(2, 6)).unwrap();
+        // Feeder 0 pulls a mixed stream: returns 1's first chunk, stages
+        // the rest (including request 2's lanes).
+        assert_eq!(pop_idxs(&s, 0, 3), vec![0, 1, 2]);
+        // Staged now (prefetch 4 → 3 local chunks): [req1 3-5],
+        // [req2 0-2], [req2 3-5]; the buckets are drained.
+        assert_eq!(s.len(), 9, "staged + queued backlog");
+        assert_eq!(s.cancel_request(2), 6, "queued AND staged lanes of 2 dropped");
+        // Everything left belongs to request 1: its staged chunk pops
+        // intact, and the fully-cancelled staged chunk was reaped.
+        match s.pop_chunk_for(0, 3, Duration::ZERO) {
+            Popped::Chunk(c) => {
+                assert!(c.iter().all(|l| l.state.id == 1));
+                assert_eq!(c.iter().map(|l| l.idx).collect::<Vec<_>>(), vec![3, 4, 5]);
+            }
+            Popped::Closed => panic!("not closed"),
+        }
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn cancel_preserves_round_robin_turn_order() {
+        let s = LaneScheduler::new(Policy::RoundRobin, 64);
+        s.push_request(1, lanes(1, 2)).unwrap();
+        s.push_request(2, lanes(2, 2)).unwrap();
+        s.push_request(3, lanes(3, 2)).unwrap();
+        // Advance the cursor past request 1 so the removal index is
+        // below it, exercising the cursor fixup.
+        assert_eq!(pop_ids(&s, 1), vec![1]);
+        assert_eq!(s.cancel_request(1), 1);
+        assert_eq!(pop_ids(&s, 4), vec![2, 3, 2, 3]);
+    }
+
+    #[test]
+    fn cancel_unblocks_waiting_pusher() {
+        let s = Arc::new(LaneScheduler::new(Policy::Fifo, 4));
+        s.push_request(1, lanes(1, 4)).unwrap();
+        let s2 = s.clone();
+        let t = std::thread::spawn(move || {
+            s2.push_request(2, lanes(2, 2)).unwrap(); // blocks: 4+2 > 4
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(s.len(), 4, "push must be blocked");
+        assert_eq!(s.cancel_request(1), 4);
+        t.join().unwrap();
+        assert_eq!(s.len(), 2, "freed capacity admitted the parked push");
+        assert_eq!(pop_ids(&s, 4), vec![2, 2]);
     }
 
     #[test]

@@ -8,7 +8,8 @@
 //! inject `ig::model::AnalyticExec` and exercise the identical serving
 //! path without artifacts.
 
-use std::sync::Arc;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Weak};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, ensure, Context, Result};
@@ -30,7 +31,10 @@ use crate::metrics::{
 use crate::runtime::Runtime;
 
 use super::batcher::BatchStats;
-use super::request::{ExplainRequest, ExplainResponse, LatencyBudget, ResponseHandle, ShedRejection};
+use super::request::{
+    CancelReason, DeadlineExceeded, ExplainRequest, ExplainResponse, LatencyBudget,
+    ResponseHandle, RoundUpdate, ShedRejection,
+};
 use super::scheduler::{LaneScheduler, Popped};
 use super::state::{Accum, AnytimeRounds, ChunkPlan, RequestState, ResidentGuard, RoundOutcome};
 
@@ -131,6 +135,20 @@ pub struct CoordinatorStats {
     /// work-stealing scheduler: bucket pops, local pops, steals,
     /// parks, wakes — docs/TUNING.md §Serving knobs).
     pub steal: Arc<StealCounters>,
+    /// Deadline-expired requests settled with a streamed **partial**
+    /// response (the last converged anytime round; see
+    /// [`crate::coordinator::state::RequestState::finalize_partial`]).
+    pub deadline_partials: Counter,
+    /// Deadline-expired requests with **no** converged round: settled
+    /// with a typed [`DeadlineExceeded`] rejection carrying a
+    /// deterministic `retry_after` hint.
+    pub deadline_rejects: Counter,
+    /// Requests cancelled because their client disconnected before
+    /// completion (front-end reader EOF / write failure).
+    pub disconnect_cancels: Counter,
+    /// Queued/staged lanes dropped by out-of-band cancellations
+    /// ([`LaneScheduler::cancel_request`]); sibling lanes are untouched.
+    pub cancelled_lanes: Counter,
     pub(crate) batch: Mutex<BatchStats>,
 }
 
@@ -157,6 +175,10 @@ impl CoordinatorStats {
             lane_peak: Watermark::new(),
             cache: Arc::new(CacheCounters::default()),
             steal: Arc::new(StealCounters::default()),
+            deadline_partials: Counter::new(),
+            deadline_rejects: Counter::new(),
+            disconnect_cancels: Counter::new(),
+            cancelled_lanes: Counter::new(),
             batch: Mutex::new(BatchStats::default()),
         }
     }
@@ -184,7 +206,15 @@ struct Submission {
     reply: Sender<Result<ExplainResponse>>,
     id: u64,
     submitted_at: Instant,
+    /// Per-round subscriber for the serving front-end's streaming path
+    /// (`None` for plain in-process submits).
+    round_tx: Option<Sender<RoundUpdate>>,
 }
+
+/// In-flight request registry shared by routers and the cancellation
+/// entry point: id → weak state. `BTreeMap` (not `HashMap`) so any
+/// diagnostic iteration is deterministic, per the repo's hash-iter lint.
+type Registry = Arc<Mutex<BTreeMap<u64, Weak<RequestState>>>>;
 
 /// The explanation server. Owns router workers + the feeder pool;
 /// `submit` is thread-safe and applies backpressure via the bounded
@@ -200,6 +230,12 @@ pub struct Coordinator {
     cancel: CancelToken,
     threads: Vec<std::thread::JoinHandle<()>>,
     in_flight: Arc<AtomicUsize>,
+    registry: Registry,
+    /// Requests cancelled before a router built their state (deadline
+    /// fired while the submission sat in the request queue): the router
+    /// settles them at the top of routing with the matching typed error,
+    /// paying zero probe passes.
+    early_cancels: Arc<Mutex<BTreeMap<u64, CancelReason>>>,
 }
 
 /// Everything a router worker needs per request: queues, execution
@@ -220,6 +256,11 @@ struct RouterCtx {
     /// Overload load-shedding marks (see `CoordinatorConfig::shed`);
     /// disabled by default.
     shed: ShedConfig,
+    /// In-flight registry: routed requests are findable by id for
+    /// out-of-band cancellation (deadline/disconnect).
+    registry: Registry,
+    /// Pre-route cancellations to settle at the top of routing.
+    early_cancels: Arc<Mutex<BTreeMap<u64, CancelReason>>>,
 }
 
 impl Coordinator {
@@ -285,6 +326,9 @@ impl Coordinator {
         };
         let cancel = CancelToken::new();
         let in_flight = Arc::new(AtomicUsize::new(0));
+        let registry: Registry = Arc::new(Mutex::new(BTreeMap::new()));
+        let early_cancels: Arc<Mutex<BTreeMap<u64, CancelReason>>> =
+            Arc::new(Mutex::new(BTreeMap::new()));
 
         let mut threads = Vec::new();
 
@@ -301,6 +345,8 @@ impl Coordinator {
                 chunk: cfg.chunk,
                 resident_cap: cfg.resident_cap,
                 shed: cfg.shed,
+                registry: registry.clone(),
+                early_cancels: early_cancels.clone(),
             });
             let cancel = cancel.clone();
             threads.push(
@@ -347,11 +393,34 @@ impl Coordinator {
             cancel,
             threads,
             in_flight,
+            registry,
+            early_cancels,
         })
     }
 
     /// Submit a request; blocks only if the request queue is full.
     pub fn submit(&self, req: ExplainRequest) -> Result<ResponseHandle> {
+        self.submit_inner(req, None)
+    }
+
+    /// Submit with a per-round subscriber: every converged anytime round
+    /// is offered to `round_tx` (non-blocking — see
+    /// `RequestState::round_tx`) while the final or partial response
+    /// still arrives through the returned handle. The serving
+    /// front-end's streaming entry point.
+    pub fn submit_with_stream(
+        &self,
+        req: ExplainRequest,
+        round_tx: Sender<RoundUpdate>,
+    ) -> Result<ResponseHandle> {
+        self.submit_inner(req, Some(round_tx))
+    }
+
+    fn submit_inner(
+        &self,
+        req: ExplainRequest,
+        round_tx: Option<Sender<RoundUpdate>>,
+    ) -> Result<ResponseHandle> {
         ensure!(
             req.image.len() == self.backend.features(),
             "image width {} != model features {}",
@@ -368,12 +437,98 @@ impl Coordinator {
         self.stats.tiers[req.budget.index()].submitted.inc();
         self.in_flight.fetch_add(1, Ordering::AcqRel);
         self.req_tx
-            .send(Submission { req, reply, id, submitted_at: Instant::now() })
+            .send(Submission { req, reply, id, submitted_at: Instant::now(), round_tx })
             .map_err(|_| {
                 self.in_flight.fetch_sub(1, Ordering::AcqRel);
                 anyhow!("coordinator is shut down")
             })?;
         Ok(handle)
+    }
+
+    /// Cancel one in-flight request out-of-band — the deadline-expiry
+    /// and client-disconnect settlement path. Exactly-once and sibling-
+    /// isolated (docs/INVARIANTS.md I11):
+    ///
+    /// * queued/staged lanes of `id` are dropped from the lane scheduler
+    ///   (siblings' lanes, policy order, and round-robin turns untouched);
+    /// * [`CancelReason::Deadline`] settles with the last **converged**
+    ///   round as a partial response, or a typed [`DeadlineExceeded`]
+    ///   rejection (deterministic `retry_after`) when no round landed;
+    /// * [`CancelReason::Disconnect`] settles with an error nobody will
+    ///   read — the point is releasing the resident slot and the queue
+    ///   space;
+    /// * the `ResidentGuard` slot is reclaimed exactly once, when the
+    ///   last lane reference drops — settlement never double-evicts;
+    /// * a request still waiting in the request queue (not yet routed)
+    ///   is marked for the router, which settles it at the top of
+    ///   routing with the same typed error, paying zero probe passes.
+    ///
+    /// Returns `true` iff THIS call settled the request; `false` when it
+    /// already settled (finalize/fail won the race) or `id` is unknown.
+    pub fn cancel_request(&self, id: u64, reason: CancelReason) -> bool {
+        let state = sync::lock(&self.registry).remove(&id).and_then(|w| w.upgrade());
+        let Some(state) = state else {
+            // Not routed yet (or long settled): leave a note the router
+            // settles from. Stats for this path are counted at routing.
+            // A note for an already-settled id is stale (a late second
+            // cancel), so bound the map by the only window a genuine note
+            // can live in — ids are monotonic and submissions route
+            // roughly in id order, so the oldest ids are the safest to
+            // shed; a shed genuine note merely lets the request serve
+            // fully (benign: its handle still settles exactly once).
+            let mut notes = sync::lock(&self.early_cancels);
+            notes.insert(id, reason);
+            let cap = self.cfg.queue_capacity + self.cfg.workers + 8;
+            while notes.len() > cap {
+                notes.pop_first();
+            }
+            return false;
+        };
+        let dropped = self.lanes.cancel_request(id);
+        if dropped > 0 {
+            self.stats.cancelled_lanes.add(dropped as u64);
+        }
+        match reason {
+            CancelReason::Deadline => {
+                if state.finalize_partial() {
+                    self.stats.deadline_partials.inc();
+                    let tier = &self.stats.tiers[state.budget.index()];
+                    tier.completed.inc();
+                    self.stats.completed.inc();
+                    true
+                } else {
+                    let retry =
+                        self.cfg.shed.retry_after(self.backend.resident_len(), self.lanes.len());
+                    let settled = state.fail(anyhow::Error::new(DeadlineExceeded {
+                        id,
+                        rounds_completed: 0,
+                        retry_after: retry,
+                    }));
+                    if settled {
+                        self.stats.deadline_rejects.inc();
+                        self.stats.failed.inc();
+                    }
+                    settled
+                }
+            }
+            CancelReason::Disconnect => {
+                let settled =
+                    state.fail(anyhow!("client disconnected before completion (request {id})"));
+                if settled {
+                    self.stats.disconnect_cancels.inc();
+                    self.stats.failed.inc();
+                }
+                settled
+            }
+        }
+    }
+
+    /// A fresh child of the coordinator's shutdown token: cancelled when
+    /// the coordinator shuts down, while its own `cancel()` stays scoped
+    /// to the caller's subtree. The serving front-end roots its
+    /// connection/request cancellation tree here.
+    pub fn shutdown_child(&self) -> CancelToken {
+        self.cancel.child()
     }
 
     /// Submit and wait (convenience for examples/tests).
@@ -390,6 +545,21 @@ impl Coordinator {
     /// resident lifecycle is admit → upload → gather → evict-on-drain).
     pub fn resident_len(&self) -> usize {
         self.backend.resident_len()
+    }
+
+    /// The current overload back-off hint, sampled from the live gauges
+    /// with the same `ShedConfig::retry_after` math as a real shed
+    /// decision. The serving front-end puts this on the wire for
+    /// connection-level rejects (accept backlog full, drain refusals)
+    /// where no per-request shed decision exists.
+    pub fn overload_hint(&self) -> ShedRejection {
+        let resident = self.backend.resident_len();
+        let lanes = self.lanes.len();
+        ShedRejection {
+            retry_after: self.cfg.shed.retry_after(resident, lanes),
+            resident_len: resident,
+            lane_depth: lanes,
+        }
     }
 
     /// Wait until all in-flight requests are done (poll-based; serving
@@ -525,7 +695,9 @@ impl ExplainRequest {
 fn router_loop(rx: Receiver<Submission>, ctx: Arc<RouterCtx>, cancel: CancelToken) {
     // Graceful-shutdown semantics: every accepted submission is served.
     // `shutdown` closes the request queue, so this loop drains naturally;
-    // the cancel token only guards future hard-abort paths.
+    // the cancel token (the root of the serving cancellation tree — the
+    // front-end's connection/request tokens are its descendants) only
+    // guards hard-abort paths.
     let _ = &cancel;
     while let Ok(sub) = rx.recv() {
         let queue_wait = sub.submitted_at.elapsed();
@@ -548,10 +720,12 @@ fn route_one(sub: Submission, queue_wait: Duration, ctx: &RouterCtx) -> Result<(
         chunk,
         resident_cap,
         shed,
+        registry,
+        early_cancels,
     } = ctx;
     let features = backend.features();
     let classes = backend.num_classes();
-    let Submission { req, reply, id, submitted_at } = sub;
+    let Submission { req, reply, id, submitted_at, round_tx } = sub;
 
     // Pre-state failures reply directly and settle the accounting here;
     // post-state failures go through `RequestState::fail` (idempotent).
@@ -562,6 +736,27 @@ fn route_one(sub: Submission, queue_wait: Duration, ctx: &RouterCtx) -> Result<(
         let _ = reply_for_fail.send(Err(e));
         anyhow!("failed")
     };
+
+    // ---- Pre-route cancellation: the deadline or disconnect fired while
+    // this submission sat in the request queue. Settle with the matching
+    // typed error before any stage-1 work (zero probe passes paid). -----
+    if let Some(reason) = sync::lock(early_cancels).remove(&id) {
+        let err = match reason {
+            CancelReason::Deadline => {
+                stats.deadline_rejects.inc();
+                anyhow::Error::new(DeadlineExceeded {
+                    id,
+                    rounds_completed: 0,
+                    retry_after: shed.retry_after(backend.resident_len(), lanes.len()),
+                })
+            }
+            CancelReason::Disconnect => {
+                stats.disconnect_cancels.inc();
+                anyhow!("client disconnected before completion (request {id})")
+            }
+        };
+        return Err(fail(err));
+    }
 
     // ---- Overload gauges: sampled once per admission, shared by the
     // shed decision and the peak telemetry the marks are tuned from. ----
@@ -811,7 +1006,18 @@ fn route_one(sub: Submission, queue_wait: Duration, ctx: &RouterCtx) -> Result<(
         in_flight: in_flight.clone(),
         anytime,
         resident,
+        last_round: Mutex::new(None),
+        round_tx,
     });
+
+    // ---- Registry: make this request findable for out-of-band
+    // cancellation. Dead entries (settled requests whose lanes all
+    // drained) are pruned here so the map stays O(in-flight). ----------
+    {
+        let mut reg = sync::lock(registry);
+        reg.retain(|_, w| w.strong_count() > 0);
+        reg.insert(id, Arc::downgrade(&state));
+    }
 
     // ---- Fan out chunk plans (atomically, so the scheduler sees the
     // whole request and within-request alpha order is preserved). One
@@ -1077,6 +1283,8 @@ mod tests {
             in_flight,
             anytime,
             resident: None,
+            last_round: Mutex::new(None),
+            round_tx: None,
         });
         (st, handle)
     }
@@ -1353,5 +1561,281 @@ mod tests {
         let a = handle.wait().unwrap().attribution;
         assert_eq!(a.rounds, 1, "the delivered attribution is the completed round");
         assert_eq!(a.steps, 3, "aborted refinement lanes are rolled back");
+    }
+
+    // ---- Out-of-band cancellation over a live coordinator ---------------
+
+    use crate::ig::{AnalyticExec, AnalyticModel, AnytimePolicy};
+
+    const FE: usize = 12;
+
+    fn analytic() -> AnalyticExec {
+        AnalyticExec::new(AnalyticModel::new(FE, 3, 0xC0FFEE, 9.0))
+    }
+
+    /// Wraps [`AnalyticExec`], parking `forward` / `eval_gather` calls
+    /// past a configured budget until [`GatedExec::release`] — the tests
+    /// below use it to open deterministic windows (request wedged in
+    /// stage 1, round 1 in flight, round 2 in flight) to cancel into.
+    struct GatedExec {
+        inner: AnalyticExec,
+        free_forwards: Option<u64>,
+        free_evals: Option<u64>,
+        forwards: Counter,
+        gathers: Counter,
+        evictions: Counter,
+        open: Mutex<bool>,
+        cv: sync::Condvar,
+    }
+
+    impl GatedExec {
+        fn new(inner: AnalyticExec) -> Self {
+            GatedExec {
+                inner,
+                free_forwards: None,
+                free_evals: None,
+                forwards: Counter::new(),
+                gathers: Counter::new(),
+                evictions: Counter::new(),
+                open: Mutex::new(false),
+                cv: sync::Condvar::new(),
+            }
+        }
+
+        fn release(&self) {
+            *sync::lock(&self.open) = true;
+            self.cv.notify_all();
+        }
+
+        fn park_if_gated(&self, seen: u64, free: Option<u64>) {
+            let Some(free) = free else { return };
+            if seen < free {
+                return;
+            }
+            let mut open = sync::lock(&self.open);
+            while !*open {
+                open = sync::wait(&self.cv, open);
+            }
+        }
+    }
+
+    impl GatherExec for GatedExec {
+        fn features(&self) -> usize {
+            self.inner.features()
+        }
+        fn num_classes(&self) -> usize {
+            self.inner.num_classes()
+        }
+        fn forward(&self, imgs: &[f32], rows: usize) -> Result<Vec<f32>> {
+            let seen = self.forwards.get();
+            self.forwards.inc();
+            self.park_if_gated(seen, self.free_forwards);
+            self.inner.forward(imgs, rows)
+        }
+        fn register_request(&self, slot: u64, x: &[f32], baseline: &[f32]) -> Result<()> {
+            self.inner.register_request(slot, x, baseline)
+        }
+        fn evict_request(&self, slot: u64) {
+            self.evictions.inc();
+            self.inner.evict_request(slot);
+        }
+        fn resident_len(&self) -> usize {
+            self.inner.resident_len()
+        }
+        fn shards(&self) -> usize {
+            self.inner.shards()
+        }
+        fn eval_gather(&self, shard: usize, lanes: &[GatherLane]) -> Result<GatherOut> {
+            let seen = self.gathers.get();
+            self.gathers.inc();
+            self.park_if_gated(seen, self.free_evals);
+            self.inner.eval_gather(shard, lanes)
+        }
+    }
+
+    fn serve_cfg() -> CoordinatorConfig {
+        CoordinatorConfig { workers: 1, feeders: 1, devices: 1, ..Default::default() }
+    }
+
+    /// An anytime request that can never converge (δ target 0, huge
+    /// budget): it refines until cancelled — the gate keeps later rounds
+    /// parked on the device so the cancel window is deterministic.
+    fn endless_req() -> ExplainRequest {
+        ExplainRequest::new(
+            (0..FE).map(|i| i as f32 / FE as f32).collect(),
+            crate::ig::IgOptions {
+                scheme: Scheme::NonUniform { n_int: 4 },
+                m: 8,
+                ..Default::default()
+            },
+        )
+        .with_anytime(AnytimePolicy::with_max_m(0.0, 1 << 20).unwrap())
+    }
+
+    /// A plain fixed-m request (completes in one round once unparked).
+    fn fixed_req() -> ExplainRequest {
+        ExplainRequest::new(
+            (0..FE).map(|i| i as f32 / FE as f32).collect(),
+            crate::ig::IgOptions {
+                scheme: Scheme::NonUniform { n_int: 4 },
+                m: 8,
+                ..Default::default()
+            },
+        )
+    }
+
+    fn wait_until(what: &str, mut ready: impl FnMut() -> bool) {
+        let t0 = Instant::now();
+        while !ready() {
+            assert!(t0.elapsed() < Duration::from_secs(10), "timed out waiting for {what}");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    #[test]
+    fn deadline_cancel_settles_with_streamed_partial() {
+        let mut backend = GatedExec::new(analytic());
+        backend.free_evals = Some(1); // round 1 executes; round 2 parks
+        let backend = Arc::new(backend);
+        let coord = Coordinator::start_with_backend(backend.clone(), serve_cfg()).unwrap();
+
+        let (round_tx, round_rx) = bounded(16);
+        let handle = coord.submit_with_stream(endless_req(), round_tx).unwrap();
+        let id = handle.id;
+
+        // The refill push bumps `refine_rounds` strictly after the
+        // round-1 snapshot is stored, so this wait guarantees a
+        // converged round exists to stream.
+        wait_until("round 1 to converge", || coord.stats().refine_rounds.get() >= 1);
+
+        assert!(coord.cancel_request(id, CancelReason::Deadline), "this call settles");
+        assert!(!coord.cancel_request(id, CancelReason::Deadline), "second call no-ops");
+
+        let resp = handle.wait().unwrap();
+        assert!(resp.partial, "deadline settles with the partial flag set");
+        assert_eq!(resp.attribution.rounds, 1, "the last converged round is round 1");
+        assert_eq!(resp.attribution.residuals.len(), 1, "residuals truncated to the round");
+
+        // The streamed round-1 update carries the same bits the partial
+        // response later delivered — the client that lost its reply to
+        // the deadline already holds an identical attribution.
+        let update = round_rx.try_recv().unwrap().expect("round 1 was streamed");
+        assert_eq!(update.id, id);
+        assert_eq!(update.round, 1);
+        assert_eq!(update.values.len(), FE);
+        for (s, p) in update.values.iter().zip(&resp.attribution.values) {
+            assert_eq!(s.to_bits(), p.to_bits(), "streamed round == partial, 0 ULP");
+        }
+
+        let stats = coord.stats();
+        assert_eq!(stats.deadline_partials.get(), 1);
+        assert_eq!(stats.completed.get(), 1, "a partial counts as a completion");
+        assert_eq!(stats.tier(LatencyBudget::Unbounded).completed.get(), 1);
+        assert_eq!(stats.deadline_rejects.get(), 0);
+        assert_eq!(coord.in_flight(), 0);
+
+        backend.release(); // the parked round-2 chunk executes harmlessly
+        coord.shutdown();
+        assert_eq!(backend.resident_len(), 0, "resident slot reclaimed");
+        assert_eq!(backend.evictions.get(), 1, "… exactly once");
+    }
+
+    #[test]
+    fn deadline_cancel_before_any_round_rejects_typed() {
+        let mut backend = GatedExec::new(analytic());
+        backend.free_evals = Some(0); // round 1 itself parks on the device
+        let backend = Arc::new(backend);
+        let coord = Coordinator::start_with_backend(backend.clone(), serve_cfg()).unwrap();
+        let handle = coord.submit(endless_req()).unwrap();
+        let id = handle.id;
+
+        // Routed = resident registration done; round 1 is parked, so no
+        // round can have converged when the deadline fires.
+        wait_until("the request to route", || backend.resident_len() >= 1);
+
+        assert!(coord.cancel_request(id, CancelReason::Deadline));
+        let err = handle.wait().unwrap_err();
+        let dl = err
+            .downcast_ref::<DeadlineExceeded>()
+            .unwrap_or_else(|| panic!("expected a typed DeadlineExceeded, got: {err}"));
+        assert_eq!(dl.id, id);
+        assert_eq!(dl.rounds_completed, 0);
+        // Default shed marks are 0 (disabled) ⇒ the overload factor
+        // clamps to 1 ⇒ the hint is exactly the base: integer-exact.
+        assert_eq!(dl.retry_after, Duration::from_millis(25));
+
+        let stats = coord.stats();
+        assert_eq!(stats.deadline_rejects.get(), 1);
+        assert_eq!(stats.failed.get(), 1);
+        assert_eq!(stats.deadline_partials.get(), 0);
+        assert_eq!(stats.completed.get(), 0);
+
+        backend.release();
+        coord.shutdown();
+        assert_eq!(backend.resident_len(), 0);
+        assert_eq!(backend.evictions.get(), 1);
+    }
+
+    #[test]
+    fn disconnect_cancel_frees_the_resident_slot_exactly_once() {
+        let mut backend = GatedExec::new(analytic());
+        backend.free_evals = Some(0);
+        let backend = Arc::new(backend);
+        let coord = Coordinator::start_with_backend(backend.clone(), serve_cfg()).unwrap();
+        let handle = coord.submit(endless_req()).unwrap();
+        let id = handle.id;
+        wait_until("the request to route", || backend.resident_len() >= 1);
+
+        assert!(coord.cancel_request(id, CancelReason::Disconnect));
+        let err = handle.wait().unwrap_err();
+        assert!(err.to_string().contains("disconnected"), "{err}");
+        assert_eq!(coord.stats().disconnect_cancels.get(), 1);
+        assert_eq!(coord.stats().failed.get(), 1);
+        // A late second cancel (deadline firing after the disconnect)
+        // must not settle or evict anything again.
+        assert!(!coord.cancel_request(id, CancelReason::Deadline));
+
+        backend.release();
+        coord.shutdown();
+        assert_eq!(backend.resident_len(), 0);
+        assert_eq!(backend.evictions.get(), 1, "slot reclaimed exactly once");
+    }
+
+    #[test]
+    fn pre_route_deadline_cancel_pays_zero_probe_passes() {
+        let mut backend = GatedExec::new(analytic());
+        backend.free_forwards = Some(0); // request A wedges the single
+                                         // router inside stage 1
+        let backend = Arc::new(backend);
+        let coord = Coordinator::start_with_backend(backend.clone(), serve_cfg()).unwrap();
+
+        let a = coord.submit(fixed_req()).unwrap();
+        wait_until("A to enter stage 1", || backend.forwards.get() >= 1);
+        let b = coord.submit(fixed_req()).unwrap();
+        let b_id = b.id;
+
+        // B sits in the request queue behind the wedged router: the
+        // cancel is pre-route, so the router settles it (this call
+        // reports false — it did not settle the request itself).
+        assert!(!coord.cancel_request(b_id, CancelReason::Deadline));
+
+        backend.release();
+        assert!(!a.wait().unwrap().partial, "A is untouched by B's cancel");
+        let err = b.wait().unwrap_err();
+        let dl = err
+            .downcast_ref::<DeadlineExceeded>()
+            .unwrap_or_else(|| panic!("expected a typed DeadlineExceeded, got: {err}"));
+        assert_eq!(dl.id, b_id);
+        assert_eq!(dl.retry_after, Duration::from_millis(25));
+        assert_eq!(coord.stats().deadline_rejects.get(), 1);
+
+        // Zero stage-1 passes for B: submit an identical C to measure
+        // one request's probe cost, and check A + B together paid
+        // exactly one request's worth.
+        let f_ab = backend.forwards.get();
+        let _ = coord.submit(fixed_req()).unwrap().wait().unwrap();
+        let cost_c = backend.forwards.get() - f_ab;
+        assert_eq!(f_ab, cost_c, "a pre-route cancel pays zero probe passes");
+        coord.shutdown();
     }
 }

@@ -27,7 +27,24 @@ use crate::ig::schedule::Schedule;
 use crate::ig::{AnytimePolicy, Attribution, IgOptions};
 use crate::metrics::StageBreakdown;
 
-use super::request::{ExplainResponse, LatencyBudget};
+use super::request::{ExplainResponse, LatencyBudget, RoundUpdate};
+
+/// A completed anytime round, captured at the moment the round's last
+/// lane landed — **before** the accumulator is rescaled for the next
+/// round. `values` are therefore bit-identical to what a standalone run
+/// stopped at `round` would deliver (docs/INVARIANTS.md §I12); the
+/// deadline path streams exactly these bits as the partial response.
+#[derive(Clone)]
+pub struct RoundSnapshot {
+    /// Attribution values at this round (F f64s, ordered-commit exact).
+    pub values: Vec<f64>,
+    /// Completeness residual δ at this round.
+    pub delta: f64,
+    /// 1-based round number.
+    pub round: usize,
+    /// Total gradient evaluations dispatched through this round.
+    pub evals: usize,
+}
 
 /// RAII eviction of a request's resident endpoint tensors: dropped when
 /// the last in-flight reference to the [`RequestState`] goes away
@@ -177,6 +194,16 @@ pub struct RequestState {
     /// reference to this state drops. `None` in unit tests and for
     /// backends without residency.
     pub resident: Option<ResidentGuard>,
+    /// Last **converged** anytime round, refreshed by
+    /// [`RequestState::on_round_complete`] before each refinement; the
+    /// deadline path settles from it ([`RequestState::finalize_partial`]).
+    /// Stays `None` for fixed-m requests and before round 1 lands.
+    pub last_round: Mutex<Option<RoundSnapshot>>,
+    /// Optional per-round subscriber (the serving front-end's writer):
+    /// each converged round is offered with a non-blocking `try_send` so
+    /// a slow client can never stall a feeder — missed rounds are simply
+    /// superseded by later ones. `None` for in-process callers.
+    pub round_tx: Option<Sender<RoundUpdate>>,
 }
 
 impl RequestState {
@@ -225,13 +252,38 @@ impl RequestState {
         let Some(any) = &self.anytime else {
             return RoundOutcome::Finalize;
         };
-        let delta = {
+        let (values, delta) = {
             let acc = sync::lock(&self.acc);
             // nuig:allow(float-reduce): sequential in-order Vec iteration — fixed order
             let sum: f64 = acc.values.iter().sum();
-            (sum - self.endpoint_gap).abs()
+            (acc.values.clone(), (sum - self.endpoint_gap).abs())
         };
-        sync::lock(&any.residuals).push(delta);
+        let round = {
+            let mut residuals = sync::lock(&any.residuals);
+            residuals.push(delta);
+            residuals.len()
+        };
+        // Snapshot the converged round BEFORE any refinement rescale:
+        // these are the exact bits a deadline-expired request streams as
+        // its partial response (I12), and the round update a subscribed
+        // front-end connection relays to its client.
+        let snap = RoundSnapshot {
+            values,
+            delta,
+            round,
+            evals: any.evals.load(Ordering::Acquire),
+        };
+        if let Some(tx) = &self.round_tx {
+            // Non-blocking: a full (slow client) or closed (disconnected
+            // client) stream must never stall the feeder.
+            let _ = tx.try_send(RoundUpdate {
+                id: self.id,
+                round: snap.round,
+                delta: snap.delta,
+                values: snap.values.clone(),
+            });
+        }
+        *sync::lock(&self.last_round) = Some(snap);
 
         let mut sched = sync::lock(&any.schedule);
         if !any.policy.should_refine(delta, sched.m_total) {
@@ -325,8 +377,69 @@ impl RequestState {
             attribution,
             total_latency: self.submitted_at.elapsed(),
             queue_wait: self.queue_wait,
+            partial: false,
         };
         // The client may have dropped its handle; that's fine.
+        let _ = self.reply.send(Ok(resp));
+        true
+    }
+
+    /// Settle with the last **converged** round's attribution as a
+    /// partial response — the deadline-expiry path. Returns `true` iff
+    /// this call settled the request; `false` when no round has
+    /// converged yet (nothing deterministic to stream — the caller
+    /// settles with [`crate::coordinator::request::DeadlineExceeded`]
+    /// instead) or when the request already settled (a racing
+    /// [`RequestState::finalize`]/[`RequestState::fail`] won — at most
+    /// one reply is ever sent, pinned by the cancel-vs-settle model in
+    /// `tests/interleave_models.rs`).
+    ///
+    /// The delivered bits are the round snapshot taken at round
+    /// completion, so they are 0-ULP identical to a standalone run
+    /// stopped at that round (I12).
+    pub fn finalize_partial(&self) -> bool {
+        if sync::lock(&self.last_round).is_none() {
+            // Don't claim completion: with no converged round the
+            // deadline degenerates to a typed rejection, and a racing
+            // finalize()/fail() may still settle normally.
+            return false;
+        }
+        if !self.try_complete() {
+            return false;
+        }
+        // Re-read after claiming: a later round may have converged since
+        // the gate above — deliver the freshest snapshot.
+        let snap = sync::lock(&self.last_round).clone().expect("snapshot never reverts to None");
+        let residuals = match &self.anytime {
+            None => vec![snap.delta],
+            Some(any) => {
+                let mut r = sync::lock(&any.residuals).clone();
+                r.truncate(snap.round);
+                if r.is_empty() {
+                    vec![snap.delta]
+                } else {
+                    r
+                }
+            }
+        };
+        let attribution = Attribution {
+            values: snap.values,
+            target: self.target,
+            steps: snap.evals,
+            probe_passes: self.probe_passes,
+            delta: snap.delta,
+            endpoint_gap: self.endpoint_gap,
+            rounds: snap.round,
+            residuals,
+            breakdown: *sync::lock(&self.breakdown),
+        };
+        let resp = ExplainResponse {
+            id: self.id,
+            attribution,
+            total_latency: self.submitted_at.elapsed(),
+            queue_wait: self.queue_wait,
+            partial: true,
+        };
         let _ = self.reply.send(Ok(resp));
         true
     }
@@ -440,6 +553,8 @@ mod tests {
             in_flight: Arc::new(AtomicUsize::new(1)),
             anytime,
             resident: None,
+            last_round: Mutex::new(None),
+            round_tx: None,
         });
         (st, handle)
     }
@@ -643,6 +758,119 @@ mod tests {
         assert_eq!(a.delta, a.residuals[1]);
         assert_eq!(a.steps, 5);
         assert!((a.values[0] - 3.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn partial_without_converged_round_declines() {
+        // Deadline before round 1 lands: nothing to stream, request NOT
+        // claimed — a later finalize still settles normally.
+        let (st, handle) = mk_state_anytime(3, 10.0, Some(mk_anytime(1e-9, 64, 2)));
+        assert!(!st.finalize_partial(), "no snapshot yet");
+        assert!(!st.completed.load(Ordering::Acquire), "completion not claimed");
+        st.add_lane(0, &[1.0, 0.0, 0.0, 0.0]);
+        st.add_lane(1, &[1.0, 0.0, 0.0, 0.0]);
+        assert!(st.add_lane(2, &[1.0, 0.0, 0.0, 0.0]));
+        let _ = st.on_round_complete(16);
+        assert!(st.finalize(), "normal completion still available");
+        assert!(!handle.wait().unwrap().partial);
+    }
+
+    #[test]
+    fn partial_delivers_last_converged_round_bits() {
+        // Round 1 lands, refinement begins; deadline fires mid-round-2.
+        // The partial must be the round-1 snapshot — pre-rescale bits.
+        let (st, handle) = mk_state_anytime(3, 10.0, Some(mk_anytime(1e-9, 64, 2)));
+        st.add_lane(0, &[1.0, 0.0, 0.0, 0.0]);
+        st.add_lane(1, &[1.0, 0.0, 0.0, 0.0]);
+        assert!(st.add_lane(2, &[1.0, 0.0, 0.0, 0.0]));
+        let plans = match st.on_round_complete(16) {
+            RoundOutcome::Refine(p) => p,
+            RoundOutcome::Finalize => panic!("must refine"),
+        };
+        // Mid-round-2: one novel lane landed, one still outstanding.
+        st.add_lane(0, &[9.0, 0.0, 0.0, 0.0]);
+        assert!(st.finalize_partial(), "snapshot available → partial settles");
+        assert!(!st.finalize(), "already settled");
+        let resp = handle.wait().unwrap();
+        assert!(resp.partial);
+        let a = &resp.attribution;
+        assert_eq!(a.values[0].to_bits(), 3.0f64.to_bits(), "round-1 bits, not the carried half");
+        assert_eq!(a.rounds, 1);
+        assert_eq!(a.steps, 3, "evals at the snapshot, not the refined total");
+        assert_eq!(a.residuals.len(), 1);
+        drop(plans);
+    }
+
+    #[test]
+    fn partial_and_finalize_settle_exactly_once_concurrently() {
+        // The cancel-vs-settle race at the unit level: whichever path
+        // wins, exactly one reply is delivered and in_flight hits 0.
+        for _ in 0..32 {
+            let (st, handle) = mk_state_anytime(3, 10.0, Some(mk_anytime(1e-9, 64, 2)));
+            st.add_lane(0, &[1.0, 0.0, 0.0, 0.0]);
+            st.add_lane(1, &[1.0, 0.0, 0.0, 0.0]);
+            assert!(st.add_lane(2, &[1.0, 0.0, 0.0, 0.0]));
+            let _ = st.on_round_complete(16); // snapshot now exists
+            let st2 = st.clone();
+            let t = std::thread::spawn(move || st2.finalize_partial());
+            let won_final = st.finalize();
+            let won_partial = t.join().unwrap();
+            assert!(
+                won_final ^ won_partial,
+                "exactly one settle path may win (final {won_final}, partial {won_partial})"
+            );
+            assert_eq!(st.in_flight.load(Ordering::Acquire), 0);
+            let resp = handle.wait().unwrap();
+            assert_eq!(resp.partial, won_partial);
+        }
+    }
+
+    #[test]
+    fn round_stream_offers_each_converged_round() {
+        let (stream_tx, stream_rx) = crate::exec::channel::bounded(8);
+        let (tx, _handle) = ResponseHandle::pair(1);
+        let schedule = Schedule::uniform(2, crate::ig::Rule::Trapezoid).unwrap();
+        let st = Arc::new(RequestState {
+            id: 1,
+            image: Arc::new(vec![1.0; 4]),
+            baseline: Arc::new(vec![0.0; 4]),
+            target: 0,
+            opts: IgOptions::default(),
+            budget: LatencyBudget::Unbounded,
+            acc: Mutex::new(Accum::new(4)),
+            remaining: AtomicUsize::new(3),
+            steps: 3,
+            probe_passes: 0,
+            endpoint_gap: 10.0,
+            breakdown: Mutex::new(StageBreakdown::default()),
+            submitted_at: Instant::now(),
+            queue_wait: std::time::Duration::ZERO,
+            reply: tx,
+            completed: AtomicBool::new(false),
+            in_flight: Arc::new(AtomicUsize::new(1)),
+            anytime: Some(AnytimeRounds {
+                policy: AnytimePolicy::with_max_m(1e-9, 64).unwrap(),
+                evals: AtomicUsize::new(schedule.len()),
+                schedule: Mutex::new(schedule),
+                residuals: Mutex::new(Vec::new()),
+            }),
+            resident: None,
+            last_round: Mutex::new(None),
+            round_tx: Some(stream_tx),
+        });
+        st.add_lane(0, &[1.0, 0.0, 0.0, 0.0]);
+        st.add_lane(1, &[1.0, 0.0, 0.0, 0.0]);
+        assert!(st.add_lane(2, &[1.0, 0.0, 0.0, 0.0]));
+        let _ = st.on_round_complete(16);
+        let upd = stream_rx.try_recv().unwrap().expect("round 1 streamed");
+        assert_eq!(upd.id, 1);
+        assert_eq!(upd.round, 1);
+        assert_eq!(upd.values[0].to_bits(), 3.0f64.to_bits());
+        assert!((upd.delta - 7.0).abs() < 1e-9);
+        // The snapshot matches the streamed update bit-for-bit.
+        let snap = st.last_round.lock().unwrap().clone().unwrap();
+        assert_eq!(snap.values[0].to_bits(), upd.values[0].to_bits());
+        assert_eq!(snap.round, 1);
     }
 
     #[test]

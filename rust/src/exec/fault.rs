@@ -145,6 +145,87 @@ impl FaultPlan {
     }
 }
 
+/// What a scripted chaos *client* does to one of its requests — the
+/// front-end-facing counterpart of [`FaultAction`]. Where device faults
+/// attack the gather seam, client faults attack the serving seam: the
+/// two graceful-degradation paths of the front-end's cancellation tree.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClientFaultAction {
+    /// The client drops its connection before the request settles (the
+    /// request must settle server-side exactly once as a disconnect,
+    /// freeing the resident slot).
+    Disconnect,
+    /// The client's deadline expires mid-refinement (the request must
+    /// settle with the last converged round as a partial, or a typed
+    /// deadline rejection when none converged).
+    DeadlineExpire,
+}
+
+/// One client-side fault: `action` applies to the request with 0-based
+/// submission ordinal `at` on the scripted client.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ClientFaultEvent {
+    /// Client-local submission ordinal the fault targets.
+    pub at: u64,
+    /// What the client does to that request.
+    pub action: ClientFaultAction,
+}
+
+/// A reproducible client-chaos scenario: which of a client's requests
+/// get disconnected or deadline-expired, derived from a seed alone
+/// (same xorshift64* stream discipline as [`FaultPlan::from_seed`] —
+/// no global RNG, no clock, so a failing sweep seed replays exactly).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ClientFaultPlan {
+    seed: u64,
+    events: Vec<ClientFaultEvent>,
+}
+
+impl ClientFaultPlan {
+    /// Derive a plan over `requests` submissions from `seed`: roughly a
+    /// third of the requests are faulted, split between
+    /// [`ClientFaultAction::Disconnect`] and
+    /// [`ClientFaultAction::DeadlineExpire`] by the seed stream. The
+    /// same seed always yields the same plan.
+    pub fn from_seed(seed: u64, requests: u64) -> ClientFaultPlan {
+        let mut state = seed | 1;
+        let mut next = move || -> u64 {
+            state ^= state >> 12;
+            state ^= state << 25;
+            state ^= state >> 27;
+            state.wrapping_mul(0x2545_F491_4F6C_DD1D)
+        };
+        let mut events = Vec::new();
+        for at in 0..requests {
+            if next() % 3 != 0 {
+                continue;
+            }
+            let action = if next() % 2 == 0 {
+                ClientFaultAction::Disconnect
+            } else {
+                ClientFaultAction::DeadlineExpire
+            };
+            events.push(ClientFaultEvent { at, action });
+        }
+        ClientFaultPlan { seed, events }
+    }
+
+    /// The fault (if any) scripted for submission ordinal `at`.
+    pub fn action_for(&self, at: u64) -> Option<ClientFaultAction> {
+        self.events.iter().find(|e| e.at == at).map(|e| e.action)
+    }
+
+    /// The seed this plan was derived from.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// The scripted events, in submission order.
+    pub fn events(&self) -> &[ClientFaultEvent] {
+        &self.events
+    }
+}
+
 /// Per-shard injector state: lifecycle health, the shard's (simulated)
 /// view of resident registrations, and its not-yet-fired events.
 struct ShardState {
@@ -566,6 +647,39 @@ mod tests {
         clean.register_request(4, &[1.0, 2.0], &[0.0, 0.0]).unwrap();
         let unfaulted = clean.eval_gather(0, &[lane(4)]).unwrap();
         assert_eq!(stalled.rows, unfaulted.rows, "stalls never change bits");
+    }
+
+    #[test]
+    fn client_plan_is_deterministic_and_mixed() {
+        let a = ClientFaultPlan::from_seed(64, 256);
+        let b = ClientFaultPlan::from_seed(64, 256);
+        assert_eq!(a, b, "same seed, same plan");
+        assert_ne!(a, ClientFaultPlan::from_seed(65, 256));
+        assert_eq!(a.seed(), 64);
+        // Events come out in submission order and cover both actions
+        // over a long enough run.
+        for w in a.events().windows(2) {
+            assert!(w[0].at < w[1].at, "{w:?}");
+        }
+        let discos = a
+            .events()
+            .iter()
+            .filter(|e| e.action == ClientFaultAction::Disconnect)
+            .count();
+        let expiries = a.events().len() - discos;
+        assert!(discos > 0 && expiries > 0, "both fault kinds present ({discos}/{expiries})");
+        // Roughly a third faulted: loose band, exact per-seed.
+        assert!(a.events().len() > 40 && a.events().len() < 160, "{}", a.events().len());
+        // Lookup agrees with the event list.
+        for ev in a.events() {
+            assert_eq!(a.action_for(ev.at), Some(ev.action));
+        }
+        let faulted: BTreeSet<u64> = a.events().iter().map(|e| e.at).collect();
+        for at in 0..256 {
+            if !faulted.contains(&at) {
+                assert_eq!(a.action_for(at), None);
+            }
+        }
     }
 
     #[test]

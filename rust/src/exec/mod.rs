@@ -10,7 +10,10 @@
 //!   [`ThreadPool::scoped_map`] for lending stack borrows to workers;
 //! * [`channel::bounded`] — a Condvar-based bounded MPMC channel with
 //!   blocking/backpressure semantics and explicit close.
-//! * [`CancelToken`] — cooperative cancellation shared across threads.
+//! * [`CancelToken`] — cooperative cancellation shared across threads,
+//!   with parent/child linkage: a child observes its parent's cancel,
+//!   a cancelled child leaves its parent and siblings untouched — the
+//!   serving front-end's cancellation tree (docs/INVARIANTS.md §I11).
 //! * [`batch`] — the batched IG execution backend: planar point batches,
 //!   per-worker scratch arenas, and deterministic chunked dispatch
 //!   ([`BatchExec`]) over the pool.
@@ -21,7 +24,9 @@
 //! * [`fault`] — the deterministic chaos harness: seeded, step-indexed
 //!   [`fault::FaultPlan`]s injected at the [`gather::GatherExec`] seam
 //!   by [`fault::FaultInjector`], making kill/revive/stall runs
-//!   reproducible (`tests/chaos_resilience.rs`).
+//!   reproducible, plus seeded client-side
+//!   [`fault::ClientFaultPlan`]s (Disconnect / DeadlineExpire) driven
+//!   over real front-end connections (`tests/chaos_resilience.rs`).
 
 pub mod batch;
 pub mod channel;
@@ -33,7 +38,10 @@ pub mod sync;
 mod token;
 
 pub use batch::BatchExec;
-pub use fault::{FaultAction, FaultEvent, FaultInjector, FaultPlan};
+pub use fault::{
+    ClientFaultAction, ClientFaultEvent, ClientFaultPlan, FaultAction, FaultEvent, FaultInjector,
+    FaultPlan,
+};
 pub use gather::{GatherExec, GatherLane, GatherOut, ResidentPool, ShardHealth};
 pub use channel::{bounded, Receiver, RecvError, SendError, Sender};
 pub use pool::{JoinHandle, ThreadPool};

@@ -1,30 +1,118 @@
-//! Cooperative cancellation token.
+//! Hierarchical cooperative cancellation.
+//!
+//! A [`CancelToken`] is a node in a cancellation *tree*: cancelling a
+//! token cancels its whole subtree — children, grandchildren, … — and
+//! nothing else. The serving front-end builds a three-level tree from
+//! these (coordinator shutdown → connection → request), so coordinator
+//! shutdown, a client disconnect, and a per-request deadline each cancel
+//! exactly their own scope without disturbing sibling requests
+//! (docs/INVARIANTS.md §I11).
+//!
+//! Semantics:
+//!
+//! * `cancel()` is idempotent and propagates **eagerly** down the tree,
+//!   so `is_cancelled()` stays a single O(1) atomic load — workers poll
+//!   it on hot paths.
+//! * A child created from an already-cancelled parent starts cancelled.
+//!   The registration handshake (register first, then check the parent's
+//!   flag) closes the race against a concurrent `cancel()`: either the
+//!   parent's snapshot sees the child, or the child sees the parent's
+//!   flag — in both interleavings the child ends up cancelled.
+//! * `Clone` shares the *same* node (the pre-tree behaviour): clones see
+//!   each other's cancellation instantly. Use [`CancelToken::child`] for
+//!   a new subtree scope.
+//!
+//! All synchronization goes through [`crate::exec::sync`] so the
+//! cancel-vs-settle model in `tests/interleave_models.rs` can explore
+//! the token's interleavings under `--features loom-models`.
 
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Weak};
 
-/// A cheaply-cloneable flag for cooperative shutdown. The coordinator
-/// hands one to every worker; `cancel()` is idempotent and visible across
-/// threads with acquire/release ordering.
-#[derive(Clone, Default)]
+use crate::exec::sync::atomic::{AtomicBool, Ordering};
+use crate::exec::sync::{self, Mutex};
+
+/// One node of the cancellation tree: the flag plus the live children
+/// the flag must propagate into.
+struct Node {
+    flag: AtomicBool,
+    children: Mutex<Vec<Weak<Node>>>,
+}
+
+impl Node {
+    fn fresh() -> Arc<Node> {
+        Arc::new(Node { flag: AtomicBool::new(false), children: Mutex::new(Vec::new()) })
+    }
+
+    fn cancel(&self) {
+        // First caller wins; the flag is set BEFORE the children snapshot
+        // so a child registering concurrently either lands in the
+        // snapshot or observes the flag at registration (never neither).
+        if self.flag.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        // Take the list: every child below is notified here, and any
+        // future child self-cancels at registration.
+        let kids: Vec<Weak<Node>> = std::mem::take(&mut *sync::lock(&self.children));
+        for kid in kids {
+            if let Some(kid) = kid.upgrade() {
+                kid.cancel();
+            }
+        }
+    }
+}
+
+/// A cheaply-cloneable cancellation flag with parent/child linkage (see
+/// the module doc). The coordinator hands one to every worker;
+/// `cancel()` is idempotent and visible across threads with
+/// acquire/release ordering.
+#[derive(Clone)]
 pub struct CancelToken {
-    flag: Arc<AtomicBool>,
+    node: Arc<Node>,
+}
+
+impl Default for CancelToken {
+    fn default() -> Self {
+        CancelToken { node: Node::fresh() }
+    }
 }
 
 impl CancelToken {
-    /// A fresh, uncancelled token.
+    /// A fresh, uncancelled root token.
     pub fn new() -> Self {
         Self::default()
     }
 
-    /// Signal cancellation to all clones.
+    /// Signal cancellation to all clones and to every descendant token.
+    /// Idempotent; siblings and ancestors are untouched.
     pub fn cancel(&self) {
-        self.flag.store(true, Ordering::Release);
+        self.node.cancel();
     }
 
-    /// Has any clone signalled cancellation?
+    /// Has this token (or an ancestor) signalled cancellation?
     pub fn is_cancelled(&self) -> bool {
-        self.flag.load(Ordering::Acquire)
+        self.node.flag.load(Ordering::Acquire)
+    }
+
+    /// A new token one level below this one: cancelled when `self` (or
+    /// any ancestor) cancels, while its own `cancel()` stays scoped to
+    /// its own subtree. A child of an already-cancelled token starts
+    /// cancelled.
+    pub fn child(&self) -> CancelToken {
+        let node = Node::fresh();
+        {
+            let mut kids = sync::lock(&self.node.children);
+            // Prune dead subtrees so long-lived roots (the coordinator
+            // token under millions of requests) stay O(live children).
+            kids.retain(|w| w.strong_count() > 0);
+            kids.push(Arc::downgrade(&node));
+        }
+        // Registration handshake: the parent's cancel() sets its flag
+        // before snapshotting children, so checking the flag AFTER
+        // registering closes the race window (see module doc).
+        if self.node.flag.load(Ordering::Acquire) {
+            node.cancel();
+        }
+        CancelToken { node }
     }
 }
 
@@ -61,5 +149,90 @@ mod tests {
         t.cancel();
         t.cancel();
         assert!(t.is_cancelled());
+    }
+
+    #[test]
+    fn child_observes_parent_cancel() {
+        let root = CancelToken::new();
+        let conn = root.child();
+        let req = conn.child();
+        assert!(!req.is_cancelled());
+        root.cancel();
+        assert!(conn.is_cancelled(), "children cancel with the parent");
+        assert!(req.is_cancelled(), "propagation reaches grandchildren");
+    }
+
+    #[test]
+    fn child_cancel_is_scoped_to_its_subtree() {
+        // The subtree-isolation contract (I11): a request deadline must
+        // not cancel its siblings or its connection.
+        let root = CancelToken::new();
+        let conn = root.child();
+        let req_a = conn.child();
+        let req_b = conn.child();
+        req_a.cancel();
+        assert!(req_a.is_cancelled());
+        assert!(!req_b.is_cancelled(), "sibling untouched");
+        assert!(!conn.is_cancelled(), "parent untouched");
+        assert!(!root.is_cancelled(), "root untouched");
+    }
+
+    #[test]
+    fn mid_level_cancel_takes_subtree_only() {
+        let root = CancelToken::new();
+        let conn_a = root.child();
+        let conn_b = root.child();
+        let req = conn_a.child();
+        conn_a.cancel();
+        assert!(req.is_cancelled(), "a disconnect cancels the connection's requests");
+        assert!(!conn_b.is_cancelled(), "sibling connection keeps serving");
+        assert!(!root.is_cancelled());
+    }
+
+    #[test]
+    fn child_of_cancelled_parent_starts_cancelled() {
+        let root = CancelToken::new();
+        root.cancel();
+        assert!(root.child().is_cancelled());
+        // And transitively, after the children list was already drained.
+        let conn = root.child();
+        assert!(conn.child().is_cancelled());
+    }
+
+    #[test]
+    fn concurrent_child_registration_never_escapes_cancel() {
+        // The registration race: children spawned while the parent
+        // cancels must end up cancelled, whichever side wins.
+        for _ in 0..64 {
+            let root = CancelToken::new();
+            let spawner = root.clone();
+            let h = std::thread::spawn(move || {
+                let kids: Vec<CancelToken> = (0..8).map(|_| spawner.child()).collect();
+                kids
+            });
+            root.cancel();
+            for kid in h.join().unwrap() {
+                // A child created strictly after cancel() returned must
+                // observe it; ones created during may observe it either
+                // at registration or via the snapshot — both paths set
+                // the flag before child() returns or cancel() returns.
+                while !kid.is_cancelled() {
+                    std::thread::yield_now();
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dropped_children_are_pruned() {
+        let root = CancelToken::new();
+        for _ in 0..1000 {
+            let _ = root.child(); // dropped immediately
+        }
+        let live = root.child();
+        // The prune in child() keeps the list bounded by live children.
+        assert!(sync::lock(&root.node.children).len() <= 2);
+        root.cancel();
+        assert!(live.is_cancelled());
     }
 }

@@ -10,13 +10,18 @@
 //! `--help` on any subcommand prints usage. Benches live in `cargo bench`
 //! targets (one per paper figure); `examples/` hold the runnable demos.
 
+use std::io::Write;
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
 use nuig::cli::Args;
-use nuig::config::{CoordinatorConfig, IgConfig, NuigConfig, RuntimeConfig};
-use nuig::coordinator::{Coordinator, ExplainRequest, LatencyBudget, Policy};
+use nuig::config::{CoordinatorConfig, FrontendConfig, IgConfig, NuigConfig, RuntimeConfig};
+use nuig::coordinator::frontend::framing::{self, Frame, RequestFrame};
+use nuig::coordinator::frontend::listener;
+use nuig::coordinator::{Coordinator, ExplainRequest, Frontend, LatencyBudget, Policy};
 use nuig::data::{synth, Corpus};
-use nuig::ig::{self, convergence::ConvergencePolicy, ensemble, Allocation, BaselineKind, IgOptions, Rule, Scheme};
+use nuig::ig::{self, convergence::ConvergencePolicy, ensemble, Allocation, AnalyticExec, AnalyticModel, BaselineKind, IgOptions, Rule, Scheme};
 use nuig::runtime::Runtime;
 use nuig::viz;
 
@@ -43,12 +48,22 @@ COMMANDS:
             [--batch-wait-us N] [--policy fifo|round-robin|shortest-first]
             [--tier unbounded|tight|standard|thorough] [--cache N]
             [--feeders N] [--devices N] [--resident-cap N]
+            [--listen tcp:HOST:PORT|unix:PATH] [--deadline-ms N]
+            [--conn-backlog N] [--conn-workers N] [--drain-timeout-ms N]
+            [--analytic]
             (--tier pins every request's latency budget; --cache N
              enables the probe-schedule cache with N entries — tight-tier
              requests pin their target so warm traffic skips stage 1;
              --feeders/--devices shard the gather-indexed feeder pool
              over N device threads, --resident-cap bounds the resident
-             request-tensor pool per device)
+             request-tensor pool per device; --listen starts the framed
+             serving front-end and drives the same synthetic stream over
+             a loopback connection: converged anytime rounds stream as
+             ROUND frames, deadline-expired requests settle as partial
+             FINALs carrying the last converged round, and typed REJECT
+             frames print their integer-deterministic retry-after hint;
+             --analytic serves the artifact-free analytic backend — the
+             CI loopback smoke path)
   sweep     Convergence sweep: delta vs m for schemes
             [--class N] [--grid 8,16,32,...] [--schemes uniform,nonuniform:4]
   render    Write overlay heatmaps for the eval corpus
@@ -157,8 +172,17 @@ fn cmd_serve(mut args: Args, artifacts: &str) -> Result<()> {
     let devices = args.opt("devices", 1usize)?;
     let feeders = args.opt("feeders", devices.max(1))?;
     let resident_cap = args.opt("resident-cap", 1024usize)?;
+    let listen = args.opt_str("listen");
+    let analytic = args.flag("analytic");
+    let deadline_ms = args.opt("deadline-ms", 0u64)?;
+    let conn_backlog = args.opt("conn-backlog", 64usize)?;
+    let conn_workers = args.opt("conn-workers", 2usize)?;
+    let drain_timeout_ms = args.opt("drain-timeout-ms", 5_000u64)?;
     let opts = parse_opts(&mut args)?;
     args.finish()?;
+    if analytic && listen.is_none() {
+        bail!("--analytic requires --listen (the loopback smoke path)");
+    }
 
     let mut cfg = CoordinatorConfig {
         workers,
@@ -186,6 +210,31 @@ fn cmd_serve(mut args: Args, artifacts: &str) -> Result<()> {
         coordinator: cfg.clone(),
     };
     nuig_cfg.validate()?;
+
+    if let Some(spec) = listen {
+        let fcfg = FrontendConfig {
+            listen: spec,
+            conn_backlog,
+            conn_workers,
+            default_deadline_ms: deadline_ms,
+            drain_timeout_ms,
+            ..Default::default()
+        };
+        fcfg.validate()?;
+        let coord = if analytic {
+            // Artifact-free loopback smoke: the same analytic backend
+            // the serving benches/tests use, sized to the synthetic
+            // corpus so the request stream is identical either way.
+            let features = synth::H * synth::W * synth::C;
+            let model = AnalyticModel::new(features, synth::NUM_CLASSES, 0xC0FFEE, 9.0);
+            let backend = Arc::new(AnalyticExec::with_shards(model, devices));
+            Arc::new(Coordinator::start_with_backend(backend, cfg)?)
+        } else {
+            let rt = Runtime::load_sharded(artifacts, true, devices)?;
+            Arc::new(Coordinator::start(&rt, cfg)?)
+        };
+        return serve_frontend(coord, fcfg, requests, tier, opts);
+    }
 
     let rt = Runtime::load_sharded(artifacts, true, devices)?;
     let coord = Coordinator::start(&rt, cfg)?;
@@ -257,6 +306,106 @@ fn cmd_serve(mut args: Args, artifacts: &str) -> Result<()> {
         rt.shard_stats().iter().map(|s| s.total_executions()).sum();
     println!("device execs     : {total_execs} total across {} shard(s)", rt.shards());
     coord.shutdown();
+    Ok(())
+}
+
+/// Drive the synthetic request stream through the framed serving
+/// front-end over a loopback connection: the tier-1 smoke path for
+/// `nuig serve --listen`. Typed REJECT frames print their
+/// integer-deterministic retry-after hint; deadline-expired requests
+/// settle as partial FINALs carrying the last converged round.
+fn serve_frontend(
+    coord: Arc<Coordinator>,
+    fcfg: FrontendConfig,
+    requests: usize,
+    tier: LatencyBudget,
+    opts: IgOptions,
+) -> Result<()> {
+    let max_frame = fcfg.max_frame_bytes;
+    let fe = Frontend::start(Arc::clone(&coord), fcfg)?;
+    println!("listening        : {}", fe.local_spec());
+
+    let corpus = Corpus::generate((requests / synth::NUM_CLASSES).max(1));
+    let stream = listener::connect(fe.local_spec())?;
+    let mut write_half = stream.try_clone()?;
+    let mut reader = framing::FrameReader::new(stream, max_frame);
+
+    let t0 = std::time::Instant::now();
+    for i in 0..requests {
+        let li = &corpus.images[i % corpus.len()];
+        let rq = RequestFrame {
+            tag: i as u64 + 1,
+            deadline_ms: 0, // 0 = the front-end's configured default
+            budget: tier.index() as u8,
+            target: if tier == LatencyBudget::Tight { li.class as i64 } else { -1 },
+            m: opts.m as u32,
+            anytime: None,
+            image: li.pixels.clone(),
+            baseline: None,
+        };
+        write_half.write_all(&framing::encode(&Frame::Request(rq)))?;
+    }
+    write_half.flush()?;
+
+    let (mut settled, mut partials, mut rejects, mut errors) = (0usize, 0usize, 0usize, 0usize);
+    let mut rounds = 0usize;
+    let mut max_delta = 0f64;
+    while settled < requests {
+        match reader.next()? {
+            Some(Frame::Round(_)) => rounds += 1,
+            Some(Frame::Final(f)) => {
+                settled += 1;
+                if f.partial {
+                    partials += 1;
+                }
+                max_delta = max_delta.max(f.delta);
+            }
+            Some(Frame::Reject(r)) => {
+                settled += 1;
+                rejects += 1;
+                let reason = match r.reason {
+                    framing::REJECT_OVERLOAD => "overload",
+                    framing::REJECT_DEADLINE => "deadline",
+                    framing::REJECT_BACKLOG => "backlog",
+                    framing::REJECT_DRAINING => "draining",
+                    _ => "unknown",
+                };
+                eprintln!(
+                    "request tag {} shed ({reason}): retry after {}ms (resident {}, lane depth {})",
+                    r.tag, r.retry_after_ms, r.resident, r.lane_depth
+                );
+            }
+            Some(Frame::Error(e)) => {
+                settled += 1;
+                errors += 1;
+                eprintln!("request tag {} failed: {}", e.tag, e.message);
+            }
+            Some(Frame::Request(_)) => bail!("unexpected REQUEST frame from server"),
+            None => bail!("connection closed with {settled} of {requests} settled"),
+        }
+    }
+    let wall = t0.elapsed();
+
+    println!("requests         : {requests} settled in {wall:.2?}");
+    println!("throughput       : {:.2} explanations/s", requests as f64 / wall.as_secs_f64());
+    println!(
+        "frontend         : {} accepted conns, {} requests, {rounds} rounds streamed",
+        fe.stats().conns_accepted.get(),
+        fe.stats().requests.get(),
+    );
+    println!(
+        "degradation      : {partials} partial, {rejects} shed, {errors} failed ({} deadlines fired)",
+        fe.deadlines_fired()
+    );
+    println!("max delta        : {max_delta:.6}");
+
+    drop(write_half);
+    drop(reader);
+    fe.shutdown();
+    drop(fe);
+    if let Ok(c) = Arc::try_unwrap(coord) {
+        c.shutdown();
+    }
     Ok(())
 }
 

@@ -17,13 +17,20 @@
 //! Seed coverage scales with `NUIG_CHAOS_SEEDS` (default 4 in tier-1;
 //! the nightly sweep raises it).
 
+use std::collections::BTreeMap;
+use std::io::Write;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
-use nuig::config::CoordinatorConfig;
-use nuig::coordinator::{dispatch_failover, Coordinator, ExplainRequest, LatencyBudget};
+use nuig::config::{CoordinatorConfig, FrontendConfig};
+use nuig::coordinator::frontend::framing::{self, Frame, FrameReader, RequestFrame, REJECT_DEADLINE};
+use nuig::coordinator::frontend::listener;
+use nuig::coordinator::{dispatch_failover, Coordinator, ExplainRequest, Frontend, LatencyBudget};
 use nuig::exec::gather::{GatherExec, GatherLane, ShardHealth};
-use nuig::exec::{FaultAction, FaultEvent, FaultInjector, FaultPlan};
+use nuig::exec::{
+    ClientFaultAction, ClientFaultPlan, FaultAction, FaultEvent, FaultInjector, FaultPlan,
+};
 use nuig::ig::{AnalyticExec, AnalyticModel, IgOptions, Scheme};
 
 const F: usize = 32;
@@ -217,6 +224,205 @@ fn seeded_kill_revive_sweep_settles_exactly_once_with_bitwise_survivors() {
         let plan = FaultPlan::from_seed(seed, 2, 16);
         let run = run_chaos(2, N, &plan);
         assert_survivors_bit_identical(&run, &reference, &format!("seed {seed}"));
+    }
+}
+
+// ---- Client-side chaos through the serving front-end ------------------
+//
+// The wire-facing half of the fault model: seeded Disconnect /
+// DeadlineExpire client events (`exec::ClientFaultPlan`) drive real
+// socket connections against a live `Frontend`, concurrently with an
+// untouched survivor stream on its own connection. Contracts:
+// every request settles exactly once (completed + failed == n, nothing
+// in flight, resident pool drained), and survivors are bit-identical
+// to the unfaulted run — a neighbour's disconnect or deadline cancels
+// only its own cancellation subtree (docs/INVARIANTS.md §I11).
+
+/// The wire-expressible workload slice: the frame protocol carries m
+/// but pins the engine-default scheme, so the mixed-scheme `workload`
+/// above cannot ride the socket verbatim.
+fn wire_frame(i: usize, deadline_ms: u64, anytime: Option<(f64, u64)>) -> Frame {
+    Frame::Request(RequestFrame {
+        tag: i as u64 + 1,
+        deadline_ms,
+        budget: if i % 3 == 0 { LatencyBudget::Standard.index() as u8 } else { 0 },
+        target: -1,
+        m: [8, 12, 16, 24][i % 4] as u32,
+        anytime,
+        image: image(i),
+        baseline: None,
+    })
+}
+
+/// Unfaulted single-feeder reference bits for the wire workload.
+fn wire_reference(n: usize) -> Vec<Vec<u64>> {
+    let inner = Arc::new(AnalyticExec::with_shards(model(), 1));
+    let coord = Coordinator::start_with_backend(inner, cfg(1, 1)).unwrap();
+    let out = (0..n)
+        .map(|i| {
+            let req = ExplainRequest::new(
+                image(i),
+                IgOptions {
+                    scheme: Scheme::NonUniform { n_int: 4 },
+                    m: [8, 12, 16, 24][i % 4],
+                    ..Default::default()
+                },
+            );
+            let req = if i % 3 == 0 { req.with_budget(LatencyBudget::Standard) } else { req };
+            coord
+                .explain(req)
+                .unwrap()
+                .attribution
+                .values
+                .iter()
+                .map(|v| v.to_bits())
+                .collect()
+        })
+        .collect();
+    coord.shutdown();
+    out
+}
+
+fn wait_until(what: &str, mut ready: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    while !ready() {
+        assert!(t0.elapsed() < Duration::from_secs(30), "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+fn run_client_chaos(feeders: usize, n: usize, plan: &ClientFaultPlan, reference: &[Vec<u64>]) {
+    let ctx = format!("seed {}, feeders {feeders}", plan.seed());
+    let inner = Arc::new(AnalyticExec::with_shards(model(), feeders));
+    let coord =
+        Arc::new(Coordinator::start_with_backend(inner.clone(), cfg(feeders, feeders)).unwrap());
+    let fe = Frontend::start(
+        Arc::clone(&coord),
+        FrontendConfig { listen: "tcp:127.0.0.1:0".into(), conn_workers: 2, ..Default::default() },
+    )
+    .unwrap();
+
+    // Survivors share one long-lived connection; every faulted request
+    // brings (and loses) its own, so a fault can only take down its own
+    // cancellation subtree.
+    let survivor_conn = listener::connect(fe.local_spec()).unwrap();
+    let mut sw = survivor_conn.try_clone().unwrap();
+    let mut sr = FrameReader::new(survivor_conn, 1 << 20);
+    let mut survivors: Vec<u64> = Vec::new();
+    let mut deadline_conns = Vec::new();
+    for i in 0..n {
+        match plan.action_for(i as u64) {
+            None => {
+                sw.write_all(&framing::encode(&wire_frame(i, 0, None))).unwrap();
+                survivors.push(i as u64 + 1);
+            }
+            Some(ClientFaultAction::Disconnect) => {
+                // Mid-refinement vanishing act: a bounded anytime
+                // request streams rounds, and the client slams the
+                // socket shut without reading any of them.
+                let conn = listener::connect(fe.local_spec()).unwrap();
+                let mut w = conn.try_clone().unwrap();
+                w.write_all(&framing::encode(&wire_frame(i, 0, Some((0.0, 256))))).unwrap();
+                w.flush().unwrap();
+                conn.shutdown();
+            }
+            Some(ClientFaultAction::DeadlineExpire) => {
+                // An unconvergeable refinement under a short deadline:
+                // settles as a partial FINAL (≥1 round converged) or a
+                // typed deadline REJECT (none did) — never silence.
+                let conn = listener::connect(fe.local_spec()).unwrap();
+                let mut w = conn.try_clone().unwrap();
+                w.write_all(&framing::encode(&wire_frame(i, 5, Some((0.0, 1 << 20)))))
+                    .unwrap();
+                w.flush().unwrap();
+                deadline_conns.push((i as u64 + 1, w, FrameReader::new(conn, 1 << 20)));
+            }
+        }
+    }
+
+    // Survivor settlements: bit-identical to the unfaulted reference.
+    let mut finals: BTreeMap<u64, Vec<u64>> = BTreeMap::new();
+    while finals.len() < survivors.len() {
+        match sr.next().unwrap() {
+            Some(Frame::Final(f)) => {
+                assert!(!f.partial, "{ctx}: survivor tag {} settled partial", f.tag);
+                finals.insert(f.tag, f.values.iter().map(|v| v.to_bits()).collect());
+            }
+            Some(Frame::Round(_)) => {}
+            Some(other) => panic!("{ctx}: unexpected survivor frame {other:?}"),
+            None => panic!(
+                "{ctx}: survivor stream closed with {}/{} settled",
+                finals.len(),
+                survivors.len()
+            ),
+        }
+    }
+    for &tag in &survivors {
+        let got = finals.get(&tag).unwrap_or_else(|| panic!("{ctx}: tag {tag} never settled"));
+        assert_eq!(
+            got,
+            &reference[(tag - 1) as usize],
+            "{ctx}: a neighbour's fault moved survivor {tag}'s bits"
+        );
+    }
+
+    // Deadline-faulted requests settle on their own wire exactly once.
+    for (tag, _w, mut rdr) in deadline_conns {
+        loop {
+            match rdr.next().unwrap() {
+                Some(Frame::Round(_)) => continue,
+                Some(Frame::Final(f)) => {
+                    assert_eq!(f.tag, tag, "{ctx}");
+                    assert!(f.partial, "{ctx}: an unconvergeable deadline FINAL is partial");
+                    assert!(f.rounds >= 1);
+                    break;
+                }
+                Some(Frame::Reject(r)) => {
+                    assert_eq!(r.tag, tag, "{ctx}");
+                    assert_eq!(r.reason, REJECT_DEADLINE, "{ctx}");
+                    assert!(r.retry_after_ms > 0, "{ctx}: the hint is always actionable");
+                    break;
+                }
+                other => panic!("{ctx}: unexpected settlement {other:?}"),
+            }
+        }
+    }
+
+    // Exactly-once settlement accounting over the whole run.
+    wait_until("all requests to settle", || coord.in_flight() == 0);
+    wait_until("the resident pool to drain", || coord.resident_len() == 0);
+    let stats = coord.stats();
+    assert_eq!(
+        stats.completed.get() + stats.failed.get(),
+        n as u64,
+        "{ctx}: every request settles exactly once"
+    );
+
+    drop(sw);
+    drop(sr);
+    fe.shutdown();
+    drop(fe);
+    if let Ok(c) = Arc::try_unwrap(coord) {
+        c.shutdown();
+    }
+    assert_eq!(inner.resident_len(), 0, "{ctx}: resident pool drains after shutdown");
+}
+
+#[test]
+fn seeded_client_fault_sweep_settles_exactly_once_with_bitwise_survivors() {
+    // Disconnect/DeadlineExpire client chaos at feeders {1, 2, 4}.
+    // Tier-1 runs a handful of seeds; the nightly sweep raises
+    // NUIG_CHAOS_SEEDS to 64.
+    let seeds: u64 = std::env::var("NUIG_CHAOS_SEEDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    let reference = wire_reference(N);
+    for seed in 0..seeds {
+        let plan = ClientFaultPlan::from_seed(seed, N as u64);
+        for feeders in [1usize, 2, 4] {
+            run_client_chaos(feeders, N, &plan, &reference);
+        }
     }
 }
 

@@ -1,0 +1,378 @@
+//! Loopback round-trips through the serving front-end
+//! (`coordinator::frontend`): a real socket, the framed wire protocol,
+//! and a gated analytic backend that opens deterministic windows for
+//! the graceful-degradation paths.
+//!
+//! What is pinned here:
+//!
+//! * **I12 (partial-response determinism)** — a deadline-expired
+//!   request settles with a partial FINAL whose values are bit-identical
+//!   (0 ULP) to the streamed ROUND frame *and* to a standalone fixed-m
+//!   run stopped at the same round.
+//! * **I11 (cancellation subtree isolation)** — a client disconnect
+//!   cancels that connection's requests only, and the resident slot is
+//!   reclaimed exactly once.
+//! * Typed backpressure: the accept backlog and the drain window both
+//!   answer with REJECT frames carrying the integer-deterministic
+//!   retry-after hint (exactly 25 ms under the default shed config).
+//! * Graceful drain: shutdown settles every in-flight request on the
+//!   wire before the listener goes away — zero lost settlements.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use nuig::config::{CoordinatorConfig, FrontendConfig};
+use nuig::coordinator::frontend::framing::{
+    self, Frame, FrameReader, RequestFrame, REJECT_BACKLOG, REJECT_DRAINING,
+};
+use nuig::coordinator::frontend::listener;
+use nuig::coordinator::{Coordinator, Frontend};
+use nuig::exec::{GatherExec, GatherLane, GatherOut};
+use nuig::ig::{AnalyticExec, AnalyticModel, IgOptions, Scheme};
+
+const FE: usize = 12;
+
+fn analytic() -> AnalyticExec {
+    AnalyticExec::new(AnalyticModel::new(FE, 3, 0xC0FFEE, 9.0))
+}
+
+/// Wraps [`AnalyticExec`], parking `eval_gather` calls past a
+/// configured budget until [`GatedExec::release`] — the same idiom the
+/// coordinator's in-crate cancellation tests use to open deterministic
+/// windows (round 1 done, round 2 parked on the device).
+struct GatedExec {
+    inner: AnalyticExec,
+    free_evals: Option<u64>,
+    gathers: AtomicU64,
+    evictions: AtomicU64,
+    open: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl GatedExec {
+    fn new(inner: AnalyticExec, free_evals: Option<u64>) -> Self {
+        GatedExec {
+            inner,
+            free_evals,
+            gathers: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            open: Mutex::new(false),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn release(&self) {
+        *self.open.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+}
+
+impl GatherExec for GatedExec {
+    fn features(&self) -> usize {
+        self.inner.features()
+    }
+    fn num_classes(&self) -> usize {
+        self.inner.num_classes()
+    }
+    fn forward(&self, imgs: &[f32], rows: usize) -> anyhow::Result<Vec<f32>> {
+        self.inner.forward(imgs, rows)
+    }
+    fn register_request(&self, slot: u64, x: &[f32], baseline: &[f32]) -> anyhow::Result<()> {
+        self.inner.register_request(slot, x, baseline)
+    }
+    fn evict_request(&self, slot: u64) {
+        self.evictions.fetch_add(1, Ordering::AcqRel);
+        self.inner.evict_request(slot);
+    }
+    fn resident_len(&self) -> usize {
+        self.inner.resident_len()
+    }
+    fn shards(&self) -> usize {
+        self.inner.shards()
+    }
+    fn eval_gather(&self, shard: usize, lanes: &[GatherLane]) -> anyhow::Result<GatherOut> {
+        let seen = self.gathers.fetch_add(1, Ordering::AcqRel);
+        if let Some(free) = self.free_evals {
+            if seen >= free {
+                let mut open = self.open.lock().unwrap();
+                while !*open {
+                    open = self.cv.wait(open).unwrap();
+                }
+            }
+        }
+        self.inner.eval_gather(shard, lanes)
+    }
+}
+
+fn serve_cfg() -> CoordinatorConfig {
+    CoordinatorConfig { workers: 1, feeders: 1, devices: 1, ..Default::default() }
+}
+
+fn frontend_cfg(listen: &str) -> FrontendConfig {
+    FrontendConfig { listen: listen.into(), conn_workers: 1, ..Default::default() }
+}
+
+fn image() -> Vec<f32> {
+    (0..FE).map(|i| i as f32 / FE as f32).collect()
+}
+
+/// An anytime request frame that can never converge (δ target 0, huge
+/// budget): it refines until cancelled.
+fn endless_frame(tag: u64, deadline_ms: u64) -> Frame {
+    Frame::Request(RequestFrame {
+        tag,
+        deadline_ms,
+        budget: 0,
+        target: -1,
+        m: 8,
+        anytime: Some((0.0, 1 << 20)),
+        image: image(),
+        baseline: None,
+    })
+}
+
+/// A plain fixed-m request frame (completes in one round once unparked).
+fn fixed_frame(tag: u64) -> Frame {
+    Frame::Request(RequestFrame {
+        tag,
+        deadline_ms: 0,
+        budget: 0,
+        target: -1,
+        m: 8,
+        anytime: None,
+        image: image(),
+        baseline: None,
+    })
+}
+
+fn wait_until(what: &str, mut ready: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    while !ready() {
+        assert!(t0.elapsed() < Duration::from_secs(10), "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+fn shutdown_all(fe: Arc<Frontend>, coord: Arc<Coordinator>) {
+    fe.shutdown();
+    drop(fe);
+    if let Ok(c) = Arc::try_unwrap(coord) {
+        c.shutdown();
+    }
+}
+
+/// The fixed-m reference attribution: what a standalone run stopped at
+/// round 1 of the same request produces.
+fn round1_reference() -> nuig::ig::Attribution {
+    let coord = Coordinator::start_with_backend(Arc::new(analytic()), serve_cfg()).unwrap();
+    let req = nuig::coordinator::ExplainRequest::new(
+        image(),
+        IgOptions { scheme: Scheme::NonUniform { n_int: 4 }, m: 8, ..Default::default() },
+    );
+    let resp = coord.explain(req).unwrap();
+    coord.shutdown();
+    resp.attribution
+}
+
+#[test]
+fn deadline_partial_matches_streamed_round_and_standalone_bits() {
+    // Round 1 executes; round 2 parks on the device. The 500 ms wire
+    // deadline then fires with exactly one converged round on record.
+    let backend = Arc::new(GatedExec::new(analytic(), Some(1)));
+    let coord =
+        Arc::new(Coordinator::start_with_backend(backend.clone(), serve_cfg()).unwrap());
+    let fe = Frontend::start(coord.clone(), frontend_cfg("tcp:127.0.0.1:0")).unwrap();
+
+    let stream = listener::connect(fe.local_spec()).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = FrameReader::new(stream, 16 << 20);
+    w.write_all(&framing::encode(&endless_frame(7, 500))).unwrap();
+
+    let round = match r.next().unwrap().expect("round 1 streams before the deadline") {
+        Frame::Round(rf) => rf,
+        other => panic!("expected ROUND, got {other:?}"),
+    };
+    assert_eq!(round.tag, 7);
+    assert_eq!(round.round, 1);
+    assert_eq!(round.values.len(), FE);
+
+    let fin = match r.next().unwrap().expect("the deadline settles a FINAL") {
+        Frame::Final(ff) => ff,
+        other => panic!("expected FINAL, got {other:?}"),
+    };
+    assert_eq!(fin.tag, 7);
+    assert!(fin.partial, "a deadline expiry settles with the partial flag set");
+    assert_eq!(fin.rounds, 1, "the last converged round is round 1");
+
+    // I12, leg 1: the streamed round already holds the partial's bits.
+    for (s, p) in round.values.iter().zip(&fin.values) {
+        assert_eq!(s.to_bits(), p.to_bits(), "streamed round == partial FINAL, 0 ULP");
+    }
+    assert_eq!(round.delta.to_bits(), fin.delta.to_bits());
+
+    // I12, leg 2: both equal a standalone run stopped at round 1 (a
+    // fixed-m run of the same schedule) — bit-identical across the
+    // wire, the stream, and the offline path.
+    let reference = round1_reference();
+    assert_eq!(fin.values.len(), reference.values.len());
+    for (wire, refv) in fin.values.iter().zip(&reference.values) {
+        assert_eq!(wire.to_bits(), refv.to_bits(), "wire partial == standalone round-1, 0 ULP");
+    }
+    assert_eq!(fin.delta.to_bits(), reference.delta.to_bits());
+
+    assert_eq!(fe.deadlines_fired(), 1);
+    assert_eq!(fe.stats().partials_streamed.get(), 1);
+    assert!(fe.stats().rounds_streamed.get() >= 1);
+    assert_eq!(coord.stats().deadline_partials.get(), 1);
+
+    drop(w);
+    drop(r);
+    backend.release(); // the parked round-2 chunk executes harmlessly
+    shutdown_all(fe, coord);
+    assert_eq!(backend.resident_len(), 0, "resident slot reclaimed");
+    assert_eq!(backend.evictions.load(Ordering::Acquire), 1, "… exactly once");
+}
+
+#[cfg(unix)]
+#[test]
+fn disconnect_cancels_subtree_and_frees_resident_slot_exactly_once() {
+    // Unix transport: a write after the peer closed fails immediately
+    // (EPIPE), so the disconnect window is deterministic.
+    let backend = Arc::new(GatedExec::new(analytic(), Some(1)));
+    let coord =
+        Arc::new(Coordinator::start_with_backend(backend.clone(), serve_cfg()).unwrap());
+    let sock = format!(
+        "unix:{}/nuig-rt-{}.sock",
+        std::env::temp_dir().display(),
+        std::process::id()
+    );
+    let fe = Frontend::start(coord.clone(), frontend_cfg(&sock)).unwrap();
+
+    let stream = listener::connect(fe.local_spec()).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = FrameReader::new(stream, 16 << 20);
+    w.write_all(&framing::encode(&endless_frame(3, 0))).unwrap();
+
+    // Round 1 reaches the client: the request is routed, resident, and
+    // mid-refinement when the client vanishes.
+    match r.next().unwrap().expect("round 1 streams") {
+        Frame::Round(rf) => assert_eq!(rf.tag, 3),
+        other => panic!("expected ROUND, got {other:?}"),
+    }
+    assert_eq!(coord.resident_len(), 1);
+
+    // Full close, then release the gate: the next streamed round's
+    // write hits the dead socket, the connection token cancels, and the
+    // writer forwards the disconnect into the coordinator.
+    drop(w);
+    drop(r);
+    backend.release();
+
+    wait_until("the disconnect to settle the request", || {
+        coord.stats().disconnect_cancels.get() == 1
+    });
+    wait_until("the resident slot to drain", || coord.resident_len() == 0);
+    assert_eq!(backend.evictions.load(Ordering::Acquire), 1, "slot reclaimed exactly once");
+    assert_eq!(fe.stats().disconnects.get(), 1);
+    assert_eq!(coord.stats().failed.get(), 1);
+
+    wait_until("the connection worker to retire", || fe.active_connections() == 0);
+    shutdown_all(fe, coord);
+    assert_eq!(backend.evictions.load(Ordering::Acquire), 1, "shutdown does not re-evict");
+}
+
+#[test]
+fn accept_backlog_overflow_answers_typed_reject_with_exact_retry_hint() {
+    // One connection worker, a one-slot accept backlog: connection A is
+    // being served, B fills the backlog, C must be turned away with a
+    // typed REJECT carrying the integer-deterministic hint (default
+    // shed marks are 0 ⇒ the overload factor clamps to 1 ⇒ exactly the
+    // 25 ms base).
+    let backend = Arc::new(GatedExec::new(analytic(), None));
+    let coord =
+        Arc::new(Coordinator::start_with_backend(backend.clone(), serve_cfg()).unwrap());
+    let fcfg = FrontendConfig {
+        listen: "tcp:127.0.0.1:0".into(),
+        conn_backlog: 1,
+        conn_workers: 1,
+        ..Default::default()
+    };
+    let fe = Frontend::start(coord.clone(), fcfg).unwrap();
+
+    let a = listener::connect(fe.local_spec()).unwrap();
+    wait_until("A to reach its worker", || fe.active_connections() == 1);
+    let b = listener::connect(fe.local_spec()).unwrap();
+    wait_until("B to queue in the backlog", || fe.stats().conns_accepted.get() == 2);
+
+    let c = listener::connect(fe.local_spec()).unwrap();
+    let mut r = FrameReader::new(c, 16 << 20);
+    let rej = match r.next().unwrap().expect("C gets a REJECT before close") {
+        Frame::Reject(rj) => rj,
+        other => panic!("expected REJECT, got {other:?}"),
+    };
+    assert_eq!(rej.tag, 0, "connection-level reject precedes any request");
+    assert_eq!(rej.reason, REJECT_BACKLOG);
+    assert_eq!(rej.retry_after_ms, 25, "integer-deterministic backoff hint");
+    assert!(r.next().unwrap().is_none(), "the rejected connection is closed");
+    assert_eq!(fe.stats().conns_rejected.get(), 1);
+
+    drop(a);
+    drop(b);
+    shutdown_all(fe, coord);
+}
+
+#[test]
+fn graceful_drain_settles_in_flight_and_rejects_new_requests() {
+    // Round 1 of the in-flight request parks on the device; a drain
+    // begins; a request arriving mid-drain gets a typed REJECT; the
+    // parked request then completes and its FINAL still reaches the
+    // client — zero lost settlements.
+    let backend = Arc::new(GatedExec::new(analytic(), Some(0)));
+    let coord =
+        Arc::new(Coordinator::start_with_backend(backend.clone(), serve_cfg()).unwrap());
+    let fe = Frontend::start(coord.clone(), frontend_cfg("tcp:127.0.0.1:0")).unwrap();
+
+    let stream = listener::connect(fe.local_spec()).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = FrameReader::new(stream, 16 << 20);
+    w.write_all(&framing::encode(&fixed_frame(11))).unwrap();
+    wait_until("the request to route", || coord.resident_len() == 1);
+
+    let drainer = {
+        let fe = fe.clone();
+        std::thread::spawn(move || fe.shutdown())
+    };
+    wait_until("the drain to fence admissions", || !fe.is_accepting());
+
+    // A request submitted into the drain window is refused, typed.
+    w.write_all(&framing::encode(&fixed_frame(12))).unwrap();
+    let rej = match r.next().unwrap().expect("the drain answers a REJECT") {
+        Frame::Reject(rj) => rj,
+        other => panic!("expected REJECT, got {other:?}"),
+    };
+    assert_eq!(rej.tag, 12);
+    assert_eq!(rej.reason, REJECT_DRAINING);
+    assert_eq!(rej.retry_after_ms, 25, "integer-deterministic backoff hint");
+
+    // Unpark the device: the in-flight request completes and settles on
+    // the wire even though the front-end is mid-drain.
+    backend.release();
+    let fin = match r.next().unwrap().expect("the drained request still settles") {
+        Frame::Final(ff) => ff,
+        other => panic!("expected FINAL, got {other:?}"),
+    };
+    assert_eq!(fin.tag, 11);
+    assert!(!fin.partial, "a drain is not a deadline: the result is complete");
+    assert_eq!(fin.rounds, 1);
+
+    assert!(r.next().unwrap().is_none(), "the connection closes after the drain");
+    drainer.join().unwrap();
+    assert_eq!(fe.stats().draining_rejects.get(), 1);
+    assert_eq!(coord.stats().completed.get(), 1);
+    assert_eq!(coord.in_flight(), 0, "zero lost settlements");
+
+    shutdown_all(fe, coord);
+    assert_eq!(backend.evictions.load(Ordering::Acquire), 1);
+}

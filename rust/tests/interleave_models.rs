@@ -28,6 +28,11 @@
 //!   chunks off a draining shard, and a respawn replay racing a fresh
 //!   registration lands every resident slot exactly once (no stranding,
 //!   no double registration).
+//! * `exec::CancelToken` + `coordinator::state` — the serving front-end's
+//!   cancellation tree (ISSUE 9): a child registered concurrently with
+//!   the parent's cancel never escapes it, and a deadline's partial
+//!   settlement racing the feeder's completion settles the request
+//!   exactly once (one reply, partial bit matching the winner — I11/I12).
 
 #![cfg(feature = "loom-models")]
 
@@ -44,7 +49,7 @@ use nuig::exec::gather::{GatherExec, GatherLane, GatherOut, ResidentPool, ShardH
 use nuig::exec::interleave::{explore, shim};
 use nuig::exec::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use nuig::exec::sync::Mutex;
-use nuig::exec::{FaultAction, FaultEvent, FaultInjector, FaultPlan};
+use nuig::exec::{CancelToken, FaultAction, FaultEvent, FaultInjector, FaultPlan};
 use nuig::ig::schedule::Schedule;
 use nuig::ig::{AnytimePolicy, IgOptions, Rule};
 use nuig::metrics::StageBreakdown;
@@ -82,6 +87,8 @@ fn mk_state(
         in_flight: Arc::new(AtomicUsize::new(1)),
         anytime,
         resident: None,
+        last_round: Mutex::new(None),
+        round_tx: None,
     });
     (st, rx)
 }
@@ -600,6 +607,123 @@ fn respawn_replay_vs_registration_lands_each_slot_exactly_once() {
         let lane9 = GatherLane { slot: 9, alpha: 0.25, weight: 1.0, target: 1 };
         inj.eval_gather(0, &[lane7, lane9]).unwrap();
         assert_eq!(inj.respawn_count(), 1);
+    });
+    assert!(report.executions > 1, "explored {} schedules", report.executions);
+}
+
+// ---------------------------------------------------------------------
+// exec::CancelToken + coordinator::state — the front-end cancellation
+// tree (ISSUE 9)
+// ---------------------------------------------------------------------
+
+#[test]
+fn token_child_registration_never_escapes_concurrent_cancel() {
+    // The registration handshake (register, THEN check the parent flag)
+    // against the cancel protocol (set the flag, THEN snapshot the
+    // children): in every interleaving the child must end up cancelled —
+    // a child that escaped would be a request the deadline wheel or a
+    // disconnect could never reach.
+    let report = explore(|| {
+        let root = CancelToken::new();
+        let spawner = root.clone();
+        let h = shim::spawn(move || spawner.child());
+        root.cancel();
+        let kid = h.join().unwrap();
+        assert!(kid.is_cancelled(), "no interleaving lets a child escape the cancel");
+    });
+    assert!(report.exhausted, "explored {} schedules", report.executions);
+    assert!(report.executions > 1);
+}
+
+#[test]
+fn token_child_cancel_is_subtree_scoped_under_races() {
+    // I11 under concurrency: one request's deadline cancel racing a
+    // sibling's creation never leaks across the subtree boundary.
+    let report = explore(|| {
+        let conn = CancelToken::new();
+        let req_a = conn.child();
+        let conn2 = conn.clone();
+        let spawner = shim::spawn(move || conn2.child());
+        req_a.cancel();
+        let req_b = spawner.join().unwrap();
+        assert!(req_a.is_cancelled());
+        assert!(!req_b.is_cancelled(), "sibling created during the cancel is untouched");
+        assert!(!conn.is_cancelled(), "a leaf cancel never climbs the tree");
+    });
+    assert!(report.exhausted, "explored {} schedules", report.executions);
+}
+
+#[test]
+fn deadline_partial_vs_completion_settles_exactly_once() {
+    // ISSUE 9 satellite: the deadline path's partial settlement
+    // (`finalize_partial`, driven by the connection writer observing a
+    // fired deadline token) races the feeder finishing the final round.
+    // In every interleaving exactly one side settles, the reply channel
+    // carries exactly one message, and the partial bit + values match
+    // the winner: round-1 bits for the deadline (I12), refined bits for
+    // the completion.
+    let report = explore(|| {
+        let s = Arc::new(LaneScheduler::new(Policy::Fifo, 64));
+        let (st, rx, plans) = mk_plans(3, 3, Some(one_refinement_round()));
+        s.push_request(1, plans).unwrap();
+
+        // Drive round 1 to completion deterministically (snapshot taken).
+        let lanes = match s.pop_chunk(3, Duration::ZERO) {
+            Popped::Chunk(c) => c,
+            Popped::Closed => panic!("queued round-1 lanes must pop"),
+        };
+        let mut complete = false;
+        for l in &lanes {
+            complete = l.state.add_lane(l.idx, &[1.0]);
+        }
+        assert!(complete);
+        let next = match st.on_round_complete(3) {
+            RoundOutcome::Refine(next) => next,
+            RoundOutcome::Finalize => panic!("round 1 must refine (target 1e-12)"),
+        };
+        s.push_refill(1, next).unwrap();
+
+        // The race: feeder completes round 2 vs the deadline's partial.
+        let s2 = s.clone();
+        let st_feeder = st.clone();
+        let feeder = shim::spawn(move || {
+            let lanes = match s2.pop_chunk(2, Duration::ZERO) {
+                Popped::Chunk(c) => c,
+                Popped::Closed => panic!("refill lanes must pop"),
+            };
+            let mut done = false;
+            for l in &lanes {
+                done = l.state.add_lane(l.idx, &[1.0]);
+            }
+            assert!(done);
+            match st_feeder.on_round_complete(3) {
+                RoundOutcome::Finalize => st_feeder.finalize(),
+                RoundOutcome::Refine(_) => panic!("max_m 4 is exhausted after round 2"),
+            }
+        });
+        let partialled = st.finalize_partial();
+        let completed = feeder.join().unwrap();
+
+        assert!(partialled != completed, "exactly one settlement path wins");
+        assert_eq!(st.in_flight.load(Ordering::Acquire), 0);
+        let resp = rx.recv().unwrap().expect("both paths settle Ok");
+        assert!(
+            rx.try_recv().expect("channel stays open").is_none(),
+            "at most one reply is ever sent"
+        );
+        if partialled {
+            assert!(resp.partial, "deadline winner is flagged partial");
+            assert_eq!(resp.attribution.rounds, 1);
+            assert_eq!(
+                resp.attribution.values[0].to_bits(),
+                3.0f64.to_bits(),
+                "partial bits are the round-1 snapshot (I12)"
+            );
+        } else {
+            assert!(!resp.partial);
+            assert_eq!(resp.attribution.rounds, 2);
+            assert_eq!(resp.attribution.values[0].to_bits(), 3.5f64.to_bits());
+        }
     });
     assert!(report.executions > 1, "explored {} schedules", report.executions);
 }

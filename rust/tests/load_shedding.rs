@@ -9,8 +9,10 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::Result;
-use nuig::config::CoordinatorConfig;
-use nuig::coordinator::{Coordinator, ExplainRequest, LatencyBudget, ShedRejection};
+use nuig::config::{CoordinatorConfig, FrontendConfig};
+use nuig::coordinator::frontend::framing::{self, Frame, FrameReader, RequestFrame, REJECT_OVERLOAD};
+use nuig::coordinator::frontend::listener;
+use nuig::coordinator::{Coordinator, ExplainRequest, Frontend, LatencyBudget, ShedRejection};
 use nuig::exec::gather::{GatherExec, GatherLane, GatherOut};
 use nuig::ig::{AnalyticExec, AnalyticModel, IgOptions, Scheme};
 
@@ -160,6 +162,70 @@ fn below_mark_tight_serves_with_untouched_shed_stats() {
     assert_eq!(stats.failed.get(), 0);
     coord.shutdown();
     assert_eq!(backend.resident_len(), 0);
+}
+
+#[test]
+fn shed_retry_hint_is_integer_deterministic_end_to_end() {
+    // The typed ShedRejection must survive the full serving path: an
+    // overloaded admission settles a tight-tier wire request as a
+    // REJECT frame whose retry hint is the exact integer the shed
+    // config computes — no float drift, no clock dependence — and the
+    // frame round-trips bit-for-bit through encode/decode.
+    let backend = Arc::new(ProbeCountingExec::new(AnalyticExec::new(model())));
+    backend.register_request(9_999, &image(0), &[0f32; F]).unwrap();
+    let mut c = cfg();
+    c.shed.resident_high_water = 1;
+    c.shed.retry_after_ms = 25;
+    let expect_ms = c.shed.retry_after(1, 0).as_millis() as u64;
+    assert_eq!(expect_ms, 25, "gauge at the mark ⇒ factor 1 ⇒ the base hint, exactly");
+
+    let coord = Arc::new(Coordinator::start_with_backend(backend.clone(), c).unwrap());
+    let fe = Frontend::start(
+        Arc::clone(&coord),
+        FrontendConfig { listen: "tcp:127.0.0.1:0".into(), ..Default::default() },
+    )
+    .unwrap();
+
+    let stream = listener::connect(fe.local_spec()).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = FrameReader::new(stream, 1 << 20);
+    w.write_all(&framing::encode(&Frame::Request(RequestFrame {
+        tag: 77,
+        deadline_ms: 0,
+        budget: LatencyBudget::Tight.index() as u8,
+        target: -1,
+        m: 8,
+        anytime: None,
+        image: image(1),
+        baseline: None,
+    })))
+    .unwrap();
+
+    let rej = match r.next().unwrap().expect("the shed settles a REJECT on the wire") {
+        Frame::Reject(rj) => rj,
+        other => panic!("expected REJECT, got {other:?}"),
+    };
+    assert_eq!(rej.tag, 77);
+    assert_eq!(rej.reason, REJECT_OVERLOAD);
+    assert_eq!(rej.retry_after_ms, expect_ms, "wire hint == ShedConfig::retry_after, integer-exact");
+    assert_eq!(rej.resident, 1, "the decision's gauge sample rides along");
+    assert_eq!(backend.forwards.load(Ordering::Relaxed), 0, "shed = zero probe passes");
+    assert_eq!(coord.stats().shed_rejections.get(), 1);
+
+    // Bit-for-bit wire stability of the typed rejection.
+    let bytes = framing::encode(&Frame::Reject(rej.clone()));
+    match framing::decode(&bytes[4..]).unwrap() {
+        Frame::Reject(back) => assert_eq!(back, rej),
+        other => panic!("REJECT decoded as {other:?}"),
+    }
+
+    drop(w);
+    drop(r);
+    fe.shutdown();
+    drop(fe);
+    if let Ok(c) = Arc::try_unwrap(coord) {
+        c.shutdown();
+    }
 }
 
 #[test]
