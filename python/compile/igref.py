@@ -418,6 +418,52 @@ def chunk_spans(n: int, chunk: int = BATCH_CHUNK) -> List[Tuple[int, int]]:
     return out
 
 
+#: f32 lane width of the Rust hot-path kernels — mirrors
+#: ``exec::simd::LANES``. A contract constant, not a tuning knob: the
+#: lane-major dot-reduction order (and therefore the bit pattern of
+#: every logit the Rust kernels compute) is defined in terms of it.
+SIMD_LANES = 8
+
+
+def lane_major_dot(a, b) -> float:
+    """Mirror of ``exec::simd::dot_f32``: the canonical lane-major
+    f32→f64 dot-product reduction order every Rust backend computes
+    bit-identically (scalar reference, portable lanes, AVX2, NEON —
+    docs/INVARIANTS.md §I13).
+
+    Element ``i`` accumulates (as ``f64(a_i) * f64(b_i)``, one rounding
+    per multiply and one per add — never an FMA) into f64 lane
+    accumulator ``i % SIMD_LANES``; the tail of a non-multiple-of-W
+    vector lands in lane positions ``0..tail``; the final horizontal
+    reduce is the sequential left fold over the eight lanes. numpy f64
+    elementwise arithmetic is IEEE-identical to Rust's, so this mirror
+    reproduces the Rust bits exactly — pinned by the shared goldens in
+    ``tests/test_batch_parity.py`` and ``exec/simd.rs``'s unit tests.
+
+    Note the jax model path (``_run_points``) still reduces its dots in
+    matmul order inside the compiled kernel — that difference is f64
+    round-off absorbed by the 1e-9 engine-parity tolerance; what this
+    function pins bitwise is the *layout contract* the Rust backends
+    agree on among themselves.
+    """
+    a = np.asarray(a, dtype=np.float32)
+    b = np.asarray(b, dtype=np.float32)
+    if a.shape != b.shape or a.ndim != 1:
+        raise ValueError("lane_major_dot wants equal-length 1-D vectors")
+    acc = np.zeros(SIMD_LANES, dtype=np.float64)
+    n = len(a)
+    full = n - n % SIMD_LANES
+    for j in range(0, full, SIMD_LANES):
+        acc += a[j:j + SIMD_LANES].astype(np.float64) * b[j:j + SIMD_LANES].astype(np.float64)
+    tail = n - full
+    if tail:
+        acc[:tail] += a[full:].astype(np.float64) * b[full:].astype(np.float64)
+    total = acc[0]
+    for lane in range(1, SIMD_LANES):
+        total = total + acc[lane]
+    return float(total)
+
+
 def ordered_lane_commit(rows, arrival) -> np.ndarray:
     """Mirror of the Rust serving accumulator
     (``coordinator::state::Accum``): per-lane f32 partial rows commit

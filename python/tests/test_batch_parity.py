@@ -6,6 +6,10 @@ order in ``_run_points_batched``. These tests pin the shared contract:
 
   * the span layout (``chunk_spans``) against integer goldens shared
     verbatim with the Rust unit tests (``exec/batch.rs``);
+  * the lane-major dot-reduction order (``lane_major_dot``, mirroring
+    ``exec::simd::dot_f32``) against f64 bit goldens shared verbatim
+    with the Rust unit tests (``exec/simd.rs``) — the cross-backend
+    bit-identity invariant I13;
   * order-independence of the reduction: span partials combined in span
     order are bit-identical no matter which order the spans were
     *computed* in — the numpy face of the Rust claim "bit-identical at
@@ -68,6 +72,97 @@ class TestChunkSpans:
     def test_rejects_bad_chunk(self):
         with pytest.raises(ValueError):
             igref.chunk_spans(10, 0)
+
+
+def _mix32(k: int) -> int:
+    """32-bit xorshift-multiply mixer — MUST match
+    ``exec/simd.rs::tests::mix`` verbatim (the shared golden generator).
+    Full-mantissa pseudo-random values make reduction *order* visible in
+    the bits; power-of-two values would make every order identical and
+    the goldens vacuous."""
+    k &= 0xFFFFFFFF
+    k ^= k >> 16
+    k = (k * 0x045D9F3B) & 0xFFFFFFFF
+    k ^= k >> 16
+    k = (k * 0x045D9F3B) & 0xFFFFFFFF
+    k ^= k >> 16
+    return k
+
+
+def _tvec(n: int, salt: int) -> np.ndarray:
+    """Deterministic f32 test vector in [-1, 1) — MUST match
+    ``exec/simd.rs::tests::tvec`` verbatim."""
+    out = np.empty(n, dtype=np.float32)
+    for i in range(n):
+        k = _mix32((i * 2654435761 + salt * 40503) & 0xFFFFFFFF)
+        out[i] = np.float32(k / 4294967296.0 * 2.0 - 1.0)
+    return out
+
+
+def _bits(v: float) -> int:
+    return int(np.frombuffer(np.float64(v).tobytes(), dtype=np.uint64)[0])
+
+
+class TestLaneMajorOrder:
+    """Mirror of ``exec::simd``'s lane-major dot contract (I13): the
+    goldens below are shared verbatim with ``exec/simd.rs``'s unit
+    tests, so the Rust kernels and this numpy mirror are pinned to one
+    bit pattern."""
+
+    # (n, salt_a, salt_b, f64 bits of lane_major_dot(tvec(n, salt_a),
+    # tvec(n, salt_b))) — MUST match exec/simd.rs::tests::DOT_GOLDENS.
+    DOT_GOLDENS = [
+        (7, 1, 2, 0x3FFE47B46C4B7578),
+        (8, 3, 4, 0xBFDF320552EE70F0),
+        (9, 5, 6, 0xBFFEB6A1EA3E24A9),
+        (13, 7, 8, 0xBFC4C2A4F2D6AA7C),
+        (67, 9, 10, 0x3FF23867CEBD4200),
+        (3072, 11, 12, 0x402661CB22E1D7F6),
+    ]
+
+    def test_lanes_mirror_rust(self):
+        assert igref.SIMD_LANES == 8
+
+    def test_dot_goldens_shared_with_rust(self):
+        for n, sa, sb, bits in self.DOT_GOLDENS:
+            got = igref.lane_major_dot(_tvec(n, sa), _tvec(n, sb))
+            assert _bits(got) == bits, f"n={n}: {_bits(got):#x} != {bits:#x}"
+
+    def test_matches_literal_spec_at_tail_widths(self):
+        # W-1, W, W+1, primes, multiples — the masked-tail property: the
+        # blocked implementation equals the literal `acc[i % W] += a*b`
+        # spec bit for bit.
+        for n in [0, 1, 6, 7, 8, 9, 13, 16, 17, 31, 37, 64, 67, 101]:
+            a, b = _tvec(n, 21), _tvec(n, 22)
+            acc = np.zeros(igref.SIMD_LANES, dtype=np.float64)
+            for i in range(n):
+                acc[i % igref.SIMD_LANES] += np.float64(a[i]) * np.float64(b[i])
+            total = acc[0]
+            for lane in range(1, igref.SIMD_LANES):
+                total = total + acc[lane]
+            assert _bits(igref.lane_major_dot(a, b)) == _bits(float(total)), f"n={n}"
+
+    def test_order_actually_pinned(self):
+        # The goldens must pin the *order*: at these widths a plain
+        # sequential fold produces different bits, so a mirror (or a
+        # Rust backend) that quietly reassociated would fail above.
+        seq_bits = {13: 0xBFC4C2A4F2D6AA80,
+                    67: 0x3FF23867CEBD4202,
+                    3072: 0x402661CB22E1D7EE}
+        for (n, sa, sb, lane_bits) in self.DOT_GOLDENS:
+            if n not in seq_bits:
+                continue
+            a, b = _tvec(n, sa), _tvec(n, sb)
+            total = np.float64(0.0)
+            for i in range(n):
+                total = total + np.float64(a[i]) * np.float64(b[i])
+            assert _bits(float(total)) == seq_bits[n], f"sequential pin drifted at n={n}"
+            assert _bits(float(total)) != lane_bits, (
+                f"n={n}: lane-major and sequential coincide — golden cannot pin order")
+
+    def test_rejects_mismatched_shapes(self):
+        with pytest.raises(ValueError):
+            igref.lane_major_dot(np.zeros(3, np.float32), np.zeros(4, np.float32))
 
 
 class TestOrderedReduction:

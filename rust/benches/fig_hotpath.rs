@@ -1,4 +1,4 @@
-//! Hot-path kernel throughput: the batched execution backend vs the
+//! Hot-path kernel throughput: the lane-kernel batched backend vs the
 //! scalar reference, on the closed-form [`AnalyticModel`] at the corpus
 //! dimensions (F = 3072, 8 classes) — no artifacts needed.
 //!
@@ -7,32 +7,124 @@
 //!   scalar    — `AnalyticModel::ig_points_scalar`: one point at a time,
 //!               fresh buffers per point (the pre-batch engine path);
 //!   batched   — `eval_points` with `BatchExec::Sequential`: planar
-//!               `PointBatch` fill + per-worker scratch arena, one core;
+//!               `PointBatch` fill + scratch arena + `exec::simd` lane
+//!               kernels, one core;
 //!   parallel  — `eval_points` with `BatchExec::parallel`: the same
 //!               chunks sharded across the `exec::ThreadPool`.
 //!
+//! plus a per-kernel ns/point breakdown of the `exec::simd` lane
+//! primitives (interpolate / dot / accum_scaled / accum_grad /
+//! commit_row) at the same dimensions, labelled with the dispatched dot
+//! backend (`simd::backend()`).
+//!
 //!     cargo bench --bench fig_hotpath
+//!     cargo bench --bench fig_hotpath --features simd-intrinsics
 //!
 //! Emits `BENCH_hotpath.json` (path override: `NUIG_HOTPATH_JSON`) with
-//! the schema CI gates on — see `docs/BENCHES.md` §fig_hotpath. Smoke
-//! mode (`NUIG_HOTPATH_SMOKE=1`) shrinks the grid to m ∈ {8, 16} and
-//! skips the wall-clock speedup assertion (shared CI runners), keeping
-//! the bit-identity assertion, which is never timing-dependent.
+//! the schema-v2 layout `tools/bench_gate.py` gates on — see
+//! `docs/BENCHES.md` §fig_hotpath. Smoke mode (`NUIG_HOTPATH_SMOKE=1`)
+//! shrinks the grid to m ∈ {8, 16} and skips the wall-clock speedup
+//! assertions (shared CI runners), keeping the bit-identity assertions,
+//! which are never timing-dependent.
 //!
-//! Shape assertions (full mode): batched-parallel reaches ≥ 2× the
-//! scalar baseline's points/sec at m = 256 when ≥ 4 workers are
-//! available, and every mode's attribution matches the scalar reference
-//! (parallel vs sequential-batched: bit-identical at 0 ULP).
+//! Shape assertions (full mode): batched reaches ≥ 2× the scalar
+//! baseline's single-thread points/sec at m ∈ {64, 256, 1024}, parallel
+//! reaches ≥ 2× scalar at m = 256 when ≥ 4 workers are available, and
+//! every mode's attribution matches the scalar reference (parallel vs
+//! sequential-batched: bit-identical at 0 ULP).
 
+use std::hint::black_box;
 use std::sync::Arc;
 
 use nuig::bench::{fmt3, measure, BenchConfig, Table};
+use nuig::exec::simd;
 use nuig::exec::{batch::DEFAULT_CHUNK, BatchExec, ThreadPool};
 use nuig::ig::engine::argmax;
 use nuig::ig::model::eval_points;
-use nuig::ig::{AnalyticModel, Model, Rule};
 use nuig::ig::schedule::Schedule;
+use nuig::ig::{AnalyticModel, Model, Rule};
 use nuig::jsonio::Json;
+
+/// Clock the `exec::simd` primitives one point-equivalent at a time:
+/// what one interpolated point costs in each kernel at (F, C). Rows are
+/// `(kernel, calls_per_point, ns_per_point)`.
+fn kernel_breakdown(cfg: &BenchConfig, model: &AnalyticModel, x: &[f32], baseline: &[f32]) -> Table {
+    let f = model.features();
+    let c = model.num_classes();
+    // Amortize timer resolution: each measured iteration performs REPS
+    // point-equivalents of the kernel.
+    const REPS: usize = 64;
+
+    let mut row = vec![0f32; f];
+    simd::interpolate(&mut row, x, baseline, 0.37);
+    let probs: Vec<f64> = (0..c).map(|cc| (cc + 1) as f64 / (c * (c + 1) / 2) as f64).collect();
+    let mut wavg = vec![0f64; f];
+    for cc in 0..c {
+        simd::accum_scaled(&mut wavg, probs[cc], model.class_row(cc));
+    }
+    let mut partial = vec![0f64; f];
+    let mut values = vec![0f64; f];
+    let row32: Vec<f32> = wavg.iter().map(|&v| v as f32).collect();
+
+    let mut table = Table::new(
+        &format!("fig_hotpath kernels: ns/point at F={f}, C={c} (dot backend: {})", simd::backend()),
+        &["kernel", "calls_per_point", "ns_per_point"],
+    );
+    let mut push = |name: &str, calls_per_point: usize, meas_secs: f64| {
+        let ns_per_point = meas_secs * 1e9 / REPS as f64;
+        table.row(vec![name.to_string(), calls_per_point.to_string(), fmt3(ns_per_point)]);
+    };
+
+    let m = measure(cfg, "interpolate", || {
+        for _ in 0..REPS {
+            simd::interpolate(black_box(&mut row), black_box(x), black_box(baseline), 0.37);
+        }
+    });
+    push("interpolate", 1, m.mean_s());
+
+    let m = measure(cfg, "dot_f32", || {
+        for _ in 0..REPS {
+            for cc in 0..c {
+                black_box(simd::dot_f32(black_box(model.class_row(cc)), black_box(&row)));
+            }
+        }
+    });
+    push("dot_f32", c, m.mean_s());
+
+    let m = measure(cfg, "accum_scaled", || {
+        for _ in 0..REPS {
+            for cc in 0..c {
+                simd::accum_scaled(black_box(&mut wavg), probs[cc], black_box(model.class_row(cc)));
+            }
+        }
+    });
+    push("accum_scaled", c, m.mean_s());
+
+    let m = measure(cfg, "accum_grad", || {
+        for _ in 0..REPS {
+            simd::accum_grad(
+                black_box(&mut partial),
+                0.21,
+                0.62,
+                0.0044,
+                black_box(model.class_row(0)),
+                black_box(&wavg),
+                black_box(x),
+                black_box(baseline),
+            );
+        }
+    });
+    push("accum_grad", 1, m.mean_s());
+
+    let m = measure(cfg, "commit_row", || {
+        for _ in 0..REPS {
+            simd::commit_row(black_box(&mut values), black_box(&row32));
+        }
+    });
+    push("commit_row", 1, m.mean_s());
+
+    table
+}
 
 fn main() -> anyhow::Result<()> {
     let cfg = BenchConfig::from_env();
@@ -50,19 +142,26 @@ fn main() -> anyhow::Result<()> {
     let par = BatchExec::parallel(pool);
 
     let mut table = Table::new(
-        &format!("fig_hotpath: stage-2 kernel throughput ({workers} workers, chunk {DEFAULT_CHUNK})"),
+        &format!(
+            "fig_hotpath: stage-2 kernel throughput ({workers} workers, chunk {DEFAULT_CHUNK}, \
+             lanes {}, dot backend {})",
+            simd::LANES,
+            simd::backend()
+        ),
         &["m", "mode", "points", "ns_per_point", "points_per_s", "speedup_vs_scalar"],
     );
 
-    let mut speedup_at_256 = None;
+    let mut batched_speedups = Vec::new();
+    let mut parallel_speedup_at_256 = None;
     for &m in ms {
         let schedule = Schedule::uniform(m, Rule::Trapezoid)?;
         let (alphas, weights) = schedule.to_f32();
         let points = schedule.len();
 
         // Correctness gates before the clocks: the batched kernel matches
-        // the scalar reference (chunk reassociation only), and parallel
-        // matches sequential-batched to the bit.
+        // the scalar reference (bit-identical within one chunk, chunk
+        // reassociation beyond), and parallel matches sequential-batched
+        // to the bit.
         let ref_scalar = model.ig_points_scalar(&x, &baseline, &alphas, &weights, target)?;
         let ref_seq = eval_points(&model, &x, &baseline, &alphas, &weights, target, &seq)?;
         let ref_par = eval_points(&model, &x, &baseline, &alphas, &weights, target, &par)?;
@@ -93,8 +192,11 @@ fn main() -> anyhow::Result<()> {
                 scalar_pps = pps;
             }
             let speedup = pps / scalar_pps;
+            if mode == "batched" && [64, 256, 1024].contains(&m) {
+                batched_speedups.push((m, speedup));
+            }
             if mode == "parallel" && m == 256 {
-                speedup_at_256 = Some(speedup);
+                parallel_speedup_at_256 = Some(speedup);
             }
             table.row(vec![
                 m.to_string(),
@@ -108,23 +210,42 @@ fn main() -> anyhow::Result<()> {
     }
     table.print();
 
+    let kernels = kernel_breakdown(&cfg, &model, &x, &baseline);
+    kernels.print();
+
     // ---- Machine-readable trajectory point: BENCH_hotpath.json. ---------
     let path = std::env::var("NUIG_HOTPATH_JSON").unwrap_or_else(|_| "BENCH_hotpath.json".into());
+    let provenance = format!(
+        "fresh fig_hotpath run (smoke: {smoke}, dot backend: {}); commit only full-grid \
+         refreshes per docs/EXPERIMENTS.md §Baselines",
+        simd::backend()
+    );
     let json = Json::obj(vec![
         ("bench", Json::Str("fig_hotpath".into())),
-        ("schema_version", Json::Num(1.0)),
+        ("schema_version", Json::Num(2.0)),
+        ("provenance", Json::Str(provenance)),
         ("workers", Json::Num(workers as f64)),
         ("chunk", Json::Num(DEFAULT_CHUNK as f64)),
+        ("lanes", Json::Num(simd::LANES as f64)),
+        ("lane_backend", Json::Str(simd::backend().into())),
         ("smoke", Json::Bool(smoke)),
         ("rows", table.to_json().get("rows").expect("table has rows").clone()),
+        ("kernel_rows", kernels.to_json().get("rows").expect("table has rows").clone()),
     ]);
     std::fs::write(&path, json.to_string_pretty())?;
     println!("wrote {path}");
 
-    // ---- Shape assertion: the acceptance claim (full mode only; smoke
+    // ---- Shape assertions: the acceptance claims (full mode only; smoke
     // runs on shared CI runners where wall-clock claims flake). ----------
     if !smoke {
-        let speedup = speedup_at_256.expect("m=256 parallel row present");
+        for (m, speedup) in batched_speedups {
+            assert!(
+                speedup >= 2.0,
+                "batched lane kernel must reach >= 2x scalar points/sec single-thread at m={m}, \
+                 got {speedup:.2}x"
+            );
+        }
+        let speedup = parallel_speedup_at_256.expect("m=256 parallel row present");
         if workers >= 4 {
             assert!(
                 speedup >= 2.0,

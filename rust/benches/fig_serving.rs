@@ -473,9 +473,14 @@ fn main() -> anyhow::Result<()> {
 
     // ---- Machine-readable trajectory point: BENCH_serving.json. ---------
     let path = std::env::var("NUIG_SERVING_JSON").unwrap_or_else(|_| "BENCH_serving.json".into());
+    let provenance = format!(
+        "fresh fig_serving run (smoke: {smoke}); commit only full refreshes per \
+         docs/EXPERIMENTS.md §Baselines"
+    );
     let json = Json::obj(vec![
         ("bench", Json::Str("fig_serving".into())),
         ("schema_version", Json::Num(1.0)),
+        ("provenance", Json::Str(provenance)),
         ("chunk", Json::Num(chunk as f64)),
         ("requests", Json::Num(n_requests as f64)),
         ("smoke", Json::Bool(smoke)),

@@ -88,9 +88,10 @@ impl Accum {
 
     fn commit(values: &mut [f64], row: &[f32]) {
         debug_assert_eq!(values.len(), row.len());
-        for (a, &p) in values.iter_mut().zip(row) {
-            *a += p as f64;
-        }
+        // Lane-blocked elementwise add (`values[i] += row[i]`): per-index,
+        // so lane width cannot change bits — the cross-row commit order
+        // (lane-index order, docs/INVARIANTS.md §I4) stays with `add`.
+        crate::exec::simd::commit_row(values, row);
     }
 
     /// Fold `row` in at lane index `idx`, committing any parked rows

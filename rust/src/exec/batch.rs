@@ -95,8 +95,10 @@ impl PointBatch {
     /// Fill the batch with one row per alpha: `row_k[i] = x′_i + α_k (x_i − x′_i)`.
     ///
     /// The interpolation is fused into the buffer write — the exact f32
-    /// expression the scalar reference kernel uses per point, so a filled
-    /// row is bit-identical to the per-point materialization it replaces
+    /// expression the scalar reference kernel uses per point, lane-blocked
+    /// through [`simd::interpolate`](super::simd::interpolate) (elementwise,
+    /// so lane width cannot change the bits), so a filled row is
+    /// bit-identical to the per-point materialization it replaces
     /// (property-tested in this module).
     pub fn fill(&mut self, x: &[f32], baseline: &[f32], alphas: &[f32]) {
         assert_eq!(x.len(), baseline.len(), "endpoint width mismatch");
@@ -106,9 +108,7 @@ impl PointBatch {
         // every row is overwritten by the fused interpolation below.
         self.buf.resize(self.rows * self.features, 0.0);
         for (row, &a) in self.buf.chunks_mut(self.features.max(1)).zip(alphas) {
-            for ((r, &b), &xv) in row.iter_mut().zip(baseline).zip(x) {
-                *r = b + a * (xv - b);
-            }
+            super::simd::interpolate(row, x, baseline, a);
         }
     }
 

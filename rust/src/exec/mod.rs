@@ -21,6 +21,11 @@
 //!   gather-indexed cross-request chunks over resident request tensors
 //!   (the [`gather::GatherExec`] surface the coordinator's sharded
 //!   feeders drive).
+//! * [`simd`] — fixed-width lane kernels under `batch`: the portable
+//!   (autovectorizable) and runtime-dispatched AVX2/NEON bodies of the
+//!   interpolate / dot / accumulate hot loops, with the lane-major
+//!   reduction order that keeps every backend bit-identical
+//!   (docs/INVARIANTS.md §I13).
 //! * [`fault`] — the deterministic chaos harness: seeded, step-indexed
 //!   [`fault::FaultPlan`]s injected at the [`gather::GatherExec`] seam
 //!   by [`fault::FaultInjector`], making kill/revive/stall runs
@@ -34,6 +39,7 @@ pub mod fault;
 pub mod gather;
 pub mod interleave;
 mod pool;
+pub mod simd;
 pub mod sync;
 mod token;
 

@@ -1,0 +1,605 @@
+//! Fixed-width SIMD lane kernels for the planar hot path.
+//!
+//! Every arithmetic kernel on the interpolate → eval → weight →
+//! accumulate cycle lives here as an explicit width-[`LANES`] lane
+//! loop with a masked scalar tail. The portable bodies are plain
+//! indexed loops over `chunks_exact` blocks — shaped so LLVM
+//! autovectorizes them on any target — and the one order-bearing
+//! kernel, [`dot_f32`], additionally has hand-written AVX2 / NEON
+//! paths behind the `simd-intrinsics` feature with runtime CPU
+//! detection and a portable fallback.
+//!
+//! # The lane-major reduction contract (docs/INVARIANTS.md §I13)
+//!
+//! Float addition is not associative, so a vectorized dot product is
+//! only deterministic if its reduction *order* is part of the spec.
+//! The canonical order is **lane-major**: element `i` accumulates
+//! into f64 lane accumulator `i % LANES`; the tail of a
+//! non-multiple-of-[`LANES`] vector lands in lane positions
+//! `0..tail`; the final horizontal reduce is the sequential left
+//! fold `((acc[0] + acc[1]) + acc[2]) + …`. Every backend — the
+//! scalar reference (`ig_points_scalar`), the portable lane loop,
+//! AVX2, NEON, and the `igref.py` numpy mirror — computes this exact
+//! order, so results are **bit-identical across backends**, pinned
+//! by cross-language goldens in this module's tests and
+//! `python/tests/test_batch_parity.py`.
+//!
+//! There is deliberately no FMA anywhere: each product rounds, then
+//! each add rounds, on every backend. A fused multiply-add would be
+//! faster but would fork the bit pattern between machines with and
+//! without FMA units, breaking I13.
+//!
+//! The elementwise kernels ([`interpolate`], [`accum_scaled`],
+//! [`accum_grad`], [`commit_row`]) have no cross-element reduction:
+//! each output element depends on the same-index inputs only, so
+//! lane-blocking them is bitwise-free at any width. They are written
+//! as lane loops anyway so the whole hot path vectorizes uniformly.
+//!
+//! # Backend dispatch rule
+//!
+//! [`dot_f32`] dispatches at runtime: with the `simd-intrinsics`
+//! feature enabled, it probes the CPU once (std caches the result)
+//! and takes the AVX2 path on x86-64 or the NEON path on aarch64;
+//! otherwise — feature off, other architectures, or an x86-64 CPU
+//! without AVX2 — it runs the portable lane loop. [`backend`] reports
+//! which path is live so benches and logs can record it.
+
+/// Lane width of every kernel in this module, in f32 elements.
+///
+/// This is a *contract constant*, not a tuning knob: the lane-major
+/// accumulation order (and therefore the bit pattern of every dot
+/// product) is defined in terms of it, it is pinned by cross-language
+/// goldens, and `igref.py` mirrors it as `SIMD_LANES`. Changing it
+/// changes attribution bits and requires regenerating the goldens.
+/// Eight f32 lanes is one AVX2 register and two NEON registers.
+pub const LANES: usize = 8;
+
+/// Name of the dot-product backend that [`dot_f32`] will actually
+/// run on this process: `"avx2"`, `"neon"`, or `"portable"`.
+pub fn backend() -> &'static str {
+    #[cfg(all(feature = "simd-intrinsics", target_arch = "x86_64"))]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return "avx2";
+        }
+    }
+    #[cfg(all(feature = "simd-intrinsics", target_arch = "aarch64"))]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return "neon";
+        }
+    }
+    "portable"
+}
+
+/// Lane-major dot product of two equal-length f32 slices in f64.
+///
+/// Each product is widened to f64 before multiplying (two roundings:
+/// one for the multiply, one for each add — never an FMA), element
+/// `i` accumulates into lane `i % LANES`, and the lanes reduce with
+/// [`reduce_lanes`]. Bit-identical on every backend (I13).
+///
+/// # Panics
+/// Panics if the slices have different lengths.
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len(), "dot operand width mismatch");
+    #[cfg(all(feature = "simd-intrinsics", target_arch = "x86_64"))]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            // SAFETY: the AVX2 target feature was just verified at
+            // runtime, which is the only precondition of `dot_avx2`.
+            return unsafe { x86::dot_avx2(a, b) };
+        }
+    }
+    #[cfg(all(feature = "simd-intrinsics", target_arch = "aarch64"))]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            // SAFETY: the NEON target feature was just verified at
+            // runtime, which is the only precondition of `dot_neon`.
+            return unsafe { arm::dot_neon(a, b) };
+        }
+    }
+    dot_portable(a, b)
+}
+
+/// Portable lane-major dot body: full blocks via `chunks_exact`,
+/// then the shared masked tail, then the ordered horizontal reduce.
+fn dot_portable(a: &[f32], b: &[f32]) -> f64 {
+    let mut acc = [0.0f64; LANES];
+    let blocks_a = a.chunks_exact(LANES);
+    let blocks_b = b.chunks_exact(LANES);
+    let tail_a = blocks_a.remainder();
+    let tail_b = blocks_b.remainder();
+    for (xa, xb) in blocks_a.zip(blocks_b) {
+        for l in 0..LANES {
+            acc[l] += xa[l] as f64 * xb[l] as f64;
+        }
+    }
+    accumulate_tail(&mut acc, tail_a, tail_b);
+    reduce_lanes(&acc)
+}
+
+/// Masked scalar tail shared by every [`dot_f32`] backend: the final
+/// `n % LANES` elements land in lane positions `0..tail`, exactly as
+/// if the vector were zero-padded to a full block.
+fn accumulate_tail(acc: &mut [f64; LANES], a: &[f32], b: &[f32]) {
+    for (l, (&xa, &xb)) in a.iter().zip(b).enumerate() {
+        acc[l] += xa as f64 * xb as f64;
+    }
+}
+
+/// Canonical horizontal reduce: the sequential left fold
+/// `((acc[0] + acc[1]) + acc[2]) + …` — never a pairwise/tree
+/// reduce, which would produce different bits.
+pub fn reduce_lanes(acc: &[f64; LANES]) -> f64 {
+    let mut total = acc[0];
+    for &v in &acc[1..] {
+        total += v;
+    }
+    total
+}
+
+/// Fused interpolation write: `out[i] = baseline[i] + alpha *
+/// (x[i] - baseline[i])` in f32, lane-blocked. Elementwise, so the
+/// result is bitwise-independent of lane width.
+pub fn interpolate(out: &mut [f32], x: &[f32], baseline: &[f32], alpha: f32) {
+    debug_assert_eq!(out.len(), x.len());
+    debug_assert_eq!(out.len(), baseline.len());
+    let mut o_blocks = out.chunks_exact_mut(LANES);
+    let mut x_blocks = x.chunks_exact(LANES);
+    let mut b_blocks = baseline.chunks_exact(LANES);
+    for ((o, xv), bv) in (&mut o_blocks).zip(&mut x_blocks).zip(&mut b_blocks) {
+        for l in 0..LANES {
+            o[l] = bv[l] + alpha * (xv[l] - bv[l]);
+        }
+    }
+    let o = o_blocks.into_remainder();
+    let xv = x_blocks.remainder();
+    let bv = b_blocks.remainder();
+    for l in 0..o.len() {
+        o[l] = bv[l] + alpha * (xv[l] - bv[l]);
+    }
+}
+
+/// Scaled f64 accumulation of an f32 row: `acc[i] += scale *
+/// row[i] as f64`, lane-blocked. Elementwise per index; the
+/// cross-*class* accumulation order is owned by the caller.
+pub fn accum_scaled(acc: &mut [f64], scale: f64, row: &[f32]) {
+    debug_assert_eq!(acc.len(), row.len());
+    let mut a_blocks = acc.chunks_exact_mut(LANES);
+    let mut r_blocks = row.chunks_exact(LANES);
+    for (a, r) in (&mut a_blocks).zip(&mut r_blocks) {
+        for l in 0..LANES {
+            a[l] += scale * r[l] as f64;
+        }
+    }
+    let a = a_blocks.into_remainder();
+    let r = r_blocks.remainder();
+    for l in 0..a.len() {
+        a[l] += scale * r[l] as f64;
+    }
+}
+
+/// Fused weighted-gradient accumulation — the inner statement of the
+/// IG sum. For each feature `i`:
+///
+/// ```text
+/// g          = p_target * (target_row[i] as f64 - wavg[i]) * scale
+/// partial[i] += weight * g * ((x[i] - baseline[i]) as f64)
+/// ```
+///
+/// Multiplications left-to-right in f64, the `x − baseline` delta
+/// subtracted in **f32** before widening (as the scalar reference
+/// does), no FMA — the exact statement `ig_points_scalar` executes,
+/// lane-blocked. Elementwise per feature, so bitwise-independent of
+/// lane width.
+#[allow(clippy::too_many_arguments)]
+pub fn accum_grad(
+    partial: &mut [f64],
+    weight: f64,
+    p_target: f64,
+    scale: f64,
+    target_row: &[f32],
+    wavg: &[f64],
+    x: &[f32],
+    baseline: &[f32],
+) {
+    debug_assert_eq!(partial.len(), target_row.len());
+    debug_assert_eq!(partial.len(), wavg.len());
+    debug_assert_eq!(partial.len(), x.len());
+    debug_assert_eq!(partial.len(), baseline.len());
+    let n = partial.len();
+    let full = n - n % LANES;
+    for j in (0..full).step_by(LANES) {
+        for l in 0..LANES {
+            let i = j + l;
+            let g = p_target * (target_row[i] as f64 - wavg[i]) * scale;
+            partial[i] += weight * g * (x[i] - baseline[i]) as f64;
+        }
+    }
+    for i in full..n {
+        let g = p_target * (target_row[i] as f64 - wavg[i]) * scale;
+        partial[i] += weight * g * (x[i] - baseline[i]) as f64;
+    }
+}
+
+/// Row commit into an f64 accumulator: `values[i] += row[i] as f64`,
+/// lane-blocked. The cross-*row* commit order (lane-index order,
+/// docs/INVARIANTS.md §I4) is owned by the caller.
+pub fn commit_row(values: &mut [f64], row: &[f32]) {
+    debug_assert_eq!(values.len(), row.len());
+    let mut v_blocks = values.chunks_exact_mut(LANES);
+    let mut r_blocks = row.chunks_exact(LANES);
+    for (v, r) in (&mut v_blocks).zip(&mut r_blocks) {
+        for l in 0..LANES {
+            v[l] += r[l] as f64;
+        }
+    }
+    let v = v_blocks.into_remainder();
+    let r = r_blocks.remainder();
+    for l in 0..v.len() {
+        v[l] += r[l] as f64;
+    }
+}
+
+#[cfg(all(feature = "simd-intrinsics", target_arch = "x86_64"))]
+mod x86 {
+    //! AVX2 path for the order-bearing dot kernel. Eight f32 lanes
+    //! are widened to two `__m256d` accumulators (lanes 0–3 and 4–7)
+    //! so the in-register layout *is* the lane-major accumulator
+    //! array — stores land in `acc[0..8]` and the shared tail +
+    //! ordered reduce run in safe code.
+
+    use super::{accumulate_tail, reduce_lanes, LANES};
+    use std::arch::x86_64::{
+        __m256d, _mm256_add_pd, _mm256_castps256_ps128, _mm256_cvtps_pd, _mm256_extractf128_ps,
+        _mm256_loadu_ps, _mm256_mul_pd, _mm256_setzero_pd, _mm256_storeu_pd,
+    };
+
+    /// Lane-major dot via AVX2. Bit-identical to `dot_portable`:
+    /// same widen-multiply-add per lane, same tail, same reduce.
+    ///
+    /// # Safety
+    /// The caller must have verified at runtime that the CPU
+    /// supports AVX2 (`is_x86_feature_detected!("avx2")`).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f64 {
+        let n = a.len();
+        let full = n - n % LANES;
+        let mut acc = [0.0f64; LANES];
+        // SAFETY: `j + LANES <= full <= a.len() == b.len()` bounds
+        // every 8-f32 load, and `acc` is exactly LANES f64s so the
+        // two 4-f64 stores at offsets 0 and 4 are in bounds;
+        // `loadu`/`storeu` have no alignment requirement.
+        unsafe {
+            let mut acc_lo = _mm256_setzero_pd();
+            let mut acc_hi = _mm256_setzero_pd();
+            let mut j = 0;
+            while j < full {
+                let va = _mm256_loadu_ps(a.as_ptr().add(j));
+                let vb = _mm256_loadu_ps(b.as_ptr().add(j));
+                let a_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(va));
+                let a_hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(va));
+                let b_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(vb));
+                let b_hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(vb));
+                acc_lo = _mm256_add_pd(acc_lo, _mm256_mul_pd(a_lo, b_lo));
+                acc_hi = _mm256_add_pd(acc_hi, _mm256_mul_pd(a_hi, b_hi));
+                j += LANES;
+            }
+            store_halves(&mut acc, acc_lo, acc_hi);
+        }
+        accumulate_tail(&mut acc, &a[full..], &b[full..]);
+        reduce_lanes(&acc)
+    }
+
+    /// Spill the two 4-wide register accumulators into the lane
+    /// array: `acc_lo` → lanes 0–3, `acc_hi` → lanes 4–7.
+    ///
+    /// # Safety
+    /// Requires AVX (implied by the caller's AVX2 check).
+    #[target_feature(enable = "avx2")]
+    unsafe fn store_halves(acc: &mut [f64; LANES], acc_lo: __m256d, acc_hi: __m256d) {
+        // SAFETY: `acc` is LANES == 8 f64s, so offsets 0 and 4 each
+        // admit an unaligned 4-f64 store.
+        unsafe {
+            _mm256_storeu_pd(acc.as_mut_ptr(), acc_lo);
+            _mm256_storeu_pd(acc.as_mut_ptr().add(4), acc_hi);
+        }
+    }
+}
+
+#[cfg(all(feature = "simd-intrinsics", target_arch = "aarch64"))]
+mod arm {
+    //! NEON path for the order-bearing dot kernel. Eight f32 lanes
+    //! are widened to four `float64x2_t` accumulators (lane pairs
+    //! 01/23/45/67), stored back as the lane-major accumulator
+    //! array; the shared tail + ordered reduce run in safe code.
+
+    use super::{accumulate_tail, reduce_lanes, LANES};
+    use std::arch::aarch64::{
+        float64x2_t, vaddq_f64, vcvt_f64_f32, vcvt_high_f64_f32, vdupq_n_f64, vget_low_f32,
+        vld1q_f32, vmulq_f64, vst1q_f64,
+    };
+
+    /// Lane-major dot via NEON. Bit-identical to `dot_portable`:
+    /// same widen-multiply-add per lane, same tail, same reduce.
+    ///
+    /// # Safety
+    /// The caller must have verified at runtime that the CPU
+    /// supports NEON (`is_aarch64_feature_detected!("neon")`).
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn dot_neon(a: &[f32], b: &[f32]) -> f64 {
+        let n = a.len();
+        let full = n - n % LANES;
+        let mut acc = [0.0f64; LANES];
+        // SAFETY: `j + LANES <= full <= a.len() == b.len()` bounds
+        // every pair of 4-f32 loads, and `acc` is exactly LANES f64s
+        // so the four 2-f64 stores at offsets 0/2/4/6 are in bounds.
+        unsafe {
+            let mut acc0: float64x2_t = vdupq_n_f64(0.0);
+            let mut acc1: float64x2_t = vdupq_n_f64(0.0);
+            let mut acc2: float64x2_t = vdupq_n_f64(0.0);
+            let mut acc3: float64x2_t = vdupq_n_f64(0.0);
+            let mut j = 0;
+            while j < full {
+                let va0 = vld1q_f32(a.as_ptr().add(j));
+                let va1 = vld1q_f32(a.as_ptr().add(j + 4));
+                let vb0 = vld1q_f32(b.as_ptr().add(j));
+                let vb1 = vld1q_f32(b.as_ptr().add(j + 4));
+                let a01 = vcvt_f64_f32(vget_low_f32(va0));
+                let a23 = vcvt_high_f64_f32(va0);
+                let a45 = vcvt_f64_f32(vget_low_f32(va1));
+                let a67 = vcvt_high_f64_f32(va1);
+                let b01 = vcvt_f64_f32(vget_low_f32(vb0));
+                let b23 = vcvt_high_f64_f32(vb0);
+                let b45 = vcvt_f64_f32(vget_low_f32(vb1));
+                let b67 = vcvt_high_f64_f32(vb1);
+                acc0 = vaddq_f64(acc0, vmulq_f64(a01, b01));
+                acc1 = vaddq_f64(acc1, vmulq_f64(a23, b23));
+                acc2 = vaddq_f64(acc2, vmulq_f64(a45, b45));
+                acc3 = vaddq_f64(acc3, vmulq_f64(a67, b67));
+                j += LANES;
+            }
+            vst1q_f64(acc.as_mut_ptr(), acc0);
+            vst1q_f64(acc.as_mut_ptr().add(2), acc1);
+            vst1q_f64(acc.as_mut_ptr().add(4), acc2);
+            vst1q_f64(acc.as_mut_ptr().add(6), acc3);
+        }
+        accumulate_tail(&mut acc, &a[full..], &b[full..]);
+        reduce_lanes(&acc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 32-bit xorshift-multiply mixer — full-mantissa pseudo-random
+    /// f32s so reduction *order* is visible in the bits (powers of
+    /// two would make every order bit-identical and the goldens
+    /// vacuous). Mirrored verbatim in `test_batch_parity.py`.
+    fn mix(mut k: u32) -> u32 {
+        k ^= k >> 16;
+        k = k.wrapping_mul(0x45D9_F3B);
+        k ^= k >> 16;
+        k = k.wrapping_mul(0x45D9_F3B);
+        k ^= k >> 16;
+        k
+    }
+
+    /// Deterministic test vector in [-1, 1): element `i` of the
+    /// stream named by `salt`. Cross-language golden generator —
+    /// MUST match `test_batch_parity.py::_tvec` verbatim.
+    fn tvec(n: usize, salt: u32) -> Vec<f32> {
+        (0..n as u32)
+            .map(|i| {
+                let k = mix(i.wrapping_mul(2_654_435_761).wrapping_add(salt.wrapping_mul(40_503)));
+                (k as f64 / 4_294_967_296.0 * 2.0 - 1.0) as f32
+            })
+            .collect()
+    }
+
+    /// Literal transcription of the lane-major spec, independent of
+    /// the blocked implementation: `acc[i % LANES] += a*b`, then the
+    /// sequential fold. The implementation must match this bitwise.
+    fn dot_spec(a: &[f32], b: &[f32]) -> f64 {
+        let mut acc = [0.0f64; LANES];
+        for (i, (&xa, &xb)) in a.iter().zip(b).enumerate() {
+            acc[i % LANES] += xa as f64 * xb as f64;
+        }
+        reduce_lanes(&acc)
+    }
+
+    /// Plain sequential left-to-right dot — the order lane-major
+    /// deliberately does NOT compute (except where n forces it).
+    fn dot_sequential(a: &[f32], b: &[f32]) -> f64 {
+        let mut total = 0.0f64;
+        for (&xa, &xb) in a.iter().zip(b) {
+            total += xa as f64 * xb as f64;
+        }
+        total
+    }
+
+    /// Cross-language goldens for the lane-major dot, shared
+    /// verbatim with `test_batch_parity.py::TestLaneMajorOrder`.
+    /// Widths cover a sub-lane vector, one exact block, block+tail,
+    /// a prime, a prime several blocks in, and the bench width.
+    const DOT_GOLDENS: &[(usize, u32, u32, u64)] = &[
+        (7, 1, 2, 0x3FFE_47B4_6C4B_7578),
+        (8, 3, 4, 0xBFDF_3205_52EE_70F0),
+        (9, 5, 6, 0xBFFE_B6A1_EA3E_24A9),
+        (13, 7, 8, 0xBFC4_C2A4_F2D6_AA7C),
+        (67, 9, 10, 0x3FF2_3867_CEBD_4200),
+        (3072, 11, 12, 0x4026_61CB_22E1_D7F6),
+    ];
+
+    #[test]
+    fn dot_matches_cross_language_goldens() {
+        for &(n, sa, sb, bits) in DOT_GOLDENS {
+            let a = tvec(n, sa);
+            let b = tvec(n, sb);
+            assert_eq!(
+                dot_f32(&a, &b).to_bits(),
+                bits,
+                "lane-major dot golden mismatch at n={n} (backend {})",
+                backend()
+            );
+        }
+    }
+
+    #[test]
+    fn dot_matches_lane_major_spec_at_all_tail_widths() {
+        for n in [0, 1, 6, 7, 8, 9, 13, 16, 17, 31, 37, 64, 67, 101, 3072] {
+            let a = tvec(n, 21);
+            let b = tvec(n, 22);
+            assert_eq!(
+                dot_f32(&a, &b).to_bits(),
+                dot_spec(&a, &b).to_bits(),
+                "dispatched dot diverged from lane-major spec at n={n} (backend {})",
+                backend()
+            );
+            assert_eq!(
+                dot_portable(&a, &b).to_bits(),
+                dot_spec(&a, &b).to_bits(),
+                "portable dot diverged from lane-major spec at n={n}"
+            );
+        }
+    }
+
+    /// The goldens must actually pin the *order*: at these widths the
+    /// sequential fold produces different bits, so a backend that
+    /// quietly reassociated would fail the golden test.
+    #[test]
+    fn lane_major_order_differs_from_sequential_where_it_must() {
+        let seq_bits = [
+            (13usize, 7u32, 8u32, 0xBFC4_C2A4_F2D6_AA80u64),
+            (67, 9, 10, 0x3FF2_3867_CEBD_4202),
+            (3072, 11, 12, 0x4026_61CB_22E1_D7EE),
+        ];
+        for &(n, sa, sb, bits) in &seq_bits {
+            let a = tvec(n, sa);
+            let b = tvec(n, sb);
+            let seq = dot_sequential(&a, &b);
+            assert_eq!(seq.to_bits(), bits, "sequential pin drifted at n={n}");
+            assert_ne!(
+                dot_f32(&a, &b).to_bits(),
+                seq.to_bits(),
+                "lane-major and sequential bits coincide at n={n}: golden cannot pin order"
+            );
+        }
+    }
+
+    #[test]
+    fn backend_name_is_one_of_the_contract_set() {
+        assert!(["portable", "avx2", "neon"].contains(&backend()));
+    }
+
+    #[test]
+    #[should_panic(expected = "dot operand width mismatch")]
+    fn dot_rejects_mismatched_widths() {
+        dot_f32(&[1.0, 2.0], &[1.0]);
+    }
+
+    #[test]
+    fn interpolate_matches_scalar_statement_bitwise() {
+        for n in [0, 1, 7, 8, 9, 13, 37, 100] {
+            let x = tvec(n, 31);
+            let baseline = tvec(n, 32);
+            for &alpha in &[0.0f32, 0.125, 0.37, 1.0] {
+                let mut out = vec![0.0f32; n];
+                interpolate(&mut out, &x, &baseline, alpha);
+                for i in 0..n {
+                    let want = baseline[i] + alpha * (x[i] - baseline[i]);
+                    assert_eq!(out[i].to_bits(), want.to_bits(), "n={n} i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn accum_scaled_matches_scalar_statement_bitwise() {
+        for n in [0, 1, 7, 8, 9, 13, 37] {
+            let row = tvec(n, 41);
+            let mut acc: Vec<f64> = tvec(n, 42).iter().map(|&v| v as f64).collect();
+            let mut want = acc.clone();
+            accum_scaled(&mut acc, 0.37, &row);
+            for i in 0..n {
+                want[i] += 0.37 * row[i] as f64;
+                assert_eq!(acc[i].to_bits(), want[i].to_bits(), "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn accum_grad_matches_scalar_statement_bitwise() {
+        for n in [0, 1, 7, 8, 9, 13, 37] {
+            let trow = tvec(n, 51);
+            let x = tvec(n, 52);
+            let baseline = tvec(n, 53);
+            let wavg: Vec<f64> = tvec(n, 54).iter().map(|&v| v as f64).collect();
+            let mut partial: Vec<f64> = tvec(n, 55).iter().map(|&v| v as f64).collect();
+            let mut want = partial.clone();
+            let (weight, pt, scale) = (0.21f64, 0.62f64, 0.0044f64);
+            accum_grad(&mut partial, weight, pt, scale, &trow, &wavg, &x, &baseline);
+            for i in 0..n {
+                let g = pt * (trow[i] as f64 - wavg[i]) * scale;
+                want[i] += weight * g * (x[i] - baseline[i]) as f64;
+                assert_eq!(partial[i].to_bits(), want[i].to_bits(), "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn commit_row_matches_scalar_statement_bitwise() {
+        for n in [0, 1, 7, 8, 9, 13, 37] {
+            let row = tvec(n, 61);
+            let mut values: Vec<f64> = tvec(n, 62).iter().map(|&v| v as f64).collect();
+            let mut want = values.clone();
+            commit_row(&mut values, &row);
+            for i in 0..n {
+                want[i] += row[i] as f64;
+                assert_eq!(values[i].to_bits(), want[i].to_bits(), "n={n} i={i}");
+            }
+        }
+    }
+
+    #[cfg(all(feature = "simd-intrinsics", target_arch = "x86_64"))]
+    #[test]
+    fn avx2_matches_portable_bitwise() {
+        if !std::arch::is_x86_feature_detected!("avx2") {
+            eprintln!("avx2 unavailable on this CPU; intrinsic parity not exercised");
+            return;
+        }
+        for n in [0, 1, 7, 8, 9, 13, 16, 17, 31, 37, 64, 67, 101, 3072] {
+            let a = tvec(n, 71);
+            let b = tvec(n, 72);
+            // SAFETY: AVX2 support was just verified at runtime.
+            let intr = unsafe { super::x86::dot_avx2(&a, &b) };
+            assert_eq!(
+                intr.to_bits(),
+                dot_portable(&a, &b).to_bits(),
+                "avx2 dot diverged from portable at n={n}"
+            );
+        }
+    }
+
+    #[cfg(all(feature = "simd-intrinsics", target_arch = "aarch64"))]
+    #[test]
+    fn neon_matches_portable_bitwise() {
+        if !std::arch::is_aarch64_feature_detected!("neon") {
+            eprintln!("neon unavailable on this CPU; intrinsic parity not exercised");
+            return;
+        }
+        for n in [0, 1, 7, 8, 9, 13, 16, 17, 31, 37, 64, 67, 101, 3072] {
+            let a = tvec(n, 71);
+            let b = tvec(n, 72);
+            // SAFETY: NEON support was just verified at runtime.
+            let intr = unsafe { super::arm::dot_neon(&a, &b) };
+            assert_eq!(
+                intr.to_bits(),
+                dot_portable(&a, &b).to_bits(),
+                "neon dot diverged from portable at n={n}"
+            );
+        }
+    }
+}

@@ -24,11 +24,19 @@
 //! `runtime::PjrtModel`) override `eval_batch`; everything else (test
 //! doubles, ablation models) rides the default shim over
 //! [`Model::ig_points`].
+//!
+//! All f32 inner loops — interpolation, logit dots, gradient
+//! accumulation — run through the fixed-width lane kernels in
+//! [`exec::simd`](crate::exec::simd); the logit dot's lane-major
+//! reduction order is the canonical one every backend (scalar
+//! reference, portable, AVX2/NEON) computes bit-identically
+//! (docs/INVARIANTS.md §I13).
 
 use anyhow::{ensure, Result};
 
 use crate::exec::batch::{self, BatchExec, BatchOut, BatchPlan, ScratchArena};
 use crate::exec::gather::{GatherExec, GatherLane, GatherOut, ResidentPool};
+use crate::exec::simd;
 
 /// A differentiable classifier the IG engines can drive.
 ///
@@ -200,9 +208,10 @@ impl AnalyticModel {
         let f = self.features;
         (0..self.classes)
             .map(|c| {
-                let row = &self.w[c * f..(c + 1) * f];
-                // nuig:allow(float-reduce): sequential in-order slice iteration — fixed order
-                let dot: f64 = row.iter().zip(x).map(|(&w, &v)| w as f64 * v as f64).sum();
+                // Lane-major canonical dot (docs/INVARIANTS.md §I13):
+                // every caller — scalar reference, batched kernel, any
+                // dispatch backend — computes this exact addend order.
+                let dot = simd::dot_f32(&self.w[c * f..(c + 1) * f], x);
                 self.gain * dot / f as f64
             })
             .collect()
@@ -218,18 +227,24 @@ impl AnalyticModel {
     }
 
     /// Exact gradient of p_target w.r.t. x at the given point.
+    ///
+    /// `wavg_i = Σ_c p_c W_{c,i}` accumulates class-major through the
+    /// lane-blocked [`simd::accum_scaled`]: per feature the addend order
+    /// over classes is the sequential class order (each class adds once,
+    /// in order, starting from 0.0), identical to the per-feature sum it
+    /// replaces — elementwise per `i`, so lane width cannot change bits.
     pub fn grad(&self, x: &[f32], target: usize) -> Vec<f64> {
         let p = Self::softmax(&self.logits(x));
         let f = self.features;
         let scale = self.gain / f as f64;
-        (0..f)
-            .map(|i| {
-                let wt = self.w[target * f + i] as f64;
-                let wavg: f64 =
-                    // nuig:allow(float-reduce): sequential in-order range iteration — fixed order
-                    (0..self.classes).map(|c| p[c] * self.w[c * f + i] as f64).sum();
-                p[target] * (wt - wavg) * scale
-            })
+        let mut wavg = vec![0f64; f];
+        for (c, &pc) in p.iter().enumerate() {
+            simd::accum_scaled(&mut wavg, pc, &self.w[c * f..(c + 1) * f]);
+        }
+        let trow = &self.w[target * f..(target + 1) * f];
+        wavg.iter()
+            .zip(trow)
+            .map(|(&avg, &wt)| p[target] * (wt as f64 - avg) * scale)
             .collect()
     }
 
@@ -242,6 +257,11 @@ impl AnalyticModel {
     /// property tests compare against (bit-identical within a single
     /// chunk, ≤ f64-reassociation distance across chunks) and the
     /// `fig_hotpath` bench's sequential baseline.
+    ///
+    /// Its dot products go through [`logits`](Self::logits) →
+    /// [`simd::dot_f32`], so the reference itself computes the
+    /// canonical lane-major reduction order — the anchor every
+    /// backend's bits are pinned to (docs/INVARIANTS.md §I13).
     pub fn ig_points_scalar(
         &self,
         x: &[f32],
@@ -271,6 +291,14 @@ impl AnalyticModel {
             }
         }
         Ok(IgPointsOut { partial, target_probs })
+    }
+
+    /// Weight row of class `c` — the `(F,)` slice the logit dot runs
+    /// over. Exposed so `fig_hotpath` can clock the lane kernels on
+    /// the model's real operands.
+    pub fn class_row(&self, c: usize) -> &[f32] {
+        let f = self.features;
+        &self.w[c * f..(c + 1) * f]
     }
 }
 
@@ -307,12 +335,16 @@ impl Model for AnalyticModel {
 
     /// The batched kernel: planar [`PointBatch`](batch::PointBatch) fill
     /// (interpolation fused into the write), per-worker scratch arena for
-    /// logits/softmax/gradient intermediates, autovectorizable f32 inner
-    /// loops with f64 accumulation — and zero per-point allocations.
+    /// logits/softmax/gradient intermediates, and width-[`simd::LANES`]
+    /// lane kernels ([`simd::dot_f32`] / [`simd::accum_scaled`] /
+    /// [`simd::accum_grad`]) for every f32 inner loop, with f64
+    /// accumulation — and zero per-point allocations.
     ///
     /// Arithmetic is the scalar reference kernel's, in the same per-point
-    /// order, so a single-chunk stream reproduces
-    /// [`AnalyticModel::ig_points_scalar`] to the bit.
+    /// order and the same lane-major dot-reduction order, so a
+    /// single-chunk stream reproduces
+    /// [`AnalyticModel::ig_points_scalar`] to the bit — on every dispatch
+    /// backend (docs/INVARIANTS.md §I13).
     fn eval_batch(&self, plan: &BatchPlan<'_>) -> Result<BatchOut> {
         let f = self.features;
         let c = self.classes;
@@ -335,14 +367,10 @@ impl Model for AnalyticModel {
             for (k, &wgt) in plan.weights.iter().enumerate() {
                 let row = arena.batch.row(k);
 
-                // Logits: f32 products accumulated in f64, class by class
-                // (same addend order as the scalar kernel).
+                // Logits: the canonical lane-major dot, class by class —
+                // the exact reduction order the scalar kernel computes.
                 for cc in 0..c {
-                    let wrow = &self.w[cc * f..(cc + 1) * f];
-                    let mut dot = 0f64;
-                    for (&wv, &pv) in wrow.iter().zip(row) {
-                        dot += wv as f64 * pv as f64;
-                    }
+                    let dot = simd::dot_f32(&self.w[cc * f..(cc + 1) * f], row);
                     arena.logits[cc] = self.gain * dot / f as f64;
                 }
 
@@ -361,30 +389,30 @@ impl Model for AnalyticModel {
                 target_probs.push(arena.probs[plan.target]);
 
                 if wgt != 0.0 {
-                    // wavg_i = Σ_c p_c W_{c,i}, accumulated class-major so
-                    // the inner loop is a contiguous (vectorizable) sweep;
-                    // per feature the addend order over classes matches
-                    // the scalar kernel's sum exactly.
+                    // wavg_i = Σ_c p_c W_{c,i}, accumulated class-major in
+                    // lane blocks; per feature the addend order over
+                    // classes matches the scalar kernel's sum exactly.
                     for v in arena.wavg.iter_mut() {
                         *v = 0.0;
                     }
                     for cc in 0..c {
-                        let p = arena.probs[cc];
                         let wrow = &self.w[cc * f..(cc + 1) * f];
-                        for (acc, &wv) in arena.wavg.iter_mut().zip(wrow) {
-                            *acc += p * wv as f64;
-                        }
+                        simd::accum_scaled(&mut arena.wavg, arena.probs[cc], wrow);
                     }
                     // Gradient × (x − x′) fused into the accumulate: the
                     // scalar kernel's `w · g_i · (x_i − x′_i)` expression,
                     // without materializing g.
-                    let pt = arena.probs[plan.target];
                     let trow = &self.w[plan.target * f..(plan.target + 1) * f];
-                    let w64 = wgt as f64;
-                    for i in 0..f {
-                        let g = pt * (trow[i] as f64 - arena.wavg[i]) * scale;
-                        partial[i] += w64 * g * (plan.x[i] - plan.baseline[i]) as f64;
-                    }
+                    simd::accum_grad(
+                        &mut partial,
+                        wgt as f64,
+                        arena.probs[plan.target],
+                        scale,
+                        trow,
+                        &arena.wavg,
+                        plan.x,
+                        plan.baseline,
+                    );
                 }
             }
         });
@@ -693,6 +721,50 @@ mod tests {
                     seq.partial[i].to_bits(),
                     "workers={workers} feature {i}"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn lane_tail_widths_bitwise_across_workers() {
+        // The masked-scalar-tail property (I13): at feature counts
+        // W−1 / W / W+1 and primes, the lane-blocked batched kernel is
+        // bitwise-equal to the scalar reference within one chunk on
+        // whatever dot backend is dispatched, and parallel evaluation
+        // at workers {1,2,4,8} is bitwise-equal to sequential.
+        for f in [simd::LANES - 1, simd::LANES, simd::LANES + 1, 13, 31, 37] {
+            let m = AnalyticModel::new(f, 5, 17, 18.0);
+            let mut rng = TestRng::new(900 + f as u64);
+            let x = rng.vec_f32(f, 0.0, 1.0);
+            let b = rng.vec_f32(f, 0.0, 0.5);
+            let n = batch::DEFAULT_CHUNK;
+            let (alphas, weights) = rand_stream(&mut rng, n);
+            let scalar = m.ig_points_scalar(&x, &b, &alphas, &weights, 3).unwrap();
+            let batched = m.ig_points(&x, &b, &alphas, &weights, 3).unwrap();
+            assert_eq!(batched.target_probs, scalar.target_probs, "F={f}");
+            for i in 0..f {
+                assert_eq!(
+                    batched.partial[i].to_bits(),
+                    scalar.partial[i].to_bits(),
+                    "backend {} F={f} feature {i}",
+                    simd::backend()
+                );
+            }
+
+            let long = 4 * batch::DEFAULT_CHUNK + 5;
+            let (la, lw) = rand_stream(&mut rng, long);
+            let seq = eval_points(&m, &x, &b, &la, &lw, 3, &BatchExec::Sequential).unwrap();
+            for workers in [1usize, 2, 4, 8] {
+                let pool = Arc::new(ThreadPool::new(workers));
+                let par = eval_points(&m, &x, &b, &la, &lw, 3, &BatchExec::parallel(pool)).unwrap();
+                assert_eq!(par.target_probs, seq.target_probs, "F={f} workers={workers}");
+                for i in 0..f {
+                    assert_eq!(
+                        par.partial[i].to_bits(),
+                        seq.partial[i].to_bits(),
+                        "F={f} workers={workers} feature {i}"
+                    );
+                }
             }
         }
     }

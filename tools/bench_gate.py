@@ -1,0 +1,299 @@
+#!/usr/bin/env python3
+"""Schema, ratchet, and regression gates for the committed BENCH_*.json
+perf trajectory (docs/BENCHES.md, docs/EXPERIMENTS.md §Baselines).
+
+Two subcommands, both exiting non-zero on violation:
+
+  schema {hotpath|serving} FILE
+      Validate the documented schema. Placeholder files (provenance
+      containing "placeholder") are legal ONLY while ``smoke`` is true
+      and rows are empty — the bootstrap state before the first refresh
+      from a Rust-toolchain machine. Once a file carries ``smoke:
+      false`` rows, empty rows and placeholder provenance are rejected:
+      the trajectory is a one-way ratchet and cannot silently regress
+      to empty.
+
+  regression {hotpath|serving} --fresh FILE --committed FILE
+             [--tolerance FRACTION]
+      Compare a fresh smoke run against the committed trajectory on
+      machine-portable relative metrics and fail on a regression beyond
+      the tolerance band. Skips (exit 0, loud note) while the committed
+      file is still a placeholder — there is nothing to regress against
+      yet.
+
+      hotpath: compares ``speedup_vs_scalar`` on shared (m, mode) pairs
+      for the batched and parallel modes. Speedups are ratios on the
+      same machine, so they transfer between the refresh machine and CI
+      runners far better than absolute ns/point; the default tolerance
+      (0.5) only catches the kernel *losing its multiplier* — e.g. a
+      committed 2.4x batched row collapsing below 1.2x — not runner
+      jitter.
+
+      serving: compares ``throughput_rps`` on shared (feeders, devices)
+      rows with a catastrophic-only default tolerance (0.8), since
+      absolute throughput does vary across hardware.
+
+Dependency-free (stdlib json/argparse only), mirroring the repo rule
+that CI gates must not pull packages.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+NUM = (int, float)
+
+
+class Gate:
+    """Collects violations, then reports them all at once."""
+
+    def __init__(self, label: str) -> None:
+        self.label = label
+        self.errs: list[str] = []
+
+    def err(self, msg: str) -> None:
+        self.errs.append(msg)
+
+    def check_keys(self, obj: dict, spec: dict, where: str) -> None:
+        for key, ty in spec.items():
+            if key not in obj:
+                self.err(f"{where}: missing key {key!r}")
+            elif not isinstance(obj[key], ty) or isinstance(obj[key], bool) and ty is not bool:
+                self.err(f"{where}: {key!r} has type {type(obj[key]).__name__}")
+
+    def finish(self, ok_note: str) -> None:
+        if self.errs:
+            print(f"{self.label}:\n  " + "\n  ".join(self.errs))
+            sys.exit(1)
+        print(ok_note)
+
+
+def is_placeholder(doc: dict) -> bool:
+    return "placeholder" in str(doc.get("provenance", ""))
+
+
+def check_ratchet(gate: Gate, doc: dict, extra_row_keys: tuple[str, ...] = ()) -> None:
+    """The empty-rows ratchet shared by both benches: a placeholder is
+    only legal in the smoke bootstrap state; real (smoke: false) files
+    must carry rows and must not claim to be placeholders."""
+    placeholder = is_placeholder(doc)
+    smoke = doc.get("smoke")
+    rows_empty = not doc.get("rows")
+    if rows_empty and not placeholder:
+        gate.err("rows is empty but provenance does not mark a placeholder")
+    if rows_empty and placeholder and smoke is not True:
+        gate.err("placeholder with empty rows requires smoke: true (bootstrap state only)")
+    if placeholder and smoke is False:
+        gate.err("smoke: false with placeholder provenance — refresh must rewrite provenance")
+    if smoke is False:
+        if rows_empty:
+            gate.err("smoke: false requires non-empty rows (the ratchet: no silent regression " "to empty)")
+        for key in extra_row_keys:
+            if not doc.get(key):
+                gate.err(f"smoke: false requires non-empty {key!r}")
+
+
+def schema_hotpath(path: str) -> None:
+    doc = json.load(open(path))
+    gate = Gate(f"{path} schema drift")
+    top = {
+        "bench": str,
+        "schema_version": NUM,
+        "provenance": str,
+        "workers": NUM,
+        "chunk": NUM,
+        "lanes": NUM,
+        "lane_backend": str,
+        "smoke": bool,
+        "rows": list,
+        "kernel_rows": list,
+    }
+    gate.check_keys(doc, top, "top-level")
+    if doc.get("bench") != "fig_hotpath":
+        gate.err(f"bench != fig_hotpath: {doc.get('bench')!r}")
+    if doc.get("schema_version") != 2:
+        gate.err(f"schema_version != 2: {doc.get('schema_version')!r}")
+    if doc.get("lanes") != 8:
+        gate.err(f"lanes != 8 (the exec::simd::LANES contract): {doc.get('lanes')!r}")
+    row_keys = {
+        "m": NUM,
+        "mode": str,
+        "points": NUM,
+        "ns_per_point": NUM,
+        "points_per_s": NUM,
+        "speedup_vs_scalar": NUM,
+    }
+    modes = set()
+    for i, row in enumerate(doc.get("rows", [])):
+        gate.check_keys(row, row_keys, f"row {i}")
+        modes.add(row.get("mode"))
+    if doc.get("rows") and not {"scalar", "batched", "parallel"} <= modes:
+        gate.err(f"modes incomplete: {sorted(m for m in modes if m)}")
+    kernel_keys = {"kernel": str, "calls_per_point": NUM, "ns_per_point": NUM}
+    kernels = set()
+    for i, row in enumerate(doc.get("kernel_rows", [])):
+        gate.check_keys(row, kernel_keys, f"kernel_row {i}")
+        kernels.add(row.get("kernel"))
+    want_kernels = {"interpolate", "dot_f32", "accum_scaled", "accum_grad", "commit_row"}
+    if doc.get("kernel_rows") and not want_kernels <= kernels:
+        gate.err(f"kernel_rows incomplete: {sorted(k for k in kernels if k)}")
+    check_ratchet(gate, doc, extra_row_keys=("kernel_rows",))
+    if doc.get("smoke") is False and doc.get("lane_backend") not in ("portable", "avx2", "neon"):
+        gate.err(f"smoke: false requires a measured lane_backend, got {doc.get('lane_backend')!r}")
+    state = "placeholder (bootstrap)" if is_placeholder(doc) else f"{len(doc.get('rows', []))} rows"
+    gate.finish(f"{path} schema OK ({state}, {len(doc.get('kernel_rows', []))} kernel rows)")
+
+
+def schema_serving(path: str) -> None:
+    doc = json.load(open(path))
+    gate = Gate(f"{path} schema drift")
+    top = {
+        "bench": str,
+        "schema_version": NUM,
+        "provenance": str,
+        "chunk": NUM,
+        "requests": NUM,
+        "smoke": bool,
+        "rows": list,
+        "tier_rows": list,
+        "frontend_rows": list,
+    }
+    gate.check_keys(doc, top, "top-level")
+    if doc.get("bench") != "fig_serving":
+        gate.err(f"bench != fig_serving: {doc.get('bench')!r}")
+    if doc.get("schema_version") != 1:
+        gate.err(f"schema_version != 1: {doc.get('schema_version')!r}")
+    row_keys = {
+        "feeders": NUM,
+        "devices": NUM,
+        "occupancy": NUM,
+        "chunks": NUM,
+        "host_bytes_per_chunk": NUM,
+        "legacy_host_bytes_per_chunk": NUM,
+        "throughput_rps": NUM,
+        "bit_identical": NUM,
+        "respawn_latency_us": NUM,
+        "shed_rate": NUM,
+    }
+    for i, row in enumerate(doc.get("rows", [])):
+        gate.check_keys(row, row_keys, f"row {i}")
+        if row.get("bit_identical") != 1:
+            gate.err(f"row {i}: bit_identical != 1")
+        if row.get("shed_rate") != 0.5:
+            gate.err(f"row {i}: shed_rate != 0.5 (the half-tight burst)")
+    tier_keys = {
+        "stealing": NUM,
+        "tier": str,
+        "completed": NUM,
+        "p99_ms": NUM,
+        "steal_rate": NUM,
+    }
+    tiers_seen: dict[int, set] = {1: set(), 0: set()}
+    for i, row in enumerate(doc.get("tier_rows", [])):
+        gate.check_keys(row, tier_keys, f"tier_row {i}")
+        if row.get("stealing") in (0, 1):
+            tiers_seen[int(row["stealing"])].add(row.get("tier"))
+        if row.get("stealing") == 0 and row.get("steal_rate") != 0:
+            gate.err(f"tier_row {i}: steal_rate != 0 with stealing off")
+    if doc.get("tier_rows"):
+        want = {"unbounded", "tight", "standard", "thorough"}
+        for mode, seen in tiers_seen.items():
+            if not want <= seen:
+                gate.err(f"stealing={mode}: tiers incomplete: {sorted(seen)}")
+    fe_keys = {
+        "requests": NUM,
+        "deadline_ms": NUM,
+        "deadline_hit_rate": NUM,
+        "partial_rate": NUM,
+        "rounds_streamed": NUM,
+        "throughput_rps": NUM,
+    }
+    fe_deadlines = set()
+    for i, row in enumerate(doc.get("frontend_rows", [])):
+        gate.check_keys(row, fe_keys, f"frontend_row {i}")
+        deadlined = row.get("deadline_ms", 0) > 0
+        fe_deadlines.add(deadlined)
+        expect = 1.0 if deadlined else 0.0
+        if row.get("deadline_hit_rate") != expect:
+            gate.err(f"frontend_row {i}: deadline_hit_rate != {expect}")
+        if row.get("partial_rate") != expect:
+            gate.err(f"frontend_row {i}: partial_rate != {expect}")
+    if doc.get("frontend_rows") and fe_deadlines != {True, False}:
+        gate.err("frontend_rows must cover a deadlined burst and a control")
+    check_ratchet(gate, doc, extra_row_keys=("tier_rows", "frontend_rows"))
+    state = "placeholder (bootstrap)" if is_placeholder(doc) else f"{len(doc.get('rows', []))} rows"
+    gate.finish(
+        f"{path} schema OK ({state}, {len(doc.get('tier_rows', []))} tier rows, "
+        f"{len(doc.get('frontend_rows', []))} frontend rows)"
+    )
+
+
+def regression(kind: str, fresh_path: str, committed_path: str, tolerance: float) -> None:
+    fresh = json.load(open(fresh_path))
+    committed = json.load(open(committed_path))
+    if is_placeholder(committed):
+        print(
+            f"NOTE: committed {committed_path} is still the bootstrap placeholder — "
+            "no trajectory to regress against yet. Refresh per docs/EXPERIMENTS.md "
+            "§Baselines to arm this gate."
+        )
+        return
+    gate = Gate(f"{kind} perf regression vs committed trajectory")
+    if kind == "hotpath":
+        metric, key = "speedup_vs_scalar", lambda r: (r.get("m"), r.get("mode"))
+        keep = lambda r: r.get("mode") in ("batched", "parallel")
+    else:
+        metric, key = "throughput_rps", lambda r: (r.get("feeders"), r.get("devices"))
+        keep = lambda r: True
+    committed_rows = {key(r): r for r in committed.get("rows", []) if keep(r)}
+    compared = 0
+    for row in fresh.get("rows", []):
+        if not keep(row):
+            continue
+        base = committed_rows.get(key(row))
+        if base is None:
+            continue
+        compared += 1
+        have, want = row.get(metric), base.get(metric)
+        if not isinstance(have, NUM) or not isinstance(want, NUM):
+            gate.err(f"{key(row)}: non-numeric {metric}: fresh={have!r} committed={want!r}")
+            continue
+        floor = want * (1.0 - tolerance)
+        if have < floor:
+            gate.err(
+                f"{key(row)}: {metric} {have:.3f} fell below committed {want:.3f} "
+                f"x (1 - {tolerance}) = {floor:.3f}"
+            )
+    if compared == 0:
+        gate.err(
+            f"no shared rows between {fresh_path} and {committed_path} — the regression "
+            "gate compared nothing; refresh grids must overlap (smoke m=16 is in both)"
+        )
+    gate.finish(f"{kind} regression gate OK ({compared} shared rows within tolerance {tolerance})")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    s = sub.add_parser("schema", help="validate a BENCH_*.json against its documented schema")
+    s.add_argument("kind", choices=("hotpath", "serving"))
+    s.add_argument("file")
+    r = sub.add_parser("regression", help="compare a fresh run against the committed trajectory")
+    r.add_argument("kind", choices=("hotpath", "serving"))
+    r.add_argument("--fresh", required=True)
+    r.add_argument("--committed", required=True)
+    r.add_argument("--tolerance", type=float, default=None)
+    args = ap.parse_args()
+    if args.cmd == "schema":
+        (schema_hotpath if args.kind == "hotpath" else schema_serving)(args.file)
+    else:
+        tol = args.tolerance
+        if tol is None:
+            tol = 0.5 if args.kind == "hotpath" else 0.8
+        regression(args.kind, args.fresh, args.committed, tol)
+
+
+if __name__ == "__main__":
+    main()

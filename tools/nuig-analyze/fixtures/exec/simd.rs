@@ -1,0 +1,39 @@
+//! Seeded violations for the `exec/simd.rs` lane-kernel scope: the
+//! float-reduce lint applies there (lane-major reduction order is the
+//! I13 invariant, not a style choice) and — unlike everywhere else —
+//! cannot be waived: a justified `nuig:allow(float-reduce)` is itself
+//! a waiver finding and does not suppress. Wallclock-kernel also
+//! covers the module (kernel scope).
+//!
+//! This file is never compiled — it is input data for the analyzer.
+
+use std::time::Instant;
+
+pub fn out_of_order_lane_reduce(acc: &[f64; 8]) -> f64 {
+    // A reversed horizontal reduce: different bits than the canonical
+    // sequential left fold, so the lint must flag it.
+    let total: f64 = acc.iter().rev().fold(0.0, |t, v| t + v); //~ float-reduce
+    total
+}
+
+pub fn waived_lane_reduce(acc: &[f64; 8]) -> f64 {
+    // nuig:allow(float-reduce): lanes reduce in slice order — looks sequential
+    let total: f64 = acc.iter().sum(); //~ float-reduce
+    //~^^ waiver
+    total
+}
+
+pub fn in_order_lane_reduce(acc: &[f64; 8]) -> f64 {
+    // The canonical form: an explicit indexed left fold. Clean.
+    let mut total = acc[0];
+    for &v in &acc[1..] {
+        total += v;
+    }
+    total
+}
+
+pub fn timed_reduce(acc: &[f64; 8]) -> f64 {
+    let start = Instant::now(); //~ wallclock-kernel
+    let _ = start.elapsed();
+    in_order_lane_reduce(acc)
+}

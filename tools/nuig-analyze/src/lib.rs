@@ -5,12 +5,17 @@
 //! * `float-reduce` — no `.sum()` / `.product()` / `.fold(` over
 //!   f32/f64 outside `exec/batch.rs` (the one blessed ordered-reduce
 //!   site). Floating-point addition is non-associative; an unordered
-//!   reduction silently breaks the 0-ULP determinism contract.
+//!   reduction silently breaks the 0-ULP determinism contract. Inside
+//!   `exec/simd.rs` the lint is **non-waivable**: the lane-major
+//!   reduction order there is the cross-backend bit-identity invariant
+//!   itself (docs/INVARIANTS.md §I13), not a style choice — every
+//!   reduction must be an explicit indexed lane loop.
 //! * `hash-iter` — no iteration over `HashMap`/`HashSet` bindings:
 //!   `std` hash iteration order is randomized per process, so anything
 //!   accumulated or committed in that order is nondeterministic.
 //! * `wallclock-kernel` — no `Instant::now` / `SystemTime::now` inside
-//!   the deterministic kernels (`src/ig/`, `src/exec/batch.rs`) or the
+//!   the deterministic kernels (`src/ig/`, `src/exec/batch.rs`,
+//!   `src/exec/simd.rs`) or the
 //!   lane-dispatch path (`src/coordinator/scheduler.rs`, since the
 //!   tiered work-stealing scheduler): stage timing belongs to
 //!   `metrics::StageTimer`, owned by the callers, and the scheduler's
@@ -291,7 +296,7 @@ fn parse_waivers(raw_lines: &[&str]) -> Vec<(usize, Waiver)> {
 /// Scope/allowlist decisions, all on `/`-separated paths relative to the
 /// scan root (mirroring `rust/src`).
 fn in_kernel_scope(rel: &str) -> bool {
-    rel.starts_with("ig/") || rel == "exec/batch.rs"
+    rel.starts_with("ig/") || rel == "exec/batch.rs" || rel == "exec/simd.rs"
 }
 
 fn in_serving_scope(rel: &str) -> bool {
@@ -314,6 +319,15 @@ fn float_reduce_allowlisted(rel: &str) -> bool {
     rel == "exec/batch.rs"
 }
 
+/// `float-reduce` waivers are rejected outright in `exec/simd.rs`: the
+/// lane-major reduction order there IS the cross-backend bit-identity
+/// invariant (docs/INVARIANTS.md §I13). A reduction that cannot be
+/// written as an explicit indexed lane loop does not belong in that
+/// module.
+fn float_reduce_unwaivable(rel: &str) -> bool {
+    rel == "exec/simd.rs"
+}
+
 /// Analyze one file's text; `rel` is its `/`-separated path relative to
 /// the scan root.
 pub fn analyze_file(rel: &str, text: &str) -> Vec<Finding> {
@@ -334,6 +348,15 @@ pub fn analyze_file(rel: &str, text: &str) -> Vec<Finding> {
                 lint: WAIVER_LINT,
                 message: format!("waiver names unknown lint `{}`", w.lint),
             });
+        } else if w.lint == "float-reduce" && float_reduce_unwaivable(rel) {
+            findings.push(Finding {
+                file: rel.to_string(),
+                line: idx + 1,
+                lint: WAIVER_LINT,
+                message: "float-reduce cannot be waived in exec/simd.rs — the lane-major \
+                          reduction order is an invariant (I13), not a style choice"
+                    .to_string(),
+            });
         } else if w.justification.is_empty() {
             findings.push(Finding {
                 file: rel.to_string(),
@@ -350,6 +373,9 @@ pub fn analyze_file(rel: &str, text: &str) -> Vec<Finding> {
     let prod_end = test_start.unwrap_or(code_lines.len());
 
     let waived = |lint: &str, line_idx: usize| -> bool {
+        if lint == "float-reduce" && float_reduce_unwaivable(rel) {
+            return false;
+        }
         waivers.iter().any(|(idx, w)| {
             w.lint == lint
                 && !w.justification.is_empty()
@@ -801,5 +827,55 @@ mod tests {
              fn f(v: &[f64]) -> f64 { v.iter().sum() }\n",
         );
         assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn float_reduce_covers_exec_simd() {
+        let findings = analyze_file(
+            "exec/simd.rs",
+            "fn f(acc: &[f64]) -> f64 { acc.iter().sum() }\n",
+        );
+        assert!(
+            findings.iter().any(|f| f.lint == "float-reduce"),
+            "exec/simd.rs is in float-reduce scope: {findings:?}"
+        );
+    }
+
+    #[test]
+    fn float_reduce_unwaivable_in_exec_simd() {
+        // A fully-justified waiver that would suppress anywhere else is
+        // itself a finding in exec/simd.rs, and does not suppress.
+        let findings = analyze_file(
+            "exec/simd.rs",
+            "// nuig:allow(float-reduce): looks ordered to me\n\
+             fn f(acc: &[f64]) -> f64 { acc.iter().sum() }\n",
+        );
+        assert!(
+            findings.iter().any(|f| f.lint == WAIVER_LINT && f.message.contains("cannot be waived")),
+            "waiver must be rejected: {findings:?}"
+        );
+        assert!(
+            findings.iter().any(|f| f.lint == "float-reduce"),
+            "rejected waiver must not suppress: {findings:?}"
+        );
+        // The same waiver in kernel scope outside simd still suppresses.
+        let ok = analyze_file(
+            "ig/x.rs",
+            "// nuig:allow(float-reduce): looks ordered to me\n\
+             fn f(acc: &[f64]) -> f64 { acc.iter().sum() }\n",
+        );
+        assert!(ok.is_empty(), "{ok:?}");
+    }
+
+    #[test]
+    fn wallclock_covers_exec_simd() {
+        let findings = analyze_file(
+            "exec/simd.rs",
+            "fn f() { let t = std::time::Instant::now(); let _ = t; }\n",
+        );
+        assert!(
+            findings.iter().any(|f| f.lint == "wallclock-kernel"),
+            "exec/simd.rs is kernel scope for wallclock: {findings:?}"
+        );
     }
 }
